@@ -1,0 +1,83 @@
+//! E10: bulk anti-entropy — rust scalar kernel vs the AOT-compiled XLA
+//! dominance kernel, sweeping the number of divergent keys per exchange.
+//!
+//! Requires `make artifacts`; skips the XLA rows when absent.
+//! Regenerate with `cargo bench --bench antientropy`.
+
+use dvvstore::antientropy::{sync_scalar, sync_xla, KeyPair};
+use dvvstore::bench_support::{bb, Options, Suite};
+use dvvstore::clocks::dvv::Dvv;
+use dvvstore::clocks::{Actor, VersionVector};
+use dvvstore::kernel::mechanism::Val;
+use dvvstore::runtime::batch::SlotMap;
+use dvvstore::runtime::{artifact, XlaEngine};
+use dvvstore::testkit::Rng;
+
+const REPLICAS: u32 = 8;
+
+fn gen_pairs(keys: u64, rng: &mut Rng) -> Vec<KeyPair> {
+    let mut next_id = 0u64;
+    let mut gen_set = |rng: &mut Rng, next_id: &mut u64| {
+        let mut set: Vec<(Dvv, Val)> = Vec::new();
+        for _ in 0..rng.range(1, 3) {
+            let vv = VersionVector::from_pairs(
+                (0..REPLICAS).map(|i| (Actor::server(i), rng.below(50))),
+            );
+            let r = Actor::server(rng.below(REPLICAS as u64) as u32);
+            let n = vv.get(r) + 1 + rng.below(3);
+            *next_id += 1;
+            dvvstore::kernel::ops::insert_candidate(
+                &mut set,
+                Dvv { vv, dot: Some((r, n)) },
+                Val::new(*next_id, 0),
+            );
+        }
+        set
+    };
+    (0..keys)
+        .map(|key| KeyPair {
+            key,
+            local: gen_set(rng, &mut next_id),
+            remote: gen_set(rng, &mut next_id),
+        })
+        .collect()
+}
+
+fn main() {
+    let mut suite = Suite::new(
+        "antientropy (E10: scalar vs XLA bulk dominance)",
+        Options::from_args(),
+    );
+    let mut rng = Rng::new(2718);
+    let have_artifacts = artifact::default_dir().join("manifest.txt").exists();
+    let mut engine = if have_artifacts {
+        let mut e = XlaEngine::open(&artifact::default_dir()).expect("engine");
+        e.compile_all().expect("compile");
+        Some(e)
+    } else {
+        eprintln!("artifacts missing: XLA rows skipped (run `make artifacts`)");
+        None
+    };
+    let slots = SlotMap::dense(REPLICAS as usize);
+
+    for &keys in &[32u64, 128, 512, 2048] {
+        let pairs = gen_pairs(keys, &mut rng);
+        let clocks: usize = pairs.iter().map(|p| p.local.len() + p.remote.len()).sum();
+        let param = format!("keys={keys}/clocks={clocks}");
+        suite.bench_with_items("sync/scalar", &param, clocks as f64, || {
+            bb(sync_scalar(&pairs));
+        });
+        if let Some(eng) = engine.as_mut() {
+            suite.bench_with_items("sync/xla", &param, clocks as f64, || {
+                bb(sync_xla(eng, &pairs, &slots).expect("xla sync"));
+            });
+        }
+    }
+    suite.finish();
+    println!(
+        "\nNote: the XLA path runs the Pallas kernel in interpret-mode HLO on CPU; \
+         its dominance matrix is O(N·M) while the scalar path is output-sensitive. \
+         See EXPERIMENTS.md §E10 for the crossover discussion and DESIGN.md \
+         §Hardware-Adaptation for the TPU projection."
+    );
+}

@@ -1,0 +1,104 @@
+//! E8/Perf micro-benches: raw clock operations per mechanism.
+//!
+//! The paper's efficiency claim is that a DVV costs about as much as a
+//! plain version vector (one extra pair); the perf target in DESIGN.md §7
+//! is DVV `compare` within 2× of VV `compare`. Regenerate with
+//! `cargo bench --bench clock_ops`.
+
+use dvvstore::bench_support::{bb, Options, Suite};
+use dvvstore::clocks::causal_history::CausalHistory;
+use dvvstore::clocks::dvv::Dvv;
+use dvvstore::clocks::vv::VersionVector;
+use dvvstore::clocks::{Actor, Event, LogicalClock};
+use dvvstore::testkit::Rng;
+
+fn mk_vv(rng: &mut Rng, replicas: u32) -> VersionVector {
+    VersionVector::from_pairs((0..replicas).map(|i| (Actor::server(i), 1 + rng.below(1000))))
+}
+
+fn mk_dvv(rng: &mut Rng, replicas: u32) -> Dvv {
+    let vv = mk_vv(rng, replicas);
+    let r = Actor::server(rng.below(replicas as u64) as u32);
+    let n = vv.get(r) + 1 + rng.below(3);
+    Dvv { vv, dot: Some((r, n)) }
+}
+
+fn mk_hist(rng: &mut Rng, replicas: u32, events_per: u64) -> CausalHistory {
+    CausalHistory::from_events((0..replicas).flat_map(|i| {
+        let n = 1 + rng.below(events_per);
+        (1..=n).map(move |s| Event::new(Actor::server(i), s))
+    }))
+}
+
+fn main() {
+    let mut suite = Suite::new("clock_ops (E8: per-op cost of each clock type)", Options::from_args());
+    let mut rng = Rng::new(42);
+
+    for &replicas in &[3u32, 8, 32] {
+        let param = format!("replicas={replicas}");
+        let pairs_vv: Vec<(VersionVector, VersionVector)> =
+            (0..256).map(|_| (mk_vv(&mut rng, replicas), mk_vv(&mut rng, replicas))).collect();
+        let pairs_dvv: Vec<(Dvv, Dvv)> =
+            (0..256).map(|_| (mk_dvv(&mut rng, replicas), mk_dvv(&mut rng, replicas))).collect();
+
+        let mut i = 0;
+        suite.bench("compare/vv", &param, || {
+            let (a, b) = &pairs_vv[i & 255];
+            i += 1;
+            bb(a.compare(b));
+        });
+        let mut i = 0;
+        suite.bench("compare/dvv", &param, || {
+            let (a, b) = &pairs_dvv[i & 255];
+            i += 1;
+            bb(a.compare(b));
+        });
+        let mut i = 0;
+        suite.bench("join/vv", &param, || {
+            let (a, b) = &pairs_vv[i & 255];
+            i += 1;
+            bb(a.join(b));
+        });
+        let mut i = 0;
+        suite.bench("encode/dvv", &param, || {
+            let (a, _) = &pairs_dvv[i & 255];
+            i += 1;
+            let mut buf = Vec::with_capacity(64);
+            dvvstore::clocks::encoding::encode_dvv(a, &mut buf);
+            bb(buf);
+        });
+    }
+
+    // causal histories for contrast (the unscalable baseline)
+    for &events in &[10u64, 100, 1000] {
+        let param = format!("events={events}");
+        let pairs: Vec<(CausalHistory, CausalHistory)> = (0..64)
+            .map(|_| (mk_hist(&mut rng, 3, events), mk_hist(&mut rng, 3, events)))
+            .collect();
+        let mut i = 0;
+        suite.bench("compare/history", &param, || {
+            let (a, b) = &pairs[i & 63];
+            i += 1;
+            bb(a.compare(b));
+        });
+    }
+
+    // the DESIGN.md §7 target, enforced: DVV compare within 2x of VV
+    let vv_mean = suite
+        .results()
+        .iter()
+        .find(|s| s.name == "compare/vv" && s.param == "replicas=3")
+        .map(|s| s.mean_ns)
+        .unwrap_or(0.0);
+    let dvv_mean = suite
+        .results()
+        .iter()
+        .find(|s| s.name == "compare/dvv" && s.param == "replicas=3")
+        .map(|s| s.mean_ns)
+        .unwrap_or(0.0);
+    suite.finish();
+    if vv_mean > 0.0 {
+        let ratio = dvv_mean / vv_mean;
+        println!("\nDVV/VV compare ratio (replicas=3): {ratio:.2}x (target <= 2.0x)");
+    }
+}

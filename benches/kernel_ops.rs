@@ -1,0 +1,68 @@
+//! E8: cost of the §4 kernel operations (`sync`, `update`) as sibling
+//! count and replica count grow, per mechanism.
+//!
+//! Regenerate with `cargo bench --bench kernel_ops`.
+
+use dvvstore::bench_support::{bb, Options, Suite};
+use dvvstore::clocks::Actor;
+use dvvstore::kernel::mechs::{DvvMech, DvvSetMech, HistoryMech, ServerVvMech};
+use dvvstore::kernel::{Mechanism, Val, WriteMeta};
+use dvvstore::testkit::Rng;
+
+/// Build a state with `siblings` concurrent versions across `replicas`
+/// coordinators (blind writes).
+fn mk_state<M: Mechanism>(mech: &M, siblings: usize, replicas: u32, rng: &mut Rng) -> M::State {
+    let mut st = M::State::default();
+    for i in 0..siblings {
+        let coord = Actor::server(rng.below(replicas as u64) as u32);
+        mech.write(
+            &mut st,
+            &M::Context::default(),
+            Val::new(i as u64 + 1, 0),
+            coord,
+            &WriteMeta::basic(Actor::client(i as u32)),
+        );
+    }
+    st
+}
+
+fn bench_mech<M: Mechanism>(suite: &mut Suite, mech: M, rng: &mut Rng) {
+    for &siblings in &[1usize, 4, 16] {
+        for &replicas in &[3u32, 8] {
+            let param = format!("sib={siblings}/rep={replicas}");
+            let st = mk_state(&mech, siblings, replicas, rng);
+            let incoming = mk_state(&mech, siblings, replicas, rng);
+
+            // update: the coordinator-side write (§4.1 put steps 2-3)
+            let meta = WriteMeta::basic(Actor::client(999));
+            let (_, ctx) = mech.read(&st);
+            suite.bench(&format!("update/{}", M::NAME), &param, || {
+                let mut s = st.clone();
+                mech.write(&mut s, &ctx, Val::new(u64::MAX, 0), Actor::server(0), &meta);
+                bb(&s);
+            });
+
+            // sync: replica-to-replica merge
+            suite.bench(&format!("sync/{}", M::NAME), &param, || {
+                let mut s = st.clone();
+                mech.merge(&mut s, &incoming);
+                bb(&s);
+            });
+
+            // read: GET reduction (values + context)
+            suite.bench(&format!("read/{}", M::NAME), &param, || {
+                bb(mech.read(&st));
+            });
+        }
+    }
+}
+
+fn main() {
+    let mut suite = Suite::new("kernel_ops (E8: §4 sync/update cost)", Options::from_args());
+    let mut rng = Rng::new(7);
+    bench_mech(&mut suite, ServerVvMech, &mut rng);
+    bench_mech(&mut suite, DvvMech, &mut rng);
+    bench_mech(&mut suite, DvvSetMech, &mut rng);
+    bench_mech(&mut suite, HistoryMech, &mut rng);
+    suite.finish();
+}

@@ -1,0 +1,115 @@
+//! E7: metadata size scaling — the paper's headline contrast (§1, §7).
+//!
+//! Per-key causality metadata after `writes` updates issued by `clients`
+//! distinct clients through `replicas` coordinators, for every mechanism.
+//! The paper's claim: client-VV grows linearly with the client
+//! population; DVV stays bounded by the replication degree; causal
+//! histories grow with the number of updates.
+//!
+//! This bench prints a size table (bytes, not time). Regenerate with
+//! `cargo bench --bench metadata`.
+
+use dvvstore::clocks::Actor;
+use dvvstore::kernel::mechs::{dispatch, MechVisitor};
+use dvvstore::kernel::{MechKind, Mechanism, Val, WriteMeta};
+use dvvstore::testkit::Rng;
+
+struct Probe {
+    clients: u32,
+    writes: u64,
+    replicas: u32,
+    informed: f64,
+    seed: u64,
+}
+
+impl MechVisitor for Probe {
+    type Out = (usize, usize, usize); // (state bytes, context bytes, siblings)
+
+    fn visit<M: Mechanism>(self, mech: M) -> Self::Out {
+        let mut rng = Rng::new(self.seed);
+        let mut st = M::State::default();
+        let mut counters = vec![0u64; self.clients as usize];
+        for i in 0..self.writes {
+            let client = rng.below(self.clients as u64) as u32;
+            let coord = Actor::server(rng.below(self.replicas as u64) as u32);
+            counters[client as usize] += 1;
+            let meta = WriteMeta {
+                client: Actor::client(client),
+                physical_us: i,
+                client_seq: Some(counters[client as usize]),
+            };
+            let ctx = if rng.chance(self.informed) {
+                mech.read(&st).1
+            } else {
+                M::Context::default()
+            };
+            mech.write(&mut st, &ctx, Val::new(i + 1, 0), coord, &meta);
+        }
+        let (_, ctx) = mech.read(&st);
+        (mech.metadata_bytes(&st), mech.context_bytes(&ctx), mech.sibling_count(&st))
+    }
+}
+
+fn main() {
+    println!("## metadata (E7: per-key causality metadata, bytes)\n");
+    println!("replicas=3, 2000 writes per cell, 60% informed writes\n");
+    print!("| mechanism |");
+    let client_counts = [4u32, 16, 64, 256, 1024];
+    for c in client_counts {
+        print!(" {c} clients |");
+    }
+    println!(" growth |");
+    println!("|---|---|---|---|---|---|---|");
+    for kind in MechKind::ALL {
+        let mut sizes = Vec::new();
+        for &clients in &client_counts {
+            let (state_b, ctx_b, _sib) = dispatch(
+                kind,
+                Probe { clients, writes: 2000, replicas: 3, informed: 0.6, seed: 9 },
+            );
+            sizes.push((state_b, ctx_b));
+        }
+        let growth = if sizes[0].0 > 0 {
+            sizes[4].0 as f64 / sizes[0].0 as f64
+        } else {
+            0.0
+        };
+        print!("| {:<9} |", kind.name());
+        for (s, _) in &sizes {
+            print!(" {s} |");
+        }
+        println!(" {growth:.1}x |");
+    }
+
+    println!("\n### context bytes shipped to clients (same sweep)\n");
+    print!("| mechanism |");
+    for c in client_counts {
+        print!(" {c} clients |");
+    }
+    println!();
+    println!("|---|---|---|---|---|---|");
+    for kind in MechKind::ALL {
+        print!("| {:<9} |", kind.name());
+        for &clients in &client_counts {
+            let (_s, ctx_b, _) = dispatch(
+                kind,
+                Probe { clients, writes: 2000, replicas: 3, informed: 0.6, seed: 9 },
+            );
+            print!(" {ctx_b} |");
+        }
+        println!();
+    }
+
+    // the paper's claim, enforced: DVV metadata is flat in clients while
+    // client-VV grows with them
+    let dvv_small = dispatch(MechKind::Dvv, Probe { clients: 4, writes: 2000, replicas: 3, informed: 0.6, seed: 9 });
+    let dvv_big = dispatch(MechKind::Dvv, Probe { clients: 1024, writes: 2000, replicas: 3, informed: 0.6, seed: 9 });
+    let cvv_small = dispatch(MechKind::ClientVv, Probe { clients: 4, writes: 2000, replicas: 3, informed: 0.6, seed: 9 });
+    let cvv_big = dispatch(MechKind::ClientVv, Probe { clients: 1024, writes: 2000, replicas: 3, informed: 0.6, seed: 9 });
+    let dvv_growth = dvv_big.0 as f64 / dvv_small.0.max(1) as f64;
+    let cvv_growth = cvv_big.0 as f64 / cvv_small.0.max(1) as f64;
+    println!("\nDVV growth 4→1024 clients: {dvv_growth:.1}x; client-VV growth: {cvv_growth:.1}x");
+    assert!(dvv_growth < 3.0, "DVV metadata must be ~flat in client count");
+    assert!(cvv_growth > 10.0, "client-VV metadata must grow with clients");
+    println!("E7 claims hold");
+}

@@ -1,0 +1,69 @@
+//! Serve-and-query demo: start the TCP store in-process, talk to it over
+//! a real socket with the text protocol, and exercise the sibling /
+//! reconcile flow a Riak-style client would see.
+//!
+//! Run: `cargo run --release --example tcp_store`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use dvvstore::server::protocol::hex_encode;
+use dvvstore::server::{tcp::Server, LocalCluster};
+
+fn send(w: &mut TcpStream, line: &str) {
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+}
+
+fn recv(r: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line.trim_end().to_string()
+}
+
+fn main() -> dvvstore::Result<()> {
+    let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2)?);
+    let server = Server::start("127.0.0.1:0", cluster)?;
+    println!("serving on {}", server.addr());
+
+    let stream = TcpStream::connect(server.addr())?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+
+    // two sessions write the same key concurrently (blind writes)
+    send(&mut writer, &format!("PUT cart:42 {}", hex_encode(b"apples")));
+    assert_eq!(recv(&mut reader), "OK");
+    send(&mut writer, &format!("PUT cart:42 {}", hex_encode(b"bananas")));
+    assert_eq!(recv(&mut reader), "OK");
+
+    // a read sees both siblings plus the causal context
+    send(&mut writer, "GET cart:42");
+    let header = recv(&mut reader);
+    println!("< {header}");
+    assert!(header.starts_with("VALUES 2 "));
+    let ctx = header.split_whitespace().nth(2).unwrap().to_string();
+    for _ in 0..2 {
+        println!("< {}", recv(&mut reader));
+    }
+
+    // the shopper merges the carts and writes back with the context
+    send(
+        &mut writer,
+        &format!("PUT cart:42 {} {ctx}", hex_encode(b"apples+bananas")),
+    );
+    assert_eq!(recv(&mut reader), "OK");
+    send(&mut writer, "GET cart:42");
+    let header = recv(&mut reader);
+    println!("< {header}");
+    assert!(header.starts_with("VALUES 1 "), "reconciled to one version");
+    println!("< {}", recv(&mut reader));
+
+    send(&mut writer, "STATS");
+    println!("< {}", recv(&mut reader));
+    send(&mut writer, "QUIT");
+    assert_eq!(recv(&mut reader), "BYE");
+    server.shutdown();
+    println!("tcp_store OK");
+    Ok(())
+}

@@ -1,0 +1,97 @@
+"""AOT driver: lower the L2 graphs to HLO *text* artifacts for rust/PJRT.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the published xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-specialized; a manifest (artifacts/manifest.txt) lists
+one entry per line:
+
+    <kind> <name> <N> <M> <R> <file>
+
+The rust runtime (rust/src/runtime/artifact.rs) parses the manifest, picks
+the smallest variant that fits a request, and pads inputs.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (N, M) variants for bulk_sync / dominance; R fixed per variant.
+SYNC_VARIANTS = [
+    (64, 64, 8),
+    (256, 256, 8),
+    (1024, 1024, 8),
+]
+MERGE_VARIANTS = [
+    (1024, 8),
+    (4096, 8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bulk_sync(n: int, m: int, r: int) -> str:
+    spec_a = jax.ShapeDtypeStruct((n, r + 2), jnp.int32)
+    spec_b = jax.ShapeDtypeStruct((m, r + 2), jnp.int32)
+    tn = min(64, n)
+    tm = min(64, m)
+    fn = functools.partial(model.bulk_sync, r=r, tn=tn, tm=tm)
+    return to_hlo_text(jax.jit(fn).lower(spec_a, spec_b))
+
+
+def lower_vv_merge(b: int, r: int) -> str:
+    spec = jax.ShapeDtypeStruct((b, r), jnp.int32)
+    tb = min(256, b)
+    fn = functools.partial(model.vv_merge, tb=tb)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for n, m, r in SYNC_VARIANTS:
+        name = f"bulk_sync_{n}x{m}_r{r}"
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        text = lower_bulk_sync(n, m, r)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"bulk_sync {name} {n} {m} {r} {name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+    for b, r in MERGE_VARIANTS:
+        name = f"vv_merge_{b}_r{r}"
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        text = lower_vv_merge(b, r)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"vv_merge {name} {b} {b} {r} {name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: batched pairwise dotted-version-vector dominance.
+
+The anti-entropy hot spot of the store: given two sets of encoded clocks
+(see ``ref.py`` for the encoding contract), produce the pairwise dominance
+code matrix. The L2 model (``model.py``) reduces this matrix into the
+keep-masks implementing the paper's ``sync`` over whole key ranges.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the grid tiles the N x M
+dominance matrix; each step streams one (TN, W) strip of A and one (TM, W)
+strip of B from HBM into VMEM and writes a (TN, TM) tile of codes. The body
+is integer compare + logical-reduce over the W axis (VPU work, not MXU).
+``interpret=True`` is mandatory here: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret-mode lowering produces plain HLO the
+rust runtime can compile (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _leq_block(a_blk, b_blk, r: int):
+    """(A_i <= B_j) over a (TN, W) x (TM, W) tile -> bool (TN, TM).
+
+    Same math as ``ref.leq_matrix`` (the correctness contract), written
+    block-local so it can run inside a pallas kernel body.
+    """
+    vvx, sx, nx = a_blk[:, :r], a_blk[:, r], a_blk[:, r + 1]
+    vvy, sy, ny = b_blk[:, :r], b_blk[:, r], b_blk[:, r + 1]
+
+    tn, tm = vvx.shape[0], vvy.shape[0]
+    vvx_b = vvx[:, None, :]          # [TN, 1, R]
+    vvy_b = vvy[None, :, :]          # [1, TM, R]
+    sy_b = sy[None, :, None]
+    ny_b = ny[None, :, None]
+    slot = jax.lax.broadcasted_iota(a_blk.dtype, (1, 1, r), dimension=2)
+
+    dot_extends = (sy_b == slot) & (ny_b == vvy_b + 1)
+    range_ok = (vvx_b <= vvy_b) | (dot_extends & (vvx_b <= ny_b))
+    ranges_ok = jnp.all(range_ok, axis=-1)                     # [TN, TM]
+
+    has_dot = sx >= 0
+    slot_row = jax.lax.broadcasted_iota(a_blk.dtype, (tn, r), dimension=1)
+    onehot_sx = slot_row == sx[:, None]                        # [TN, R]
+    vvy_at_sx = jnp.max(
+        jnp.where(onehot_sx[:, None, :], vvy_b, jnp.zeros_like(vvy_b)),
+        axis=-1,
+    )                                                          # [TN, TM]
+    dot_in_range = nx[:, None] <= vvy_at_sx
+    dot_matches = (sy[None, :] == sx[:, None]) & (ny[None, :] == nx[:, None])
+    dot_ok = jnp.where(has_dot[:, None], dot_in_range | dot_matches,
+                       jnp.ones((tn, tm), dtype=jnp.bool_))
+    return ranges_ok & dot_ok
+
+
+def _dominance_kernel(a_ref, b_ref, o_ref, *, r: int):
+    """Pallas body: codes tile = (B<=A) << 1 | (A<=B)."""
+    a_blk = a_ref[...]
+    b_blk = b_ref[...]
+    leq_ab = _leq_block(a_blk, b_blk, r)
+    leq_ba = _leq_block(b_blk, a_blk, r).T
+    o_ref[...] = (leq_ba.astype(jnp.int32) << 1) | leq_ab.astype(jnp.int32)
+
+
+def dominance(a, b, *, r: int, tn: int = 64, tm: int = 64):
+    """Pairwise dominance codes i32[N, M] via the tiled Pallas kernel.
+
+    ``a``: i32[N, R+2], ``b``: i32[M, R+2]. N % tn == 0 and M % tm == 0 is
+    required; callers pad with empty rows (all-zero vv, slot -1) and slice.
+    """
+    n, w = a.shape
+    m, _ = b.shape
+    assert w == r + 2, f"clock width {w} != R+2 for R={r}"
+    assert n % tn == 0 and m % tm == 0, (n, m, tn, tm)
+    grid = (n // tn, m // tm)
+    return pl.pallas_call(
+        functools.partial(_dominance_kernel, r=r),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, tm), lambda i, j: (i, j)),
+        interpret=True,
+    )(a, b)

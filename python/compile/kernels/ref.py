@@ -1,0 +1,105 @@
+"""Pure-jnp reference oracle for the clock kernels.
+
+This module is the *correctness contract* for the Pallas kernels in
+``dominance.py`` / ``vv_merge.py``: identical math, expressed as plain
+``jax.numpy`` ops with no pallas involvement. ``python/tests`` asserts the
+Pallas kernels agree with these functions bit-for-bit, and that both agree
+with an explicit set-based causal-history oracle (``tests/oracle.py``).
+
+Clock tensor encoding (the shared python <-> rust contract, see DESIGN.md S2):
+
+  row = i32[W], W = R + 2
+    row[0..R-1]  per-replica-slot contiguous range max ("(r, m)" components)
+    row[R]       dot slot index, or -1 when the clock carries no dot
+    row[R+1]     dot event number n (for "(r, m, n)"), 0 when no dot
+
+The represented causal history is
+  C[[row]] = union_i { slot_i events 1..row[i] }  u  { dot event }
+
+Dominance X <= Y is causal-history inclusion, evaluated per DESIGN.md S2:
+
+  range_i(X) subset C[Y]  iff  vvx[i] <= vvy[i]
+                            or (sy == i and ny == vvy[i]+1 and vvx[i] <= ny)
+  dot(X) in C[Y]          iff  nx <= vvy[sx]  or  (sy == sx and ny == nx)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def split(clock_mat: jnp.ndarray, r: int):
+    """Split an encoded clock matrix [B, R+2] into (vv, dot_slot, dot_n)."""
+    return clock_mat[:, :r], clock_mat[:, r], clock_mat[:, r + 1]
+
+
+def leq_matrix(a: jnp.ndarray, b: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Pairwise dominance: out[i, j] = (A_i <= B_j), boolean [N, M].
+
+    ``a``: i32[N, R+2] encoded clocks; ``b``: i32[M, R+2].
+    """
+    vvx, sx, nx = split(a, r)  # [N,R], [N], [N]
+    vvy, sy, ny = split(b, r)  # [M,R], [M], [M]
+
+    n_, m_ = vvx.shape[0], vvy.shape[0]
+    # Broadcast layout: [N, M, R]
+    vvx_b = vvx[:, None, :]
+    vvy_b = vvy[None, :, :]
+    sy_b = sy[None, :, None]
+    ny_b = ny[None, :, None]
+    slot = jnp.arange(r, dtype=a.dtype)[None, None, :]
+
+    # Y's coverage of slot i is 1..vvy[i], plus ny iff it extends the range
+    # contiguously (ny == vvy[i] + 1). A hole (ny > vvy[i]+1) does not help
+    # a contiguous range from X.
+    dot_extends = (sy_b == slot) & (ny_b == vvy_b + 1)
+    range_ok = (vvx_b <= vvy_b) | (dot_extends & (vvx_b <= ny_b))
+    ranges_ok = jnp.all(range_ok, axis=-1)  # [N, M]
+
+    # X's dot (if any) must be in C[Y]: nx <= vvy[sx]  or  Y's dot equals it.
+    has_dot = sx >= 0  # [N]
+    # vvy_at_sx[i, j] = vvy[j, sx[i]] without gather: one-hot mask + reduce.
+    onehot_sx = (jnp.arange(r, dtype=a.dtype)[None, :] == sx[:, None])  # [N,R]
+    vvy_at_sx = jnp.max(
+        jnp.where(onehot_sx[:, None, :], vvy_b, jnp.zeros_like(vvy_b)),
+        axis=-1,
+    )  # [N, M]
+    dot_in_range = nx[:, None] <= vvy_at_sx
+    dot_matches = (sy[None, :] == sx[:, None]) & (ny[None, :] == nx[:, None])
+    dot_ok = jnp.where(has_dot[:, None], dot_in_range | dot_matches,
+                       jnp.ones((n_, m_), dtype=jnp.bool_))
+
+    return ranges_ok & dot_ok
+
+
+def dominance(a: jnp.ndarray, b: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Pairwise dominance codes: i32[N, M].
+
+    code = (B_j <= A_i) << 1 | (A_i <= B_j):
+      0 concurrent, 1 strictly less, 2 strictly greater, 3 equal histories.
+    """
+    leq_ab = leq_matrix(a, b, r)
+    leq_ba = leq_matrix(b, a, r).T
+    return (leq_ba.astype(jnp.int32) << 1) | leq_ab.astype(jnp.int32)
+
+
+def bulk_sync_masks(a: jnp.ndarray, b: jnp.ndarray, r: int):
+    """The paper's sync(S1, S2) over encoded clock sets, as keep-masks.
+
+    Returns (keep_a i32[N], keep_b i32[M], codes i32[N, M]).
+    An A-row is kept unless strictly dominated by some B-row; a B-row is
+    kept unless dominated-or-equal by some A-row (equal pairs keep the A
+    copy so the union contains one representative). Rows within each input
+    set are assumed already mutually concurrent (store invariant).
+    """
+    codes = dominance(a, b, r)
+    # A_i dropped iff exists j with code == 1 (A_i < B_j).
+    keep_a = jnp.logical_not(jnp.any(codes == 1, axis=1)).astype(jnp.int32)
+    # B_j dropped iff exists i with bit1 set (B_j <= A_i).
+    keep_b = jnp.logical_not(jnp.any((codes & 2) != 0, axis=0)).astype(jnp.int32)
+    return keep_a, keep_b, codes
+
+
+def vv_merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Pointwise join of version-vector batches: i32[B, R] max."""
+    return jnp.maximum(a, b)

@@ -1,0 +1,35 @@
+"""L1 Pallas kernel: batched pointwise version-vector join (max-merge).
+
+Used by read repair and anti-entropy digest merging: joins two batches of
+plain version vectors slot-by-slot. Trivially memory-bound; it exists to
+exercise the multi-artifact AOT pipeline and serves as the merge stage of
+the bulk anti-entropy path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(a_ref[...], b_ref[...])
+
+
+def vv_merge(a, b, *, tb: int = 256):
+    """Pointwise max of i32[B, R] batches via Pallas (interpret mode)."""
+    bsz, r = a.shape
+    assert a.shape == b.shape
+    assert bsz % tb == 0, (bsz, tb)
+    return pl.pallas_call(
+        _merge_kernel,
+        out_shape=jax.ShapeDtypeStruct((bsz, r), jnp.int32),
+        grid=(bsz // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, r), lambda i: (i, 0)),
+            pl.BlockSpec((tb, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, r), lambda i: (i, 0)),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,40 @@
+"""L2: the JAX compute graph for bulk anti-entropy sync.
+
+``bulk_sync`` is the store's bulk compute: given two encoded clock sets
+(one local, one received from a peer replica), compute the pairwise
+dominance matrix with the L1 Pallas kernel and reduce it to the keep-masks
+realizing the paper's sync(S1, S2) (Section 4) over the whole batch at
+once. The rust coordinator (rust/src/antientropy) calls the AOT-compiled
+artifact of this function on its request path; python never runs there.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import dominance as dom_kernel
+from compile.kernels import vv_merge as merge_kernel
+
+
+def bulk_sync(a, b, *, r: int, tn: int = 64, tm: int = 64):
+    """sync(S1, S2) keep-masks over encoded clock batches.
+
+    Inputs: ``a`` i32[N, R+2], ``b`` i32[M, R+2] (padded; empty rows are
+    all-zero vv with dot slot -1 and must not encode real versions).
+    Returns ``(keep_a i32[N], keep_b i32[M], codes i32[N, M])``; see
+    ``kernels.ref.bulk_sync_masks`` for the reduction contract.
+    """
+    codes = dom_kernel.dominance(a, b, r=r, tn=tn, tm=tm)
+    keep_a = jnp.logical_not(jnp.any(codes == 1, axis=1)).astype(jnp.int32)
+    keep_b = jnp.logical_not(jnp.any((codes & 2) != 0, axis=0)).astype(jnp.int32)
+    return keep_a, keep_b, codes
+
+
+def dominance_only(a, b, *, r: int, tn: int = 64, tm: int = 64):
+    """Raw dominance-code matrix (read-repair classification path)."""
+    return (dom_kernel.dominance(a, b, r=r, tn=tn, tm=tm),)
+
+
+def vv_merge(a, b, *, tb: int = 256):
+    """Pointwise version-vector join of two i32[B, R] batches."""
+    return (merge_kernel.vv_merge(a, b, tb=tb),)

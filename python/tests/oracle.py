@@ -1,0 +1,46 @@
+"""Explicit set-based causal-history oracle (the paper's Section 3 formalism).
+
+Decodes encoded clock rows into literal event sets and computes order by
+set inclusion — the trusted reference that both the jnp ref and the Pallas
+kernel must match.
+"""
+
+from __future__ import annotations
+
+
+def history(row, r: int) -> frozenset:
+    """C[[row]]: the causal history of an encoded clock row."""
+    events = set()
+    for slot in range(r):
+        for i in range(1, int(row[slot]) + 1):
+            events.add((slot, i))
+    if int(row[r]) >= 0:
+        events.add((int(row[r]), int(row[r + 1])))
+    return frozenset(events)
+
+
+def leq(row_a, row_b, r: int) -> bool:
+    """A <= B iff C[[A]] subset-of C[[B]]."""
+    return history(row_a, r) <= history(row_b, r)
+
+
+def code(row_a, row_b, r: int) -> int:
+    """(B<=A) << 1 | (A<=B), the kernel's dominance code."""
+    ab = leq(row_a, row_b, r)
+    ba = leq(row_b, row_a, r)
+    return (int(ba) << 1) | int(ab)
+
+
+def sync(set_a, set_b, r: int):
+    """The paper's sync over decoded clock sets, as (keep_a, keep_b) masks.
+
+    keep_a[i]: A_i not strictly dominated by any B_j.
+    keep_b[j]: B_j not dominated-or-equal by any A_i.
+    """
+    keep_a = [
+        not any(code(a, b, r) == 1 for b in set_b) for a in set_a
+    ]
+    keep_b = [
+        not any(code(a, b, r) & 2 for a in set_a) for b in set_b
+    ]
+    return keep_a, keep_b

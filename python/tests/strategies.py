@@ -1,0 +1,38 @@
+"""Hypothesis strategies for encoded clocks."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import strategies as st
+
+
+@st.composite
+def clock_row(draw, r: int, max_counter: int = 6):
+    """A single encoded clock row i32[R+2].
+
+    Dots respect the invariant n > m for the dot slot (Section 5.1:
+    "in a component (r, m, n) we will always have n > m"); dotless rows
+    carry (-1, 0).
+    """
+    vv = [draw(st.integers(0, max_counter)) for _ in range(r)]
+    with_dot = draw(st.booleans())
+    if with_dot:
+        slot = draw(st.integers(0, r - 1))
+        n = draw(st.integers(vv[slot] + 1, vv[slot] + 1 + max_counter))
+        tail = [slot, n]
+    else:
+        tail = [-1, 0]
+    return np.array(vv + tail, dtype=np.int32)
+
+
+@st.composite
+def clock_batch(draw, r: int, min_rows: int = 1, max_rows: int = 16):
+    rows = draw(st.lists(clock_row(r), min_size=min_rows, max_size=max_rows))
+    return np.stack(rows)
+
+
+def pad_batch(batch: np.ndarray, to: int, r: int) -> np.ndarray:
+    """Pad with empty rows (all-zero vv, dot slot -1) to `to` rows."""
+    pad = np.zeros((to - batch.shape[0], r + 2), dtype=np.int32)
+    pad[:, r] = -1
+    return np.concatenate([batch, pad], axis=0)

@@ -1,0 +1,158 @@
+"""Pallas kernel vs jnp ref vs explicit set oracle — the CORE correctness
+signal for L1 (see DESIGN.md E-index).
+
+hypothesis sweeps random encoded-clock batches; fixed cases pin the paper's
+own examples (Section 5.1 / 5.2).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, HealthCheck
+
+from compile.kernels import ref
+from compile.kernels import dominance as dk
+from compile.kernels import vv_merge as mk
+from tests import oracle
+from tests.strategies import clock_batch, pad_batch
+
+R = 8
+SETTINGS = dict(
+    max_examples=60,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def row(vv, dot=None):
+    """Encode a clock row: vv list of len R, dot (slot, n) or None."""
+    tail = [-1, 0] if dot is None else [dot[0], dot[1]]
+    return np.array(list(vv) + tail, dtype=np.int32)
+
+
+def empty_pad(n):
+    return pad_batch(np.zeros((0, R + 2), np.int32), n, R)
+
+
+class TestPaperExamples:
+    """The concrete clocks the paper uses in Sections 5.1-5.3."""
+
+    def test_section_5_2_concurrent_same_replica(self):
+        # {(r,4)} || {(r,3,5)}: histories {r1..r4} || {r1,r2,r3,r5}.
+        a = row([4, 0, 0, 0, 0, 0, 0, 0])
+        b = row([3, 0, 0, 0, 0, 0, 0, 0], dot=(0, 5))
+        assert oracle.code(a, b, R) == 0
+        codes = ref.dominance(jnp.array([a]), jnp.array([b]), R)
+        assert int(codes[0, 0]) == 0
+
+    def test_section_5_1_dot_merges_into_range(self):
+        # {(a,2),(b,1),(c,3,7)} represents {a1,a2,b1,c1,c2,c3,c7};
+        # {(a,2),(b,1),(c,7)} (contiguous) strictly dominates it.
+        dotted = row([2, 1, 3, 0, 0, 0, 0, 0], dot=(2, 7))
+        full = row([2, 1, 7, 0, 0, 0, 0, 0])
+        assert oracle.code(dotted, full, R) == 1
+        assert oracle.code(full, dotted, R) == 2
+
+    def test_contiguous_dot_equals_range(self):
+        # (r, m, m+1) has the same history as (r, m+1).
+        dotted = row([3, 0, 0, 0, 0, 0, 0, 0], dot=(0, 4))
+        rng = row([4, 0, 0, 0, 0, 0, 0, 0])
+        assert oracle.code(dotted, rng, R) == 3
+        codes = ref.dominance(jnp.array([dotted]), jnp.array([rng]), R)
+        assert int(codes[0, 0]) == 3
+
+    def test_fig7_final_state(self):
+        # z = {(a,0,3),(b,2)} vs y = (a,1,2): concurrent (Fig. 7).
+        z = row([0, 2, 0, 0, 0, 0, 0, 0], dot=(0, 3))
+        y = row([1, 0, 0, 0, 0, 0, 0, 0], dot=(0, 2))
+        assert oracle.code(z, y, R) == 0
+        # z dominates v=(b,0,1) and w=(b,0,2).
+        v = row([0, 0, 0, 0, 0, 0, 0, 0], dot=(1, 1))
+        w = row([0, 0, 0, 0, 0, 0, 0, 0], dot=(1, 2))
+        assert oracle.code(v, z, R) == 1
+        assert oracle.code(w, z, R) == 1
+
+
+class TestRefVsOracle:
+    """jnp ref == explicit event-set oracle."""
+
+    @settings(**SETTINGS)
+    @given(a=clock_batch(R, max_rows=8), b=clock_batch(R, max_rows=8))
+    def test_dominance_codes(self, a, b):
+        codes = np.array(ref.dominance(jnp.array(a), jnp.array(b), R))
+        for i in range(a.shape[0]):
+            for j in range(b.shape[0]):
+                assert codes[i, j] == oracle.code(a[i], b[j], R), (
+                    a[i], b[j])
+
+    @settings(**SETTINGS)
+    @given(a=clock_batch(R, max_rows=6), b=clock_batch(R, max_rows=6))
+    def test_bulk_sync_masks(self, a, b):
+        ka, kb, _ = ref.bulk_sync_masks(jnp.array(a), jnp.array(b), R)
+        oka, okb = oracle.sync(a, b, R)
+        assert [bool(x) for x in np.array(ka)] == oka
+        assert [bool(x) for x in np.array(kb)] == okb
+
+
+class TestPallasVsRef:
+    """Pallas kernel output is bit-identical to the jnp ref."""
+
+    @settings(**SETTINGS)
+    @given(a=clock_batch(R, max_rows=16), b=clock_batch(R, max_rows=16))
+    def test_dominance_tiled(self, a, b):
+        ap = pad_batch(a, 64, R)
+        bp = pad_batch(b, 64, R)
+        got = np.array(dk.dominance(jnp.array(ap), jnp.array(bp), r=R))
+        want = np.array(ref.dominance(jnp.array(ap), jnp.array(bp), R))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("n,m,tn,tm", [
+        (64, 64, 64, 64),
+        (128, 64, 64, 64),
+        (128, 128, 32, 64),
+        (64, 192, 64, 64),
+    ])
+    def test_grid_shapes(self, n, m, tn, tm):
+        rng = np.random.default_rng(7)
+        a = rng.integers(0, 5, size=(n, R + 2)).astype(np.int32)
+        b = rng.integers(0, 5, size=(m, R + 2)).astype(np.int32)
+        # force valid dot encoding
+        for x in (a, b):
+            has = x[:, R] % 2 == 0
+            x[:, R] = np.where(has, x[:, R] % R, -1)
+            sl = np.clip(x[:, R], 0, R - 1)
+            m_at = x[np.arange(x.shape[0]), sl]
+            x[:, R + 1] = np.where(has, m_at + 1 + x[:, R + 1], 0)
+        got = np.array(dk.dominance(jnp.array(a), jnp.array(b), r=R, tn=tn, tm=tm))
+        want = np.array(ref.dominance(jnp.array(a), jnp.array(b), R))
+        np.testing.assert_array_equal(got, want)
+
+    def test_padding_rows_are_harmless(self):
+        # Pad rows must never cause a real row to be dropped.
+        a = np.stack([row([2, 1, 0, 0, 0, 0, 0, 0], dot=(0, 3))])
+        b = np.stack([row([0, 1, 0, 0, 0, 0, 0, 0], dot=(1, 2))])
+        ap, bp = pad_batch(a, 64, R), pad_batch(b, 64, R)
+        codes = np.array(dk.dominance(jnp.array(ap), jnp.array(bp), r=R))
+        keep_a = ~np.any(codes == 1, axis=1)
+        keep_b = ~np.any((codes & 2) != 0, axis=0)
+        assert keep_a[0] and keep_b[0]  # concurrent reals both kept
+
+
+class TestVvMerge:
+    @settings(**SETTINGS)
+    @given(a=clock_batch(R, min_rows=4, max_rows=16))
+    def test_merge_is_max(self, a):
+        vv = pad_batch(a, 256, R)[:, :R].copy()
+        other = vv[::-1].copy()
+        got = np.array(mk.vv_merge(jnp.array(vv), jnp.array(other)))
+        np.testing.assert_array_equal(got, np.maximum(vv, other))
+
+    def test_merge_join_laws(self):
+        rng = np.random.default_rng(3)
+        x = rng.integers(0, 9, size=(256, R)).astype(np.int32)
+        y = rng.integers(0, 9, size=(256, R)).astype(np.int32)
+        xy = np.array(mk.vv_merge(jnp.array(x), jnp.array(y)))
+        yx = np.array(mk.vv_merge(jnp.array(y), jnp.array(x)))
+        np.testing.assert_array_equal(xy, yx)        # commutative
+        xx = np.array(mk.vv_merge(jnp.array(x), jnp.array(x)))
+        np.testing.assert_array_equal(xx, x)         # idempotent

@@ -1,0 +1,52 @@
+"""Order-theoretic properties of the dominance relation (hypothesis).
+
+The dotted-clock order must be a partial order on histories; these
+properties catch any divergence between the vectorized math and the
+set-inclusion semantics.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, HealthCheck
+
+from compile.kernels import ref
+from tests import oracle
+from tests.strategies import clock_row
+
+R = 8
+SETTINGS = dict(
+    max_examples=80,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _code(a, b):
+    return int(np.array(ref.dominance(jnp.array([a]), jnp.array([b]), R))[0, 0])
+
+
+@settings(**SETTINGS)
+@given(a=clock_row(R))
+def test_reflexive(a):
+    assert _code(a, a) == 3
+
+
+@settings(**SETTINGS)
+@given(a=clock_row(R), b=clock_row(R))
+def test_antisymmetric_on_histories(a, b):
+    if _code(a, b) == 3:
+        assert oracle.history(a, R) == oracle.history(b, R)
+
+
+@settings(**SETTINGS)
+@given(a=clock_row(R), b=clock_row(R), c=clock_row(R))
+def test_transitive(a, b, c):
+    if _code(a, b) & 1 and _code(b, c) & 1:
+        assert _code(a, c) & 1
+
+
+@settings(**SETTINGS)
+@given(a=clock_row(R), b=clock_row(R))
+def test_code_symmetry(a, b):
+    ab, ba = _code(a, b), _code(b, a)
+    assert ab == ((ba & 1) << 1 | (ba >> 1))

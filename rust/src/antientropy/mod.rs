@@ -1,0 +1,355 @@
+//! Bulk anti-entropy for DVV stores: the compute hot spot the AOT XLA
+//! path accelerates (DESIGN.md E10).
+//!
+//! When two replicas exchange state they must `sync` the sibling sets of
+//! every divergent key — thousands of pairwise DVV dominance checks per
+//! exchange. This module implements that bulk step twice over identical
+//! semantics:
+//!
+//! * [`sync_scalar`] — the plain rust path (the same `kernel::ops` used on
+//!   the request path);
+//! * [`sync_xla`] — one batched dominance-kernel execution over *all*
+//!   keys' clocks, with the keep-reduction done per key block (clocks of
+//!   different keys must never interact, so the N×M code matrix is
+//!   consumed block-diagonally).
+//!
+//! `benches/antientropy.rs` measures the crossover batch size between the
+//! two; `examples/antientropy_accel.rs` demos the XLA path end to end.
+
+use crate::clocks::dvv::Dvv;
+use crate::error::Result;
+use crate::kernel::mechanism::Val;
+use crate::kernel::ops;
+use crate::runtime::batch::SlotMap;
+use crate::runtime::XlaEngine;
+use crate::store::Key;
+
+/// One key's divergent sibling sets on the two sides of an exchange.
+#[derive(Debug, Clone)]
+pub struct KeyPair {
+    /// The key.
+    pub key: Key,
+    /// Local sibling set.
+    pub local: Vec<(Dvv, Val)>,
+    /// Remote sibling set.
+    pub remote: Vec<(Dvv, Val)>,
+}
+
+/// Result: the merged sibling set per key.
+pub type Merged = Vec<(Key, Vec<(Dvv, Val)>)>;
+
+/// Scalar reference path: per-key kernel `sync`.
+pub fn sync_scalar(pairs: &[KeyPair]) -> Merged {
+    pairs
+        .iter()
+        .map(|p| {
+            let mut merged = p.local.clone();
+            ops::sync_into(&mut merged, &p.remote);
+            (p.key, merged)
+        })
+        .collect()
+}
+
+/// XLA path: concatenate every key's clocks into one (A, B) batch pair,
+/// run the dominance kernel once, and reduce keep-masks block-diagonally.
+///
+/// Precondition (the §4 store invariant, upheld by every mechanism
+/// `write`/`merge`): each side's sibling set is pairwise concurrent. The
+/// kernel compares local × remote only, so *within-set* dominance — which
+/// cannot occur in valid states — would not be winnowed here, while
+/// [`sync_scalar`] would incidentally remove it.
+///
+/// Falls back to [`sync_scalar`] per oversized chunk when a batch exceeds
+/// the largest compiled variant.
+pub fn sync_xla(engine: &mut XlaEngine, pairs: &[KeyPair], slots: &SlotMap) -> Result<Merged> {
+    // find the largest variant once to size chunks
+    let max_n = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "bulk_sync" && a.r >= slots.len())
+        .map(|a| a.n.min(a.m))
+        .max()
+        .unwrap_or(0);
+    if max_n == 0 {
+        return Ok(sync_scalar(pairs));
+    }
+
+    let mut out: Merged = Vec::with_capacity(pairs.len());
+    let mut chunk: Vec<&KeyPair> = Vec::new();
+    let (mut na, mut nb) = (0usize, 0usize);
+    for p in pairs {
+        let (la, lb) = (p.local.len(), p.remote.len());
+        if la > max_n || lb > max_n {
+            // single key too large for any variant: scalar fallback
+            flush_chunk(engine, slots, &mut chunk, &mut out)?;
+            na = 0;
+            nb = 0;
+            let mut merged = p.local.clone();
+            ops::sync_into(&mut merged, &p.remote);
+            out.push((p.key, merged));
+            continue;
+        }
+        if na + la > max_n || nb + lb > max_n {
+            flush_chunk(engine, slots, &mut chunk, &mut out)?;
+            na = 0;
+            nb = 0;
+        }
+        chunk.push(p);
+        na += la;
+        nb += lb;
+    }
+    flush_chunk(engine, slots, &mut chunk, &mut out)?;
+    Ok(out)
+}
+
+fn flush_chunk(
+    engine: &mut XlaEngine,
+    slots: &SlotMap,
+    chunk: &mut Vec<&KeyPair>,
+    out: &mut Merged,
+) -> Result<()> {
+    if chunk.is_empty() {
+        return Ok(());
+    }
+    // concatenate
+    let mut a: Vec<Dvv> = Vec::new();
+    let mut b: Vec<Dvv> = Vec::new();
+    let mut blocks: Vec<(usize, usize, usize, usize)> = Vec::new(); // (a0, a1, b0, b1)
+    for p in chunk.iter() {
+        let a0 = a.len();
+        let b0 = b.len();
+        a.extend(p.local.iter().map(|(c, _)| c.clone()));
+        b.extend(p.remote.iter().map(|(c, _)| c.clone()));
+        blocks.push((a0, a.len(), b0, b.len()));
+    }
+    let codes = engine.dominance_codes(&a, &b, slots)?;
+    let bw = b.len(); // code-matrix row width
+
+    for (p, &(a0, a1, b0, b1)) in chunk.iter().zip(blocks.iter()) {
+        let mut merged: Vec<(Dvv, Val)> = Vec::with_capacity((a1 - a0) + (b1 - b0));
+        // keep local unless strictly dominated by a remote clock of the
+        // same key (code 1)
+        for (i, item) in p.local.iter().enumerate() {
+            let row = &codes[(a0 + i) * bw..(a0 + i) * bw + bw];
+            let dominated = row[b0..b1].iter().any(|&c| c == 1);
+            if !dominated {
+                merged.push(item.clone());
+            }
+        }
+        // keep remote unless dominated-or-equal by a local clock (bit 2)
+        for (j, item) in p.remote.iter().enumerate() {
+            let covered = (a0..a1).any(|i| codes[i * bw + b0 + j] & 2 != 0);
+            if !covered {
+                merged.push(item.clone());
+            }
+        }
+        out.push((p.key, merged));
+    }
+    chunk.clear();
+    Ok(())
+}
+
+/// Build the divergent-key worklist for an exchange between two DVV
+/// key-stores: keys where the sibling clock sets differ.
+pub fn diff_pairs(
+    local: &crate::store::KeyStore<crate::kernel::mechs::DvvMech>,
+    remote: &crate::store::KeyStore<crate::kernel::mechs::DvvMech>,
+) -> Vec<KeyPair> {
+    let mut keys: Vec<Key> = local.keys().chain(remote.keys()).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys.into_iter()
+        .filter_map(|key| {
+            let l = local.state(key);
+            let r = remote.state(key);
+            if l == r {
+                None
+            } else {
+                Some(KeyPair { key, local: l, remote: r })
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::dvv::dvv;
+    use crate::clocks::Actor;
+    use crate::runtime::artifact;
+    use crate::testkit::Rng;
+
+    fn a() -> Actor {
+        Actor::server(0)
+    }
+    fn b() -> Actor {
+        Actor::server(1)
+    }
+    fn v(id: u64) -> Val {
+        Val::new(id, 0)
+    }
+
+    fn sample_pairs() -> Vec<KeyPair> {
+        vec![
+            // concurrent siblings: both survive
+            KeyPair {
+                key: 1,
+                local: vec![(dvv(&[], Some((a(), 1))), v(1))],
+                remote: vec![(dvv(&[], Some((b(), 1))), v(2))],
+            },
+            // remote dominates local
+            KeyPair {
+                key: 2,
+                local: vec![(dvv(&[], Some((b(), 1))), v(3))],
+                remote: vec![(dvv(&[(b(), 2)], Some((a(), 1))), v(4))],
+            },
+            // equal histories: local copy kept
+            KeyPair {
+                key: 3,
+                local: vec![(dvv(&[(a(), 2)], None), v(5))],
+                remote: vec![(dvv(&[(a(), 1)], Some((a(), 2))), v(6))],
+            },
+        ]
+    }
+
+    #[test]
+    fn scalar_sync_per_key() {
+        let merged = sync_scalar(&sample_pairs());
+        assert_eq!(merged[0].1.len(), 2);
+        assert_eq!(merged[1].1.len(), 1);
+        assert_eq!(merged[1].1[0].1, v(4));
+        assert_eq!(merged[2].1.len(), 1);
+        assert_eq!(merged[2].1[0].1, v(5), "equal keeps the local copy");
+    }
+
+    #[test]
+    fn cross_key_isolation_in_scalar_path() {
+        // key 10's clock would dominate key 11's if they interacted
+        let pairs = vec![
+            KeyPair {
+                key: 10,
+                local: vec![(dvv(&[(a(), 9)], None), v(1))],
+                remote: vec![],
+            },
+            KeyPair {
+                key: 11,
+                local: vec![],
+                remote: vec![(dvv(&[(a(), 1)], None), v(2))],
+            },
+        ];
+        let merged = sync_scalar(&pairs);
+        assert_eq!(merged[1].1.len(), 1, "key 11's value must survive");
+    }
+
+    #[test]
+    fn xla_matches_scalar_when_artifacts_present() {
+        if !artifact::default_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut eng = XlaEngine::open(&artifact::default_dir()).unwrap();
+        let slots = SlotMap::dense(8);
+        let pairs = sample_pairs();
+        let scalar = sync_scalar(&pairs);
+        let xla = sync_xla(&mut eng, &pairs, &slots).unwrap();
+        assert_eq!(canon(scalar), canon(xla));
+    }
+
+    #[test]
+    fn xla_cross_key_isolation() {
+        if !artifact::default_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut eng = XlaEngine::open(&artifact::default_dir()).unwrap();
+        let slots = SlotMap::dense(8);
+        // key 20's big clock must not kill key 21's small one
+        let pairs = vec![
+            KeyPair {
+                key: 20,
+                local: vec![(dvv(&[(a(), 9)], Some((b(), 1))), v(1))],
+                remote: vec![(dvv(&[], Some((b(), 2))), v(2))],
+            },
+            KeyPair {
+                key: 21,
+                local: vec![(dvv(&[], Some((a(), 1))), v(3))],
+                remote: vec![(dvv(&[], Some((b(), 1))), v(4))],
+            },
+        ];
+        let xla = sync_xla(&mut eng, &pairs, &slots).unwrap();
+        let k21 = xla.iter().find(|(k, _)| *k == 21).unwrap();
+        assert_eq!(k21.1.len(), 2, "cross-key dominance leaked: {xla:?}");
+    }
+
+    #[test]
+    fn xla_random_multikey_matches_scalar() {
+        if !artifact::default_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut eng = XlaEngine::open(&artifact::default_dir()).unwrap();
+        let slots = SlotMap::dense(8);
+        let mut rng = Rng::new(77);
+        let mut next_id = 1u64;
+        let mut gen_set = |rng: &mut Rng, next_id: &mut u64| -> Vec<(Dvv, Val)> {
+            let mut set: Vec<(Dvv, Val)> = Vec::new();
+            for _ in 0..rng.range(0, 4) {
+                let vvp = crate::clocks::VersionVector::from_pairs(
+                    (0..4u32).map(|i| (Actor::server(i), rng.below(4))),
+                );
+                let r = Actor::server(rng.below(4) as u32);
+                let n = vvp.get(r) + 1 + rng.below(2);
+                *next_id += 1;
+                let clock = Dvv { vv: vvp, dot: Some((r, n)) };
+                // uphold the store invariant: sibling sets are pairwise
+                // concurrent (what real mechanism states always satisfy)
+                crate::kernel::ops::insert_candidate(&mut set, clock, v(*next_id));
+            }
+            set
+        };
+        let pairs: Vec<KeyPair> = (0..200)
+            .map(|key| KeyPair {
+                key,
+                local: gen_set(&mut rng, &mut next_id),
+                remote: gen_set(&mut rng, &mut next_id),
+            })
+            .collect();
+        let scalar = sync_scalar(&pairs);
+        let xla = sync_xla(&mut eng, &pairs, &slots).unwrap();
+        assert_eq!(canon(scalar), canon(xla));
+    }
+
+    fn canon(mut m: Merged) -> Vec<(Key, Vec<u64>)> {
+        m.sort_by_key(|(k, _)| *k);
+        m.into_iter()
+            .map(|(k, set)| {
+                let mut ids: Vec<u64> = set.iter().map(|(_, v)| v.id).collect();
+                ids.sort_unstable();
+                (k, ids)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn diff_pairs_finds_divergence() {
+        use crate::kernel::mechs::DvvMech;
+        use crate::kernel::{Mechanism, WriteMeta};
+        use crate::store::KeyStore;
+        let mech = DvvMech;
+        let mut s1 = KeyStore::new(mech);
+        let mut s2 = KeyStore::new(mech);
+        let empty = <DvvMech as Mechanism>::Context::default();
+        let meta = WriteMeta::basic(Actor::client(0));
+        s1.write(1, &empty, v(1), a(), &meta);
+        s2.write(1, &empty, v(2), b(), &meta);
+        s1.write(2, &empty, v(3), a(), &meta); // only on s1
+        // identical key on both sides
+        s1.write(3, &empty, v(4), a(), &meta);
+        let st = s1.state(3);
+        s2.merge_key(3, &st);
+        let pairs = diff_pairs(&s1, &s2);
+        let keys: Vec<Key> = pairs.iter().map(|p| p.key).collect();
+        assert_eq!(keys, vec![1, 2], "key 3 converged, 1/2 divergent");
+    }
+}

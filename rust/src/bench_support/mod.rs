@@ -1,0 +1,346 @@
+//! In-tree micro-benchmark harness (offline `criterion` substitute).
+//!
+//! Used by every binary in `benches/` (declared with `harness = false`).
+//! Provides warmup, timed sampling, robust statistics (mean/p50/p95/p99),
+//! throughput accounting, and machine-readable output:
+//!
+//! * human: aligned markdown tables on stdout;
+//! * CSV: `--csv <path>` appends `suite,bench,param,mean_ns,p50_ns,...`.
+//!
+//! CLI contract shared by all bench binaries:
+//! `bench_bin [--filter SUBSTR] [--quick] [--csv PATH]`.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export so benches can `use dvvstore::bench_support::black_box`.
+pub use std::hint::black_box as bb;
+
+/// One measured benchmark's statistics (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    /// Benchmark label.
+    pub name: String,
+    /// Parameter column (e.g. "clients=128").
+    pub param: String,
+    /// Number of measured samples.
+    pub samples: usize,
+    /// Iterations per sample.
+    pub iters_per_sample: u64,
+    /// Mean ns/iter.
+    pub mean_ns: f64,
+    /// Median ns/iter.
+    pub p50_ns: f64,
+    /// 95th percentile ns/iter.
+    pub p95_ns: f64,
+    /// 99th percentile ns/iter.
+    pub p99_ns: f64,
+    /// Minimum ns/iter.
+    pub min_ns: f64,
+    /// Std-dev of per-sample means.
+    pub std_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: f64,
+}
+
+impl Stats {
+    /// Items per second implied by the mean (0 when `items_per_iter` unset).
+    pub fn throughput(&self) -> f64 {
+        if self.items_per_iter > 0.0 && self.mean_ns > 0.0 {
+            self.items_per_iter * 1e9 / self.mean_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Harness options (parsed from CLI args).
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// Only run benches whose `name/param` contains this substring.
+    pub filter: Option<String>,
+    /// Quick mode: fewer samples + shorter warmup (CI-friendly).
+    pub quick: bool,
+    /// Append CSV rows here when set.
+    pub csv: Option<String>,
+}
+
+impl Options {
+    /// Parse the shared bench CLI contract from `std::env::args`.
+    pub fn from_args() -> Options {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let mut opts = Options { filter: None, quick: false, csv: None };
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--filter" => {
+                    i += 1;
+                    opts.filter = args.get(i).cloned();
+                }
+                "--quick" => opts.quick = true,
+                "--csv" => {
+                    i += 1;
+                    opts.csv = args.get(i).cloned();
+                }
+                // `cargo bench` passes --bench; ignore unknown flags so the
+                // harness stays forward-compatible.
+                _ => {}
+            }
+            i += 1;
+        }
+        if std::env::var("DVV_BENCH_QUICK").is_ok() {
+            opts.quick = true;
+        }
+        opts
+    }
+}
+
+/// A benchmark suite: collects results, prints one table at the end.
+pub struct Suite {
+    name: String,
+    opts: Options,
+    results: Vec<Stats>,
+    warmup: Duration,
+    sample_time: Duration,
+    samples: usize,
+}
+
+impl Suite {
+    /// Create a suite with the given name and parsed options.
+    pub fn new(name: &str, opts: Options) -> Suite {
+        let (warmup, sample_time, samples) = if opts.quick {
+            (Duration::from_millis(20), Duration::from_millis(30), 10)
+        } else {
+            (Duration::from_millis(200), Duration::from_millis(100), 30)
+        };
+        Suite {
+            name: name.to_string(),
+            opts,
+            results: Vec::new(),
+            warmup,
+            sample_time,
+            samples,
+        }
+    }
+
+    fn enabled(&self, name: &str, param: &str) -> bool {
+        match &self.opts.filter {
+            Some(f) => format!("{name}/{param}").contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Measure `f` (one iteration per call) under `name`/`param`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, param: &str, f: F) {
+        self.bench_with_items(name, param, 1.0, f)
+    }
+
+    /// Measure `f`, reporting `items` units of work per iteration.
+    pub fn bench_with_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        param: &str,
+        items: f64,
+        mut f: F,
+    ) {
+        if !self.enabled(name, param) {
+            return;
+        }
+        // Warmup + calibration: find iters that fill ~sample_time.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / warm_iters.max(1) as f64;
+        let iters = ((self.sample_time.as_nanos() as f64 / per_iter).ceil() as u64).max(1);
+
+        let mut sample_means = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            sample_means.push(dt / iters as f64);
+        }
+        sample_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sample_means.len();
+        let mean = sample_means.iter().sum::<f64>() / n as f64;
+        let var = sample_means.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let pct = |p: f64| sample_means[(((n - 1) as f64) * p) as usize];
+        let stats = Stats {
+            name: name.to_string(),
+            param: param.to_string(),
+            samples: n,
+            iters_per_sample: iters,
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            p99_ns: pct(0.99),
+            min_ns: sample_means[0],
+            std_ns: var.sqrt(),
+            items_per_iter: items,
+        };
+        eprintln!(
+            "  {:<38} {:<20} mean {:>12}  p50 {:>12}",
+            stats.name,
+            stats.param,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p50_ns)
+        );
+        self.results.push(stats);
+    }
+
+    /// Access collected results (for custom reporting in bench mains).
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Print the markdown table and write CSV if requested.
+    pub fn finish(self) {
+        println!("\n## {}\n", self.name);
+        println!(
+            "| bench | param | mean | p50 | p95 | p99 | min | throughput |"
+        );
+        println!("|---|---|---|---|---|---|---|---|");
+        for s in &self.results {
+            let tp = if s.throughput() > 0.0 {
+                format!("{}/s", fmt_count(s.throughput()))
+            } else {
+                "-".to_string()
+            };
+            println!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} |",
+                s.name,
+                s.param,
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p50_ns),
+                fmt_ns(s.p95_ns),
+                fmt_ns(s.p99_ns),
+                fmt_ns(s.min_ns),
+                tp
+            );
+        }
+        if let Some(path) = &self.opts.csv {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .expect("open csv");
+            for s in &self.results {
+                writeln!(
+                    f,
+                    "{},{},{},{:.1},{:.1},{:.1},{:.1},{:.1},{:.3}",
+                    self.name,
+                    s.name,
+                    s.param,
+                    s.mean_ns,
+                    s.p50_ns,
+                    s.p95_ns,
+                    s.p99_ns,
+                    s.min_ns,
+                    s.throughput()
+                )
+                .expect("write csv");
+            }
+        }
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3}s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Format a count with k/M suffixes.
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+/// Run a closure and return (result, elapsed) — one-shot measurements for
+/// end-to-end drivers (examples/, EXPERIMENTS.md numbers).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = black_box(f());
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_suite(name: &str) -> Suite {
+        Suite::new(
+            name,
+            Options { filter: None, quick: true, csv: None },
+        )
+    }
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut s = quick_suite("t");
+        let mut acc = 0u64;
+        s.bench("noop", "x", || {
+            acc = acc.wrapping_add(1);
+            bb(acc);
+        });
+        let st = &s.results()[0];
+        assert!(st.mean_ns > 0.0);
+        assert!(st.min_ns <= st.p50_ns && st.p50_ns <= st.p99_ns);
+        assert_eq!(st.samples, 10);
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let mut s = Suite::new(
+            "t",
+            Options { filter: Some("only".into()), quick: true, csv: None },
+        );
+        s.bench("other", "x", || {});
+        assert!(s.results().is_empty());
+        s.bench("only_this", "x", || {});
+        assert_eq!(s.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_computed_from_items() {
+        let mut s = quick_suite("t");
+        s.bench_with_items("b", "p", 100.0, || {
+            bb(12u64);
+        });
+        assert!(s.results()[0].throughput() > 0.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(12.3), "12.3ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50µs");
+        assert_eq!(fmt_ns(2_000_000.0), "2.00ms");
+        assert_eq!(fmt_count(1_234_567.0), "1.23M");
+        assert_eq!(fmt_count(1_500.0), "1.5k");
+        assert_eq!(fmt_count(42.0), "42");
+    }
+
+    #[test]
+    fn time_once_measures() {
+        let ((), dt) = time_once(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(dt >= Duration::from_millis(5));
+    }
+}

@@ -1,0 +1,312 @@
+//! Tiny CLI argument parser (offline `clap` substitute).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! positional arguments, defaults, and generated `--help` text. Used by the
+//! `dvv-store` binary and the examples.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declarative description of one option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_switch: bool,
+    required: bool,
+}
+
+/// A command (or subcommand) parser.
+#[derive(Debug, Clone)]
+pub struct Command {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+    subs: Vec<Command>,
+}
+
+/// Parsed argument values for a command invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Matches {
+    /// Resolved `--flag` values (after defaults).
+    values: BTreeMap<String, String>,
+    /// Switches that were present.
+    switches: BTreeMap<String, bool>,
+    /// Positional arguments in order.
+    pub positionals: Vec<String>,
+    /// Chosen subcommand, if any.
+    pub subcommand: Option<(String, Box<Matches>)>,
+}
+
+impl Matches {
+    /// String value of an option (default applied); None if absent.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Required string value (parser guarantees presence for required
+    /// options / options with defaults).
+    pub fn get_str(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("option --{name} missing (declare a default)"))
+    }
+
+    /// Parse an option as `T`.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| Error::Config(format!("missing --{name}")))?;
+        raw.parse()
+            .map_err(|_| Error::Config(format!("--{name}: cannot parse {raw:?}")))
+    }
+
+    /// True when a boolean switch was given.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+impl Command {
+    /// New command with a help blurb.
+    pub fn new(name: &str, about: &str) -> Command {
+        Command {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+            subs: Vec::new(),
+        }
+    }
+
+    /// Add `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_switch: false,
+            required: false,
+        });
+        self
+    }
+
+    /// Add a required `--name <value>` (no default).
+    pub fn opt_required(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_switch: false,
+            required: true,
+        });
+        self
+    }
+
+    /// Add an optional `--name <value>` with no default.
+    pub fn opt_optional(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_switch: false,
+            required: false,
+        });
+        self
+    }
+
+    /// Add a boolean `--name` switch.
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_switch: true,
+            required: false,
+        });
+        self
+    }
+
+    /// Add a positional argument (documentation only; collected in order).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Attach a subcommand.
+    pub fn subcommand(mut self, sub: Command) -> Self {
+        self.subs.push(sub);
+        self
+    }
+
+    /// Render `--help`.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subs.is_empty() {
+            out.push_str(" <SUBCOMMAND>");
+        }
+        if !self.opts.is_empty() {
+            out.push_str(" [OPTIONS]");
+        }
+        for (p, _) in &self.positionals {
+            out.push_str(&format!(" <{p}>"));
+        }
+        out.push('\n');
+        if !self.subs.is_empty() {
+            out.push_str("\nSUBCOMMANDS:\n");
+            for s in &self.subs {
+                out.push_str(&format!("  {:<14} {}\n", s.name, s.about));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let meta = if o.is_switch {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <v>", o.name)
+                };
+                let dflt = match &o.default {
+                    Some(d) => format!(" [default: {d}]"),
+                    None if o.required => " [required]".to_string(),
+                    None => String::new(),
+                };
+                out.push_str(&format!("  {:<22} {}{}\n", meta, o.help, dflt));
+            }
+        }
+        out
+    }
+
+    /// Parse an argument list (without argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<Matches> {
+        let mut m = Matches::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                m.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(Error::Config(self.help()));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| Error::Config(format!("unknown option --{name}")))?;
+                if spec.is_switch {
+                    m.switches.insert(name, true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?
+                        }
+                    };
+                    m.values.insert(name, value);
+                }
+            } else if let Some(sub) = self.subs.iter().find(|s| s.name == *a) {
+                let rest = sub.parse(&args[i + 1..])?;
+                m.subcommand = Some((sub.name.clone(), Box::new(rest)));
+                break;
+            } else {
+                m.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.required && !m.values.contains_key(&o.name) {
+                return Err(Error::Config(format!("missing required --{}", o.name)));
+            }
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("dvv-store", "test")
+            .opt("nodes", "3", "node count")
+            .switch("verbose", "chatty")
+            .subcommand(
+                Command::new("figures", "replay paper figures")
+                    .opt("fig", "7", "figure number"),
+            )
+            .subcommand(Command::new("sim", "run simulation").opt_required("seed", "rng seed"))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&args(&[])).unwrap();
+        assert_eq!(m.get_str("nodes"), "3");
+        assert!(!m.has("verbose"));
+    }
+
+    #[test]
+    fn values_and_switches() {
+        let m = cmd().parse(&args(&["--nodes", "5", "--verbose"])).unwrap();
+        assert_eq!(m.get_parsed::<usize>("nodes").unwrap(), 5);
+        assert!(m.has("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = cmd().parse(&args(&["--nodes=9"])).unwrap();
+        assert_eq!(m.get_str("nodes"), "9");
+    }
+
+    #[test]
+    fn subcommand_parsing() {
+        let m = cmd().parse(&args(&["figures", "--fig", "3"])).unwrap();
+        let (name, sub) = m.subcommand.unwrap();
+        assert_eq!(name, "figures");
+        assert_eq!(sub.get_str("fig"), "3");
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let err = cmd().parse(&args(&["sim"])).unwrap_err();
+        assert!(err.to_string().contains("seed"));
+        let ok = cmd().parse(&args(&["sim", "--seed", "42"])).unwrap();
+        assert_eq!(ok.subcommand.unwrap().1.get_str("seed"), "42");
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&args(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let c = Command::new("x", "t").positional("key", "the key");
+        let m = c.parse(&args(&["mykey", "other"])).unwrap();
+        assert_eq!(m.positionals, vec!["mykey", "other"]);
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = cmd().help();
+        assert!(h.contains("SUBCOMMANDS"));
+        assert!(h.contains("--nodes"));
+        assert!(h.contains("[default: 3]"));
+    }
+}

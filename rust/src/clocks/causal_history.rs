@@ -1,0 +1,216 @@
+//! Causal histories: explicit sets of update-event identifiers (§3).
+//!
+//! "Causal histories are simply described by sets of unique update event
+//! identifiers. The partial order of causality can be precisely tracked by
+//! comparing these sets by set inclusion." They are the paper's semantic
+//! ground truth — every other mechanism is evaluated against them — but
+//! scale linearly with the number of updates, so real systems compress
+//! them (version vectors, dotted version vectors).
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use super::{Actor, ClockOrd, Event, LogicalClock};
+
+/// An explicit causal history: a set of events such as `{a1, a2, b1}`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CausalHistory {
+    events: BTreeSet<Event>,
+}
+
+impl CausalHistory {
+    /// The empty history `{}`.
+    pub fn new() -> CausalHistory {
+        CausalHistory::default()
+    }
+
+    /// Build from a list of events.
+    pub fn from_events<I: IntoIterator<Item = Event>>(events: I) -> CausalHistory {
+        CausalHistory { events: events.into_iter().collect() }
+    }
+
+    /// Number of events recorded.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True for the empty history.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Membership test.
+    pub fn contains(&self, e: &Event) -> bool {
+        self.events.contains(e)
+    }
+
+    /// Add a single event.
+    pub fn insert(&mut self, e: Event) {
+        self.events.insert(e);
+    }
+
+    /// Union with another history (the join on the event-set lattice).
+    pub fn union(&self, other: &CausalHistory) -> CausalHistory {
+        CausalHistory { events: self.events.union(&other.events).copied().collect() }
+    }
+
+    /// In-place union.
+    pub fn merge_from(&mut self, other: &CausalHistory) {
+        self.events.extend(other.events.iter().copied());
+    }
+
+    /// Subset test: `self ⊆ other`.
+    pub fn is_subset(&self, other: &CausalHistory) -> bool {
+        self.events.is_subset(&other.events)
+    }
+
+    /// Largest sequence number recorded for `actor` (0 when absent) —
+    /// the `⌈·⌉_r` function of §5.3 evaluated on explicit sets.
+    pub fn max_seq(&self, actor: Actor) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.actor == actor)
+            .map(|e| e.seq)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Iterate events in order.
+    pub fn iter(&self) -> impl Iterator<Item = &Event> {
+        self.events.iter()
+    }
+
+    /// Actors appearing in the history.
+    pub fn actors(&self) -> BTreeSet<Actor> {
+        self.events.iter().map(|e| e.actor).collect()
+    }
+
+    /// Is the history a *downset* (§5.4): for each actor, all events from
+    /// 1 up to its maximum are present (no holes)?
+    pub fn is_downset(&self) -> bool {
+        self.actors().iter().all(|&a| {
+            let max = self.max_seq(a);
+            (1..=max).all(|s| self.contains(&Event::new(a, s)))
+        })
+    }
+}
+
+impl LogicalClock for CausalHistory {
+    fn compare(&self, other: &CausalHistory) -> ClockOrd {
+        ClockOrd::from_leq_geq(self.is_subset(other), other.is_subset(self))
+    }
+
+    fn encoded_size(&self) -> usize {
+        encoding_size(self)
+    }
+}
+
+fn encoding_size(h: &CausalHistory) -> usize {
+    // count prefix + (actor varint, seq varint) per event
+    super::encoding::varint_len(h.len() as u64)
+        + h.iter()
+            .map(|e| {
+                super::encoding::varint_len(e.actor.0 as u64)
+                    + super::encoding::varint_len(e.seq)
+            })
+            .sum::<usize>()
+}
+
+impl fmt::Display for CausalHistory {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{e}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+/// Convenience macro-free constructor used heavily in figure replays:
+/// `hist(&[("a", 1), ("a", 2), ("b", 1)])`.
+pub fn hist(events: &[(Actor, u64)]) -> CausalHistory {
+    CausalHistory::from_events(events.iter().map(|&(a, s)| Event::new(a, s)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a() -> Actor {
+        Actor::server(0)
+    }
+    fn b() -> Actor {
+        Actor::server(1)
+    }
+
+    #[test]
+    fn figure1_relations() {
+        // Fig. 1 end state: y={a1,a2} on Ra; v={b1}, w={b2} on Rb.
+        let y = hist(&[(a(), 1), (a(), 2)]);
+        let v = hist(&[(b(), 1)]);
+        let w = hist(&[(b(), 2)]);
+        assert_eq!(y.compare(&v), ClockOrd::Concurrent);
+        assert_eq!(y.compare(&w), ClockOrd::Concurrent);
+        assert_eq!(v.compare(&w), ClockOrd::Concurrent);
+        // x={a1} was overwritten by y: {a1} ⊂ {a1,a2}
+        let x = hist(&[(a(), 1)]);
+        assert_eq!(x.compare(&y), ClockOrd::Less);
+        assert_eq!(y.compare(&x), ClockOrd::Greater);
+    }
+
+    #[test]
+    fn empty_history_is_bottom() {
+        let empty = CausalHistory::new();
+        let any = hist(&[(a(), 1)]);
+        assert_eq!(empty.compare(&any), ClockOrd::Less);
+        assert_eq!(empty.compare(&empty), ClockOrd::Equal);
+        assert!(empty.is_downset());
+    }
+
+    #[test]
+    fn union_is_join() {
+        let x = hist(&[(a(), 1)]);
+        let y = hist(&[(b(), 1)]);
+        let u = x.union(&y);
+        assert_eq!(x.compare(&u), ClockOrd::Less);
+        assert_eq!(y.compare(&u), ClockOrd::Less);
+        assert_eq!(u.len(), 2);
+    }
+
+    #[test]
+    fn max_seq_and_downset() {
+        let h = hist(&[(a(), 1), (a(), 2), (b(), 1)]);
+        assert_eq!(h.max_seq(a()), 2);
+        assert_eq!(h.max_seq(b()), 1);
+        assert_eq!(h.max_seq(Actor::server(9)), 0);
+        assert!(h.is_downset());
+        let holed = hist(&[(a(), 1), (a(), 3)]);
+        assert!(!holed.is_downset());
+    }
+
+    #[test]
+    fn display_matches_paper_notation() {
+        let h = hist(&[(a(), 1), (b(), 2)]);
+        assert_eq!(h.to_string(), "{a1,b2}");
+    }
+
+    #[test]
+    fn merge_from_accumulates() {
+        let mut h = hist(&[(a(), 1)]);
+        h.merge_from(&hist(&[(b(), 1)]));
+        h.insert(Event::new(a(), 2));
+        assert_eq!(h.len(), 3);
+        assert!(h.contains(&Event::new(b(), 1)));
+    }
+
+    #[test]
+    fn encoded_size_grows_with_updates() {
+        // the paper's §3 scalability complaint: linear in #updates
+        let small = hist(&[(a(), 1)]);
+        let big = CausalHistory::from_events((1..=100).map(|s| Event::new(a(), s)));
+        assert!(big.encoded_size() > 50 * small.encoded_size() / 2);
+    }
+}

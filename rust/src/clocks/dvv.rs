@@ -1,0 +1,337 @@
+//! Dotted version vectors (§5): the paper's contribution.
+//!
+//! A DVV is a version vector plus (at most) one *dot* — an isolated event
+//! that may sit beyond the contiguous range of its actor: the triple
+//! `(r, m, n)` of the paper is represented here as the vector entry
+//! `(r, m)` plus `dot = (r, n)`, `n > m`. "Dotted version vectors can also
+//! be thought of as a standard version vector augmented by a pair
+//! identifier-counter to describe the single dot needed" (§5.3).
+//!
+//! The order is defined semantically — `X ≤ Y ⟺ C[[X]] ⊆ C[[Y]]` (§5.2) —
+//! and computed without materializing histories. This implementation is the
+//! scalar mirror of the vectorized Pallas kernel
+//! (`python/compile/kernels/dominance.py`); `runtime::batch` packs these
+//! clocks into the shared tensor encoding.
+
+use std::fmt;
+
+use super::{Actor, CausalHistory, ClockOrd, Event, LogicalClock, VersionVector};
+
+/// A dotted version vector.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Dvv {
+    /// Contiguous ranges per actor (the classic version-vector part).
+    pub vv: VersionVector,
+    /// The single isolated event, if any: `(actor, n)` with
+    /// `n > vv.get(actor)`.
+    pub dot: Option<(Actor, u64)>,
+}
+
+impl Dvv {
+    /// Empty clock (no events).
+    pub fn new() -> Dvv {
+        Dvv::default()
+    }
+
+    /// A pure version vector (no dot).
+    pub fn from_vv(vv: VersionVector) -> Dvv {
+        Dvv { vv, dot: None }
+    }
+
+    /// The paper's §5.3 `update` construction: context vector + a new dot
+    /// at `coord` numbered `n` (callers supply `n = ⌈S_r⌉_coord + 1`).
+    pub fn with_dot(context: VersionVector, coord: Actor, n: u64) -> Dvv {
+        debug_assert!(
+            n > context.get(coord),
+            "dot {n} must exceed the context range {} for {coord}",
+            context.get(coord)
+        );
+        Dvv { vv: context, dot: Some((coord, n)) }
+    }
+
+    /// `⌈self⌉_r`: the maximum integer recorded for `r` (§5.3).
+    pub fn ceil(&self, r: Actor) -> u64 {
+        let base = self.vv.get(r);
+        match self.dot {
+            Some((a, n)) if a == r => base.max(n),
+            _ => base,
+        }
+    }
+
+    /// Contiguous coverage for actor `r`: the largest `k` such that events
+    /// `r_1..r_k` are all in `C[[self]]`.
+    fn contiguous(&self, r: Actor) -> u64 {
+        let m = self.vv.get(r);
+        match self.dot {
+            Some((a, n)) if a == r && n == m + 1 => n,
+            _ => m,
+        }
+    }
+
+    /// Does `C[[self]]` contain event `r_seq`?
+    pub fn contains(&self, e: &Event) -> bool {
+        e.seq <= self.vv.get(e.actor) || self.dot == Some((e.actor, e.seq))
+    }
+
+    /// Non-strict domination: `C[[self]] ⊆ C[[other]]`.
+    pub fn dominated_by(&self, other: &Dvv) -> bool {
+        // every contiguous range of self must fit in other's coverage
+        let ranges_ok = self
+            .vv
+            .iter()
+            .all(|(r, m)| m <= other.contiguous(r));
+        if !ranges_ok {
+            return false;
+        }
+        // self's dot must be present in other
+        match self.dot {
+            None => true,
+            Some((r, n)) => n <= other.vv.get(r) || other.dot == Some((r, n)),
+        }
+    }
+
+    /// Normalize: fold a contiguous dot `(r, m+1)` into the vector part.
+    /// The represented history is unchanged.
+    pub fn compact(&mut self) {
+        if let Some((r, n)) = self.dot {
+            if n == self.vv.get(r) + 1 {
+                self.vv.set(r, n);
+                self.dot = None;
+            }
+        }
+    }
+
+    /// The join-ceiling vector `{(i, ⌈self⌉_i)}` — what a GET context
+    /// contributes for this clock (valid because replica sets are
+    /// downsets, §5.4).
+    pub fn ceil_vv(&self) -> VersionVector {
+        let mut out = self.vv.clone();
+        if let Some((r, n)) = self.dot {
+            if n > out.get(r) {
+                out.set(r, n);
+            }
+        }
+        out
+    }
+
+    /// Join this clock's ceiling into `acc` without allocating — the GET
+    /// hot path (`DvvMech::read` folds every sibling through this).
+    pub fn join_ceil_into(&self, acc: &mut VersionVector) {
+        acc.join_from(&self.vv);
+        if let Some((r, n)) = self.dot {
+            if n > acc.get(r) {
+                acc.set(r, n);
+            }
+        }
+    }
+
+    /// Materialized causal history `C[[self]]` (oracle cross-checks only).
+    pub fn history(&self) -> CausalHistory {
+        let mut h = self.vv.history();
+        if let Some((r, n)) = self.dot {
+            h.insert(Event::new(r, n));
+        }
+        h
+    }
+}
+
+impl LogicalClock for Dvv {
+    fn compare(&self, other: &Dvv) -> ClockOrd {
+        ClockOrd::from_leq_geq(self.dominated_by(other), other.dominated_by(self))
+    }
+
+    fn encoded_size(&self) -> usize {
+        self.vv.encoded_size()
+            + 1 // dot-present flag
+            + self
+                .dot
+                .map(|(a, n)| {
+                    super::encoding::varint_len(a.0 as u64) + super::encoding::varint_len(n)
+                })
+                .unwrap_or(0)
+    }
+}
+
+impl fmt::Display for Dvv {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Paper notation: {(a,2),(b,1),(c,3,7)} — the dotted actor renders
+        // as a triple (m may be 0 and is still shown, e.g. (b,0,2)).
+        write!(f, "{{")?;
+        let mut first = true;
+        let mut dotted_done = false;
+        for (a, m) in self.vv.iter() {
+            if !first {
+                write!(f, ",")?;
+            }
+            first = false;
+            match self.dot {
+                Some((da, n)) if da == a => {
+                    write!(f, "({a},{m},{n})")?;
+                    dotted_done = true;
+                }
+                _ => write!(f, "({a},{m})")?,
+            }
+        }
+        if let Some((da, n)) = self.dot {
+            if !dotted_done {
+                if !first {
+                    write!(f, ",")?;
+                }
+                write!(f, "({da},0,{n})")?;
+            }
+        }
+        write!(f, "}}")
+    }
+}
+
+/// Shorthand for tests/figures: a dotted clock from vector pairs + dot.
+pub fn dvv(pairs: &[(Actor, u64)], dot: Option<(Actor, u64)>) -> Dvv {
+    Dvv { vv: super::vv::vv(pairs), dot }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::vv::vv;
+    use crate::testkit::prop::{forall, from_fn, Config};
+    use crate::testkit::Rng;
+
+    fn a() -> Actor {
+        Actor::server(0)
+    }
+    fn b() -> Actor {
+        Actor::server(1)
+    }
+    fn c() -> Actor {
+        Actor::server(2)
+    }
+
+    #[test]
+    fn section_5_1_example_history() {
+        // {(a,2),(b,1),(c,3,7)} represents {a1,a2,b1,c1,c2,c3,c7}
+        let x = dvv(&[(a(), 2), (b(), 1), (c(), 3)], Some((c(), 7)));
+        let h = x.history();
+        assert_eq!(h.len(), 7);
+        assert!(h.contains(&Event::new(c(), 7)));
+        assert!(!h.contains(&Event::new(c(), 4)));
+    }
+
+    #[test]
+    fn section_5_2_same_replica_concurrency() {
+        // {(r,4)} || {(r,3,5)}
+        let x = dvv(&[(a(), 4)], None);
+        let y = dvv(&[(a(), 3)], Some((a(), 5)));
+        assert_eq!(x.compare(&y), ClockOrd::Concurrent);
+        assert_eq!(y.compare(&x), ClockOrd::Concurrent);
+    }
+
+    #[test]
+    fn contiguous_dot_equals_range() {
+        // (r,3,4) has the same history as (r,4)
+        let dotted = dvv(&[(a(), 3)], Some((a(), 4)));
+        let range = dvv(&[(a(), 4)], None);
+        assert_eq!(dotted.compare(&range), ClockOrd::Equal);
+        let mut compacted = dotted.clone();
+        compacted.compact();
+        assert_eq!(compacted, range);
+    }
+
+    #[test]
+    fn compact_keeps_noncontiguous_dot() {
+        let mut x = dvv(&[(a(), 3)], Some((a(), 5)));
+        x.compact();
+        assert_eq!(x.dot, Some((a(), 5)));
+    }
+
+    #[test]
+    fn figure7_final_relations() {
+        // v=(b,0,1), w=(b,0,2), y=(a,1,2), z={(a,0,3),(b,2)}
+        let v = dvv(&[], Some((b(), 1)));
+        let w = dvv(&[], Some((b(), 2)));
+        let y = dvv(&[(a(), 1)], Some((a(), 2)));
+        let z = dvv(&[(b(), 2)], Some((a(), 3)));
+        assert_eq!(v.compare(&w), ClockOrd::Concurrent);
+        assert_eq!(v.compare(&z), ClockOrd::Less);
+        assert_eq!(w.compare(&z), ClockOrd::Less);
+        assert_eq!(y.compare(&z), ClockOrd::Concurrent);
+        assert_eq!(y.compare(&v), ClockOrd::Concurrent);
+    }
+
+    #[test]
+    fn ceil_accounts_for_dot() {
+        let x = dvv(&[(a(), 2)], Some((a(), 7)));
+        assert_eq!(x.ceil(a()), 7);
+        assert_eq!(x.ceil(b()), 0);
+        assert_eq!(x.ceil_vv(), vv(&[(a(), 7)]));
+    }
+
+    #[test]
+    fn update_construction_dot_exceeds_context() {
+        let u = Dvv::with_dot(vv(&[(a(), 1)]), a(), 2);
+        assert_eq!(u.to_string(), "{(a,1,2)}");
+        assert!(u.contains(&Event::new(a(), 2)));
+    }
+
+    #[test]
+    fn display_matches_paper() {
+        assert_eq!(dvv(&[], Some((b(), 2))).to_string(), "{(b,0,2)}");
+        assert_eq!(
+            dvv(&[(a(), 2), (b(), 1), (c(), 3)], Some((c(), 7))).to_string(),
+            "{(a,2),(b,1),(c,3,7)}"
+        );
+        assert_eq!(dvv(&[(b(), 2)], Some((a(), 3))).to_string(), "{(b,2),(a,0,3)}");
+    }
+
+    fn arb_dvv(rng: &mut Rng, _size: usize) -> Dvv {
+        let actors = 3u32;
+        let vvp = VersionVector::from_pairs(
+            (0..actors).map(|i| (Actor::server(i), rng.below(5))),
+        );
+        let dot = if rng.chance(0.6) {
+            let r = Actor::server(rng.below(actors as u64) as u32);
+            let n = vvp.get(r) + 1 + rng.below(4);
+            Some((r, n))
+        } else {
+            None
+        };
+        Dvv { vv: vvp, dot }
+    }
+
+    #[test]
+    fn prop_compare_agrees_with_history_inclusion() {
+        forall(
+            &Config::default().cases(300),
+            from_fn(|rng, size| (arb_dvv(rng, size), arb_dvv(rng, size))),
+            |(x, y)| x.compare(y) == x.history().compare(&y.history()),
+        );
+    }
+
+    #[test]
+    fn prop_compact_preserves_history_and_order() {
+        forall(
+            &Config::default().cases(200),
+            from_fn(|rng, size| (arb_dvv(rng, size), arb_dvv(rng, size))),
+            |(x, y)| {
+                let mut xc = x.clone();
+                xc.compact();
+                xc.history() == x.history() && xc.compare(y) == x.compare(y)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_ceil_vv_dominates() {
+        forall(
+            &Config::default().cases(200),
+            from_fn(|rng, size| arb_dvv(rng, size)),
+            |x| x.history().is_subset(&x.ceil_vv().history()),
+        );
+    }
+
+    #[test]
+    fn encoded_size_is_replica_bounded() {
+        // the paper's headline: metadata linear in replicas, not clients
+        let x = dvv(&[(a(), 1000), (b(), 2000), (c(), 500)], Some((a(), 1002)));
+        assert!(x.encoded_size() < 32, "got {}", x.encoded_size());
+    }
+}

@@ -1,0 +1,287 @@
+//! Dotted version vector *sets* — the compact sibling-set extension.
+//!
+//! The paper's conclusion points at follow-up work on representing the
+//! whole set of siblings with a single structure; this module implements
+//! that optimization (the DVVSet of Almeida, Baquero, Gonçalves, Fonte,
+//! Preguiça — "Scalable and Accurate Causality Tracking for Eventually
+//! Consistent Stores"). Instead of one full DVV per sibling, the per-key
+//! state is one list of `(actor, n, values)` entries:
+//!
+//! * `n` — the contiguous range `1..=n` of events this set knows for
+//!   `actor`;
+//! * `values` — the live sibling values for the most recent dots of
+//!   `actor`: `values[0]` carries dot `(actor, n)`, `values[1]` carries
+//!   `(actor, n-1)`, and so on. Events below `n - values.len()` are
+//!   *covered without a value* — they were overwritten.
+//!
+//! Dots are positional, so sibling metadata costs O(replicas) total rather
+//! than O(replicas × siblings) — the ablation measured in E7.
+
+use std::fmt;
+
+use super::{Actor, VersionVector};
+
+/// One actor's column of the set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Entry<V> {
+    actor: Actor,
+    /// Contiguous events known: `1..=n`.
+    n: u64,
+    /// Live values; `vals[i]` holds the value written by event `n - i`.
+    vals: Vec<V>,
+}
+
+impl<V> Entry<V> {
+    /// Sequence number below which every event is dead (overwritten).
+    fn dead_below(&self) -> u64 {
+        self.n - self.vals.len() as u64
+    }
+}
+
+/// A compact sibling set with positional dots.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DvvSet<V> {
+    /// Sorted by actor.
+    entries: Vec<Entry<V>>,
+}
+
+impl<V> Default for DvvSet<V> {
+    fn default() -> Self {
+        DvvSet { entries: Vec::new() }
+    }
+}
+
+impl<V: Clone + fmt::Debug> DvvSet<V> {
+    /// Empty set.
+    pub fn new() -> DvvSet<V> {
+        DvvSet { entries: Vec::new() }
+    }
+
+    /// The set's version vector `{(r, n_r)}` — also the GET context.
+    pub fn vv(&self) -> VersionVector {
+        VersionVector::from_pairs(self.entries.iter().map(|e| (e.actor, e.n)))
+    }
+
+    /// All live sibling values (most recent dot first per actor).
+    pub fn values(&self) -> Vec<&V> {
+        self.entries.iter().flat_map(|e| e.vals.iter()).collect()
+    }
+
+    /// Number of live siblings.
+    pub fn len(&self) -> usize {
+        self.entries.iter().map(|e| e.vals.len()).sum()
+    }
+
+    /// No live values?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `⌈S⌉_r` — max counter recorded for `r`.
+    pub fn ceil(&self, r: Actor) -> u64 {
+        self.entry(r).map(|e| e.n).unwrap_or(0)
+    }
+
+    fn entry(&self, r: Actor) -> Option<&Entry<V>> {
+        self.entries
+            .binary_search_by_key(&r, |e| e.actor)
+            .ok()
+            .map(|i| &self.entries[i])
+    }
+
+    fn entry_mut(&mut self, r: Actor) -> &mut Entry<V> {
+        match self.entries.binary_search_by_key(&r, |e| e.actor) {
+            Ok(i) => &mut self.entries[i],
+            Err(i) => {
+                self.entries.insert(i, Entry { actor: r, n: 0, vals: Vec::new() });
+                &mut self.entries[i]
+            }
+        }
+    }
+
+    /// The paper-kernel `update` + `sync` fused, DVVSet-style: register a
+    /// new value at coordinator `coord` with the client's read context
+    /// `ctx`, discarding siblings the context covers.
+    pub fn update(&mut self, ctx: &VersionVector, val: V, coord: Actor) {
+        // new event (coord, n+1) carries `val`
+        let e = self.entry_mut(coord);
+        e.n += 1;
+        e.vals.insert(0, val);
+        // discard dots covered by the context (they were read and
+        // superseded by this write)
+        for e in &mut self.entries {
+            let covered = ctx.get(e.actor);
+            // dots are e.n, e.n-1, ..; keep those with seq > covered
+            let keep = (e.n.saturating_sub(covered)).min(e.vals.len() as u64) as usize;
+            e.vals.truncate(keep);
+        }
+        self.entries.retain(|e| e.n > 0);
+    }
+
+    /// Replica-to-replica merge (the paper-kernel `sync` over whole sets).
+    /// A dot survives iff it is live on every side that knows it.
+    pub fn sync_from(&mut self, other: &DvvSet<V>) {
+        for oe in &other.entries {
+            let se = self.entry_mut(oe.actor);
+            if se.n == 0 {
+                // unseen actor: adopt wholesale
+                se.n = oe.n;
+                se.vals = oe.vals.clone();
+                continue;
+            }
+            let dead = se.dead_below().max(oe.dead_below());
+            let n = se.n.max(oe.n);
+            let live = (n - dead) as usize;
+            let mut vals = Vec::with_capacity(live.min(se.vals.len() + oe.vals.len()));
+            for seq in ((dead + 1)..=n).rev() {
+                // prefer own copy; identical events carry identical values
+                if seq <= se.n && (se.n - seq) < se.vals.len() as u64 {
+                    vals.push(se.vals[(se.n - seq) as usize].clone());
+                } else if seq <= oe.n && (oe.n - seq) < oe.vals.len() as u64 {
+                    vals.push(oe.vals[(oe.n - seq) as usize].clone());
+                }
+                // else: dot known but value dead on the knowing side
+            }
+            se.n = n;
+            se.vals = vals;
+        }
+        self.entries.retain(|e| e.n > 0);
+    }
+
+    /// Encoded metadata size: per-actor id + counter + per-value 1-byte
+    /// liveness marker (values themselves excluded — metadata only).
+    pub fn metadata_bytes(&self) -> usize {
+        super::encoding::varint_len(self.entries.len() as u64)
+            + self
+                .entries
+                .iter()
+                .map(|e| {
+                    super::encoding::varint_len(e.actor.0 as u64)
+                        + super::encoding::varint_len(e.n)
+                        + super::encoding::varint_len(e.vals.len() as u64)
+                })
+                .sum::<usize>()
+    }
+}
+
+impl<V: Clone + fmt::Debug> fmt::Display for DvvSet<V> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, e) in self.entries.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "({},{},{:?})", e.actor, e.n, e.vals)?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::vv::vv;
+
+    fn a() -> Actor {
+        Actor::server(0)
+    }
+    fn b() -> Actor {
+        Actor::server(1)
+    }
+
+    #[test]
+    fn first_write_creates_dot() {
+        let mut s: DvvSet<&str> = DvvSet::new();
+        s.update(&VersionVector::new(), "v", b());
+        assert_eq!(s.values(), vec![&"v"]);
+        assert_eq!(s.vv(), vv(&[(b(), 1)]));
+    }
+
+    #[test]
+    fn blind_write_keeps_sibling() {
+        // the Fig. 1/7 scenario: two clients write with empty context
+        let mut s: DvvSet<&str> = DvvSet::new();
+        s.update(&VersionVector::new(), "v", b());
+        s.update(&VersionVector::new(), "w", b());
+        assert_eq!(s.len(), 2, "{s}");
+        assert_eq!(s.vv(), vv(&[(b(), 2)]));
+    }
+
+    #[test]
+    fn informed_write_overwrites() {
+        let mut s: DvvSet<&str> = DvvSet::new();
+        s.update(&VersionVector::new(), "x", a());
+        let ctx = s.vv();
+        s.update(&ctx, "y", a());
+        assert_eq!(s.values(), vec![&"y"]);
+        assert_eq!(s.vv(), vv(&[(a(), 2)]));
+    }
+
+    #[test]
+    fn context_covering_all_siblings_collapses_them() {
+        let mut s: DvvSet<&str> = DvvSet::new();
+        s.update(&VersionVector::new(), "v", b());
+        s.update(&VersionVector::new(), "w", b());
+        let ctx = s.vv(); // read both siblings
+        s.update(&ctx, "z", a());
+        assert_eq!(s.values(), vec![&"z"]);
+        assert_eq!(s.vv(), vv(&[(a(), 1), (b(), 2)]));
+    }
+
+    #[test]
+    fn sync_is_idempotent_and_commutative() {
+        let mut s1: DvvSet<&str> = DvvSet::new();
+        s1.update(&VersionVector::new(), "v", b());
+        let mut s2 = s1.clone();
+        s2.update(&s2.vv(), "y", a());
+        let mut m1 = s1.clone();
+        m1.sync_from(&s2);
+        let mut m2 = s2.clone();
+        m2.sync_from(&s1);
+        assert_eq!(m1, m2);
+        let snapshot = m1.clone();
+        m1.sync_from(&s2);
+        assert_eq!(m1, snapshot);
+    }
+
+    #[test]
+    fn sync_kills_dots_dead_on_either_side() {
+        // s1 holds v=(b,1); s2 saw v and overwrote it with y=(a,1)
+        let mut s1: DvvSet<&str> = DvvSet::new();
+        s1.update(&VersionVector::new(), "v", b());
+        let mut s2 = s1.clone();
+        s2.update(&s2.vv(), "y", a());
+        s1.sync_from(&s2);
+        assert_eq!(s1.values(), vec![&"y"], "{s1}");
+    }
+
+    #[test]
+    fn sync_keeps_concurrent_dots() {
+        let mut s1: DvvSet<&str> = DvvSet::new();
+        s1.update(&VersionVector::new(), "v", b());
+        let mut s2: DvvSet<&str> = DvvSet::new();
+        s2.update(&VersionVector::new(), "y", a());
+        s1.sync_from(&s2);
+        assert_eq!(s1.len(), 2);
+    }
+
+    #[test]
+    fn metadata_size_constant_in_siblings_per_actor() {
+        // DVVSet's win over plain per-sibling DVVs
+        let mut s: DvvSet<u64> = DvvSet::new();
+        for i in 0..50 {
+            s.update(&VersionVector::new(), i, b());
+        }
+        assert_eq!(s.len(), 50);
+        assert!(s.metadata_bytes() < 16, "got {}", s.metadata_bytes());
+    }
+
+    #[test]
+    fn ceil_tracks_max() {
+        let mut s: DvvSet<&str> = DvvSet::new();
+        s.update(&VersionVector::new(), "v", b());
+        s.update(&VersionVector::new(), "w", b());
+        assert_eq!(s.ceil(b()), 2);
+        assert_eq!(s.ceil(a()), 0);
+    }
+}

@@ -1,0 +1,300 @@
+//! Wire codecs for clocks (LEB128 varints), used both by the TCP server
+//! protocol and by the metadata-size experiments (DESIGN.md E7).
+//!
+//! Every clock type gets `encode`/`decode` round-trips here; the
+//! `encoded_size` methods on the clock types are defined to match what
+//! these codecs emit (asserted by tests).
+
+use super::{Actor, CausalHistory, ClockOrd, Dvv, Event, LamportClock, LogicalClock, RtClock, VersionVector};
+use crate::error::{Error, Result};
+
+/// Length of `value` as a LEB128 varint.
+pub fn varint_len(value: u64) -> usize {
+    let bits = 64 - value.leading_zeros().max(0) as usize;
+    std::cmp::max(1, bits.div_ceil(7))
+}
+
+/// Append a LEB128 varint.
+pub fn put_varint(buf: &mut Vec<u8>, mut value: u64) {
+    loop {
+        let byte = (value & 0x7f) as u8;
+        value >>= 7;
+        if value == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Read a LEB128 varint, advancing `pos`.
+pub fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut out: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let byte = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::Codec("varint: unexpected end".into()))?;
+        *pos += 1;
+        out |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(out);
+        }
+        shift += 7;
+        if shift >= 64 {
+            return Err(Error::Codec("varint: overflow".into()));
+        }
+    }
+}
+
+/// Encode a version vector.
+pub fn encode_vv(vv: &VersionVector, buf: &mut Vec<u8>) {
+    put_varint(buf, vv.len() as u64);
+    for (a, n) in vv.iter() {
+        put_varint(buf, a.0 as u64);
+        put_varint(buf, n);
+    }
+}
+
+/// Decode a version vector.
+pub fn decode_vv(buf: &[u8], pos: &mut usize) -> Result<VersionVector> {
+    let count = get_varint(buf, pos)?;
+    let mut pairs = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        let a = get_varint(buf, pos)? as u32;
+        let n = get_varint(buf, pos)?;
+        pairs.push((Actor(a), n));
+    }
+    Ok(VersionVector::from_pairs(pairs))
+}
+
+/// Encode a dotted version vector.
+pub fn encode_dvv(d: &Dvv, buf: &mut Vec<u8>) {
+    encode_vv(&d.vv, buf);
+    match d.dot {
+        None => buf.push(0),
+        Some((a, n)) => {
+            buf.push(1);
+            put_varint(buf, a.0 as u64);
+            put_varint(buf, n);
+        }
+    }
+}
+
+/// Decode a dotted version vector.
+pub fn decode_dvv(buf: &[u8], pos: &mut usize) -> Result<Dvv> {
+    let vv = decode_vv(buf, pos)?;
+    let flag = *buf
+        .get(*pos)
+        .ok_or_else(|| Error::Codec("dvv: missing dot flag".into()))?;
+    *pos += 1;
+    let dot = match flag {
+        0 => None,
+        1 => {
+            let a = get_varint(buf, pos)? as u32;
+            let n = get_varint(buf, pos)?;
+            Some((Actor(a), n))
+        }
+        other => return Err(Error::Codec(format!("dvv: bad dot flag {other}"))),
+    };
+    Ok(Dvv { vv, dot })
+}
+
+/// Encode a causal history (explicit event set).
+pub fn encode_history(h: &CausalHistory, buf: &mut Vec<u8>) {
+    put_varint(buf, h.len() as u64);
+    for e in h.iter() {
+        put_varint(buf, e.actor.0 as u64);
+        put_varint(buf, e.seq);
+    }
+}
+
+/// Decode a causal history.
+pub fn decode_history(buf: &[u8], pos: &mut usize) -> Result<CausalHistory> {
+    let count = get_varint(buf, pos)?;
+    let mut h = CausalHistory::new();
+    for _ in 0..count {
+        let a = get_varint(buf, pos)? as u32;
+        let s = get_varint(buf, pos)?;
+        h.insert(Event::new(Actor(a), s));
+    }
+    Ok(h)
+}
+
+/// Encode a physical timestamp clock.
+pub fn encode_rt(c: &RtClock, buf: &mut Vec<u8>) {
+    put_varint(buf, c.micros);
+    put_varint(buf, c.actor.0 as u64);
+}
+
+/// Decode a physical timestamp clock.
+pub fn decode_rt(buf: &[u8], pos: &mut usize) -> Result<RtClock> {
+    let micros = get_varint(buf, pos)?;
+    let actor = Actor(get_varint(buf, pos)? as u32);
+    Ok(RtClock { micros, actor })
+}
+
+/// Encode a Lamport clock.
+pub fn encode_lamport(c: &LamportClock, buf: &mut Vec<u8>) {
+    put_varint(buf, c.counter);
+    put_varint(buf, c.actor.0 as u64);
+}
+
+/// Decode a Lamport clock.
+pub fn decode_lamport(buf: &[u8], pos: &mut usize) -> Result<LamportClock> {
+    let counter = get_varint(buf, pos)?;
+    let actor = Actor(get_varint(buf, pos)? as u32);
+    Ok(LamportClock { counter, actor })
+}
+
+/// Cross-mechanism size probe used by the metadata benches: encodes the
+/// clock and reports the byte count.
+pub fn measured_size<C: LogicalClock>(clock: &C) -> usize {
+    clock.encoded_size()
+}
+
+/// Sanity helper for tests: equal clocks must encode identically.
+pub fn codec_stable(a: &Dvv, b: &Dvv) -> bool {
+    if a.compare(b) != ClockOrd::Equal {
+        return true;
+    }
+    let (mut ba, mut bb) = (Vec::new(), Vec::new());
+    encode_dvv(a, &mut ba);
+    encode_dvv(b, &mut bb);
+    // equal *histories* may differ in representation (dot vs folded dot);
+    // after compaction the encodings must match
+    let (mut ca, mut cb) = (a.clone(), b.clone());
+    ca.compact();
+    cb.compact();
+    let (mut ba2, mut bb2) = (Vec::new(), Vec::new());
+    encode_dvv(&ca, &mut ba2);
+    encode_dvv(&cb, &mut bb2);
+    ba2 == bb2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::causal_history::hist;
+    use crate::clocks::dvv::dvv;
+    use crate::clocks::vv::vv;
+    use crate::testkit::prop::{forall, from_fn, Config};
+
+    fn a() -> Actor {
+        Actor::server(0)
+    }
+    fn b() -> Actor {
+        Actor::server(1)
+    }
+
+    #[test]
+    fn varint_roundtrip_boundaries() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            assert_eq!(buf.len(), varint_len(v), "len mismatch for {v}");
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn varint_rejects_truncation() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 300);
+        buf.truncate(1);
+        let mut pos = 0;
+        assert!(get_varint(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn vv_roundtrip_and_size() {
+        let v = vv(&[(a(), 2), (b(), 70000)]);
+        let mut buf = Vec::new();
+        encode_vv(&v, &mut buf);
+        assert_eq!(buf.len(), v.encoded_size());
+        let mut pos = 0;
+        assert_eq!(decode_vv(&buf, &mut pos).unwrap(), v);
+    }
+
+    #[test]
+    fn dvv_roundtrip_and_size() {
+        for d in [
+            dvv(&[], None),
+            dvv(&[], Some((b(), 2))),
+            dvv(&[(a(), 2), (b(), 1)], Some((a(), 9))),
+        ] {
+            let mut buf = Vec::new();
+            encode_dvv(&d, &mut buf);
+            assert_eq!(buf.len(), d.encoded_size(), "{d}");
+            let mut pos = 0;
+            assert_eq!(decode_dvv(&buf, &mut pos).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn history_roundtrip() {
+        let h = hist(&[(a(), 1), (a(), 2), (b(), 1)]);
+        let mut buf = Vec::new();
+        encode_history(&h, &mut buf);
+        assert_eq!(buf.len(), h.encoded_size());
+        let mut pos = 0;
+        assert_eq!(decode_history(&buf, &mut pos).unwrap(), h);
+    }
+
+    #[test]
+    fn rt_and_lamport_roundtrip() {
+        let r = RtClock::new(123456, Actor::client(3));
+        let mut buf = Vec::new();
+        encode_rt(&r, &mut buf);
+        assert_eq!(buf.len(), r.encoded_size());
+        let mut pos = 0;
+        assert_eq!(decode_rt(&buf, &mut pos).unwrap(), r);
+
+        let l = LamportClock::new(42, Actor::server(1));
+        let mut buf = Vec::new();
+        encode_lamport(&l, &mut buf);
+        assert_eq!(buf.len(), l.encoded_size());
+        let mut pos = 0;
+        assert_eq!(decode_lamport(&buf, &mut pos).unwrap(), l);
+    }
+
+    #[test]
+    fn concatenated_clocks_decode_in_sequence() {
+        let v = vv(&[(a(), 5)]);
+        let d = dvv(&[(b(), 1)], Some((a(), 2)));
+        let mut buf = Vec::new();
+        encode_vv(&v, &mut buf);
+        encode_dvv(&d, &mut buf);
+        let mut pos = 0;
+        assert_eq!(decode_vv(&buf, &mut pos).unwrap(), v);
+        assert_eq!(decode_dvv(&buf, &mut pos).unwrap(), d);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn prop_dvv_roundtrip() {
+        forall(
+            &Config::default().cases(200),
+            from_fn(|rng, _| {
+                let vvp = VersionVector::from_pairs(
+                    (0..4u32).map(|i| (Actor::server(i), rng.below(100))),
+                );
+                let dot = if rng.chance(0.5) {
+                    let r = Actor::server(rng.below(4) as u32);
+                    Some((r, vvp.get(r) + 1 + rng.below(5)))
+                } else {
+                    None
+                };
+                Dvv { vv: vvp, dot }
+            }),
+            |d| {
+                let mut buf = Vec::new();
+                encode_dvv(d, &mut buf);
+                let mut pos = 0;
+                decode_dvv(&buf, &mut pos).unwrap() == *d && buf.len() == d.encoded_size()
+            },
+        );
+    }
+}

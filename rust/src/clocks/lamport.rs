@@ -1,0 +1,88 @@
+//! Lamport clocks (§3.1): causally-compliant total order without real time.
+//!
+//! "An alternative approach that avoids real time clock synchronization
+//! ... would be to use Lamport clocks, establishing a total order among
+//! updates that is compliant with causal dependencies": the pair
+//! `(CLOCK, REPLICA)` ordered lexicographically. Like the wall-clock
+//! variant, the order is total, so genuinely concurrent updates are
+//! (silently) linearized — the paper's point.
+
+use std::fmt;
+
+use super::{Actor, ClockOrd, LogicalClock};
+
+/// `(counter, replica)` Lamport pair; ordered lexicographically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LamportClock {
+    /// The logical counter.
+    pub counter: u64,
+    /// Site id (client or coordinating replica).
+    pub actor: Actor,
+}
+
+impl LamportClock {
+    /// Construct a pair.
+    pub fn new(counter: u64, actor: Actor) -> LamportClock {
+        LamportClock { counter, actor }
+    }
+
+    /// The clock for a new update given the context's counter and the
+    /// issuing site: `max(seen, local) + 1` (the standard receive rule;
+    /// here the store's per-key counter stands in for "local").
+    pub fn tick(seen: u64, local: u64, actor: Actor) -> LamportClock {
+        LamportClock { counter: seen.max(local) + 1, actor }
+    }
+}
+
+impl LogicalClock for LamportClock {
+    fn compare(&self, other: &LamportClock) -> ClockOrd {
+        match Ord::cmp(self, other) {
+            std::cmp::Ordering::Less => ClockOrd::Less,
+            std::cmp::Ordering::Greater => ClockOrd::Greater,
+            std::cmp::Ordering::Equal => ClockOrd::Equal,
+        }
+    }
+
+    fn encoded_size(&self) -> usize {
+        super::encoding::varint_len(self.counter) + super::encoding::varint_len(self.actor.0 as u64)
+    }
+}
+
+impl fmt::Display for LamportClock {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({},{})", self.counter, self.actor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_order_rule() {
+        // (ca, ra) < (cb, rb) iff ca < cb or (ca = cb and ra < rb)
+        let x = LamportClock::new(1, Actor::server(1));
+        let y = LamportClock::new(2, Actor::server(0));
+        let z = LamportClock::new(2, Actor::server(1));
+        assert_eq!(x.compare(&y), ClockOrd::Less);
+        assert_eq!(y.compare(&z), ClockOrd::Less);
+        assert_eq!(z.compare(&z), ClockOrd::Equal);
+    }
+
+    #[test]
+    fn tick_is_monotone() {
+        let c = LamportClock::tick(5, 3, Actor::server(0));
+        assert_eq!(c.counter, 6);
+        let c2 = LamportClock::tick(2, 9, Actor::server(0));
+        assert_eq!(c2.counter, 10);
+        assert!(LamportClock::new(5, Actor::server(0)).compare(&c).is_leq());
+    }
+
+    #[test]
+    fn causal_compliance() {
+        // a write that causally follows another always orders after it
+        let first = LamportClock::tick(0, 0, Actor::server(0));
+        let second = LamportClock::tick(first.counter, 0, Actor::server(1));
+        assert_eq!(first.compare(&second), ClockOrd::Less);
+    }
+}

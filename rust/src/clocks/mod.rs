@@ -1,0 +1,192 @@
+//! Causality-tracking mechanisms.
+//!
+//! One module per mechanism the paper surveys (§3) plus the contribution
+//! (§5):
+//!
+//! | module            | paper section | mechanism                           |
+//! |-------------------|---------------|-------------------------------------|
+//! | [`causal_history`]| §3 intro      | explicit event sets (ground truth)  |
+//! | [`realtime`]      | §3.1          | physical-clock last-writer-wins     |
+//! | [`lamport`]       | §3.1          | Lamport-clock total order           |
+//! | [`vv`]            | §3.2          | version vectors, per-server entries |
+//! | [`dvv`]           | §5            | **dotted version vectors**          |
+//! | [`dvvset`]        | extension     | compact sibling-set DVVs            |
+//!
+//! The per-client version-vector variant of §3.3 reuses [`VersionVector`]
+//! over client actors; its server-side behaviour lives in
+//! `kernel::mechs::client_vv`. [`encoding`] provides the wire codecs used
+//! for the metadata-size experiments (DESIGN.md E7).
+
+pub mod causal_history;
+pub mod dvv;
+pub mod dvvset;
+pub mod encoding;
+pub mod lamport;
+pub mod realtime;
+pub mod vv;
+
+pub use causal_history::CausalHistory;
+pub use dvv::Dvv;
+pub use dvvset::DvvSet;
+pub use lamport::LamportClock;
+pub use realtime::RtClock;
+pub use vv::VersionVector;
+
+use std::fmt;
+
+/// A participant identifier: a replica server or a client.
+///
+/// The paper's three orders of magnitude (§2) — few replicas per key, many
+/// servers, a huge number of clients — are modelled by one compact id
+/// space: servers occupy low ids, clients start at [`Actor::CLIENT_BASE`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Actor(pub u32);
+
+impl Actor {
+    /// First id used for clients (servers sit below this).
+    pub const CLIENT_BASE: u32 = 1 << 20;
+
+    /// A server actor (`a`, `b`, `c`, ... in the paper's figures).
+    pub fn server(i: u32) -> Actor {
+        debug_assert!(i < Actor::CLIENT_BASE);
+        Actor(i)
+    }
+
+    /// A client actor (`C1`, `C2`, ... in the paper's figures).
+    pub fn client(i: u32) -> Actor {
+        Actor(Actor::CLIENT_BASE + i)
+    }
+
+    /// Is this a client id?
+    pub fn is_client(self) -> bool {
+        self.0 >= Actor::CLIENT_BASE
+    }
+}
+
+impl fmt::Display for Actor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_client() {
+            write!(f, "C{}", self.0 - Actor::CLIENT_BASE + 1)
+        } else if self.0 < 26 {
+            write!(f, "{}", (b'a' + self.0 as u8) as char)
+        } else {
+            write!(f, "s{}", self.0)
+        }
+    }
+}
+
+/// A globally unique update event: `b_3` in the paper's notation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Event {
+    /// Actor that generated the event.
+    pub actor: Actor,
+    /// Per-actor monotonic sequence number, starting at 1.
+    pub seq: u64,
+}
+
+impl Event {
+    /// Construct `actor_seq`.
+    pub fn new(actor: Actor, seq: u64) -> Event {
+        debug_assert!(seq >= 1, "event sequence numbers start at 1");
+        Event { actor, seq }
+    }
+}
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.actor, self.seq)
+    }
+}
+
+/// Outcome of comparing two clocks under the causality partial order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockOrd {
+    /// Identical causal histories.
+    Equal,
+    /// Self's history is strictly contained in the other's.
+    Less,
+    /// Self's history strictly contains the other's.
+    Greater,
+    /// Neither contains the other: concurrent updates.
+    Concurrent,
+}
+
+impl ClockOrd {
+    /// `self <= other` (non-strict domination).
+    pub fn is_leq(self) -> bool {
+        matches!(self, ClockOrd::Equal | ClockOrd::Less)
+    }
+
+    /// `self >= other`.
+    pub fn is_geq(self) -> bool {
+        matches!(self, ClockOrd::Equal | ClockOrd::Greater)
+    }
+
+    /// The comparison seen from the other side.
+    pub fn flip(self) -> ClockOrd {
+        match self {
+            ClockOrd::Less => ClockOrd::Greater,
+            ClockOrd::Greater => ClockOrd::Less,
+            other => other,
+        }
+    }
+
+    /// Build from the two non-strict domination directions.
+    pub fn from_leq_geq(leq: bool, geq: bool) -> ClockOrd {
+        match (leq, geq) {
+            (true, true) => ClockOrd::Equal,
+            (true, false) => ClockOrd::Less,
+            (false, true) => ClockOrd::Greater,
+            (false, false) => ClockOrd::Concurrent,
+        }
+    }
+}
+
+/// A logical clock: orderable, sizeable, and (where faithful) convertible
+/// to its causal history for oracle cross-checks.
+pub trait LogicalClock: Clone + fmt::Debug {
+    /// Compare under the mechanism's (partial or total) order.
+    fn compare(&self, other: &Self) -> ClockOrd;
+
+    /// Encoded wire size in bytes (metadata-size experiments, E7).
+    fn encoded_size(&self) -> usize;
+}
+
+/// Names accepted by `--mechanism` / `cluster.mechanism` config.
+pub const MECHANISM_NAMES: &[&str] =
+    &["history", "lww", "lamport", "vv", "clientvv", "dvv", "dvvset"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actor_display_matches_paper_notation() {
+        assert_eq!(Actor::server(0).to_string(), "a");
+        assert_eq!(Actor::server(1).to_string(), "b");
+        assert_eq!(Actor::client(0).to_string(), "C1");
+        assert_eq!(Actor::client(2).to_string(), "C3");
+    }
+
+    #[test]
+    fn event_display() {
+        assert_eq!(Event::new(Actor::server(1), 2).to_string(), "b2");
+    }
+
+    #[test]
+    fn client_server_spaces_disjoint() {
+        assert!(!Actor::server(999).is_client());
+        assert!(Actor::client(0).is_client());
+        assert_ne!(Actor::server(5), Actor::client(5));
+    }
+
+    #[test]
+    fn clockord_helpers() {
+        assert!(ClockOrd::Equal.is_leq() && ClockOrd::Equal.is_geq());
+        assert!(ClockOrd::Less.is_leq() && !ClockOrd::Less.is_geq());
+        assert_eq!(ClockOrd::Less.flip(), ClockOrd::Greater);
+        assert_eq!(ClockOrd::Concurrent.flip(), ClockOrd::Concurrent);
+        assert_eq!(ClockOrd::from_leq_geq(true, false), ClockOrd::Less);
+        assert_eq!(ClockOrd::from_leq_geq(false, false), ClockOrd::Concurrent);
+    }
+}

@@ -1,0 +1,80 @@
+//! Physical-timestamp clocks for last-writer-wins (§3.1).
+//!
+//! "The simplest total order is obtained assuming that client clocks are
+//! well synchronized and applying real time clock order (simultaneous
+//! events are usually further ordered over process ids)." Used by the
+//! Cassandra-style LWW baseline; the §3.1 anomaly (skewed clocks losing
+//! all their writes) is reproduced by the simulator's per-client skew
+//! injection (`net::ClockSkew`).
+//!
+//! The order is **total**: `compare` never returns
+//! [`ClockOrd::Concurrent`], which is exactly how this mechanism loses
+//! concurrent updates (paper Figure 2).
+
+use std::fmt;
+
+use super::{Actor, ClockOrd, LogicalClock};
+
+/// A wall-clock timestamp plus a process-id tiebreak.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct RtClock {
+    /// Microseconds of (possibly skewed) wall-clock time.
+    pub micros: u64,
+    /// Tiebreak for simultaneous events.
+    pub actor: Actor,
+}
+
+impl RtClock {
+    /// Construct from a timestamp and writer id.
+    pub fn new(micros: u64, actor: Actor) -> RtClock {
+        RtClock { micros, actor }
+    }
+}
+
+impl LogicalClock for RtClock {
+    fn compare(&self, other: &RtClock) -> ClockOrd {
+        match Ord::cmp(self, other) {
+            std::cmp::Ordering::Less => ClockOrd::Less,
+            std::cmp::Ordering::Greater => ClockOrd::Greater,
+            std::cmp::Ordering::Equal => ClockOrd::Equal,
+        }
+    }
+
+    fn encoded_size(&self) -> usize {
+        super::encoding::varint_len(self.micros) + super::encoding::varint_len(self.actor.0 as u64)
+    }
+}
+
+impl fmt::Display for RtClock {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t{}@{}", self.micros, self.actor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_order_never_concurrent() {
+        let x = RtClock::new(10, Actor::client(0));
+        let y = RtClock::new(10, Actor::client(1));
+        let z = RtClock::new(9, Actor::client(9));
+        assert_eq!(x.compare(&y), ClockOrd::Less); // id tiebreak
+        assert_eq!(x.compare(&x), ClockOrd::Equal);
+        assert_eq!(x.compare(&z), ClockOrd::Greater);
+    }
+
+    #[test]
+    fn timestamp_dominates_tiebreak() {
+        let early_big_id = RtClock::new(5, Actor::client(999));
+        let late_small_id = RtClock::new(6, Actor::client(0));
+        assert_eq!(early_big_id.compare(&late_small_id), ClockOrd::Less);
+    }
+
+    #[test]
+    fn encoded_size_is_constant_order() {
+        let x = RtClock::new(1_700_000_000_000_000, Actor::client(12345));
+        assert!(x.encoded_size() <= 12);
+    }
+}

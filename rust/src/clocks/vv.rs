@@ -1,0 +1,266 @@
+//! Version vectors (§3.2): per-actor contiguous event-range summaries.
+//!
+//! A version vector `{(a,2),(b,1)}` summarizes the causal history
+//! `{a1,a2,b1}`. Comparison is pointwise; the join is the pointwise max.
+//! Kept as a sorted association list — replica counts per key are small
+//! (the paper's lowest order of magnitude), so a flat vec beats tree maps
+//! on both space and compare cost.
+
+use std::fmt;
+
+use super::{Actor, CausalHistory, ClockOrd, Event, LogicalClock};
+
+/// A version vector: sorted `(actor, max-seq)` pairs, seq >= 1.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct VersionVector {
+    entries: Vec<(Actor, u64)>,
+}
+
+impl VersionVector {
+    /// The empty vector (bottom of the lattice).
+    pub fn new() -> VersionVector {
+        VersionVector::default()
+    }
+
+    /// Build from unsorted pairs; zero counters are dropped.
+    pub fn from_pairs<I: IntoIterator<Item = (Actor, u64)>>(pairs: I) -> VersionVector {
+        let mut entries: Vec<(Actor, u64)> =
+            pairs.into_iter().filter(|&(_, n)| n > 0).collect();
+        entries.sort_unstable_by_key(|&(a, _)| a);
+        entries.dedup_by(|b, a| {
+            if a.0 == b.0 {
+                a.1 = a.1.max(b.1);
+                true
+            } else {
+                false
+            }
+        });
+        VersionVector { entries }
+    }
+
+    /// Number of non-zero entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no entries are present.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Counter for `actor` (0 when absent).
+    pub fn get(&self, actor: Actor) -> u64 {
+        match self.entries.binary_search_by_key(&actor, |&(a, _)| a) {
+            Ok(i) => self.entries[i].1,
+            Err(_) => 0,
+        }
+    }
+
+    /// Set `actor`'s counter (removing the entry when 0).
+    pub fn set(&mut self, actor: Actor, seq: u64) {
+        match self.entries.binary_search_by_key(&actor, |&(a, _)| a) {
+            Ok(i) => {
+                if seq == 0 {
+                    self.entries.remove(i);
+                } else {
+                    self.entries[i].1 = seq;
+                }
+            }
+            Err(i) => {
+                if seq > 0 {
+                    self.entries.insert(i, (actor, seq));
+                }
+            }
+        }
+    }
+
+    /// Bump `actor`'s counter by one and return the new value.
+    pub fn increment(&mut self, actor: Actor) -> u64 {
+        let next = self.get(actor) + 1;
+        self.set(actor, next);
+        next
+    }
+
+    /// Pointwise max, in place (the lattice join).
+    pub fn join_from(&mut self, other: &VersionVector) {
+        for &(a, n) in &other.entries {
+            if self.get(a) < n {
+                self.set(a, n);
+            }
+        }
+    }
+
+    /// Pointwise max, by value.
+    pub fn join(&self, other: &VersionVector) -> VersionVector {
+        let mut out = self.clone();
+        out.join_from(other);
+        out
+    }
+
+    /// `self <= other` pointwise.
+    pub fn dominated_by(&self, other: &VersionVector) -> bool {
+        self.entries.iter().all(|&(a, n)| n <= other.get(a))
+    }
+
+    /// Iterate `(actor, seq)` pairs in actor order.
+    pub fn iter(&self) -> impl Iterator<Item = (Actor, u64)> + '_ {
+        self.entries.iter().copied()
+    }
+
+    /// The summarized causal history (exact for version vectors).
+    pub fn history(&self) -> CausalHistory {
+        CausalHistory::from_events(
+            self.entries
+                .iter()
+                .flat_map(|&(a, n)| (1..=n).map(move |s| Event::new(a, s))),
+        )
+    }
+}
+
+impl LogicalClock for VersionVector {
+    fn compare(&self, other: &VersionVector) -> ClockOrd {
+        ClockOrd::from_leq_geq(self.dominated_by(other), other.dominated_by(self))
+    }
+
+    fn encoded_size(&self) -> usize {
+        super::encoding::varint_len(self.len() as u64)
+            + self
+                .iter()
+                .map(|(a, n)| {
+                    super::encoding::varint_len(a.0 as u64) + super::encoding::varint_len(n)
+                })
+                .sum::<usize>()
+    }
+}
+
+impl fmt::Display for VersionVector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, (a, n)) in self.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "({a},{n})")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+/// Shorthand constructor for tests/figures: `vv(&[(a, 2), (b, 1)])`.
+pub fn vv(pairs: &[(Actor, u64)]) -> VersionVector {
+    VersionVector::from_pairs(pairs.iter().copied())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{forall, from_fn, Config};
+    use crate::testkit::Rng;
+
+    fn a() -> Actor {
+        Actor::server(0)
+    }
+    fn b() -> Actor {
+        Actor::server(1)
+    }
+    fn c() -> Actor {
+        Actor::server(2)
+    }
+
+    #[test]
+    fn summarizes_history_exactly() {
+        // §3.2's example: {a1,a2,b1,b2,c1} == {(a,2),(b,2),(c,1)}
+        let v = vv(&[(a(), 2), (b(), 2), (c(), 1)]);
+        let h = crate::clocks::causal_history::hist(&[
+            (a(), 1),
+            (a(), 2),
+            (b(), 1),
+            (b(), 2),
+            (c(), 1),
+        ]);
+        assert_eq!(v.history(), h);
+    }
+
+    #[test]
+    fn figure3_comparisons() {
+        // y={(a,2)} vs w={(b,2)}: concurrent (correctly detected, §3.2)
+        let y = vv(&[(a(), 2)]);
+        let w = vv(&[(b(), 2)]);
+        assert_eq!(y.compare(&w), ClockOrd::Concurrent);
+        // but v={(b,1)} vs w={(b,2)}: v falsely dominated (the §3.2 anomaly)
+        let v = vv(&[(b(), 1)]);
+        assert_eq!(v.compare(&w), ClockOrd::Less);
+    }
+
+    #[test]
+    fn get_set_increment() {
+        let mut v = VersionVector::new();
+        assert_eq!(v.get(a()), 0);
+        assert_eq!(v.increment(a()), 1);
+        assert_eq!(v.increment(a()), 2);
+        v.set(b(), 7);
+        assert_eq!(v.get(b()), 7);
+        v.set(b(), 0);
+        assert_eq!(v.get(b()), 0);
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn from_pairs_dedups_and_sorts() {
+        let v = VersionVector::from_pairs(vec![(b(), 1), (a(), 3), (b(), 5), (c(), 0)]);
+        assert_eq!(v.get(a()), 3);
+        assert_eq!(v.get(b()), 5);
+        assert_eq!(v.len(), 2);
+        let actors: Vec<Actor> = v.iter().map(|(x, _)| x).collect();
+        assert_eq!(actors, vec![a(), b()]);
+    }
+
+    #[test]
+    fn join_is_lub() {
+        let x = vv(&[(a(), 2), (b(), 1)]);
+        let y = vv(&[(a(), 1), (c(), 4)]);
+        let j = x.join(&y);
+        assert_eq!(j, vv(&[(a(), 2), (b(), 1), (c(), 4)]));
+        assert!(x.dominated_by(&j) && y.dominated_by(&j));
+    }
+
+    fn arb_vv(rng: &mut Rng, size: usize) -> VersionVector {
+        let actors = 1 + size / 25;
+        VersionVector::from_pairs(
+            (0..actors as u32).map(|i| (Actor::server(i), rng.below(6))),
+        )
+    }
+
+    #[test]
+    fn prop_compare_agrees_with_history_inclusion() {
+        forall(
+            &Config::default().cases(200),
+            from_fn(|rng, size| (arb_vv(rng, size), arb_vv(rng, size))),
+            |(x, y)| x.compare(y) == x.history().compare(&y.history()),
+        );
+    }
+
+    #[test]
+    fn prop_join_laws() {
+        forall(
+            &Config::default().cases(150),
+            from_fn(|rng, size| (arb_vv(rng, size), arb_vv(rng, size))),
+            |(x, y)| {
+                let xy = x.join(y);
+                xy == y.join(x) && x.join(x) == *x && x.dominated_by(&xy)
+            },
+        );
+    }
+
+    #[test]
+    fn encoded_size_linear_in_entries() {
+        let small = vv(&[(a(), 1)]);
+        let big = VersionVector::from_pairs((0..64u32).map(|i| (Actor::server(i), 3)));
+        assert!(big.encoded_size() > 32 * small.encoded_size() / 2);
+    }
+
+    #[test]
+    fn display_notation() {
+        assert_eq!(vv(&[(a(), 2), (b(), 1)]).to_string(), "{(a,2),(b,1)}");
+    }
+}

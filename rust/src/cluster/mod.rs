@@ -1,0 +1,7 @@
+//! Cluster topology: consistent-hashing ring, membership, replica
+//! placement — the Dynamo substrate of §2 ("the approach used to decide
+//! which nodes will replicate a given key (e.g., consistent hashing)").
+
+pub mod ring;
+
+pub use ring::{NodeId, Ring};

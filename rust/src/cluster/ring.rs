@@ -1,0 +1,187 @@
+//! Consistent-hashing ring with virtual nodes.
+//!
+//! Keys hash onto a 64-bit circle; each physical node owns `vnodes`
+//! points. The preference list for a key is the first `n` *distinct*
+//! nodes walking clockwise from the key's hash — Dynamo's placement rule.
+
+use crate::error::{Error, Result};
+
+/// Physical node index within the cluster (dense, 0-based).
+pub type NodeId = usize;
+
+/// 64-bit mix hash (splitmix64 finalizer) — stable across runs.
+#[inline]
+pub fn hash64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Hash a string key into the ring's key space.
+pub fn hash_str(s: &str) -> u64 {
+    // FNV-1a then mix — good enough for routing, stable, dependency-free.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    hash64(h)
+}
+
+/// A consistent-hash ring over dense node ids.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    /// Sorted (point, node) pairs.
+    points: Vec<(u64, NodeId)>,
+    nodes: usize,
+    vnodes: usize,
+}
+
+impl Ring {
+    /// Build a ring of `nodes` physical nodes with `vnodes` points each.
+    pub fn new(nodes: usize, vnodes: usize) -> Result<Ring> {
+        if nodes == 0 || vnodes == 0 {
+            return Err(Error::Config("ring needs nodes >= 1 and vnodes >= 1".into()));
+        }
+        let mut ring = Ring { points: Vec::new(), nodes: 0, vnodes };
+        for _ in 0..nodes {
+            ring.add_node();
+        }
+        Ok(ring)
+    }
+
+    /// Number of physical nodes.
+    pub fn node_count(&self) -> usize {
+        self.nodes
+    }
+
+    /// Add a new physical node (id = current count) and place its vnodes.
+    pub fn add_node(&mut self) -> NodeId {
+        let id = self.nodes;
+        self.nodes += 1;
+        for v in 0..self.vnodes {
+            let point = hash64((id as u64) << 32 | v as u64 | 0xF00D_0000_0000_0000);
+            self.points.push((point, id));
+        }
+        self.points.sort_unstable();
+        id
+    }
+
+    /// Remove a node's vnodes (keys re-route to successors). Node ids are
+    /// not compacted; the id simply stops owning ranges.
+    pub fn remove_node(&mut self, id: NodeId) {
+        self.points.retain(|&(_, n)| n != id);
+    }
+
+    /// The first `n` distinct replica nodes for `key`, clockwise from its
+    /// hash (the preference list).
+    pub fn replicas_for(&self, key: u64, n: usize) -> Vec<NodeId> {
+        let mut out = Vec::with_capacity(n);
+        if self.points.is_empty() {
+            return out;
+        }
+        let h = hash64(key);
+        let start = match self.points.binary_search_by_key(&h, |&(p, _)| p) {
+            Ok(i) | Err(i) => i,
+        };
+        for step in 0..self.points.len() {
+            let (_, node) = self.points[(start + step) % self.points.len()];
+            if !out.contains(&node) {
+                out.push(node);
+                if out.len() == n {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Primary (coordinator-preferred) replica for `key`.
+    pub fn primary_for(&self, key: u64) -> Option<NodeId> {
+        self.replicas_for(key, 1).first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preference_list_is_distinct_and_sized() {
+        let ring = Ring::new(6, 64).unwrap();
+        for key in 0..200u64 {
+            let reps = ring.replicas_for(key, 3);
+            assert_eq!(reps.len(), 3);
+            let mut sorted = reps.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "duplicates in {reps:?}");
+        }
+    }
+
+    #[test]
+    fn placement_is_stable() {
+        let r1 = Ring::new(5, 32).unwrap();
+        let r2 = Ring::new(5, 32).unwrap();
+        for key in 0..100u64 {
+            assert_eq!(r1.replicas_for(key, 3), r2.replicas_for(key, 3));
+        }
+    }
+
+    #[test]
+    fn load_is_roughly_balanced() {
+        let ring = Ring::new(4, 128).unwrap();
+        let mut counts = [0usize; 4];
+        for key in 0..8000u64 {
+            counts[ring.primary_for(key).unwrap()] += 1;
+        }
+        for &c in &counts {
+            assert!(
+                (1000..3500).contains(&c),
+                "imbalanced primary load: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn adding_node_moves_limited_keys() {
+        let mut ring = Ring::new(4, 128).unwrap();
+        let before: Vec<_> = (0..2000u64).map(|k| ring.primary_for(k).unwrap()).collect();
+        ring.add_node();
+        let moved = (0..2000u64)
+            .filter(|&k| ring.primary_for(k).unwrap() != before[k as usize])
+            .count();
+        // ideal is 1/5 = 400; allow generous slack
+        assert!(moved > 100 && moved < 900, "moved {moved}");
+    }
+
+    #[test]
+    fn removing_node_reroutes_to_survivors() {
+        let mut ring = Ring::new(3, 64).unwrap();
+        ring.remove_node(1);
+        for key in 0..200u64 {
+            let reps = ring.replicas_for(key, 2);
+            assert!(!reps.contains(&1));
+            assert_eq!(reps.len(), 2);
+        }
+    }
+
+    #[test]
+    fn replicas_capped_by_cluster_size() {
+        let ring = Ring::new(2, 16).unwrap();
+        assert_eq!(ring.replicas_for(7, 5).len(), 2);
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        assert!(Ring::new(0, 8).is_err());
+        assert!(Ring::new(3, 0).is_err());
+    }
+
+    #[test]
+    fn hash_str_stable_and_spread() {
+        assert_eq!(hash_str("key1"), hash_str("key1"));
+        assert_ne!(hash_str("key1"), hash_str("key2"));
+    }
+}

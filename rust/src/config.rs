@@ -1,0 +1,475 @@
+//! Configuration system: typed config structs + a TOML-subset parser.
+//!
+//! The offline environment has no `serde`/`toml`, so this module parses the
+//! subset the project needs: `[section]` / `[section.sub]` headers, `key =
+//! value` pairs with integer, float, boolean, string, and flat-array
+//! values, `#` comments, and blank lines.
+//!
+//! ```toml
+//! [cluster]
+//! nodes = 6
+//! replication = 3
+//! read_quorum = 2
+//! write_quorum = 2
+//! mechanism = "dvv"
+//!
+//! [net]
+//! mean_latency_us = 500.0
+//! drop_prob = 0.0
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// 64-bit integer.
+    Int(i64),
+    /// Double float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Unquoted or quoted string.
+    Str(String),
+    /// Flat array of scalars.
+    Array(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "{v:?}"),
+            Value::Array(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Raw parsed config: dotted-path -> value.
+#[derive(Debug, Clone, Default)]
+pub struct Raw {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Raw {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Raw> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = strip_comment(raw_line).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                section = name.to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim();
+                if key.is_empty() {
+                    return Err(err(lineno, "empty key"));
+                }
+                let path = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                entries.insert(path, parse_value(v.trim(), lineno)?);
+            } else {
+                return Err(err(lineno, "expected `key = value` or `[section]`"));
+            }
+        }
+        Ok(Raw { entries })
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &Path) -> Result<Raw> {
+        Raw::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Look up a dotted path.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    /// Integer at path, with default.
+    pub fn int(&self, path: &str, default: i64) -> Result<i64> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(Value::Int(v)) => Ok(*v),
+            Some(other) => Err(Error::Config(format!("{path}: expected int, got {other}"))),
+        }
+    }
+
+    /// Float at path, with default (ints coerce).
+    pub fn float(&self, path: &str, default: f64) -> Result<f64> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(Value::Float(v)) => Ok(*v),
+            Some(Value::Int(v)) => Ok(*v as f64),
+            Some(other) => Err(Error::Config(format!("{path}: expected float, got {other}"))),
+        }
+    }
+
+    /// Bool at path, with default.
+    pub fn bool(&self, path: &str, default: bool) -> Result<bool> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(Value::Bool(v)) => Ok(*v),
+            Some(other) => Err(Error::Config(format!("{path}: expected bool, got {other}"))),
+        }
+    }
+
+    /// String at path, with default.
+    pub fn str(&self, path: &str, default: &str) -> Result<String> {
+        match self.get(path) {
+            None => Ok(default.to_string()),
+            Some(Value::Str(v)) => Ok(v.clone()),
+            Some(other) => Err(Error::Config(format!("{path}: expected string, got {other}"))),
+        }
+    }
+
+    /// All dotted paths (for diagnostics).
+    pub fn paths(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        if !body.trim().is_empty() {
+            for part in split_array(body) {
+                items.push(parse_value(part.trim(), lineno)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare word = string (ergonomic for mechanism names)
+    Ok(Value::Str(s.to_string()))
+}
+
+fn split_array(body: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < body.len() {
+        parts.push(&body[start..]);
+    }
+    parts
+}
+
+// ---------------------------------------------------------------------------
+// Typed configs
+// ---------------------------------------------------------------------------
+
+/// Cluster topology + quorum configuration (§2 system model).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Total server nodes in the ring.
+    pub nodes: usize,
+    /// Replication degree N (replica nodes per key).
+    pub replication: usize,
+    /// Read quorum R.
+    pub read_quorum: usize,
+    /// Write quorum W.
+    pub write_quorum: usize,
+    /// Virtual nodes per server on the consistent-hash ring.
+    pub vnodes: usize,
+    /// Causality mechanism name (see `clocks::mechanism_names`).
+    pub mechanism: String,
+    /// Coordinator choice per PUT: `false` = first live node of the
+    /// preference list (sticky); `true` = uniformly random live replica
+    /// (Dynamo-style "any node coordinates" — the §3.3/Figure 4 setting
+    /// where stateless-client inference goes wrong).
+    pub random_coordinator: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 6,
+            replication: 3,
+            read_quorum: 2,
+            write_quorum: 2,
+            vnodes: 64,
+            mechanism: "dvv".to_string(),
+            random_coordinator: false,
+        }
+    }
+}
+
+/// Simulated-network parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Mean one-way message latency (µs, exponential distribution).
+    pub mean_latency_us: f64,
+    /// Independent message-drop probability.
+    pub drop_prob: f64,
+    /// Std-dev of per-client wall-clock skew (µs) for the LWW baseline.
+    pub clock_skew_us: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { mean_latency_us: 500.0, drop_prob: 0.0, clock_skew_us: 0.0 }
+    }
+}
+
+/// Anti-entropy parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AntiEntropyConfig {
+    /// Exchange period (µs of simulated time); 0 disables anti-entropy.
+    pub period_us: u64,
+    /// Use the XLA bulk-dominance artifact above this batch size.
+    pub xla_batch_threshold: usize,
+}
+
+impl Default for AntiEntropyConfig {
+    fn default() -> Self {
+        AntiEntropyConfig { period_us: 0, xla_batch_threshold: usize::MAX }
+    }
+}
+
+/// Top-level store configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StoreConfig {
+    /// Cluster/quorum section.
+    pub cluster: ClusterConfig,
+    /// Network simulation section.
+    pub net: NetConfig,
+    /// Anti-entropy section.
+    pub antientropy: AntiEntropyConfig,
+}
+
+impl StoreConfig {
+    /// Build from parsed raw config (missing keys take defaults).
+    pub fn from_raw(raw: &Raw) -> Result<StoreConfig> {
+        let d = StoreConfig::default();
+        let cfg = StoreConfig {
+            cluster: ClusterConfig {
+                nodes: raw.int("cluster.nodes", d.cluster.nodes as i64)? as usize,
+                replication: raw.int("cluster.replication", d.cluster.replication as i64)?
+                    as usize,
+                read_quorum: raw.int("cluster.read_quorum", d.cluster.read_quorum as i64)?
+                    as usize,
+                write_quorum: raw.int("cluster.write_quorum", d.cluster.write_quorum as i64)?
+                    as usize,
+                vnodes: raw.int("cluster.vnodes", d.cluster.vnodes as i64)? as usize,
+                mechanism: raw.str("cluster.mechanism", &d.cluster.mechanism)?,
+                random_coordinator: raw
+                    .bool("cluster.random_coordinator", d.cluster.random_coordinator)?,
+            },
+            net: NetConfig {
+                mean_latency_us: raw.float("net.mean_latency_us", d.net.mean_latency_us)?,
+                drop_prob: raw.float("net.drop_prob", d.net.drop_prob)?,
+                clock_skew_us: raw.float("net.clock_skew_us", d.net.clock_skew_us)?,
+            },
+            antientropy: AntiEntropyConfig {
+                period_us: raw.int("antientropy.period_us", d.antientropy.period_us as i64)?
+                    as u64,
+                xla_batch_threshold: raw.int(
+                    "antientropy.xla_batch_threshold",
+                    d.antientropy.xla_batch_threshold as i64,
+                )? as usize,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<StoreConfig> {
+        StoreConfig::from_raw(&Raw::load(path)?)
+    }
+
+    /// Sanity-check quorum arithmetic.
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.cluster;
+        if c.replication == 0 || c.replication > c.nodes {
+            return Err(Error::Config(format!(
+                "replication {} must be in 1..=nodes ({})",
+                c.replication, c.nodes
+            )));
+        }
+        if c.read_quorum == 0 || c.read_quorum > c.replication {
+            return Err(Error::Config("read_quorum must be in 1..=replication".into()));
+        }
+        if c.write_quorum == 0 || c.write_quorum > c.replication {
+            return Err(Error::Config("write_quorum must be in 1..=replication".into()));
+        }
+        if !(0.0..=1.0).contains(&self.net.drop_prob) {
+            return Err(Error::Config("drop_prob must be within [0, 1]".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# cluster layout
+[cluster]
+nodes = 6
+replication = 3
+read_quorum = 2       # R
+write_quorum = 2
+mechanism = "dvv"
+
+[net]
+mean_latency_us = 250.5
+drop_prob = 0.01
+
+[antientropy]
+period_us = 100000
+"#;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let raw = Raw::parse(SAMPLE).unwrap();
+        assert_eq!(raw.get("cluster.nodes"), Some(&Value::Int(6)));
+        assert_eq!(raw.get("net.mean_latency_us"), Some(&Value::Float(250.5)));
+        assert_eq!(raw.get("cluster.mechanism"), Some(&Value::Str("dvv".into())));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let raw = Raw::parse("# top\n\nx = 1 # end\n").unwrap();
+        assert_eq!(raw.get("x"), Some(&Value::Int(1)));
+    }
+
+    #[test]
+    fn hash_inside_string_preserved() {
+        let raw = Raw::parse("k = \"a#b\"").unwrap();
+        assert_eq!(raw.get("k"), Some(&Value::Str("a#b".into())));
+    }
+
+    #[test]
+    fn arrays() {
+        let raw = Raw::parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nempty = []").unwrap();
+        assert_eq!(
+            raw.get("xs"),
+            Some(&Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)]))
+        );
+        assert_eq!(
+            raw.get("ys"),
+            Some(&Value::Array(vec![Value::Str("a".into()), Value::Str("b".into())]))
+        );
+        assert_eq!(raw.get("empty"), Some(&Value::Array(vec![])));
+    }
+
+    #[test]
+    fn booleans_and_bare_words() {
+        let raw = Raw::parse("a = true\nb = false\nmech = dvv").unwrap();
+        assert_eq!(raw.get("a"), Some(&Value::Bool(true)));
+        assert_eq!(raw.get("b"), Some(&Value::Bool(false)));
+        assert_eq!(raw.get("mech"), Some(&Value::Str("dvv".into())));
+    }
+
+    #[test]
+    fn bad_lines_error_with_lineno() {
+        let e = Raw::parse("x = 1\njunk").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+        let e = Raw::parse("[open").unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn typed_config_from_raw() {
+        let cfg = StoreConfig::from_raw(&Raw::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.cluster.nodes, 6);
+        assert_eq!(cfg.cluster.replication, 3);
+        assert_eq!(cfg.net.mean_latency_us, 250.5);
+        assert_eq!(cfg.antientropy.period_us, 100_000);
+        assert_eq!(cfg.cluster.mechanism, "dvv");
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let cfg = StoreConfig::from_raw(&Raw::parse("").unwrap()).unwrap();
+        assert_eq!(cfg, StoreConfig::default());
+    }
+
+    #[test]
+    fn validation_rejects_bad_quorums() {
+        let raw = Raw::parse("[cluster]\nnodes = 3\nreplication = 5").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+        let raw = Raw::parse("[cluster]\nread_quorum = 9").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+        let raw = Raw::parse("[net]\ndrop_prob = 1.5").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+    }
+}

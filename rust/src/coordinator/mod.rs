@@ -1,0 +1,193 @@
+//! Coordinator logic for quorum get/put (§4.1, Figures 5–6), as pure
+//! state machines reusable by both the discrete-event simulator
+//! ([`crate::sim`]) and the threaded TCP server ([`crate::server`]).
+//!
+//! * GET: fan out to the key's replicas, reduce replies with the
+//!   mechanism's `merge` (the paper's `sync`), answer after `R` replies,
+//!   then optionally read-repair stale replicas with the merged state.
+//! * PUT: apply the mechanism's `update`+`sync` at the coordinator,
+//!   replicate the resulting state, answer after `W` acknowledgements.
+
+use crate::kernel::{Mechanism, Val};
+
+/// Quorum parameters `(N, R, W)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuorumSpec {
+    /// Replication degree.
+    pub n: usize,
+    /// Read quorum.
+    pub r: usize,
+    /// Write quorum.
+    pub w: usize,
+}
+
+impl QuorumSpec {
+    /// Construct and sanity-check.
+    pub fn new(n: usize, r: usize, w: usize) -> crate::Result<QuorumSpec> {
+        if n == 0 || r == 0 || w == 0 || r > n || w > n {
+            return Err(crate::Error::Config(format!(
+                "invalid quorum (N={n}, R={r}, W={w})"
+            )));
+        }
+        Ok(QuorumSpec { n, r, w })
+    }
+
+    /// Does `R + W > N` (read-your-writes intersection)?
+    pub fn intersecting(&self) -> bool {
+        self.r + self.w > self.n
+    }
+}
+
+/// In-flight GET at a coordinator.
+#[derive(Debug, Clone)]
+pub struct GetOp<M: Mechanism> {
+    merged: M::State,
+    replies: usize,
+    spec: QuorumSpec,
+    answered: bool,
+}
+
+/// Result of a completed GET quorum.
+#[derive(Debug, Clone)]
+pub struct GetResult<M: Mechanism> {
+    /// Live sibling values.
+    pub values: Vec<Val>,
+    /// The causal context for subsequent PUTs.
+    pub context: M::Context,
+    /// The reduced state (for read repair).
+    pub merged: M::State,
+}
+
+impl<M: Mechanism> GetOp<M> {
+    /// Start a GET under the given quorum spec.
+    pub fn new(spec: QuorumSpec) -> GetOp<M> {
+        GetOp { merged: M::State::default(), replies: 0, spec, answered: false }
+    }
+
+    /// Feed one replica reply. Returns the client answer when the read
+    /// quorum is first reached (later replies keep folding into `merged`
+    /// for read repair but return `None`).
+    pub fn on_reply(&mut self, mech: &M, state: &M::State) -> Option<GetResult<M>> {
+        mech.merge(&mut self.merged, state);
+        self.replies += 1;
+        if self.replies == self.spec.r && !self.answered {
+            self.answered = true;
+            let (values, context) = mech.read(&self.merged);
+            Some(GetResult { values, context, merged: self.merged.clone() })
+        } else {
+            None
+        }
+    }
+
+    /// Replies received so far.
+    pub fn replies(&self) -> usize {
+        self.replies
+    }
+
+    /// Has the quorum answered?
+    pub fn answered(&self) -> bool {
+        self.answered
+    }
+
+    /// Current merged state (read repair after all replies arrive).
+    pub fn merged(&self) -> &M::State {
+        &self.merged
+    }
+}
+
+/// In-flight PUT at a coordinator (after the local write succeeded —
+/// the coordinator's own store counts as the first ack).
+#[derive(Debug, Clone)]
+pub struct PutOp {
+    acks: usize,
+    spec: QuorumSpec,
+    answered: bool,
+}
+
+impl PutOp {
+    /// Start a PUT; `acks` starts at 1 for the coordinator's local write.
+    pub fn new(spec: QuorumSpec) -> PutOp {
+        PutOp { acks: 1, spec, answered: false }
+    }
+
+    /// Feed one replica acknowledgement; true when the write quorum is
+    /// first satisfied.
+    pub fn on_ack(&mut self) -> bool {
+        self.acks += 1;
+        if self.acks >= self.spec.w && !self.answered {
+            self.answered = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Is the write quorum already satisfied by the local write alone?
+    pub fn satisfied_immediately(&mut self) -> bool {
+        if self.acks >= self.spec.w && !self.answered {
+            self.answered = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Acks so far.
+    pub fn acks(&self) -> usize {
+        self.acks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::Actor;
+    use crate::kernel::mechs::DvvMech;
+    use crate::kernel::WriteMeta;
+
+    #[test]
+    fn quorum_validation() {
+        assert!(QuorumSpec::new(3, 2, 2).unwrap().intersecting());
+        assert!(!QuorumSpec::new(3, 1, 1).unwrap().intersecting());
+        assert!(QuorumSpec::new(3, 4, 1).is_err());
+        assert!(QuorumSpec::new(0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn get_answers_at_r_and_keeps_merging() {
+        let mech = DvvMech;
+        let spec = QuorumSpec::new(3, 2, 2).unwrap();
+        let mut op: GetOp<DvvMech> = GetOp::new(spec);
+
+        // replica 1 has a sibling; replica 2 empty; replica 3 has another
+        let mut s1 = Vec::new();
+        mech.write(&mut s1, &Default::default(), Val::new(1, 0), Actor::server(0), &WriteMeta::basic(Actor::client(0)));
+        let mut s3 = Vec::new();
+        mech.write(&mut s3, &Default::default(), Val::new(2, 0), Actor::server(2), &WriteMeta::basic(Actor::client(1)));
+
+        assert!(op.on_reply(&mech, &s1).is_none());
+        let res = op.on_reply(&mech, &Vec::new()).expect("answer at R=2");
+        assert_eq!(res.values, vec![Val::new(1, 0)]);
+        // third reply folds in for read repair but does not answer again
+        assert!(op.on_reply(&mech, &s3).is_none());
+        assert_eq!(mech.values(op.merged()).len(), 2);
+        assert_eq!(op.replies(), 3);
+    }
+
+    #[test]
+    fn put_quorum_counts_local_write() {
+        let spec = QuorumSpec::new(3, 2, 2).unwrap();
+        let mut op = PutOp::new(spec);
+        assert!(!op.satisfied_immediately());
+        assert!(op.on_ack(), "W=2 reached with coordinator + 1 ack");
+        assert!(!op.on_ack(), "already answered");
+        assert_eq!(op.acks(), 3);
+    }
+
+    #[test]
+    fn put_w1_satisfied_by_local_write() {
+        let spec = QuorumSpec::new(3, 1, 1).unwrap();
+        let mut op = PutOp::new(spec);
+        assert!(op.satisfied_immediately());
+    }
+}

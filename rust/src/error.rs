@@ -1,0 +1,60 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the store, simulator, runtime, and tooling layers.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// A key had no replica nodes (ring misconfiguration).
+    #[error("no replica nodes for key {0:?}")]
+    NoReplicas(String),
+
+    /// Not enough replicas answered within the quorum window.
+    #[error("quorum not met: got {got}, needed {needed}")]
+    QuorumNotMet { got: usize, needed: usize },
+
+    /// A request was routed to a node that is not a replica for the key.
+    #[error("node {node} is not a replica for key {key:?}")]
+    NotAReplica { node: String, key: String },
+
+    /// The node is crashed / partitioned away.
+    #[error("node {0} unavailable")]
+    Unavailable(String),
+
+    /// Conditional-write rejection (Coda/CVS-style semantics, §3.2).
+    #[error("conditional write rejected: context is stale")]
+    StaleContext,
+
+    /// Artifact manifest / HLO loading problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// XLA/PJRT runtime failure.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Configuration file / CLI parse errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Wire-protocol decode errors (TCP server mode).
+    #[error("protocol: {0}")]
+    Protocol(String),
+
+    /// Codec errors for clock serialization.
+    #[error("codec: {0}")]
+    Codec(String),
+
+    /// Generic I/O.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

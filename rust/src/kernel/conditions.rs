@@ -1,0 +1,162 @@
+//! Checkable forms of the paper's §4 kernel conditions and the §5.4
+//! `downset` invariant — used by integration/property tests to validate
+//! any mechanism against the specification.
+
+use crate::clocks::{CausalHistory, ClockOrd, LogicalClock};
+
+/// §4 sync conditions over tagged clock sets:
+/// 1. every output is drawn from the inputs;
+/// 2. outputs are pairwise non-dominating;
+/// 3. every input is covered by some output.
+pub fn check_sync_conditions<C: LogicalClock + PartialEq, V>(
+    s1: &[(C, V)],
+    s2: &[(C, V)],
+    out: &[(C, V)],
+) -> Result<(), String> {
+    for (c, _) in out {
+        if !s1.iter().chain(s2.iter()).any(|(i, _)| i == c) {
+            return Err(format!("condition 1 violated: {c:?} not from inputs"));
+        }
+    }
+    for (i, (ci, _)) in out.iter().enumerate() {
+        for (j, (cj, _)) in out.iter().enumerate() {
+            if i != j && ci.compare(cj).is_leq() {
+                return Err(format!("condition 2 violated: {ci:?} <= {cj:?}"));
+            }
+        }
+    }
+    for (c, _) in s1.iter().chain(s2.iter()) {
+        if !out.iter().any(|(o, _)| c.compare(o).is_leq()) {
+            return Err(format!("condition 3 violated: {c:?} not covered"));
+        }
+    }
+    Ok(())
+}
+
+/// §4 update conditions, evaluated on the *true* causal histories that a
+/// test harness tracks alongside the mechanism:
+/// 1. the new clock dominates every context clock;
+/// 2. anything it dominates is covered by the context join;
+/// 3. it is not dominated by any clock in the system.
+pub fn check_update_conditions(
+    context: &[CausalHistory],
+    system: &[CausalHistory],
+    new_clock: &CausalHistory,
+) -> Result<(), String> {
+    let mut ctx_join = CausalHistory::new();
+    for c in context {
+        if !c.is_subset(new_clock) {
+            return Err(format!("update condition 1 violated: {c} not <= {new_clock}"));
+        }
+        ctx_join.merge_from(c);
+    }
+    for x in system {
+        if x.is_subset(new_clock) && !x.is_subset(&ctx_join) {
+            return Err(format!(
+                "update condition 2 violated: {x} <= u but not <= ⊔S"
+            ));
+        }
+        if new_clock.is_subset(x) {
+            return Err(format!("update condition 3 violated: u <= {x}"));
+        }
+    }
+    Ok(())
+}
+
+/// §5.4 `downset` predicate over a set of histories.
+pub fn is_downset(histories: &[CausalHistory]) -> bool {
+    let mut union = CausalHistory::new();
+    for h in histories {
+        union.merge_from(h);
+    }
+    union.is_downset()
+}
+
+/// Relation table between two clock sets, for diagnostics: how many pairs
+/// are equal / ordered / concurrent.
+pub fn relation_census<C: LogicalClock>(xs: &[C], ys: &[C]) -> (usize, usize, usize) {
+    let (mut equal, mut ordered, mut concurrent) = (0, 0, 0);
+    for x in xs {
+        for y in ys {
+            match x.compare(y) {
+                ClockOrd::Equal => equal += 1,
+                ClockOrd::Less | ClockOrd::Greater => ordered += 1,
+                ClockOrd::Concurrent => concurrent += 1,
+            }
+        }
+    }
+    (equal, ordered, concurrent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::causal_history::hist;
+    use crate::clocks::Actor;
+    use crate::kernel::ops::sync_sets;
+
+    fn a() -> Actor {
+        Actor::server(0)
+    }
+    fn b() -> Actor {
+        Actor::server(1)
+    }
+
+    #[test]
+    fn sync_output_passes_conditions() {
+        let s1 = vec![(hist(&[(a(), 1)]), 0u8), (hist(&[(b(), 1)]), 1)];
+        let s2 = vec![(hist(&[(a(), 1), (a(), 2)]), 2)];
+        let out = sync_sets(&s1, &s2);
+        check_sync_conditions(&s1, &s2, &out).unwrap();
+    }
+
+    #[test]
+    fn bad_sync_outputs_are_rejected() {
+        let s1 = vec![(hist(&[(a(), 1)]), 0u8)];
+        let s2 = vec![(hist(&[(b(), 1)]), 1u8)];
+        // fabricated output not from inputs
+        let fake = vec![(hist(&[(a(), 9)]), 9u8)];
+        assert!(check_sync_conditions(&s1, &s2, &fake).is_err());
+        // output dropping s2's clock violates coverage
+        let partial = vec![(hist(&[(a(), 1)]), 0u8)];
+        assert!(check_sync_conditions(&s1, &s2, &partial).is_err());
+        // dominated pair violates condition 2
+        let dominated = vec![
+            (hist(&[(a(), 1)]), 0u8),
+            (hist(&[(a(), 1), (b(), 1)]), 1u8),
+        ];
+        assert!(check_sync_conditions(&s1, &s2, &dominated).is_err());
+    }
+
+    #[test]
+    fn update_conditions_accept_fresh_event() {
+        let ctx = vec![hist(&[(a(), 1)])];
+        let system = vec![hist(&[(a(), 1)]), hist(&[(b(), 1)])];
+        let u = hist(&[(a(), 1), (a(), 2)]);
+        check_update_conditions(&ctx, &system, &u).unwrap();
+    }
+
+    #[test]
+    fn update_conditions_reject_stale_or_overreaching() {
+        let ctx = vec![hist(&[(a(), 1)])];
+        let system = vec![hist(&[(a(), 1)]), hist(&[(b(), 1)])];
+        // no fresh event: dominated by a system clock
+        assert!(check_update_conditions(&ctx, &system, &hist(&[(a(), 1)])).is_err());
+        // swallows b1 without having it in the context
+        let grabby = hist(&[(a(), 1), (a(), 2), (b(), 1)]);
+        assert!(check_update_conditions(&ctx, &system, &grabby).is_err());
+    }
+
+    #[test]
+    fn downset_check() {
+        assert!(is_downset(&[hist(&[(a(), 1)]), hist(&[(a(), 2)])]));
+        assert!(!is_downset(&[hist(&[(a(), 1)]), hist(&[(a(), 3)])]));
+    }
+
+    #[test]
+    fn census_counts() {
+        let xs = vec![hist(&[(a(), 1)])];
+        let ys = vec![hist(&[(a(), 1)]), hist(&[(a(), 1), (a(), 2)]), hist(&[(b(), 1)])];
+        assert_eq!(relation_census(&xs, &ys), (1, 1, 1));
+    }
+}

@@ -1,0 +1,207 @@
+//! The mechanism abstraction: what a replica node must implement so the
+//! store can run with *any* of the paper's causality-tracking approaches.
+//!
+//! This is the repo-level analogue of the paper's observation that only
+//! ~100 lines of Riak had to change to adopt DVVs: the coordinator,
+//! simulator, figures, benches and examples are all written against
+//! [`Mechanism`]; each of §3's baselines and §5's contribution is one impl
+//! in [`super::mechs`].
+
+use std::fmt;
+
+use crate::clocks::Actor;
+
+/// A stored value. The simulator tracks identity (`id`, globally unique
+/// per write) and payload size (`len`); the TCP server keeps real bytes in
+/// a side table keyed by `id`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Val {
+    /// Globally unique write identity (doubles as the oracle's event id).
+    pub id: u64,
+    /// Payload size in bytes (for wire accounting).
+    pub len: u32,
+}
+
+impl Val {
+    /// Construct a value.
+    pub fn new(id: u64, len: u32) -> Val {
+        Val { id, len }
+    }
+}
+
+impl fmt::Display for Val {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "v{}", self.id)
+    }
+}
+
+/// Per-write metadata a coordinator sees (who wrote, when, with what
+/// client-side counter).
+#[derive(Debug, Clone)]
+pub struct WriteMeta {
+    /// The writing client.
+    pub client: Actor,
+    /// The client's (possibly skewed) wall clock, µs — used by the LWW
+    /// baseline (§3.1).
+    pub physical_us: u64,
+    /// The client's own per-key write counter when the client is
+    /// *stateful*; `None` models the stateless clients of §3.3, forcing
+    /// the server to infer the counter (Figure 4's anomaly).
+    pub client_seq: Option<u64>,
+}
+
+impl WriteMeta {
+    /// Metadata for an anonymous, clockless write (unit tests, figures).
+    pub fn basic(client: Actor) -> WriteMeta {
+        WriteMeta { client, physical_us: 0, client_seq: None }
+    }
+}
+
+/// A causality-tracking mechanism: per-key replica state + the paper's
+/// kernel operations over it.
+pub trait Mechanism: Clone + Send + Sync + 'static {
+    /// Name used in configs and CLI (`--mechanism`).
+    const NAME: &'static str;
+
+    /// The opaque causal context returned by GET and supplied to PUT.
+    type Context: Clone + fmt::Debug + Default + PartialEq;
+
+    /// Per-key state kept by a replica node.
+    type State: Clone + fmt::Debug + Default + Send;
+
+    /// GET: current concurrent values plus the context describing them.
+    fn read(&self, st: &Self::State) -> (Vec<Val>, Self::Context);
+
+    /// PUT at coordinator `coord`: the paper's `update` followed by a
+    /// local `sync` (§4.1 put steps 2–3).
+    fn write(
+        &self,
+        st: &mut Self::State,
+        ctx: &Self::Context,
+        val: Val,
+        coord: Actor,
+        meta: &WriteMeta,
+    );
+
+    /// Replica-to-replica merge: replication fan-out (§4.1 put step 4),
+    /// read repair, and anti-entropy all funnel here.
+    fn merge(&self, st: &mut Self::State, incoming: &Self::State);
+
+    /// Current live values (siblings).
+    fn values(&self, st: &Self::State) -> Vec<Val>;
+
+    /// Number of live siblings.
+    fn sibling_count(&self, st: &Self::State) -> usize {
+        self.values(st).len()
+    }
+
+    /// Causality metadata footprint of the state, in encoded bytes (E7).
+    fn metadata_bytes(&self, st: &Self::State) -> usize;
+
+    /// Wire size of a client context (E7's client-side column).
+    fn context_bytes(&self, ctx: &Self::Context) -> usize;
+}
+
+/// Runtime-selectable mechanism kind (string names in config/CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MechKind {
+    /// Explicit causal histories (ground truth; §3).
+    History,
+    /// Physical-clock last-writer-wins (§3.1).
+    Lww,
+    /// Lamport-clock total order (§3.1).
+    Lamport,
+    /// Version vectors with per-server entries (§3.2).
+    ServerVv,
+    /// Version vectors with per-client entries (§3.3).
+    ClientVv,
+    /// Dotted version vectors (§5).
+    Dvv,
+    /// Compact sibling-set DVVs (extension).
+    DvvSet,
+}
+
+impl MechKind {
+    /// All kinds, in the paper's presentation order.
+    pub const ALL: [MechKind; 7] = [
+        MechKind::History,
+        MechKind::Lww,
+        MechKind::Lamport,
+        MechKind::ServerVv,
+        MechKind::ClientVv,
+        MechKind::Dvv,
+        MechKind::DvvSet,
+    ];
+
+    /// Canonical config name.
+    pub fn name(self) -> &'static str {
+        match self {
+            MechKind::History => "history",
+            MechKind::Lww => "lww",
+            MechKind::Lamport => "lamport",
+            MechKind::ServerVv => "vv",
+            MechKind::ClientVv => "clientvv",
+            MechKind::Dvv => "dvv",
+            MechKind::DvvSet => "dvvset",
+        }
+    }
+
+    /// Parse a config/CLI name.
+    pub fn parse(s: &str) -> crate::Result<MechKind> {
+        match s {
+            "history" | "ch" => Ok(MechKind::History),
+            "lww" | "realtime" => Ok(MechKind::Lww),
+            "lamport" => Ok(MechKind::Lamport),
+            "vv" | "servervv" => Ok(MechKind::ServerVv),
+            "clientvv" | "client-vv" => Ok(MechKind::ClientVv),
+            "dvv" => Ok(MechKind::Dvv),
+            "dvvset" => Ok(MechKind::DvvSet),
+            other => Err(crate::Error::Config(format!(
+                "unknown mechanism {other:?}; expected one of {:?}",
+                crate::clocks::MECHANISM_NAMES
+            ))),
+        }
+    }
+
+    /// Does this mechanism ever lose concurrent updates? (Paper's claim
+    /// table; asserted by E6.)
+    pub fn is_lossless(self) -> bool {
+        matches!(
+            self,
+            MechKind::History | MechKind::ClientVv | MechKind::Dvv | MechKind::DvvSet
+        )
+    }
+}
+
+impl fmt::Display for MechKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in MechKind::ALL {
+            assert_eq!(MechKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(MechKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn lossless_classification_matches_paper() {
+        assert!(MechKind::Dvv.is_lossless());
+        assert!(MechKind::ClientVv.is_lossless());
+        assert!(!MechKind::ServerVv.is_lossless());
+        assert!(!MechKind::Lww.is_lossless());
+        assert!(!MechKind::Lamport.is_lossless());
+    }
+
+    #[test]
+    fn val_display() {
+        assert_eq!(Val::new(7, 100).to_string(), "v7");
+    }
+}

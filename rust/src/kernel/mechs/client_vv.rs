@@ -1,0 +1,180 @@
+//! Version vectors with per-client entries (§3.3).
+//!
+//! Lossless when clients are *stateful* (each carries its own counter),
+//! but the vectors grow with the number of clients that ever wrote — the
+//! scalability problem DVVs remove. With *stateless* clients the server
+//! must infer the client's counter ("the maximum of the respective entry
+//! in the received context and all vectors at the server"), which loses
+//! updates when a client switches servers (Figure 4).
+
+use crate::clocks::vv::VersionVector;
+use crate::clocks::{Actor, LogicalClock};
+use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+use crate::kernel::ops;
+
+/// See module docs. Vectors are indexed by *client* actors.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClientVvMech;
+
+impl Mechanism for ClientVvMech {
+    const NAME: &'static str = "clientvv";
+    type Context = VersionVector;
+    type State = Vec<(VersionVector, Val)>;
+
+    fn read(&self, st: &Self::State) -> (Vec<Val>, Self::Context) {
+        let mut ctx = VersionVector::new();
+        let mut vals = Vec::with_capacity(st.len());
+        for (vv, v) in st {
+            ctx.join_from(vv);
+            vals.push(*v);
+        }
+        (vals, ctx)
+    }
+
+    fn write(
+        &self,
+        st: &mut Self::State,
+        ctx: &Self::Context,
+        val: Val,
+        _coord: Actor,
+        meta: &WriteMeta,
+    ) {
+        let client = meta.client;
+        let seq = match meta.client_seq {
+            // stateful client: its own monotonic counter (correct mode)
+            Some(s) => s,
+            // stateless client: server-side inference (Figure 4's anomaly)
+            None => {
+                let local_max = st.iter().map(|(v, _)| v.get(client)).max().unwrap_or(0);
+                ctx.get(client).max(local_max) + 1
+            }
+        };
+        let mut vv = ctx.clone();
+        vv.set(client, seq);
+        st.retain(|(v, _)| !v.compare(&vv).is_leq());
+        st.push((vv, val));
+    }
+
+    fn merge(&self, st: &mut Self::State, incoming: &Self::State) {
+        ops::sync_into(st, incoming);
+    }
+
+    fn values(&self, st: &Self::State) -> Vec<Val> {
+        st.iter().map(|(_, v)| *v).collect()
+    }
+
+    fn metadata_bytes(&self, st: &Self::State) -> usize {
+        st.iter().map(|(vv, _)| vv.encoded_size()).sum()
+    }
+
+    fn context_bytes(&self, ctx: &Self::Context) -> usize {
+        ctx.encoded_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::vv::vv;
+
+    fn ra() -> Actor {
+        Actor::server(0)
+    }
+    fn rb() -> Actor {
+        Actor::server(1)
+    }
+    fn c(i: u32) -> Actor {
+        Actor::client(i)
+    }
+
+    fn stateless(client: Actor) -> WriteMeta {
+        WriteMeta { client, physical_us: 0, client_seq: None }
+    }
+    fn stateful(client: Actor, seq: u64) -> WriteMeta {
+        WriteMeta { client, physical_us: 0, client_seq: Some(seq) }
+    }
+
+    /// Figure 4: a stateless client writing through a different server is
+    /// re-registered as (C1,1); its earlier update v is falsely dominated.
+    #[test]
+    fn figure4_stateless_anomaly() {
+        let m = ClientVvMech;
+        let mut ra_st: <ClientVvMech as Mechanism>::State = Vec::new();
+        let mut rb_st: <ClientVvMech as Mechanism>::State = Vec::new();
+        let empty = VersionVector::new();
+
+        // C1: PUT v at Rb -> {(C1,1)}
+        m.write(&mut rb_st, &empty, Val::new(1, 0), rb(), &stateless(c(0)));
+        assert_eq!(rb_st[0].0, vv(&[(c(0), 1)]));
+
+        // C3: PUT x at Ra -> {(C3,1)}
+        m.write(&mut ra_st, &empty, Val::new(2, 0), ra(), &stateless(c(2)));
+
+        // C1: GET at Ra (context {(C3,1)}), PUT y at Ra — Ra has never
+        // seen C1, so it infers (C1,1) *again*
+        let (_, ctx) = m.read(&ra_st);
+        m.write(&mut ra_st, &ctx, Val::new(4, 0), ra(), &stateless(c(0)));
+        assert_eq!(ra_st[0].0, vv(&[(c(0), 1), (c(2), 1)]));
+
+        // anti-entropy: y={(C1,1),(C3,1)} falsely dominates v={(C1,1)}
+        m.merge(&mut rb_st, &ra_st);
+        assert!(
+            !m.values(&rb_st).contains(&Val::new(1, 0)),
+            "v survived but the paper's anomaly loses it: {rb_st:?}"
+        );
+    }
+
+    /// The same run with stateful clients is lossless.
+    #[test]
+    fn figure4_stateful_is_correct() {
+        let m = ClientVvMech;
+        let mut ra_st: <ClientVvMech as Mechanism>::State = Vec::new();
+        let mut rb_st: <ClientVvMech as Mechanism>::State = Vec::new();
+        let empty = VersionVector::new();
+
+        m.write(&mut rb_st, &empty, Val::new(1, 0), rb(), &stateful(c(0), 1)); // v
+        m.write(&mut ra_st, &empty, Val::new(2, 0), ra(), &stateful(c(2), 1)); // x
+        let (_, ctx) = m.read(&ra_st);
+        m.write(&mut ra_st, &ctx, Val::new(4, 0), ra(), &stateful(c(0), 2)); // y
+
+        m.merge(&mut rb_st, &ra_st);
+        // v={(C1,1)} < y={(C1,2),(C3,1)}: correctly superseded?? No —
+        // v IS dominated here because C1 read nothing: y's vector includes
+        // (C1,2) which covers (C1,1). That is *correct*: C1's second write
+        // causally follows its first (same sequential client).
+        assert!(!m.values(&rb_st).contains(&Val::new(1, 0)));
+        // but a *different* client's blind write stays concurrent:
+        let mut other: <ClientVvMech as Mechanism>::State = Vec::new();
+        m.write(&mut other, &empty, Val::new(9, 0), rb(), &stateful(c(1), 1)); // w
+        m.merge(&mut rb_st, &other);
+        assert!(m.values(&rb_st).contains(&Val::new(9, 0)));
+        assert!(m.values(&rb_st).contains(&Val::new(4, 0)));
+    }
+
+    #[test]
+    fn same_server_concurrency_detected() {
+        // unlike §3.2's per-server vectors, per-client vectors keep both
+        // blind writes handled by one server
+        let m = ClientVvMech;
+        let mut st: <ClientVvMech as Mechanism>::State = Vec::new();
+        let empty = VersionVector::new();
+        m.write(&mut st, &empty, Val::new(1, 0), rb(), &stateful(c(0), 1));
+        m.write(&mut st, &empty, Val::new(2, 0), rb(), &stateful(c(1), 1));
+        assert_eq!(st.len(), 2, "both siblings kept");
+    }
+
+    #[test]
+    fn metadata_grows_with_clients() {
+        // the §3.3 scalability drawback (E7's headline contrast with DVV)
+        let m = ClientVvMech;
+        let mut st: <ClientVvMech as Mechanism>::State = Vec::new();
+        for i in 0..200u32 {
+            let (_, ctx) = m.read(&st);
+            m.write(&mut st, &ctx, Val::new(i as u64, 0), rb(), &stateful(c(i), 1));
+        }
+        assert_eq!(st.len(), 1, "sequentially informed writes supersede");
+        // ...but the surviving vector carries every client ever seen
+        assert!(st[0].0.len() == 200);
+        assert!(m.metadata_bytes(&st) > 600);
+    }
+}

@@ -1,0 +1,236 @@
+//! Dotted version vectors (§5): the paper's mechanism.
+//!
+//! The coordinator-side `write` is the §5.3 update function:
+//!
+//! ```text
+//! update(S, S_r, r) = {(i, ⌈S⌉_i) | i ∈ ids(S)} ∪ {(r, ⌈S⌉_r, ⌈S_r⌉_r + 1)}
+//! ```
+//!
+//! i.e. the new clock's vector part is the ceiling of the *client context*
+//! and its dot is one past the ceiling of the *replica state* — lossless
+//! causality with one entry per replica server plus a single dot.
+
+use crate::clocks::dvv::Dvv;
+use crate::clocks::vv::VersionVector;
+use crate::clocks::{Actor, LogicalClock};
+use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+use crate::kernel::ops;
+
+/// See module docs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DvvMech;
+
+impl Mechanism for DvvMech {
+    const NAME: &'static str = "dvv";
+    /// The context is the ceiling vector of the clocks the client read —
+    /// sufficient because replica sets are downsets (§5.4).
+    type Context = VersionVector;
+    type State = Vec<(Dvv, Val)>;
+
+    fn read(&self, st: &Self::State) -> (Vec<Val>, Self::Context) {
+        let mut ctx = VersionVector::new();
+        let mut vals = Vec::with_capacity(st.len());
+        for (d, v) in st {
+            d.join_ceil_into(&mut ctx);
+            vals.push(*v);
+        }
+        (vals, ctx)
+    }
+
+    fn write(
+        &self,
+        st: &mut Self::State,
+        ctx: &Self::Context,
+        val: Val,
+        coord: Actor,
+        _meta: &WriteMeta,
+    ) {
+        // n = ⌈S_r⌉_coord + 1: the dot comes from the replica's knowledge
+        let n = st.iter().map(|(d, _)| d.ceil(coord)).max().unwrap_or(0) + 1;
+        let u = Dvv::with_dot(ctx.clone(), coord, n);
+        // S'_C = sync(S_C, {u}): u's dot is fresh, so u is never dominated
+        st.retain(|(d, _)| !d.compare(&u).is_leq());
+        st.push((u, val));
+    }
+
+    fn merge(&self, st: &mut Self::State, incoming: &Self::State) {
+        ops::sync_into(st, incoming);
+    }
+
+    fn values(&self, st: &Self::State) -> Vec<Val> {
+        st.iter().map(|(_, v)| *v).collect()
+    }
+
+    fn metadata_bytes(&self, st: &Self::State) -> usize {
+        st.iter().map(|(d, _)| d.encoded_size()).sum()
+    }
+
+    fn context_bytes(&self, ctx: &Self::Context) -> usize {
+        ctx.encoded_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::dvv::dvv;
+    use crate::clocks::ClockOrd;
+
+    fn ra() -> Actor {
+        Actor::server(0)
+    }
+    fn rb() -> Actor {
+        Actor::server(1)
+    }
+    fn c(i: u32) -> Actor {
+        Actor::client(i)
+    }
+
+    /// The full Figure 7 run, asserting every clock the paper prints.
+    #[test]
+    fn figure7_run() {
+        let m = DvvMech;
+        let mut ra_st: <DvvMech as Mechanism>::State = Vec::new();
+        let mut rb_st: <DvvMech as Mechanism>::State = Vec::new();
+        let empty = VersionVector::new();
+
+        // C1: PUT v at Rb -> (b,0,1)
+        m.write(&mut rb_st, &empty, Val::new(1, 0), rb(), &WriteMeta::basic(c(0)));
+        assert_eq!(rb_st[0].0, dvv(&[], Some((rb(), 1))));
+
+        // C3: PUT x at Ra -> (a,0,1)
+        m.write(&mut ra_st, &empty, Val::new(2, 0), ra(), &WriteMeta::basic(c(2)));
+        assert_eq!(ra_st[0].0, dvv(&[], Some((ra(), 1))));
+
+        // C2: PUT w at Rb, empty context -> (b,0,2); v kept as sibling
+        m.write(&mut rb_st, &empty, Val::new(3, 0), rb(), &WriteMeta::basic(c(1)));
+        assert_eq!(rb_st.len(), 2, "same-server concurrency preserved");
+        assert_eq!(rb_st[1].0, dvv(&[], Some((rb(), 2))));
+
+        // C1: GET at Ra (reads x, ctx {(a,1)}), PUT y at Ra -> (a,1,2)
+        let (vals, ctx) = m.read(&ra_st);
+        assert_eq!(vals, vec![Val::new(2, 0)]);
+        assert_eq!(ctx, crate::clocks::vv::vv(&[(ra(), 1)]));
+        m.write(&mut ra_st, &ctx, Val::new(4, 0), ra(), &WriteMeta::basic(c(0)));
+        assert_eq!(ra_st.len(), 1, "y supersedes x");
+        assert_eq!(ra_st[0].0, dvv(&[(ra(), 1)], Some((ra(), 2))));
+
+        // anti-entropy: Rb sends state to Ra; Ra syncs
+        let rb_snapshot = rb_st.clone();
+        m.merge(&mut ra_st, &rb_snapshot);
+        assert_eq!(ra_st.len(), 3, "y, v, w all concurrent at Ra");
+
+        // C2 reads at Rb (sees v,w; ctx {(b,2)}), writes z at Ra
+        let (_, ctx_b) = m.read(&rb_st);
+        assert_eq!(ctx_b, crate::clocks::vv::vv(&[(rb(), 2)]));
+        m.write(&mut ra_st, &ctx_b, Val::new(5, 0), ra(), &WriteMeta::basic(c(1)));
+
+        // z = {(a,0,3),(b,2)}: subsumes v,w; concurrent with y
+        let z = ra_st
+            .iter()
+            .find(|(_, v)| *v == Val::new(5, 0))
+            .map(|(d, _)| d.clone())
+            .unwrap();
+        assert_eq!(z, dvv(&[(rb(), 2)], Some((ra(), 3))));
+        assert_eq!(ra_st.len(), 2, "only y and z survive: {ra_st:?}");
+        let y = ra_st
+            .iter()
+            .find(|(_, v)| *v == Val::new(4, 0))
+            .map(|(d, _)| d.clone())
+            .unwrap();
+        assert_eq!(y.compare(&z), ClockOrd::Concurrent);
+    }
+
+    #[test]
+    fn overwrite_read_version_with_dot() {
+        // §5.3: "the generated clock is (a,1,2), as the read context
+        // dominates ... the clock of the version in the replica node"
+        let m = DvvMech;
+        let mut st: <DvvMech as Mechanism>::State = Vec::new();
+        m.write(&mut st, &VersionVector::new(), Val::new(1, 0), ra(), &WriteMeta::basic(c(0)));
+        let (_, ctx) = m.read(&st);
+        m.write(&mut st, &ctx, Val::new(2, 0), ra(), &WriteMeta::basic(c(0)));
+        assert_eq!(st.len(), 1);
+        assert_eq!(st[0].0, dvv(&[(ra(), 1)], Some((ra(), 2))));
+    }
+
+    #[test]
+    fn stale_context_concurrent_same_server() {
+        // the §5.2 situation: {(r,4)} in store, client holds ctx {(r,3)}
+        let m = DvvMech;
+        let mut st = vec![(dvv(&[(ra(), 4)], None), Val::new(1, 0))];
+        let ctx = crate::clocks::vv::vv(&[(ra(), 3)]);
+        m.write(&mut st, &ctx, Val::new(2, 0), ra(), &WriteMeta::basic(c(0)));
+        assert_eq!(st.len(), 2, "concurrent, both kept: {st:?}");
+        assert_eq!(st[1].0, dvv(&[(ra(), 3)], Some((ra(), 5))));
+    }
+
+    #[test]
+    fn merge_matches_kernel_sync() {
+        let m = DvvMech;
+        let mut st = vec![(dvv(&[], Some((rb(), 1))), Val::new(1, 0))];
+        let incoming = vec![(dvv(&[(rb(), 2)], Some((ra(), 3))), Val::new(5, 0))];
+        m.merge(&mut st, &incoming);
+        assert_eq!(st.len(), 1);
+        assert_eq!(st[0].1, Val::new(5, 0));
+    }
+
+    #[test]
+    fn metadata_bounded_by_replicas_not_clients() {
+        // many clients, two replica servers: metadata stays tiny (E7)
+        let m = DvvMech;
+        let mut st: <DvvMech as Mechanism>::State = Vec::new();
+        for i in 0..500u32 {
+            let (_, ctx) = m.read(&st);
+            let coord = if i % 2 == 0 { ra() } else { rb() };
+            m.write(&mut st, &ctx, Val::new(i as u64, 0), coord, &WriteMeta::basic(c(i)));
+        }
+        assert_eq!(st.len(), 1);
+        assert!(m.metadata_bytes(&st) < 24, "got {}", m.metadata_bytes(&st));
+    }
+
+    #[test]
+    fn downset_invariant_holds_under_random_ops() {
+        use crate::testkit::Rng;
+        let m = DvvMech;
+        let mut rng = Rng::new(99);
+        let mut states: Vec<<DvvMech as Mechanism>::State> = vec![Vec::new(), Vec::new()];
+        let mut contexts: Vec<VersionVector> = vec![VersionVector::new(); 4];
+        for op in 0..400 {
+            let node = rng.below(2) as usize;
+            let client = rng.below(4) as usize;
+            match rng.below(3) {
+                0 => {
+                    // GET
+                    let (_, ctx) = m.read(&states[node]);
+                    contexts[client] = ctx;
+                }
+                1 => {
+                    // PUT with the client's stored context
+                    let coord = Actor::server(node as u32);
+                    let ctx = contexts[client].clone();
+                    m.write(
+                        &mut states[node],
+                        &ctx,
+                        Val::new(op, 0),
+                        coord,
+                        &WriteMeta::basic(Actor::client(client as u32)),
+                    );
+                }
+                _ => {
+                    // anti-entropy
+                    let other = states[1 - node].clone();
+                    m.merge(&mut states[node], &other);
+                }
+            }
+            // §5.4: every replica set is a downset
+            for st in &states {
+                let mut union = crate::clocks::CausalHistory::new();
+                for (d, _) in st {
+                    union.merge_from(&d.history());
+                }
+                assert!(union.is_downset(), "downset violated: {st:?}");
+            }
+        }
+    }
+}

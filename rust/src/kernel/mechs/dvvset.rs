@@ -1,0 +1,137 @@
+//! DVVSet mechanism (extension): compact sibling sets with positional dots.
+//!
+//! Same causal behaviour as [`super::dvv::DvvMech`] — the E-index ablation
+//! (`benches/metadata.rs`) contrasts their metadata footprints when many
+//! siblings accumulate.
+
+use crate::clocks::dvvset::DvvSet;
+use crate::clocks::vv::VersionVector;
+use crate::clocks::Actor;
+use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+
+/// See module docs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DvvSetMech;
+
+impl Mechanism for DvvSetMech {
+    const NAME: &'static str = "dvvset";
+    type Context = VersionVector;
+    type State = DvvSet<Val>;
+
+    fn read(&self, st: &Self::State) -> (Vec<Val>, Self::Context) {
+        (st.values().into_iter().copied().collect(), st.vv())
+    }
+
+    fn write(
+        &self,
+        st: &mut Self::State,
+        ctx: &Self::Context,
+        val: Val,
+        coord: Actor,
+        _meta: &WriteMeta,
+    ) {
+        st.update(ctx, val, coord);
+    }
+
+    fn merge(&self, st: &mut Self::State, incoming: &Self::State) {
+        st.sync_from(incoming);
+    }
+
+    fn values(&self, st: &Self::State) -> Vec<Val> {
+        st.values().into_iter().copied().collect()
+    }
+
+    fn metadata_bytes(&self, st: &Self::State) -> usize {
+        st.metadata_bytes()
+    }
+
+    fn context_bytes(&self, ctx: &Self::Context) -> usize {
+        use crate::clocks::LogicalClock;
+        ctx.encoded_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ra() -> Actor {
+        Actor::server(0)
+    }
+    fn rb() -> Actor {
+        Actor::server(1)
+    }
+    fn c(i: u32) -> Actor {
+        Actor::client(i)
+    }
+
+    /// The Figure 7 value flow under DVVSet: identical survivors to DVV.
+    #[test]
+    fn figure7_equivalent_outcome() {
+        let m = DvvSetMech;
+        let mut ra_st: <DvvSetMech as Mechanism>::State = DvvSet::new();
+        let mut rb_st: <DvvSetMech as Mechanism>::State = DvvSet::new();
+        let empty = VersionVector::new();
+
+        m.write(&mut rb_st, &empty, Val::new(1, 0), rb(), &WriteMeta::basic(c(0))); // v
+        m.write(&mut ra_st, &empty, Val::new(2, 0), ra(), &WriteMeta::basic(c(2))); // x
+        m.write(&mut rb_st, &empty, Val::new(3, 0), rb(), &WriteMeta::basic(c(1))); // w
+        assert_eq!(m.sibling_count(&rb_st), 2);
+
+        let (_, ctx) = m.read(&ra_st);
+        m.write(&mut ra_st, &ctx, Val::new(4, 0), ra(), &WriteMeta::basic(c(0))); // y
+        assert_eq!(m.values(&ra_st), vec![Val::new(4, 0)]);
+
+        // anti-entropy Rb -> Ra
+        m.merge(&mut ra_st, &rb_st);
+        assert_eq!(m.sibling_count(&ra_st), 3);
+
+        // C2 reads Rb, writes z at Ra
+        let (_, ctx_b) = m.read(&rb_st);
+        m.write(&mut ra_st, &ctx_b, Val::new(5, 0), ra(), &WriteMeta::basic(c(1)));
+        let vals = m.values(&ra_st);
+        assert_eq!(vals.len(), 2, "y and z: {ra_st}");
+        assert!(vals.contains(&Val::new(4, 0)) && vals.contains(&Val::new(5, 0)));
+    }
+
+    #[test]
+    fn merge_is_convergent() {
+        let m = DvvSetMech;
+        let empty = VersionVector::new();
+        let mut s1: <DvvSetMech as Mechanism>::State = DvvSet::new();
+        let mut s2: <DvvSetMech as Mechanism>::State = DvvSet::new();
+        m.write(&mut s1, &empty, Val::new(1, 0), ra(), &WriteMeta::basic(c(0)));
+        m.write(&mut s2, &empty, Val::new(2, 0), rb(), &WriteMeta::basic(c(1)));
+        let mut m1 = s1.clone();
+        m.merge(&mut m1, &s2);
+        let mut m2 = s2.clone();
+        m.merge(&mut m2, &s1);
+        assert_eq!(m.values(&m1).len(), 2);
+        let (mut v1, mut v2) = (m.values(&m1), m.values(&m2));
+        v1.sort();
+        v2.sort();
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn sibling_metadata_cheaper_than_dvv() {
+        use crate::kernel::mechs::dvv::DvvMech;
+        let set_m = DvvSetMech;
+        let dvv_m = DvvMech;
+        let empty = VersionVector::new();
+        let mut set_st = DvvSet::new();
+        let mut dvv_st = Vec::new();
+        for i in 0..20u64 {
+            set_m.write(&mut set_st, &empty, Val::new(i, 0), rb(), &WriteMeta::basic(c(i as u32)));
+            dvv_m.write(&mut dvv_st, &empty, Val::new(i, 0), rb(), &WriteMeta::basic(c(i as u32)));
+        }
+        assert_eq!(set_m.sibling_count(&set_st), 20);
+        assert_eq!(dvv_m.sibling_count(&dvv_st), 20);
+        assert!(
+            set_m.metadata_bytes(&set_st) * 4 < dvv_m.metadata_bytes(&dvv_st),
+            "dvvset {} vs dvv {}",
+            set_m.metadata_bytes(&set_st),
+            dvv_m.metadata_bytes(&dvv_st)
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! Causal-history mechanism (§3): the lossless but unscalable reference.
+//!
+//! State keeps one explicit event set per sibling. The `update` follows
+//! the paper's reference definition: the new history is the union of the
+//! context plus one fresh event minted from the coordinator's replica id
+//! and a per-key counter recovered from the stored state.
+
+use crate::clocks::causal_history::CausalHistory;
+use crate::clocks::{Actor, Event, LogicalClock};
+use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+use crate::kernel::ops;
+
+/// See module docs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HistoryMech;
+
+impl Mechanism for HistoryMech {
+    const NAME: &'static str = "history";
+    type Context = CausalHistory;
+    type State = Vec<(CausalHistory, Val)>;
+
+    fn read(&self, st: &Self::State) -> (Vec<Val>, Self::Context) {
+        let mut ctx = CausalHistory::new();
+        let mut vals = Vec::with_capacity(st.len());
+        for (h, v) in st {
+            ctx.merge_from(h);
+            vals.push(*v);
+        }
+        (vals, ctx)
+    }
+
+    fn write(
+        &self,
+        st: &mut Self::State,
+        ctx: &Self::Context,
+        val: Val,
+        coord: Actor,
+        _meta: &WriteMeta,
+    ) {
+        // n = max({0} ∪ {x | r_x ∈ ∪ S_r}) — the replica's own counter,
+        // recovered from stored histories (§4's reference update).
+        let n = st.iter().map(|(h, _)| h.max_seq(coord)).max().unwrap_or(0);
+        let mut h = ctx.clone();
+        h.insert(Event::new(coord, n + 1));
+        ops::insert_version(st, h, val);
+    }
+
+    fn merge(&self, st: &mut Self::State, incoming: &Self::State) {
+        ops::sync_into(st, incoming);
+    }
+
+    fn values(&self, st: &Self::State) -> Vec<Val> {
+        st.iter().map(|(_, v)| *v).collect()
+    }
+
+    fn metadata_bytes(&self, st: &Self::State) -> usize {
+        st.iter().map(|(h, _)| h.encoded_size()).sum()
+    }
+
+    fn context_bytes(&self, ctx: &Self::Context) -> usize {
+        ctx.encoded_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::causal_history::hist;
+
+    fn ra() -> Actor {
+        Actor::server(0)
+    }
+    fn rb() -> Actor {
+        Actor::server(1)
+    }
+    fn c(i: u32) -> Actor {
+        Actor::client(i)
+    }
+
+    /// Replays Figure 1 exactly and checks every committed state.
+    #[test]
+    fn figure1_run() {
+        let m = HistoryMech;
+        let mut ra_st: <HistoryMech as Mechanism>::State = Vec::new();
+        let mut rb_st: <HistoryMech as Mechanism>::State = Vec::new();
+
+        // all three clients read the initial empty state
+        let (_, ctx0) = m.read(&ra_st);
+
+        // C1: PUT v at Rb  -> {b1}
+        m.write(&mut rb_st, &ctx0, Val::new(1, 0), rb(), &WriteMeta::basic(c(0)));
+        assert_eq!(rb_st[0].0, hist(&[(rb(), 1)]));
+
+        // C3: PUT x at Ra -> {a1}
+        m.write(&mut ra_st, &ctx0, Val::new(2, 0), ra(), &WriteMeta::basic(c(2)));
+        assert_eq!(ra_st[0].0, hist(&[(ra(), 1)]));
+
+        // C2: PUT w at Rb with empty context -> {b2}, concurrent with v
+        m.write(&mut rb_st, &ctx0, Val::new(3, 0), rb(), &WriteMeta::basic(c(1)));
+        assert_eq!(rb_st.len(), 2);
+        assert_eq!(rb_st[1].0, hist(&[(rb(), 2)]));
+
+        // C1: GET from Ra (sees x, ctx {a1}), PUT y at Ra -> {a1,a2}
+        let (vals, ctx_a) = m.read(&ra_st);
+        assert_eq!(vals, vec![Val::new(2, 0)]);
+        m.write(&mut ra_st, &ctx_a, Val::new(4, 0), ra(), &WriteMeta::basic(c(0)));
+        // y supersedes x
+        assert_eq!(ra_st.len(), 1);
+        assert_eq!(ra_st[0].0, hist(&[(ra(), 1), (ra(), 2)]));
+
+        // final: y || v, y || w
+        let y = &ra_st[0].0;
+        for (h, _) in &rb_st {
+            assert_eq!(y.compare(h), crate::clocks::ClockOrd::Concurrent);
+        }
+    }
+
+    #[test]
+    fn merge_discards_obsolete_across_replicas() {
+        let m = HistoryMech;
+        let mut s1 = vec![(hist(&[(ra(), 1)]), Val::new(1, 0))];
+        let s2 = vec![(hist(&[(ra(), 1), (rb(), 1)]), Val::new(2, 0))];
+        m.merge(&mut s1, &s2);
+        assert_eq!(s1.len(), 1);
+        assert_eq!(s1[0].1, Val::new(2, 0));
+    }
+
+    #[test]
+    fn server_counter_survives_supersession() {
+        // after versions are replaced, the coordinator's counter must not
+        // regress (fresh events stay unique)
+        let m = HistoryMech;
+        let mut st: <HistoryMech as Mechanism>::State = Vec::new();
+        let meta = WriteMeta::basic(c(0));
+        m.write(&mut st, &CausalHistory::new(), Val::new(1, 0), ra(), &meta);
+        let (_, ctx) = m.read(&st);
+        m.write(&mut st, &ctx, Val::new(2, 0), ra(), &meta);
+        let (_, ctx) = m.read(&st);
+        m.write(&mut st, &ctx, Val::new(3, 0), ra(), &meta);
+        assert_eq!(st.len(), 1);
+        assert_eq!(st[0].0.max_seq(ra()), 3);
+    }
+
+    #[test]
+    fn metadata_grows_linearly_with_updates() {
+        // the §3 complaint that motivates compression
+        let m = HistoryMech;
+        let mut st: <HistoryMech as Mechanism>::State = Vec::new();
+        let meta = WriteMeta::basic(c(0));
+        let mut sizes = Vec::new();
+        for i in 0..50 {
+            let (_, ctx) = m.read(&st);
+            m.write(&mut st, &ctx, Val::new(i, 0), ra(), &meta);
+            sizes.push(m.metadata_bytes(&st));
+        }
+        assert!(sizes[49] > sizes[9] * 3);
+    }
+}

@@ -1,0 +1,128 @@
+//! Lamport-clock total order (§3.1's alternative baseline).
+//!
+//! Avoids wall-clock synchronization but still linearizes concurrent
+//! updates: "again, this total order would not represent concurrent
+//! events". The context carries the highest counter the client has
+//! observed so the order stays causally compliant.
+
+use crate::clocks::lamport::LamportClock;
+use crate::clocks::{Actor, LogicalClock};
+use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+
+/// See module docs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LamportMech;
+
+impl Mechanism for LamportMech {
+    const NAME: &'static str = "lamport";
+    /// Highest Lamport counter the client has observed for the key.
+    type Context = u64;
+    type State = Option<(LamportClock, Val)>;
+
+    fn read(&self, st: &Self::State) -> (Vec<Val>, Self::Context) {
+        (
+            st.iter().map(|(_, v)| *v).collect(),
+            st.as_ref().map(|(c, _)| c.counter).unwrap_or(0),
+        )
+    }
+
+    fn write(
+        &self,
+        st: &mut Self::State,
+        ctx: &Self::Context,
+        val: Val,
+        coord: Actor,
+        _meta: &WriteMeta,
+    ) {
+        let local = st.as_ref().map(|(c, _)| c.counter).unwrap_or(0);
+        let clock = LamportClock::tick(*ctx, local, coord);
+        match st {
+            Some((cur, _)) if clock.compare(cur).is_leq() => {}
+            _ => *st = Some((clock, val)),
+        }
+    }
+
+    fn merge(&self, st: &mut Self::State, incoming: &Self::State) {
+        if let Some((inc_clock, inc_val)) = incoming {
+            match st {
+                Some((cur, _)) if inc_clock.compare(cur).is_leq() => {}
+                _ => *st = Some((*inc_clock, *inc_val)),
+            }
+        }
+    }
+
+    fn values(&self, st: &Self::State) -> Vec<Val> {
+        st.iter().map(|(_, v)| *v).collect()
+    }
+
+    fn metadata_bytes(&self, st: &Self::State) -> usize {
+        st.as_ref().map(|(c, _)| c.encoded_size()).unwrap_or(0)
+    }
+
+    fn context_bytes(&self, ctx: &Self::Context) -> usize {
+        crate::clocks::encoding::varint_len(*ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ra() -> Actor {
+        Actor::server(0)
+    }
+    fn rb() -> Actor {
+        Actor::server(1)
+    }
+
+    #[test]
+    fn causal_writes_order_correctly() {
+        let m = LamportMech;
+        let mut st: <LamportMech as Mechanism>::State = None;
+        m.write(&mut st, &0, Val::new(1, 0), ra(), &WriteMeta::basic(Actor::client(0)));
+        let (_, ctx) = m.read(&st);
+        m.write(&mut st, &ctx, Val::new(2, 0), ra(), &WriteMeta::basic(Actor::client(0)));
+        assert_eq!(m.values(&st), vec![Val::new(2, 0)]);
+        assert_eq!(st.unwrap().0.counter, 2);
+    }
+
+    #[test]
+    fn concurrent_writes_are_linearized() {
+        // same counter from both sides: replica id decides — a concurrent
+        // update is silently dropped (the §3.1 point)
+        let m = LamportMech;
+        let mut a: <LamportMech as Mechanism>::State = None;
+        let mut b: <LamportMech as Mechanism>::State = None;
+        m.write(&mut a, &0, Val::new(1, 0), ra(), &WriteMeta::basic(Actor::client(0)));
+        m.write(&mut b, &0, Val::new(2, 0), rb(), &WriteMeta::basic(Actor::client(1)));
+        m.merge(&mut a, &b);
+        m.merge(&mut b, &a);
+        assert_eq!(m.values(&a), m.values(&b));
+        assert_eq!(m.values(&a), vec![Val::new(2, 0)]); // rb > ra tiebreak
+    }
+
+    #[test]
+    fn stale_context_still_advances() {
+        let m = LamportMech;
+        let mut st: <LamportMech as Mechanism>::State = None;
+        m.write(&mut st, &0, Val::new(1, 0), ra(), &WriteMeta::basic(Actor::client(0)));
+        m.write(&mut st, &0, Val::new(2, 0), ra(), &WriteMeta::basic(Actor::client(1)));
+        // local counter (1) bumps past the stale context (0)
+        assert_eq!(st.as_ref().unwrap().0.counter, 2);
+        assert_eq!(m.values(&st), vec![Val::new(2, 0)]);
+    }
+
+    #[test]
+    fn merge_converges() {
+        let m = LamportMech;
+        let a: <LamportMech as Mechanism>::State =
+            Some((LamportClock::new(3, ra()), Val::new(1, 0)));
+        let b: <LamportMech as Mechanism>::State =
+            Some((LamportClock::new(3, rb()), Val::new(2, 0)));
+        let mut ab = a.clone();
+        m.merge(&mut ab, &b);
+        let mut ba = b.clone();
+        m.merge(&mut ba, &a);
+        assert_eq!(ab, ba);
+    }
+}

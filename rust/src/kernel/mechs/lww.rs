@@ -1,0 +1,142 @@
+//! Physical-clock last-writer-wins (§3.1, Cassandra-style).
+//!
+//! "Replica nodes never store multiple versions and writes do not need to
+//! provide a get context." The total order silently linearizes concurrent
+//! writes (Figure 2) and, under clock skew, systematically favours the
+//! fastest clock — both effects measured by E6.
+
+use crate::clocks::realtime::RtClock;
+use crate::clocks::{Actor, LogicalClock};
+use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+
+/// See module docs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LwwMech;
+
+impl Mechanism for LwwMech {
+    const NAME: &'static str = "lww";
+    /// LWW needs no causal context at all.
+    type Context = ();
+    type State = Option<(RtClock, Val)>;
+
+    fn read(&self, st: &Self::State) -> (Vec<Val>, Self::Context) {
+        (st.iter().map(|(_, v)| *v).collect(), ())
+    }
+
+    fn write(
+        &self,
+        st: &mut Self::State,
+        _ctx: &Self::Context,
+        val: Val,
+        _coord: Actor,
+        meta: &WriteMeta,
+    ) {
+        let clock = RtClock::new(meta.physical_us, meta.client);
+        match st {
+            Some((cur, _)) if clock.compare(cur).is_leq() => {} // older: drop
+            _ => *st = Some((clock, val)),
+        }
+    }
+
+    fn merge(&self, st: &mut Self::State, incoming: &Self::State) {
+        if let Some((inc_clock, inc_val)) = incoming {
+            match st {
+                Some((cur, _)) if inc_clock.compare(cur).is_leq() => {}
+                _ => *st = Some((*inc_clock, *inc_val)),
+            }
+        }
+    }
+
+    fn values(&self, st: &Self::State) -> Vec<Val> {
+        st.iter().map(|(_, v)| *v).collect()
+    }
+
+    fn metadata_bytes(&self, st: &Self::State) -> usize {
+        st.as_ref().map(|(c, _)| c.encoded_size()).unwrap_or(0)
+    }
+
+    fn context_bytes(&self, _ctx: &Self::Context) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(i: u32) -> Actor {
+        Actor::client(i)
+    }
+    fn meta(client: Actor, t: u64) -> WriteMeta {
+        WriteMeta { client, physical_us: t, client_seq: None }
+    }
+
+    /// Figure 2: perfectly synchronized clocks order everything; only the
+    /// latest write survives — v and w are lost.
+    #[test]
+    fn figure2_loses_concurrent_updates() {
+        let m = LwwMech;
+        let mut rb: <LwwMech as Mechanism>::State = None;
+        m.write(&mut rb, &(), Val::new(1, 0), Actor::server(1), &meta(c(0), 10)); // v
+        m.write(&mut rb, &(), Val::new(3, 0), Actor::server(1), &meta(c(1), 30)); // w
+        assert_eq!(m.values(&rb), vec![Val::new(3, 0)]); // v lost
+
+        let mut ra: <LwwMech as Mechanism>::State = None;
+        m.write(&mut ra, &(), Val::new(2, 0), Actor::server(0), &meta(c(2), 20)); // x
+        m.write(&mut ra, &(), Val::new(4, 0), Actor::server(0), &meta(c(0), 40)); // y
+        // after anti-entropy both replicas converge on the max timestamp
+        m.merge(&mut rb, &ra);
+        m.merge(&mut ra, &rb);
+        assert_eq!(m.values(&ra), vec![Val::new(4, 0)]);
+        assert_eq!(m.values(&rb), vec![Val::new(4, 0)]);
+    }
+
+    #[test]
+    fn skewed_clock_always_loses() {
+        // §3.1: "a client with systematically delayed clock values will
+        // never see its updates committed"
+        let m = LwwMech;
+        let mut st: <LwwMech as Mechanism>::State = None;
+        m.write(&mut st, &(), Val::new(1, 0), Actor::server(0), &meta(c(0), 1000));
+        // the slow-clock client writes later in real time but stamps lower
+        m.write(&mut st, &(), Val::new(2, 0), Actor::server(0), &meta(c(1), 500));
+        assert_eq!(m.values(&st), vec![Val::new(1, 0)]);
+    }
+
+    #[test]
+    fn tiebreak_on_actor_id() {
+        let m = LwwMech;
+        let mut st: <LwwMech as Mechanism>::State = None;
+        m.write(&mut st, &(), Val::new(1, 0), Actor::server(0), &meta(c(1), 7));
+        m.write(&mut st, &(), Val::new(2, 0), Actor::server(0), &meta(c(0), 7));
+        // same stamp: higher client id wins the total order
+        assert_eq!(m.values(&st), vec![Val::new(1, 0)]);
+    }
+
+    #[test]
+    fn merge_is_idempotent_and_commutative() {
+        let m = LwwMech;
+        let a: <LwwMech as Mechanism>::State =
+            Some((RtClock::new(5, c(0)), Val::new(1, 0)));
+        let b: <LwwMech as Mechanism>::State =
+            Some((RtClock::new(9, c(1)), Val::new(2, 0)));
+        let mut ab = a.clone();
+        m.merge(&mut ab, &b);
+        let mut ba = b.clone();
+        m.merge(&mut ba, &a);
+        assert_eq!(ab, ba);
+        let snap = ab.clone();
+        m.merge(&mut ab, &b);
+        assert_eq!(ab, snap);
+    }
+
+    #[test]
+    fn never_keeps_siblings() {
+        let m = LwwMech;
+        let mut st: <LwwMech as Mechanism>::State = None;
+        for i in 0..10 {
+            m.write(&mut st, &(), Val::new(i, 0), Actor::server(0), &meta(c(i as u32), i));
+            assert!(m.sibling_count(&st) <= 1);
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Version vectors with per-server entries (§3.2, Dynamo-style).
+//!
+//! Tracks causality correctly *across* servers but linearizes concurrent
+//! updates handled by the *same* server (a plausible-clocks effect): the
+//! second same-server write's vector "does not correctly summarize its
+//! causal history" and falsely dominates the first (Figure 3). E6
+//! quantifies the resulting lost updates.
+
+use crate::clocks::vv::VersionVector;
+use crate::clocks::{Actor, LogicalClock};
+use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+use crate::kernel::ops;
+
+/// See module docs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerVvMech;
+
+impl Mechanism for ServerVvMech {
+    const NAME: &'static str = "vv";
+    type Context = VersionVector;
+    type State = Vec<(VersionVector, Val)>;
+
+    fn read(&self, st: &Self::State) -> (Vec<Val>, Self::Context) {
+        let mut ctx = VersionVector::new();
+        let mut vals = Vec::with_capacity(st.len());
+        for (vv, v) in st {
+            ctx.join_from(vv);
+            vals.push(*v);
+        }
+        (vals, ctx)
+    }
+
+    fn write(
+        &self,
+        st: &mut Self::State,
+        ctx: &Self::Context,
+        val: Val,
+        coord: Actor,
+        _meta: &WriteMeta,
+    ) {
+        // "The replica node increments its local counter ... and stores it
+        // in the entry of the received vector corresponding to its own
+        // identifier."
+        let counter = st.iter().map(|(v, _)| v.get(coord)).max().unwrap_or(0) + 1;
+        let mut vv = ctx.clone();
+        vv.set(coord, counter);
+        // "It then checks if this new vector causally dominates any version
+        // currently stored, and discards any version made obsolete."
+        st.retain(|(v, _)| !v.compare(&vv).is_leq());
+        st.push((vv, val));
+    }
+
+    fn merge(&self, st: &mut Self::State, incoming: &Self::State) {
+        ops::sync_into(st, incoming);
+    }
+
+    fn values(&self, st: &Self::State) -> Vec<Val> {
+        st.iter().map(|(_, v)| *v).collect()
+    }
+
+    fn metadata_bytes(&self, st: &Self::State) -> usize {
+        st.iter().map(|(vv, _)| vv.encoded_size()).sum()
+    }
+
+    fn context_bytes(&self, ctx: &Self::Context) -> usize {
+        ctx.encoded_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::vv::vv;
+    use crate::clocks::ClockOrd;
+
+    fn ra() -> Actor {
+        Actor::server(0)
+    }
+    fn rb() -> Actor {
+        Actor::server(1)
+    }
+    fn c(i: u32) -> Actor {
+        Actor::client(i)
+    }
+
+    /// The Figure 3 run: w falsely dominates v at Rb while y and w are
+    /// correctly concurrent across replicas.
+    #[test]
+    fn figure3_run() {
+        let m = ServerVvMech;
+        let mut ra_st: <ServerVvMech as Mechanism>::State = Vec::new();
+        let mut rb_st: <ServerVvMech as Mechanism>::State = Vec::new();
+        let empty = VersionVector::new();
+
+        // C1: PUT v at Rb -> {(b,1)}
+        m.write(&mut rb_st, &empty, Val::new(1, 0), rb(), &WriteMeta::basic(c(0)));
+        assert_eq!(rb_st[0].0, vv(&[(rb(), 1)]));
+
+        // C3: PUT x at Ra -> {(a,1)}
+        m.write(&mut ra_st, &empty, Val::new(2, 0), ra(), &WriteMeta::basic(c(2)));
+
+        // C2: PUT w at Rb with empty context -> {(b,2)}: v is *falsely*
+        // discarded (the §3.2 anomaly — one concurrent update lost)
+        m.write(&mut rb_st, &empty, Val::new(3, 0), rb(), &WriteMeta::basic(c(1)));
+        assert_eq!(rb_st.len(), 1, "v was linearized away");
+        assert_eq!(rb_st[0].0, vv(&[(rb(), 2)]));
+        assert_eq!(rb_st[0].1, Val::new(3, 0));
+
+        // C1: GET at Ra then PUT y -> {(a,2)}
+        let (_, ctx) = m.read(&ra_st);
+        m.write(&mut ra_st, &ctx, Val::new(4, 0), ra(), &WriteMeta::basic(c(0)));
+        assert_eq!(ra_st[0].0, vv(&[(ra(), 2)]));
+
+        // cross-server concurrency is still detected: {(a,2)} || {(b,2)}
+        assert_eq!(ra_st[0].0.compare(&rb_st[0].0), ClockOrd::Concurrent);
+    }
+
+    #[test]
+    fn cross_server_merge_keeps_both() {
+        let m = ServerVvMech;
+        let mut st = vec![(vv(&[(ra(), 2)]), Val::new(4, 0))];
+        let incoming = vec![(vv(&[(rb(), 2)]), Val::new(3, 0))];
+        m.merge(&mut st, &incoming);
+        assert_eq!(st.len(), 2);
+    }
+
+    #[test]
+    fn informed_write_supersedes() {
+        let m = ServerVvMech;
+        let mut st: <ServerVvMech as Mechanism>::State = Vec::new();
+        m.write(&mut st, &VersionVector::new(), Val::new(1, 0), ra(), &WriteMeta::basic(c(0)));
+        let (_, ctx) = m.read(&st);
+        m.write(&mut st, &ctx, Val::new(2, 0), rb(), &WriteMeta::basic(c(0)));
+        // {(a,1)} < {(a,1),(b,1)}
+        assert_eq!(st.len(), 1);
+        assert_eq!(st[0].1, Val::new(2, 0));
+    }
+
+    #[test]
+    fn counter_monotonic_per_server() {
+        let m = ServerVvMech;
+        let mut st: <ServerVvMech as Mechanism>::State = Vec::new();
+        for i in 0..5 {
+            m.write(
+                &mut st,
+                &VersionVector::new(),
+                Val::new(i, 0),
+                rb(),
+                &WriteMeta::basic(c(i as u32)),
+            );
+        }
+        // every blind write bumps b's counter; only the last survives
+        assert_eq!(st.len(), 1);
+        assert_eq!(st[0].0.get(rb()), 5);
+    }
+
+    #[test]
+    fn metadata_bounded_by_servers() {
+        let m = ServerVvMech;
+        let mut st: <ServerVvMech as Mechanism>::State = Vec::new();
+        for i in 0..100u32 {
+            let (_, ctx) = m.read(&st);
+            m.write(
+                &mut st,
+                &ctx,
+                Val::new(i as u64, 0),
+                Actor::server(i % 3),
+                &WriteMeta::basic(c(i)),
+            );
+        }
+        // three servers -> at most 3 entries per vector
+        assert!(m.metadata_bytes(&st) < 40, "got {}", m.metadata_bytes(&st));
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's §4 "kernel for eventual consistency": the `sync`/`update`
+//! operations every key-value-store mechanism is built from, the
+//! [`mechanism::Mechanism`] abstraction, and the concrete mechanism
+//! implementations in [`mechs`].
+
+pub mod conditions;
+pub mod mechanism;
+pub mod mechs;
+pub mod ops;
+
+pub use mechanism::{MechKind, Mechanism, Val, WriteMeta};
+pub use mechs::{dispatch, MechVisitor};
+pub use ops::{insert_version, pairwise_concurrent, sync_into, sync_sets};

@@ -1,0 +1,196 @@
+//! The §4 kernel operations over *sets* of clocks.
+//!
+//! `sync(S1, S2)` "returns a set of concurrent clocks, each belonging to
+//! one of the sets, and that together cover both sets while discarding
+//! obsolete knowledge" — implemented generically, "defined only in terms
+//! of the partial order on clocks, regardless of their actual
+//! representation".
+//!
+//! `update` is representation-specific (it must mint new events), so each
+//! mechanism provides its own (see [`super::mechs`]); the causal-history
+//! reference implementation lives in `mechs::history`.
+
+use crate::clocks::{ClockOrd, LogicalClock};
+
+/// The paper's `sync(S1, S2)` over tagged clock sets.
+///
+/// Keeps the elements of `S1` not strictly dominated by any element of
+/// `S2`, plus the elements of `S2` not dominated-or-equal by any element
+/// of `S1` (equal pairs keep the `S1` copy, so exactly one representative
+/// of each maximal history survives). Matches the reference definition
+///
+/// ```text
+/// sync(S1,S2) = {x ∈ S1 | ∄y ∈ S2. x < y} ∪ {x ∈ S2 | ∄y ∈ S1. x ≤ y}
+/// ```
+pub fn sync_sets<C: LogicalClock, V: Clone>(
+    s1: &[(C, V)],
+    s2: &[(C, V)],
+) -> Vec<(C, V)> {
+    let mut out: Vec<(C, V)> = Vec::with_capacity(s1.len() + s2.len());
+    for (c1, v1) in s1 {
+        let dominated = s2.iter().any(|(c2, _)| c1.compare(c2) == ClockOrd::Less);
+        if !dominated {
+            out.push((c1.clone(), v1.clone()));
+        }
+    }
+    for (c2, v2) in s2 {
+        let covered = s1.iter().any(|(c1, _)| c2.compare(c1).is_leq());
+        if !covered {
+            out.push((c2.clone(), v2.clone()));
+        }
+    }
+    out
+}
+
+/// In-place variant used on the store's hot path: merge `incoming` into
+/// `state`. Avoids cloning the surviving `state` entries.
+pub fn sync_into<C: LogicalClock, V: Clone>(
+    state: &mut Vec<(C, V)>,
+    incoming: &[(C, V)],
+) {
+    state.retain(|(c1, _)| {
+        !incoming.iter().any(|(c2, _)| c1.compare(c2) == ClockOrd::Less)
+    });
+    for (c2, v2) in incoming {
+        let covered = state.iter().any(|(c1, _)| c2.compare(c1).is_leq());
+        if !covered {
+            state.push((c2.clone(), v2.clone()));
+        }
+    }
+}
+
+/// Insert one freshly minted version (the tail of a mechanism's `update`):
+/// drop state entries its clock dominates, then append. The new clock is
+/// assumed not to be dominated by any state entry (updates mint new
+/// events; §4's condition 3).
+pub fn insert_version<C: LogicalClock, V>(state: &mut Vec<(C, V)>, clock: C, value: V) {
+    debug_assert!(
+        !state.iter().any(|(c, _)| clock.compare(c).is_leq()),
+        "a fresh update clock must not be dominated by existing state"
+    );
+    state.retain(|(c, _)| !c.compare(&clock).is_leq());
+    state.push((clock, value));
+}
+
+/// Insert a candidate version into a winnowed set, preserving the
+/// pairwise-concurrency invariant: the candidate is dropped when covered
+/// by an existing entry, and drops entries it dominates. (Unlike
+/// [`insert_version`], the candidate may be dominated — useful for test
+/// generators and bulk loaders.)
+pub fn insert_candidate<C: LogicalClock, V>(state: &mut Vec<(C, V)>, clock: C, value: V) {
+    if state.iter().any(|(c, _)| clock.compare(c).is_leq()) {
+        return;
+    }
+    state.retain(|(c, _)| !c.compare(&clock).is_leq());
+    state.push((clock, value));
+}
+
+/// Are all elements of the set pairwise concurrent? (§4 sync condition 2:
+/// `∀x,y ∈ S. x ≰ y`.)
+pub fn pairwise_concurrent<C: LogicalClock, V>(set: &[(C, V)]) -> bool {
+    for (i, (ci, _)) in set.iter().enumerate() {
+        for (cj, _) in set.iter().skip(i + 1) {
+            if ci.compare(cj) != ClockOrd::Concurrent {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::causal_history::hist;
+    use crate::clocks::{Actor, CausalHistory};
+
+    fn a() -> Actor {
+        Actor::server(0)
+    }
+    fn b() -> Actor {
+        Actor::server(1)
+    }
+
+    fn tag(hs: Vec<CausalHistory>) -> Vec<(CausalHistory, u64)> {
+        hs.into_iter().enumerate().map(|(i, h)| (h, i as u64)).collect()
+    }
+
+    #[test]
+    fn sync_drops_obsolete() {
+        let s1 = tag(vec![hist(&[(a(), 1)])]);
+        let s2 = tag(vec![hist(&[(a(), 1), (a(), 2)])]);
+        let out = sync_sets(&s1, &s2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, hist(&[(a(), 1), (a(), 2)]));
+    }
+
+    #[test]
+    fn sync_keeps_concurrent_from_both() {
+        let s1 = tag(vec![hist(&[(a(), 1)])]);
+        let s2 = tag(vec![hist(&[(b(), 1)])]);
+        let out = sync_sets(&s1, &s2);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn sync_dedups_equal_histories() {
+        let s1 = tag(vec![hist(&[(a(), 1)])]);
+        let s2 = tag(vec![hist(&[(a(), 1)])]);
+        let out = sync_sets(&s1, &s2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1, 0, "the S1 copy is kept");
+    }
+
+    #[test]
+    fn sync_conditions_hold() {
+        // §4: (1) results come from the inputs, (2) pairwise concurrent,
+        // (3) every input is covered by some output.
+        let s1 = tag(vec![hist(&[(a(), 1)]), hist(&[(b(), 1)])]);
+        let s2 = tag(vec![hist(&[(a(), 1), (a(), 2)]), hist(&[(b(), 1)])]);
+        let out = sync_sets(&s1, &s2);
+        assert!(pairwise_concurrent(&out));
+        for (c, _) in s1.iter().chain(s2.iter()) {
+            assert!(
+                out.iter().any(|(o, _)| c.compare(o).is_leq()),
+                "input {c} not covered"
+            );
+        }
+        for (c, _) in &out {
+            assert!(
+                s1.iter().chain(s2.iter()).any(|(i, _)| i == c),
+                "output {c} not from inputs"
+            );
+        }
+    }
+
+    #[test]
+    fn sync_into_matches_sync_sets() {
+        let s1 = tag(vec![hist(&[(a(), 1)]), hist(&[(b(), 2), (b(), 1)])]);
+        let s2 = tag(vec![hist(&[(a(), 1), (b(), 1)])]);
+        let by_value = sync_sets(&s1, &s2);
+        let mut in_place = s1.clone();
+        sync_into(&mut in_place, &s2);
+        // order may differ; compare as sets of clocks
+        assert_eq!(by_value.len(), in_place.len());
+        for (c, _) in &by_value {
+            assert!(in_place.iter().any(|(c2, _)| c2 == c));
+        }
+    }
+
+    #[test]
+    fn insert_version_discards_dominated() {
+        let mut st = tag(vec![hist(&[(a(), 1)]), hist(&[(b(), 1)])]);
+        insert_version(&mut st, hist(&[(a(), 1), (a(), 2)]), 9);
+        assert_eq!(st.len(), 2);
+        assert!(st.iter().any(|(_, v)| *v == 9));
+        assert!(st.iter().any(|(c, _)| *c == hist(&[(b(), 1)])));
+    }
+
+    #[test]
+    fn pairwise_concurrent_detects_order() {
+        let ok = tag(vec![hist(&[(a(), 1)]), hist(&[(b(), 1)])]);
+        assert!(pairwise_concurrent(&ok));
+        let bad = tag(vec![hist(&[(a(), 1)]), hist(&[(a(), 1), (a(), 2)])]);
+        assert!(!pairwise_concurrent(&bad));
+    }
+}

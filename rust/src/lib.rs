@@ -1,0 +1,53 @@
+//! # dvv-store
+//!
+//! A Dynamo-style replicated key-value store framework with **pluggable
+//! causality tracking**, reproducing *"Dotted Version Vectors: Logical
+//! Clocks for Optimistic Replication"* (Preguiça, Baquero, Almeida, Fonte,
+//! Gonçalves — 2010).
+//!
+//! The crate is organized around the paper's structure:
+//!
+//! * [`clocks`] — every causality mechanism the paper surveys (§3) plus the
+//!   contribution (§5): causal histories (ground truth), physical-clock LWW,
+//!   Lamport clocks, per-server version vectors, per-client version vectors,
+//!   **dotted version vectors**, and the compact DVVSet extension.
+//! * [`kernel`] — the eventual-consistency kernel of §4: `sync` and
+//!   `update`, generic over the mechanism.
+//! * [`store`], [`cluster`], [`net`], [`sim`], [`server`], [`coordinator`],
+//!   [`antientropy`], [`session`] — the Dynamo/Riak-like substrate the paper
+//!   assumes: versioned storage with siblings, consistent-hashing ring,
+//!   deterministic simulated network, discrete-event simulator, replica
+//!   nodes, quorum get/put coordination (§4.1, Figures 5–6), anti-entropy,
+//!   and client sessions.
+//! * [`workload`], [`oracle`], [`metrics`], [`figures`] — experiment
+//!   machinery: generators, the causal-history anomaly oracle, metric
+//!   accounting, and executable replays of the paper's Figures 1–4 and 7.
+//! * [`runtime`] — the PJRT bridge that loads AOT-compiled XLA artifacts
+//!   (built once from JAX/Pallas by `make artifacts`) for the bulk
+//!   anti-entropy path; python never runs on the request path.
+//! * [`testkit`], [`bench_support`], [`cli`], [`config`] — in-tree
+//!   substrates standing in for `rand`/`proptest`/`criterion`/`clap`/`serde`
+//!   (unavailable in the offline build environment; see DESIGN.md §3).
+
+pub mod antientropy;
+pub mod bench_support;
+pub mod cli;
+pub mod clocks;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod figures;
+pub mod kernel;
+pub mod metrics;
+pub mod net;
+pub mod oracle;
+pub mod runtime;
+pub mod server;
+pub mod session;
+pub mod sim;
+pub mod store;
+pub mod testkit;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,194 @@
+//! `dvv-store` CLI: figure replays, cluster simulation, and the TCP
+//! server mode.
+//!
+//! ```text
+//! dvv-store figures [--fig 7|all]
+//! dvv-store sim [--mechanism dvv|all] [--nodes 6] [--replication 3] ...
+//! dvv-store serve [--addr 127.0.0.1:7700] [--nodes 3] ...
+//! ```
+
+use std::sync::Arc;
+
+use dvvstore::cli::{Command, Matches};
+use dvvstore::config::StoreConfig;
+use dvvstore::figures;
+use dvvstore::kernel::mechs::{dispatch, MechVisitor};
+use dvvstore::kernel::{MechKind, Mechanism};
+use dvvstore::server::{tcp::Server, LocalCluster};
+use dvvstore::sim::Sim;
+use dvvstore::workload::{RandomWorkload, WorkloadSpec};
+
+fn cli() -> Command {
+    Command::new("dvv-store", "dotted version vectors store (paper reproduction)")
+        .subcommand(
+            Command::new("figures", "replay the paper's figures")
+                .opt("fig", "all", "figure number (1,2,3,4,7) or 'all'"),
+        )
+        .subcommand(
+            Command::new("sim", "run a simulated cluster workload")
+                .opt("mechanism", "dvv", "mechanism name or 'all' to compare")
+                .opt("nodes", "6", "server nodes")
+                .opt("replication", "3", "replication degree N")
+                .opt("read-quorum", "2", "read quorum R")
+                .opt("write-quorum", "2", "write quorum W")
+                .opt("clients", "16", "concurrent clients")
+                .opt("ops", "200", "ops per client")
+                .opt("keys", "100", "distinct keys")
+                .opt("put-fraction", "0.5", "fraction of PUT ops")
+                .opt("read-before-write", "0.5", "informed-write probability")
+                .opt("zipf", "0.9", "zipfian skew theta")
+                .opt("seed", "42", "rng seed")
+                .opt("ae-period-us", "0", "anti-entropy period (0 = off)")
+                .opt("skew-us", "0", "client clock skew std-dev (µs)")
+                .switch("stateless", "stateless clients (§3.3 inference mode)"),
+        )
+        .subcommand(
+            Command::new("serve", "run the TCP store server")
+                .opt("addr", "127.0.0.1:7700", "listen address")
+                .opt("nodes", "3", "in-process shards")
+                .opt("replication", "3", "replication degree N")
+                .opt("read-quorum", "2", "read quorum R")
+                .opt("write-quorum", "2", "write quorum W"),
+        )
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = cli();
+    let matches = match cmd.parse(&args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match &matches.subcommand {
+        Some((name, sub)) => match name.as_str() {
+            "figures" => cmd_figures(sub),
+            "sim" => cmd_sim(sub),
+            "serve" => cmd_serve(sub),
+            _ => unreachable!(),
+        },
+        None => {
+            println!("{}", cmd.help());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_figures(m: &Matches) -> dvvstore::Result<()> {
+    let which = m.get_str("fig");
+    if which == "all" {
+        for fig in figures::REPLAYABLE {
+            println!("{}", figures::replay(fig)?.render());
+        }
+    } else {
+        let fig: u32 = m.get_parsed("fig")?;
+        println!("{}", figures::replay(fig)?.render());
+    }
+    Ok(())
+}
+
+struct SimRun {
+    cfg: StoreConfig,
+    spec: WorkloadSpec,
+    clients: usize,
+    stateful: bool,
+    seed: u64,
+}
+
+impl MechVisitor for SimRun {
+    type Out = dvvstore::Result<String>;
+
+    fn visit<M: Mechanism>(self, mech: M) -> Self::Out {
+        let driver = Box::new(RandomWorkload::new(self.spec, self.clients));
+        let mut sim = Sim::new(mech, self.cfg, self.clients, self.stateful, driver, self.seed)?;
+        sim.start();
+        sim.run(u64::MAX);
+        sim.settle();
+        let lost = sim.audit_permanently_lost();
+        Ok(format!(
+            "| {:<9} | {:>7} | {:>6} | {:>10} | {:>10} | {:>9} | {:>12} | {:>9}µs |",
+            M::NAME,
+            sim.metrics.ops(),
+            lost,
+            sim.metrics.false_concurrent_pairs,
+            sim.metrics.true_concurrent_pairs,
+            sim.metrics.max_siblings,
+            sim.metrics.metadata_bytes,
+            sim.metrics.put_latency.percentile(0.5),
+        ))
+    }
+}
+
+fn cmd_sim(m: &Matches) -> dvvstore::Result<()> {
+    let mut cfg = StoreConfig::default();
+    cfg.cluster.nodes = m.get_parsed("nodes")?;
+    cfg.cluster.replication = m.get_parsed("replication")?;
+    cfg.cluster.read_quorum = m.get_parsed("read-quorum")?;
+    cfg.cluster.write_quorum = m.get_parsed("write-quorum")?;
+    cfg.antientropy.period_us = m.get_parsed("ae-period-us")?;
+    cfg.net.clock_skew_us = m.get_parsed("skew-us")?;
+    cfg.validate()?;
+    let spec = WorkloadSpec {
+        keys: m.get_parsed("keys")?,
+        zipf_theta: m.get_parsed("zipf")?,
+        put_fraction: m.get_parsed("put-fraction")?,
+        read_before_write: m.get_parsed("read-before-write")?,
+        ops_per_client: m.get_parsed("ops")?,
+        ..Default::default()
+    };
+    let clients: usize = m.get_parsed("clients")?;
+    let seed: u64 = m.get_parsed("seed")?;
+    let stateful = !m.has("stateless");
+
+    let mech_arg = m.get_str("mechanism");
+    let kinds: Vec<MechKind> = if mech_arg == "all" {
+        MechKind::ALL.to_vec()
+    } else {
+        vec![MechKind::parse(mech_arg)?]
+    };
+
+    println!(
+        "| mechanism | ops     | lost   | false_conc | true_conc  | siblings  | metadata(B)  | put_p50     |"
+    );
+    println!("|---|---|---|---|---|---|---|---|");
+    for kind in kinds {
+        let row = dispatch(
+            kind,
+            SimRun {
+                cfg: cfg.clone(),
+                spec: spec.clone(),
+                clients,
+                stateful,
+                seed,
+            },
+        )?;
+        println!("{row}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
+    let nodes: usize = m.get_parsed("nodes")?;
+    let n: usize = m.get_parsed("replication")?;
+    let r: usize = m.get_parsed("read-quorum")?;
+    let w: usize = m.get_parsed("write-quorum")?;
+    let addr = m.get_str("addr");
+    let cluster = Arc::new(LocalCluster::new(nodes, n, r, w)?);
+    let server = Server::start(addr, cluster)?;
+    println!(
+        "dvv-store serving on {} ({} shards, N={n} R={r} W={w})",
+        server.addr(),
+        nodes
+    );
+    println!("protocol: GET <key> | PUT <key> <value-hex> [ctx-hex] | STATS | QUIT");
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

@@ -1,0 +1,215 @@
+//! Metric accounting for simulated runs: op counts, message counts,
+//! latency histograms, anomaly tallies (lost updates, false concurrency)
+//! and metadata-size samples — everything E6/E7/E9 report.
+
+use std::fmt;
+
+/// A log-bucketed latency histogram (µs), constant memory.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) µs; bucket 0 is [0, 2).
+    buckets: [u64; 40],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; 40], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl Histogram {
+    /// New empty histogram.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record a sample (µs).
+    pub fn record(&mut self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(39);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += us;
+        self.max = self.max.max(us);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean µs.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Max µs.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate percentile (bucket upper bound), p in [0,1].
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64) * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl fmt::Display for Histogram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.1}µs p50={}µs p99={}µs max={}µs",
+            self.count,
+            self.mean(),
+            self.percentile(0.50),
+            self.percentile(0.99),
+            self.max
+        )
+    }
+}
+
+/// Counters and samples collected by a simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Completed GET operations.
+    pub gets: u64,
+    /// Completed PUT operations.
+    pub puts: u64,
+    /// Operations that failed (quorum not met / node down).
+    pub failed_ops: u64,
+    /// Replication / coordination messages sent.
+    pub messages: u64,
+    /// Messages dropped by the network model.
+    pub dropped_messages: u64,
+    /// Anti-entropy exchanges performed.
+    pub ae_rounds: u64,
+    /// Key-states merged during anti-entropy.
+    pub ae_keys_synced: u64,
+
+    /// Concurrent updates silently destroyed (E6's headline anomaly):
+    /// a value was removed although no surviving value causally covers it.
+    pub lost_updates: u64,
+    /// Values correctly superseded by a causally later value.
+    pub correct_supersessions: u64,
+    /// Sibling pairs returned by GETs that were in fact causally ordered
+    /// (false concurrency: extra reconciliation work for clients).
+    pub false_concurrent_pairs: u64,
+    /// Sibling pairs returned by GETs that were genuinely concurrent.
+    pub true_concurrent_pairs: u64,
+
+    /// GET latency (simulated µs).
+    pub get_latency: Histogram,
+    /// PUT latency (simulated µs).
+    pub put_latency: Histogram,
+
+    /// Causality metadata bytes currently stored, sampled at run end.
+    pub metadata_bytes: u64,
+    /// Context bytes shipped to clients, accumulated.
+    pub context_bytes: u64,
+    /// Largest sibling set ever observed.
+    pub max_siblings: usize,
+}
+
+impl Metrics {
+    /// New zeroed metrics.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Total client ops completed.
+    pub fn ops(&self) -> u64 {
+        self.gets + self.puts
+    }
+
+    /// One-line summary used by examples and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "ops={} (get={} put={} failed={}) msgs={} lost_updates={} \
+             false_conc={} true_conc={} max_siblings={} metadata={}B",
+            self.ops(),
+            self.gets,
+            self.puts,
+            self.failed_ops,
+            self.messages,
+            self.lost_updates,
+            self.false_concurrent_pairs,
+            self.true_concurrent_pairs,
+            self.max_siblings,
+            self.metadata_bytes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let mut h = Histogram::new();
+        for us in [1u64, 2, 4, 8, 100, 1000, 10_000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.percentile(0.5) <= h.percentile(0.99));
+        assert!(h.mean() > 0.0);
+        assert_eq!(h.max(), 10_000);
+    }
+
+    #[test]
+    fn histogram_zero_and_empty() {
+        let mut h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0);
+        h.record(0);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn histogram_merge_accumulates() {
+        let mut a = Histogram::new();
+        a.record(10);
+        let mut b = Histogram::new();
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), 1000);
+    }
+
+    #[test]
+    fn metrics_summary_contains_counts() {
+        let mut m = Metrics::new();
+        m.gets = 5;
+        m.puts = 3;
+        m.lost_updates = 2;
+        let s = m.summary();
+        assert!(s.contains("get=5") && s.contains("lost_updates=2"));
+        assert_eq!(m.ops(), 8);
+    }
+}

@@ -1,0 +1,172 @@
+//! Simulated network: latency sampling, message drops, partitions, and
+//! per-client wall-clock skew (for the §3.1 LWW anomaly).
+//!
+//! The model is intentionally simple and fully deterministic given a seed:
+//! one-way delays are exponentially distributed around a configured mean;
+//! partitions are symmetric sets of blocked node pairs; skew is a fixed
+//! per-client offset drawn once from a normal distribution.
+
+use crate::cluster::NodeId;
+use crate::config::NetConfig;
+use crate::testkit::Rng;
+
+/// Deterministic network model used by the discrete-event simulator.
+#[derive(Debug, Clone)]
+pub struct NetModel {
+    cfg: NetConfig,
+    rng: Rng,
+    /// Blocked unordered node pairs (active partitions).
+    blocked: Vec<(NodeId, NodeId)>,
+}
+
+impl NetModel {
+    /// Build from config with an independent RNG stream.
+    pub fn new(cfg: NetConfig, rng: Rng) -> NetModel {
+        NetModel { cfg, rng, blocked: Vec::new() }
+    }
+
+    /// Sample the one-way delay for a message, or `None` if it is dropped
+    /// (random loss or active partition).
+    pub fn delay(&mut self, from: NodeId, to: NodeId) -> Option<u64> {
+        if from != to {
+            if self.is_partitioned(from, to) {
+                return None;
+            }
+            if self.cfg.drop_prob > 0.0 && self.rng.chance(self.cfg.drop_prob) {
+                return None;
+            }
+        }
+        if from == to {
+            // local loopback: negligible but non-zero so event ordering
+            // stays strict
+            return Some(1);
+        }
+        let us = self.rng.exponential(self.cfg.mean_latency_us).max(1.0);
+        Some(us as u64)
+    }
+
+    /// Sample the client ⇄ proxy hop delay (never partitioned or dropped:
+    /// clients retry transparently; the quorum machinery models
+    /// availability).
+    pub fn client_delay(&mut self) -> u64 {
+        self.rng.exponential(self.cfg.mean_latency_us).max(1.0) as u64
+    }
+
+    /// Install a symmetric partition between `a` and `b`.
+    pub fn partition(&mut self, a: NodeId, b: NodeId) {
+        let pair = norm(a, b);
+        if !self.blocked.contains(&pair) {
+            self.blocked.push(pair);
+        }
+    }
+
+    /// Partition one group of nodes from another (cartesian product).
+    pub fn partition_groups(&mut self, left: &[NodeId], right: &[NodeId]) {
+        for &a in left {
+            for &b in right {
+                self.partition(a, b);
+            }
+        }
+    }
+
+    /// Heal a specific partition.
+    pub fn heal(&mut self, a: NodeId, b: NodeId) {
+        let pair = norm(a, b);
+        self.blocked.retain(|&p| p != pair);
+    }
+
+    /// Heal everything.
+    pub fn heal_all(&mut self) {
+        self.blocked.clear();
+    }
+
+    /// Is the pair currently partitioned?
+    pub fn is_partitioned(&self, a: NodeId, b: NodeId) -> bool {
+        self.blocked.contains(&norm(a, b))
+    }
+
+    /// Draw a per-client clock-skew offset (µs, may be negative) from the
+    /// configured distribution. Called once per client at setup.
+    pub fn draw_clock_skew(&mut self, _client: usize) -> i64 {
+        if self.cfg.clock_skew_us == 0.0 {
+            0
+        } else {
+            self.rng.normal(0.0, self.cfg.clock_skew_us) as i64
+        }
+    }
+}
+
+fn norm(a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(drop: f64, skew: f64) -> NetModel {
+        NetModel::new(
+            NetConfig { mean_latency_us: 100.0, drop_prob: drop, clock_skew_us: skew },
+            Rng::new(7),
+        )
+    }
+
+    #[test]
+    fn delays_are_positive_and_near_mean() {
+        let mut m = model(0.0, 0.0);
+        let n = 5000;
+        let sum: u64 = (0..n).map(|_| m.delay(0, 1).unwrap()).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 100.0).abs() < 10.0, "mean={mean}");
+    }
+
+    #[test]
+    fn loopback_is_fast_and_lossless() {
+        let mut m = model(1.0, 0.0); // 100% drop for remote
+        for _ in 0..100 {
+            assert_eq!(m.delay(2, 2), Some(1));
+        }
+    }
+
+    #[test]
+    fn drops_follow_probability() {
+        let mut m = model(0.5, 0.0);
+        let dropped = (0..4000).filter(|_| m.delay(0, 1).is_none()).count();
+        assert!((1600..2400).contains(&dropped), "dropped={dropped}");
+    }
+
+    #[test]
+    fn partitions_block_symmetrically_and_heal() {
+        let mut m = model(0.0, 0.0);
+        m.partition(0, 1);
+        assert!(m.delay(0, 1).is_none());
+        assert!(m.delay(1, 0).is_none());
+        assert!(m.delay(0, 2).is_some());
+        m.heal(1, 0);
+        assert!(m.delay(0, 1).is_some());
+    }
+
+    #[test]
+    fn group_partitions() {
+        let mut m = model(0.0, 0.0);
+        m.partition_groups(&[0, 1], &[2, 3]);
+        assert!(m.is_partitioned(0, 2));
+        assert!(m.is_partitioned(1, 3));
+        assert!(!m.is_partitioned(0, 1));
+        m.heal_all();
+        assert!(!m.is_partitioned(0, 2));
+    }
+
+    #[test]
+    fn skew_zero_when_disabled() {
+        let mut m = model(0.0, 0.0);
+        assert_eq!(m.draw_clock_skew(0), 0);
+        let mut m2 = model(0.0, 5000.0);
+        let skews: Vec<i64> = (0..50).map(|c| m2.draw_clock_skew(c)).collect();
+        assert!(skews.iter().any(|&s| s != 0));
+    }
+}

@@ -1,0 +1,178 @@
+//! Ground-truth causality oracle.
+//!
+//! Runs beside any mechanism under test and tracks the *true* causal
+//! history of every written value. Because each client is sequential, true
+//! causality is exactly representable as a version vector over client
+//! actors (per key) — the §3.3 observation that per-client entries match
+//! the sources of concurrency. The oracle uses this to classify every
+//! version the mechanism discards as either a **correct supersession**
+//! (the surviving value causally covers it) or a **lost update** (it does
+//! not), and every sibling pair returned by a GET as **truly concurrent**
+//! or **falsely concurrent**.
+
+use std::collections::HashMap;
+
+use crate::clocks::{Actor, VersionVector};
+use crate::store::Key;
+
+/// Verdict for one discarded value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropVerdict {
+    /// Some surviving value causally dominates the dropped one.
+    CorrectSupersession,
+    /// No survivor covers it: a concurrent update was destroyed.
+    LostUpdate,
+}
+
+/// The ground-truth tracker.
+#[derive(Debug, Clone, Default)]
+pub struct Oracle {
+    /// True history of each value id, as a client-indexed version vector.
+    hist: HashMap<u64, VersionVector>,
+    /// Per (client, key) sequential write counters.
+    counters: HashMap<(Actor, Key), u64>,
+}
+
+impl Oracle {
+    /// New empty oracle.
+    pub fn new() -> Oracle {
+        Oracle::default()
+    }
+
+    /// Register a write: `client` wrote value `val_id` to `key`, having
+    /// last observed the values in `observed` (ids from its latest GET of
+    /// this key, empty for a blind write). Returns the true history
+    /// assigned to the new value.
+    pub fn on_write(
+        &mut self,
+        client: Actor,
+        key: Key,
+        val_id: u64,
+        observed: &[u64],
+    ) -> VersionVector {
+        let mut vv = VersionVector::new();
+        for id in observed {
+            if let Some(h) = self.hist.get(id) {
+                vv.join_from(h);
+            }
+        }
+        let counter = self.counters.entry((client, key)).or_insert(0);
+        *counter += 1;
+        vv.set(client, *counter);
+        self.hist.insert(val_id, vv.clone());
+        vv
+    }
+
+    /// True history of a value (empty when unknown).
+    pub fn history_of(&self, val_id: u64) -> VersionVector {
+        self.hist.get(&val_id).cloned().unwrap_or_default()
+    }
+
+    /// Does value `a` causally precede-or-equal value `b`?
+    pub fn leq(&self, a: u64, b: u64) -> bool {
+        match (self.hist.get(&a), self.hist.get(&b)) {
+            (Some(ha), Some(hb)) => ha.dominated_by(hb),
+            _ => false,
+        }
+    }
+
+    /// Are values `a` and `b` truly concurrent?
+    pub fn concurrent(&self, a: u64, b: u64) -> bool {
+        !self.leq(a, b) && !self.leq(b, a)
+    }
+
+    /// Classify the removal of `dropped` given the ids that survive.
+    pub fn classify_drop(&self, dropped: u64, survivors: &[u64]) -> DropVerdict {
+        if survivors.iter().any(|&s| self.leq(dropped, s)) {
+            DropVerdict::CorrectSupersession
+        } else {
+            DropVerdict::LostUpdate
+        }
+    }
+
+    /// Count (false, true) concurrent pairs among a GET's sibling ids.
+    pub fn classify_siblings(&self, ids: &[u64]) -> (u64, u64) {
+        let (mut false_pairs, mut true_pairs) = (0, 0);
+        for (i, &a) in ids.iter().enumerate() {
+            for &b in ids.iter().skip(i + 1) {
+                if self.concurrent(a, b) {
+                    true_pairs += 1;
+                } else {
+                    false_pairs += 1;
+                }
+            }
+        }
+        (false_pairs, true_pairs)
+    }
+
+    /// Number of tracked values.
+    pub fn tracked(&self) -> usize {
+        self.hist.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(i: u32) -> Actor {
+        Actor::client(i)
+    }
+
+    #[test]
+    fn blind_writes_are_concurrent() {
+        let mut o = Oracle::new();
+        o.on_write(c(0), 1, 100, &[]);
+        o.on_write(c(1), 1, 101, &[]);
+        assert!(o.concurrent(100, 101));
+        assert_eq!(o.classify_drop(100, &[101]), DropVerdict::LostUpdate);
+    }
+
+    #[test]
+    fn informed_write_supersedes() {
+        let mut o = Oracle::new();
+        o.on_write(c(0), 1, 100, &[]);
+        o.on_write(c(1), 1, 101, &[100]);
+        assert!(o.leq(100, 101));
+        assert_eq!(o.classify_drop(100, &[101]), DropVerdict::CorrectSupersession);
+    }
+
+    #[test]
+    fn same_client_writes_are_ordered() {
+        let mut o = Oracle::new();
+        o.on_write(c(0), 1, 100, &[]);
+        o.on_write(c(0), 1, 101, &[]); // blind, but same sequential client
+        assert!(o.leq(100, 101), "a client's own writes are causally ordered");
+    }
+
+    #[test]
+    fn per_key_counters_are_independent() {
+        let mut o = Oracle::new();
+        o.on_write(c(0), 1, 100, &[]);
+        o.on_write(c(0), 2, 200, &[]);
+        let h1 = o.history_of(100);
+        let h2 = o.history_of(200);
+        // both are (C1,1) under their own key's counter — distinct keys
+        // never interact so this is safe
+        assert_eq!(h1.get(c(0)), 1);
+        assert_eq!(h2.get(c(0)), 1);
+    }
+
+    #[test]
+    fn reconciliation_write_covers_both() {
+        let mut o = Oracle::new();
+        o.on_write(c(0), 1, 100, &[]);
+        o.on_write(c(1), 1, 101, &[]);
+        o.on_write(c(2), 1, 102, &[100, 101]); // read both siblings, merged
+        assert!(o.leq(100, 102) && o.leq(101, 102));
+        assert_eq!(o.classify_siblings(&[100, 101]), (0, 1));
+        assert_eq!(o.classify_siblings(&[100, 102]), (1, 0));
+    }
+
+    #[test]
+    fn unknown_values_never_leq() {
+        let o = Oracle::new();
+        assert!(!o.leq(1, 2));
+        assert_eq!(o.classify_drop(1, &[2]), DropVerdict::LostUpdate);
+    }
+}

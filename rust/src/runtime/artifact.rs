@@ -1,0 +1,145 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. One line per shape-specialized HLO module:
+//!
+//! ```text
+//! <kind> <name> <N> <M> <R> <file>
+//! ```
+//!
+//! The runtime picks the smallest variant that fits a request and pads
+//! inputs up to its shape.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One AOT-compiled module variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Artifact {
+    /// Graph kind: `bulk_sync` or `vv_merge`.
+    pub kind: String,
+    /// Unique name, e.g. `bulk_sync_256x256_r8`.
+    pub name: String,
+    /// First batch dimension.
+    pub n: usize,
+    /// Second batch dimension (equals `n` for `vv_merge`).
+    pub m: usize,
+    /// Replica-slot count baked into the clock encoding.
+    pub r: usize,
+    /// HLO text file, absolute.
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// All artifacts, as listed.
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Parse manifest text; `dir` anchors relative file names.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 6 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected 6 fields, got {}",
+                    lineno + 1,
+                    parts.len()
+                )));
+            }
+            let parse_usize = |s: &str, what: &str| {
+                s.parse::<usize>().map_err(|_| {
+                    Error::Artifact(format!("manifest line {}: bad {what} {s:?}", lineno + 1))
+                })
+            };
+            artifacts.push(Artifact {
+                kind: parts[0].to_string(),
+                name: parts[1].to_string(),
+                n: parse_usize(parts[2], "N")?,
+                m: parse_usize(parts[3], "M")?,
+                r: parse_usize(parts[4], "R")?,
+                path: dir.join(parts[5]),
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {path:?} (run `make artifacts` first): {e}"
+            ))
+        })?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Smallest `bulk_sync` variant fitting `n × m` clocks with `r` slots.
+    pub fn pick_bulk_sync(&self, n: usize, m: usize, r: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "bulk_sync" && a.n >= n && a.m >= m && a.r >= r)
+            .min_by_key(|a| a.n * a.m)
+    }
+
+    /// Smallest `vv_merge` variant fitting `b` vectors with `r` slots.
+    pub fn pick_vv_merge(&self, b: usize, r: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "vv_merge" && a.n >= b && a.r >= r)
+            .min_by_key(|a| a.n)
+    }
+}
+
+/// Default artifacts directory: `$DVV_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("DVV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+bulk_sync bulk_sync_64x64_r8 64 64 8 bulk_sync_64x64_r8.hlo.txt
+bulk_sync bulk_sync_256x256_r8 256 256 8 bulk_sync_256x256_r8.hlo.txt
+vv_merge vv_merge_1024_r8 1024 1024 8 vv_merge_1024_r8.hlo.txt
+";
+
+    #[test]
+    fn parses_and_anchors_paths() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].n, 64);
+        assert_eq!(m.artifacts[0].path, Path::new("/art/bulk_sync_64x64_r8.hlo.txt"));
+    }
+
+    #[test]
+    fn picks_smallest_fitting_variant() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.pick_bulk_sync(10, 10, 8).unwrap().n, 64);
+        assert_eq!(m.pick_bulk_sync(64, 64, 8).unwrap().n, 64);
+        assert_eq!(m.pick_bulk_sync(65, 10, 8).unwrap().n, 256);
+        assert!(m.pick_bulk_sync(300, 300, 8).is_none());
+        assert!(m.pick_bulk_sync(10, 10, 16).is_none(), "r too large");
+        assert_eq!(m.pick_vv_merge(500, 8).unwrap().name, "vv_merge_1024_r8");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("too few fields", Path::new("/a")).is_err());
+        assert!(Manifest::parse("k n x y z f", Path::new("/a")).is_err());
+        // comments and blanks are fine
+        let ok = Manifest::parse("# comment\n\n", Path::new("/a")).unwrap();
+        assert!(ok.artifacts.is_empty());
+    }
+}

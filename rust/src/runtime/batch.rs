@@ -1,0 +1,222 @@
+//! Clock-tensor packing: the rust side of the shared encoding contract
+//! (DESIGN.md §2, mirrored by `python/compile/kernels/ref.py`).
+//!
+//! A clock row is `i32[R + 2]`: `R` per-slot contiguous range maxima, a
+//! dot slot index (`-1` = none), and the dot event number. Slot indices
+//! come from a caller-supplied [`SlotMap`] from replica [`Actor`]s.
+
+use std::collections::BTreeMap;
+
+use crate::clocks::{Actor, ClockOrd, Dvv, LogicalClock};
+use crate::error::{Error, Result};
+
+/// Maps replica actors to tensor slots `0..R`.
+#[derive(Debug, Clone, Default)]
+pub struct SlotMap {
+    slots: BTreeMap<Actor, usize>,
+}
+
+impl SlotMap {
+    /// Empty map.
+    pub fn new() -> SlotMap {
+        SlotMap::default()
+    }
+
+    /// Dense map over the first `r` server actors.
+    pub fn dense(r: usize) -> SlotMap {
+        let mut m = SlotMap::new();
+        for i in 0..r {
+            m.slots.insert(Actor::server(i as u32), i);
+        }
+        m
+    }
+
+    /// Slot of `actor`, registering it if new.
+    pub fn intern(&mut self, actor: Actor) -> usize {
+        let next = self.slots.len();
+        *self.slots.entry(actor).or_insert(next)
+    }
+
+    /// Slot of `actor`, if registered.
+    pub fn get(&self, actor: Actor) -> Option<usize> {
+        self.slots.get(&actor).copied()
+    }
+
+    /// Number of registered actors.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Is the map empty?
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Build from every actor mentioned in a clock list.
+    pub fn from_clocks<'a, I: IntoIterator<Item = &'a Dvv>>(clocks: I) -> SlotMap {
+        let mut m = SlotMap::new();
+        for c in clocks {
+            for (a, _) in c.vv.iter() {
+                m.intern(a);
+            }
+            if let Some((a, _)) = c.dot {
+                m.intern(a);
+            }
+        }
+        m
+    }
+}
+
+/// Encode one clock as a row of width `r + 2`.
+pub fn encode_row(clock: &Dvv, slots: &SlotMap, r: usize, out: &mut Vec<i32>) -> Result<()> {
+    let base = out.len();
+    out.resize(base + r + 2, 0);
+    out[base + r] = -1;
+    for (actor, n) in clock.vv.iter() {
+        let slot = slots
+            .get(actor)
+            .ok_or_else(|| Error::Artifact(format!("actor {actor} not in slot map")))?;
+        if slot >= r {
+            return Err(Error::Artifact(format!(
+                "slot {slot} exceeds encoded width R={r}"
+            )));
+        }
+        out[base + slot] = i32::try_from(n)
+            .map_err(|_| Error::Artifact(format!("counter {n} exceeds i32")))?;
+    }
+    if let Some((actor, n)) = clock.dot {
+        let slot = slots
+            .get(actor)
+            .ok_or_else(|| Error::Artifact(format!("dot actor {actor} not in slot map")))?;
+        if slot >= r {
+            return Err(Error::Artifact(format!("dot slot {slot} exceeds R={r}")));
+        }
+        out[base + r] = slot as i32;
+        out[base + r + 1] = i32::try_from(n)
+            .map_err(|_| Error::Artifact(format!("dot {n} exceeds i32")))?;
+    }
+    Ok(())
+}
+
+/// Pack a clock batch into a padded row-major `i32[pad_to, r+2]` tensor.
+/// Pad rows are empty clocks (all-zero vv, dot slot -1).
+pub fn pack(clocks: &[Dvv], slots: &SlotMap, r: usize, pad_to: usize) -> Result<Vec<i32>> {
+    if clocks.len() > pad_to {
+        return Err(Error::Artifact(format!(
+            "batch {} exceeds padded size {pad_to}",
+            clocks.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(pad_to * (r + 2));
+    for c in clocks {
+        encode_row(c, slots, r, &mut out)?;
+    }
+    for _ in clocks.len()..pad_to {
+        let base = out.len();
+        out.resize(base + r + 2, 0);
+        out[base + r] = -1;
+    }
+    Ok(out)
+}
+
+/// Scalar mirror of the kernel's dominance code for one pair — used to
+/// cross-check the XLA path (tests + `debug_assert` sampling).
+pub fn dominance_code(a: &Dvv, b: &Dvv) -> i32 {
+    match a.compare(b) {
+        ClockOrd::Concurrent => 0,
+        ClockOrd::Less => 1,
+        ClockOrd::Greater => 2,
+        ClockOrd::Equal => 3,
+    }
+}
+
+/// Scalar reference of the bulk-sync keep-masks (identical reduction to
+/// `python/compile/model.py::bulk_sync`).
+pub fn bulk_sync_scalar(a: &[Dvv], b: &[Dvv]) -> (Vec<bool>, Vec<bool>) {
+    let keep_a = a
+        .iter()
+        .map(|x| !b.iter().any(|y| x.compare(y) == ClockOrd::Less))
+        .collect();
+    let keep_b = b
+        .iter()
+        .map(|y| !a.iter().any(|x| y.compare(x).is_leq()))
+        .collect();
+    (keep_a, keep_b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::dvv::dvv;
+
+    fn a() -> Actor {
+        Actor::server(0)
+    }
+    fn b() -> Actor {
+        Actor::server(1)
+    }
+
+    #[test]
+    fn row_layout_matches_contract() {
+        let slots = SlotMap::dense(4);
+        let c = dvv(&[(a(), 2), (b(), 1)], Some((b(), 3)));
+        let mut out = Vec::new();
+        encode_row(&c, &slots, 4, &mut out).unwrap();
+        assert_eq!(out, vec![2, 1, 0, 0, /*dot slot*/ 1, /*dot n*/ 3]);
+    }
+
+    #[test]
+    fn dotless_row_has_sentinel() {
+        let slots = SlotMap::dense(2);
+        let c = dvv(&[(a(), 5)], None);
+        let mut out = Vec::new();
+        encode_row(&c, &slots, 2, &mut out).unwrap();
+        assert_eq!(out, vec![5, 0, -1, 0]);
+    }
+
+    #[test]
+    fn pack_pads_with_empty_rows() {
+        let slots = SlotMap::dense(2);
+        let clocks = vec![dvv(&[(a(), 1)], None)];
+        let t = pack(&clocks, &slots, 2, 3).unwrap();
+        assert_eq!(t.len(), 3 * 4);
+        assert_eq!(&t[4..8], &[0, 0, -1, 0]);
+        assert_eq!(&t[8..12], &[0, 0, -1, 0]);
+    }
+
+    #[test]
+    fn pack_rejects_overflow_batch() {
+        let slots = SlotMap::dense(2);
+        let clocks = vec![dvv(&[], Some((a(), 1))); 5];
+        assert!(pack(&clocks, &slots, 2, 4).is_err());
+    }
+
+    #[test]
+    fn unknown_actor_is_an_error() {
+        let slots = SlotMap::dense(1); // only server 0
+        let c = dvv(&[(b(), 1)], None);
+        let mut out = Vec::new();
+        assert!(encode_row(&c, &slots, 1, &mut out).is_err());
+    }
+
+    #[test]
+    fn slotmap_interning_is_stable() {
+        let mut m = SlotMap::new();
+        assert_eq!(m.intern(b()), 0);
+        assert_eq!(m.intern(a()), 1);
+        assert_eq!(m.intern(b()), 0, "re-intern returns the same slot");
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn scalar_bulk_sync_matches_kernel_semantics() {
+        // concurrent pair: both kept; dominated pair: loser dropped
+        let s1 = vec![dvv(&[], Some((a(), 1)))];
+        let s2 = vec![dvv(&[], Some((b(), 1)))];
+        assert_eq!(bulk_sync_scalar(&s1, &s2), (vec![true], vec![true]));
+        let s3 = vec![dvv(&[(a(), 1)], Some((b(), 1)))];
+        assert_eq!(bulk_sync_scalar(&s1, &s3), (vec![false], vec![true]));
+        // equal keeps the A copy
+        assert_eq!(bulk_sync_scalar(&s1, &s1.clone()), (vec![true], vec![false]));
+    }
+}

@@ -1,0 +1,298 @@
+//! PJRT runtime bridge: load the AOT-compiled XLA artifacts (HLO text,
+//! emitted once by `make artifacts` from JAX/Pallas) and execute them from
+//! the rust hot path. Python never runs here.
+//!
+//! The interchange format is HLO **text** — the image's xla_extension
+//! 0.5.1 rejects serialized protos from jax ≥ 0.5 (64-bit instruction
+//! ids); `HloModuleProto::from_text_file` re-parses and reassigns ids.
+
+pub mod artifact;
+pub mod batch;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::clocks::Dvv;
+use crate::error::{Error, Result};
+use artifact::{Artifact, Manifest};
+use batch::SlotMap;
+
+/// Result of a bulk `sync` over two clock batches.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BulkSyncResult {
+    /// Keep-mask for the first batch.
+    pub keep_a: Vec<bool>,
+    /// Keep-mask for the second batch.
+    pub keep_b: Vec<bool>,
+}
+
+/// A PJRT CPU engine holding compiled executables for every artifact
+/// variant (compiled lazily, cached thereafter).
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.artifacts.len())
+            .field("compiled", &self.compiled.len())
+            .finish()
+    }
+}
+
+impl XlaEngine {
+    /// Open the engine over an artifacts directory (see
+    /// [`artifact::default_dir`]).
+    pub fn open(dir: &Path) -> Result<XlaEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaEngine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Open at the default location.
+    pub fn open_default() -> Result<XlaEngine> {
+        XlaEngine::open(&artifact::default_dir())
+    }
+
+    /// Artifact inventory.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&mut self, art: &Artifact) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(&art.name) {
+            let proto = xla::HloModuleProto::from_text_file(&art.path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compiled.insert(art.name.clone(), exe);
+        }
+        Ok(&self.compiled[&art.name])
+    }
+
+    /// Warm the compile cache for every artifact (start-up, benches).
+    pub fn compile_all(&mut self) -> Result<usize> {
+        let arts = self.manifest.artifacts.clone();
+        for art in &arts {
+            self.executable(art)?;
+        }
+        Ok(arts.len())
+    }
+
+    /// The paper's `sync(S1, S2)` keep-masks over two DVV batches,
+    /// computed by the AOT-compiled Pallas dominance kernel.
+    ///
+    /// `slots` maps replica actors to tensor slots; every actor in either
+    /// batch must fit inside the variant's `R`. Empty clocks must not
+    /// appear (versions always carry at least a dot).
+    pub fn bulk_sync(
+        &mut self,
+        a: &[Dvv],
+        b: &[Dvv],
+        slots: &SlotMap,
+    ) -> Result<BulkSyncResult> {
+        let art = self
+            .manifest
+            .pick_bulk_sync(a.len(), b.len(), slots.len())
+            .cloned()
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no bulk_sync variant fits {}x{} r={}",
+                    a.len(),
+                    b.len(),
+                    slots.len()
+                ))
+            })?;
+        let r = art.r;
+        let ta = batch::pack(a, slots, r, art.n)?;
+        let tb = batch::pack(b, slots, r, art.m)?;
+        let w = (r + 2) as i64;
+        let la = xla::Literal::vec1(&ta).reshape(&[art.n as i64, w])?;
+        let lb = xla::Literal::vec1(&tb).reshape(&[art.m as i64, w])?;
+        let exe = self.executable(&art)?;
+        let result = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (keep_a, keep_b, codes)
+        let (keep_a_lit, keep_b_lit, _codes) = result.to_tuple3()?;
+        let keep_a_raw = keep_a_lit.to_vec::<i32>()?;
+        let keep_b_raw = keep_b_lit.to_vec::<i32>()?;
+        Ok(BulkSyncResult {
+            keep_a: keep_a_raw[..a.len()].iter().map(|&x| x != 0).collect(),
+            keep_b: keep_b_raw[..b.len()].iter().map(|&x| x != 0).collect(),
+        })
+    }
+
+    /// Full dominance-code matrix for two DVV batches (row-major
+    /// `a.len() × b.len()`, codes `0`=concurrent `1`=less `2`=greater
+    /// `3`=equal). Used by the multi-key anti-entropy path, which needs
+    /// per-block reductions rather than whole-batch keep-masks (clocks of
+    /// *different keys* must never dominate each other — see
+    /// `antientropy::sync_xla`).
+    pub fn dominance_codes(
+        &mut self,
+        a: &[Dvv],
+        b: &[Dvv],
+        slots: &SlotMap,
+    ) -> Result<Vec<i32>> {
+        let art = self
+            .manifest
+            .pick_bulk_sync(a.len(), b.len(), slots.len())
+            .cloned()
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no bulk_sync variant fits {}x{} r={}",
+                    a.len(),
+                    b.len(),
+                    slots.len()
+                ))
+            })?;
+        let r = art.r;
+        let ta = batch::pack(a, slots, r, art.n)?;
+        let tb = batch::pack(b, slots, r, art.m)?;
+        let w = (r + 2) as i64;
+        let la = xla::Literal::vec1(&ta).reshape(&[art.n as i64, w])?;
+        let lb = xla::Literal::vec1(&tb).reshape(&[art.m as i64, w])?;
+        let exe = self.executable(&art)?;
+        let result = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let (_keep_a, _keep_b, codes_lit) = result.to_tuple3()?;
+        let padded = codes_lit.to_vec::<i32>()?;
+        // slice the [0..a.len(), 0..b.len()] sub-block out of art.n × art.m
+        let mut codes = Vec::with_capacity(a.len() * b.len());
+        for i in 0..a.len() {
+            let row = &padded[i * art.m..i * art.m + b.len()];
+            codes.extend_from_slice(row);
+        }
+        Ok(codes)
+    }
+
+    /// Pointwise version-vector join of two equal-shaped `i32[b, r]`
+    /// batches via the `vv_merge` artifact. Inputs are row-major.
+    pub fn vv_merge(&mut self, a: &[i32], b: &[i32], r: usize) -> Result<Vec<i32>> {
+        if a.len() != b.len() || a.len() % r != 0 {
+            return Err(Error::Artifact(format!(
+                "vv_merge shape mismatch: {} vs {} (r={r})",
+                a.len(),
+                b.len()
+            )));
+        }
+        let rows = a.len() / r;
+        let art = self
+            .manifest
+            .pick_vv_merge(rows, r)
+            .cloned()
+            .ok_or_else(|| Error::Artifact(format!("no vv_merge variant fits {rows} r={r}")))?;
+        let mut ta = a.to_vec();
+        let mut tb = b.to_vec();
+        ta.resize(art.n * art.r, 0);
+        tb.resize(art.n * art.r, 0);
+        let la = xla::Literal::vec1(&ta).reshape(&[art.n as i64, art.r as i64])?;
+        let lb = xla::Literal::vec1(&tb).reshape(&[art.n as i64, art.r as i64])?;
+        let exe = self.executable(&art)?;
+        let result = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let merged = result.to_tuple1()?.to_vec::<i32>()?;
+        Ok(merged[..a.len()].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require `make artifacts` to have run; they are skipped
+    //! (not failed) when the artifacts directory is absent so `cargo test`
+    //! works on a fresh checkout.
+
+    use super::*;
+    use crate::clocks::dvv::dvv;
+    use crate::clocks::Actor;
+    use crate::testkit::Rng;
+
+    fn engine() -> Option<XlaEngine> {
+        let dir = artifact::default_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(XlaEngine::open(&dir).expect("engine opens"))
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    fn a() -> Actor {
+        Actor::server(0)
+    }
+    fn b() -> Actor {
+        Actor::server(1)
+    }
+
+    #[test]
+    fn bulk_sync_matches_scalar_reference() {
+        let Some(mut eng) = engine() else { return };
+        let slots = SlotMap::dense(4);
+        let s1 = vec![
+            dvv(&[], Some((a(), 1))),
+            dvv(&[(a(), 1)], Some((b(), 1))),
+            dvv(&[(a(), 4)], None),
+        ];
+        let s2 = vec![
+            dvv(&[(a(), 3)], Some((a(), 5))),
+            dvv(&[], Some((b(), 1))),
+        ];
+        let got = eng.bulk_sync(&s1, &s2, &slots).unwrap();
+        let (keep_a, keep_b) = batch::bulk_sync_scalar(&s1, &s2);
+        assert_eq!(got.keep_a, keep_a);
+        assert_eq!(got.keep_b, keep_b);
+    }
+
+    #[test]
+    fn bulk_sync_randomized_against_scalar() {
+        let Some(mut eng) = engine() else { return };
+        let slots = SlotMap::dense(8);
+        let mut rng = Rng::new(31);
+        for _ in 0..10 {
+            let gen_batch = |rng: &mut Rng| -> Vec<Dvv> {
+                (0..rng.range(1, 20))
+                    .map(|_| {
+                        let vvp = crate::clocks::VersionVector::from_pairs(
+                            (0..8u32).map(|i| (Actor::server(i), rng.below(4))),
+                        );
+                        let r = Actor::server(rng.below(8) as u32);
+                        let n = vvp.get(r) + 1 + rng.below(3);
+                        Dvv { vv: vvp, dot: Some((r, n)) }
+                    })
+                    .collect()
+            };
+            let s1 = gen_batch(&mut rng);
+            let s2 = gen_batch(&mut rng);
+            let got = eng.bulk_sync(&s1, &s2, &slots).unwrap();
+            let (keep_a, keep_b) = batch::bulk_sync_scalar(&s1, &s2);
+            assert_eq!(got.keep_a, keep_a, "s1={s1:?} s2={s2:?}");
+            assert_eq!(got.keep_b, keep_b, "s1={s1:?} s2={s2:?}");
+        }
+    }
+
+    #[test]
+    fn vv_merge_is_pointwise_max() {
+        let Some(mut eng) = engine() else { return };
+        let r = 8;
+        let x: Vec<i32> = (0..64).collect();
+        let y: Vec<i32> = (0..64).rev().collect();
+        let m = eng.vv_merge(&x, &y, r).unwrap();
+        for i in 0..64 {
+            assert_eq!(m[i], x[i].max(y[i]));
+        }
+    }
+
+    #[test]
+    fn variant_selection_errors_when_too_big() {
+        let Some(mut eng) = engine() else { return };
+        let slots = SlotMap::dense(2);
+        let huge = vec![dvv(&[], Some((a(), 1))); 5000];
+        assert!(eng.bulk_sync(&huge, &huge, &slots).is_err());
+    }
+}

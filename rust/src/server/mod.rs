@@ -1,0 +1,213 @@
+//! Deployable store: an in-process replicated cluster behind a TCP text
+//! protocol (`dvv-store serve`).
+//!
+//! Unlike the discrete-event simulator (which models latency and failure
+//! for experiments), this is a real store: N replica shards in one
+//! process, quorum get/put through the same [`crate::coordinator`] state
+//! machines, dotted version vectors as the causality mechanism, and real
+//! bytes for values. String keys hash onto the same consistent ring used
+//! everywhere else.
+
+pub mod protocol;
+pub mod tcp;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::clocks::vv::VersionVector;
+use crate::clocks::Actor;
+use crate::cluster::ring::{hash_str, Ring};
+use crate::coordinator::{GetOp, PutOp, QuorumSpec};
+use crate::error::Result;
+use crate::kernel::mechs::DvvMech;
+use crate::kernel::{Val, WriteMeta};
+use crate::store::KeyStore;
+
+/// A GET's answer: sibling payloads plus the encoded causal context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GetAnswer {
+    /// Sibling values (raw bytes), one per concurrent version.
+    pub values: Vec<Vec<u8>>,
+    /// Opaque context to pass back on PUT (encoded version vector).
+    pub context: Vec<u8>,
+}
+
+/// An in-process replicated DVV store.
+pub struct LocalCluster {
+    nodes: Vec<Mutex<KeyStore<DvvMech>>>,
+    blobs: Mutex<HashMap<u64, Vec<u8>>>,
+    ring: Ring,
+    quorum: QuorumSpec,
+    next_id: AtomicU64,
+    mech: DvvMech,
+}
+
+impl LocalCluster {
+    /// Build with `nodes` shards and quorum `(n, r, w)`.
+    pub fn new(nodes: usize, n: usize, r: usize, w: usize) -> Result<LocalCluster> {
+        let quorum = QuorumSpec::new(n.min(nodes), r.min(n), w.min(n))?;
+        Ok(LocalCluster {
+            nodes: (0..nodes).map(|_| Mutex::new(KeyStore::new(DvvMech))).collect(),
+            blobs: Mutex::new(HashMap::new()),
+            ring: Ring::new(nodes, 64)?,
+            quorum,
+            next_id: AtomicU64::new(1),
+            mech: DvvMech,
+        })
+    }
+
+    /// Number of shards.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// GET through a read quorum with read repair.
+    pub fn get(&self, key: &str) -> Result<GetAnswer> {
+        let k = hash_str(key);
+        let replicas = self.ring.replicas_for(k, self.quorum.n);
+        let mut op: GetOp<DvvMech> = GetOp::new(self.quorum);
+        let mut answer = None;
+        for &node in &replicas {
+            let state = self.nodes[node].lock().unwrap().state(k);
+            if let Some(res) = op.on_reply(&self.mech, &state) {
+                answer = Some(res);
+            }
+        }
+        // read repair with the fully merged state
+        let merged = op.merged().clone();
+        for &node in &replicas {
+            self.nodes[node].lock().unwrap().merge_key(k, &merged);
+        }
+        let res = answer.ok_or(crate::Error::QuorumNotMet {
+            got: op.replies(),
+            needed: self.quorum.r,
+        })?;
+        let blobs = self.blobs.lock().unwrap();
+        let values = res
+            .values
+            .iter()
+            .map(|v| blobs.get(&v.id).cloned().unwrap_or_default())
+            .collect();
+        let mut context = Vec::new();
+        crate::clocks::encoding::encode_vv(&res.context, &mut context);
+        Ok(GetAnswer { values, context })
+    }
+
+    /// PUT through a write quorum. `context` is the bytes from a prior
+    /// GET (empty slice = blind write).
+    pub fn put(&self, key: &str, value: Vec<u8>, context: &[u8]) -> Result<()> {
+        let k = hash_str(key);
+        let ctx: VersionVector = if context.is_empty() {
+            VersionVector::new()
+        } else {
+            let mut pos = 0;
+            crate::clocks::encoding::decode_vv(context, &mut pos)?
+        };
+        let replicas = self.ring.replicas_for(k, self.quorum.n);
+        let coordinator = replicas[0];
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let val = Val::new(id, value.len() as u32);
+        self.blobs.lock().unwrap().insert(id, value);
+
+        let meta = WriteMeta {
+            client: Actor::client(0),
+            physical_us: 0,
+            client_seq: None,
+        };
+        // §4.1: update + sync at the coordinator...
+        let state = {
+            let mut store = self.nodes[coordinator].lock().unwrap();
+            store.write(k, &ctx, val, Actor::server(coordinator as u32), &meta);
+            store.state(k)
+        };
+        // ...then replicate the synced state
+        let mut op = PutOp::new(self.quorum);
+        let mut done = op.satisfied_immediately();
+        for &node in replicas.iter().skip(1) {
+            self.nodes[node].lock().unwrap().merge_key(k, &state);
+            if op.on_ack() {
+                done = true;
+            }
+        }
+        debug_assert!(done || self.quorum.w > replicas.len());
+        Ok(())
+    }
+
+    /// Current sibling count for a key (diagnostics).
+    pub fn siblings(&self, key: &str) -> usize {
+        let k = hash_str(key);
+        let replicas = self.ring.replicas_for(k, self.quorum.n);
+        replicas
+            .iter()
+            .map(|&n| self.nodes[n].lock().unwrap().sibling_count(k))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total causality metadata bytes across shards (diagnostics).
+    pub fn metadata_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.lock().unwrap().metadata_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let c = LocalCluster::new(3, 3, 2, 2).unwrap();
+        c.put("user:1", b"alice".to_vec(), &[]).unwrap();
+        let ans = c.get("user:1").unwrap();
+        assert_eq!(ans.values, vec![b"alice".to_vec()]);
+        assert!(!ans.context.is_empty());
+    }
+
+    #[test]
+    fn blind_concurrent_puts_make_siblings() {
+        let c = LocalCluster::new(3, 3, 2, 2).unwrap();
+        c.put("k", b"v1".to_vec(), &[]).unwrap();
+        c.put("k", b"v2".to_vec(), &[]).unwrap();
+        let ans = c.get("k").unwrap();
+        assert_eq!(ans.values.len(), 2, "blind writes are concurrent");
+    }
+
+    #[test]
+    fn contextful_put_supersedes_siblings() {
+        let c = LocalCluster::new(3, 3, 2, 2).unwrap();
+        c.put("k", b"v1".to_vec(), &[]).unwrap();
+        c.put("k", b"v2".to_vec(), &[]).unwrap();
+        let ans = c.get("k").unwrap();
+        c.put("k", b"merged".to_vec(), &ans.context).unwrap();
+        let after = c.get("k").unwrap();
+        assert_eq!(after.values, vec![b"merged".to_vec()]);
+    }
+
+    #[test]
+    fn missing_key_is_empty_not_error() {
+        let c = LocalCluster::new(3, 3, 2, 2).unwrap();
+        let ans = c.get("nope").unwrap();
+        assert!(ans.values.is_empty());
+    }
+
+    #[test]
+    fn many_keys_route_across_shards() {
+        let c = LocalCluster::new(5, 3, 2, 2).unwrap();
+        for i in 0..50 {
+            c.put(&format!("key{i}"), format!("val{i}").into_bytes(), &[]).unwrap();
+        }
+        for i in 0..50 {
+            let ans = c.get(&format!("key{i}")).unwrap();
+            assert_eq!(ans.values, vec![format!("val{i}").into_bytes()]);
+        }
+        assert!(c.metadata_bytes() > 0);
+    }
+
+    #[test]
+    fn single_node_cluster_works() {
+        let c = LocalCluster::new(1, 1, 1, 1).unwrap();
+        c.put("k", b"x".to_vec(), &[]).unwrap();
+        assert_eq!(c.get("k").unwrap().values, vec![b"x".to_vec()]);
+    }
+}

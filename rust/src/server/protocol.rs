@@ -1,0 +1,166 @@
+//! Line-based text protocol for the TCP server.
+//!
+//! ```text
+//! -> GET <key>
+//! <- VALUES <n> <ctx-hex>
+//! <- VALUE <hex>            (n lines)
+//! -> PUT <key> <value-hex> [ctx-hex]
+//! <- OK
+//! -> STATS
+//! <- STATS nodes=<n> metadata_bytes=<b>
+//! -> QUIT
+//! <- BYE
+//! ```
+//!
+//! Errors render as `ERR <message>`. Hex keeps the framing trivial and
+//! binary-safe without pulling in an encoder dependency.
+
+use crate::error::{Error, Result};
+
+/// Encode bytes as lowercase hex (empty input → `-`).
+pub fn hex_encode(data: &[u8]) -> String {
+    if data.is_empty() {
+        return "-".to_string();
+    }
+    let mut out = String::with_capacity(data.len() * 2);
+    for b in data {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Decode `-` or hex into bytes.
+pub fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    if s == "-" {
+        return Ok(Vec::new());
+    }
+    if s.len() % 2 != 0 {
+        return Err(Error::Protocol(format!("odd hex length {}", s.len())));
+    }
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&s[i..i + 2], 16)
+                .map_err(|_| Error::Protocol(format!("bad hex at {i}")))
+        })
+        .collect()
+}
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Read a key.
+    Get {
+        /// Key string.
+        key: String,
+    },
+    /// Write a key.
+    Put {
+        /// Key string.
+        key: String,
+        /// Payload bytes.
+        value: Vec<u8>,
+        /// Context bytes from a prior GET (may be empty).
+        context: Vec<u8>,
+    },
+    /// Server statistics.
+    Stats,
+    /// Close the connection.
+    Quit,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let mut parts = line.trim().split_whitespace();
+    let cmd = parts.next().unwrap_or("");
+    match cmd.to_ascii_uppercase().as_str() {
+        "GET" => {
+            let key = parts
+                .next()
+                .ok_or_else(|| Error::Protocol("GET needs a key".into()))?;
+            Ok(Request::Get { key: key.to_string() })
+        }
+        "PUT" => {
+            let key = parts
+                .next()
+                .ok_or_else(|| Error::Protocol("PUT needs a key".into()))?;
+            let value = hex_decode(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("PUT needs a value".into()))?,
+            )?;
+            let context = match parts.next() {
+                Some(ctx) => hex_decode(ctx)?,
+                None => Vec::new(),
+            };
+            Ok(Request::Put { key: key.to_string(), value, context })
+        }
+        "STATS" => Ok(Request::Stats),
+        "QUIT" => Ok(Request::Quit),
+        other => Err(Error::Protocol(format!("unknown command {other:?}"))),
+    }
+}
+
+/// Render a GET answer.
+pub fn format_values(values: &[Vec<u8>], context: &[u8]) -> String {
+    let mut out = format!("VALUES {} {}\n", values.len(), hex_encode(context));
+    for v in values {
+        out.push_str(&format!("VALUE {}\n", hex_encode(v)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_roundtrip() {
+        for data in [vec![], vec![0u8], vec![0xde, 0xad, 0xbe, 0xef]] {
+            assert_eq!(hex_decode(&hex_encode(&data)).unwrap(), data);
+        }
+        assert_eq!(hex_encode(&[]), "-");
+        assert!(hex_decode("abc").is_err());
+        assert!(hex_decode("zz").is_err());
+    }
+
+    #[test]
+    fn parse_get_put() {
+        assert_eq!(
+            parse_request("GET user:1").unwrap(),
+            Request::Get { key: "user:1".into() }
+        );
+        assert_eq!(
+            parse_request("PUT k 6869").unwrap(),
+            Request::Put { key: "k".into(), value: b"hi".to_vec(), context: vec![] }
+        );
+        let with_ctx = parse_request("PUT k 00 0101").unwrap();
+        assert_eq!(
+            with_ctx,
+            Request::Put { key: "k".into(), value: vec![0], context: vec![1, 1] }
+        );
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_request("GET").is_err());
+        assert!(parse_request("PUT k").is_err());
+        assert!(parse_request("NOPE x").is_err());
+        assert!(parse_request("").is_err());
+    }
+
+    #[test]
+    fn case_insensitive_commands() {
+        assert_eq!(parse_request("quit").unwrap(), Request::Quit);
+        assert_eq!(parse_request("stats").unwrap(), Request::Stats);
+    }
+
+    #[test]
+    fn format_values_shape() {
+        let text = format_values(&[b"a".to_vec(), b"b".to_vec()], &[9]);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "VALUES 2 09");
+        assert_eq!(lines[1], "VALUE 61");
+        assert_eq!(lines[2], "VALUE 62");
+    }
+}

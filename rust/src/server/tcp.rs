@@ -1,0 +1,231 @@
+//! TCP front end: thread-per-connection server over [`super::LocalCluster`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::protocol::{format_values, parse_request, Request};
+use super::LocalCluster;
+use crate::error::Result;
+
+/// A running TCP server (owns its listener thread).
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve `cluster`.
+    pub fn start(addr: &str, cluster: Arc<LocalCluster>) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            // workers are detached: a connection blocked in read would
+            // otherwise wedge shutdown. The per-stream read timeout below
+            // bounds their lifetime after the listener stops.
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let cluster = cluster.clone();
+                        let stop = stop2.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &cluster, &stop);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Server { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the listener thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    cluster: &LocalCluster,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    // the listener is non-blocking; make sure the accepted stream is not
+    // (some platforms propagate O_NONBLOCK to accepted sockets)
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true).ok();
+    // bounded reads so workers notice server shutdown
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client hung up
+            Ok(_) if line.ends_with('\n') => {}
+            Ok(_) => continue, // partial line; keep accumulating
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // partial data (if any) stays in `line`
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        if line.trim().is_empty() {
+            line.clear();
+            continue;
+        }
+        let reply = match parse_request(&line) {
+            Ok(Request::Get { key }) => match cluster.get(&key) {
+                Ok(ans) => format_values(&ans.values, &ans.context),
+                Err(e) => format!("ERR {e}\n"),
+            },
+            Ok(Request::Put { key, value, context }) => {
+                match cluster.put(&key, value, &context) {
+                    Ok(()) => "OK\n".to_string(),
+                    Err(e) => format!("ERR {e}\n"),
+                }
+            }
+            Ok(Request::Stats) => format!(
+                "STATS nodes={} metadata_bytes={}\n",
+                cluster.node_count(),
+                cluster.metadata_bytes()
+            ),
+            Ok(Request::Quit) => {
+                stream.write_all(b"BYE\n")?;
+                return Ok(());
+            }
+            Err(e) => format!("ERR {e}\n"),
+        };
+        stream.write_all(reply.as_bytes())?;
+        line.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::protocol::hex_encode;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn client(addr: std::net::SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+        let stream = TcpStream::connect(addr).unwrap();
+        (BufReader::new(stream.try_clone().unwrap()), stream)
+    }
+
+    fn send(w: &mut TcpStream, line: &str) {
+        w.write_all(line.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+    }
+
+    fn recv(r: &mut BufReader<TcpStream>) -> String {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        line.trim_end().to_string()
+    }
+
+    #[test]
+    fn end_to_end_get_put_siblings() {
+        let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+        let server = Server::start("127.0.0.1:0", cluster).unwrap();
+        let (mut r, mut w) = client(server.addr());
+
+        // blind write twice -> siblings
+        send(&mut w, &format!("PUT k {}", hex_encode(b"v1")));
+        assert_eq!(recv(&mut r), "OK");
+        send(&mut w, &format!("PUT k {}", hex_encode(b"v2")));
+        assert_eq!(recv(&mut r), "OK");
+
+        send(&mut w, "GET k");
+        let header = recv(&mut r);
+        assert!(header.starts_with("VALUES 2 "), "{header}");
+        let ctx = header.split_whitespace().nth(2).unwrap().to_string();
+        let v1 = recv(&mut r);
+        let v2 = recv(&mut r);
+        assert!(v1.starts_with("VALUE ") && v2.starts_with("VALUE "));
+
+        // contextful write supersedes both siblings
+        send(&mut w, &format!("PUT k {} {}", hex_encode(b"merged"), ctx));
+        assert_eq!(recv(&mut r), "OK");
+        send(&mut w, "GET k");
+        let header = recv(&mut r);
+        assert!(header.starts_with("VALUES 1 "), "{header}");
+        assert_eq!(recv(&mut r), format!("VALUE {}", hex_encode(b"merged")));
+
+        send(&mut w, "STATS");
+        assert!(recv(&mut r).starts_with("STATS nodes=3"));
+        send(&mut w, "QUIT");
+        assert_eq!(recv(&mut r), "BYE");
+        server.shutdown();
+    }
+
+    #[test]
+    fn protocol_errors_are_reported_not_fatal() {
+        let cluster = Arc::new(LocalCluster::new(2, 2, 1, 1).unwrap());
+        let server = Server::start("127.0.0.1:0", cluster).unwrap();
+        let (mut r, mut w) = client(server.addr());
+        send(&mut w, "BOGUS");
+        assert!(recv(&mut r).starts_with("ERR "));
+        // connection still usable
+        send(&mut w, &format!("PUT a {}", hex_encode(b"x")));
+        assert_eq!(recv(&mut r), "OK");
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+        let server = Server::start("127.0.0.1:0", cluster).unwrap();
+        let addr = server.addr();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                let (mut r, mut w) = client(addr);
+                for i in 0..20 {
+                    send(&mut w, &format!("PUT t{t}k{i} {}", hex_encode(b"data")));
+                    assert_eq!(recv(&mut r), "OK");
+                }
+                for i in 0..20 {
+                    send(&mut w, &format!("GET t{t}k{i}"));
+                    let header = recv(&mut r);
+                    assert!(header.starts_with("VALUES 1 "), "{header}");
+                    let _ = recv(&mut r);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,143 @@
+//! Client sessions: per-client contexts, write counters, and clock skew.
+//!
+//! The paper's client model (§2–§3): a client GETs, receives values plus
+//! an opaque causal context, and supplies that context on its next PUT of
+//! the same key. Sessions also record which value ids the client actually
+//! observed — what the [`crate::oracle`] uses to derive true causality —
+//! and, in *stateful* mode, the per-key write counters that make the
+//! per-client-VV mechanism correct (§3.3).
+
+use std::collections::HashMap;
+
+use crate::clocks::Actor;
+use crate::kernel::Mechanism;
+use crate::store::Key;
+
+/// One client's session state.
+#[derive(Debug, Clone)]
+pub struct ClientSession<M: Mechanism> {
+    /// The client's actor id.
+    pub actor: Actor,
+    /// Last received context per key.
+    contexts: HashMap<Key, M::Context>,
+    /// Value ids observed in the last GET per key.
+    observed: HashMap<Key, Vec<u64>>,
+    /// Per-key write counters (stateful clients, §3.3).
+    write_counters: HashMap<Key, u64>,
+    /// Fixed wall-clock skew (µs) applied to this client's timestamps.
+    pub clock_skew_us: i64,
+    /// Stateful clients carry their own counters; stateless ones force
+    /// server-side inference (Figure 4).
+    pub stateful: bool,
+}
+
+impl<M: Mechanism> ClientSession<M> {
+    /// New session.
+    pub fn new(actor: Actor, stateful: bool, clock_skew_us: i64) -> ClientSession<M> {
+        ClientSession {
+            actor,
+            contexts: HashMap::new(),
+            observed: HashMap::new(),
+            write_counters: HashMap::new(),
+            clock_skew_us,
+            stateful,
+        }
+    }
+
+    /// Record the outcome of a GET.
+    pub fn on_get(&mut self, key: Key, ctx: M::Context, observed_ids: Vec<u64>) {
+        self.contexts.insert(key, ctx);
+        self.observed.insert(key, observed_ids);
+    }
+
+    /// Context to attach to a PUT of `key` (default when never read).
+    pub fn context_for(&self, key: Key) -> M::Context {
+        self.contexts.get(&key).cloned().unwrap_or_default()
+    }
+
+    /// Value ids the client observed for `key` (oracle input).
+    pub fn observed_for(&self, key: Key) -> Vec<u64> {
+        self.observed.get(&key).cloned().unwrap_or_default()
+    }
+
+    /// Next client-side write counter for `key`, or `None` when stateless.
+    pub fn next_write_seq(&mut self, key: Key) -> Option<u64> {
+        if self.stateful {
+            let c = self.write_counters.entry(key).or_insert(0);
+            *c += 1;
+            Some(*c)
+        } else {
+            None
+        }
+    }
+
+    /// After a PUT completes the context is consumed: the client's next
+    /// blind write must not reuse a stale context unless it re-reads.
+    /// (Riak semantics; keeps contexts fresh and mirrors §2's model where
+    /// the client "maintains no state other than the context of the last
+    /// GET".) The observed set is cleared for the same reason.
+    pub fn on_put_complete(&mut self, key: Key, wrote_id: u64) {
+        // The client has trivially observed its own write.
+        self.observed.insert(key, vec![wrote_id]);
+        self.contexts.remove(&key);
+    }
+
+    /// The skewed wall-clock reading for this client at simulated `now`.
+    pub fn skewed_clock(&self, now_us: u64) -> u64 {
+        (now_us as i64 + self.clock_skew_us).max(0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::vv::vv;
+    use crate::kernel::mechs::DvvMech;
+
+    fn sess(stateful: bool) -> ClientSession<DvvMech> {
+        ClientSession::new(Actor::client(0), stateful, 0)
+    }
+
+    #[test]
+    fn context_defaults_to_empty() {
+        let s = sess(true);
+        assert_eq!(s.context_for(1), Default::default());
+        assert!(s.observed_for(1).is_empty());
+    }
+
+    #[test]
+    fn get_then_put_flow() {
+        let mut s = sess(true);
+        let ctx = vv(&[(Actor::server(0), 2)]);
+        s.on_get(7, ctx.clone(), vec![100, 101]);
+        assert_eq!(s.context_for(7), ctx);
+        assert_eq!(s.observed_for(7), vec![100, 101]);
+        s.on_put_complete(7, 102);
+        assert_eq!(s.context_for(7), Default::default(), "context consumed");
+        assert_eq!(s.observed_for(7), vec![102], "own write observed");
+    }
+
+    #[test]
+    fn stateful_counters_increment_per_key() {
+        let mut s = sess(true);
+        assert_eq!(s.next_write_seq(1), Some(1));
+        assert_eq!(s.next_write_seq(1), Some(2));
+        assert_eq!(s.next_write_seq(2), Some(1));
+    }
+
+    #[test]
+    fn stateless_clients_have_no_counter() {
+        let mut s = sess(false);
+        assert_eq!(s.next_write_seq(1), None);
+    }
+
+    #[test]
+    fn skewed_clock_applies_offset() {
+        let mut s = sess(true);
+        s.clock_skew_us = -500;
+        assert_eq!(s.skewed_clock(1000), 500);
+        assert_eq!(s.skewed_clock(100), 0, "clamped at zero");
+        s.clock_skew_us = 250;
+        assert_eq!(s.skewed_clock(1000), 1250);
+    }
+}

@@ -1,0 +1,144 @@
+//! Failure-injection schedules: declarative crash/partition scripts that
+//! tests and benches can apply to a [`super::Sim`].
+
+use crate::cluster::NodeId;
+use crate::kernel::Mechanism;
+use crate::testkit::Rng;
+
+/// One failure-injection action.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Crash a node at a time.
+    Crash {
+        /// When (simulated µs).
+        at: u64,
+        /// Which node.
+        node: NodeId,
+    },
+    /// Recover a node at a time.
+    Recover {
+        /// When (simulated µs).
+        at: u64,
+        /// Which node.
+        node: NodeId,
+    },
+    /// Split the cluster into two groups.
+    Partition {
+        /// When (simulated µs).
+        at: u64,
+        /// Left group.
+        left: Vec<NodeId>,
+        /// Right group.
+        right: Vec<NodeId>,
+    },
+    /// Heal all partitions.
+    Heal {
+        /// When (simulated µs).
+        at: u64,
+    },
+}
+
+/// A reusable fault schedule.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Ordered faults (order does not matter; the DES sorts by time).
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Empty plan.
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Add a crash+recover window.
+    pub fn crash_window(mut self, node: NodeId, from: u64, to: u64) -> Self {
+        assert!(from < to);
+        self.faults.push(Fault::Crash { at: from, node });
+        self.faults.push(Fault::Recover { at: to, node });
+        self
+    }
+
+    /// Add a partition window splitting the node set in two.
+    pub fn partition_window(
+        mut self,
+        left: Vec<NodeId>,
+        right: Vec<NodeId>,
+        from: u64,
+        to: u64,
+    ) -> Self {
+        assert!(from < to);
+        self.faults.push(Fault::Partition { at: from, left, right });
+        self.faults.push(Fault::Heal { at: to });
+        self
+    }
+
+    /// Random crash windows: each node gets `windows` crash periods of
+    /// `dur_us` within `[0, horizon_us)`.
+    pub fn random_crashes(
+        mut self,
+        nodes: usize,
+        windows: usize,
+        dur_us: u64,
+        horizon_us: u64,
+        rng: &mut Rng,
+    ) -> Self {
+        for node in 0..nodes {
+            for _ in 0..windows {
+                let start = rng.below(horizon_us.saturating_sub(dur_us).max(1));
+                self.faults.push(Fault::Crash { at: start, node });
+                self.faults.push(Fault::Recover { at: start + dur_us, node });
+            }
+        }
+        self
+    }
+
+    /// Apply the plan to a simulator (before `run`).
+    pub fn apply<M: Mechanism>(&self, sim: &mut super::Sim<M>) {
+        for f in &self.faults {
+            match f {
+                Fault::Crash { at, node } => sim.schedule_crash(*at, *node),
+                Fault::Recover { at, node } => sim.schedule_recover(*at, *node),
+                Fault::Partition { at, left, right } => {
+                    sim.schedule_partition(*at, left.clone(), right.clone())
+                }
+                Fault::Heal { at } => sim.schedule_heal(*at),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_accumulate() {
+        let plan = FaultPlan::new()
+            .crash_window(0, 100, 200)
+            .partition_window(vec![0], vec![1], 300, 400);
+        assert_eq!(plan.faults.len(), 4);
+        assert!(matches!(plan.faults[0], Fault::Crash { at: 100, node: 0 }));
+        assert!(matches!(plan.faults[3], Fault::Heal { at: 400 }));
+    }
+
+    #[test]
+    fn random_crashes_bounded() {
+        let mut rng = Rng::new(5);
+        let plan = FaultPlan::new().random_crashes(3, 2, 50, 1000, &mut rng);
+        assert_eq!(plan.faults.len(), 12);
+        for f in &plan.faults {
+            match f {
+                Fault::Crash { at, .. } => assert!(*at < 1000),
+                Fault::Recover { at, .. } => assert!(*at <= 1050),
+                _ => panic!("unexpected fault kind"),
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn crash_window_validates_order() {
+        let _ = FaultPlan::new().crash_window(0, 200, 100);
+    }
+}

@@ -1,0 +1,821 @@
+//! Deterministic discrete-event cluster simulator.
+//!
+//! Single-threaded virtual-time DES: every message hop, client op, and
+//! anti-entropy round is an event in a priority queue. Given `(seed,
+//! config, driver)` a run is reproducible bit-for-bit — which is what lets
+//! the figure replays assert the paper's exact states and E6/E9 compare
+//! mechanisms on *identical* interleavings.
+//!
+//! The §4.1 message flows are implemented faithfully:
+//!
+//! * GET (Fig. 5): client → coordinator; coordinator fans `GetSub` to the
+//!   key's preference list, reduces replies via the mechanism's `merge`
+//!   (= kernel `sync`), answers the client at `R` replies, and
+//!   read-repairs all replicas once every reply arrived.
+//! * PUT (Fig. 6): client → coordinator (first live node of the
+//!   preference list); coordinator runs the mechanism's `update`+`sync`,
+//!   fans the resulting state to the other replicas, answers at `W` acks.
+//! * Anti-entropy: periodic pairwise full-state exchange.
+
+pub mod failure;
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::clocks::Actor;
+use crate::cluster::{NodeId, Ring};
+use crate::config::StoreConfig;
+use crate::coordinator::{GetOp, PutOp, QuorumSpec};
+use crate::kernel::{Mechanism, Val, WriteMeta};
+use crate::metrics::Metrics;
+use crate::net::NetModel;
+use crate::oracle::{DropVerdict, Oracle};
+use crate::session::ClientSession;
+use crate::store::{Key, KeyStore};
+use crate::testkit::Rng;
+use crate::workload::{Driver, Op, OpKind};
+
+/// Timeout for in-flight client ops (simulated µs).
+const OP_TIMEOUT_US: u64 = 100_000;
+
+/// One simulated replica node.
+#[derive(Debug, Clone)]
+pub struct SimNode<M: Mechanism> {
+    /// The node's versioned store.
+    pub store: KeyStore<M>,
+    /// Crashed nodes drop every message addressed to them.
+    pub up: bool,
+}
+
+/// Messages exchanged between nodes.
+#[derive(Debug, Clone)]
+enum Msg<M: Mechanism> {
+    /// Client-originated GET arriving at the coordinator.
+    GetClient { req: u64, key: Key },
+    /// Coordinator → replica read.
+    GetSub { req: u64, key: Key, from: NodeId },
+    /// Replica → coordinator state reply.
+    GetSubResp { req: u64, state: M::State },
+    /// Client-originated PUT arriving at the coordinator.
+    PutClient { req: u64, key: Key, ctx: M::Context, val: Val, meta: WriteMeta },
+    /// Coordinator → replica replication of the synced state (§4.1 step 4).
+    Replicate { req: u64, key: Key, state: M::State, from: NodeId },
+    /// Replica → coordinator replication ack.
+    ReplicateAck { req: u64 },
+    /// Read repair / anti-entropy state push (no ack).
+    StatePush { key: Key, state: M::State },
+    /// Anti-entropy request: peer replies with its states for these keys.
+    AePull { keys: Vec<Key>, from: NodeId },
+    /// Anti-entropy reply.
+    AePush { states: Vec<(Key, M::State)> },
+}
+
+/// Scheduled event kinds.
+enum Ev<M: Mechanism> {
+    Deliver { to: NodeId, msg: Msg<M> },
+    ClientIssue { client: usize, op: Op },
+    ClientDone { client: usize, req: u64 },
+    OpTimeout { req: u64 },
+    AeTick { node: NodeId },
+    Crash { node: NodeId },
+    Recover { node: NodeId },
+    PartitionGroups { left: Vec<NodeId>, right: Vec<NodeId> },
+    HealAll,
+}
+
+struct Queued<M: Mechanism> {
+    at: u64,
+    seq: u64,
+    ev: Ev<M>,
+}
+
+impl<M: Mechanism> PartialEq for Queued<M> {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at, self.seq) == (other.at, other.seq)
+    }
+}
+impl<M: Mechanism> Eq for Queued<M> {}
+impl<M: Mechanism> PartialOrd for Queued<M> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<M: Mechanism> Ord for Queued<M> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// In-flight client op bookkeeping at its coordinator.
+enum Pending<M: Mechanism> {
+    Get {
+        client: usize,
+        key: Key,
+        op: GetOp<M>,
+        started: u64,
+        participants: Vec<NodeId>,
+    },
+    Put { client: usize, key: Key, op: PutOp, started: u64, val: Val },
+}
+
+/// The simulator.
+pub struct Sim<M: Mechanism> {
+    mech: M,
+    cfg: StoreConfig,
+    /// Cluster ring (public for topology-aware tests).
+    pub ring: Ring,
+    /// Replica nodes.
+    pub nodes: Vec<SimNode<M>>,
+    net: NetModel,
+    queue: BinaryHeap<Reverse<Queued<M>>>,
+    now: u64,
+    seq: u64,
+    /// Run metrics.
+    pub metrics: Metrics,
+    /// Ground-truth tracker.
+    pub oracle: Oracle,
+    /// Client sessions.
+    pub sessions: Vec<ClientSession<M>>,
+    pending: HashMap<u64, Pending<M>>,
+    driver: Box<dyn Driver>,
+    rng: Rng,
+    next_req: u64,
+    next_val: u64,
+    /// (key, val_id) of every write issued (final audit).
+    written: Vec<(Key, u64)>,
+    quorum: QuorumSpec,
+    /// Clients whose drivers returned `None` (retired).
+    retired: usize,
+}
+
+impl<M: Mechanism> Sim<M> {
+    /// Build a simulator: `mech` + config + client count + op driver.
+    pub fn new(
+        mech: M,
+        cfg: StoreConfig,
+        clients: usize,
+        stateful_clients: bool,
+        driver: Box<dyn Driver>,
+        seed: u64,
+    ) -> crate::Result<Sim<M>> {
+        cfg.validate()?;
+        let mut rng = Rng::new(seed);
+        let ring = Ring::new(cfg.cluster.nodes, cfg.cluster.vnodes)?;
+        let mut net = NetModel::new(cfg.net.clone(), rng.fork());
+        let nodes = (0..cfg.cluster.nodes)
+            .map(|_| SimNode { store: KeyStore::new(mech.clone()), up: true })
+            .collect();
+        let sessions = (0..clients)
+            .map(|i| {
+                let skew = net.draw_clock_skew(i);
+                ClientSession::new(Actor::client(i as u32), stateful_clients, skew)
+            })
+            .collect();
+        let quorum = QuorumSpec::new(
+            cfg.cluster.replication,
+            cfg.cluster.read_quorum,
+            cfg.cluster.write_quorum,
+        )?;
+        Ok(Sim {
+            mech,
+            ring,
+            nodes,
+            net,
+            queue: BinaryHeap::new(),
+            now: 0,
+            seq: 0,
+            metrics: Metrics::new(),
+            oracle: Oracle::new(),
+            sessions,
+            pending: HashMap::new(),
+            driver,
+            rng,
+            next_req: 0,
+            next_val: 1,
+            written: Vec::new(),
+            quorum,
+            retired: 0,
+            cfg,
+        })
+    }
+
+    /// Current simulated time (µs).
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn push(&mut self, at: u64, ev: Ev<M>) {
+        self.seq += 1;
+        self.queue.push(Reverse(Queued { at, seq: self.seq, ev }));
+    }
+
+    fn send(&mut self, from: NodeId, to: NodeId, msg: Msg<M>) {
+        self.metrics.messages += 1;
+        match self.net.delay(from, to) {
+            Some(d) => {
+                let at = self.now + d;
+                self.push(at, Ev::Deliver { to, msg });
+            }
+            None => self.metrics.dropped_messages += 1,
+        }
+    }
+
+    /// Kick off every client's first op and any periodic anti-entropy.
+    pub fn start(&mut self) {
+        for client in 0..self.sessions.len() {
+            self.schedule_next_op(client, 0);
+        }
+        if self.cfg.antientropy.period_us > 0 {
+            for node in 0..self.nodes.len() {
+                let jitter = self.rng.below(self.cfg.antientropy.period_us.max(1));
+                self.push(self.now + jitter, Ev::AeTick { node });
+            }
+        }
+    }
+
+    /// Inject a crash at simulated time `at`.
+    pub fn schedule_crash(&mut self, at: u64, node: NodeId) {
+        self.push(at, Ev::Crash { node });
+    }
+
+    /// Inject a recovery at simulated time `at`.
+    pub fn schedule_recover(&mut self, at: u64, node: NodeId) {
+        self.push(at, Ev::Recover { node });
+    }
+
+    /// Partition the cluster into two groups at `at`.
+    pub fn schedule_partition(&mut self, at: u64, left: Vec<NodeId>, right: Vec<NodeId>) {
+        self.push(at, Ev::PartitionGroups { left, right });
+    }
+
+    /// Heal all partitions at `at`.
+    pub fn schedule_heal(&mut self, at: u64) {
+        self.push(at, Ev::HealAll);
+    }
+
+    fn schedule_next_op(&mut self, client: usize, extra_delay: u64) {
+        if let Some(op) = self.driver.next_op(client, self.now, &mut self.rng) {
+            let at = self.now + extra_delay + op.think_us;
+            self.push(at, Ev::ClientIssue { client, op });
+        } else {
+            self.retired += 1;
+        }
+    }
+
+    /// All clients retired and no ops in flight — the run is effectively
+    /// over (periodic anti-entropy stops rescheduling so the queue can
+    /// drain).
+    fn workload_done(&self) -> bool {
+        self.retired >= self.sessions.len() && self.pending.is_empty()
+    }
+
+    /// Run until the event queue drains (all clients retired) or `max_us`
+    /// of virtual time passes.
+    pub fn run(&mut self, max_us: u64) {
+        while let Some(Reverse(q)) = self.queue.pop() {
+            if q.at > max_us {
+                break;
+            }
+            self.now = q.at;
+            self.dispatch(q.ev);
+        }
+        self.finalize_metrics();
+    }
+
+    fn dispatch(&mut self, ev: Ev<M>) {
+        match ev {
+            Ev::Deliver { to, msg } => {
+                if !self.nodes[to].up {
+                    return; // crashed nodes drop traffic
+                }
+                self.on_msg(to, msg);
+            }
+            Ev::ClientIssue { client, op } => self.issue(client, op),
+            Ev::ClientDone { client, req } => {
+                // reply reached the client; close the loop
+                let _ = req;
+                self.schedule_next_op(client, 0);
+            }
+            Ev::OpTimeout { req } => {
+                if let Some(p) = self.pending.remove(&req) {
+                    self.metrics.failed_ops += 1;
+                    let client = match p {
+                        Pending::Get { client, .. } => client,
+                        Pending::Put { client, .. } => client,
+                    };
+                    self.schedule_next_op(client, 0);
+                }
+            }
+            Ev::AeTick { node } => self.anti_entropy(node),
+            Ev::Crash { node } => self.nodes[node].up = false,
+            Ev::Recover { node } => self.nodes[node].up = true,
+            Ev::PartitionGroups { left, right } => {
+                self.net.partition_groups(&left, &right)
+            }
+            Ev::HealAll => self.net.heal_all(),
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // client op entry
+    // ---------------------------------------------------------------
+
+    fn issue(&mut self, client: usize, op: Op) {
+        let replicas = self.ring.replicas_for(op.key, self.quorum.n);
+        let live: Vec<NodeId> =
+            replicas.iter().copied().filter(|&n| self.nodes[n].up).collect();
+        let coordinator = if live.is_empty() {
+            None
+        } else if self.cfg.cluster.random_coordinator {
+            Some(live[self.rng.below(live.len() as u64) as usize])
+        } else {
+            Some(live[0])
+        };
+        let Some(coordinator) = coordinator else {
+            self.metrics.failed_ops += 1;
+            self.schedule_next_op(client, 1000);
+            return;
+        };
+        let req = self.next_req;
+        self.next_req += 1;
+        self.push(self.now + OP_TIMEOUT_US, Ev::OpTimeout { req });
+        let hop = self.net.client_delay();
+        match op.kind {
+            OpKind::Get => {
+                self.pending.insert(
+                    req,
+                    Pending::Get {
+                        client,
+                        key: op.key,
+                        op: GetOp::new(self.quorum),
+                        started: self.now,
+                        participants: replicas,
+                    },
+                );
+                self.push(
+                    self.now + hop,
+                    Ev::Deliver { to: coordinator, msg: Msg::GetClient { req, key: op.key } },
+                );
+            }
+            OpKind::Put { len } => {
+                let val = Val::new(self.next_val, len);
+                self.next_val += 1;
+                let session = &mut self.sessions[client];
+                let ctx = session.context_for(op.key);
+                let observed = session.observed_for(op.key);
+                let meta = WriteMeta {
+                    client: session.actor,
+                    physical_us: session.skewed_clock(self.now),
+                    client_seq: session.next_write_seq(op.key),
+                };
+                // ground truth is fixed at issue time by what the client saw
+                self.oracle.on_write(session.actor, op.key, val.id, &observed);
+                self.written.push((op.key, val.id));
+                self.pending.insert(
+                    req,
+                    Pending::Put {
+                        client,
+                        key: op.key,
+                        op: PutOp::new(self.quorum),
+                        started: self.now,
+                        val,
+                    },
+                );
+                self.push(
+                    self.now + hop,
+                    Ev::Deliver {
+                        to: coordinator,
+                        msg: Msg::PutClient { req, key: op.key, ctx, val, meta },
+                    },
+                );
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // node message handling
+    // ---------------------------------------------------------------
+
+    fn on_msg(&mut self, node: NodeId, msg: Msg<M>) {
+        match msg {
+            Msg::GetClient { req, key } => {
+                let Some(Pending::Get { participants, .. }) = self.pending.get(&req) else {
+                    return; // timed out
+                };
+                let participants = participants.clone();
+                for &replica in &participants {
+                    if replica == node {
+                        let state = self.nodes[node].store.state(key);
+                        self.on_get_reply(node, req, state);
+                    } else {
+                        self.send(node, replica, Msg::GetSub { req, key, from: node });
+                    }
+                }
+            }
+            Msg::GetSub { req, key, from } => {
+                let state = self.nodes[node].store.state(key);
+                self.send(node, from, Msg::GetSubResp { req, state });
+            }
+            Msg::GetSubResp { req, state } => self.on_get_reply(node, req, state),
+            Msg::PutClient { req, key, ctx, val, meta } => {
+                // §4.1 put steps 2–3: update + local sync at the coordinator
+                self.store_write(node, key, &ctx, val, &meta);
+                let state = self.nodes[node].store.state(key);
+                let replicas = self.ring.replicas_for(key, self.quorum.n);
+                let Some(Pending::Put { op, client, started, .. }) =
+                    self.pending.get_mut(&req)
+                else {
+                    return;
+                };
+                let (client, started) = (*client, *started);
+                if op.satisfied_immediately() {
+                    self.complete_put(req, client, key, started, val);
+                }
+                for replica in replicas {
+                    if replica != node {
+                        self.send(
+                            node,
+                            replica,
+                            Msg::Replicate { req, key, state: state.clone(), from: node },
+                        );
+                    }
+                }
+            }
+            Msg::Replicate { req, key, state, from } => {
+                self.store_merge(node, key, &state);
+                self.send(node, from, Msg::ReplicateAck { req });
+            }
+            Msg::ReplicateAck { req } => {
+                let Some(Pending::Put { op, client, key, started, val }) =
+                    self.pending.get_mut(&req)
+                else {
+                    return;
+                };
+                let (client, key, started, val) = (*client, *key, *started, *val);
+                if op.on_ack() {
+                    self.complete_put(req, client, key, started, val);
+                }
+            }
+            Msg::StatePush { key, state } => {
+                self.store_merge(node, key, &state);
+            }
+            Msg::AePull { keys, from } => {
+                let states: Vec<(Key, M::State)> = keys
+                    .iter()
+                    .map(|&k| (k, self.nodes[node].store.state(k)))
+                    .collect();
+                self.send(node, from, Msg::AePush { states });
+            }
+            Msg::AePush { states } => {
+                self.metrics.ae_keys_synced += states.len() as u64;
+                for (key, state) in states {
+                    self.store_merge(node, key, &state);
+                }
+            }
+        }
+    }
+
+    fn on_get_reply(&mut self, coordinator: NodeId, req: u64, state: M::State) {
+        let Some(Pending::Get { op, client, key, started, participants, .. }) =
+            self.pending.get_mut(&req)
+        else {
+            return;
+        };
+        let (client, key, started) = (*client, *key, *started);
+        let participants = participants.clone();
+        let answer = op.on_reply(&self.mech, &state);
+        let all_in = op.replies() == participants.len();
+        let repair_state = if all_in { Some(op.merged().clone()) } else { None };
+
+        if let Some(res) = answer {
+            // answer the client
+            let ids: Vec<u64> = res.values.iter().map(|v| v.id).collect();
+            let (fc, tc) = self.oracle.classify_siblings(&ids);
+            self.metrics.false_concurrent_pairs += fc;
+            self.metrics.true_concurrent_pairs += tc;
+            self.metrics.max_siblings = self.metrics.max_siblings.max(ids.len());
+            self.metrics.context_bytes += self.mech.context_bytes(&res.context) as u64;
+            self.sessions[client].on_get(key, res.context, ids);
+            self.metrics.gets += 1;
+            self.metrics.get_latency.record(self.now - started);
+            let hop = self.net.client_delay();
+            self.push(self.now + hop, Ev::ClientDone { client, req });
+        }
+        if let Some(merged) = repair_state {
+            // read repair: push the reduced state back to all replicas
+            self.pending.remove(&req);
+            for replica in participants {
+                if replica == coordinator {
+                    self.store_merge(coordinator, key, &merged);
+                } else {
+                    self.send(
+                        coordinator,
+                        replica,
+                        Msg::StatePush { key, state: merged.clone() },
+                    );
+                }
+            }
+        }
+    }
+
+    fn complete_put(&mut self, req: u64, client: usize, key: Key, started: u64, val: Val) {
+        self.metrics.puts += 1;
+        self.metrics.put_latency.record(self.now - started);
+        self.sessions[client].on_put_complete(key, val.id);
+        let hop = self.net.client_delay();
+        self.push(self.now + hop, Ev::ClientDone { client, req });
+        // leave the Pending entry for late acks only if W < N; timeout
+        // cleans it up. Simpler: drop it now — late acks are ignored.
+        self.pending.remove(&req);
+    }
+
+    // ---------------------------------------------------------------
+    // store mutation with oracle-checked anomaly accounting
+    // ---------------------------------------------------------------
+
+    fn store_write(&mut self, node: NodeId, key: Key, ctx: &M::Context, val: Val, meta: &WriteMeta) {
+        let before: Vec<u64> =
+            self.nodes[node].store.values(key).iter().map(|v| v.id).collect();
+        self.nodes[node].store.write(key, ctx, val, Actor::server(node as u32), meta);
+        self.account_drops(node, key, &before);
+    }
+
+    fn store_merge(&mut self, node: NodeId, key: Key, incoming: &M::State) {
+        let before: Vec<u64> =
+            self.nodes[node].store.values(key).iter().map(|v| v.id).collect();
+        self.nodes[node].store.merge_key(key, incoming);
+        self.account_drops(node, key, &before);
+    }
+
+    fn account_drops(&mut self, node: NodeId, key: Key, before: &[u64]) {
+        let after: Vec<u64> =
+            self.nodes[node].store.values(key).iter().map(|v| v.id).collect();
+        self.metrics.max_siblings = self.metrics.max_siblings.max(after.len());
+        for &dropped in before.iter().filter(|id| !after.contains(id)) {
+            match self.oracle.classify_drop(dropped, &after) {
+                DropVerdict::CorrectSupersession => self.metrics.correct_supersessions += 1,
+                DropVerdict::LostUpdate => self.metrics.lost_updates += 1,
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // anti-entropy
+    // ---------------------------------------------------------------
+
+    fn anti_entropy(&mut self, node: NodeId) {
+        let period = self.cfg.antientropy.period_us;
+        if period == 0 || self.workload_done() {
+            return;
+        }
+        // reschedule first so crashes don't cancel the timer forever
+        let jitter = self.rng.below(period / 4 + 1);
+        self.push(self.now + period + jitter, Ev::AeTick { node });
+        if !self.nodes[node].up || self.nodes.len() < 2 {
+            return;
+        }
+        // pick a random live peer
+        let mut peer = self.rng.below(self.nodes.len() as u64 - 1) as usize;
+        if peer >= node {
+            peer += 1;
+        }
+        if !self.nodes[peer].up {
+            return;
+        }
+        self.metrics.ae_rounds += 1;
+        // push all local key states to the peer, and pull its copies back
+        let keys: Vec<Key> = self.nodes[node].store.keys().collect();
+        let states: Vec<(Key, M::State)> = keys
+            .iter()
+            .map(|&k| (k, self.nodes[node].store.state(k)))
+            .collect();
+        self.metrics.ae_keys_synced += states.len() as u64;
+        self.send(node, peer, Msg::AePush { states });
+        self.send(node, peer, Msg::AePull { keys, from: node });
+    }
+
+    // ---------------------------------------------------------------
+    // final accounting
+    // ---------------------------------------------------------------
+
+    fn finalize_metrics(&mut self) {
+        self.metrics.metadata_bytes =
+            self.nodes.iter().map(|n| n.store.metadata_bytes()).sum();
+    }
+
+    /// Post-run audit: a written value is **permanently lost** when no
+    /// surviving value anywhere causally covers it (E6's headline number).
+    pub fn audit_permanently_lost(&self) -> u64 {
+        let mut survivors: HashMap<Key, Vec<u64>> = HashMap::new();
+        for n in &self.nodes {
+            for key in n.store.keys() {
+                let entry = survivors.entry(key).or_default();
+                for v in n.store.values(key) {
+                    if !entry.contains(&v.id) {
+                        entry.push(v.id);
+                    }
+                }
+            }
+        }
+        let empty = Vec::new();
+        self.written
+            .iter()
+            .filter(|(key, id)| {
+                let surv = survivors.get(key).unwrap_or(&empty);
+                !surv.iter().any(|&s| s == *id || self.oracle.leq(*id, s))
+            })
+            .count() as u64
+    }
+
+    /// Total writes issued during the run.
+    pub fn writes_issued(&self) -> u64 {
+        self.written.len() as u64
+    }
+
+    /// Force-merge every node pairwise until quiescent (test helper that
+    /// models "eventual" delivery after the run).
+    pub fn settle(&mut self) {
+        for _ in 0..self.nodes.len() {
+            for a in 0..self.nodes.len() {
+                for b in 0..self.nodes.len() {
+                    if a == b || !self.nodes[a].up || !self.nodes[b].up {
+                        continue;
+                    }
+                    let keys: Vec<Key> = self.nodes[a].store.keys().collect();
+                    for key in keys {
+                        let st = self.nodes[a].store.state(key);
+                        self.store_merge(b, key, &st);
+                    }
+                }
+            }
+        }
+        self.finalize_metrics();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::mechs::{DvvMech, LwwMech, ServerVvMech};
+    use crate::workload::{RandomWorkload, WorkloadSpec};
+
+    fn cfg(nodes: usize, n: usize, r: usize, w: usize) -> StoreConfig {
+        let mut c = StoreConfig::default();
+        c.cluster.nodes = nodes;
+        c.cluster.replication = n;
+        c.cluster.read_quorum = r;
+        c.cluster.write_quorum = w;
+        c
+    }
+
+    fn small_workload(clients: usize, ops: u64) -> Box<RandomWorkload> {
+        Box::new(RandomWorkload::new(
+            WorkloadSpec {
+                keys: 20,
+                ops_per_client: ops,
+                put_fraction: 0.6,
+                read_before_write: 0.6,
+                mean_think_us: 500.0,
+                ..Default::default()
+            },
+            clients,
+        ))
+    }
+
+    #[test]
+    fn dvv_run_completes_without_lost_updates() {
+        let mut sim = Sim::new(
+            DvvMech,
+            cfg(5, 3, 2, 2),
+            8,
+            true,
+            small_workload(8, 40),
+            42,
+        )
+        .unwrap();
+        sim.start();
+        sim.run(u64::MAX);
+        assert!(sim.metrics.ops() > 200, "{}", sim.metrics.summary());
+        assert_eq!(sim.metrics.failed_ops, 0);
+        assert_eq!(sim.metrics.lost_updates, 0, "{}", sim.metrics.summary());
+        sim.settle();
+        assert_eq!(sim.audit_permanently_lost(), 0);
+    }
+
+    #[test]
+    fn lww_run_loses_concurrent_updates() {
+        let mut sim = Sim::new(
+            LwwMech,
+            cfg(5, 3, 2, 2),
+            8,
+            true,
+            small_workload(8, 40),
+            42,
+        )
+        .unwrap();
+        sim.start();
+        sim.run(u64::MAX);
+        sim.settle();
+        assert!(
+            sim.audit_permanently_lost() > 0,
+            "LWW must lose concurrent updates: {}",
+            sim.metrics.summary()
+        );
+    }
+
+    #[test]
+    fn server_vv_loses_same_server_concurrency() {
+        // plenty of blind writes to few keys: §3.2's anomaly shows up
+        let wl = Box::new(RandomWorkload::new(
+            WorkloadSpec {
+                keys: 4,
+                ops_per_client: 40,
+                put_fraction: 0.9,
+                read_before_write: 0.1,
+                mean_think_us: 200.0,
+                ..Default::default()
+            },
+            8,
+        ));
+        let mut sim = Sim::new(ServerVvMech, cfg(4, 2, 1, 1), 8, true, wl, 7).unwrap();
+        sim.start();
+        sim.run(u64::MAX);
+        sim.settle();
+        assert!(
+            sim.audit_permanently_lost() > 0,
+            "server-VV must linearize same-server concurrency: {}",
+            sim.metrics.summary()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut sim = Sim::new(
+                DvvMech,
+                cfg(4, 3, 2, 2),
+                4,
+                true,
+                small_workload(4, 20),
+                seed,
+            )
+            .unwrap();
+            sim.start();
+            sim.run(u64::MAX);
+            (sim.metrics.ops(), sim.metrics.messages, sim.now())
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+
+    #[test]
+    fn crash_and_recover_failover() {
+        let mut sim = Sim::new(
+            DvvMech,
+            cfg(4, 3, 2, 2),
+            4,
+            true,
+            small_workload(4, 30),
+            11,
+        )
+        .unwrap();
+        sim.schedule_crash(1_000, 0);
+        sim.schedule_recover(400_000, 0);
+        sim.start();
+        sim.run(u64::MAX);
+        // ops still complete (failover to other replicas); no data loss
+        assert!(sim.metrics.ops() > 50, "{}", sim.metrics.summary());
+        sim.settle();
+        assert_eq!(sim.audit_permanently_lost(), 0, "{}", sim.metrics.summary());
+    }
+
+    #[test]
+    fn partition_with_antientropy_converges() {
+        let mut c = cfg(4, 2, 1, 1);
+        c.antientropy.period_us = 20_000;
+        let mut sim = Sim::new(DvvMech, c, 4, true, small_workload(4, 25), 13).unwrap();
+        sim.schedule_partition(5_000, vec![0, 1], vec![2, 3]);
+        sim.schedule_heal(150_000);
+        sim.start();
+        sim.run(2_000_000);
+        sim.settle();
+        assert!(sim.metrics.ae_rounds > 0);
+        assert_eq!(sim.audit_permanently_lost(), 0, "{}", sim.metrics.summary());
+    }
+
+    #[test]
+    fn metadata_sampled_at_finish() {
+        let mut sim = Sim::new(
+            DvvMech,
+            cfg(3, 3, 2, 2),
+            4,
+            true,
+            small_workload(4, 10),
+            17,
+        )
+        .unwrap();
+        sim.start();
+        sim.run(u64::MAX);
+        assert!(sim.metrics.metadata_bytes > 0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Per-node versioned key store, generic over the causality mechanism.
+//!
+//! Each replica node owns one [`KeyStore`]: a map from keys to the
+//! mechanism's per-key state (sibling versions + clocks). All mutation
+//! funnels through [`KeyStore::write`] and [`KeyStore::merge_key`] so the
+//! §4 kernel semantics are applied uniformly no matter where the mutation
+//! came from (client PUT, replication fan-out, read repair, anti-entropy).
+
+use std::collections::HashMap;
+
+use crate::clocks::Actor;
+use crate::kernel::{Mechanism, Val, WriteMeta};
+
+/// Key identifier. The simulator and benches use dense numeric keys; the
+/// TCP server hashes string keys into this space (see `server::protocol`).
+pub type Key = u64;
+
+/// A node-local versioned store.
+#[derive(Debug, Clone)]
+pub struct KeyStore<M: Mechanism> {
+    mech: M,
+    map: HashMap<Key, M::State>,
+}
+
+impl<M: Mechanism> KeyStore<M> {
+    /// Empty store for a mechanism instance.
+    pub fn new(mech: M) -> KeyStore<M> {
+        KeyStore { mech, map: HashMap::new() }
+    }
+
+    /// The mechanism instance.
+    pub fn mech(&self) -> &M {
+        &self.mech
+    }
+
+    /// GET: current values + context (empty state when the key is absent).
+    pub fn read(&self, key: Key) -> (Vec<Val>, M::Context) {
+        match self.map.get(&key) {
+            Some(st) => self.mech.read(st),
+            None => self.mech.read(&M::State::default()),
+        }
+    }
+
+    /// PUT at this node acting as coordinator `coord`.
+    pub fn write(&mut self, key: Key, ctx: &M::Context, val: Val, coord: Actor, meta: &WriteMeta) {
+        let st = self.map.entry(key).or_default();
+        self.mech.write(st, ctx, val, coord, meta);
+    }
+
+    /// Merge an incoming replica state for `key` (replication/anti-entropy/
+    /// read repair).
+    pub fn merge_key(&mut self, key: Key, incoming: &M::State) {
+        let st = self.map.entry(key).or_default();
+        self.mech.merge(st, incoming);
+    }
+
+    /// Clone of the state for `key` (empty default when absent) — what a
+    /// replica ships to a coordinator or peer.
+    pub fn state(&self, key: Key) -> M::State {
+        self.map.get(&key).cloned().unwrap_or_default()
+    }
+
+    /// Reference to the state if present.
+    pub fn state_ref(&self, key: Key) -> Option<&M::State> {
+        self.map.get(&key)
+    }
+
+    /// Live values for `key`.
+    pub fn values(&self, key: Key) -> Vec<Val> {
+        self.map.get(&key).map(|st| self.mech.values(st)).unwrap_or_default()
+    }
+
+    /// Number of keys stored.
+    pub fn key_count(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Iterate stored keys.
+    pub fn keys(&self) -> impl Iterator<Item = Key> + '_ {
+        self.map.keys().copied()
+    }
+
+    /// Total causality-metadata bytes across keys (E7).
+    pub fn metadata_bytes(&self) -> u64 {
+        self.map.values().map(|st| self.mech.metadata_bytes(st) as u64).sum()
+    }
+
+    /// Largest sibling set currently stored.
+    pub fn max_siblings(&self) -> usize {
+        self.map
+            .values()
+            .map(|st| self.mech.sibling_count(st))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sibling count for one key.
+    pub fn sibling_count(&self, key: Key) -> usize {
+        self.map.get(&key).map(|st| self.mech.sibling_count(st)).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::mechs::DvvMech;
+
+    fn store() -> KeyStore<DvvMech> {
+        KeyStore::new(DvvMech)
+    }
+    fn coord() -> Actor {
+        Actor::server(0)
+    }
+    fn meta() -> WriteMeta {
+        WriteMeta::basic(Actor::client(0))
+    }
+
+    #[test]
+    fn read_missing_key_is_empty() {
+        let s = store();
+        let (vals, _ctx) = s.read(42);
+        assert!(vals.is_empty());
+        assert_eq!(s.sibling_count(42), 0);
+    }
+
+    #[test]
+    fn write_then_read() {
+        let mut s = store();
+        let (_, ctx) = s.read(1);
+        s.write(1, &ctx, Val::new(10, 4), coord(), &meta());
+        let (vals, _) = s.read(1);
+        assert_eq!(vals, vec![Val::new(10, 4)]);
+        assert_eq!(s.key_count(), 1);
+    }
+
+    #[test]
+    fn blind_writes_accumulate_siblings() {
+        let mut s = store();
+        let empty = s.read(1).1;
+        s.write(1, &empty, Val::new(1, 0), coord(), &meta());
+        s.write(1, &empty, Val::new(2, 0), coord(), &meta());
+        assert_eq!(s.sibling_count(1), 2);
+        assert_eq!(s.max_siblings(), 2);
+    }
+
+    #[test]
+    fn merge_key_converges_two_stores() {
+        let mut s1 = store();
+        let mut s2 = store();
+        let empty = s1.read(1).1;
+        s1.write(1, &empty, Val::new(1, 0), Actor::server(0), &meta());
+        s2.write(1, &empty, Val::new(2, 0), Actor::server(1), &meta());
+        let st2 = s2.state(1);
+        s1.merge_key(1, &st2);
+        let st1 = s1.state(1);
+        s2.merge_key(1, &st1);
+        let (mut v1, mut v2) = (s1.values(1), s2.values(1));
+        v1.sort();
+        v2.sort();
+        assert_eq!(v1, v2);
+        assert_eq!(v1.len(), 2);
+    }
+
+    #[test]
+    fn metadata_accounting_sums_keys() {
+        let mut s = store();
+        for k in 0..10 {
+            let (_, ctx) = s.read(k);
+            s.write(k, &ctx, Val::new(k, 0), coord(), &meta());
+        }
+        assert!(s.metadata_bytes() > 0);
+        assert_eq!(s.keys().count(), 10);
+    }
+}

@@ -1,0 +1,17 @@
+//! Test + simulation support substrates.
+//!
+//! The offline build environment carries no `rand` or `proptest`, so this
+//! module provides the two pieces the rest of the crate needs:
+//!
+//! * [`rng`] — a deterministic, seedable PRNG (splitmix64-seeded
+//!   xoshiro256++) with the distribution helpers the simulator and
+//!   workload generators use.
+//! * [`prop`] — a small property-based testing harness: sized generators,
+//!   seed-reporting on failure, and greedy shrinking for the common
+//!   container shapes.
+
+pub mod prop;
+pub mod rng;
+
+pub use prop::{forall, Config as PropConfig, Gen};
+pub use rng::Rng;

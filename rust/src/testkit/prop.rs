@@ -1,0 +1,352 @@
+//! Minimal property-based testing harness (in-tree `proptest` substitute).
+//!
+//! Capabilities:
+//!
+//! * **Sized generation** — generators receive a `size` hint that grows
+//!   over the run, so early cases are small and late cases stress larger
+//!   structures.
+//! * **Seed reporting + replay** — a failing case prints its seed; set
+//!   `DVV_PROP_SEED` to replay exactly that case.
+//! * **Greedy shrinking** — on failure the harness asks the generator for
+//!   simpler variants of the failing value (via [`Gen::shrink`]) and
+//!   recurses while the property keeps failing.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't get the xla rpath link flags)
+//! use dvvstore::testkit::prop::{forall, Config, ints, vecs};
+//!
+//! forall(&Config::default().cases(64), vecs(ints(0, 100), 0, 16), |v| {
+//!     let mut s = v.clone();
+//!     s.sort_unstable();
+//!     s.windows(2).all(|w| w[0] <= w[1])
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// A sized, shrinkable value generator.
+pub trait Gen {
+    /// Generated value type.
+    type Value: Clone + std::fmt::Debug;
+
+    /// Produce a value; `size` in `[0, 100]` scales structure sizes.
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Value;
+
+    /// Candidate simplifications of a failing value, simplest first.
+    /// Default: no shrinking.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; each case derives its own stream from it.
+    pub seed: u64,
+    /// Cap on shrinking iterations.
+    pub max_shrinks: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("DVV_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED_CAFE);
+        Config { cases: 100, seed, max_shrinks: 400 }
+    }
+}
+
+impl Config {
+    /// Override the number of cases.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Override the base seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` against `cases` generated values; panic with a minimal
+/// counterexample (plus replay seed) on failure.
+pub fn forall<G, F>(cfg: &Config, gen: G, mut prop: F)
+where
+    G: Gen,
+    F: FnMut(&G::Value) -> bool,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let size = 1 + (case * 100) / cfg.cases.max(1);
+        let value = gen.generate(&mut rng, size);
+        if !prop(&value) {
+            let minimal = shrink_loop(&gen, value, &mut prop, cfg.max_shrinks);
+            panic!(
+                "property failed (case {case}, replay with DVV_PROP_SEED={}):\n  \
+                 counterexample = {minimal:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+fn shrink_loop<G, F>(gen: &G, mut value: G::Value, prop: &mut F, budget: usize) -> G::Value
+where
+    G: Gen,
+    F: FnMut(&G::Value) -> bool,
+{
+    let mut spent = 0;
+    'outer: while spent < budget {
+        for candidate in gen.shrink(&value) {
+            spent += 1;
+            if !prop(&candidate) {
+                value = candidate;
+                continue 'outer;
+            }
+            if spent >= budget {
+                break;
+            }
+        }
+        break;
+    }
+    value
+}
+
+// ---------------------------------------------------------------------------
+// Combinators
+// ---------------------------------------------------------------------------
+
+/// Uniform `i64` in `[lo, hi]`, shrinking toward `lo` (and toward 0 when in
+/// range).
+pub fn ints(lo: i64, hi: i64) -> IntGen {
+    IntGen { lo, hi }
+}
+
+/// See [`ints`].
+#[derive(Clone)]
+pub struct IntGen {
+    lo: i64,
+    hi: i64,
+}
+
+impl Gen for IntGen {
+    type Value = i64;
+
+    fn generate(&self, rng: &mut Rng, _size: usize) -> i64 {
+        self.lo + rng.below((self.hi - self.lo + 1) as u64) as i64
+    }
+
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        let anchor = if self.lo <= 0 && 0 <= self.hi { 0 } else { self.lo };
+        if *v != anchor {
+            out.push(anchor);
+            let mid = anchor + (v - anchor) / 2;
+            if mid != *v && mid != anchor {
+                out.push(mid);
+            }
+            if (v - anchor).abs() == 1 {
+                // already adjacent
+            } else {
+                out.push(v - (v - anchor).signum());
+            }
+        }
+        out
+    }
+}
+
+/// Vector of values from `inner`, with length in `[min_len, max_len]`
+/// (scaled by the size hint). Shrinks by removing elements, then by
+/// shrinking individual elements.
+pub fn vecs<G: Gen + Clone>(inner: G, min_len: usize, max_len: usize) -> VecGen<G> {
+    VecGen { inner, min_len, max_len }
+}
+
+/// See [`vecs`].
+#[derive(Clone)]
+pub struct VecGen<G> {
+    inner: G,
+    min_len: usize,
+    max_len: usize,
+}
+
+impl<G: Gen + Clone> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+
+    fn generate(&self, rng: &mut Rng, size: usize) -> Vec<G::Value> {
+        let span = self.max_len - self.min_len;
+        let scaled_max = self.min_len + (span * size.min(100)) / 100;
+        let len = rng.range(self.min_len, scaled_max.max(self.min_len));
+        (0..len).map(|_| self.inner.generate(rng, size)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        // drop halves, then single elements
+        if v.len() > self.min_len {
+            let half = v.len() / 2;
+            if half >= self.min_len {
+                out.push(v[..half].to_vec());
+            }
+            for i in 0..v.len() {
+                let mut c = v.clone();
+                c.remove(i);
+                if c.len() >= self.min_len {
+                    out.push(c);
+                }
+            }
+        }
+        // shrink one element at a time
+        for i in 0..v.len() {
+            for candidate in self.inner.shrink(&v[i]) {
+                let mut c = v.clone();
+                c[i] = candidate;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub fn pairs<A: Gen + Clone, B: Gen + Clone>(a: A, b: B) -> PairGen<A, B> {
+    PairGen { a, b }
+}
+
+/// See [`pairs`].
+#[derive(Clone)]
+pub struct PairGen<A, B> {
+    a: A,
+    b: B,
+}
+
+impl<A: Gen + Clone, B: Gen + Clone> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Value {
+        (self.a.generate(rng, size), self.b.generate(rng, size))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .a
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.b.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Generator from a plain function (no shrinking).
+pub fn from_fn<T, F>(f: F) -> FnGen<F>
+where
+    T: Clone + std::fmt::Debug,
+    F: Fn(&mut Rng, usize) -> T,
+{
+    FnGen { f }
+}
+
+/// See [`from_fn`].
+#[derive(Clone)]
+pub struct FnGen<F> {
+    f: F,
+}
+
+impl<T, F> Gen for FnGen<F>
+where
+    T: Clone + std::fmt::Debug,
+    F: Fn(&mut Rng, usize) -> T,
+{
+    type Value = T;
+
+    fn generate(&self, rng: &mut Rng, size: usize) -> T {
+        (self.f)(rng, size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(&Config::default().cases(50), ints(0, 10), |v| (0..=10).contains(v));
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        forall(&Config::default().cases(200), ints(0, 1000), |v| *v < 900);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let result = std::panic::catch_unwind(|| {
+            forall(&Config::default().cases(200), ints(0, 100_000), |v| *v < 500);
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // greedy shrink should land near the boundary, far below the max
+        let n: i64 = msg
+            .rsplit("counterexample = ")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!((500..2000).contains(&n), "shrunk to {n}; msg={msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        forall(&Config::default().cases(100), vecs(ints(-5, 5), 2, 9), |v| {
+            (2..=9).contains(&v.len()) && v.iter().all(|x| (-5..=5).contains(x))
+        });
+    }
+
+    #[test]
+    fn sized_generation_grows() {
+        let g = vecs(ints(0, 1), 0, 100);
+        let mut rng = Rng::new(1);
+        let small = g.generate(&mut rng, 1);
+        let mut rng = Rng::new(1);
+        let large = g.generate(&mut rng, 100);
+        assert!(small.len() <= large.len());
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = pairs(ints(0, 10), ints(0, 10));
+        let shrinks = g.shrink(&(5, 7));
+        assert!(shrinks.iter().any(|(a, _)| *a < 5));
+        assert!(shrinks.iter().any(|(_, b)| *b < 7));
+    }
+
+    #[test]
+    fn replay_seed_reproduces_values() {
+        let g = ints(0, 1_000_000);
+        let cfg = Config::default().seed(1234).cases(10);
+        let mut first = Vec::new();
+        forall(&cfg, g.clone(), |v| {
+            first.push(*v);
+            true
+        });
+        let mut second = Vec::new();
+        forall(&cfg, g, |v| {
+            second.push(*v);
+            true
+        });
+        assert_eq!(first, second);
+    }
+}

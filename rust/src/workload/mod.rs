@@ -1,0 +1,237 @@
+//! Workload generation: the op streams that drive the simulator.
+//!
+//! * [`Driver`] — closed-loop op source: after each completed op the
+//!   simulator asks the client's driver for its next op.
+//! * [`RandomWorkload`] — the E6/E9 generator: zipfian key choice, tunable
+//!   read/write mix, read-before-write probability (blind writes are what
+//!   concurrency anomalies feed on), and per-client think time.
+//! * [`ScriptDriver`] — fixed op lists (figure replays, targeted tests).
+//! * [`zipf`] — the zipfian sampler.
+
+pub mod zipf;
+
+use crate::store::Key;
+use crate::testkit::Rng;
+
+/// One client operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Op {
+    /// Target key.
+    pub key: Key,
+    /// GET or PUT.
+    pub kind: OpKind,
+    /// Think time before the op is issued (µs).
+    pub think_us: u64,
+}
+
+/// Operation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Read current siblings + context.
+    Get,
+    /// Write a payload of the given size.
+    Put {
+        /// Payload bytes.
+        len: u32,
+    },
+}
+
+/// A closed-loop op source. The simulator calls `next_op` when a client
+/// becomes idle; `None` retires the client.
+pub trait Driver {
+    /// Next op for `client`, or `None` when done.
+    fn next_op(&mut self, client: usize, now_us: u64, rng: &mut Rng) -> Option<Op>;
+}
+
+/// Parameters for the randomized concurrent workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Distinct keys.
+    pub keys: u64,
+    /// Zipf skew (0.0 = uniform; 0.99 = YCSB-hot).
+    pub zipf_theta: f64,
+    /// Fraction of ops that are PUTs.
+    pub put_fraction: f64,
+    /// Probability a PUT is preceded by a GET of the same key (informed
+    /// write). Blind writes (the complement) create same-server
+    /// concurrency — the §3.2/§5.2 scenario.
+    pub read_before_write: f64,
+    /// Mean think time between a client's ops (µs, exponential).
+    pub mean_think_us: f64,
+    /// Ops issued per client before it retires.
+    pub ops_per_client: u64,
+    /// Payload bytes per PUT.
+    pub value_len: u32,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            keys: 100,
+            zipf_theta: 0.9,
+            put_fraction: 0.5,
+            read_before_write: 0.5,
+            mean_think_us: 1_000.0,
+            ops_per_client: 100,
+            value_len: 64,
+        }
+    }
+}
+
+/// Per-client issued-op accounting + pending informed-write chain.
+#[derive(Debug, Clone, Default)]
+struct ClientCursor {
+    issued: u64,
+    /// When an informed write is chosen, the GET is issued first and the
+    /// PUT to the same key follows immediately after.
+    pending_put: Option<Key>,
+}
+
+/// The randomized concurrent workload (E6/E9).
+#[derive(Debug, Clone)]
+pub struct RandomWorkload {
+    spec: WorkloadSpec,
+    zipf: zipf::Zipf,
+    cursors: Vec<ClientCursor>,
+}
+
+impl RandomWorkload {
+    /// Build for `clients` concurrent clients.
+    pub fn new(spec: WorkloadSpec, clients: usize) -> RandomWorkload {
+        let zipf = zipf::Zipf::new(spec.keys, spec.zipf_theta);
+        RandomWorkload { spec, zipf, cursors: vec![ClientCursor::default(); clients] }
+    }
+
+    fn think(&self, rng: &mut Rng) -> u64 {
+        rng.exponential(self.spec.mean_think_us).max(1.0) as u64
+    }
+}
+
+impl Driver for RandomWorkload {
+    fn next_op(&mut self, client: usize, _now_us: u64, rng: &mut Rng) -> Option<Op> {
+        let think = self.think(rng);
+        let spec_len = self.spec.value_len;
+        let cur = &mut self.cursors[client];
+        // an informed write's PUT half is issued immediately (no think)
+        if let Some(key) = cur.pending_put.take() {
+            cur.issued += 1;
+            return Some(Op { key, kind: OpKind::Put { len: spec_len }, think_us: 1 });
+        }
+        if cur.issued >= self.spec.ops_per_client {
+            return None;
+        }
+        let key = self.zipf.sample(rng);
+        if rng.chance(self.spec.put_fraction) {
+            if rng.chance(self.spec.read_before_write) {
+                // informed write: GET now, PUT chained next
+                cur.issued += 1;
+                cur.pending_put = Some(key);
+                Some(Op { key, kind: OpKind::Get, think_us: think })
+            } else {
+                // blind write
+                cur.issued += 1;
+                Some(Op { key, kind: OpKind::Put { len: spec_len }, think_us: think })
+            }
+        } else {
+            cur.issued += 1;
+            Some(Op { key, kind: OpKind::Get, think_us: think })
+        }
+    }
+}
+
+/// Fixed per-client scripts (figure replays and targeted tests).
+#[derive(Debug, Clone)]
+pub struct ScriptDriver {
+    scripts: Vec<std::collections::VecDeque<Op>>,
+}
+
+impl ScriptDriver {
+    /// One op list per client.
+    pub fn new(scripts: Vec<Vec<Op>>) -> ScriptDriver {
+        ScriptDriver { scripts: scripts.into_iter().map(Into::into).collect() }
+    }
+}
+
+impl Driver for ScriptDriver {
+    fn next_op(&mut self, client: usize, _now_us: u64, _rng: &mut Rng) -> Option<Op> {
+        self.scripts.get_mut(client)?.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_workload_respects_op_budget() {
+        let spec = WorkloadSpec { ops_per_client: 10, ..Default::default() };
+        let mut w = RandomWorkload::new(spec, 2);
+        let mut rng = Rng::new(1);
+        let mut count = 0;
+        while w.next_op(0, 0, &mut rng).is_some() {
+            count += 1;
+            assert!(count < 50, "runaway");
+        }
+        // informed writes chain one extra PUT after the budgeted GET
+        assert!((10..=20).contains(&count), "count={count}");
+        // client 1 untouched
+        assert!(w.next_op(1, 0, &mut rng).is_some());
+    }
+
+    #[test]
+    fn informed_write_chains_get_then_put() {
+        let spec = WorkloadSpec {
+            put_fraction: 1.0,
+            read_before_write: 1.0,
+            ops_per_client: 3,
+            ..Default::default()
+        };
+        let mut w = RandomWorkload::new(spec, 1);
+        let mut rng = Rng::new(2);
+        let first = w.next_op(0, 0, &mut rng).unwrap();
+        assert_eq!(first.kind, OpKind::Get);
+        let second = w.next_op(0, 0, &mut rng).unwrap();
+        assert!(matches!(second.kind, OpKind::Put { .. }));
+        assert_eq!(second.key, first.key, "PUT follows its GET's key");
+    }
+
+    #[test]
+    fn blind_write_mode_issues_puts_directly() {
+        let spec = WorkloadSpec {
+            put_fraction: 1.0,
+            read_before_write: 0.0,
+            ops_per_client: 5,
+            ..Default::default()
+        };
+        let mut w = RandomWorkload::new(spec, 1);
+        let mut rng = Rng::new(3);
+        for _ in 0..5 {
+            let op = w.next_op(0, 0, &mut rng).unwrap();
+            assert!(matches!(op.kind, OpKind::Put { .. }));
+        }
+        assert!(w.next_op(0, 0, &mut rng).is_none());
+    }
+
+    #[test]
+    fn script_driver_plays_in_order() {
+        let ops = vec![
+            Op { key: 1, kind: OpKind::Get, think_us: 5 },
+            Op { key: 1, kind: OpKind::Put { len: 8 }, think_us: 5 },
+        ];
+        let mut d = ScriptDriver::new(vec![ops.clone()]);
+        let mut rng = Rng::new(4);
+        assert_eq!(d.next_op(0, 0, &mut rng), Some(ops[0].clone()));
+        assert_eq!(d.next_op(0, 0, &mut rng), Some(ops[1].clone()));
+        assert_eq!(d.next_op(0, 0, &mut rng), None);
+    }
+
+    #[test]
+    fn keys_stay_in_range() {
+        let spec = WorkloadSpec { keys: 10, ops_per_client: 50, ..Default::default() };
+        let mut w = RandomWorkload::new(spec, 1);
+        let mut rng = Rng::new(5);
+        while let Some(op) = w.next_op(0, 0, &mut rng) {
+            assert!(op.key < 10);
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Zipfian key sampler (YCSB-style), rejection-free via the standard
+//! Gray et al. "quick and portable" incremental method.
+
+use crate::testkit::Rng;
+
+/// Zipf distribution over `0..n` with skew `theta` (0 = uniform).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipf {
+    /// Precompute constants for `n` items with skew `theta`.
+    pub fn new(n: u64, theta: f64) -> Zipf {
+        assert!(n > 0, "zipf needs n > 0");
+        if theta <= 0.0 {
+            return Zipf { n, theta: 0.0, alpha: 0.0, zetan: 0.0, eta: 0.0, zeta2: 0.0 };
+        }
+        let zetan = zeta(n, theta);
+        let zeta2 = zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipf { n, theta, alpha, zetan, eta, zeta2: 0.0 * zeta2 }
+    }
+
+    /// Draw one key in `0..n`.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let _ = self.zeta2;
+        if self.theta <= 0.0 {
+            return rng.below(self.n);
+        }
+        let u = rng.f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let k = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        k.min(self.n - 1)
+    }
+}
+
+fn zeta(n: u64, theta: f64) -> f64 {
+    // exact up to a cap, then the Euler–Maclaurin tail approximation;
+    // workloads here use n small enough for the exact sum.
+    let cap = n.min(1_000_000);
+    let mut sum = 0.0;
+    for i in 1..=cap {
+        sum += 1.0 / (i as f64).powf(theta);
+    }
+    if n > cap {
+        // integral tail
+        sum += ((n as f64).powf(1.0 - theta) - (cap as f64).powf(1.0 - theta)) / (1.0 - theta);
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_when_theta_zero() {
+        let z = Zipf::new(10, 0.0);
+        let mut rng = Rng::new(1);
+        let mut counts = [0u64; 10];
+        for _ in 0..10_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn skewed_prefers_low_keys() {
+        let z = Zipf::new(1000, 0.99);
+        let mut rng = Rng::new(2);
+        let mut head = 0;
+        let total = 20_000;
+        for _ in 0..total {
+            if z.sample(&mut rng) < 10 {
+                head += 1;
+            }
+        }
+        // with theta=.99 the top-10 keys take a large share
+        assert!(head > total / 4, "head={head}");
+    }
+
+    #[test]
+    fn samples_in_range() {
+        for theta in [0.0, 0.5, 0.9, 0.99] {
+            let z = Zipf::new(7, theta);
+            let mut rng = Rng::new(3);
+            for _ in 0..2000 {
+                assert!(z.sample(&mut rng) < 7);
+            }
+        }
+    }
+
+    #[test]
+    fn single_item_always_zero() {
+        let z = Zipf::new(1, 0.9);
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+    }
+}

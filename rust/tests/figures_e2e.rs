@@ -1,0 +1,62 @@
+//! Integration: every paper figure replays with its exact states, and the
+//! cross-figure story holds (same run, different mechanisms, different
+//! survivors).
+
+use dvvstore::figures;
+
+#[test]
+fn figure1_causal_histories() {
+    let rep = figures::fig1();
+    let text = rep.render();
+    assert!(text.contains("{b1}"), "{text}");
+    assert!(text.contains("{b2}"), "{text}");
+    assert!(text.contains("{a1,a2}"), "{text}");
+}
+
+#[test]
+fn figure2_lww_converges_to_latest_stamp() {
+    let text = figures::fig2().render();
+    assert!(text.contains("v overwritten"), "{text}");
+    assert!(text.contains("lost"), "{text}");
+}
+
+#[test]
+fn figure3_server_vv_anomaly() {
+    let text = figures::fig3().render();
+    assert!(text.contains("FALSELY dominated"), "{text}");
+    assert!(text.contains("{(b,2)}"), "{text}");
+}
+
+#[test]
+fn figure4_client_vv_stateless_anomaly() {
+    let text = figures::fig4().render();
+    assert!(text.contains("falsely dominates v"), "{text}");
+    assert!(text.contains("(C1,1)"), "{text}");
+}
+
+#[test]
+fn figure7_dvv_exact_clocks() {
+    let text = figures::fig7().render();
+    // every clock the paper prints for the run
+    for clock in ["{(b,0,1)}", "{(b,0,2)}", "{(a,0,1)}", "{(a,1,2)}", "{(b,2),(a,0,3)}"] {
+        assert!(text.contains(clock), "missing {clock} in:\n{text}");
+    }
+}
+
+#[test]
+fn same_run_different_survivors() {
+    // Figures 3 and 7 replay the same client run; v survives only under DVV.
+    let f3 = figures::fig3().render();
+    let f7 = figures::fig7().render();
+    assert!(f3.contains("v lost"));
+    assert!(f7.contains("v:{(b,0,1)}"));
+}
+
+#[test]
+fn replay_api_covers_expected_set() {
+    assert_eq!(figures::REPLAYABLE, [1, 2, 3, 4, 7]);
+    for f in figures::REPLAYABLE {
+        figures::replay(f).unwrap();
+    }
+    assert!(figures::replay(6).is_err());
+}

@@ -1,0 +1,234 @@
+//! Property tests: the §4 kernel conditions and the §5.4 downset
+//! invariant hold for every lossless mechanism under randomized client /
+//! replication / anti-entropy interleavings (E12).
+
+use dvvstore::clocks::causal_history::CausalHistory;
+use dvvstore::clocks::{Actor, LogicalClock};
+use dvvstore::kernel::conditions::{check_sync_conditions, is_downset};
+use dvvstore::kernel::mechs::{DvvMech, DvvSetMech, HistoryMech};
+use dvvstore::kernel::ops::{pairwise_concurrent, sync_sets};
+use dvvstore::kernel::{Mechanism, Val, WriteMeta};
+use dvvstore::testkit::prop::{forall, from_fn, Config};
+use dvvstore::testkit::Rng;
+
+fn arb_history(rng: &mut Rng, actors: u32, max_seq: u64) -> CausalHistory {
+    // downset histories (what replicas actually hold)
+    CausalHistory::from_events((0..actors).flat_map(|a| {
+        let n = rng.below(max_seq + 1);
+        (1..=n).map(move |s| dvvstore::clocks::Event::new(Actor::server(a), s))
+    }))
+}
+
+#[test]
+fn sync_conditions_hold_for_random_history_sets() {
+    forall(
+        &Config::default().cases(150),
+        from_fn(|rng, _| {
+            let mut mk_set = |rng: &mut Rng| {
+                let mut set: Vec<(CausalHistory, u8)> = Vec::new();
+                for i in 0..rng.range(0, 4) {
+                    dvvstore::kernel::ops::insert_candidate(
+                        &mut set,
+                        arb_history(rng, 3, 4),
+                        i as u8,
+                    );
+                }
+                set
+            };
+            (mk_set(rng), mk_set(rng))
+        }),
+        |(s1, s2)| {
+            let out = sync_sets(s1, s2);
+            check_sync_conditions(s1, s2, &out).is_ok()
+        },
+    );
+}
+
+/// Random client/replica interplay for a mechanism whose clocks expose
+/// their causal history; checks downsets + pairwise concurrency (§5.4).
+fn run_random_ops<M, H>(mech: M, history_of: H, seed: u64)
+where
+    M: Mechanism,
+    H: Fn(&M::State) -> Vec<CausalHistory>,
+{
+    let mut rng = Rng::new(seed);
+    let nodes = 3usize;
+    let mut states: Vec<M::State> = (0..nodes).map(|_| M::State::default()).collect();
+    let mut contexts: Vec<M::Context> = vec![M::Context::default(); 5];
+    for op in 0..600 {
+        let node = rng.below(nodes as u64) as usize;
+        let client = rng.below(5) as usize;
+        match rng.below(4) {
+            0 => contexts[client] = mech.read(&states[node]).1,
+            1 => {
+                let meta = WriteMeta::basic(Actor::client(client as u32));
+                let ctx = contexts[client].clone();
+                mech.write(&mut states[node], &ctx, Val::new(op + 1, 0), Actor::server(node as u32), &meta);
+            }
+            2 => {
+                let other = rng.below(nodes as u64) as usize;
+                let incoming = states[other].clone();
+                mech.merge(&mut states[node], &incoming);
+            }
+            _ => {
+                // read repair: reduce all and push back
+                let mut merged = M::State::default();
+                for st in &states {
+                    mech.merge(&mut merged, st);
+                }
+                for st in states.iter_mut() {
+                    mech.merge(st, &merged);
+                }
+            }
+        }
+        for st in &states {
+            let hists = history_of(st);
+            assert!(is_downset(&hists), "downset violated at op {op}");
+            let tagged: Vec<(CausalHistory, ())> =
+                hists.iter().cloned().map(|h| (h, ())).collect();
+            assert!(
+                pairwise_concurrent(&tagged),
+                "sibling set not pairwise concurrent at op {op}: {hists:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dvv_random_ops_maintain_invariants() {
+    for seed in [1u64, 2, 3] {
+        run_random_ops(
+            DvvMech,
+            |st| st.iter().map(|(d, _)| d.history()).collect(),
+            seed,
+        );
+    }
+}
+
+#[test]
+fn history_mech_random_ops_maintain_invariants() {
+    for seed in [4u64, 5] {
+        run_random_ops(
+            HistoryMech,
+            |st| st.iter().map(|(h, _)| h.clone()).collect(),
+            seed,
+        );
+    }
+}
+
+#[test]
+fn dvv_and_history_agree_on_survivors() {
+    // identical op sequences through both mechanisms end with the same
+    // surviving value ids — DVV is a lossless compression of causal
+    // histories (the §5 claim)
+    for seed in [11u64, 12, 13, 14] {
+        let mut rng = Rng::new(seed);
+        let dvv = DvvMech;
+        let hist = HistoryMech;
+        let mut d_states: Vec<<DvvMech as Mechanism>::State> = vec![Vec::new(), Vec::new()];
+        let mut h_states: Vec<<HistoryMech as Mechanism>::State> = vec![Vec::new(), Vec::new()];
+        let mut d_ctx: Vec<<DvvMech as Mechanism>::Context> = vec![Default::default(); 4];
+        let mut h_ctx: Vec<<HistoryMech as Mechanism>::Context> = vec![Default::default(); 4];
+        for op in 0..400 {
+            let node = rng.below(2) as usize;
+            let client = rng.below(4) as usize;
+            match rng.below(3) {
+                0 => {
+                    d_ctx[client] = dvv.read(&d_states[node]).1;
+                    h_ctx[client] = hist.read(&h_states[node]).1;
+                }
+                1 => {
+                    let meta = WriteMeta::basic(Actor::client(client as u32));
+                    dvv.write(&mut d_states[node], &d_ctx[client].clone(), Val::new(op + 1, 0), Actor::server(node as u32), &meta);
+                    hist.write(&mut h_states[node], &h_ctx[client].clone(), Val::new(op + 1, 0), Actor::server(node as u32), &meta);
+                }
+                _ => {
+                    let d_in = d_states[1 - node].clone();
+                    dvv.merge(&mut d_states[node], &d_in);
+                    let h_in = h_states[1 - node].clone();
+                    hist.merge(&mut h_states[node], &h_in);
+                }
+            }
+            for node in 0..2 {
+                let mut dv: Vec<u64> = dvv.values(&d_states[node]).iter().map(|v| v.id).collect();
+                let mut hv: Vec<u64> = hist.values(&h_states[node]).iter().map(|v| v.id).collect();
+                dv.sort_unstable();
+                hv.sort_unstable();
+                assert_eq!(dv, hv, "divergence at op {op} node {node} (seed {seed})");
+            }
+        }
+    }
+}
+
+#[test]
+fn dvvset_agrees_with_dvv_on_survivors() {
+    for seed in [21u64, 22] {
+        let mut rng = Rng::new(seed);
+        let dvv = DvvMech;
+        let dset = DvvSetMech;
+        let mut a: <DvvMech as Mechanism>::State = Vec::new();
+        let mut b: <DvvSetMech as Mechanism>::State = Default::default();
+        let mut ctx_a: Vec<<DvvMech as Mechanism>::Context> = vec![Default::default(); 3];
+        let mut ctx_b: Vec<<DvvSetMech as Mechanism>::Context> = vec![Default::default(); 3];
+        for op in 0..300 {
+            let client = rng.below(3) as usize;
+            match rng.below(2) {
+                0 => {
+                    ctx_a[client] = dvv.read(&a).1;
+                    ctx_b[client] = dset.read(&b).1;
+                }
+                _ => {
+                    let meta = WriteMeta::basic(Actor::client(client as u32));
+                    let coord = Actor::server(rng.below(2) as u32);
+                    dvv.write(&mut a, &ctx_a[client].clone(), Val::new(op + 1, 0), coord, &meta);
+                    dset.write(&mut b, &ctx_b[client].clone(), Val::new(op + 1, 0), coord, &meta);
+                }
+            }
+            let mut va: Vec<u64> = dvv.values(&a).iter().map(|v| v.id).collect();
+            let mut vb: Vec<u64> = dset.values(&b).iter().map(|v| v.id).collect();
+            va.sort_unstable();
+            vb.sort_unstable();
+            assert_eq!(va, vb, "op {op} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn dvv_order_equals_history_order_under_store_reachable_clocks() {
+    // §5.2: the computed order must equal causal-history inclusion for
+    // every pair of clocks a store can actually produce
+    let dvv = DvvMech;
+    forall(
+        &Config::default().cases(60),
+        from_fn(|rng, _| {
+            // produce reachable clocks by running random ops
+            let mut st: <DvvMech as Mechanism>::State = Vec::new();
+            let mut clocks = Vec::new();
+            let mut ctx: <DvvMech as Mechanism>::Context = Default::default();
+            for op in 0..rng.range(2, 20) {
+                if rng.chance(0.4) {
+                    ctx = dvv.read(&st).1;
+                }
+                let coord = Actor::server(rng.below(3) as u32);
+                dvv.write(
+                    &mut st,
+                    &ctx,
+                    Val::new(op as u64 + 1, 0),
+                    coord,
+                    &WriteMeta::basic(Actor::client(0)),
+                );
+                for (c, _) in &st {
+                    clocks.push(c.clone());
+                }
+            }
+            clocks
+        }),
+        |clocks| {
+            clocks.iter().all(|x| {
+                clocks.iter().all(|y| {
+                    x.compare(y) == x.history().compare(&y.history())
+                })
+            })
+        },
+    );
+}
