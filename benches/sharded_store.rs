@@ -1,0 +1,122 @@
+//! Flat single-lock vs. lock-striped sharded store under a
+//! multi-threaded Zipf workload — the tentpole claim behind the
+//! `StorageBackend` split.
+//!
+//! The *flat* rows reproduce the seed layout: one `Mutex` around a whole
+//! [`KeyStore`], every operation serialized (what `server::LocalCluster`
+//! used per replica before sharding). The *sharded* rows run the same
+//! operation mix against `KeyStore<DvvMech, ShardedBackend>` shared by
+//! plain `Arc` — stripe locks only. Expectation: parity at 1 thread
+//! (sharding costs nothing), ≥2x throughput once threads contend.
+//!
+//! Mix: 70% GET / 30% PUT (half the PUTs informed by a fresh read, half
+//! blind), keys drawn Zipf(0.9) from a 4096-key space, so hot keys make
+//! the single lock hurt exactly the way skewed production traffic does.
+//!
+//! Regenerate with `cargo bench --bench sharded_store` (add `--quick`
+//! for a CI-sized run).
+
+use std::sync::{Arc, Mutex};
+
+use dvvstore::bench_support::{fmt_count, time_threads, Options};
+use dvvstore::clocks::vv::VersionVector;
+use dvvstore::clocks::Actor;
+use dvvstore::kernel::mechs::DvvMech;
+use dvvstore::kernel::{Val, WriteMeta};
+use dvvstore::store::{KeyStore, ShardedBackend};
+use dvvstore::testkit::Rng;
+use dvvstore::workload::zipf::Zipf;
+
+const KEYS: u64 = 4096;
+const ZIPF_THETA: f64 = 0.9;
+const SHARDS: usize = 64;
+const GET_FRACTION: f64 = 0.7;
+
+/// One thread's slice of the workload against any `&self` store API.
+fn drive(
+    thread: usize,
+    ops: u64,
+    zipf: &Zipf,
+    read: &impl Fn(u64) -> (Vec<Val>, VersionVector),
+    write: &impl Fn(u64, &VersionVector, Val),
+) {
+    let mut rng = Rng::new(0xBEEF ^ ((thread as u64) << 32));
+    let empty_ctx = VersionVector::new();
+    for i in 0..ops {
+        let key = zipf.sample(&mut rng);
+        if rng.chance(GET_FRACTION) {
+            let (vals, _ctx) = read(key);
+            std::hint::black_box(vals);
+        } else {
+            let id = ((thread as u64) << 40) | i;
+            let val = Val::new(id, 64);
+            if rng.chance(0.5) {
+                // informed write: supersede what we just read
+                let (_, ctx) = read(key);
+                write(key, &ctx, val);
+            } else {
+                // blind write: makes siblings under contention
+                write(key, &empty_ctx, val);
+            }
+        }
+    }
+}
+
+fn meta() -> WriteMeta {
+    WriteMeta::basic(Actor::client(0))
+}
+
+fn bench_flat(threads: usize, ops_per_thread: u64, zipf: &Zipf) -> f64 {
+    let store = Arc::new(Mutex::new(KeyStore::new(DvvMech)));
+    let wall = time_threads(threads, |t| {
+        let read = |k: u64| store.lock().unwrap().read(k);
+        let write = |k: u64, ctx: &VersionVector, val: Val| {
+            store.lock().unwrap().write(k, ctx, val, Actor::server(0), &meta())
+        };
+        drive(t, ops_per_thread, zipf, &read, &write);
+    });
+    (threads as u64 * ops_per_thread) as f64 / wall.as_secs_f64()
+}
+
+fn bench_sharded(threads: usize, ops_per_thread: u64, zipf: &Zipf) -> f64 {
+    let store = Arc::new(KeyStore::with_backend(
+        DvvMech,
+        ShardedBackend::with_shards(SHARDS),
+    ));
+    let wall = time_threads(threads, |t| {
+        let read = |k: u64| store.read(k);
+        let write = |k: u64, ctx: &VersionVector, val: Val| {
+            store.write(k, ctx, val, Actor::server(0), &meta())
+        };
+        drive(t, ops_per_thread, zipf, &read, &write);
+    });
+    (threads as u64 * ops_per_thread) as f64 / wall.as_secs_f64()
+}
+
+fn main() {
+    let opts = Options::from_args();
+    let ops_per_thread: u64 = if opts.quick { 8_000 } else { 50_000 };
+    let zipf = Zipf::new(KEYS, ZIPF_THETA);
+
+    println!("## sharded_store (flat single-mutex vs. {SHARDS}-way lock-striped)\n");
+    println!(
+        "{KEYS} keys zipf({ZIPF_THETA}), {:.0}% GET, {ops_per_thread} ops/thread\n",
+        GET_FRACTION * 100.0
+    );
+    println!("| threads | flat ops/s | sharded ops/s | speedup |");
+    println!("|---|---|---|---|");
+    for &threads in &[1usize, 2, 4, 8] {
+        // warm both paths once so allocator/map growth is off the clock
+        let _ = bench_flat(threads, ops_per_thread / 10, &zipf);
+        let _ = bench_sharded(threads, ops_per_thread / 10, &zipf);
+        let flat = bench_flat(threads, ops_per_thread, &zipf);
+        let sharded = bench_sharded(threads, ops_per_thread, &zipf);
+        println!(
+            "| {threads} | {}/s | {}/s | {:.2}x |",
+            fmt_count(flat),
+            fmt_count(sharded),
+            sharded / flat
+        );
+    }
+    println!("\n(acceptance: sharded >= 2x flat once threads > 1 on multicore hosts)");
+}

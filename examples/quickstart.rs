@@ -37,7 +37,7 @@ fn main() -> dvvstore::Result<()> {
     // ------------------------------------------------------------------
     // 2. The replicated store: same semantics behind quorum get/put.
     // ------------------------------------------------------------------
-    let cluster = LocalCluster::new(3, 3, 2, 2)?; // 3 shards, N=3 R=2 W=2
+    let cluster = LocalCluster::new(3, 3, 2, 2)?; // 3 replicas, N=3 R=2 W=2
 
     cluster.put("greeting", b"hello".to_vec(), &[])?;
     cluster.put("greeting", b"hallo".to_vec(), &[])?; // concurrent blind write

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 gate + hygiene for the rust tree (see README "Tests and CI").
+#
+#   rust/ci.sh           full run
+#   rust/ci.sh --quick   skip the release build (debug test cycle only)
+#
+# Requires the repo toolchain (rustfmt + clippy components). The XLA
+# runtime paths self-skip when AOT artifacts are absent, so this runs on
+# a fresh checkout.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+quick=0
+[[ "${1:-}" == "--quick" ]] && quick=1
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy --all-targets -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+if [[ $quick -eq 0 ]]; then
+    echo "==> cargo build --release"
+    cargo build --release
+fi
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo doc --no-deps (warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "ci OK"

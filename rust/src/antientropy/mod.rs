@@ -15,6 +15,15 @@
 //!
 //! `benches/antientropy.rs` measures the crossover batch size between the
 //! two; `examples/antientropy_accel.rs` demos the XLA path end to end.
+//!
+//! Worklists come from [`diff_pairs`] (whole store) or
+//! [`diff_pairs_in_shard`] (one backend shard at a time — the unit the
+//! TCP server's [`anti_entropy_round`] batches through
+//! [`KeyStore::merge_batch`], so reconciliation takes one stripe-lock
+//! round per shard rather than one lock per key).
+//!
+//! [`anti_entropy_round`]: crate::server::LocalCluster::anti_entropy_round
+//! [`KeyStore::merge_batch`]: crate::store::KeyStore::merge_batch
 
 use crate::clocks::dvv::Dvv;
 use crate::error::Result;
@@ -150,26 +159,79 @@ fn flush_chunk(
     Ok(())
 }
 
-/// Build the divergent-key worklist for an exchange between two DVV
-/// key-stores: keys where the sibling clock sets differ.
-pub fn diff_pairs(
-    local: &crate::store::KeyStore<crate::kernel::mechs::DvvMech>,
-    remote: &crate::store::KeyStore<crate::kernel::mechs::DvvMech>,
-) -> Vec<KeyPair> {
-    let mut keys: Vec<Key> = local.keys().chain(remote.keys()).collect();
+/// Order-insensitive sibling-set equality. Replica-to-replica `merge`
+/// appends survivors in local-first order, so two converged replicas can
+/// hold the same sibling set in different `Vec` orders; comparing
+/// verbatim would report divergence forever. Sets are small (bounded by
+/// true concurrency), so the quadratic scan is fine.
+pub fn same_siblings(l: &[(Dvv, Val)], r: &[(Dvv, Val)]) -> bool {
+    l.len() == r.len() && l.iter().all(|item| r.contains(item))
+}
+
+fn diff_keys<BL, BR>(
+    local: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BL>,
+    remote: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BR>,
+    mut keys: Vec<Key>,
+) -> Vec<KeyPair>
+where
+    BL: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+    BR: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+{
     keys.sort_unstable();
     keys.dedup();
     keys.into_iter()
         .filter_map(|key| {
             let l = local.state(key);
             let r = remote.state(key);
-            if l == r {
+            if same_siblings(&l, &r) {
                 None
             } else {
                 Some(KeyPair { key, local: l, remote: r })
             }
         })
         .collect()
+}
+
+/// Build the divergent-key worklist for an exchange between two DVV
+/// key-stores: keys where the sibling clock sets differ.
+pub fn diff_pairs<BL, BR>(
+    local: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BL>,
+    remote: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BR>,
+) -> Vec<KeyPair>
+where
+    BL: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+    BR: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+{
+    diff_keys(local, remote, local.keys().chain(remote.keys()).collect())
+}
+
+/// Divergent-key worklist restricted to one of `local`'s backend shards —
+/// the unit of work for incremental anti-entropy over a sharded store
+/// (see [`crate::server::LocalCluster::anti_entropy_round`]). Remote keys
+/// absent locally are included when they fall in `shard` under `local`'s
+/// key partition, so the shards' worklists cover the full exchange.
+///
+/// When both stores have the same shard count, the
+/// [`StorageBackend`](crate::store::StorageBackend) contract guarantees
+/// identical key partitions, so only the matching remote shard is
+/// snapshotted; otherwise the remote key set is filtered through
+/// `local`'s partition.
+pub fn diff_pairs_in_shard<BL, BR>(
+    local: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BL>,
+    remote: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BR>,
+    shard: usize,
+) -> Vec<KeyPair>
+where
+    BL: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+    BR: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+{
+    let mut keys = local.keys_in_shard(shard);
+    if remote.shard_count() == local.shard_count() {
+        keys.extend(remote.keys_in_shard(shard));
+    } else {
+        keys.extend(remote.keys().filter(|&k| local.shard_of(k) == shard));
+    }
+    diff_keys(local, remote, keys)
 }
 
 #[cfg(test)]
@@ -337,8 +399,8 @@ mod tests {
         use crate::kernel::{Mechanism, WriteMeta};
         use crate::store::KeyStore;
         let mech = DvvMech;
-        let mut s1 = KeyStore::new(mech);
-        let mut s2 = KeyStore::new(mech);
+        let s1 = KeyStore::new(mech);
+        let s2 = KeyStore::new(mech);
         let empty = <DvvMech as Mechanism>::Context::default();
         let meta = WriteMeta::basic(Actor::client(0));
         s1.write(1, &empty, v(1), a(), &meta);
@@ -351,5 +413,68 @@ mod tests {
         let pairs = diff_pairs(&s1, &s2);
         let keys: Vec<Key> = pairs.iter().map(|p| p.key).collect();
         assert_eq!(keys, vec![1, 2], "key 3 converged, 1/2 divergent");
+    }
+
+    #[test]
+    fn same_siblings_ignores_order() {
+        let x = (dvv(&[], Some((a(), 1))), v(1));
+        let y = (dvv(&[], Some((b(), 1))), v(2));
+        assert!(same_siblings(&[x.clone(), y.clone()], &[y.clone(), x.clone()]));
+        assert!(!same_siblings(&[x.clone()], &[y.clone()]));
+        assert!(!same_siblings(&[x.clone()], &[x, y]));
+        assert!(same_siblings(&[], &[]));
+    }
+
+    #[test]
+    fn converged_but_reordered_replicas_show_no_divergence() {
+        use crate::kernel::mechs::DvvMech;
+        use crate::kernel::{Mechanism, WriteMeta};
+        use crate::store::KeyStore;
+        let s1 = KeyStore::new(DvvMech);
+        let s2 = KeyStore::new(DvvMech);
+        let empty = <DvvMech as Mechanism>::Context::default();
+        let meta = WriteMeta::basic(Actor::client(0));
+        // concurrent writes on opposite replicas, then a full exchange:
+        // both hold {x, y} but in opposite insertion orders
+        s1.write(1, &empty, v(1), a(), &meta);
+        s2.write(1, &empty, v(2), b(), &meta);
+        let (st1, st2) = (s1.state(1), s2.state(1));
+        s1.merge_key(1, &st2);
+        s2.merge_key(1, &st1);
+        assert_eq!(s1.values(1).len(), 2);
+        assert!(diff_pairs(&s1, &s2).is_empty(), "order alone is not divergence");
+    }
+
+    #[test]
+    fn shard_worklists_cover_the_full_diff() {
+        use crate::kernel::mechs::DvvMech;
+        use crate::kernel::{Mechanism, WriteMeta};
+        use crate::store::{KeyStore, ShardedBackend};
+        let local = KeyStore::with_backend(DvvMech, ShardedBackend::with_shards(4));
+        let remote = KeyStore::new(DvvMech);
+        let empty = <DvvMech as Mechanism>::Context::default();
+        let meta = WriteMeta::basic(Actor::client(0));
+        for k in 0..32u64 {
+            local.write(k, &empty, v(k + 1), a(), &meta);
+        }
+        // remote-only key, absent locally: still lands in some shard's list
+        remote.write(100, &empty, v(200), b(), &meta);
+
+        let whole = diff_pairs(&local, &remote);
+        let mut sharded: Vec<Key> = (0..local.shard_count())
+            .flat_map(|s| diff_pairs_in_shard(&local, &remote, s))
+            .map(|p| p.key)
+            .collect();
+        sharded.sort_unstable();
+        let mut expect: Vec<Key> = whole.iter().map(|p| p.key).collect();
+        expect.sort_unstable();
+        assert_eq!(sharded, expect);
+        assert!(expect.contains(&100));
+        // each shard's worklist only holds keys it owns
+        for s in 0..local.shard_count() {
+            for p in diff_pairs_in_shard(&local, &remote, s) {
+                assert_eq!(local.shard_of(p.key), s);
+            }
+        }
     }
 }

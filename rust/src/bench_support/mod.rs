@@ -282,6 +282,37 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     (out, t0.elapsed())
 }
 
+/// Run `f(thread_index)` on `threads` OS threads at once and return the
+/// wall-clock time from release to last completion — the multi-threaded
+/// throughput measurement used by `benches/sharded_store.rs`. A barrier
+/// lines every thread up before the clock starts so slow spawns don't
+/// count.
+pub fn time_threads<F>(threads: usize, f: F) -> Duration
+where
+    F: Fn(usize) + Sync,
+{
+    use std::sync::Barrier;
+    let barrier = Barrier::new(threads + 1);
+    let f = &f;
+    let barrier = &barrier;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                scope.spawn(move || {
+                    barrier.wait();
+                    f(t);
+                })
+            })
+            .collect();
+        barrier.wait();
+        let t0 = Instant::now();
+        for h in handles {
+            h.join().expect("bench thread panicked");
+        }
+        t0.elapsed()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,5 +373,17 @@ mod tests {
     fn time_once_measures() {
         let ((), dt) = time_once(|| std::thread::sleep(Duration::from_millis(5)));
         assert!(dt >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn time_threads_runs_every_thread() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits = AtomicUsize::new(0);
+        let dt = time_threads(4, |_t| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+        assert!(dt >= Duration::from_millis(2));
     }
 }

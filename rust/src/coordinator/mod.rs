@@ -7,8 +7,13 @@
 //!   then optionally read-repair stale replicas with the merged state.
 //! * PUT: apply the mechanism's `update`+`sync` at the coordinator,
 //!   replicate the resulting state, answer after `W` acknowledgements.
+//! * Replication fan-out accumulates per-peer `(key, state)` payloads in
+//!   a [`MergeBatch`] so the store layer can apply each peer's batch with
+//!   one lock round ([`crate::store::KeyStore::merge_batch`]) instead of
+//!   one merge call per key.
 
 use crate::kernel::{Mechanism, Val};
+use crate::store::Key;
 
 /// Quorum parameters `(N, R, W)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -138,6 +143,54 @@ impl PutOp {
     }
 }
 
+/// Per-peer accumulation of `(key, state)` replication payloads.
+///
+/// Both the PUT fan-out (§4.1 put step 4) and anti-entropy exchanges push
+/// merges here instead of calling the destination store once per key; a
+/// drained peer batch is applied through
+/// [`KeyStore::merge_batch`](crate::store::KeyStore::merge_batch), which
+/// takes each backend stripe lock at most once per batch.
+#[derive(Debug, Clone)]
+pub struct MergeBatch<M: Mechanism> {
+    peers: Vec<Vec<(Key, M::State)>>,
+}
+
+impl<M: Mechanism> MergeBatch<M> {
+    /// Empty batch addressing `peer_count` peers (dense peer ids).
+    pub fn new(peer_count: usize) -> MergeBatch<M> {
+        MergeBatch { peers: (0..peer_count).map(|_| Vec::new()).collect() }
+    }
+
+    /// Queue `state` to be merged into `key` at `peer`.
+    pub fn push(&mut self, peer: usize, key: Key, state: M::State) {
+        self.peers[peer].push((key, state));
+    }
+
+    /// Number of payloads queued for `peer`.
+    pub fn pending(&self, peer: usize) -> usize {
+        self.peers[peer].len()
+    }
+
+    /// Total payloads queued across peers.
+    pub fn len(&self) -> usize {
+        self.peers.iter().map(Vec::len).sum()
+    }
+
+    /// Is the batch empty?
+    pub fn is_empty(&self) -> bool {
+        self.peers.iter().all(Vec::is_empty)
+    }
+
+    /// Drain the batch as `(peer, payloads)` groups, skipping idle peers.
+    pub fn drain(&mut self) -> impl Iterator<Item = (usize, Vec<(Key, M::State)>)> + '_ {
+        self.peers
+            .iter_mut()
+            .enumerate()
+            .filter(|(_, items)| !items.is_empty())
+            .map(|(peer, items)| (peer, std::mem::take(items)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +242,23 @@ mod tests {
         let spec = QuorumSpec::new(3, 1, 1).unwrap();
         let mut op = PutOp::new(spec);
         assert!(op.satisfied_immediately());
+    }
+
+    #[test]
+    fn merge_batch_groups_per_peer() {
+        let mut b: MergeBatch<DvvMech> = MergeBatch::new(3);
+        assert!(b.is_empty());
+        b.push(0, 1, Vec::new());
+        b.push(2, 1, Vec::new());
+        b.push(2, 7, Vec::new());
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.pending(2), 2);
+        assert_eq!(b.pending(1), 0);
+        let groups: Vec<_> = b.drain().collect();
+        assert_eq!(groups.len(), 2, "idle peer 1 skipped");
+        assert_eq!(groups[0].0, 0);
+        assert_eq!(groups[1].0, 2);
+        assert_eq!(groups[1].1, vec![(1, Vec::new()), (7, Vec::new())]);
+        assert!(b.is_empty(), "drain leaves the batch reusable");
     }
 }

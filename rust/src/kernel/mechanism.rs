@@ -66,8 +66,10 @@ pub trait Mechanism: Clone + Send + Sync + 'static {
     /// The opaque causal context returned by GET and supplied to PUT.
     type Context: Clone + fmt::Debug + Default + PartialEq;
 
-    /// Per-key state kept by a replica node.
-    type State: Clone + fmt::Debug + Default + Send;
+    /// Per-key state kept by a replica node. `Sync` because storage
+    /// backends hand out shared references under their stripe locks
+    /// (see [`crate::store::StorageBackend`]).
+    type State: Clone + fmt::Debug + Default + Send + Sync;
 
     /// GET: current concurrent values plus the context describing them.
     fn read(&self, st: &Self::State) -> (Vec<Val>, Self::Context);

@@ -15,9 +15,11 @@
 //!   `update`, generic over the mechanism.
 //! * [`store`], [`cluster`], [`net`], [`sim`], [`server`], [`coordinator`],
 //!   [`antientropy`], [`session`] — the Dynamo/Riak-like substrate the paper
-//!   assumes: versioned storage with siblings, consistent-hashing ring,
-//!   deterministic simulated network, discrete-event simulator, replica
-//!   nodes, quorum get/put coordination (§4.1, Figures 5–6), anti-entropy,
+//!   assumes: versioned storage with siblings behind a pluggable
+//!   [`store::StorageBackend`] (flat single-lock or lock-striped sharded),
+//!   consistent-hashing ring, deterministic simulated network,
+//!   discrete-event simulator, replica nodes, quorum get/put coordination
+//!   (§4.1, Figures 5–6) with batched replication fan-out, anti-entropy,
 //!   and client sessions.
 //! * [`workload`], [`oracle`], [`metrics`], [`figures`] — experiment
 //!   machinery: generators, the causal-history anomaly oracle, metric

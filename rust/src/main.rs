@@ -45,10 +45,11 @@ fn cli() -> Command {
         .subcommand(
             Command::new("serve", "run the TCP store server")
                 .opt("addr", "127.0.0.1:7700", "listen address")
-                .opt("nodes", "3", "in-process shards")
+                .opt("nodes", "3", "in-process replica nodes")
                 .opt("replication", "3", "replication degree N")
                 .opt("read-quorum", "2", "read quorum R")
-                .opt("write-quorum", "2", "write quorum W"),
+                .opt("write-quorum", "2", "write quorum W")
+                .opt("shards", "64", "lock-striped shards per replica (rounded up to a power of two)"),
         )
 }
 
@@ -178,13 +179,15 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
     let n: usize = m.get_parsed("replication")?;
     let r: usize = m.get_parsed("read-quorum")?;
     let w: usize = m.get_parsed("write-quorum")?;
+    let shards: usize = m.get_parsed("shards")?;
     let addr = m.get_str("addr");
-    let cluster = Arc::new(LocalCluster::new(nodes, n, r, w)?);
-    let server = Server::start(addr, cluster)?;
+    let cluster = Arc::new(LocalCluster::with_shards(nodes, n, r, w, shards)?);
+    let server = Server::start(addr, cluster.clone())?;
     println!(
-        "dvv-store serving on {} ({} shards, N={n} R={r} W={w})",
+        "dvv-store serving on {} ({} replicas x {} shards, N={n} R={r} W={w})",
         server.addr(),
-        nodes
+        nodes,
+        cluster.shard_count()
     );
     println!("protocol: GET <key> | PUT <key> <value-hex> [ctx-hex] | STATS | QUIT");
     // serve until killed

@@ -130,6 +130,22 @@ pub fn dominance_code(a: &Dvv, b: &Dvv) -> i32 {
     }
 }
 
+/// Scalar mirror of the full `a.len() × b.len()` dominance-code matrix
+/// (row-major) that [`crate::runtime::XlaEngine::dominance_codes`]
+/// produces — the contract the block-diagonal multi-key reduction in
+/// [`crate::antientropy::sync_xla`] consumes. Used to cross-check the
+/// XLA path and as its drop-in fallback in environments without
+/// artifacts.
+pub fn dominance_codes_scalar(a: &[Dvv], b: &[Dvv]) -> Vec<i32> {
+    let mut codes = Vec::with_capacity(a.len() * b.len());
+    for x in a {
+        for y in b {
+            codes.push(dominance_code(x, y));
+        }
+    }
+    codes
+}
+
 /// Scalar reference of the bulk-sync keep-masks (identical reduction to
 /// `python/compile/model.py::bulk_sync`).
 pub fn bulk_sync_scalar(a: &[Dvv], b: &[Dvv]) -> (Vec<bool>, Vec<bool>) {
@@ -206,6 +222,19 @@ mod tests {
         assert_eq!(m.intern(a()), 1);
         assert_eq!(m.intern(b()), 0, "re-intern returns the same slot");
         assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn scalar_code_matrix_is_row_major_and_complete() {
+        let s1 = vec![dvv(&[], Some((a(), 1))), dvv(&[(a(), 2)], None)];
+        let s2 = vec![dvv(&[], Some((a(), 1))), dvv(&[], Some((b(), 1)))];
+        let codes = dominance_codes_scalar(&s1, &s2);
+        assert_eq!(codes.len(), 4);
+        assert_eq!(codes[0], 3, "identical clocks compare equal");
+        assert_eq!(codes[1], 0, "dots of different actors are concurrent");
+        assert_eq!(codes[2], 2, "row-major: [(a,2)] dominates the a-dot");
+        assert_eq!(codes[3], 0);
+        assert!(dominance_codes_scalar(&s1, &[]).is_empty());
     }
 
     #[test]

@@ -2,11 +2,24 @@
 //! protocol (`dvv-store serve`).
 //!
 //! Unlike the discrete-event simulator (which models latency and failure
-//! for experiments), this is a real store: N replica shards in one
+//! for experiments), this is a real store: N replica [`Node`]s in one
 //! process, quorum get/put through the same [`crate::coordinator`] state
 //! machines, dotted version vectors as the causality mechanism, and real
 //! bytes for values. String keys hash onto the same consistent ring used
 //! everywhere else.
+//!
+//! Concurrency layout: there is **no store-wide lock**. Each replica
+//! [`Node`] keeps its versioned states in a
+//! [`ShardedBackend`](crate::store::ShardedBackend) — power-of-two
+//! lock-striped shards — so concurrent GET/PUT on different keys proceed
+//! in parallel, and GETs on the same shard share its reader lock. Value
+//! payloads live in a similarly striped blob table keyed by write id.
+//! PUT replicates its synced state with one stripe-lock acquisition per
+//! peer; multi-key fan-out — [`LocalCluster::anti_entropy_round`], which
+//! reconciles replica pairs shard by shard through the bulk
+//! [`crate::antientropy`] path — accumulates per-peer merges in a
+//! [`MergeBatch`](crate::coordinator::MergeBatch) and applies each peer's
+//! batch with one stripe-lock round per shard ([`KeyStore::merge_batch`]).
 
 pub mod protocol;
 pub mod tcp;
@@ -15,14 +28,15 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::antientropy;
 use crate::clocks::vv::VersionVector;
 use crate::clocks::Actor;
 use crate::cluster::ring::{hash_str, Ring};
-use crate::coordinator::{GetOp, PutOp, QuorumSpec};
+use crate::coordinator::{GetOp, MergeBatch, PutOp, QuorumSpec};
 use crate::error::Result;
 use crate::kernel::mechs::DvvMech;
 use crate::kernel::{Val, WriteMeta};
-use crate::store::KeyStore;
+use crate::store::{KeyStore, ShardedBackend};
 
 /// A GET's answer: sibling payloads plus the encoded causal context.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -33,10 +47,72 @@ pub struct GetAnswer {
     pub context: Vec<u8>,
 }
 
+/// One replica: a lock-striped DVV key store. Connection threads operate
+/// on a `Node` through `&self`; the per-shard locks inside the backend
+/// are the only synchronization.
+#[derive(Debug)]
+pub struct Node {
+    id: usize,
+    store: KeyStore<DvvMech, ShardedBackend<DvvMech>>,
+}
+
+impl Node {
+    fn new(id: usize, shards: usize) -> Node {
+        Node {
+            id,
+            store: KeyStore::with_backend(DvvMech, ShardedBackend::with_shards(shards)),
+        }
+    }
+
+    /// Replica id (dense, matches ring node ids).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// The replica's versioned store.
+    pub fn store(&self) -> &KeyStore<DvvMech, ShardedBackend<DvvMech>> {
+        &self.store
+    }
+}
+
+/// Striped blob table: write-id → payload bytes. Ids are sequential, so
+/// a power-of-two mask spreads them evenly across stripes.
+#[derive(Debug)]
+struct BlobStore {
+    stripes: Box<[Mutex<HashMap<u64, Vec<u8>>>]>,
+    mask: u64,
+}
+
+impl BlobStore {
+    fn new(stripes: usize) -> BlobStore {
+        let n = stripes.max(1).next_power_of_two();
+        BlobStore {
+            stripes: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            mask: (n - 1) as u64,
+        }
+    }
+
+    fn insert(&self, id: u64, bytes: Vec<u8>) {
+        self.stripes[(id & self.mask) as usize]
+            .lock()
+            .unwrap()
+            .insert(id, bytes);
+    }
+
+    fn get(&self, id: u64) -> Vec<u8> {
+        self.stripes[(id & self.mask) as usize]
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .unwrap_or_default()
+    }
+}
+
 /// An in-process replicated DVV store.
 pub struct LocalCluster {
-    nodes: Vec<Mutex<KeyStore<DvvMech>>>,
-    blobs: Mutex<HashMap<u64, Vec<u8>>>,
+    nodes: Vec<Node>,
+    blobs: BlobStore,
     ring: Ring,
     quorum: QuorumSpec,
     next_id: AtomicU64,
@@ -44,12 +120,24 @@ pub struct LocalCluster {
 }
 
 impl LocalCluster {
-    /// Build with `nodes` shards and quorum `(n, r, w)`.
+    /// Build with `nodes` replicas and quorum `(n, r, w)`, using the
+    /// default per-replica shard count.
     pub fn new(nodes: usize, n: usize, r: usize, w: usize) -> Result<LocalCluster> {
+        LocalCluster::with_shards(nodes, n, r, w, crate::store::DEFAULT_SHARDS)
+    }
+
+    /// Build with an explicit per-replica shard (stripe) count.
+    pub fn with_shards(
+        nodes: usize,
+        n: usize,
+        r: usize,
+        w: usize,
+        shards: usize,
+    ) -> Result<LocalCluster> {
         let quorum = QuorumSpec::new(n.min(nodes), r.min(n), w.min(n))?;
         Ok(LocalCluster {
-            nodes: (0..nodes).map(|_| Mutex::new(KeyStore::new(DvvMech))).collect(),
-            blobs: Mutex::new(HashMap::new()),
+            nodes: (0..nodes).map(|id| Node::new(id, shards)).collect(),
+            blobs: BlobStore::new(16),
             ring: Ring::new(nodes, 64)?,
             quorum,
             next_id: AtomicU64::new(1),
@@ -57,9 +145,19 @@ impl LocalCluster {
         })
     }
 
-    /// Number of shards.
+    /// Number of replica nodes.
     pub fn node_count(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// Per-replica shard (stripe) count.
+    pub fn shard_count(&self) -> usize {
+        self.nodes.first().map(|n| n.store.shard_count()).unwrap_or(0)
+    }
+
+    /// One replica (tests, diagnostics, anti-entropy drivers).
+    pub fn node(&self, id: usize) -> &Node {
+        &self.nodes[id]
     }
 
     /// GET through a read quorum with read repair.
@@ -69,7 +167,7 @@ impl LocalCluster {
         let mut op: GetOp<DvvMech> = GetOp::new(self.quorum);
         let mut answer = None;
         for &node in &replicas {
-            let state = self.nodes[node].lock().unwrap().state(k);
+            let state = self.nodes[node].store.state(k);
             if let Some(res) = op.on_reply(&self.mech, &state) {
                 answer = Some(res);
             }
@@ -77,18 +175,13 @@ impl LocalCluster {
         // read repair with the fully merged state
         let merged = op.merged().clone();
         for &node in &replicas {
-            self.nodes[node].lock().unwrap().merge_key(k, &merged);
+            self.nodes[node].store.merge_key(k, &merged);
         }
         let res = answer.ok_or(crate::Error::QuorumNotMet {
             got: op.replies(),
             needed: self.quorum.r,
         })?;
-        let blobs = self.blobs.lock().unwrap();
-        let values = res
-            .values
-            .iter()
-            .map(|v| blobs.get(&v.id).cloned().unwrap_or_default())
-            .collect();
+        let values = res.values.iter().map(|v| self.blobs.get(v.id)).collect();
         let mut context = Vec::new();
         crate::clocks::encoding::encode_vv(&res.context, &mut context);
         Ok(GetAnswer { values, context })
@@ -108,24 +201,28 @@ impl LocalCluster {
         let coordinator = replicas[0];
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let val = Val::new(id, value.len() as u32);
-        self.blobs.lock().unwrap().insert(id, value);
+        self.blobs.insert(id, value);
 
         let meta = WriteMeta {
             client: Actor::client(0),
             physical_us: 0,
             client_seq: None,
         };
-        // §4.1: update + sync at the coordinator...
-        let state = {
-            let mut store = self.nodes[coordinator].lock().unwrap();
-            store.write(k, &ctx, val, Actor::server(coordinator as u32), &meta);
-            store.state(k)
-        };
-        // ...then replicate the synced state
+        // §4.1: update + sync at the coordinator, under one shard lock...
+        let state = self.nodes[coordinator].store.write_returning(
+            k,
+            &ctx,
+            val,
+            Actor::server(coordinator as u32),
+            &meta,
+        );
+        // ...then replicate the synced state to each peer. A PUT carries
+        // exactly one key, so this is a direct per-peer merge; multi-key
+        // fan-out (anti-entropy) goes through `MergeBatch` instead.
         let mut op = PutOp::new(self.quorum);
         let mut done = op.satisfied_immediately();
         for &node in replicas.iter().skip(1) {
-            self.nodes[node].lock().unwrap().merge_key(k, &state);
+            self.nodes[node].store.merge_key(k, &state);
             if op.on_ack() {
                 done = true;
             }
@@ -134,20 +231,51 @@ impl LocalCluster {
         Ok(())
     }
 
+    /// One push–pull anti-entropy round: reconcile every replica pair,
+    /// diffing shard by shard through the bulk sync path and accumulating
+    /// the merged states in a per-peer [`MergeBatch`]. Each side then
+    /// applies its whole batch with [`KeyStore::merge_batch`] — one
+    /// stripe-lock round per shard instead of one lock per key. Returns
+    /// the number of key reconciliations applied (per pair).
+    pub fn anti_entropy_round(&self) -> usize {
+        let mut reconciled = 0;
+        for (a, node_a) in self.nodes.iter().enumerate() {
+            for (b, node_b) in self.nodes.iter().enumerate().skip(a + 1) {
+                let (sa, sb) = (&node_a.store, &node_b.store);
+                let mut batch: MergeBatch<DvvMech> = MergeBatch::new(self.nodes.len());
+                for shard in 0..sa.shard_count() {
+                    let pairs = antientropy::diff_pairs_in_shard(sa, sb, shard);
+                    if pairs.is_empty() {
+                        continue;
+                    }
+                    for (key, merged) in antientropy::sync_scalar(&pairs) {
+                        batch.push(a, key, merged.clone());
+                        batch.push(b, key, merged);
+                    }
+                }
+                reconciled += batch.len() / 2;
+                for (node, items) in batch.drain() {
+                    self.nodes[node].store.merge_batch(&items);
+                }
+            }
+        }
+        reconciled
+    }
+
     /// Current sibling count for a key (diagnostics).
     pub fn siblings(&self, key: &str) -> usize {
         let k = hash_str(key);
         let replicas = self.ring.replicas_for(k, self.quorum.n);
         replicas
             .iter()
-            .map(|&n| self.nodes[n].lock().unwrap().sibling_count(k))
+            .map(|&n| self.nodes[n].store.sibling_count(k))
             .max()
             .unwrap_or(0)
     }
 
-    /// Total causality metadata bytes across shards (diagnostics).
+    /// Total causality metadata bytes across replicas (diagnostics).
     pub fn metadata_bytes(&self) -> u64 {
-        self.nodes.iter().map(|n| n.lock().unwrap().metadata_bytes()).sum()
+        self.nodes.iter().map(|n| n.store.metadata_bytes()).sum()
     }
 }
 
@@ -192,7 +320,7 @@ mod tests {
     }
 
     #[test]
-    fn many_keys_route_across_shards() {
+    fn many_keys_route_across_nodes() {
         let c = LocalCluster::new(5, 3, 2, 2).unwrap();
         for i in 0..50 {
             c.put(&format!("key{i}"), format!("val{i}").into_bytes(), &[]).unwrap();
@@ -209,5 +337,67 @@ mod tests {
         let c = LocalCluster::new(1, 1, 1, 1).unwrap();
         c.put("k", b"x".to_vec(), &[]).unwrap();
         assert_eq!(c.get("k").unwrap().values, vec![b"x".to_vec()]);
+    }
+
+    #[test]
+    fn explicit_shard_count_is_honored() {
+        let c = LocalCluster::with_shards(3, 3, 2, 2, 8).unwrap();
+        assert_eq!(c.shard_count(), 8);
+        c.put("k", b"x".to_vec(), &[]).unwrap();
+        assert_eq!(c.get("k").unwrap().values, vec![b"x".to_vec()]);
+    }
+
+    #[test]
+    fn anti_entropy_reconciles_a_diverged_replica() {
+        let c = LocalCluster::new(3, 3, 2, 2).unwrap();
+        // diverge node 0 directly, bypassing the quorum path
+        let k = hash_str("lost-update");
+        let id = c.next_id.fetch_add(1, Ordering::Relaxed);
+        let (_, ctx) = c.node(0).store().read(k);
+        c.node(0).store().write(
+            k,
+            &ctx,
+            Val::new(id, 1),
+            Actor::server(0),
+            &WriteMeta::basic(Actor::client(9)),
+        );
+        assert_eq!(c.node(1).store().sibling_count(k), 0, "diverged");
+
+        let reconciled = c.anti_entropy_round();
+        assert!(reconciled > 0);
+        for n in 0..3 {
+            assert_eq!(
+                c.node(n).store().state(k),
+                c.node(0).store().state(k),
+                "node {n} converged"
+            );
+        }
+        // a second round finds nothing left to do
+        assert_eq!(c.anti_entropy_round(), 0);
+    }
+
+    #[test]
+    fn concurrent_puts_distinct_keys_do_not_interfere() {
+        use std::sync::Arc;
+        let c = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    let key = format!("t{t}-k{i}");
+                    c.put(&key, key.clone().into_bytes(), &[]).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for t in 0..4 {
+            for i in 0..25 {
+                let key = format!("t{t}-k{i}");
+                assert_eq!(c.get(&key).unwrap().values, vec![key.into_bytes()]);
+            }
+        }
     }
 }

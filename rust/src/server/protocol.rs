@@ -7,7 +7,7 @@
 //! -> PUT <key> <value-hex> [ctx-hex]
 //! <- OK
 //! -> STATS
-//! <- STATS nodes=<n> metadata_bytes=<b>
+//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b>
 //! -> QUIT
 //! <- BYE
 //! ```

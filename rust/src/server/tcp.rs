@@ -117,8 +117,9 @@ fn handle_conn(
                 }
             }
             Ok(Request::Stats) => format!(
-                "STATS nodes={} metadata_bytes={}\n",
+                "STATS nodes={} shards={} metadata_bytes={}\n",
                 cluster.node_count(),
+                cluster.shard_count(),
                 cluster.metadata_bytes()
             ),
             Ok(Request::Quit) => {

@@ -1,0 +1,98 @@
+//! The [`StorageBackend`] trait: where a [`KeyStore`]'s per-key states
+//! actually live.
+//!
+//! A backend is a concurrent map from [`Key`] to the mechanism's per-key
+//! state. All methods take `&self`: locking is the backend's private
+//! concern, so a [`KeyStore`] can be shared across threads (`Arc`) and
+//! two backends with different locking disciplines — one store-wide lock
+//! vs. lock-striped shards — are interchangeable behind the same trait.
+//!
+//! The trait is deliberately *not* object-safe (the visitor methods are
+//! generic): stores are monomorphized over their backend exactly like
+//! they are over their [`Mechanism`], so the hot path pays no vtable.
+//!
+//! Implementations in this crate:
+//!
+//! * [`InMemoryBackend`](super::InMemoryBackend) — one flat map behind a
+//!   single lock (the original seed layout; baseline in
+//!   `benches/sharded_store.rs`);
+//! * [`ShardedBackend`](super::ShardedBackend) — the key space split
+//!   across power-of-two lock-striped shards, so operations on different
+//!   keys rarely contend.
+//!
+//! [`KeyStore`]: super::KeyStore
+//! [`Mechanism`]: crate::kernel::Mechanism
+
+use std::fmt;
+
+use super::Key;
+use crate::kernel::Mechanism;
+
+/// A concurrent per-key state map for mechanism `M`.
+///
+/// Contract, for every implementation:
+///
+/// * a key that was never updated reads as absent (`None` in
+///   [`with_state`](StorageBackend::with_state));
+/// * [`update`](StorageBackend::update) materializes `M::State::default()`
+///   for an absent key before calling the closure (the §4 kernel treats
+///   "never written" and "empty state" identically);
+/// * every key belongs to exactly one shard
+///   (`shard_of(key) < shard_count()`), and
+///   [`keys_in_shard`](StorageBackend::keys_in_shard) partitions
+///   [`keys`](StorageBackend::keys);
+/// * the partition is a pure function of the shard count: two backends
+///   with equal `shard_count()` MUST agree on `shard_of` for every key
+///   (in-tree backends use `key & (shard_count - 1)`); per-shard
+///   anti-entropy relies on this to diff matching shards directly;
+/// * each visitor runs under the internal lock covering the visited
+///   key(s): closures must not call back into the same backend.
+pub trait StorageBackend<M: Mechanism>: fmt::Debug + Send + Sync + 'static {
+    /// Visit `key`'s state read-only; `None` when absent.
+    fn with_state<R>(&self, key: Key, f: impl FnOnce(Option<&M::State>) -> R) -> R;
+
+    /// Mutate `key`'s state in place, inserting a default state first when
+    /// the key is absent.
+    fn update<R>(&self, key: Key, f: impl FnOnce(&mut M::State) -> R) -> R;
+
+    /// Apply `f` to each `(key, payload)` item, acquiring each internal
+    /// lock at most once per batch — the lock-amortized path used by the
+    /// batched replication fan-out ([`KeyStore::merge_batch`]).
+    ///
+    /// Items may be applied in any order *between* shards, but items of
+    /// the same key are applied in slice order.
+    ///
+    /// [`KeyStore::merge_batch`]: super::KeyStore::merge_batch
+    fn update_batch<T>(&self, items: &[(Key, T)], f: impl FnMut(&mut M::State, &T));
+
+    /// Visit every stored `(key, state)` pair, one shard at a time.
+    fn for_each(&self, f: impl FnMut(Key, &M::State));
+
+    /// Number of keys stored.
+    fn key_count(&self) -> usize;
+
+    /// Number of shards (1 for unsharded backends).
+    fn shard_count(&self) -> usize;
+
+    /// The shard that owns `key` (always `< shard_count()`, defined for
+    /// absent keys too).
+    fn shard_of(&self, key: Key) -> usize;
+
+    /// Snapshot of the keys currently stored in `shard`.
+    fn keys_in_shard(&self, shard: usize) -> Vec<Key>;
+
+    /// Snapshot of every stored key (shard by shard; no global order).
+    fn keys(&self) -> Vec<Key> {
+        let mut out = Vec::with_capacity(self.key_count());
+        for s in 0..self.shard_count() {
+            out.extend(self.keys_in_shard(s));
+        }
+        out
+    }
+
+    /// Clone of `key`'s state, or the default when absent — what a
+    /// replica ships to a peer.
+    fn state_clone(&self, key: Key) -> M::State {
+        self.with_state(key, |st| st.cloned().unwrap_or_default())
+    }
+}

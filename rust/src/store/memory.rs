@@ -1,0 +1,86 @@
+//! Flat single-lock backend: the seed's original `HashMap` layout.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::RwLock;
+
+use super::backend::StorageBackend;
+use super::Key;
+use crate::kernel::Mechanism;
+
+/// One flat map behind one store-wide reader/writer lock.
+///
+/// This is the simplest correct backend and the baseline the sharded
+/// variant is benchmarked against (`benches/sharded_store.rs`): every
+/// write serializes against every other operation on the store. Fine for
+/// the single-threaded simulator and unit tests; a bottleneck for the
+/// threaded TCP server.
+pub struct InMemoryBackend<M: Mechanism> {
+    map: RwLock<HashMap<Key, M::State>>,
+}
+
+impl<M: Mechanism> InMemoryBackend<M> {
+    /// Empty backend.
+    pub fn new() -> InMemoryBackend<M> {
+        InMemoryBackend { map: RwLock::new(HashMap::new()) }
+    }
+}
+
+impl<M: Mechanism> Default for InMemoryBackend<M> {
+    fn default() -> Self {
+        InMemoryBackend::new()
+    }
+}
+
+impl<M: Mechanism> Clone for InMemoryBackend<M> {
+    fn clone(&self) -> Self {
+        InMemoryBackend { map: RwLock::new(self.map.read().unwrap().clone()) }
+    }
+}
+
+impl<M: Mechanism> fmt::Debug for InMemoryBackend<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("InMemoryBackend")
+            .field("keys", &self.map.read().unwrap().len())
+            .finish()
+    }
+}
+
+impl<M: Mechanism> StorageBackend<M> for InMemoryBackend<M> {
+    fn with_state<R>(&self, key: Key, f: impl FnOnce(Option<&M::State>) -> R) -> R {
+        f(self.map.read().unwrap().get(&key))
+    }
+
+    fn update<R>(&self, key: Key, f: impl FnOnce(&mut M::State) -> R) -> R {
+        f(self.map.write().unwrap().entry(key).or_default())
+    }
+
+    fn update_batch<T>(&self, items: &[(Key, T)], mut f: impl FnMut(&mut M::State, &T)) {
+        let mut map = self.map.write().unwrap();
+        for (key, payload) in items {
+            f(map.entry(*key).or_default(), payload);
+        }
+    }
+
+    fn for_each(&self, mut f: impl FnMut(Key, &M::State)) {
+        for (k, st) in self.map.read().unwrap().iter() {
+            f(*k, st);
+        }
+    }
+
+    fn key_count(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    fn shard_count(&self) -> usize {
+        1
+    }
+
+    fn shard_of(&self, _key: Key) -> usize {
+        0
+    }
+
+    fn keys_in_shard(&self, _shard: usize) -> Vec<Key> {
+        self.map.read().unwrap().keys().copied().collect()
+    }
+}

@@ -1,12 +1,56 @@
-//! Per-node versioned key store, generic over the causality mechanism.
+//! Per-node versioned key store, generic over the causality mechanism
+//! *and* the storage backend.
 //!
 //! Each replica node owns one [`KeyStore`]: a map from keys to the
 //! mechanism's per-key state (sibling versions + clocks). All mutation
 //! funnels through [`KeyStore::write`] and [`KeyStore::merge_key`] so the
 //! §4 kernel semantics are applied uniformly no matter where the mutation
 //! came from (client PUT, replication fan-out, read repair, anti-entropy).
+//!
+//! Where the states live is the [`StorageBackend`]'s concern:
+//!
+//! * [`InMemoryBackend`] — one flat map behind one lock (default; the
+//!   simulator and unit tests use this);
+//! * [`ShardedBackend`] — lock-striped shards over a power-of-two key
+//!   mask, so the threaded TCP server can run GET/PUT on different keys
+//!   without contending (see `benches/sharded_store.rs` for the flat
+//!   vs. sharded comparison).
+//!
+//! Every [`KeyStore`] method takes `&self` — locking is internal to the
+//! backend — so a store can be shared across server threads with a plain
+//! `Arc`, no store-wide `Mutex`.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't get the xla rpath link flags)
+//! use dvvstore::clocks::Actor;
+//! use dvvstore::kernel::mechs::DvvMech;
+//! use dvvstore::kernel::{Val, WriteMeta};
+//! use dvvstore::store::KeyStore;
+//!
+//! let store = KeyStore::new(DvvMech);
+//! let meta = WriteMeta::basic(Actor::client(0));
+//!
+//! // two blind writes (empty context) -> two concurrent siblings
+//! let (_, empty) = store.read(1);
+//! store.write(1, &empty, Val::new(10, 0), Actor::server(0), &meta);
+//! store.write(1, &empty, Val::new(11, 0), Actor::server(0), &meta);
+//! let (siblings, ctx) = store.read(1);
+//! assert_eq!(siblings.len(), 2);
+//!
+//! // a write carrying the read context supersedes exactly what was read
+//! store.write(1, &ctx, Val::new(12, 0), Actor::server(0), &meta);
+//! assert_eq!(store.values(1), vec![Val::new(12, 0)]);
+//! ```
 
-use std::collections::HashMap;
+pub mod backend;
+mod memory;
+mod sharded;
+
+pub use backend::StorageBackend;
+pub use memory::InMemoryBackend;
+pub use sharded::{ShardedBackend, DEFAULT_SHARDS};
+
+use std::fmt;
 
 use crate::clocks::Actor;
 use crate::kernel::{Mechanism, Val, WriteMeta};
@@ -15,17 +59,56 @@ use crate::kernel::{Mechanism, Val, WriteMeta};
 /// TCP server hashes string keys into this space (see `server::protocol`).
 pub type Key = u64;
 
-/// A node-local versioned store.
-#[derive(Debug, Clone)]
-pub struct KeyStore<M: Mechanism> {
+/// A node-local versioned store over backend `B`.
+///
+/// `KeyStore<M>` (the default backend) is the flat single-lock layout;
+/// `KeyStore<M, ShardedBackend<M>>` is the lock-striped layout the TCP
+/// server shares across connection threads:
+///
+/// ```no_run
+/// // (no_run: doctest binaries don't get the xla rpath link flags)
+/// use std::sync::Arc;
+/// use dvvstore::clocks::Actor;
+/// use dvvstore::kernel::mechs::DvvMech;
+/// use dvvstore::kernel::{Val, WriteMeta};
+/// use dvvstore::store::{KeyStore, ShardedBackend, StorageBackend};
+///
+/// let store = Arc::new(KeyStore::with_backend(DvvMech, ShardedBackend::with_shards(8)));
+/// let meta = WriteMeta::basic(Actor::client(0));
+/// let handles: Vec<_> = (0..4u64)
+///     .map(|t| {
+///         let store = Arc::clone(&store);
+///         let meta = meta.clone();
+///         // writers on different keys take different stripe locks
+///         std::thread::spawn(move || {
+///             let (_, ctx) = store.read(t);
+///             store.write(t, &ctx, Val::new(t, 0), Actor::server(0), &meta);
+///         })
+///     })
+///     .collect();
+/// for h in handles {
+///     h.join().unwrap();
+/// }
+/// assert_eq!(store.key_count(), 4);
+/// assert_eq!(store.backend().shard_count(), 8);
+/// ```
+pub struct KeyStore<M: Mechanism, B: StorageBackend<M> = InMemoryBackend<M>> {
     mech: M,
-    map: HashMap<Key, M::State>,
+    backend: B,
 }
 
 impl<M: Mechanism> KeyStore<M> {
-    /// Empty store for a mechanism instance.
+    /// Empty store for a mechanism instance, on the default flat
+    /// [`InMemoryBackend`].
     pub fn new(mech: M) -> KeyStore<M> {
-        KeyStore { mech, map: HashMap::new() }
+        KeyStore { mech, backend: InMemoryBackend::new() }
+    }
+}
+
+impl<M: Mechanism, B: StorageBackend<M>> KeyStore<M, B> {
+    /// Empty store over an explicit backend.
+    pub fn with_backend(mech: M, backend: B) -> KeyStore<M, B> {
+        KeyStore { mech, backend }
     }
 
     /// The mechanism instance.
@@ -33,70 +116,140 @@ impl<M: Mechanism> KeyStore<M> {
         &self.mech
     }
 
+    /// The storage backend (shard layout, diagnostics).
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
     /// GET: current values + context (empty state when the key is absent).
     pub fn read(&self, key: Key) -> (Vec<Val>, M::Context) {
-        match self.map.get(&key) {
+        self.backend.with_state(key, |st| match st {
             Some(st) => self.mech.read(st),
             None => self.mech.read(&M::State::default()),
-        }
+        })
     }
 
     /// PUT at this node acting as coordinator `coord`.
-    pub fn write(&mut self, key: Key, ctx: &M::Context, val: Val, coord: Actor, meta: &WriteMeta) {
-        let st = self.map.entry(key).or_default();
-        self.mech.write(st, ctx, val, coord, meta);
+    pub fn write(&self, key: Key, ctx: &M::Context, val: Val, coord: Actor, meta: &WriteMeta) {
+        self.backend.update(key, |st| self.mech.write(st, ctx, val, coord, meta));
+    }
+
+    /// PUT that also returns the post-write state under the same lock
+    /// acquisition — what a coordinator replicates to its peers (§4.1 put
+    /// steps 2–4) without a read-back race.
+    pub fn write_returning(
+        &self,
+        key: Key,
+        ctx: &M::Context,
+        val: Val,
+        coord: Actor,
+        meta: &WriteMeta,
+    ) -> M::State {
+        self.backend.update(key, |st| {
+            self.mech.write(st, ctx, val, coord, meta);
+            st.clone()
+        })
     }
 
     /// Merge an incoming replica state for `key` (replication/anti-entropy/
     /// read repair).
-    pub fn merge_key(&mut self, key: Key, incoming: &M::State) {
-        let st = self.map.entry(key).or_default();
-        self.mech.merge(st, incoming);
+    pub fn merge_key(&self, key: Key, incoming: &M::State) {
+        self.backend.update(key, |st| self.mech.merge(st, incoming));
+    }
+
+    /// Merge a batch of incoming replica states, taking each backend lock
+    /// at most once — the amortized path the batched replication fan-out
+    /// uses ([`crate::coordinator::MergeBatch`]). A one-item batch costs
+    /// exactly a [`merge_key`](KeyStore::merge_key).
+    pub fn merge_batch(&self, items: &[(Key, M::State)]) {
+        if let [(key, incoming)] = items {
+            return self.merge_key(*key, incoming);
+        }
+        self.backend.update_batch(items, |st, incoming| self.mech.merge(st, incoming));
     }
 
     /// Clone of the state for `key` (empty default when absent) — what a
     /// replica ships to a coordinator or peer.
     pub fn state(&self, key: Key) -> M::State {
-        self.map.get(&key).cloned().unwrap_or_default()
+        self.backend.state_clone(key)
     }
 
-    /// Reference to the state if present.
-    pub fn state_ref(&self, key: Key) -> Option<&M::State> {
-        self.map.get(&key)
+    /// Visit the state for `key` without cloning (`None` when absent).
+    pub fn with_state<R>(&self, key: Key, f: impl FnOnce(Option<&M::State>) -> R) -> R {
+        self.backend.with_state(key, f)
     }
 
     /// Live values for `key`.
     pub fn values(&self, key: Key) -> Vec<Val> {
-        self.map.get(&key).map(|st| self.mech.values(st)).unwrap_or_default()
+        self.backend
+            .with_state(key, |st| st.map(|st| self.mech.values(st)).unwrap_or_default())
     }
 
     /// Number of keys stored.
     pub fn key_count(&self) -> usize {
-        self.map.len()
+        self.backend.key_count()
     }
 
-    /// Iterate stored keys.
-    pub fn keys(&self) -> impl Iterator<Item = Key> + '_ {
-        self.map.keys().copied()
+    /// Iterate a snapshot of the stored keys.
+    pub fn keys(&self) -> impl Iterator<Item = Key> {
+        self.backend.keys().into_iter()
     }
 
-    /// Total causality-metadata bytes across keys (E7).
+    /// Number of backend shards (1 for the flat backend).
+    pub fn shard_count(&self) -> usize {
+        self.backend.shard_count()
+    }
+
+    /// The backend shard owning `key`.
+    pub fn shard_of(&self, key: Key) -> usize {
+        self.backend.shard_of(key)
+    }
+
+    /// Snapshot of the keys in one backend shard (anti-entropy iterates
+    /// the store shard by shard; see [`crate::antientropy`]).
+    pub fn keys_in_shard(&self, shard: usize) -> Vec<Key> {
+        self.backend.keys_in_shard(shard)
+    }
+
+    /// Total causality-metadata bytes across keys, aggregated shard by
+    /// shard on demand. Feeds `Metrics::metadata_bytes` in the simulator
+    /// reports and the TCP server's `STATS` line. (The per-mechanism
+    /// metadata *scaling* experiment — `benches/metadata.rs` — measures
+    /// states directly through [`Mechanism::metadata_bytes`] instead.)
     pub fn metadata_bytes(&self) -> u64 {
-        self.map.values().map(|st| self.mech.metadata_bytes(st) as u64).sum()
+        let mut total = 0u64;
+        self.backend
+            .for_each(|_, st| total += self.mech.metadata_bytes(st) as u64);
+        total
     }
 
     /// Largest sibling set currently stored.
     pub fn max_siblings(&self) -> usize {
-        self.map
-            .values()
-            .map(|st| self.mech.sibling_count(st))
-            .max()
-            .unwrap_or(0)
+        let mut max = 0;
+        self.backend
+            .for_each(|_, st| max = max.max(self.mech.sibling_count(st)));
+        max
     }
 
     /// Sibling count for one key.
     pub fn sibling_count(&self, key: Key) -> usize {
-        self.map.get(&key).map(|st| self.mech.sibling_count(st)).unwrap_or(0)
+        self.backend
+            .with_state(key, |st| st.map(|st| self.mech.sibling_count(st)).unwrap_or(0))
+    }
+}
+
+impl<M: Mechanism, B: StorageBackend<M> + Clone> Clone for KeyStore<M, B> {
+    fn clone(&self) -> Self {
+        KeyStore { mech: self.mech.clone(), backend: self.backend.clone() }
+    }
+}
+
+impl<M: Mechanism, B: StorageBackend<M>> fmt::Debug for KeyStore<M, B> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("KeyStore")
+            .field("mechanism", &M::NAME)
+            .field("backend", &self.backend)
+            .finish()
     }
 }
 
@@ -107,6 +260,9 @@ mod tests {
 
     fn store() -> KeyStore<DvvMech> {
         KeyStore::new(DvvMech)
+    }
+    fn sharded() -> KeyStore<DvvMech, ShardedBackend<DvvMech>> {
+        KeyStore::with_backend(DvvMech, ShardedBackend::with_shards(8))
     }
     fn coord() -> Actor {
         Actor::server(0)
@@ -125,7 +281,7 @@ mod tests {
 
     #[test]
     fn write_then_read() {
-        let mut s = store();
+        let s = store();
         let (_, ctx) = s.read(1);
         s.write(1, &ctx, Val::new(10, 4), coord(), &meta());
         let (vals, _) = s.read(1);
@@ -135,7 +291,7 @@ mod tests {
 
     #[test]
     fn blind_writes_accumulate_siblings() {
-        let mut s = store();
+        let s = store();
         let empty = s.read(1).1;
         s.write(1, &empty, Val::new(1, 0), coord(), &meta());
         s.write(1, &empty, Val::new(2, 0), coord(), &meta());
@@ -145,8 +301,8 @@ mod tests {
 
     #[test]
     fn merge_key_converges_two_stores() {
-        let mut s1 = store();
-        let mut s2 = store();
+        let s1 = store();
+        let s2 = store();
         let empty = s1.read(1).1;
         s1.write(1, &empty, Val::new(1, 0), Actor::server(0), &meta());
         s2.write(1, &empty, Val::new(2, 0), Actor::server(1), &meta());
@@ -163,12 +319,70 @@ mod tests {
 
     #[test]
     fn metadata_accounting_sums_keys() {
-        let mut s = store();
+        let s = store();
         for k in 0..10 {
             let (_, ctx) = s.read(k);
             s.write(k, &ctx, Val::new(k, 0), coord(), &meta());
         }
         assert!(s.metadata_bytes() > 0);
         assert_eq!(s.keys().count(), 10);
+    }
+
+    #[test]
+    fn write_returning_matches_state() {
+        let s = store();
+        let (_, ctx) = s.read(9);
+        let st = s.write_returning(9, &ctx, Val::new(5, 0), coord(), &meta());
+        assert_eq!(st, s.state(9));
+        assert_eq!(s.values(9), vec![Val::new(5, 0)]);
+    }
+
+    #[test]
+    fn sharded_store_same_semantics() {
+        let s = sharded();
+        let empty = s.read(1).1;
+        s.write(1, &empty, Val::new(1, 0), coord(), &meta());
+        s.write(1, &empty, Val::new(2, 0), coord(), &meta());
+        assert_eq!(s.sibling_count(1), 2);
+        let (_, ctx) = s.read(1);
+        s.write(1, &ctx, Val::new(3, 0), coord(), &meta());
+        assert_eq!(s.values(1), vec![Val::new(3, 0)]);
+        assert_eq!(s.shard_count(), 8);
+        assert!(s.metadata_bytes() > 0);
+    }
+
+    #[test]
+    fn merge_batch_equals_sequential_merges() {
+        let src = store();
+        let empty = src.read(0).1;
+        for k in 0..20 {
+            src.write(k, &empty, Val::new(k + 1, 0), Actor::server(1), &meta());
+        }
+        let items: Vec<(Key, _)> = src.keys().map(|k| (k, src.state(k))).collect();
+
+        let batched = sharded();
+        batched.merge_batch(&items);
+        let sequential = sharded();
+        for (k, st) in &items {
+            sequential.merge_key(*k, st);
+        }
+        for k in 0..20 {
+            assert_eq!(batched.state(k), sequential.state(k));
+        }
+        assert_eq!(batched.key_count(), 20);
+    }
+
+    #[test]
+    fn shard_key_snapshots_partition_the_store() {
+        let s = sharded();
+        let empty = s.read(0).1;
+        for k in 0..64 {
+            s.write(k, &empty, Val::new(k + 1, 0), coord(), &meta());
+        }
+        let mut seen: Vec<Key> = (0..s.shard_count())
+            .flat_map(|sh| s.keys_in_shard(sh))
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..64).collect::<Vec<Key>>());
     }
 }

@@ -1,0 +1,201 @@
+//! Lock-striped backend: the key space split across power-of-two shards.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::RwLock;
+
+use super::backend::StorageBackend;
+use super::Key;
+use crate::kernel::Mechanism;
+
+/// Default stripe count — enough that a handful of server threads on a
+/// skewed (Zipf) workload rarely collide, small enough that aggregating
+/// per-shard accounting stays cheap.
+pub const DEFAULT_SHARDS: usize = 64;
+
+/// The key space partitioned into `2^k` lock-striped shards.
+///
+/// A key belongs to shard `key & (shards - 1)` — a power-of-two mask on
+/// the existing numeric [`Key`]. Both key populations the crate produces
+/// are uniform under this mask: the TCP server pre-hashes string keys
+/// ([`crate::cluster::ring::hash_str`]) and the simulator uses dense
+/// numeric keys. Operations on keys in different shards take different
+/// locks and proceed in parallel; reads on the same shard share its
+/// reader lock.
+///
+/// Metadata and sibling accounting ([`StorageBackend::for_each`]) is
+/// aggregated on demand, shard by shard, so no global lock ever exists.
+pub struct ShardedBackend<M: Mechanism> {
+    shards: Box<[RwLock<HashMap<Key, M::State>>]>,
+    mask: u64,
+}
+
+impl<M: Mechanism> ShardedBackend<M> {
+    /// Backend with [`DEFAULT_SHARDS`] stripes.
+    pub fn new() -> ShardedBackend<M> {
+        ShardedBackend::with_shards(DEFAULT_SHARDS)
+    }
+
+    /// Backend with at least `shards` stripes (rounded up to a power of
+    /// two; minimum 1).
+    pub fn with_shards(shards: usize) -> ShardedBackend<M> {
+        let n = shards.max(1).next_power_of_two();
+        let shards = (0..n).map(|_| RwLock::new(HashMap::new())).collect();
+        ShardedBackend { shards, mask: (n - 1) as u64 }
+    }
+
+    #[inline]
+    fn idx(&self, key: Key) -> usize {
+        (key & self.mask) as usize
+    }
+
+    /// Number of keys currently stored in one shard (diagnostics; the
+    /// balance check in this module's tests).
+    pub fn shard_len(&self, shard: usize) -> usize {
+        self.shards[shard].read().unwrap().len()
+    }
+}
+
+impl<M: Mechanism> Default for ShardedBackend<M> {
+    fn default() -> Self {
+        ShardedBackend::new()
+    }
+}
+
+impl<M: Mechanism> Clone for ShardedBackend<M> {
+    fn clone(&self) -> Self {
+        ShardedBackend {
+            shards: self
+                .shards
+                .iter()
+                .map(|s| RwLock::new(s.read().unwrap().clone()))
+                .collect(),
+            mask: self.mask,
+        }
+    }
+}
+
+impl<M: Mechanism> fmt::Debug for ShardedBackend<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let keys: usize = self.shards.iter().map(|s| s.read().unwrap().len()).sum();
+        f.debug_struct("ShardedBackend")
+            .field("shards", &self.shards.len())
+            .field("keys", &keys)
+            .finish()
+    }
+}
+
+impl<M: Mechanism> StorageBackend<M> for ShardedBackend<M> {
+    fn with_state<R>(&self, key: Key, f: impl FnOnce(Option<&M::State>) -> R) -> R {
+        f(self.shards[self.idx(key)].read().unwrap().get(&key))
+    }
+
+    fn update<R>(&self, key: Key, f: impl FnOnce(&mut M::State) -> R) -> R {
+        f(self.shards[self.idx(key)].write().unwrap().entry(key).or_default())
+    }
+
+    fn update_batch<T>(&self, items: &[(Key, T)], mut f: impl FnMut(&mut M::State, &T)) {
+        if let [(key, payload)] = items {
+            // single item: no grouping needed, one stripe lock
+            let mut map = self.shards[self.idx(*key)].write().unwrap();
+            f(map.entry(*key).or_default(), payload);
+            return;
+        }
+        // sort item indices by shard, then take each stripe lock once per
+        // run — O(items log items) work, no per-shard allocation
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by_key(|&i| self.idx(items[i].0));
+        let mut run = 0;
+        while run < order.len() {
+            let shard = self.idx(items[order[run]].0);
+            let mut map = self.shards[shard].write().unwrap();
+            while run < order.len() {
+                let (key, payload) = &items[order[run]];
+                if self.idx(*key) != shard {
+                    break;
+                }
+                f(map.entry(*key).or_default(), payload);
+                run += 1;
+            }
+        }
+    }
+
+    fn for_each(&self, mut f: impl FnMut(Key, &M::State)) {
+        for shard in self.shards.iter() {
+            for (k, st) in shard.read().unwrap().iter() {
+                f(*k, st);
+            }
+        }
+    }
+
+    fn key_count(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, key: Key) -> usize {
+        self.idx(key)
+    }
+
+    fn keys_in_shard(&self, shard: usize) -> Vec<Key> {
+        self.shards[shard].read().unwrap().keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::mechs::DvvMech;
+
+    type B = ShardedBackend<DvvMech>;
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        assert_eq!(B::with_shards(1).shard_count(), 1);
+        assert_eq!(B::with_shards(5).shard_count(), 8);
+        assert_eq!(B::with_shards(64).shard_count(), 64);
+        assert_eq!(B::with_shards(0).shard_count(), 1);
+    }
+
+    #[test]
+    fn keys_partition_across_shards() {
+        let b = B::with_shards(8);
+        for k in 0..800u64 {
+            b.update(k, |_st| {});
+        }
+        assert_eq!(b.key_count(), 800);
+        let mut total = 0;
+        for s in 0..8 {
+            let keys = b.keys_in_shard(s);
+            for &k in &keys {
+                assert_eq!(b.shard_of(k), s);
+            }
+            // dense keys under a power-of-two mask land perfectly evenly
+            assert_eq!(keys.len(), 100, "shard {s}");
+            assert_eq!(b.shard_len(s), 100);
+            total += keys.len();
+        }
+        assert_eq!(total, 800);
+    }
+
+    #[test]
+    fn update_batch_touches_every_item() {
+        let b = B::with_shards(4);
+        let items: Vec<(u64, ())> = (0..100).map(|k| (k % 10, ())).collect();
+        let mut applied = 0;
+        b.update_batch(&items, |_st, ()| applied += 1);
+        assert_eq!(applied, 100);
+        assert_eq!(b.key_count(), 10);
+    }
+
+    #[test]
+    fn absent_key_reads_as_none_after_other_writes() {
+        let b = B::with_shards(4);
+        b.update(1, |_st| {});
+        assert!(b.with_state(2, |st| st.is_none()));
+        assert!(b.with_state(1, |st| st.is_some()));
+    }
+}
