@@ -13,6 +13,12 @@ cd "$(dirname "$0")/.."
 quick=0
 [[ "${1:-}" == "--quick" ]] && quick=1
 
+# Chaos soak knob: the fabric chaos property test always runs its fixed
+# seeds; CHAOS_ITERS appends that many extra derived seeds per backend.
+# The gate default (2) keeps CI bounded; crank it locally to soak, e.g.
+#   CHAOS_ITERS=50 rust/ci.sh
+export CHAOS_ITERS="${CHAOS_ITERS:-2}"
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 

@@ -20,7 +20,11 @@
 //! [`diff_pairs_in_shard`] (one backend shard at a time — the unit the
 //! TCP server's [`anti_entropy_round`] batches through
 //! [`KeyStore::merge_batch`], so reconciliation takes one stripe-lock
-//! round per shard rather than one lock per key).
+//! round per shard rather than one lock per key). In the threaded
+//! cluster a pair exchange only runs when the chaos fabric
+//! ([`crate::server::fabric::Fabric`]) delivers both directions of the
+//! link that round — crashed or partitioned replicas simply miss the
+//! round and catch up after healing.
 //!
 //! [`anti_entropy_round`]: crate::server::LocalCluster::anti_entropy_round
 //! [`KeyStore::merge_batch`]: crate::store::KeyStore::merge_batch

@@ -102,6 +102,13 @@ impl<M: Mechanism> GetOp<M> {
 
 /// In-flight PUT at a coordinator (after the local write succeeded —
 /// the coordinator's own store counts as the first ack).
+///
+/// The ack source is the caller's concern: the simulator feeds
+/// `ReplicateAck` messages, and the threaded cluster's *sloppy quorum*
+/// also counts acknowledgements from stand-in nodes holding hinted
+/// writes for unreachable home replicas
+/// ([`crate::server::LocalCluster::put_traced`]) — `PutOp` only cares
+/// that `W` distinct nodes acknowledged.
 #[derive(Debug, Clone)]
 pub struct PutOp {
     acks: usize,

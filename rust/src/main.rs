@@ -190,8 +190,24 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
         cluster.shard_count()
     );
     println!("protocol: GET <key> | PUT <key> <value-hex> [ctx-hex] | STATS | QUIT");
-    // serve until killed
+    println!(
+        "chaos:    FAULT CRASH <node> | FAULT PARTITION <a,b> <c,d> | \
+         FAULT DROP <prob> | FAULT DELAY <us> | HEAL [node]"
+    );
+    // serve until killed. Maintenance: drain parked sloppy-quorum hints
+    // every second (without this, hints from FAULT windows would
+    // accumulate until an operator HEALs); run a full anti-entropy round
+    // right after fault activity (pending hints) and otherwise only at a
+    // slow cadence, so an idle fault-free server does not pay all-pairs
+    // key diffing every second.
+    let mut tick = 0u64;
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        std::thread::sleep(std::time::Duration::from_secs(1));
+        tick += 1;
+        let fault_activity = cluster.pending_hints() > 0;
+        cluster.drain_hints();
+        if fault_activity || tick % 30 == 0 {
+            cluster.anti_entropy_round();
+        }
     }
 }

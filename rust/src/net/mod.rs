@@ -10,39 +10,117 @@ use crate::cluster::NodeId;
 use crate::config::NetConfig;
 use crate::testkit::Rng;
 
+/// Symmetric set of blocked (partitioned) unordered node pairs — the one
+/// definition of partition semantics, shared by the simulator's
+/// [`NetModel`] and the threaded cluster's
+/// [`Fabric`](crate::server::fabric::Fabric) so the two worlds cannot
+/// drift apart.
+#[derive(Debug, Clone, Default)]
+pub struct BlockedPairs {
+    pairs: Vec<(NodeId, NodeId)>,
+}
+
+impl BlockedPairs {
+    /// No partitions.
+    pub fn new() -> BlockedPairs {
+        BlockedPairs::default()
+    }
+
+    /// Block the unordered pair `(a, b)`.
+    pub fn block(&mut self, a: NodeId, b: NodeId) {
+        let pair = norm(a, b);
+        if !self.pairs.contains(&pair) {
+            self.pairs.push(pair);
+        }
+    }
+
+    /// Block one group of nodes from another (cartesian product).
+    pub fn block_groups(&mut self, left: &[NodeId], right: &[NodeId]) {
+        for &a in left {
+            for &b in right {
+                self.block(a, b);
+            }
+        }
+    }
+
+    /// Unblock the unordered pair `(a, b)`.
+    pub fn unblock(&mut self, a: NodeId, b: NodeId) {
+        let pair = norm(a, b);
+        self.pairs.retain(|&p| p != pair);
+    }
+
+    /// Unblock everything.
+    pub fn clear(&mut self) {
+        self.pairs.clear();
+    }
+
+    /// Is the unordered pair `(a, b)` blocked?
+    pub fn contains(&self, a: NodeId, b: NodeId) -> bool {
+        self.pairs.contains(&norm(a, b))
+    }
+}
+
 /// Deterministic network model used by the discrete-event simulator.
 #[derive(Debug, Clone)]
 pub struct NetModel {
     cfg: NetConfig,
     rng: Rng,
-    /// Blocked unordered node pairs (active partitions).
-    blocked: Vec<(NodeId, NodeId)>,
+    /// Active partitions.
+    blocked: BlockedPairs,
+    /// Runtime-injected extra loss, on top of the configured baseline
+    /// (chaos schedules; see [`NetModel::degrade`]).
+    extra_drop_prob: f64,
+    /// Runtime-injected fixed extra one-way delay (µs).
+    extra_delay_us: u64,
 }
 
 impl NetModel {
     /// Build from config with an independent RNG stream.
     pub fn new(cfg: NetConfig, rng: Rng) -> NetModel {
-        NetModel { cfg, rng, blocked: Vec::new() }
+        NetModel {
+            cfg,
+            rng,
+            blocked: BlockedPairs::new(),
+            extra_drop_prob: 0.0,
+            extra_delay_us: 0,
+        }
     }
 
     /// Sample the one-way delay for a message, or `None` if it is dropped
     /// (random loss or active partition).
+    ///
+    /// Loopback (`from == to`) is exempt from *every* failure mode — a
+    /// node always reaches its own store, even under a schedule that
+    /// nominally partitions or degrades it. The early return makes that
+    /// invariant structural instead of an accident of branch ordering.
     pub fn delay(&mut self, from: NodeId, to: NodeId) -> Option<u64> {
-        if from != to {
-            if self.is_partitioned(from, to) {
-                return None;
-            }
-            if self.cfg.drop_prob > 0.0 && self.rng.chance(self.cfg.drop_prob) {
-                return None;
-            }
-        }
         if from == to {
             // local loopback: negligible but non-zero so event ordering
-            // stays strict
+            // stays strict; never partitioned, dropped, or delayed
             return Some(1);
         }
+        if self.is_partitioned(from, to) {
+            return None;
+        }
+        if self.cfg.drop_prob > 0.0 && self.rng.chance(self.cfg.drop_prob) {
+            return None;
+        }
+        if self.extra_drop_prob > 0.0 && self.rng.chance(self.extra_drop_prob) {
+            return None;
+        }
         let us = self.rng.exponential(self.cfg.mean_latency_us).max(1.0);
-        Some(us as u64)
+        Some(us as u64 + self.extra_delay_us)
+    }
+
+    /// Degrade link quality at runtime: `extra_drop_prob` is rolled *in
+    /// addition to* the configured baseline loss, and `extra_delay_us` is
+    /// added to every sampled remote delay. `(0.0, 0)` restores the
+    /// configured baseline (the [`crate::sim::failure::Fault::Degrade`]
+    /// semantics).
+    pub fn degrade(&mut self, extra_drop_prob: f64, extra_delay_us: u64) {
+        assert!((0.0..=1.0).contains(&extra_drop_prob));
+        self.extra_drop_prob = extra_drop_prob;
+        self.extra_delay_us = extra_delay_us;
     }
 
     /// Sample the client ⇄ proxy hop delay (never partitioned or dropped:
@@ -54,25 +132,17 @@ impl NetModel {
 
     /// Install a symmetric partition between `a` and `b`.
     pub fn partition(&mut self, a: NodeId, b: NodeId) {
-        let pair = norm(a, b);
-        if !self.blocked.contains(&pair) {
-            self.blocked.push(pair);
-        }
+        self.blocked.block(a, b);
     }
 
     /// Partition one group of nodes from another (cartesian product).
     pub fn partition_groups(&mut self, left: &[NodeId], right: &[NodeId]) {
-        for &a in left {
-            for &b in right {
-                self.partition(a, b);
-            }
-        }
+        self.blocked.block_groups(left, right);
     }
 
     /// Heal a specific partition.
     pub fn heal(&mut self, a: NodeId, b: NodeId) {
-        let pair = norm(a, b);
-        self.blocked.retain(|&p| p != pair);
+        self.blocked.unblock(a, b);
     }
 
     /// Heal everything.
@@ -82,7 +152,7 @@ impl NetModel {
 
     /// Is the pair currently partitioned?
     pub fn is_partitioned(&self, a: NodeId, b: NodeId) -> bool {
-        self.blocked.contains(&norm(a, b))
+        self.blocked.contains(a, b)
     }
 
     /// Draw a per-client clock-skew offset (µs, may be negative) from the
@@ -130,6 +200,33 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(m.delay(2, 2), Some(1));
         }
+    }
+
+    #[test]
+    fn loopback_is_never_partitioned_dropped_or_delayed() {
+        // worst case on every axis: the node is "partitioned from
+        // itself", baseline loss is total, and the link is degraded —
+        // local delivery must still always succeed
+        let mut m = model(1.0, 0.0);
+        m.partition(2, 2);
+        m.degrade(1.0, 10_000);
+        for _ in 0..100 {
+            assert_eq!(m.delay(2, 2), Some(1));
+        }
+        // remote traffic is meanwhile fully dropped
+        assert_eq!(m.delay(0, 1), None);
+    }
+
+    #[test]
+    fn degrade_adds_loss_and_delay_then_restores() {
+        let mut m = model(0.0, 0.0);
+        m.degrade(1.0, 0);
+        assert_eq!(m.delay(0, 1), None, "degraded link drops everything");
+        m.degrade(0.0, 2_000);
+        let d = m.delay(0, 1).unwrap();
+        assert!(d >= 2_000, "extra delay applied: {d}");
+        m.degrade(0.0, 0);
+        assert!(m.delay(0, 1).unwrap() < 2_000, "baseline restored");
     }
 
     #[test]

@@ -11,8 +11,11 @@
 //! or **falsely concurrent**.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::clocks::{Actor, VersionVector};
+use crate::kernel::Val;
 use crate::store::Key;
 
 /// Verdict for one discarded value.
@@ -105,9 +108,120 @@ impl Oracle {
         (false_pairs, true_pairs)
     }
 
+    /// Is this value id registered (written through a traced path)?
+    pub fn knows(&self, val_id: u64) -> bool {
+        self.hist.contains_key(&val_id)
+    }
+
     /// Number of tracked values.
     pub fn tracked(&self) -> usize {
         self.hist.len()
+    }
+}
+
+/// Thread-safe [`Oracle`] adapter for the threaded cluster.
+///
+/// The single-threaded simulator owns its oracle directly; the threaded
+/// [`crate::server::LocalCluster`] instead shares one `SharedOracle`
+/// across connection/client threads: writes register through
+/// [`on_write`](SharedOracle::on_write) *before* touching any store, and
+/// every store mutation reports its before/after sibling sets through
+/// [`record_drops`](SharedOracle::record_drops), which classifies each
+/// discarded version as a correct supersession or a lost update and
+/// accumulates the verdicts in lock-free counters.
+#[derive(Debug, Default)]
+pub struct SharedOracle {
+    inner: Mutex<Oracle>,
+    lost: AtomicU64,
+    correct: AtomicU64,
+    unaudited: AtomicU64,
+}
+
+impl SharedOracle {
+    /// New empty shared oracle.
+    pub fn new() -> SharedOracle {
+        SharedOracle::default()
+    }
+
+    /// Register a write (see [`Oracle::on_write`]). Must happen before
+    /// the value reaches any store so a concurrent drop elsewhere can
+    /// never observe an unregistered id.
+    pub fn on_write(
+        &self,
+        client: Actor,
+        key: Key,
+        val_id: u64,
+        observed: &[u64],
+    ) -> VersionVector {
+        self.inner.lock().unwrap().on_write(client, key, val_id, observed)
+    }
+
+    /// Classify every value present in `before` but gone from `after`
+    /// (one store mutation's sibling-set delta) and tally the verdicts.
+    ///
+    /// Drops involving *untraced* values (ids never registered through
+    /// [`on_write`](SharedOracle::on_write)) are tallied as unaudited
+    /// rather than guessed at: the oracle has no ground truth for them,
+    /// and counting them as lost updates would falsely fail the
+    /// zero-lost-updates invariant on mixed traced/untraced workloads.
+    pub fn record_drops(&self, before: &[Val], after: &[Val]) {
+        if before.is_empty() {
+            return;
+        }
+        let survivors: Vec<u64> = after.iter().map(|v| v.id).collect();
+        let inner = self.inner.lock().unwrap();
+        for v in before {
+            if survivors.contains(&v.id) {
+                continue;
+            }
+            if !inner.knows(v.id) {
+                self.unaudited.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            match inner.classify_drop(v.id, &survivors) {
+                DropVerdict::CorrectSupersession => {
+                    self.correct.fetch_add(1, Ordering::Relaxed);
+                }
+                DropVerdict::LostUpdate if survivors.iter().all(|&s| inner.knows(s)) => {
+                    self.lost.fetch_add(1, Ordering::Relaxed);
+                }
+                // a survivor is untraced: coverage cannot be judged
+                DropVerdict::LostUpdate => {
+                    self.unaudited.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Count (false, true) concurrent pairs among a GET's sibling ids.
+    pub fn classify_siblings(&self, ids: &[u64]) -> (u64, u64) {
+        self.inner.lock().unwrap().classify_siblings(ids)
+    }
+
+    /// Concurrent updates destroyed so far (must stay 0 for DVV).
+    pub fn lost_updates(&self) -> u64 {
+        self.lost.load(Ordering::Relaxed)
+    }
+
+    /// Drops where a survivor causally covered the dropped version.
+    pub fn correct_supersessions(&self) -> u64 {
+        self.correct.load(Ordering::Relaxed)
+    }
+
+    /// Drops involving untraced values, for which no verdict is possible
+    /// (0 in a fully traced workload).
+    pub fn unaudited_drops(&self) -> u64 {
+        self.unaudited.load(Ordering::Relaxed)
+    }
+
+    /// Number of tracked values.
+    pub fn tracked(&self) -> usize {
+        self.inner.lock().unwrap().tracked()
+    }
+
+    /// Run a closure against the underlying [`Oracle`] (final audits).
+    pub fn with_inner<R>(&self, f: impl FnOnce(&Oracle) -> R) -> R {
+        f(&self.inner.lock().unwrap())
     }
 }
 
@@ -174,5 +288,65 @@ mod tests {
         let o = Oracle::new();
         assert!(!o.leq(1, 2));
         assert_eq!(o.classify_drop(1, &[2]), DropVerdict::LostUpdate);
+    }
+
+    #[test]
+    fn shared_oracle_tallies_verdicts() {
+        let o = SharedOracle::new();
+        o.on_write(c(0), 1, 100, &[]);
+        o.on_write(c(1), 1, 101, &[100]); // informed: supersedes 100
+        o.on_write(c(2), 1, 102, &[]); // blind: concurrent with both
+        // 100 dropped, 101 survives -> correct supersession
+        o.record_drops(&[Val::new(100, 0), Val::new(101, 0)], &[Val::new(101, 0)]);
+        // 102 dropped with only 101 surviving -> lost update
+        o.record_drops(&[Val::new(101, 0), Val::new(102, 0)], &[Val::new(101, 0)]);
+        assert_eq!(o.correct_supersessions(), 1);
+        assert_eq!(o.lost_updates(), 1);
+        assert_eq!(o.tracked(), 3);
+        assert_eq!(o.classify_siblings(&[101, 102]), (0, 1));
+        assert!(o.with_inner(|inner| inner.leq(100, 101)));
+    }
+
+    #[test]
+    fn shared_oracle_leaves_untraced_values_unjudged() {
+        let o = SharedOracle::new();
+        o.on_write(c(0), 1, 100, &[]);
+        // an unregistered id dropped: no claim either way
+        o.record_drops(&[Val::new(999, 0)], &[Val::new(100, 0)]);
+        // a registered value displaced by an unregistered survivor:
+        // unauditable, NOT a lost update
+        o.record_drops(&[Val::new(100, 0)], &[Val::new(999, 0)]);
+        assert_eq!(o.lost_updates(), 0);
+        assert_eq!(o.correct_supersessions(), 0);
+        assert_eq!(o.unaudited_drops(), 2);
+    }
+
+    #[test]
+    fn shared_oracle_is_shareable_across_threads() {
+        use std::sync::Arc;
+        let o = Arc::new(SharedOracle::new());
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let o = Arc::clone(&o);
+            handles.push(std::thread::spawn(move || {
+                // each thread is one sequential client: its writes chain
+                let mut prev: Option<u64> = None;
+                for i in 0..50u64 {
+                    let id = u64::from(t) * 1000 + i;
+                    let observed: Vec<u64> = prev.into_iter().collect();
+                    o.on_write(Actor::client(t), 7, id, &observed);
+                    if let Some(p) = prev {
+                        o.record_drops(&[Val::new(p, 0)], &[Val::new(id, 0)]);
+                    }
+                    prev = Some(id);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(o.tracked(), 200);
+        assert_eq!(o.lost_updates(), 0, "chained drops are all supersessions");
+        assert_eq!(o.correct_supersessions(), 4 * 49);
     }
 }

@@ -1,0 +1,410 @@
+//! Chaos fabric: the runtime-mutable switchboard every inter-replica
+//! interaction of the threaded [`LocalCluster`](super::LocalCluster) is
+//! routed through.
+//!
+//! The discrete-event simulator injects faults by construction — every
+//! message hop consults [`crate::net::NetModel`]. The threaded cluster
+//! calls peer stores directly, so without a choke point its PUT fan-out,
+//! GET sub-reads, read repair, and anti-entropy exchanges could never be
+//! exercised under partition, crash, or loss. The `Fabric` is that choke
+//! point: before touching a peer's store, the caller asks
+//! [`deliver`](Fabric::deliver) whether the message would have arrived,
+//! and the fabric answers from its current fault state — crashed nodes,
+//! symmetric partitions, probabilistic drops, and bounded injected
+//! delays — mirroring the `NetModel` semantics (loopback is exempt from
+//! everything; a node always reaches its own store).
+//!
+//! Fault state mutates at runtime from three sources:
+//!
+//! * direct calls ([`crash`](Fabric::crash), \
+//!   [`partition_groups`](Fabric::partition_groups), …) — what the
+//!   `FAULT`/`HEAL` admin commands of the TCP protocol invoke;
+//! * a [`FaultPlan`] stepped through [`advance`](Fabric::advance) — the
+//!   *same* schedule type the simulator consumes, so one scenario drives
+//!   both worlds (`rust/tests/fabric_chaos.rs`);
+//! * [`heal_all`](Fabric::heal_all), the big red reset switch.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use crate::cluster::NodeId;
+use crate::net::BlockedPairs;
+use crate::sim::failure::{Fault, FaultPlan};
+use crate::testkit::Rng;
+
+/// Cap on the injected per-message delay so a hostile schedule cannot
+/// wedge connection threads (the "bounded delays" guarantee).
+pub const MAX_INJECTED_DELAY_US: u64 = 50_000;
+
+/// Runtime-mutable fault state shared by every cluster thread. All
+/// methods take `&self`; interior synchronization only.
+#[derive(Debug)]
+pub struct Fabric {
+    /// Per-node liveness; crashed nodes drop all traffic in and out.
+    up: Vec<AtomicBool>,
+    /// Active partitions (the same [`BlockedPairs`] semantics the
+    /// simulator's `NetModel` uses).
+    blocked: RwLock<BlockedPairs>,
+    /// Message-drop probability in parts-per-million.
+    drop_ppm: AtomicU32,
+    /// Fixed extra one-way delay injected per message (µs, capped).
+    extra_delay_us: AtomicU64,
+    /// Deterministic drop-roll stream (given single-threaded driving).
+    rng: Mutex<Rng>,
+    /// Messages allowed through.
+    delivered: AtomicU64,
+    /// Messages refused (crash, partition, or drop roll).
+    dropped: AtomicU64,
+    /// Virtual time up to (and including) which a [`FaultPlan`] has been
+    /// applied; `None` until the first [`advance`](Fabric::advance), so
+    /// faults scheduled at `t = 0` are not skipped.
+    cursor_us: Mutex<Option<u64>>,
+}
+
+impl Fabric {
+    /// All-clear fabric for `nodes` replicas.
+    pub fn new(nodes: usize, seed: u64) -> Fabric {
+        Fabric {
+            up: (0..nodes).map(|_| AtomicBool::new(true)).collect(),
+            blocked: RwLock::new(BlockedPairs::new()),
+            drop_ppm: AtomicU32::new(0),
+            extra_delay_us: AtomicU64::new(0),
+            rng: Mutex::new(Rng::new(seed)),
+            delivered: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            cursor_us: Mutex::new(None),
+        }
+    }
+
+    /// Number of nodes the fabric routes for.
+    pub fn node_count(&self) -> usize {
+        self.up.len()
+    }
+
+    /// Reset the drop-roll RNG (reproducible chaos runs).
+    pub fn reseed(&self, seed: u64) {
+        *self.rng.lock().unwrap() = Rng::new(seed);
+    }
+
+    // -----------------------------------------------------------------
+    // fault state mutation
+    // -----------------------------------------------------------------
+
+    /// Crash a node: every message to or from it is refused.
+    pub fn crash(&self, node: NodeId) {
+        self.up[node].store(false, Ordering::Relaxed);
+    }
+
+    /// Recover a crashed node.
+    pub fn recover(&self, node: NodeId) {
+        self.up[node].store(true, Ordering::Relaxed);
+    }
+
+    /// Is the node currently up?
+    pub fn is_up(&self, node: NodeId) -> bool {
+        self.up[node].load(Ordering::Relaxed)
+    }
+
+    /// Install a symmetric partition between every `left`/`right` pair.
+    pub fn partition_groups(&self, left: &[NodeId], right: &[NodeId]) {
+        self.blocked.write().unwrap().block_groups(left, right);
+    }
+
+    /// Remove every partition (crashed nodes stay crashed).
+    pub fn heal_partitions(&self) {
+        self.blocked.write().unwrap().clear();
+    }
+
+    /// Is the pair currently partitioned?
+    pub fn is_partitioned(&self, a: NodeId, b: NodeId) -> bool {
+        self.blocked.read().unwrap().contains(a, b)
+    }
+
+    /// Set the probabilistic message-drop rate.
+    pub fn set_drop_prob(&self, prob: f64) {
+        self.drop_ppm.store(crate::sim::failure::drop_ppm(prob), Ordering::Relaxed);
+    }
+
+    /// Current drop probability.
+    pub fn drop_prob(&self) -> f64 {
+        self.drop_ppm.load(Ordering::Relaxed) as f64 / 1_000_000.0
+    }
+
+    /// Set the injected per-message delay (µs; capped at
+    /// [`MAX_INJECTED_DELAY_US`] at delivery time).
+    pub fn set_extra_delay_us(&self, us: u64) {
+        self.extra_delay_us.store(us, Ordering::Relaxed);
+    }
+
+    /// Current injected per-message delay (µs).
+    pub fn extra_delay_us(&self) -> u64 {
+        self.extra_delay_us.load(Ordering::Relaxed)
+    }
+
+    /// Degrade the network: drops plus delay. `(0.0, 0)` restores clean
+    /// links (the [`Fault::Degrade`] semantics).
+    pub fn degrade(&self, drop_prob: f64, extra_delay_us: u64) {
+        self.set_drop_prob(drop_prob);
+        self.set_extra_delay_us(extra_delay_us);
+    }
+
+    /// Full reset: recover every node, heal every partition, restore
+    /// clean links. (The plan cursor is *not* rewound; a drained plan
+    /// stays drained.)
+    pub fn heal_all(&self) {
+        for node in &self.up {
+            node.store(true, Ordering::Relaxed);
+        }
+        self.heal_partitions();
+        self.degrade(0.0, 0);
+    }
+
+    // -----------------------------------------------------------------
+    // routing
+    // -----------------------------------------------------------------
+
+    /// Is the link even open — both endpoints up and not partitioned?
+    /// (No drop roll, no delay; loopback only needs the node up.)
+    pub fn link_open(&self, from: NodeId, to: NodeId) -> bool {
+        if !self.is_up(from) || !self.is_up(to) {
+            return false;
+        }
+        from == to || !self.is_partitioned(from, to)
+    }
+
+    /// Would a message from `from` to `to` arrive? Applies the full
+    /// fault model: crash, partition, drop roll, then the injected delay
+    /// (a real, bounded `sleep` — concurrency under degraded links is
+    /// exactly what the chaos tests exercise). Loopback skips partition,
+    /// drop, and delay, mirroring [`crate::net::NetModel::delay`].
+    pub fn deliver(&self, from: NodeId, to: NodeId) -> bool {
+        if from == to {
+            let up = self.is_up(from);
+            self.count(up);
+            return up;
+        }
+        if !self.link_open(from, to) {
+            self.count(false);
+            return false;
+        }
+        let ppm = self.drop_ppm.load(Ordering::Relaxed);
+        if ppm > 0 {
+            let dropped = self.rng.lock().unwrap().below(1_000_000) < u64::from(ppm);
+            if dropped {
+                self.count(false);
+                return false;
+            }
+        }
+        let delay = self.extra_delay_us.load(Ordering::Relaxed).min(MAX_INJECTED_DELAY_US);
+        if delay > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(delay));
+        }
+        self.count(true);
+        true
+    }
+
+    fn count(&self, delivered: bool) {
+        if delivered {
+            self.delivered.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Messages allowed through so far.
+    pub fn delivered(&self) -> u64 {
+        self.delivered.load(Ordering::Relaxed)
+    }
+
+    /// Messages refused so far (crash, partition, or drop roll).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    // -----------------------------------------------------------------
+    // schedule driving
+    // -----------------------------------------------------------------
+
+    /// Apply one fault *now*, ignoring its timestamp.
+    pub fn apply_fault(&self, fault: &Fault) {
+        match fault {
+            Fault::Crash { node, .. } => self.crash(*node),
+            Fault::Recover { node, .. } => self.recover(*node),
+            Fault::Partition { left, right, .. } => self.partition_groups(left, right),
+            Fault::Heal { .. } => self.heal_partitions(),
+            Fault::Degrade { drop_ppm, extra_delay_us, .. } => {
+                self.drop_ppm.store(*drop_ppm, Ordering::Relaxed);
+                self.set_extra_delay_us(*extra_delay_us);
+            }
+        }
+    }
+
+    /// Advance the plan's virtual clock to `to_us`: apply, in timestamp
+    /// order, every not-yet-applied fault with `at <= to_us` (the first
+    /// call covers `t = 0` faults, matching the simulator which fires
+    /// them at time zero). Stepping a schedule this way while worker
+    /// threads run is how a [`FaultPlan`] validated in the simulator
+    /// replays against the threaded cluster.
+    pub fn advance(&self, plan: &FaultPlan, to_us: u64) {
+        let mut cursor = self.cursor_us.lock().unwrap();
+        let from = match *cursor {
+            Some(c) if to_us <= c => return,
+            Some(c) => c.saturating_add(1),
+            None => 0,
+        };
+        let mut due: Vec<&Fault> = plan
+            .faults
+            .iter()
+            .filter(|f| f.at() >= from && f.at() <= to_us)
+            .collect();
+        due.sort_by_key(|f| f.at());
+        for fault in due {
+            self.apply_fault(fault);
+        }
+        *cursor = Some(to_us);
+    }
+
+    /// Virtual time the plan cursor has reached (0 before any advance).
+    pub fn cursor_us(&self) -> u64 {
+        self.cursor_us.lock().unwrap().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_clear_delivers_everything() {
+        let f = Fabric::new(3, 1);
+        for a in 0..3 {
+            for b in 0..3 {
+                assert!(f.deliver(a, b));
+            }
+        }
+        assert_eq!(f.delivered(), 9);
+        assert_eq!(f.dropped(), 0);
+    }
+
+    #[test]
+    fn crash_blocks_both_directions_until_recover() {
+        let f = Fabric::new(3, 1);
+        f.crash(1);
+        assert!(!f.is_up(1));
+        assert!(!f.deliver(0, 1));
+        assert!(!f.deliver(1, 0));
+        assert!(!f.deliver(1, 1), "a crashed node cannot even reach itself");
+        assert!(f.deliver(0, 2));
+        f.recover(1);
+        assert!(f.deliver(0, 1));
+    }
+
+    #[test]
+    fn partitions_are_symmetric_and_heal() {
+        let f = Fabric::new(4, 1);
+        f.partition_groups(&[0, 1], &[2, 3]);
+        assert!(f.is_partitioned(0, 2) && f.is_partitioned(2, 0));
+        assert!(!f.deliver(1, 3) && !f.deliver(3, 1));
+        assert!(f.deliver(0, 1), "same side unaffected");
+        f.heal_partitions();
+        assert!(f.deliver(1, 3));
+    }
+
+    #[test]
+    fn loopback_survives_partition_and_drops() {
+        let f = Fabric::new(2, 1);
+        f.partition_groups(&[0], &[0, 1]); // nonsense self-pair included
+        f.set_drop_prob(1.0);
+        for _ in 0..50 {
+            assert!(f.deliver(0, 0), "loopback is exempt from faults");
+        }
+        assert!(!f.deliver(0, 1));
+    }
+
+    #[test]
+    fn drop_prob_is_respected() {
+        let f = Fabric::new(2, 7);
+        f.set_drop_prob(0.5);
+        let through = (0..2000).filter(|_| f.deliver(0, 1)).count();
+        assert!((800..1200).contains(&through), "through={through}");
+        f.set_drop_prob(0.0);
+        assert!(f.deliver(0, 1));
+    }
+
+    #[test]
+    fn heal_all_resets_every_fault_axis() {
+        let f = Fabric::new(3, 1);
+        f.crash(0);
+        f.partition_groups(&[1], &[2]);
+        f.degrade(1.0, 99);
+        f.heal_all();
+        assert!(f.is_up(0));
+        assert!(!f.is_partitioned(1, 2));
+        assert_eq!(f.drop_prob(), 0.0);
+        assert_eq!(f.extra_delay_us(), 0);
+        for a in 0..3 {
+            for b in 0..3 {
+                assert!(f.deliver(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn advance_applies_faults_in_order_once() {
+        let plan = FaultPlan::new()
+            .crash_window(0, 100, 200)
+            .partition_window(vec![0], vec![1], 150, 300);
+        let f = Fabric::new(2, 1);
+        f.advance(&plan, 50);
+        assert!(f.is_up(0));
+        f.advance(&plan, 120);
+        assert!(!f.is_up(0), "crash at 100 applied");
+        f.advance(&plan, 120); // idempotent: cursor does not rewind
+        f.advance(&plan, 250);
+        assert!(f.is_up(0), "recover at 200 applied");
+        assert!(f.is_partitioned(0, 1), "partition at 150 applied");
+        f.advance(&plan, 1000);
+        assert!(!f.is_partitioned(0, 1), "heal at 300 applied");
+        assert_eq!(f.cursor_us(), 1000);
+    }
+
+    #[test]
+    fn advance_applies_time_zero_faults() {
+        // regression: the first advance must cover t = 0 faults exactly
+        // like the simulator fires them at time zero
+        let plan = FaultPlan::new().crash_window(0, 0, 100);
+        let f = Fabric::new(1, 1);
+        assert_eq!(f.cursor_us(), 0);
+        f.advance(&plan, 50);
+        assert!(!f.is_up(0), "crash at t=0 applied on the first advance");
+        f.advance(&plan, 100);
+        assert!(f.is_up(0));
+    }
+
+    #[test]
+    fn same_timestamp_faults_apply_in_plan_order() {
+        // crash and recover at the same instant: plan order wins, so the
+        // node ends up recovered
+        let plan = FaultPlan {
+            faults: vec![
+                Fault::Crash { at: 10, node: 0 },
+                Fault::Recover { at: 10, node: 0 },
+            ],
+        };
+        let f = Fabric::new(1, 1);
+        f.advance(&plan, 10);
+        assert!(f.is_up(0));
+    }
+
+    #[test]
+    fn degrade_fault_sets_and_restores_link_quality() {
+        let plan = FaultPlan::new().degrade_window(0.25, 400, 100, 200);
+        let f = Fabric::new(2, 1);
+        f.advance(&plan, 150);
+        assert!((f.drop_prob() - 0.25).abs() < 1e-9);
+        assert_eq!(f.extra_delay_us(), 400);
+        f.advance(&plan, 250);
+        assert_eq!(f.drop_prob(), 0.0);
+        assert_eq!(f.extra_delay_us(), 0);
+    }
+}

@@ -9,68 +9,85 @@
 //! everywhere else.
 //!
 //! Concurrency layout: there is **no store-wide lock**. Each replica
-//! [`Node`] keeps its versioned states in a
-//! [`ShardedBackend`](crate::store::ShardedBackend) — power-of-two
-//! lock-striped shards — so concurrent GET/PUT on different keys proceed
-//! in parallel, and GETs on the same shard share its reader lock. Value
-//! payloads live in a similarly striped blob table keyed by write id.
-//! PUT replicates its synced state with one stripe-lock acquisition per
-//! peer; multi-key fan-out — [`LocalCluster::anti_entropy_round`], which
-//! reconciles replica pairs shard by shard through the bulk
-//! [`crate::antientropy`] path — accumulates per-peer merges in a
+//! [`Node`] keeps its versioned states in a pluggable
+//! [`StorageBackend`](crate::store::StorageBackend) — the TCP server uses
+//! the power-of-two lock-striped [`ShardedBackend`] — so concurrent
+//! GET/PUT on different keys proceed in parallel, and GETs on the same
+//! shard share its reader lock. Value payloads live in a similarly
+//! striped blob table keyed by write id. PUT replicates its synced state
+//! with one stripe-lock acquisition per peer; multi-key fan-out —
+//! [`LocalCluster::anti_entropy_round`], which reconciles replica pairs
+//! shard by shard through the bulk [`crate::antientropy`] path —
+//! accumulates per-peer merges in a
 //! [`MergeBatch`](crate::coordinator::MergeBatch) and applies each peer's
 //! batch with one stripe-lock round per shard ([`KeyStore::merge_batch`]).
+//!
+//! Fault injection: every inter-replica interaction — PUT fan-out, GET
+//! sub-reads, read repair, anti-entropy exchanges, hint delivery — is
+//! routed through the cluster's [`fabric::Fabric`] switchboard, so
+//! crashes, partitions, loss, and delay can be injected at runtime (the
+//! `FAULT`/`HEAL` admin commands, or a [`crate::sim::failure::FaultPlan`]
+//! stepped by a test). Writes use a **sloppy quorum**: when a home
+//! replica is unreachable, the coordinator hands the synced state to the
+//! next reachable node off the preference list along with a *hint*
+//! naming the intended home; [`LocalCluster::drain_hints`] (also run at
+//! the start of every anti-entropy round) delivers hints once the home
+//! is reachable again. A [`crate::oracle::SharedOracle`] can be attached
+//! to audit every discarded version under real concurrency.
 
+pub mod fabric;
 pub mod protocol;
 pub mod tcp;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::antientropy;
 use crate::clocks::vv::VersionVector;
 use crate::clocks::Actor;
 use crate::cluster::ring::{hash_str, Ring};
+use crate::cluster::NodeId;
 use crate::coordinator::{GetOp, MergeBatch, PutOp, QuorumSpec};
 use crate::error::Result;
 use crate::kernel::mechs::DvvMech;
-use crate::kernel::{Val, WriteMeta};
-use crate::store::{KeyStore, ShardedBackend};
+use crate::kernel::{Mechanism, Val, WriteMeta};
+use crate::oracle::SharedOracle;
+use crate::store::{Key, KeyStore, ShardedBackend, StorageBackend};
+use self::fabric::Fabric;
+
+/// The per-key replica state the cluster's mechanism keeps.
+type DvvState = <DvvMech as Mechanism>::State;
 
 /// A GET's answer: sibling payloads plus the encoded causal context.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GetAnswer {
     /// Sibling values (raw bytes), one per concurrent version.
     pub values: Vec<Vec<u8>>,
+    /// Write ids parallel to `values` — what a traced client reports as
+    /// `observed` on its next PUT ([`LocalCluster::put_traced`]).
+    pub ids: Vec<u64>,
     /// Opaque context to pass back on PUT (encoded version vector).
     pub context: Vec<u8>,
 }
 
-/// One replica: a lock-striped DVV key store. Connection threads operate
-/// on a `Node` through `&self`; the per-shard locks inside the backend
-/// are the only synchronization.
+/// One replica: a versioned DVV key store over backend `B`. Connection
+/// threads operate on a `Node` through `&self`; the locks inside the
+/// backend are the only synchronization.
 #[derive(Debug)]
-pub struct Node {
+pub struct Node<B: StorageBackend<DvvMech> = ShardedBackend<DvvMech>> {
     id: usize,
-    store: KeyStore<DvvMech, ShardedBackend<DvvMech>>,
+    store: KeyStore<DvvMech, B>,
 }
 
-impl Node {
-    fn new(id: usize, shards: usize) -> Node {
-        Node {
-            id,
-            store: KeyStore::with_backend(DvvMech, ShardedBackend::with_shards(shards)),
-        }
-    }
-
+impl<B: StorageBackend<DvvMech>> Node<B> {
     /// Replica id (dense, matches ring node ids).
     pub fn id(&self) -> usize {
         self.id
     }
 
     /// The replica's versioned store.
-    pub fn store(&self) -> &KeyStore<DvvMech, ShardedBackend<DvvMech>> {
+    pub fn store(&self) -> &KeyStore<DvvMech, B> {
         &self.store
     }
 }
@@ -109,14 +126,31 @@ impl BlobStore {
     }
 }
 
+/// A sloppy-quorum write parked at a stand-in node, waiting for its home
+/// replica to become reachable again.
+#[derive(Debug, Clone)]
+struct Hint {
+    /// The stand-in currently holding the state.
+    holder: NodeId,
+    /// The preference-list replica the write was meant for.
+    home: NodeId,
+    /// The key.
+    key: Key,
+    /// The synced state to merge at `home` on heal.
+    state: DvvState,
+}
+
 /// An in-process replicated DVV store.
-pub struct LocalCluster {
-    nodes: Vec<Node>,
+pub struct LocalCluster<B: StorageBackend<DvvMech> = ShardedBackend<DvvMech>> {
+    nodes: Vec<Node<B>>,
     blobs: BlobStore,
     ring: Ring,
     quorum: QuorumSpec,
     next_id: AtomicU64,
     mech: DvvMech,
+    fabric: Fabric,
+    hints: Mutex<Vec<Hint>>,
+    oracle: OnceLock<Arc<SharedOracle>>,
 }
 
 impl LocalCluster {
@@ -134,14 +168,34 @@ impl LocalCluster {
         w: usize,
         shards: usize,
     ) -> Result<LocalCluster> {
+        LocalCluster::with_backends(nodes, n, r, w, |_| ShardedBackend::with_shards(shards))
+    }
+}
+
+impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
+    /// Build over an explicit storage backend per replica (`make` is
+    /// called once per node id) — how the chaos tests run the same
+    /// cluster over both the flat and the sharded backend.
+    pub fn with_backends(
+        nodes: usize,
+        n: usize,
+        r: usize,
+        w: usize,
+        mut make: impl FnMut(usize) -> B,
+    ) -> Result<LocalCluster<B>> {
         let quorum = QuorumSpec::new(n.min(nodes), r.min(n), w.min(n))?;
         Ok(LocalCluster {
-            nodes: (0..nodes).map(|id| Node::new(id, shards)).collect(),
+            nodes: (0..nodes)
+                .map(|id| Node { id, store: KeyStore::with_backend(DvvMech, make(id)) })
+                .collect(),
             blobs: BlobStore::new(16),
             ring: Ring::new(nodes, 64)?,
             quorum,
             next_id: AtomicU64::new(1),
             mech: DvvMech,
+            fabric: Fabric::new(nodes, 0xFA_B0),
+            hints: Mutex::new(Vec::new()),
+            oracle: OnceLock::new(),
         })
     }
 
@@ -156,40 +210,167 @@ impl LocalCluster {
     }
 
     /// One replica (tests, diagnostics, anti-entropy drivers).
-    pub fn node(&self, id: usize) -> &Node {
+    pub fn node(&self, id: usize) -> &Node<B> {
         &self.nodes[id]
     }
 
-    /// GET through a read quorum with read repair.
+    /// The quorum parameters in force.
+    pub fn quorum(&self) -> QuorumSpec {
+        self.quorum
+    }
+
+    /// The chaos fabric every inter-replica message consults.
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
+    /// Attach a ground-truth auditor. Every subsequent store mutation
+    /// reports its sibling-set delta; writes that should count must go
+    /// through [`put_traced`](LocalCluster::put_traced). A second attach
+    /// is ignored.
+    pub fn attach_oracle(&self, oracle: Arc<SharedOracle>) {
+        let _ = self.oracle.set(oracle);
+    }
+
+    /// The attached oracle, if any.
+    pub fn oracle(&self) -> Option<&Arc<SharedOracle>> {
+        self.oracle.get()
+    }
+
+    /// The preference list (home replicas) for a key.
+    pub fn replicas_of(&self, key: &str) -> Vec<NodeId> {
+        self.ring.replicas_for(hash_str(key), self.quorum.n)
+    }
+
+    /// First *live* node of the preference list coordinates (clients can
+    /// reach any node; crashed ones fail over to the next).
+    fn pick_coordinator(&self, replicas: &[NodeId]) -> Result<NodeId> {
+        replicas
+            .iter()
+            .copied()
+            .find(|&n| self.fabric.is_up(n))
+            .ok_or_else(|| crate::Error::Unavailable("no live replica to coordinate".into()))
+    }
+
+    /// Coordinator-local PUT (§4.1 update + sync under one shard lock),
+    /// with oracle drop-auditing when attached.
+    fn write_at(
+        &self,
+        node: NodeId,
+        key: Key,
+        ctx: &VersionVector,
+        val: Val,
+        meta: &WriteMeta,
+    ) -> DvvState {
+        let coord = Actor::server(node as u32);
+        if let Some(oracle) = self.oracle.get() {
+            let (before, state) = self.nodes[node].store.write_audited(key, ctx, val, coord, meta);
+            oracle.record_drops(&before, &self.mech.values(&state));
+            state
+        } else {
+            self.nodes[node].store.write_returning(key, ctx, val, coord, meta)
+        }
+    }
+
+    /// Replica-side merge (replication, read repair, anti-entropy, hint
+    /// delivery), with oracle drop-auditing when attached.
+    fn merge_at(&self, node: NodeId, key: Key, incoming: &DvvState) {
+        if let Some(oracle) = self.oracle.get() {
+            let (before, after) = self.nodes[node].store.merge_key_audited(key, incoming);
+            oracle.record_drops(&before, &after);
+        } else {
+            self.nodes[node].store.merge_key(key, incoming);
+        }
+    }
+
+    /// GET through a read quorum with read repair. Sub-reads and the
+    /// repair push are fabric-routed; unreachable replicas simply do not
+    /// reply, and fewer than `R` replies is a quorum failure.
     pub fn get(&self, key: &str) -> Result<GetAnswer> {
         let k = hash_str(key);
         let replicas = self.ring.replicas_for(k, self.quorum.n);
+        let coordinator = self.pick_coordinator(&replicas)?;
         let mut op: GetOp<DvvMech> = GetOp::new(self.quorum);
         let mut answer = None;
+        let mut reached = Vec::with_capacity(replicas.len());
         for &node in &replicas {
+            // a sub-read is a round trip: request out, state reply back
+            if node != coordinator
+                && !(self.fabric.deliver(coordinator, node)
+                    && self.fabric.deliver(node, coordinator))
+            {
+                continue;
+            }
             let state = self.nodes[node].store.state(k);
+            reached.push(node);
             if let Some(res) = op.on_reply(&self.mech, &state) {
                 answer = Some(res);
             }
-        }
-        // read repair with the fully merged state
-        let merged = op.merged().clone();
-        for &node in &replicas {
-            self.nodes[node].store.merge_key(k, &merged);
         }
         let res = answer.ok_or(crate::Error::QuorumNotMet {
             got: op.replies(),
             needed: self.quorum.r,
         })?;
+        // read repair with the fully merged state, on every replica that
+        // answered (the push is one more fabric-routed message)
+        let merged = op.merged().clone();
+        for &node in &reached {
+            if node == coordinator || self.fabric.deliver(coordinator, node) {
+                self.merge_at(node, k, &merged);
+            }
+        }
         let values = res.values.iter().map(|v| self.blobs.get(v.id)).collect();
+        let ids = res.values.iter().map(|v| v.id).collect();
         let mut context = Vec::new();
         crate::clocks::encoding::encode_vv(&res.context, &mut context);
-        Ok(GetAnswer { values, context })
+        Ok(GetAnswer { values, ids, context })
     }
 
-    /// PUT through a write quorum. `context` is the bytes from a prior
-    /// GET (empty slice = blind write).
+    /// PUT through a (sloppy) write quorum. `context` is the bytes from
+    /// a prior GET (empty slice = blind write).
+    ///
+    /// Untraced: with an oracle attached this write is *not* registered
+    /// (the caller cannot supply the observed ids), and any sibling it
+    /// displaces is tallied as unaudited rather than misclassified —
+    /// oracle-verified runs should write through
+    /// [`put_traced`](LocalCluster::put_traced) exclusively.
     pub fn put(&self, key: &str, value: Vec<u8>, context: &[u8]) -> Result<()> {
+        self.put_inner(key, value, context, Actor::client(0), None).map(|_| ())
+    }
+
+    /// PUT that also registers ground truth with an attached oracle:
+    /// `client` is the writing actor (one sequential actor per real
+    /// client) and `observed` the value ids from that client's latest GET
+    /// of this key. Returns the new write's id.
+    ///
+    /// Fault semantics (§4.1 under partition): the synced state fans out
+    /// to every home replica through the fabric. Homes that cannot be
+    /// reached are replaced by stand-ins — the next reachable nodes off
+    /// the preference list — which store the state *plus a hint* naming
+    /// the intended home ([`drain_hints`](LocalCluster::drain_hints)
+    /// delivers it on heal). The write succeeds when `W` distinct nodes
+    /// (home or stand-in, coordinator included) acknowledged.
+    pub fn put_traced(
+        &self,
+        key: &str,
+        value: Vec<u8>,
+        context: &[u8],
+        client: Actor,
+        observed: &[u64],
+    ) -> Result<u64> {
+        self.put_inner(key, value, context, client, Some(observed))
+    }
+
+    /// Shared PUT path; `observed: None` marks an untraced write that an
+    /// attached oracle must not register.
+    fn put_inner(
+        &self,
+        key: &str,
+        value: Vec<u8>,
+        context: &[u8],
+        client: Actor,
+        observed: Option<&[u64]>,
+    ) -> Result<u64> {
         let k = hash_str(key);
         let ctx: VersionVector = if context.is_empty() {
             VersionVector::new()
@@ -198,49 +379,127 @@ impl LocalCluster {
             crate::clocks::encoding::decode_vv(context, &mut pos)?
         };
         let replicas = self.ring.replicas_for(k, self.quorum.n);
-        let coordinator = replicas[0];
+        let coordinator = self.pick_coordinator(&replicas)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let val = Val::new(id, value.len() as u32);
         self.blobs.insert(id, value);
+        if let (Some(oracle), Some(observed)) = (self.oracle.get(), observed) {
+            // ground truth is fixed by what the client saw, before the
+            // value can appear (or be dropped) anywhere
+            oracle.on_write(client, k, id, observed);
+        }
 
-        let meta = WriteMeta {
-            client: Actor::client(0),
-            physical_us: 0,
-            client_seq: None,
-        };
+        let meta = WriteMeta { client, physical_us: 0, client_seq: None };
         // §4.1: update + sync at the coordinator, under one shard lock...
-        let state = self.nodes[coordinator].store.write_returning(
-            k,
-            &ctx,
-            val,
-            Actor::server(coordinator as u32),
-            &meta,
-        );
-        // ...then replicate the synced state to each peer. A PUT carries
-        // exactly one key, so this is a direct per-peer merge; multi-key
-        // fan-out (anti-entropy) goes through `MergeBatch` instead.
+        let state = self.write_at(coordinator, k, &ctx, val, &meta);
+        // ...then replicate the synced state to each home replica. A PUT
+        // carries exactly one key, so this is a direct per-peer merge;
+        // multi-key fan-out (anti-entropy) goes through `MergeBatch`.
         let mut op = PutOp::new(self.quorum);
         let mut done = op.satisfied_immediately();
-        for &node in replicas.iter().skip(1) {
-            self.nodes[node].store.merge_key(k, &state);
-            if op.on_ack() {
-                done = true;
+        let mut missed: Vec<NodeId> = Vec::new();
+        for &node in replicas.iter().filter(|&&n| n != coordinator) {
+            if self.fabric.deliver(coordinator, node) {
+                self.merge_at(node, k, &state);
+                // the ack is its own message; a lost ack leaves the data
+                // in place but does not count toward the quorum
+                if self.fabric.deliver(node, coordinator) && op.on_ack() {
+                    done = true;
+                }
+            } else {
+                missed.push(node);
             }
         }
-        debug_assert!(done || self.quorum.w > replicas.len());
-        Ok(())
+        // sloppy quorum + hinted handoff: *every* unreachable home gets a
+        // stand-in off the preference list holding the state plus a hint
+        // — even when the quorum is already met, since the hint (not
+        // anti-entropy) is what gets the write home promptly on heal.
+        // Stand-in acks count toward the quorum like home acks.
+        if !missed.is_empty() {
+            let candidates: Vec<NodeId> = self
+                .ring
+                .replicas_for(k, self.nodes.len())
+                .into_iter()
+                .filter(|n| !replicas.contains(n))
+                .collect();
+            let mut used = vec![false; candidates.len()];
+            for &home in &missed {
+                // first reachable still-unused stand-in off the
+                // preference list; a candidate that merely lost a drop
+                // roll stays available for the next home
+                for (i, &holder) in candidates.iter().enumerate() {
+                    if used[i] || !self.fabric.deliver(coordinator, holder) {
+                        continue;
+                    }
+                    used[i] = true;
+                    self.merge_at(holder, k, &state);
+                    self.hints.lock().unwrap().push(Hint {
+                        holder,
+                        home,
+                        key: k,
+                        state: state.clone(),
+                    });
+                    if self.fabric.deliver(holder, coordinator) && op.on_ack() {
+                        done = true;
+                    }
+                    break;
+                }
+            }
+        }
+        if done {
+            Ok(id)
+        } else {
+            Err(crate::Error::QuorumNotMet { got: op.acks(), needed: self.quorum.w })
+        }
     }
 
-    /// One push–pull anti-entropy round: reconcile every replica pair,
-    /// diffing shard by shard through the bulk sync path and accumulating
-    /// the merged states in a per-peer [`MergeBatch`]. Each side then
-    /// applies its whole batch with [`KeyStore::merge_batch`] — one
-    /// stripe-lock round per shard instead of one lock per key. Returns
-    /// the number of key reconciliations applied (per pair).
+    /// Try to deliver every parked hint whose home replica is reachable
+    /// from its holder; undeliverable hints stay parked. Returns the
+    /// number delivered. Run automatically at the start of every
+    /// [`anti_entropy_round`](LocalCluster::anti_entropy_round).
+    pub fn drain_hints(&self) -> usize {
+        let pending: Vec<Hint> = std::mem::take(&mut *self.hints.lock().unwrap());
+        if pending.is_empty() {
+            return 0;
+        }
+        let mut delivered = 0;
+        let mut parked = Vec::new();
+        for hint in pending {
+            if self.fabric.deliver(hint.holder, hint.home) {
+                self.merge_at(hint.home, hint.key, &hint.state);
+                delivered += 1;
+            } else {
+                parked.push(hint);
+            }
+        }
+        if !parked.is_empty() {
+            self.hints.lock().unwrap().append(&mut parked);
+        }
+        delivered
+    }
+
+    /// Hints currently parked at stand-in nodes.
+    pub fn pending_hints(&self) -> usize {
+        self.hints.lock().unwrap().len()
+    }
+
+    /// One push–pull anti-entropy round: drain deliverable hints, then
+    /// reconcile every mutually-reachable replica pair, diffing shard by
+    /// shard through the bulk sync path and accumulating the merged
+    /// states in a per-peer [`MergeBatch`]. Each side then applies its
+    /// whole batch with [`KeyStore::merge_batch`] — one stripe-lock round
+    /// per shard instead of one lock per key (per-key audited merges when
+    /// an oracle is attached). Returns the number of key reconciliations
+    /// applied (per pair).
     pub fn anti_entropy_round(&self) -> usize {
+        self.drain_hints();
         let mut reconciled = 0;
         for (a, node_a) in self.nodes.iter().enumerate() {
             for (b, node_b) in self.nodes.iter().enumerate().skip(a + 1) {
+                // the exchange needs both directions of the link this round
+                if !self.fabric.deliver(a, b) || !self.fabric.deliver(b, a) {
+                    continue;
+                }
                 let (sa, sb) = (&node_a.store, &node_b.store);
                 let mut batch: MergeBatch<DvvMech> = MergeBatch::new(self.nodes.len());
                 for shard in 0..sa.shard_count() {
@@ -255,7 +514,13 @@ impl LocalCluster {
                 }
                 reconciled += batch.len() / 2;
                 for (node, items) in batch.drain() {
-                    self.nodes[node].store.merge_batch(&items);
+                    if self.oracle.get().is_some() {
+                        for (key, state) in &items {
+                            self.merge_at(node, *key, state);
+                        }
+                    } else {
+                        self.nodes[node].store.merge_batch(&items);
+                    }
                 }
             }
         }
@@ -289,6 +554,7 @@ mod tests {
         c.put("user:1", b"alice".to_vec(), &[]).unwrap();
         let ans = c.get("user:1").unwrap();
         assert_eq!(ans.values, vec![b"alice".to_vec()]);
+        assert_eq!(ans.ids.len(), 1);
         assert!(!ans.context.is_empty());
     }
 
@@ -317,6 +583,7 @@ mod tests {
         let c = LocalCluster::new(3, 3, 2, 2).unwrap();
         let ans = c.get("nope").unwrap();
         assert!(ans.values.is_empty());
+        assert!(ans.ids.is_empty());
     }
 
     #[test]
@@ -345,6 +612,21 @@ mod tests {
         assert_eq!(c.shard_count(), 8);
         c.put("k", b"x".to_vec(), &[]).unwrap();
         assert_eq!(c.get("k").unwrap().values, vec![b"x".to_vec()]);
+    }
+
+    #[test]
+    fn flat_backend_cluster_works() {
+        let c = LocalCluster::with_backends(3, 3, 2, 2, |_| {
+            crate::store::InMemoryBackend::new()
+        })
+        .unwrap();
+        assert_eq!(c.shard_count(), 1);
+        c.put("k", b"v1".to_vec(), &[]).unwrap();
+        c.put("k", b"v2".to_vec(), &[]).unwrap();
+        let ans = c.get("k").unwrap();
+        assert_eq!(ans.values.len(), 2);
+        c.put("k", b"m".to_vec(), &ans.context).unwrap();
+        assert_eq!(c.get("k").unwrap().values, vec![b"m".to_vec()]);
     }
 
     #[test]
@@ -378,7 +660,6 @@ mod tests {
 
     #[test]
     fn concurrent_puts_distinct_keys_do_not_interfere() {
-        use std::sync::Arc;
         let c = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
         let mut handles = Vec::new();
         for t in 0..4 {
@@ -399,5 +680,63 @@ mod tests {
                 assert_eq!(c.get(&key).unwrap().values, vec![key.into_bytes()]);
             }
         }
+    }
+
+    #[test]
+    fn crashed_coordinator_fails_over_to_next_replica() {
+        let c = LocalCluster::new(4, 3, 2, 2).unwrap();
+        let replicas = c.replicas_of("k");
+        c.fabric().crash(replicas[0]);
+        c.put("k", b"x".to_vec(), &[]).unwrap();
+        let ans = c.get("k").unwrap();
+        assert_eq!(ans.values, vec![b"x".to_vec()]);
+        // the crashed node never saw the write
+        assert_eq!(c.node(replicas[0]).store().sibling_count(hash_str("k")), 0);
+    }
+
+    #[test]
+    fn all_replicas_down_is_unavailable() {
+        let c = LocalCluster::new(3, 3, 2, 2).unwrap();
+        for n in 0..3 {
+            c.fabric().crash(n);
+        }
+        assert!(matches!(c.put("k", b"x".to_vec(), &[]), Err(crate::Error::Unavailable(_))));
+        assert!(matches!(c.get("k"), Err(crate::Error::Unavailable(_))));
+        c.fabric().heal_all();
+        c.put("k", b"x".to_vec(), &[]).unwrap();
+    }
+
+    #[test]
+    fn partition_starves_the_read_quorum() {
+        // R = N = 3: any unreachable replica must fail the read
+        let c = LocalCluster::new(3, 3, 3, 1).unwrap();
+        c.put("k", b"x".to_vec(), &[]).unwrap();
+        let replicas = c.replicas_of("k");
+        c.fabric().partition_groups(&[replicas[0]], &[replicas[1]]);
+        let err = c.get("k").unwrap_err();
+        assert!(matches!(err, crate::Error::QuorumNotMet { got: 2, needed: 3 }), "{err}");
+        c.fabric().heal_all();
+        assert_eq!(c.get("k").unwrap().values, vec![b"x".to_vec()]);
+    }
+
+    #[test]
+    fn oracle_audits_quorum_traffic() {
+        let c = LocalCluster::new(3, 3, 2, 2).unwrap();
+        let oracle = Arc::new(SharedOracle::new());
+        c.attach_oracle(Arc::clone(&oracle));
+        let a1 = Actor::client(1);
+        let a2 = Actor::client(2);
+        let id1 = c.put_traced("k", b"v1".to_vec(), &[], a1, &[]).unwrap();
+        let id2 = c.put_traced("k", b"v2".to_vec(), &[], a2, &[]).unwrap();
+        let ans = c.get("k").unwrap();
+        assert_eq!(ans.ids.len(), 2);
+        // an informed merge write supersedes both siblings; every drop it
+        // causes across the replicas is a correct supersession
+        c.put_traced("k", b"m".to_vec(), &ans.context, a1, &ans.ids).unwrap();
+        assert_eq!(c.get("k").unwrap().values, vec![b"m".to_vec()]);
+        assert_eq!(oracle.lost_updates(), 0);
+        assert!(oracle.correct_supersessions() > 0);
+        assert_eq!(oracle.tracked(), 3);
+        assert!(oracle.with_inner(|o| o.concurrent(id1, id2)));
     }
 }

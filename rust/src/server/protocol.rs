@@ -7,9 +7,22 @@
 //! -> PUT <key> <value-hex> [ctx-hex]
 //! <- OK
 //! -> STATS
-//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b>
+//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h>
 //! -> QUIT
 //! <- BYE
+//! ```
+//!
+//! Fault-injection admin commands drive the cluster's
+//! [`Fabric`](super::fabric::Fabric) at runtime:
+//!
+//! ```text
+//! -> FAULT CRASH <node>             crash one replica
+//! -> FAULT PARTITION <a,b> <c,d>    symmetric two-group partition
+//! -> FAULT DROP <prob>              probabilistic message loss [0, 1]
+//! -> FAULT DELAY <us>               extra per-message delay (bounded)
+//! -> HEAL <node>                    recover one replica
+//! -> HEAL                           heal everything, drain hints
+//! <- OK
 //! ```
 //!
 //! Errors render as `ERR <message>`. Hex keeps the framing trivial and
@@ -33,6 +46,13 @@ pub fn hex_encode(data: &[u8]) -> String {
 pub fn hex_decode(s: &str) -> Result<Vec<u8>> {
     if s == "-" {
         return Ok(Vec::new());
+    }
+    // validate every char up front: `from_str_radix` would accept a
+    // leading `+` inside a pair, and the byte-indexed slicing below
+    // would panic on a multibyte char boundary (remote input must never
+    // panic a connection thread or be silently reinterpreted)
+    if let Some(bad) = s.chars().find(|c| !c.is_ascii_hexdigit()) {
+        return Err(Error::Protocol(format!("bad hex char {bad:?}")));
     }
     if s.len() % 2 != 0 {
         return Err(Error::Protocol(format!("odd hex length {}", s.len())));
@@ -65,8 +85,112 @@ pub enum Request {
     },
     /// Server statistics.
     Stats,
+    /// Inject a fault into the chaos fabric (admin).
+    Fault(FaultCmd),
+    /// Recover one node, or — with no node — heal every fault and drain
+    /// parked hints (admin).
+    Heal {
+        /// The node to recover; `None` heals everything.
+        node: Option<usize>,
+    },
     /// Close the connection.
     Quit,
+}
+
+/// A parsed `FAULT` admin subcommand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultCmd {
+    /// Crash one replica.
+    Crash {
+        /// Replica id.
+        node: usize,
+    },
+    /// Symmetric partition between two node groups.
+    Partition {
+        /// Left group.
+        left: Vec<usize>,
+        /// Right group.
+        right: Vec<usize>,
+    },
+    /// Probabilistic message loss, parts-per-million (the wire format is
+    /// a probability in `[0, 1]`; ppm keeps the enum `Eq`).
+    Drop {
+        /// Drop rate in parts-per-million.
+        ppm: u32,
+    },
+    /// Fixed extra per-message delay (µs, capped at delivery time).
+    Delay {
+        /// Extra delay in µs.
+        us: u64,
+    },
+}
+
+fn parse_node(s: &str) -> Result<usize> {
+    s.parse()
+        .map_err(|_| Error::Protocol(format!("bad node id {s:?}")))
+}
+
+fn parse_group(s: &str) -> Result<Vec<usize>> {
+    let ids: Vec<usize> = s
+        .split(',')
+        .filter(|part| !part.is_empty())
+        .map(parse_node)
+        .collect::<Result<_>>()?;
+    if ids.is_empty() {
+        return Err(Error::Protocol(format!("empty node group {s:?}")));
+    }
+    Ok(ids)
+}
+
+fn parse_fault(parts: &mut std::str::SplitWhitespace<'_>) -> Result<FaultCmd> {
+    let kind = parts
+        .next()
+        .ok_or_else(|| Error::Protocol("FAULT needs CRASH|PARTITION|DROP|DELAY".into()))?;
+    match kind.to_ascii_uppercase().as_str() {
+        "CRASH" => {
+            let node = parse_node(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("FAULT CRASH needs a node".into()))?,
+            )?;
+            Ok(FaultCmd::Crash { node })
+        }
+        "PARTITION" => {
+            let left = parse_group(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("FAULT PARTITION needs two groups".into()))?,
+            )?;
+            let right = parse_group(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("FAULT PARTITION needs two groups".into()))?,
+            )?;
+            Ok(FaultCmd::Partition { left, right })
+        }
+        "DROP" => {
+            let raw = parts
+                .next()
+                .ok_or_else(|| Error::Protocol("FAULT DROP needs a probability".into()))?;
+            let prob: f64 = raw
+                .parse()
+                .map_err(|_| Error::Protocol(format!("bad probability {raw:?}")))?;
+            if !(0.0..=1.0).contains(&prob) {
+                return Err(Error::Protocol(format!("probability {prob} not in [0, 1]")));
+            }
+            Ok(FaultCmd::Drop { ppm: crate::sim::failure::drop_ppm(prob) })
+        }
+        "DELAY" => {
+            let raw = parts
+                .next()
+                .ok_or_else(|| Error::Protocol("FAULT DELAY needs microseconds".into()))?;
+            let us = raw
+                .parse()
+                .map_err(|_| Error::Protocol(format!("bad delay {raw:?}")))?;
+            Ok(FaultCmd::Delay { us })
+        }
+        other => Err(Error::Protocol(format!("unknown FAULT kind {other:?}"))),
+    }
 }
 
 /// Parse one request line.
@@ -96,6 +220,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
             Ok(Request::Put { key: key.to_string(), value, context })
         }
         "STATS" => Ok(Request::Stats),
+        "FAULT" => Ok(Request::Fault(parse_fault(&mut parts)?)),
+        "HEAL" => {
+            let node = parts.next().map(parse_node).transpose()?;
+            Ok(Request::Heal { node })
+        }
         "QUIT" => Ok(Request::Quit),
         other => Err(Error::Protocol(format!("unknown command {other:?}"))),
     }
@@ -153,6 +282,53 @@ mod tests {
     fn case_insensitive_commands() {
         assert_eq!(parse_request("quit").unwrap(), Request::Quit);
         assert_eq!(parse_request("stats").unwrap(), Request::Stats);
+        assert_eq!(
+            parse_request("fault crash 2").unwrap(),
+            Request::Fault(FaultCmd::Crash { node: 2 })
+        );
+        assert_eq!(parse_request("heal").unwrap(), Request::Heal { node: None });
+    }
+
+    #[test]
+    fn parse_fault_commands() {
+        assert_eq!(
+            parse_request("FAULT CRASH 1").unwrap(),
+            Request::Fault(FaultCmd::Crash { node: 1 })
+        );
+        assert_eq!(
+            parse_request("FAULT PARTITION 0,1 2,3").unwrap(),
+            Request::Fault(FaultCmd::Partition { left: vec![0, 1], right: vec![2, 3] })
+        );
+        assert_eq!(
+            parse_request("FAULT DROP 0.25").unwrap(),
+            Request::Fault(FaultCmd::Drop { ppm: 250_000 })
+        );
+        assert_eq!(
+            parse_request("FAULT DELAY 1500").unwrap(),
+            Request::Fault(FaultCmd::Delay { us: 1500 })
+        );
+        assert_eq!(parse_request("HEAL 2").unwrap(), Request::Heal { node: Some(2) });
+    }
+
+    #[test]
+    fn malformed_fault_commands_are_rejected() {
+        for bad in [
+            "FAULT",
+            "FAULT CRASH",
+            "FAULT CRASH x",
+            "FAULT PARTITION 0,1",
+            "FAULT PARTITION , 2",
+            "FAULT DROP",
+            "FAULT DROP 1.5",
+            "FAULT DROP -0.1",
+            "FAULT DROP abc",
+            "FAULT DELAY",
+            "FAULT DELAY -5",
+            "FAULT WIGGLE 1",
+            "HEAL x",
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad:?} must be rejected");
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use super::protocol::{format_values, parse_request, Request};
+use super::protocol::{format_values, parse_request, FaultCmd, Request};
 use super::LocalCluster;
 use crate::error::Result;
 
@@ -70,6 +70,53 @@ impl Drop for Server {
     }
 }
 
+/// Apply a `FAULT` admin command to the cluster's chaos fabric.
+fn apply_fault(cluster: &LocalCluster, cmd: FaultCmd) -> String {
+    let fabric = cluster.fabric();
+    let nodes = cluster.node_count();
+    match cmd {
+        FaultCmd::Crash { node } if node < nodes => {
+            fabric.crash(node);
+            "OK\n".to_string()
+        }
+        FaultCmd::Crash { node } => format!("ERR node {node} out of range\n"),
+        FaultCmd::Partition { left, right } => {
+            if let Some(bad) = left.iter().chain(&right).find(|&&n| n >= nodes) {
+                format!("ERR node {bad} out of range\n")
+            } else {
+                fabric.partition_groups(&left, &right);
+                "OK\n".to_string()
+            }
+        }
+        FaultCmd::Drop { ppm } => {
+            fabric.set_drop_prob(f64::from(ppm) / 1_000_000.0);
+            "OK\n".to_string()
+        }
+        FaultCmd::Delay { us } => {
+            fabric.set_extra_delay_us(us);
+            "OK\n".to_string()
+        }
+    }
+}
+
+/// Apply a `HEAL` admin command: recover one node, or reset every fault
+/// axis and drain parked hints.
+fn apply_heal(cluster: &LocalCluster, node: Option<usize>) -> String {
+    match node {
+        Some(n) if n < cluster.node_count() => {
+            cluster.fabric().recover(n);
+            cluster.drain_hints();
+            "OK\n".to_string()
+        }
+        Some(n) => format!("ERR node {n} out of range\n"),
+        None => {
+            cluster.fabric().heal_all();
+            cluster.drain_hints();
+            "OK\n".to_string()
+        }
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     cluster: &LocalCluster,
@@ -117,11 +164,14 @@ fn handle_conn(
                 }
             }
             Ok(Request::Stats) => format!(
-                "STATS nodes={} shards={} metadata_bytes={}\n",
+                "STATS nodes={} shards={} metadata_bytes={} hints={}\n",
                 cluster.node_count(),
                 cluster.shard_count(),
-                cluster.metadata_bytes()
+                cluster.metadata_bytes(),
+                cluster.pending_hints()
             ),
+            Ok(Request::Fault(cmd)) => apply_fault(cluster, cmd),
+            Ok(Request::Heal { node }) => apply_heal(cluster, node),
             Ok(Request::Quit) => {
                 stream.write_all(b"BYE\n")?;
                 return Ok(());

@@ -1,5 +1,9 @@
-//! Failure-injection schedules: declarative crash/partition scripts that
-//! tests and benches can apply to a [`super::Sim`].
+//! Failure-injection schedules: declarative crash/partition/degradation
+//! scripts that tests and benches can apply to a [`super::Sim`] — and,
+//! through [`crate::server::fabric::Fabric::advance`], to the threaded
+//! [`crate::server::LocalCluster`]. One [`FaultPlan`] drives both worlds
+//! so a scenario validated in the deterministic simulator can be replayed
+//! against the production-shaped code under real concurrency.
 
 use crate::cluster::NodeId;
 use crate::kernel::Mechanism;
@@ -36,6 +40,38 @@ pub enum Fault {
         /// When (simulated µs).
         at: u64,
     },
+    /// Degrade the network from a time on: probabilistic message drops
+    /// plus a fixed extra one-way delay on every inter-replica message.
+    /// `(0, 0)` restores the configured baseline. Drop probability is
+    /// kept in parts-per-million so the enum stays `Eq`.
+    Degrade {
+        /// When (simulated µs).
+        at: u64,
+        /// Drop probability in parts-per-million (1_000_000 = always).
+        drop_ppm: u32,
+        /// Extra one-way delay per message (µs).
+        extra_delay_us: u64,
+    },
+}
+
+impl Fault {
+    /// When the fault fires (simulated µs).
+    pub fn at(&self) -> u64 {
+        match self {
+            Fault::Crash { at, .. }
+            | Fault::Recover { at, .. }
+            | Fault::Partition { at, .. }
+            | Fault::Heal { at }
+            | Fault::Degrade { at, .. } => *at,
+        }
+    }
+}
+
+/// Convert a drop probability to the parts-per-million encoding used by
+/// [`Fault::Degrade`].
+pub fn drop_ppm(prob: f64) -> u32 {
+    assert!((0.0..=1.0).contains(&prob), "drop probability {prob} not in [0, 1]");
+    (prob * 1_000_000.0).round() as u32
 }
 
 /// A reusable fault schedule.
@@ -73,6 +109,79 @@ impl FaultPlan {
         self
     }
 
+    /// Add a degradation window: `drop_prob` message loss plus
+    /// `extra_delay_us` per message between `from` and `to`, after which
+    /// the baseline is restored.
+    pub fn degrade_window(
+        mut self,
+        drop_prob: f64,
+        extra_delay_us: u64,
+        from: u64,
+        to: u64,
+    ) -> Self {
+        assert!(from < to);
+        self.faults.push(Fault::Degrade {
+            at: from,
+            drop_ppm: drop_ppm(drop_prob),
+            extra_delay_us,
+        });
+        self.faults.push(Fault::Degrade { at: to, drop_ppm: 0, extra_delay_us: 0 });
+        self
+    }
+
+    /// Random symmetric partition windows: `windows` random two-group
+    /// splits of the node set within `[0, horizon_us)`. Each window is
+    /// placed in its own disjoint `horizon_us / windows` time slot — a
+    /// [`Fault::Heal`] heals *all* partitions, so overlapping windows
+    /// would cut each other short of their advertised duration. Window
+    /// length is `dur_us`, capped below the slot length.
+    pub fn random_partitions(
+        mut self,
+        nodes: usize,
+        windows: usize,
+        dur_us: u64,
+        horizon_us: u64,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(nodes >= 2, "a partition needs at least two nodes");
+        if windows == 0 {
+            return self;
+        }
+        // every window needs a >= 2µs slot strictly inside the horizon
+        assert!(
+            horizon_us >= 2 * windows as u64,
+            "horizon {horizon_us}µs too short for {windows} partition windows"
+        );
+        let slot = horizon_us / windows as u64;
+        let dur = dur_us.clamp(1, slot - 1);
+        for w in 0..windows as u64 {
+            let base = w * slot;
+            let start = base + rng.below(slot - dur);
+            let mut ids: Vec<NodeId> = (0..nodes).collect();
+            rng.shuffle(&mut ids);
+            let cut = rng.range(1, nodes - 1);
+            let right = ids.split_off(cut);
+            self = self.partition_window(ids, right, start, start + dur);
+        }
+        self
+    }
+
+    /// A full random chaos schedule — crash windows, partition windows,
+    /// and one degradation window — with every fault healed by
+    /// `horizon_us`. This is the generator the fabric chaos property test
+    /// replays across seeds (`rust/tests/fabric_chaos.rs`).
+    pub fn random_chaos(nodes: usize, horizon_us: u64, rng: &mut Rng) -> FaultPlan {
+        let dur = (horizon_us / 4).max(1);
+        let latest_start = horizon_us.saturating_sub(dur).max(1);
+        let mut plan = FaultPlan::new().random_crashes(nodes, 1, dur, latest_start, rng);
+        if nodes >= 2 {
+            plan = plan.random_partitions(nodes, 2, dur, latest_start, rng);
+        }
+        let drop_prob = 0.05 + rng.f64() * 0.20;
+        let start = rng.below(latest_start);
+        plan.degrade_window(drop_prob, rng.below(500), start, start + dur)
+    }
+
     /// Random crash windows: each node gets `windows` crash periods of
     /// `dur_us` within `[0, horizon_us)`.
     pub fn random_crashes(
@@ -103,6 +212,9 @@ impl FaultPlan {
                     sim.schedule_partition(*at, left.clone(), right.clone())
                 }
                 Fault::Heal { at } => sim.schedule_heal(*at),
+                Fault::Degrade { at, drop_ppm, extra_delay_us } => {
+                    sim.schedule_degrade(*at, *drop_ppm, *extra_delay_us)
+                }
             }
         }
     }
@@ -140,5 +252,81 @@ mod tests {
     #[should_panic]
     fn crash_window_validates_order() {
         let _ = FaultPlan::new().crash_window(0, 200, 100);
+    }
+
+    #[test]
+    fn degrade_window_restores_baseline() {
+        let plan = FaultPlan::new().degrade_window(0.25, 300, 100, 900);
+        assert_eq!(plan.faults.len(), 2);
+        assert_eq!(
+            plan.faults[0],
+            Fault::Degrade { at: 100, drop_ppm: 250_000, extra_delay_us: 300 }
+        );
+        assert_eq!(
+            plan.faults[1],
+            Fault::Degrade { at: 900, drop_ppm: 0, extra_delay_us: 0 }
+        );
+    }
+
+    #[test]
+    fn fault_at_reports_fire_time() {
+        let plan = FaultPlan::new()
+            .crash_window(1, 10, 20)
+            .partition_window(vec![0], vec![1], 30, 40)
+            .degrade_window(0.1, 0, 50, 60);
+        let ats: Vec<u64> = plan.faults.iter().map(Fault::at).collect();
+        assert_eq!(ats, vec![10, 20, 30, 40, 50, 60]);
+    }
+
+    #[test]
+    fn random_partitions_split_every_node_once() {
+        let mut rng = Rng::new(3);
+        let plan = FaultPlan::new().random_partitions(5, 2, 100, 1000, &mut rng);
+        assert_eq!(plan.faults.len(), 4);
+        for f in &plan.faults {
+            if let Fault::Partition { left, right, .. } = f {
+                assert!(!left.is_empty() && !right.is_empty());
+                let mut all: Vec<NodeId> = left.iter().chain(right).copied().collect();
+                all.sort_unstable();
+                assert_eq!(all, vec![0, 1, 2, 3, 4], "groups partition the node set");
+            }
+        }
+    }
+
+    #[test]
+    fn random_chaos_heals_by_horizon() {
+        for seed in [1, 2, 3] {
+            let mut rng = Rng::new(seed);
+            let plan = FaultPlan::random_chaos(5, 400_000, &mut rng);
+            assert!(!plan.faults.is_empty());
+            for f in &plan.faults {
+                assert!(f.at() <= 400_000, "fault past horizon: {f:?}");
+            }
+            // every crash has a matching later recovery
+            for f in &plan.faults {
+                if let Fault::Crash { at, node } = f {
+                    assert!(plan.faults.iter().any(
+                        |g| matches!(g, Fault::Recover { at: r, node: n } if n == node && r > at)
+                    ));
+                }
+            }
+            // the last degrade restores the baseline
+            let last_degrade = plan
+                .faults
+                .iter()
+                .filter(|f| matches!(f, Fault::Degrade { .. }))
+                .max_by_key(|f| f.at())
+                .unwrap();
+            assert!(matches!(
+                last_degrade,
+                Fault::Degrade { drop_ppm: 0, extra_delay_us: 0, .. }
+            ));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn drop_ppm_rejects_out_of_range() {
+        let _ = drop_ppm(1.5);
     }
 }

@@ -81,6 +81,7 @@ enum Ev<M: Mechanism> {
     Recover { node: NodeId },
     PartitionGroups { left: Vec<NodeId>, right: Vec<NodeId> },
     HealAll,
+    Degrade { drop_ppm: u32, extra_delay_us: u64 },
 }
 
 struct Queued<M: Mechanism> {
@@ -253,6 +254,13 @@ impl<M: Mechanism> Sim<M> {
         self.push(at, Ev::HealAll);
     }
 
+    /// Degrade the network at `at`: extra message loss (parts-per-million)
+    /// plus a fixed extra per-message delay. `(0, 0)` restores the
+    /// configured baseline.
+    pub fn schedule_degrade(&mut self, at: u64, drop_ppm: u32, extra_delay_us: u64) {
+        self.push(at, Ev::Degrade { drop_ppm, extra_delay_us });
+    }
+
     fn schedule_next_op(&mut self, client: usize, extra_delay: u64) {
         if let Some(op) = self.driver.next_op(client, self.now, &mut self.rng) {
             let at = self.now + extra_delay + op.think_us;
@@ -313,6 +321,9 @@ impl<M: Mechanism> Sim<M> {
                 self.net.partition_groups(&left, &right)
             }
             Ev::HealAll => self.net.heal_all(),
+            Ev::Degrade { drop_ppm, extra_delay_us } => {
+                self.net.degrade(drop_ppm as f64 / 1_000_000.0, extra_delay_us)
+            }
         }
     }
 
@@ -800,6 +811,21 @@ mod tests {
         sim.run(2_000_000);
         sim.settle();
         assert!(sim.metrics.ae_rounds > 0);
+        assert_eq!(sim.audit_permanently_lost(), 0, "{}", sim.metrics.summary());
+    }
+
+    #[test]
+    fn degrade_window_drops_messages_without_losing_updates() {
+        let mut c = cfg(4, 3, 1, 1);
+        c.antientropy.period_us = 20_000;
+        let mut sim = Sim::new(DvvMech, c, 4, true, small_workload(4, 30), 19).unwrap();
+        crate::sim::failure::FaultPlan::new()
+            .degrade_window(0.5, 200, 5_000, 400_000)
+            .apply(&mut sim);
+        sim.start();
+        sim.run(5_000_000);
+        assert!(sim.metrics.dropped_messages > 0, "degrade window must drop");
+        sim.settle();
         assert_eq!(sim.audit_permanently_lost(), 0, "{}", sim.metrics.summary());
     }
 

@@ -151,10 +151,40 @@ impl<M: Mechanism, B: StorageBackend<M>> KeyStore<M, B> {
         })
     }
 
+    /// PUT that additionally reports the pre-write live values alongside
+    /// the post-write state, all under the same lock acquisition — so a
+    /// ground-truth auditor ([`crate::oracle::SharedOracle`]) can
+    /// classify the exact sibling-set delta of this mutation even while
+    /// other threads race on the same key.
+    pub fn write_audited(
+        &self,
+        key: Key,
+        ctx: &M::Context,
+        val: Val,
+        coord: Actor,
+        meta: &WriteMeta,
+    ) -> (Vec<Val>, M::State) {
+        self.backend.update(key, |st| {
+            let before = self.mech.values(st);
+            self.mech.write(st, ctx, val, coord, meta);
+            (before, st.clone())
+        })
+    }
+
     /// Merge an incoming replica state for `key` (replication/anti-entropy/
     /// read repair).
     pub fn merge_key(&self, key: Key, incoming: &M::State) {
         self.backend.update(key, |st| self.mech.merge(st, incoming));
+    }
+
+    /// [`merge_key`](KeyStore::merge_key) that reports the (before, after)
+    /// live values under one lock acquisition (oracle drop auditing).
+    pub fn merge_key_audited(&self, key: Key, incoming: &M::State) -> (Vec<Val>, Vec<Val>) {
+        self.backend.update(key, |st| {
+            let before = self.mech.values(st);
+            self.mech.merge(st, incoming);
+            (before, self.mech.values(st))
+        })
     }
 
     /// Merge a batch of incoming replica states, taking each backend lock
@@ -335,6 +365,29 @@ mod tests {
         let st = s.write_returning(9, &ctx, Val::new(5, 0), coord(), &meta());
         assert_eq!(st, s.state(9));
         assert_eq!(s.values(9), vec![Val::new(5, 0)]);
+    }
+
+    #[test]
+    fn audited_mutations_report_sibling_deltas() {
+        let s = store();
+        let empty = s.read(1).1;
+        let (before, st) = s.write_audited(1, &empty, Val::new(1, 0), coord(), &meta());
+        assert!(before.is_empty());
+        assert_eq!(st, s.state(1));
+        // an informed write supersedes: before holds the old value
+        let (_, ctx) = s.read(1);
+        let (before, _) = s.write_audited(1, &ctx, Val::new(2, 0), coord(), &meta());
+        assert_eq!(before, vec![Val::new(1, 0)]);
+        assert_eq!(s.values(1), vec![Val::new(2, 0)]);
+
+        // merge_key_audited: a dominating incoming state drops the local
+        let other = store();
+        other.merge_key(1, &s.state(1));
+        let (_, octx) = other.read(1);
+        other.write(1, &octx, Val::new(3, 0), Actor::server(1), &meta());
+        let (before, after) = s.merge_key_audited(1, &other.state(1));
+        assert_eq!(before, vec![Val::new(2, 0)]);
+        assert_eq!(after, vec![Val::new(3, 0)]);
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Sloppy quorum + hinted handoff: a partitioned or crashed home replica
+//! must not block writes (the paper's write-availability motivation);
+//! once the fault heals, parked hints drain to their home and all home
+//! replicas hold order-insensitive equal sibling sets.
+
+use dvvstore::antientropy::same_siblings;
+use dvvstore::cluster::ring::hash_str;
+use dvvstore::server::LocalCluster;
+use dvvstore::Error;
+
+/// W = N = 3 on a 5-node ring: with a home replica down, a strict quorum
+/// could never ack — the stand-in must.
+fn strict_write_cluster() -> LocalCluster {
+    LocalCluster::new(5, 3, 2, 3).unwrap()
+}
+
+#[test]
+fn crashed_home_replica_gets_a_hint_then_heals() {
+    let c = strict_write_cluster();
+    let key = "handoff";
+    let k = hash_str(key);
+    let replicas = c.replicas_of(key);
+    let down = replicas[1];
+    c.fabric().crash(down);
+
+    // the write still reaches W=3 acks through a stand-in
+    c.put(key, b"v1".to_vec(), &[]).unwrap();
+    assert_eq!(c.pending_hints(), 1, "one hint parked for the dead home");
+    // reads answer from the two live home replicas
+    assert_eq!(c.get(key).unwrap().values, vec![b"v1".to_vec()]);
+    // the dead replica saw nothing
+    assert_eq!(c.node(down).store().sibling_count(k), 0);
+    // a stand-in outside the preference list holds the write
+    let holder = (0..c.node_count())
+        .find(|n| !replicas.contains(n) && c.node(*n).store().sibling_count(k) > 0)
+        .expect("some stand-in stores the sloppy write");
+
+    // heal: the hint drains home
+    c.fabric().recover(down);
+    assert_eq!(c.drain_hints(), 1);
+    assert_eq!(c.pending_hints(), 0);
+    let base = c.node(replicas[0]).store().state(k);
+    assert!(!base.is_empty());
+    for &r in &replicas {
+        assert!(
+            same_siblings(&base, &c.node(r).store().state(k)),
+            "home replica {r} diverged after handoff"
+        );
+    }
+    // the stand-in keeps its copy until anti-entropy; it is off the
+    // preference list so reads never consult it
+    assert!(c.node(holder).store().sibling_count(k) > 0);
+}
+
+#[test]
+fn partitioned_home_replica_gets_a_hint_then_heals() {
+    let c = strict_write_cluster();
+    let key = "handoff-partition";
+    let k = hash_str(key);
+    let replicas = c.replicas_of(key);
+    let isolated = replicas[1];
+    let rest: Vec<usize> = (0..c.node_count()).filter(|&n| n != isolated).collect();
+    c.fabric().partition_groups(&[isolated], &rest);
+
+    c.put(key, b"v1".to_vec(), &[]).unwrap();
+    assert_eq!(c.pending_hints(), 1);
+    assert_eq!(c.node(isolated).store().sibling_count(k), 0, "isolated, not crashed");
+
+    c.fabric().heal_all();
+    assert_eq!(c.drain_hints(), 1);
+    for &r in &replicas {
+        assert!(
+            same_siblings(&c.node(replicas[0]).store().state(k), &c.node(r).store().state(k)),
+            "home replica {r} diverged after handoff"
+        );
+    }
+}
+
+#[test]
+fn hints_are_parked_even_when_the_quorum_is_already_met() {
+    // W = 2 of N = 3: the write succeeds without the crashed home, but
+    // the stand-in + hint are still created — the hint, not a later
+    // anti-entropy round, is what gets the write home promptly on heal
+    let c = LocalCluster::new(5, 3, 2, 2).unwrap();
+    let key = "eager-hint";
+    let k = hash_str(key);
+    let down = c.replicas_of(key)[1];
+    c.fabric().crash(down);
+    c.put(key, b"v".to_vec(), &[]).unwrap();
+    assert_eq!(c.pending_hints(), 1, "hint parked despite met quorum");
+    c.fabric().recover(down);
+    assert_eq!(c.drain_hints(), 1);
+    assert_eq!(c.node(down).store().sibling_count(k), 1);
+}
+
+#[test]
+fn hints_stay_parked_while_the_home_is_down() {
+    let c = strict_write_cluster();
+    let key = "parked";
+    let down = c.replicas_of(key)[2];
+    c.fabric().crash(down);
+    c.put(key, b"v1".to_vec(), &[]).unwrap();
+    assert_eq!(c.pending_hints(), 1);
+    // the home is still down: nothing drains
+    assert_eq!(c.drain_hints(), 0);
+    assert_eq!(c.pending_hints(), 1);
+    // even an anti-entropy round cannot reach the dead node
+    c.anti_entropy_round();
+    assert_eq!(c.pending_hints(), 1);
+    assert_eq!(c.node(down).store().sibling_count(hash_str(key)), 0);
+}
+
+#[test]
+fn anti_entropy_round_drains_hints_after_recovery() {
+    let c = strict_write_cluster();
+    let key = "ae-drains";
+    let k = hash_str(key);
+    let down = c.replicas_of(key)[1];
+    c.fabric().crash(down);
+    c.put(key, b"v1".to_vec(), &[]).unwrap();
+    assert_eq!(c.pending_hints(), 1);
+
+    c.fabric().recover(down);
+    c.anti_entropy_round();
+    assert_eq!(c.pending_hints(), 0, "AE maintenance drains hints");
+    assert_eq!(c.node(down).store().sibling_count(k), 1);
+}
+
+#[test]
+fn write_fails_when_no_stand_in_can_reach_quorum() {
+    let c = strict_write_cluster();
+    let key = "doomed";
+    let replicas = c.replicas_of(key);
+    // crash everything except the coordinator: 1 ack < W=3, and no
+    // reachable stand-in exists
+    for n in 0..c.node_count() {
+        if n != replicas[0] {
+            c.fabric().crash(n);
+        }
+    }
+    let err = c.put(key, b"v1".to_vec(), &[]).unwrap_err();
+    assert!(
+        matches!(err, Error::QuorumNotMet { got: 1, needed: 3 }),
+        "sloppy quorum must still fail honestly: {err}"
+    );
+
+    // heal and retry the write the honest way: read (the failed attempt
+    // persists at the coordinator — no rollback), then write with the
+    // context so the retry supersedes it everywhere
+    c.fabric().heal_all();
+    let ans = c.get(key).unwrap();
+    c.put(key, b"v1-retry".to_vec(), &ans.context).unwrap();
+    assert_eq!(c.pending_hints(), 0);
+    for &r in &replicas {
+        assert_eq!(c.node(r).store().sibling_count(hash_str(key)), 1);
+    }
+    assert_eq!(c.get(key).unwrap().values, vec![b"v1-retry".to_vec()]);
+}
+
+#[test]
+fn sloppy_write_supersedes_correctly_after_heal() {
+    // the full cycle: write around a dead home, heal, read-modify-write
+    // must supersede the hinted sibling everywhere
+    let c = strict_write_cluster();
+    let key = "cycle";
+    let k = hash_str(key);
+    let down = c.replicas_of(key)[1];
+    c.fabric().crash(down);
+    c.put(key, b"old".to_vec(), &[]).unwrap();
+    c.fabric().recover(down);
+    c.drain_hints();
+
+    let ans = c.get(key).unwrap();
+    assert_eq!(ans.values, vec![b"old".to_vec()]);
+    c.put(key, b"new".to_vec(), &ans.context).unwrap();
+    assert_eq!(c.get(key).unwrap().values, vec![b"new".to_vec()]);
+    // convergence via anti-entropy: every node ends with exactly the
+    // superseding version
+    while c.anti_entropy_round() > 0 {}
+    for n in 0..c.node_count() {
+        let st = c.node(n).store().state(k);
+        if !st.is_empty() {
+            assert_eq!(st.len(), 1, "node {n} holds stale siblings: {st:?}");
+        }
+    }
+}

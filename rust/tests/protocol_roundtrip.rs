@@ -1,0 +1,229 @@
+//! Round-trip tests for the TCP wire protocol (`server::protocol`):
+//! request parsing, response formatting, the `FAULT`/`HEAL` admin
+//! commands, and malformed-input rejection — plus an end-to-end pass
+//! through a live TCP server driving the chaos fabric.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use dvvstore::server::protocol::{
+    format_values, hex_decode, hex_encode, parse_request, FaultCmd, Request,
+};
+use dvvstore::server::tcp::Server;
+use dvvstore::server::LocalCluster;
+
+// -------------------------------------------------------------------
+// pure parse/format round trips
+// -------------------------------------------------------------------
+
+#[test]
+fn hex_roundtrips_arbitrary_bytes() {
+    let cases: Vec<Vec<u8>> = vec![
+        vec![],
+        vec![0],
+        vec![0xff],
+        (0..=255).collect(),
+        b"hello world".to_vec(),
+    ];
+    for data in cases {
+        let encoded = hex_encode(&data);
+        assert_eq!(hex_decode(&encoded).unwrap(), data, "case {encoded}");
+    }
+    assert_eq!(hex_encode(&[]), "-", "empty encodes as the dash sentinel");
+    assert_eq!(hex_decode("-").unwrap(), Vec::<u8>::new());
+}
+
+#[test]
+fn hex_rejects_malformed_input() {
+    // "+1+2" guards the from_str_radix leading-sign loophole: it must
+    // not be silently accepted as [0x01, 0x02]
+    for bad in ["a", "abc", "zz", "0g", "0x1f", "+1+2", "-1", "1 2", "🦀"] {
+        assert!(hex_decode(bad).is_err(), "{bad:?} must be rejected");
+    }
+}
+
+#[test]
+fn request_lines_roundtrip_through_parse() {
+    let cases = [
+        ("GET user:1", Request::Get { key: "user:1".into() }),
+        (
+            "PUT k 6869",
+            Request::Put { key: "k".into(), value: b"hi".to_vec(), context: vec![] },
+        ),
+        (
+            "PUT k - 0101",
+            Request::Put { key: "k".into(), value: vec![], context: vec![1, 1] },
+        ),
+        ("STATS", Request::Stats),
+        ("QUIT", Request::Quit),
+        ("FAULT CRASH 0", Request::Fault(FaultCmd::Crash { node: 0 })),
+        (
+            "FAULT PARTITION 0,1 2,3,4",
+            Request::Fault(FaultCmd::Partition {
+                left: vec![0, 1],
+                right: vec![2, 3, 4],
+            }),
+        ),
+        ("FAULT DROP 0", Request::Fault(FaultCmd::Drop { ppm: 0 })),
+        ("FAULT DROP 1", Request::Fault(FaultCmd::Drop { ppm: 1_000_000 })),
+        ("FAULT DROP 0.125", Request::Fault(FaultCmd::Drop { ppm: 125_000 })),
+        ("FAULT DELAY 0", Request::Fault(FaultCmd::Delay { us: 0 })),
+        ("FAULT DELAY 50000", Request::Fault(FaultCmd::Delay { us: 50_000 })),
+        ("HEAL", Request::Heal { node: None }),
+        ("HEAL 3", Request::Heal { node: Some(3) }),
+        ("  get  padded  ", Request::Get { key: "padded".into() }),
+    ];
+    for (line, want) in cases {
+        assert_eq!(parse_request(line).unwrap(), want, "line {line:?}");
+    }
+}
+
+#[test]
+fn malformed_requests_are_rejected() {
+    for bad in [
+        "",
+        "   ",
+        "GET",
+        "PUT",
+        "PUT k",
+        "PUT k xyz",
+        "PUT k 00 zz",
+        "NOPE x",
+        "FAULT",
+        "FAULT CRASH",
+        "FAULT CRASH -1",
+        "FAULT CRASH two",
+        "FAULT PARTITION",
+        "FAULT PARTITION 0,1",
+        "FAULT PARTITION 0;1 2",
+        "FAULT PARTITION , 1",
+        "FAULT DROP",
+        "FAULT DROP 2",
+        "FAULT DROP -0.5",
+        "FAULT DROP half",
+        "FAULT DELAY",
+        "FAULT DELAY -1",
+        "FAULT DELAY soon",
+        "FAULT JITTER 5",
+        "HEAL one",
+        "HEAL -2",
+    ] {
+        assert!(parse_request(bad).is_err(), "{bad:?} must be rejected");
+    }
+}
+
+#[test]
+fn format_values_shapes() {
+    // empty answer: header only, dash context
+    assert_eq!(format_values(&[], &[]), "VALUES 0 -\n");
+    // values and context render hex, one VALUE line each
+    let text = format_values(&[b"a".to_vec(), vec![]], &[0xab]);
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines, vec!["VALUES 2 ab", "VALUE 61", "VALUE -"]);
+    // round trip: every VALUE line decodes back to the original bytes
+    for (line, want) in lines[1..].iter().zip([b"a".to_vec(), vec![]]) {
+        let hex = line.strip_prefix("VALUE ").unwrap();
+        assert_eq!(hex_decode(hex).unwrap(), want);
+    }
+}
+
+// -------------------------------------------------------------------
+// end-to-end: FAULT/HEAL over a live TCP connection
+// -------------------------------------------------------------------
+
+fn client(addr: std::net::SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+    let stream = TcpStream::connect(addr).unwrap();
+    (BufReader::new(stream.try_clone().unwrap()), stream)
+}
+
+fn send(w: &mut TcpStream, line: &str) {
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+}
+
+fn recv(r: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line.trim_end().to_string()
+}
+
+#[test]
+fn fault_and_heal_admin_commands_drive_the_fabric() {
+    let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+    let server = Server::start("127.0.0.1:0", cluster.clone()).unwrap();
+    let (mut r, mut w) = client(server.addr());
+
+    send(&mut w, "FAULT CRASH 2");
+    assert_eq!(recv(&mut r), "OK");
+    assert!(!cluster.fabric().is_up(2));
+
+    // the cluster still serves under the fault (R=W=2 of 3)
+    send(&mut w, &format!("PUT k {}", hex_encode(b"x")));
+    assert_eq!(recv(&mut r), "OK");
+    send(&mut w, "GET k");
+    assert!(recv(&mut r).starts_with("VALUES 1 "));
+    let _ = recv(&mut r); // VALUE line
+
+    send(&mut w, "FAULT PARTITION 0 1");
+    assert_eq!(recv(&mut r), "OK");
+    assert!(cluster.fabric().is_partitioned(0, 1));
+
+    send(&mut w, "FAULT DROP 0.5");
+    assert_eq!(recv(&mut r), "OK");
+    assert!((cluster.fabric().drop_prob() - 0.5).abs() < 1e-9);
+
+    send(&mut w, "FAULT DELAY 200");
+    assert_eq!(recv(&mut r), "OK");
+    assert_eq!(cluster.fabric().extra_delay_us(), 200);
+
+    // out-of-range targets are refused, connection stays usable
+    send(&mut w, "FAULT CRASH 9");
+    assert!(recv(&mut r).starts_with("ERR "));
+    send(&mut w, "FAULT PARTITION 0 9");
+    assert!(recv(&mut r).starts_with("ERR "));
+    send(&mut w, "HEAL 9");
+    assert!(recv(&mut r).starts_with("ERR "));
+
+    // HEAL resets every axis
+    send(&mut w, "HEAL");
+    assert_eq!(recv(&mut r), "OK");
+    assert!(cluster.fabric().is_up(2));
+    assert!(!cluster.fabric().is_partitioned(0, 1));
+    assert_eq!(cluster.fabric().drop_prob(), 0.0);
+    assert_eq!(cluster.fabric().extra_delay_us(), 0);
+
+    // STATS reports the hint backlog field
+    send(&mut w, "STATS");
+    let stats = recv(&mut r);
+    assert!(stats.contains(" hints=0"), "{stats}");
+
+    send(&mut w, "QUIT");
+    assert_eq!(recv(&mut r), "BYE");
+    server.shutdown();
+}
+
+#[test]
+fn heal_drains_hints_created_under_fault() {
+    // W = N = 3: crashing a home replica forces a hinted stand-in write
+    let cluster = Arc::new(LocalCluster::new(5, 3, 2, 3).unwrap());
+    let server = Server::start("127.0.0.1:0", cluster.clone()).unwrap();
+    let (mut r, mut w) = client(server.addr());
+
+    let down = cluster.replicas_of("hh")[1];
+    send(&mut w, &format!("FAULT CRASH {down}"));
+    assert_eq!(recv(&mut r), "OK");
+    send(&mut w, &format!("PUT hh {}", hex_encode(b"v")));
+    assert_eq!(recv(&mut r), "OK");
+    send(&mut w, "STATS");
+    assert!(recv(&mut r).contains(" hints=1"));
+
+    send(&mut w, &format!("HEAL {down}"));
+    assert_eq!(recv(&mut r), "OK");
+    send(&mut w, "STATS");
+    assert!(recv(&mut r).contains(" hints=0"), "HEAL <node> drains hints");
+
+    send(&mut w, "QUIT");
+    assert_eq!(recv(&mut r), "BYE");
+    server.shutdown();
+}
