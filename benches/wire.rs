@@ -1,0 +1,177 @@
+//! Wire-format bench: hex-text framing (protocol v1) vs length-prefixed
+//! binary framing (protocol v2) on the PUT/GET hot path, plus the
+//! lookup-table hex encoder on its own.
+//!
+//! Each `*_roundtrip` case measures one full encode→decode of the
+//! message a client and server exchange per operation — the per-request
+//! CPU cost the framing contributes. Results also land in
+//! `BENCH_wire.json` (path override: `BENCH_WIRE_JSON`) so subsequent
+//! changes have a machine-readable perf baseline; `rust/ci.sh` runs
+//! this bench in quick mode to keep the file fresh.
+//!
+//! Regenerate with `cargo bench --bench wire`.
+
+use std::hint::black_box;
+
+use dvvstore::api::CausalCtx;
+use dvvstore::bench_support::{Options, Stats, Suite};
+use dvvstore::clocks::encoding::encode_vv;
+use dvvstore::clocks::vv::vv;
+use dvvstore::clocks::Actor;
+use dvvstore::server::protocol::{
+    self, decode_bin_request, encode_bin_request, format_values, hex_decode, hex_encode,
+    parse_request, BinRequest, Request,
+};
+
+/// A realistic DVV context token: 3 replica entries + 2 observed ids.
+fn token() -> Vec<u8> {
+    let mut vv_bytes = Vec::new();
+    encode_vv(
+        &vv(&[(Actor::server(0), 12), (Actor::server(1), 7), (Actor::server(2), 40)]),
+        &mut vv_bytes,
+    );
+    CausalCtx::new(vv_bytes, vec![101, 102]).encode()
+}
+
+fn value_of(len: usize) -> Vec<u8> {
+    (0..len).map(|i| (i * 131 % 251) as u8).collect()
+}
+
+fn bench_put(suite: &mut Suite, len: usize) {
+    let value = value_of(len);
+    let tok = token();
+    let param = format!("len={len}");
+
+    // v1: PUT line with hex value + hex ctx, parsed back
+    suite.bench("text/put_roundtrip", &param, {
+        let value = value.clone();
+        let tok = tok.clone();
+        move || {
+            let line = format!("PUT key:1 {} {}", hex_encode(&value), hex_encode(&tok));
+            match parse_request(black_box(&line)).unwrap() {
+                Request::Put { key, value, context } => {
+                    black_box((key, value, context));
+                }
+                _ => unreachable!(),
+            }
+        }
+    });
+
+    // v2: PUT frame encoded + decoded
+    suite.bench("binary/put_roundtrip", &param, {
+        let value = value.clone();
+        let tok = tok.clone();
+        move || {
+            let req = BinRequest::Put {
+                key: "key:1".to_string(),
+                value: value.clone(),
+                actor: 1 << 20,
+                ctx_token: tok.clone(),
+            };
+            let (opcode, payload) = encode_bin_request(black_box(&req));
+            black_box(decode_bin_request(opcode, &payload).unwrap());
+        }
+    });
+}
+
+fn bench_get_reply(suite: &mut Suite, len: usize) {
+    let values = vec![value_of(len), value_of(len / 2 + 1)];
+    let tok = token();
+    let param = format!("len={len}");
+
+    // v1: VALUES header + per-sibling hex lines, values decoded back
+    suite.bench("text/get_reply_roundtrip", &param, {
+        let values = values.clone();
+        let tok = tok.clone();
+        move || {
+            let text = format_values(black_box(&values), &tok);
+            for line in text.lines().skip(1) {
+                let hex = line.strip_prefix("VALUE ").unwrap();
+                black_box(hex_decode(hex).unwrap());
+            }
+        }
+    });
+
+    // v2: VALUES frame payload encoded + decoded
+    suite.bench("binary/get_reply_roundtrip", &param, {
+        let values = values.clone();
+        let tok = tok.clone();
+        move || {
+            let payload = protocol::encode_values(black_box(&values), &tok);
+            black_box(protocol::decode_values(&payload).unwrap());
+        }
+    });
+}
+
+fn json_escape_free(s: &str) -> bool {
+    s.chars().all(|c| c.is_ascii_alphanumeric() || "/_=.-".contains(c))
+}
+
+/// Hand-rolled JSON (no serde in the offline build): flat result rows
+/// plus a text-vs-binary speedup summary per payload size.
+fn write_json(path: &str, quick: bool, results: &[Stats]) -> std::io::Result<()> {
+    let mut rows = String::new();
+    for (i, s) in results.iter().enumerate() {
+        assert!(json_escape_free(&s.name) && json_escape_free(&s.param), "bench names are JSON-safe");
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"name\": \"{}\", \"param\": \"{}\", \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"min_ns\": {:.1}}}",
+            s.name, s.param, s.mean_ns, s.p50_ns, s.p95_ns, s.min_ns
+        ));
+    }
+    let mean_of = |name: &str, param: &str| {
+        results
+            .iter()
+            .find(|s| s.name == name && s.param == param)
+            .map(|s| s.mean_ns)
+    };
+    let mut speedups = String::new();
+    let mut first = true;
+    for s in results.iter().filter(|s| s.name == "binary/put_roundtrip") {
+        if let Some(text) = mean_of("text/put_roundtrip", &s.param) {
+            if s.mean_ns > 0.0 {
+                if !first {
+                    speedups.push_str(", ");
+                }
+                first = false;
+                speedups.push_str(&format!("\"{}\": {:.2}", s.param, text / s.mean_ns));
+            }
+        }
+    }
+    let json = format!(
+        "{{\n  \"suite\": \"wire\",\n  \"quick\": {quick},\n  \
+         \"put_roundtrip_speedup_text_over_binary\": {{{speedups}}},\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    std::fs::write(path, json)
+}
+
+fn main() {
+    let opts = Options::from_args();
+    let quick = opts.quick;
+    let mut suite = Suite::new("wire", opts);
+
+    suite.bench("text/hex_encode", "len=256", {
+        let value = value_of(256);
+        move || {
+            black_box(hex_encode(black_box(&value)));
+        }
+    });
+
+    for len in [16, 256, 4096] {
+        bench_put(&mut suite, len);
+        bench_get_reply(&mut suite, len);
+    }
+
+    let results: Vec<Stats> = suite.results().to_vec();
+    let path =
+        std::env::var("BENCH_WIRE_JSON").unwrap_or_else(|_| "BENCH_wire.json".to_string());
+    match write_json(&path, quick, &results) {
+        Ok(()) => eprintln!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+    suite.finish();
+}

@@ -36,4 +36,11 @@ cargo test -q
 echo "==> cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
+# Wire-format perf baseline: a quick (1-iteration-scale) smoke run of
+# the hex-text vs binary-v2 framing bench, emitting BENCH_wire.json at
+# the repo root so subsequent changes can diff against it.
+echo "==> cargo bench --bench wire (smoke run, quick mode)"
+DVV_BENCH_QUICK=1 cargo bench --bench wire
+if [[ -f BENCH_wire.json ]]; then echo "    wrote BENCH_wire.json"; fi
+
 echo "ci OK"

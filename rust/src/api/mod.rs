@@ -1,0 +1,401 @@
+//! The canonical client surface: **one causal KV API over every
+//! transport**.
+//!
+//! The paper's client model (§2–§3) is a single narrow interface — GET
+//! returns sibling values plus an opaque causal context, PUT supplies
+//! that context back — and this module is its one definition:
+//! [`KvClient`], with the context packaged as an opaque, versioned
+//! [`CausalCtx`] token. Three transports implement it:
+//!
+//! * [`SimClient`] — the deterministic discrete-event simulator
+//!   ([`crate::sim::Sim`]), driven interactively;
+//! * [`LocalClient`] — the threaded in-process cluster
+//!   ([`crate::server::LocalCluster`]), chaos-fabric-aware;
+//! * [`TcpClient`] — real sockets, speaking binary protocol v2
+//!   ([`crate::server::protocol`]).
+//!
+//! Workloads, fault schedules, and oracle audits are written once
+//! against the trait ([`drive_workload`]) and run unchanged against all
+//! three worlds — `rust/tests/api_transports.rs` asserts they reach
+//! identical verdicts on the same seeded workload.
+//!
+//! The token stays opaque and cheap: it wraps the mechanism context
+//! (encoded via [`crate::clocks::encoding`]) together with the value
+//! ids the client observed — exactly what the causal ground-truth
+//! oracle needs — behind a version byte, so its representation can
+//! evolve without breaking stored or in-flight tokens.
+
+pub mod local;
+pub mod sim;
+pub mod tcp;
+
+pub use local::LocalClient;
+pub use sim::{SimClient, SimTransport};
+pub use tcp::TcpClient;
+
+use std::collections::HashMap;
+
+use crate::clocks::encoding::{expect_end, get_bytes, get_varint, put_varint};
+use crate::clocks::Actor;
+use crate::error::{Error, Result};
+use crate::store::Key;
+use crate::testkit::Rng;
+use crate::workload::{Driver, OpKind};
+
+/// Version byte of the [`CausalCtx`] token encoding.
+pub const CTX_VERSION: u8 = 1;
+
+/// Cap on length fields inside a token (guards allocations when
+/// decoding remote input).
+const MAX_CTX_FIELD: u64 = 1 << 24;
+
+/// An opaque, versioned causal-context token.
+///
+/// Returned by every GET and handed back on the next PUT of the same
+/// key. It carries the mechanism's encoded context (a version vector
+/// for DVV) plus the value ids the client observed — the ground truth
+/// the [`crate::oracle`] audits against. Clients must treat it as
+/// opaque bytes: [`encode`](CausalCtx::encode) /
+/// [`decode`](CausalCtx::decode) define the stable wire form.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CausalCtx {
+    /// Encoded mechanism context (e.g. `encode_vv` output).
+    vv: Vec<u8>,
+    /// Value ids the client observed when it received this context.
+    observed: Vec<u64>,
+}
+
+impl CausalCtx {
+    /// Wrap an encoded mechanism context plus the observed value ids.
+    pub fn new(vv: Vec<u8>, observed: Vec<u64>) -> CausalCtx {
+        CausalCtx { vv, observed }
+    }
+
+    /// The encoded mechanism context (empty = blind).
+    pub fn vv_bytes(&self) -> &[u8] {
+        &self.vv
+    }
+
+    /// The value ids observed with this context.
+    pub fn observed(&self) -> &[u64] {
+        &self.observed
+    }
+
+    /// Split into `(encoded context, observed ids)`.
+    pub fn into_parts(self) -> (Vec<u8>, Vec<u64>) {
+        (self.vv, self.observed)
+    }
+
+    /// True when the token carries neither context nor observations.
+    pub fn is_empty(&self) -> bool {
+        self.vv.is_empty() && self.observed.is_empty()
+    }
+
+    /// Stable wire form: `[version][vv len][vv bytes][count][ids…]`,
+    /// varint integers.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(1 + self.vv.len() + self.observed.len() * 2 + 4);
+        out.push(CTX_VERSION);
+        put_varint(&mut out, self.vv.len() as u64);
+        out.extend_from_slice(&self.vv);
+        put_varint(&mut out, self.observed.len() as u64);
+        for &id in &self.observed {
+            put_varint(&mut out, id);
+        }
+        out
+    }
+
+    /// Decode a token, rejecting unknown versions, truncation, and
+    /// trailing bytes (never panics on malformed input).
+    pub fn decode(buf: &[u8]) -> Result<CausalCtx> {
+        let version = *buf
+            .first()
+            .ok_or_else(|| Error::Codec("empty context token".into()))?;
+        if version != CTX_VERSION {
+            return Err(Error::Codec(format!(
+                "context token v{version} unsupported (this build speaks v{CTX_VERSION})"
+            )));
+        }
+        let mut pos = 1;
+        let vv_len = get_varint(buf, &mut pos)?;
+        if vv_len > MAX_CTX_FIELD {
+            return Err(Error::Codec(format!("context field of {vv_len} bytes")));
+        }
+        let vv = get_bytes(buf, &mut pos, vv_len as usize)?.to_vec();
+        let count = get_varint(buf, &mut pos)?;
+        // each id costs at least one byte, so a count beyond the bytes
+        // actually remaining is malformed — reject before any
+        // count-driven allocation (remote input must not pick our
+        // allocation sizes)
+        if count > (buf.len() - pos) as u64 {
+            return Err(Error::Codec(format!(
+                "observed count {count} exceeds remaining token bytes"
+            )));
+        }
+        let mut observed = Vec::new();
+        for _ in 0..count {
+            observed.push(get_varint(buf, &mut pos)?);
+        }
+        expect_end(buf, pos)?;
+        Ok(CausalCtx { vv, observed })
+    }
+}
+
+/// A GET's answer: sibling values plus the causal-context token. The
+/// token's observed ids run parallel to `values`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GetReply {
+    /// Sibling values (raw bytes), one per concurrent version.
+    pub values: Vec<Vec<u8>>,
+    /// The context to hand back on the next PUT of this key.
+    pub ctx: CausalCtx,
+}
+
+impl GetReply {
+    /// The write ids of the returned siblings (parallel to `values`).
+    pub fn ids(&self) -> &[u64] {
+        self.ctx.observed()
+    }
+}
+
+/// A PUT's answer. Carrying the new write's id *and* the post-write
+/// context in the reply is what lets a [`Session`] update itself — no
+/// caller threads `wrote_id` by hand anymore.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PutReply {
+    /// The id assigned to the written value.
+    pub id: u64,
+    /// The coordinator's post-write context, returned **only when the
+    /// write left no concurrent siblings** — the one case where chaining
+    /// another PUT on it is causally sound (it covers nothing the client
+    /// has not observed). When a concurrent sibling survived, this is
+    /// `None` and the stored context is consumed: the client must GET —
+    /// and thereby observe the siblings — before it can supersede them.
+    pub ctx: Option<CausalCtx>,
+}
+
+/// The canonical client surface (paper §2): GET returns siblings plus
+/// an opaque context, PUT supplies that context back. Implemented by
+/// [`SimClient`], [`LocalClient`], and [`TcpClient`].
+pub trait KvClient {
+    /// The actor identity this client writes as (oracle ground truth).
+    fn actor(&self) -> Actor;
+
+    /// Read a key: current siblings plus the causal-context token.
+    fn get(&mut self, key: &str) -> Result<GetReply>;
+
+    /// Write a key. `ctx` is the token from this client's latest GET of
+    /// the key (`None` = blind write — the concurrency the paper's
+    /// anomalies feed on).
+    fn put(&mut self, key: &str, value: Vec<u8>, ctx: Option<&CausalCtx>) -> Result<PutReply>;
+}
+
+/// Per-client token cache: the §2 client state ("nothing but the
+/// context of the last GET"), updated from replies so no id or context
+/// is ever threaded by hand.
+#[derive(Debug, Clone, Default)]
+pub struct Session {
+    ctxs: HashMap<String, CausalCtx>,
+}
+
+impl Session {
+    /// Empty session.
+    pub fn new() -> Session {
+        Session::default()
+    }
+
+    /// The token to attach to a PUT of `key` (`None` = blind).
+    pub fn ctx_for(&self, key: &str) -> Option<&CausalCtx> {
+        self.ctxs.get(key)
+    }
+
+    /// Record a GET's reply for `key`.
+    pub fn record_get(&mut self, key: &str, reply: &GetReply) {
+        self.ctxs.insert(key.to_string(), reply.ctx.clone());
+    }
+
+    /// Record a PUT's reply for `key`: the returned post-write context
+    /// replaces the stored one (or, absent one, the context is
+    /// consumed — a stale context must never leak into a blind write).
+    pub fn record_put(&mut self, key: &str, reply: &PutReply) {
+        match &reply.ctx {
+            Some(ctx) => {
+                self.ctxs.insert(key.to_string(), ctx.clone());
+            }
+            None => {
+                self.ctxs.remove(key);
+            }
+        }
+    }
+}
+
+/// Outcome counts from [`drive_workload`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RunReport {
+    /// Operations that succeeded.
+    pub ok_ops: u64,
+    /// Operations that failed (quorum not met / unavailable — expected
+    /// under active faults).
+    pub failed_ops: u64,
+    /// Successful GETs.
+    pub gets: u64,
+    /// Successful PUTs.
+    pub puts: u64,
+    /// Largest sibling set any GET returned.
+    pub max_siblings: usize,
+}
+
+/// Stable key-string naming for workload keys (see
+/// [`crate::workload::key_name`]): every transport hashes the same
+/// string onto the same ring position.
+pub use crate::workload::key_name;
+
+/// Deterministic PUT payload for `(client, seq)` — the same across
+/// transports, so fault-free runs converge to identical value sets.
+pub fn payload(client: usize, seq: u64, len: u32) -> Vec<u8> {
+    let tag = format!("c{client}-w{seq}-");
+    tag.into_bytes().into_iter().cycle().take(len as usize).collect()
+}
+
+/// Drive a workload [`Driver`] against one [`KvClient`] per client:
+/// round-robin, closed-loop, sessions managed internally. This is the
+/// single harness every transport runs under — the Zipf workloads, the
+/// fault schedules, and the oracle audits never see a concrete
+/// transport. `on_op(completed)` fires after every finished (or failed)
+/// op — the hook chaos tests use to step a
+/// [`crate::sim::failure::FaultPlan`] along the run.
+///
+/// Op failures are tolerated (they are the point of fault windows) and
+/// tallied in the report; think times shape the virtual clock handed to
+/// the driver but are not slept.
+pub fn drive_workload<C: KvClient>(
+    clients: &mut [C],
+    driver: &mut dyn Driver,
+    seed: u64,
+    mut on_op: impl FnMut(u64),
+) -> RunReport {
+    let mut rng = Rng::new(seed);
+    let mut sessions: Vec<Session> = (0..clients.len()).map(|_| Session::new()).collect();
+    let mut put_seq: Vec<u64> = vec![0; clients.len()];
+    let mut live: Vec<bool> = vec![true; clients.len()];
+    let mut report = RunReport::default();
+    let mut now_us: u64 = 0;
+    let mut completed: u64 = 0;
+    while live.iter().any(|&l| l) {
+        for (i, client) in clients.iter_mut().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            let Some(op) = driver.next_op(i, now_us, &mut rng) else {
+                live[i] = false;
+                continue;
+            };
+            now_us += op.think_us;
+            let key = key_name(op.key);
+            let outcome = match op.kind {
+                OpKind::Get => client.get(&key).map(|reply| {
+                    report.gets += 1;
+                    report.max_siblings = report.max_siblings.max(reply.values.len());
+                    sessions[i].record_get(&key, &reply);
+                }),
+                OpKind::Put { len } => {
+                    let seq = put_seq[i];
+                    put_seq[i] += 1;
+                    let value = payload(i, seq, len);
+                    let ctx = sessions[i].ctx_for(&key).cloned();
+                    client.put(&key, value, ctx.as_ref()).map(|reply| {
+                        report.puts += 1;
+                        sessions[i].record_put(&key, &reply);
+                    })
+                }
+            };
+            match outcome {
+                Ok(()) => report.ok_ops += 1,
+                Err(_) => report.failed_ops += 1,
+            }
+            completed += 1;
+            on_op(completed);
+        }
+    }
+    report
+}
+
+/// Read the current sibling values for every workload key through a
+/// client (sorted, so transports can be compared set-wise).
+pub fn snapshot_values<C: KvClient>(
+    client: &mut C,
+    keys: u64,
+) -> Result<Vec<(Key, Vec<Vec<u8>>)>> {
+    let mut out = Vec::with_capacity(keys as usize);
+    for key in 0..keys {
+        let mut reply = client.get(&key_name(key))?;
+        reply.values.sort();
+        out.push((key, reply.values));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_roundtrips() {
+        for ctx in [
+            CausalCtx::default(),
+            CausalCtx::new(vec![1, 0, 5], vec![]),
+            CausalCtx::new(vec![], vec![7, 8, 9]),
+            CausalCtx::new(vec![2, 0, 3, 1, 9], vec![u64::MAX, 0, 300]),
+        ] {
+            let bytes = ctx.encode();
+            assert_eq!(CausalCtx::decode(&bytes).unwrap(), ctx, "{ctx:?}");
+        }
+    }
+
+    #[test]
+    fn token_rejects_version_skew_and_truncation() {
+        let mut bytes = CausalCtx::new(vec![1, 2, 3], vec![4, 5]).encode();
+        // every strict prefix is rejected
+        for cut in 0..bytes.len() {
+            assert!(CausalCtx::decode(&bytes[..cut]).is_err(), "prefix {cut}");
+        }
+        // trailing garbage is rejected
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(CausalCtx::decode(&long).is_err());
+        // version skew is rejected
+        bytes[0] = CTX_VERSION + 1;
+        let err = CausalCtx::decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("unsupported"), "{err}");
+    }
+
+    #[test]
+    fn session_updates_itself_from_replies() {
+        let mut s = Session::new();
+        assert!(s.ctx_for("k").is_none());
+        let get = GetReply {
+            values: vec![b"a".to_vec()],
+            ctx: CausalCtx::new(vec![1, 0, 1], vec![10]),
+        };
+        s.record_get("k", &get);
+        assert_eq!(s.ctx_for("k"), Some(&get.ctx));
+
+        // a PUT reply with a post-write context replaces the stored one
+        let put = PutReply { id: 11, ctx: Some(CausalCtx::new(vec![1, 0, 2], vec![11])) };
+        s.record_put("k", &put);
+        assert_eq!(s.ctx_for("k"), put.ctx.as_ref());
+
+        // a context-less reply consumes the stored context
+        s.record_put("k", &PutReply { id: 12, ctx: None });
+        assert!(s.ctx_for("k").is_none());
+    }
+
+    #[test]
+    fn payloads_are_deterministic_and_distinct() {
+        assert_eq!(payload(0, 1, 16), payload(0, 1, 16));
+        assert_ne!(payload(0, 1, 16), payload(1, 1, 16));
+        assert_ne!(payload(0, 1, 16), payload(0, 2, 16));
+        assert_eq!(payload(3, 9, 32).len(), 32);
+        assert!(payload(0, 0, 0).is_empty());
+    }
+}

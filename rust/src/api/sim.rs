@@ -1,0 +1,164 @@
+//! [`KvClient`] over the deterministic discrete-event simulator.
+//!
+//! The DES normally runs closed-loop behind a [`Driver`]; here it runs
+//! *interactively* instead: each API call issues one op and pumps the
+//! event queue until that op resolves ([`crate::sim::Sim::sync_get`] /
+//! [`crate::sim::Sim::sync_put`]), advancing virtual time — and firing
+//! any scheduled faults — along the way. Payload bytes live in a side
+//! table (the simulator itself tracks value identity + length only).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::{CausalCtx, GetReply, KvClient, PutReply};
+use crate::clocks::encoding::{decode_vv, encode_vv};
+use crate::clocks::{Actor, VersionVector};
+use crate::cluster::ring::hash_str;
+use crate::config::StoreConfig;
+use crate::error::Result;
+use crate::kernel::mechs::DvvMech;
+use crate::sim::Sim;
+use crate::testkit::Rng;
+use crate::workload::{Driver, Op};
+
+/// A driver that never issues ops: the interactive sim has no closed
+/// loop of its own — every op arrives through the API.
+struct Idle;
+
+impl Driver for Idle {
+    fn next_op(&mut self, _client: usize, _now_us: u64, _rng: &mut Rng) -> Option<Op> {
+        None
+    }
+}
+
+struct SimInner {
+    sim: Sim<DvvMech>,
+    /// Write id → payload bytes (the sim's `Val` carries identity only).
+    blobs: HashMap<u64, Vec<u8>>,
+}
+
+/// One interactive DVV simulator shared by its [`SimClient`]s
+/// (single-threaded, like the DES itself).
+pub struct SimTransport {
+    inner: Rc<RefCell<SimInner>>,
+}
+
+impl SimTransport {
+    /// Build an interactive simulator for `clients` API clients.
+    pub fn new(cfg: StoreConfig, clients: usize, seed: u64) -> Result<SimTransport> {
+        let sim = Sim::new(DvvMech, cfg, clients, true, Box::new(Idle), seed)?;
+        Ok(SimTransport {
+            inner: Rc::new(RefCell::new(SimInner { sim, blobs: HashMap::new() })),
+        })
+    }
+
+    /// The [`KvClient`] for client slot `idx`.
+    pub fn client(&self, idx: usize) -> SimClient {
+        SimClient { inner: Rc::clone(&self.inner), idx }
+    }
+
+    /// Run a closure against the underlying simulator (fault scheduling
+    /// before the run, settling and audits after).
+    pub fn with_sim<R>(&self, f: impl FnOnce(&mut Sim<DvvMech>) -> R) -> R {
+        f(&mut self.inner.borrow_mut().sim)
+    }
+}
+
+/// [`KvClient`] over one [`SimTransport`] client slot.
+pub struct SimClient {
+    inner: Rc<RefCell<SimInner>>,
+    idx: usize,
+}
+
+impl KvClient for SimClient {
+    fn actor(&self) -> Actor {
+        Actor::client(self.idx as u32)
+    }
+
+    fn get(&mut self, key: &str) -> Result<GetReply> {
+        let mut inner = self.inner.borrow_mut();
+        let (values, ctx) = inner.sim.sync_get(self.idx, hash_str(key))?;
+        let ids: Vec<u64> = values.iter().map(|v| v.id).collect();
+        let bytes: Vec<Vec<u8>> = values
+            .iter()
+            .map(|v| inner.blobs.get(&v.id).cloned().unwrap_or_default())
+            .collect();
+        let mut vv = Vec::new();
+        encode_vv(&ctx, &mut vv);
+        Ok(GetReply { values: bytes, ctx: CausalCtx::new(vv, ids) })
+    }
+
+    fn put(&mut self, key: &str, value: Vec<u8>, ctx: Option<&CausalCtx>) -> Result<PutReply> {
+        let (vv, observed): (VersionVector, Vec<u64>) = match ctx {
+            Some(c) if !c.vv_bytes().is_empty() => {
+                let mut pos = 0;
+                (decode_vv(c.vv_bytes(), &mut pos)?, c.observed().to_vec())
+            }
+            Some(c) => (VersionVector::new(), c.observed().to_vec()),
+            None => (VersionVector::new(), Vec::new()),
+        };
+        let len = value.len() as u32;
+        let mut inner = self.inner.borrow_mut();
+        // record the payload BEFORE issuing: a PUT that fails its quorum
+        // has often still landed at the coordinator (sloppy semantics),
+        // and its sibling must resolve to real bytes on later GETs. If
+        // the op fails before the id is consumed, the next write's
+        // pre-insert simply overwrites this entry.
+        let id = inner.sim.peek_next_val();
+        inner.blobs.insert(id, value);
+        let (id, post) = inner.sim.sync_put(self.idx, hash_str(key), len, &vv, &observed)?;
+        let ctx = post.map(|post| {
+            let mut post_bytes = Vec::new();
+            encode_vv(&post, &mut post_bytes);
+            CausalCtx::new(post_bytes, vec![id])
+        });
+        Ok(PutReply { id, ctx })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_client_get_put_siblings_supersede() {
+        let mut cfg = StoreConfig::default();
+        cfg.cluster.nodes = 3;
+        cfg.cluster.replication = 3;
+        cfg.cluster.read_quorum = 2;
+        cfg.cluster.write_quorum = 2;
+        let transport = SimTransport::new(cfg, 2, 42).unwrap();
+        let mut c0 = transport.client(0);
+        let mut c1 = transport.client(1);
+
+        // blind writes from two clients -> siblings with real payloads
+        c0.put("k", b"v1".to_vec(), None).unwrap();
+        c1.put("k", b"v2".to_vec(), None).unwrap();
+        let reply = c0.get("k").unwrap();
+        let mut values = reply.values.clone();
+        values.sort();
+        assert_eq!(values, vec![b"v1".to_vec(), b"v2".to_vec()]);
+        assert_eq!(reply.ids().len(), 2);
+
+        // an informed write with the GET's token supersedes both
+        c0.put("k", b"merged".to_vec(), Some(&reply.ctx)).unwrap();
+        let after = c0.get("k").unwrap();
+        assert_eq!(after.values, vec![b"merged".to_vec()]);
+        transport.with_sim(|sim| {
+            assert_eq!(sim.metrics.lost_updates, 0);
+            assert!(sim.oracle.tracked() >= 3);
+        });
+    }
+
+    #[test]
+    fn put_reply_context_chains_without_rereading() {
+        let transport = SimTransport::new(StoreConfig::default(), 1, 7).unwrap();
+        let mut c = transport.client(0);
+        let first = c.put("k", b"one".to_vec(), None).unwrap();
+        // chain on the returned post-write context: no GET in between
+        c.put("k", b"two".to_vec(), first.ctx.as_ref()).unwrap();
+        let reply = c.get("k").unwrap();
+        assert_eq!(reply.values, vec![b"two".to_vec()], "chained write supersedes");
+    }
+}

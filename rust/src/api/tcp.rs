@@ -1,0 +1,119 @@
+//! [`KvClient`] over real sockets: binary wire protocol v2.
+//!
+//! [`TcpClient::connect`] performs the magic/version negotiation and
+//! then speaks length-prefixed frames exclusively — no hex on the hot
+//! path. PUT frames carry the client's actor id and its [`CausalCtx`]
+//! token, so a server-side oracle audits live-TCP traffic exactly like
+//! in-process traffic.
+
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use super::{CausalCtx, GetReply, KvClient, PutReply};
+use crate::clocks::Actor;
+use crate::error::{Error, Result};
+use crate::server::protocol::{self, BinRequest};
+
+/// A connected protocol-v2 client.
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+    actor: Actor,
+}
+
+/// Map an unexpected reply frame onto an error: the server's `ERR`
+/// payload verbatim, or a protocol error for anything else.
+fn remote_err((opcode, payload): (u8, Vec<u8>)) -> Error {
+    if opcode == protocol::OP_ERR {
+        Error::Remote(String::from_utf8_lossy(&payload).into_owned())
+    } else {
+        Error::Protocol(format!("unexpected reply opcode {opcode:#04x}"))
+    }
+}
+
+impl TcpClient {
+    /// Connect and negotiate protocol v2: send the magic preamble, then
+    /// require the server's `HELLO_ACK`. Fails cleanly (with the
+    /// server's message) on version skew.
+    pub fn connect(addr: impl ToSocketAddrs, actor: Actor) -> Result<TcpClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.write_all(&protocol::MAGIC)?;
+        stream.write_all(&[protocol::VERSION, b'\n'])?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        match protocol::read_frame(&mut reader)? {
+            (protocol::OP_HELLO_ACK, payload) if payload == [protocol::VERSION] => {
+                Ok(TcpClient { reader, stream, actor })
+            }
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    /// One request frame out, one reply frame back.
+    fn roundtrip(&mut self, req: &BinRequest) -> Result<(u8, Vec<u8>)> {
+        let (opcode, payload) = protocol::encode_bin_request(req);
+        protocol::write_frame(&mut self.stream, opcode, &payload)?;
+        protocol::read_frame(&mut self.reader)
+    }
+
+    /// Run a `FAULT`/`HEAL` admin command (text form) over the binary
+    /// connection — chaos-engineering a live server.
+    pub fn admin(&mut self, line: &str) -> Result<()> {
+        match self.roundtrip(&BinRequest::Admin { line: line.to_string() })? {
+            (protocol::OP_OK, _) => Ok(()),
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    /// Server statistics: `(nodes, shards, metadata_bytes, hints)`.
+    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64)> {
+        match self.roundtrip(&BinRequest::Stats)? {
+            (protocol::OP_STATS_REPLY, payload) => protocol::decode_stats_reply(&payload),
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    /// Close the connection politely (waits for the server's `BYE`).
+    pub fn quit(mut self) -> Result<()> {
+        match self.roundtrip(&BinRequest::Quit)? {
+            (protocol::OP_BYE, _) => Ok(()),
+            reply => Err(remote_err(reply)),
+        }
+    }
+}
+
+impl KvClient for TcpClient {
+    fn actor(&self) -> Actor {
+        self.actor
+    }
+
+    fn get(&mut self, key: &str) -> Result<GetReply> {
+        match self.roundtrip(&BinRequest::Get { key: key.to_string() })? {
+            (protocol::OP_VALUES, payload) => {
+                let (values, token) = protocol::decode_values(&payload)?;
+                Ok(GetReply { values, ctx: CausalCtx::decode(&token)? })
+            }
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    fn put(&mut self, key: &str, value: Vec<u8>, ctx: Option<&CausalCtx>) -> Result<PutReply> {
+        let token = ctx.map(CausalCtx::encode).unwrap_or_default();
+        let req = BinRequest::Put {
+            key: key.to_string(),
+            value,
+            actor: self.actor.0,
+            ctx_token: token,
+        };
+        match self.roundtrip(&req)? {
+            (protocol::OP_PUT_OK, payload) => {
+                let (id, token) = protocol::decode_put_ok(&payload)?;
+                // empty token = no chainable post-write context (a
+                // concurrent sibling survived the write)
+                let ctx = if token.is_empty() { None } else { Some(CausalCtx::decode(&token)?) };
+                Ok(PutReply { id, ctx })
+            }
+            reply => Err(remote_err(reply)),
+        }
+    }
+}

@@ -47,6 +47,27 @@ pub fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
     }
 }
 
+/// Bounds-checked slice read, advancing `pos`: decoders of remote input
+/// must error on truncation, never index past the buffer.
+pub fn get_bytes<'a>(buf: &'a [u8], pos: &mut usize, len: usize) -> Result<&'a [u8]> {
+    let end = pos
+        .checked_add(len)
+        .filter(|&e| e <= buf.len())
+        .ok_or_else(|| Error::Codec("byte field truncated".into()))?;
+    let out = &buf[*pos..end];
+    *pos = end;
+    Ok(out)
+}
+
+/// Reject encodings with bytes past the last decoded field.
+pub fn expect_end(buf: &[u8], pos: usize) -> Result<()> {
+    if pos == buf.len() {
+        Ok(())
+    } else {
+        Err(Error::Codec(format!("{} trailing bytes", buf.len() - pos)))
+    }
+}
+
 /// Encode a version vector.
 pub fn encode_vv(vv: &VersionVector, buf: &mut Vec<u8>) {
     put_varint(buf, vv.len() as u64);
@@ -197,6 +218,18 @@ mod tests {
             assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
             assert_eq!(pos, buf.len());
         }
+    }
+
+    #[test]
+    fn get_bytes_is_bounds_checked() {
+        let buf = [1u8, 2, 3];
+        let mut pos = 0;
+        assert_eq!(get_bytes(&buf, &mut pos, 2).unwrap(), &[1, 2]);
+        assert!(get_bytes(&buf, &mut pos, 2).is_err(), "past the end");
+        assert_eq!(pos, 2, "pos untouched on failure");
+        assert!(get_bytes(&buf, &mut pos, usize::MAX).is_err(), "overflow-safe");
+        assert!(expect_end(&buf, 2).is_err());
+        assert!(expect_end(&buf, 3).is_ok());
     }
 
     #[test]

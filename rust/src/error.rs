@@ -41,6 +41,11 @@ pub enum Error {
     #[error("protocol: {0}")]
     Protocol(String),
 
+    /// An error the remote server reported over the wire (the operation
+    /// itself failed; the connection and framing are fine).
+    #[error("remote: {0}")]
+    Remote(String),
+
     /// Codec errors for clock serialization.
     #[error("codec: {0}")]
     Codec(String),

@@ -7,6 +7,11 @@
 //!
 //! The crate is organized around the paper's structure:
 //!
+//! * [`api`] — the canonical client surface: `KvClient` (GET returns
+//!   siblings + an opaque, versioned `CausalCtx` token; PUT hands it
+//!   back) implemented over three transports — the simulator, the
+//!   threaded cluster, and live TCP — so workloads, fault schedules,
+//!   and oracle audits run unchanged against all three.
 //! * [`clocks`] — every causality mechanism the paper surveys (§3) plus the
 //!   contribution (§5): causal histories (ground truth), physical-clock LWW,
 //!   Lamport clocks, per-server version vectors, per-client version vectors,
@@ -32,6 +37,7 @@
 //!   (unavailable in the offline build environment; see DESIGN.md §3).
 
 pub mod antientropy;
+pub mod api;
 pub mod bench_support;
 pub mod cli;
 pub mod clocks;

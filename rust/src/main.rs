@@ -189,7 +189,11 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
         nodes,
         cluster.shard_count()
     );
-    println!("protocol: GET <key> | PUT <key> <value-hex> [ctx-hex] | STATS | QUIT");
+    println!(
+        "protocol: binary v2 (open with \"DVV2\" + version byte; length-prefixed \
+         frames, negotiated per connection — see README \"Wire protocol\")"
+    );
+    println!("fallback: text — GET <key> | PUT <key> <value-hex> [ctx-hex] | STATS | QUIT");
     println!(
         "chaos:    FAULT CRASH <node> | FAULT PARTITION <a,b> <c,d> | \
          FAULT DROP <prob> | FAULT DELAY <us> | HEAL [node]"

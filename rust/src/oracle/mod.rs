@@ -119,6 +119,20 @@ impl Oracle {
     }
 }
 
+/// One immutable snapshot of a [`SharedOracle`]'s verdict counters —
+/// what transport-equivalence tests compare across worlds.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OracleVerdict {
+    /// Concurrent updates destroyed (must stay 0 for DVV).
+    pub lost_updates: u64,
+    /// Drops where a survivor causally covered the dropped version.
+    pub correct_supersessions: u64,
+    /// Drops involving untraced values (0 in a fully traced workload).
+    pub unaudited_drops: u64,
+    /// Number of tracked values.
+    pub tracked: usize,
+}
+
 /// Thread-safe [`Oracle`] adapter for the threaded cluster.
 ///
 /// The single-threaded simulator owns its oracle directly; the threaded
@@ -222,6 +236,16 @@ impl SharedOracle {
     /// Run a closure against the underlying [`Oracle`] (final audits).
     pub fn with_inner<R>(&self, f: impl FnOnce(&Oracle) -> R) -> R {
         f(&self.inner.lock().unwrap())
+    }
+
+    /// Snapshot every verdict counter at once.
+    pub fn verdict(&self) -> OracleVerdict {
+        OracleVerdict {
+            lost_updates: self.lost_updates(),
+            correct_supersessions: self.correct_supersessions(),
+            unaudited_drops: self.unaudited_drops(),
+            tracked: self.tracked(),
+        }
     }
 }
 

@@ -338,6 +338,38 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         self.put_inner(key, value, context, Actor::client(0), None).map(|_| ())
     }
 
+    /// Traced PUT for the client API: like
+    /// [`put_traced`](LocalCluster::put_traced), but also returning the
+    /// coordinator's post-write context (encoded version vector) — what
+    /// [`crate::api::PutReply`] carries so a session can update itself
+    /// without re-reading.
+    ///
+    /// The context is returned **only when the write left no concurrent
+    /// siblings** (the post-write state is exactly the client's own
+    /// version). A surviving sibling means the state's context covers an
+    /// event the client never observed — chaining a PUT on it would
+    /// silently destroy that concurrent write (a true lost update), so
+    /// the client must GET (and thereby observe the siblings) first.
+    pub fn put_api(
+        &self,
+        key: &str,
+        value: Vec<u8>,
+        context: &[u8],
+        client: Actor,
+        observed: &[u64],
+    ) -> Result<(u64, Option<Vec<u8>>)> {
+        let (id, state) = self.put_inner(key, value, context, client, Some(observed))?;
+        let (vals, post_ctx) = self.mech.read(&state);
+        let post = if vals.len() == 1 && vals[0].id == id {
+            let mut bytes = Vec::new();
+            crate::clocks::encoding::encode_vv(&post_ctx, &mut bytes);
+            Some(bytes)
+        } else {
+            None
+        };
+        Ok((id, post))
+    }
+
     /// PUT that also registers ground truth with an attached oracle:
     /// `client` is the writing actor (one sequential actor per real
     /// client) and `observed` the value ids from that client's latest GET
@@ -358,11 +390,15 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         client: Actor,
         observed: &[u64],
     ) -> Result<u64> {
-        self.put_inner(key, value, context, client, Some(observed))
+        self.put_inner(key, value, context, client, Some(observed)).map(|(id, _)| id)
     }
 
     /// Shared PUT path; `observed: None` marks an untraced write that an
-    /// attached oracle must not register.
+    /// attached oracle must not register. Returns the new write's id and
+    /// the coordinator's post-write state snapshot (captured atomically
+    /// under the stripe lock; callers that don't need it drop it so the
+    /// untraced hot path pays nothing extra).
+
     fn put_inner(
         &self,
         key: &str,
@@ -370,7 +406,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         context: &[u8],
         client: Actor,
         observed: Option<&[u64]>,
-    ) -> Result<u64> {
+    ) -> Result<(u64, DvvState)> {
         let k = hash_str(key);
         let ctx: VersionVector = if context.is_empty() {
             VersionVector::new()
@@ -447,7 +483,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
             }
         }
         if done {
-            Ok(id)
+            Ok((id, state))
         } else {
             Err(crate::Error::QuorumNotMet { got: op.acks(), needed: self.quorum.w })
         }

@@ -1,4 +1,27 @@
-//! Line-based text protocol for the TCP server.
+//! Wire protocols for the TCP server: the legacy line-based **text
+//! protocol (v1)** and the length-prefixed **binary protocol (v2)**.
+//!
+//! A connection's protocol is negotiated by its first bytes: a v2 client
+//! opens with [`MAGIC`] + a version byte + `\n` and the server answers
+//! with an [`OP_HELLO_ACK`] frame; anything else falls back to the text
+//! protocol, so old clients keep working unchanged (see
+//! [`super::tcp`]).
+//!
+//! # Binary protocol v2
+//!
+//! Every frame is `[u32 big-endian length][u8 opcode][payload]`, the
+//! length counting opcode + payload and capped at [`MAX_FRAME_LEN`].
+//! Integers inside payloads are LEB128 varints
+//! ([`crate::clocks::encoding`]); byte fields are length-prefixed. PUT
+//! frames carry the client's actor id and its opaque causal-context
+//! token ([`crate::api::CausalCtx`]) — context *and* observed ids — so
+//! binary writes are oracle-traceable end to end, and the `PUT_OK`
+//! reply returns the new write's id plus the coordinator's post-write
+//! token when the write left no concurrent siblings (an empty token
+//! means a sibling survived: GET before superseding). Hex never
+//! appears on the binary hot path.
+//!
+//! # Text protocol v1
 //!
 //! ```text
 //! -> GET <key>
@@ -30,16 +53,24 @@
 
 use crate::error::{Error, Result};
 
+/// Lowercase hex digits, indexed by nibble.
+const HEX_DIGITS: &[u8; 16] = b"0123456789abcdef";
+
 /// Encode bytes as lowercase hex (empty input → `-`).
+///
+/// Table-driven: two nibble lookups per byte instead of a `format!`
+/// round trip — this runs on every text-protocol value and context.
 pub fn hex_encode(data: &[u8]) -> String {
     if data.is_empty() {
         return "-".to_string();
     }
-    let mut out = String::with_capacity(data.len() * 2);
-    for b in data {
-        out.push_str(&format!("{b:02x}"));
+    let mut out = Vec::with_capacity(data.len() * 2);
+    for &b in data {
+        out.push(HEX_DIGITS[usize::from(b >> 4)]);
+        out.push(HEX_DIGITS[usize::from(b & 0x0f)]);
     }
-    out
+    // the table is pure ASCII, so the bytes are valid UTF-8
+    String::from_utf8(out).expect("hex digits are ASCII")
 }
 
 /// Decode `-` or hex into bytes.
@@ -239,6 +270,276 @@ pub fn format_values(values: &[Vec<u8>], context: &[u8]) -> String {
     out
 }
 
+// ===================================================================
+// Binary protocol v2
+// ===================================================================
+
+use crate::clocks::encoding::{expect_end, get_bytes, get_varint, put_varint};
+
+/// Connection preamble of a v2 client: these four bytes, then one
+/// version byte, then `\n`. Any other opening byte sequence selects the
+/// text protocol.
+pub const MAGIC: [u8; 4] = *b"DVV2";
+
+/// Current binary protocol version.
+pub const VERSION: u8 = 2;
+
+/// Upper bound on a frame's length field (16 MiB). A header promising
+/// more is rejected before any allocation.
+pub const MAX_FRAME_LEN: u32 = 1 << 24;
+
+/// Request opcode: read a key. Payload: key bytes (UTF-8).
+pub const OP_GET: u8 = 0x01;
+/// Request opcode: write a key. Payload:
+/// `[klen][key][vlen][value][actor][tlen][ctx token]` (varint lengths).
+pub const OP_PUT: u8 = 0x02;
+/// Request opcode: server statistics. Empty payload.
+pub const OP_STATS: u8 = 0x03;
+/// Request opcode: admin command (`FAULT …` / `HEAL …` in text form).
+pub const OP_ADMIN: u8 = 0x04;
+/// Request opcode: close the connection. Empty payload.
+pub const OP_QUIT: u8 = 0x05;
+
+/// Response opcode: negotiation ack. Payload: the accepted version byte.
+pub const OP_HELLO_ACK: u8 = 0x80;
+/// Response opcode: GET answer. Payload:
+/// `[tlen][ctx token][count]` then `[vlen][value]` per sibling — the
+/// token's observed ids run parallel to the values.
+pub const OP_VALUES: u8 = 0x81;
+/// Response opcode: PUT ack. Payload: `[id][tlen][post-write ctx
+/// token]`; an empty token means no chainable context (a concurrent
+/// sibling survived the write).
+pub const OP_PUT_OK: u8 = 0x82;
+/// Response opcode: generic success (admin commands). Empty payload.
+pub const OP_OK: u8 = 0x83;
+/// Response opcode: statistics. Payload:
+/// `[nodes][shards][metadata_bytes][hints]` varints.
+pub const OP_STATS_REPLY: u8 = 0x84;
+/// Response opcode: error. Payload: UTF-8 message. The connection stays
+/// usable unless the framing itself was broken.
+pub const OP_ERR: u8 = 0x85;
+/// Response opcode: goodbye (answer to [`OP_QUIT`]). Empty payload.
+pub const OP_BYE: u8 = 0x86;
+
+/// A parsed binary (v2) request frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BinRequest {
+    /// Read a key.
+    Get {
+        /// Key string.
+        key: String,
+    },
+    /// Write a key, traced: the writing actor and its causal-context
+    /// token travel with the payload.
+    Put {
+        /// Key string.
+        key: String,
+        /// Payload bytes.
+        value: Vec<u8>,
+        /// Raw id of the writing [`crate::clocks::Actor`].
+        actor: u32,
+        /// Encoded [`crate::api::CausalCtx`] token (empty = blind write
+        /// with nothing observed).
+        ctx_token: Vec<u8>,
+    },
+    /// Server statistics.
+    Stats,
+    /// Admin command in text form (`FAULT …` / `HEAL …`), reusing the
+    /// text parser so both protocols drive the same fabric switchboard.
+    Admin {
+        /// The admin command line.
+        line: String,
+    },
+    /// Close the connection.
+    Quit,
+}
+
+/// Validate a frame header, returning the body length (opcode +
+/// payload).
+pub fn frame_len(header: [u8; 4]) -> Result<usize> {
+    let len = u32::from_be_bytes(header);
+    if len == 0 {
+        return Err(Error::Protocol("zero-length frame".into()));
+    }
+    if len > MAX_FRAME_LEN {
+        return Err(Error::Protocol(format!(
+            "oversized frame: {len} bytes (max {MAX_FRAME_LEN})"
+        )));
+    }
+    Ok(len as usize)
+}
+
+/// Write one frame: `[u32 BE length][opcode][payload]`.
+pub fn write_frame(w: &mut impl std::io::Write, opcode: u8, payload: &[u8]) -> Result<()> {
+    let len = payload.len() as u64 + 1;
+    if len > u64::from(MAX_FRAME_LEN) {
+        return Err(Error::Protocol(format!("frame too large to send: {len} bytes")));
+    }
+    w.write_all(&(len as u32).to_be_bytes())?;
+    w.write_all(&[opcode])?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame with plain blocking I/O (client side; the server's
+/// timeout-aware loop lives in [`super::tcp`]). Returns
+/// `(opcode, payload)`.
+pub fn read_frame(r: &mut impl std::io::Read) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; 4];
+    r.read_exact(&mut header)?;
+    let len = frame_len(header)?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let payload = body.split_off(1);
+    Ok((body[0], payload))
+}
+
+/// Read a varint length/count field, bounded by the bytes actually
+/// remaining after it (every counted element costs at least one byte).
+/// Rejecting here keeps remote input from picking allocation sizes.
+fn get_len(buf: &[u8], pos: &mut usize) -> Result<usize> {
+    let len = get_varint(buf, pos)?;
+    if len > (buf.len() - *pos) as u64 {
+        return Err(Error::Protocol(format!(
+            "length field {len} exceeds the {} remaining payload bytes",
+            buf.len() - *pos
+        )));
+    }
+    Ok(len as usize)
+}
+
+fn utf8(bytes: &[u8], what: &str) -> Result<String> {
+    String::from_utf8(bytes.to_vec())
+        .map_err(|_| Error::Protocol(format!("{what} is not valid UTF-8")))
+}
+
+/// Encode a binary request as `(opcode, payload)`.
+pub fn encode_bin_request(req: &BinRequest) -> (u8, Vec<u8>) {
+    match req {
+        BinRequest::Get { key } => (OP_GET, key.as_bytes().to_vec()),
+        BinRequest::Put { key, value, actor, ctx_token } => {
+            let mut p =
+                Vec::with_capacity(key.len() + value.len() + ctx_token.len() + 16);
+            put_varint(&mut p, key.len() as u64);
+            p.extend_from_slice(key.as_bytes());
+            put_varint(&mut p, value.len() as u64);
+            p.extend_from_slice(value);
+            put_varint(&mut p, u64::from(*actor));
+            put_varint(&mut p, ctx_token.len() as u64);
+            p.extend_from_slice(ctx_token);
+            (OP_PUT, p)
+        }
+        BinRequest::Stats => (OP_STATS, Vec::new()),
+        BinRequest::Admin { line } => (OP_ADMIN, line.as_bytes().to_vec()),
+        BinRequest::Quit => (OP_QUIT, Vec::new()),
+    }
+}
+
+/// Decode a binary request frame. Any malformed payload — truncation,
+/// bad UTF-8, out-of-range fields, trailing bytes, unknown opcode —
+/// errors cleanly.
+pub fn decode_bin_request(opcode: u8, payload: &[u8]) -> Result<BinRequest> {
+    match opcode {
+        OP_GET => Ok(BinRequest::Get { key: utf8(payload, "key")? }),
+        OP_PUT => {
+            let mut pos = 0;
+            let klen = get_len(payload, &mut pos)?;
+            let key = utf8(get_bytes(payload, &mut pos, klen)?, "key")?;
+            let vlen = get_len(payload, &mut pos)?;
+            let value = get_bytes(payload, &mut pos, vlen)?.to_vec();
+            let actor = get_varint(payload, &mut pos)?;
+            let actor = u32::try_from(actor)
+                .map_err(|_| Error::Protocol(format!("actor id {actor} out of range")))?;
+            let tlen = get_len(payload, &mut pos)?;
+            let ctx_token = get_bytes(payload, &mut pos, tlen)?.to_vec();
+            expect_end(payload, pos)?;
+            Ok(BinRequest::Put { key, value, actor, ctx_token })
+        }
+        OP_STATS => {
+            expect_end(payload, 0)?;
+            Ok(BinRequest::Stats)
+        }
+        OP_ADMIN => Ok(BinRequest::Admin { line: utf8(payload, "admin line")? }),
+        OP_QUIT => {
+            expect_end(payload, 0)?;
+            Ok(BinRequest::Quit)
+        }
+        other => Err(Error::Protocol(format!("unknown opcode {other:#04x}"))),
+    }
+}
+
+/// Encode an [`OP_VALUES`] payload: ctx token + sibling values.
+pub fn encode_values(values: &[Vec<u8>], ctx_token: &[u8]) -> Vec<u8> {
+    let total: usize = values.iter().map(|v| v.len() + 4).sum();
+    let mut p = Vec::with_capacity(ctx_token.len() + total + 8);
+    put_varint(&mut p, ctx_token.len() as u64);
+    p.extend_from_slice(ctx_token);
+    put_varint(&mut p, values.len() as u64);
+    for v in values {
+        put_varint(&mut p, v.len() as u64);
+        p.extend_from_slice(v);
+    }
+    p
+}
+
+/// Decode an [`OP_VALUES`] payload into `(values, ctx_token)`.
+pub fn decode_values(payload: &[u8]) -> Result<(Vec<Vec<u8>>, Vec<u8>)> {
+    let mut pos = 0;
+    let tlen = get_len(payload, &mut pos)?;
+    let ctx_token = get_bytes(payload, &mut pos, tlen)?.to_vec();
+    let count = get_len(payload, &mut pos)?;
+    // no `with_capacity(count)`: even the remaining-bytes bound would
+    // let a hostile count reserve ~24x its wire size in Vec headers
+    let mut values = Vec::new();
+    for _ in 0..count {
+        let vlen = get_len(payload, &mut pos)?;
+        values.push(get_bytes(payload, &mut pos, vlen)?.to_vec());
+    }
+    expect_end(payload, pos)?;
+    Ok((values, ctx_token))
+}
+
+/// Encode an [`OP_PUT_OK`] payload: write id + post-write ctx token.
+pub fn encode_put_ok(id: u64, ctx_token: &[u8]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(ctx_token.len() + 12);
+    put_varint(&mut p, id);
+    put_varint(&mut p, ctx_token.len() as u64);
+    p.extend_from_slice(ctx_token);
+    p
+}
+
+/// Decode an [`OP_PUT_OK`] payload into `(id, ctx_token)`.
+pub fn decode_put_ok(payload: &[u8]) -> Result<(u64, Vec<u8>)> {
+    let mut pos = 0;
+    let id = get_varint(payload, &mut pos)?;
+    let tlen = get_len(payload, &mut pos)?;
+    let ctx_token = get_bytes(payload, &mut pos, tlen)?.to_vec();
+    expect_end(payload, pos)?;
+    Ok((id, ctx_token))
+}
+
+/// Encode an [`OP_STATS_REPLY`] payload.
+pub fn encode_stats_reply(nodes: u64, shards: u64, metadata_bytes: u64, hints: u64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16);
+    put_varint(&mut p, nodes);
+    put_varint(&mut p, shards);
+    put_varint(&mut p, metadata_bytes);
+    put_varint(&mut p, hints);
+    p
+}
+
+/// Decode an [`OP_STATS_REPLY`] payload into
+/// `(nodes, shards, metadata_bytes, hints)`.
+pub fn decode_stats_reply(payload: &[u8]) -> Result<(u64, u64, u64, u64)> {
+    let mut pos = 0;
+    let nodes = get_varint(payload, &mut pos)?;
+    let shards = get_varint(payload, &mut pos)?;
+    let metadata_bytes = get_varint(payload, &mut pos)?;
+    let hints = get_varint(payload, &mut pos)?;
+    expect_end(payload, pos)?;
+    Ok((nodes, shards, metadata_bytes, hints))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -338,5 +639,109 @@ mod tests {
         assert_eq!(lines[0], "VALUES 2 09");
         assert_eq!(lines[1], "VALUE 61");
         assert_eq!(lines[2], "VALUE 62");
+    }
+
+    #[test]
+    fn bin_requests_roundtrip() {
+        let cases = [
+            BinRequest::Get { key: "user:1".into() },
+            BinRequest::Put {
+                key: "k".into(),
+                value: b"payload".to_vec(),
+                actor: 7,
+                ctx_token: vec![1, 0, 0],
+            },
+            BinRequest::Put {
+                key: String::new(),
+                value: Vec::new(),
+                actor: 0,
+                ctx_token: Vec::new(),
+            },
+            BinRequest::Stats,
+            BinRequest::Admin { line: "FAULT CRASH 1".into() },
+            BinRequest::Quit,
+        ];
+        for req in cases {
+            let (opcode, payload) = encode_bin_request(&req);
+            assert_eq!(decode_bin_request(opcode, &payload).unwrap(), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn bin_request_rejects_malformed_payloads() {
+        // unknown opcode
+        assert!(decode_bin_request(0x7f, &[]).is_err());
+        // trailing bytes on no-payload requests
+        assert!(decode_bin_request(OP_STATS, &[1]).is_err());
+        assert!(decode_bin_request(OP_QUIT, &[0]).is_err());
+        // bad UTF-8 key
+        assert!(decode_bin_request(OP_GET, &[0xff, 0xfe]).is_err());
+        // every strict prefix of a valid PUT payload must be rejected
+        let (_, payload) = encode_bin_request(&BinRequest::Put {
+            key: "key".into(),
+            value: b"value".to_vec(),
+            actor: 3,
+            ctx_token: vec![1, 0, 1, 42],
+        });
+        for cut in 0..payload.len() {
+            assert!(
+                decode_bin_request(OP_PUT, &payload[..cut]).is_err(),
+                "prefix of len {cut} must be rejected"
+            );
+        }
+        // trailing garbage after a valid PUT payload
+        let mut long = payload.clone();
+        long.push(0);
+        assert!(decode_bin_request(OP_PUT, &long).is_err());
+    }
+
+    #[test]
+    fn frame_headers_are_validated() {
+        assert!(frame_len(0u32.to_be_bytes()).is_err(), "zero length");
+        assert!(frame_len((MAX_FRAME_LEN + 1).to_be_bytes()).is_err(), "oversized");
+        assert_eq!(frame_len(5u32.to_be_bytes()).unwrap(), 5);
+    }
+
+    #[test]
+    fn frames_roundtrip_through_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_GET, b"key").unwrap();
+        write_frame(&mut buf, OP_QUIT, &[]).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), (OP_GET, b"key".to_vec()));
+        assert_eq!(read_frame(&mut r).unwrap(), (OP_QUIT, Vec::new()));
+    }
+
+    #[test]
+    fn response_payloads_roundtrip() {
+        let values = vec![b"a".to_vec(), Vec::new(), b"long value".to_vec()];
+        let token = vec![1, 2, 0, 1, 9];
+        let p = encode_values(&values, &token);
+        assert_eq!(decode_values(&p).unwrap(), (values, token.clone()));
+
+        let p = encode_put_ok(99, &token);
+        assert_eq!(decode_put_ok(&p).unwrap(), (99, token));
+
+        let p = encode_stats_reply(3, 64, 12345, 2);
+        assert_eq!(decode_stats_reply(&p).unwrap(), (3, 64, 12345, 2));
+    }
+
+    #[test]
+    fn response_payloads_reject_truncation() {
+        let p = encode_values(&[b"abc".to_vec()], &[1, 0, 0]);
+        for cut in 0..p.len() {
+            assert!(decode_values(&p[..cut]).is_err(), "values prefix {cut}");
+        }
+        let p = encode_put_ok(7, &[1, 0, 0]);
+        for cut in 0..p.len() {
+            assert!(decode_put_ok(&p[..cut]).is_err(), "put_ok prefix {cut}");
+        }
+    }
+
+    #[test]
+    fn hex_lut_matches_reference_format() {
+        let data: Vec<u8> = (0..=255).collect();
+        let reference: String = data.iter().map(|b| format!("{b:02x}")).collect();
+        assert_eq!(hex_encode(&data), reference);
     }
 }

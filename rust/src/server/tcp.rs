@@ -1,13 +1,21 @@
 //! TCP front end: thread-per-connection server over [`super::LocalCluster`].
+//!
+//! Each connection negotiates its protocol by its first bytes: a
+//! [`protocol::MAGIC`] preamble selects the length-prefixed **binary
+//! protocol v2** (acknowledged with an `OP_HELLO_ACK` frame); anything
+//! else falls back to the legacy line-based text protocol, so old
+//! clients keep working against a new server unchanged.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use super::protocol::{format_values, parse_request, FaultCmd, Request};
+use super::protocol::{self, format_values, parse_request, BinRequest, FaultCmd, Request};
 use super::LocalCluster;
-use crate::error::Result;
+use crate::api::CausalCtx;
+use crate::clocks::Actor;
+use crate::error::{Error, Result};
 
 /// A running TCP server (owns its listener thread).
 pub struct Server {
@@ -117,11 +125,77 @@ fn apply_heal(cluster: &LocalCluster, node: Option<usize>) -> String {
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    cluster: &LocalCluster,
+/// Read one byte, looping on read timeouts until data arrives, the peer
+/// hangs up (`None`), or the server shuts down (`None`).
+fn read_byte(r: &mut impl Read, stop: &AtomicBool) -> Result<Option<u8>> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(b[0])),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(None);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Fill `buf` completely, tolerating read timeouts. `Ok(false)` = clean
+/// end of stream (or shutdown) before the first byte when `eof_ok`;
+/// truncation mid-buffer is always an error.
+fn read_full(r: &mut impl Read, buf: &mut [u8], stop: &AtomicBool, eof_ok: bool) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && eof_ok {
+                    return Ok(false);
+                }
+                return Err(Error::Protocol("connection closed mid-frame".into()));
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    if filled == 0 && eof_ok {
+                        return Ok(false);
+                    }
+                    return Err(Error::Protocol("server shutting down mid-frame".into()));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one v2 frame, timeout-aware. `Ok(None)` = clean disconnect.
+fn read_frame_server(
+    r: &mut impl Read,
     stop: &AtomicBool,
-) -> std::io::Result<()> {
+) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut header = [0u8; 4];
+    if !read_full(r, &mut header, stop, true)? {
+        return Ok(None);
+    }
+    let len = protocol::frame_len(header)?;
+    let mut body = vec![0u8; len];
+    read_full(r, &mut body, stop, false)?;
+    let payload = body.split_off(1);
+    Ok(Some((body[0], payload)))
+}
+
+fn handle_conn(stream: TcpStream, cluster: &LocalCluster, stop: &AtomicBool) -> Result<()> {
     // the listener is non-blocking; make sure the accepted stream is not
     // (some platforms propagate O_NONBLOCK to accepted sockets)
     stream.set_nonblocking(false)?;
@@ -129,57 +203,221 @@ fn handle_conn(
     // bounded reads so workers notice server shutdown
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    let mut line = String::new();
+
+    // transport negotiation: sniff byte by byte, bailing to the text
+    // protocol on the first byte that diverges from the magic (so a
+    // short text command is answered without waiting for more input)
+    let mut probe: Vec<u8> = Vec::with_capacity(protocol::MAGIC.len());
+    while probe.len() < protocol::MAGIC.len() && protocol::MAGIC.starts_with(&probe) {
+        match read_byte(&mut reader, stop)? {
+            Some(b) => probe.push(b),
+            None => return Ok(()), // hung up before the first request
+        }
+    }
+    if probe == protocol::MAGIC {
+        serve_binary(reader, stream, cluster, stop)
+    } else {
+        serve_text(reader, stream, cluster, stop, probe)
+    }
+}
+
+/// The legacy line-based text protocol. `acc` seeds the input buffer
+/// with whatever the negotiation sniff already consumed.
+fn serve_text(
+    mut reader: BufReader<TcpStream>,
+    mut stream: TcpStream,
+    cluster: &LocalCluster,
+    stop: &AtomicBool,
+    mut acc: Vec<u8>,
+) -> Result<()> {
+    let mut chunk = [0u8; 4096];
     loop {
-        match reader.read_line(&mut line) {
+        // drain every complete line already buffered
+        while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+            let line_bytes: Vec<u8> = acc.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&line_bytes);
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = match parse_request(&line) {
+                Ok(Request::Get { key }) => match cluster.get(&key) {
+                    Ok(ans) => format_values(&ans.values, &ans.context),
+                    Err(e) => format!("ERR {e}\n"),
+                },
+                Ok(Request::Put { key, value, context }) => {
+                    match cluster.put(&key, value, &context) {
+                        Ok(()) => "OK\n".to_string(),
+                        Err(e) => format!("ERR {e}\n"),
+                    }
+                }
+                Ok(Request::Stats) => format!(
+                    "STATS nodes={} shards={} metadata_bytes={} hints={}\n",
+                    cluster.node_count(),
+                    cluster.shard_count(),
+                    cluster.metadata_bytes(),
+                    cluster.pending_hints()
+                ),
+                Ok(Request::Fault(cmd)) => apply_fault(cluster, cmd),
+                Ok(Request::Heal { node }) => apply_heal(cluster, node),
+                Ok(Request::Quit) => {
+                    stream.write_all(b"BYE\n")?;
+                    return Ok(());
+                }
+                Err(e) => format!("ERR {e}\n"),
+            };
+            stream.write_all(reply.as_bytes())?;
+        }
+        // need more input
+        match reader.read(&mut chunk) {
             Ok(0) => return Ok(()), // client hung up
-            Ok(_) if line.ends_with('\n') => {}
-            Ok(_) => continue, // partial line; keep accumulating
+            Ok(n) => acc.extend_from_slice(&chunk[..n]),
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                // partial data (if any) stays in `line`
                 if stop.load(Ordering::Relaxed) {
                     return Ok(());
                 }
-                continue;
             }
-            Err(e) => return Err(e),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
         }
-        if line.trim().is_empty() {
-            line.clear();
-            continue;
-        }
-        let reply = match parse_request(&line) {
-            Ok(Request::Get { key }) => match cluster.get(&key) {
-                Ok(ans) => format_values(&ans.values, &ans.context),
-                Err(e) => format!("ERR {e}\n"),
-            },
-            Ok(Request::Put { key, value, context }) => {
-                match cluster.put(&key, value, &context) {
-                    Ok(()) => "OK\n".to_string(),
-                    Err(e) => format!("ERR {e}\n"),
-                }
-            }
-            Ok(Request::Stats) => format!(
-                "STATS nodes={} shards={} metadata_bytes={} hints={}\n",
-                cluster.node_count(),
-                cluster.shard_count(),
-                cluster.metadata_bytes(),
-                cluster.pending_hints()
-            ),
-            Ok(Request::Fault(cmd)) => apply_fault(cluster, cmd),
-            Ok(Request::Heal { node }) => apply_heal(cluster, node),
-            Ok(Request::Quit) => {
-                stream.write_all(b"BYE\n")?;
+    }
+}
+
+/// Decode a binary PUT and run it through the traced quorum path: the
+/// frame's actor + ctx token make the write oracle-auditable end to end.
+fn put_binary(
+    cluster: &LocalCluster,
+    key: &str,
+    value: Vec<u8>,
+    actor: u32,
+    ctx_token: &[u8],
+) -> Result<(u64, Option<Vec<u8>>)> {
+    let (vv, observed) = if ctx_token.is_empty() {
+        (Vec::new(), Vec::new())
+    } else {
+        CausalCtx::decode(ctx_token)?.into_parts()
+    };
+    cluster.put_api(key, value, &vv, Actor(actor), &observed)
+}
+
+/// Map a text-protocol admin status line (`OK\n` / `ERR …\n`) onto a
+/// binary reply frame.
+fn admin_status(status: String) -> (u8, Vec<u8>) {
+    match status.strip_prefix("ERR ") {
+        Some(msg) => (protocol::OP_ERR, msg.trim_end().as_bytes().to_vec()),
+        None => (protocol::OP_OK, Vec::new()),
+    }
+}
+
+/// The binary protocol v2 loop (the magic preamble is already consumed).
+fn serve_binary(
+    mut reader: BufReader<TcpStream>,
+    mut stream: TcpStream,
+    cluster: &LocalCluster,
+    stop: &AtomicBool,
+) -> Result<()> {
+    // hello tail: requested version + newline terminator
+    let Some(version) = read_byte(&mut reader, stop)? else { return Ok(()) };
+    let Some(terminator) = read_byte(&mut reader, stop)? else { return Ok(()) };
+    if terminator != b'\n' {
+        // enforce the documented preamble: silently eating a stray byte
+        // here would desynchronize every following frame
+        let _ = protocol::write_frame(
+            &mut stream,
+            protocol::OP_ERR,
+            b"malformed hello: missing newline after version byte",
+        );
+        return Ok(());
+    }
+    if version != protocol::VERSION {
+        // clean version-skew rejection: one ERR frame, then close
+        let msg = format!(
+            "unsupported protocol version {version} (server speaks {})",
+            protocol::VERSION
+        );
+        let _ = protocol::write_frame(&mut stream, protocol::OP_ERR, msg.as_bytes());
+        return Ok(());
+    }
+    protocol::write_frame(&mut stream, protocol::OP_HELLO_ACK, &[protocol::VERSION])?;
+    loop {
+        let (opcode, payload) = match read_frame_server(&mut reader, stop) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => return Ok(()), // clean disconnect / shutdown
+            Err(e) => {
+                // broken framing (zero/oversized length, truncation): the
+                // byte stream can no longer be trusted — one final ERR
+                // frame, then drop the connection
+                let _ =
+                    protocol::write_frame(&mut stream, protocol::OP_ERR, e.to_string().as_bytes());
                 return Ok(());
             }
-            Err(e) => format!("ERR {e}\n"),
         };
-        stream.write_all(reply.as_bytes())?;
-        line.clear();
+        let (op, body): (u8, Vec<u8>) = match protocol::decode_bin_request(opcode, &payload) {
+            Ok(BinRequest::Get { key }) => match cluster.get(&key) {
+                Ok(ans) => {
+                    let token = CausalCtx::new(ans.context, ans.ids).encode();
+                    let payload = protocol::encode_values(&ans.values, &token);
+                    // a sibling set too large for one frame must degrade
+                    // to an ERR reply, not abort the connection when
+                    // write_frame refuses it
+                    if payload.len() >= protocol::MAX_FRAME_LEN as usize {
+                        (
+                            protocol::OP_ERR,
+                            format!(
+                                "reply of {} bytes exceeds the {}-byte frame cap",
+                                payload.len(),
+                                protocol::MAX_FRAME_LEN
+                            )
+                            .into_bytes(),
+                        )
+                    } else {
+                        (protocol::OP_VALUES, payload)
+                    }
+                }
+                Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+            },
+            Ok(BinRequest::Put { key, value, actor, ctx_token }) => {
+                match put_binary(cluster, &key, value, actor, &ctx_token) {
+                    Ok((id, post)) => {
+                        // empty token = no chainable context (a
+                        // concurrent sibling survived; GET to merge)
+                        let token = post
+                            .map(|post| CausalCtx::new(post, vec![id]).encode())
+                            .unwrap_or_default();
+                        (protocol::OP_PUT_OK, protocol::encode_put_ok(id, &token))
+                    }
+                    Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+                }
+            }
+            Ok(BinRequest::Stats) => (
+                protocol::OP_STATS_REPLY,
+                protocol::encode_stats_reply(
+                    cluster.node_count() as u64,
+                    cluster.shard_count() as u64,
+                    cluster.metadata_bytes(),
+                    cluster.pending_hints() as u64,
+                ),
+            ),
+            Ok(BinRequest::Admin { line }) => match parse_request(&line) {
+                Ok(Request::Fault(cmd)) => admin_status(apply_fault(cluster, cmd)),
+                Ok(Request::Heal { node }) => admin_status(apply_heal(cluster, node)),
+                Ok(_) => (
+                    protocol::OP_ERR,
+                    b"ADMIN accepts FAULT/HEAL commands only".to_vec(),
+                ),
+                Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+            },
+            Ok(BinRequest::Quit) => {
+                let _ = protocol::write_frame(&mut stream, protocol::OP_BYE, &[]);
+                return Ok(());
+            }
+            // malformed payload inside an intact frame: report and keep
+            // the connection (framing is still trustworthy)
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        };
+        protocol::write_frame(&mut stream, op, &body)?;
     }
 }
 

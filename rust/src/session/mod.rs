@@ -13,6 +13,19 @@ use crate::clocks::Actor;
 use crate::kernel::Mechanism;
 use crate::store::Key;
 
+/// What a completed PUT hands back to the session: the new write's id
+/// plus, when the transport returns it, the coordinator's post-write
+/// context. Passing the whole reply (instead of a bare `wrote_id`) is
+/// what lets [`ClientSession::on_put_complete`] update itself.
+#[derive(Debug, Clone)]
+pub struct PutResult<M: Mechanism> {
+    /// The id assigned to the written value.
+    pub id: u64,
+    /// The coordinator's post-write context, when the transport carries
+    /// it back (`None` = the context is simply consumed).
+    pub ctx: Option<M::Context>,
+}
+
 /// One client's session state.
 #[derive(Debug, Clone)]
 pub struct ClientSession<M: Mechanism> {
@@ -71,15 +84,29 @@ impl<M: Mechanism> ClientSession<M> {
         }
     }
 
-    /// After a PUT completes the context is consumed: the client's next
-    /// blind write must not reuse a stale context unless it re-reads.
-    /// (Riak semantics; keeps contexts fresh and mirrors §2's model where
-    /// the client "maintains no state other than the context of the last
-    /// GET".) The observed set is cleared for the same reason.
-    pub fn on_put_complete(&mut self, key: Key, wrote_id: u64) {
+    /// Apply a completed PUT's [`PutResult`]. The reply itself carries
+    /// everything the session needs — the new write's id and (optionally)
+    /// the coordinator's post-write context — so callers no longer thread
+    /// `wrote_id` by hand.
+    ///
+    /// Without a returned context it is consumed: the client's next blind
+    /// write must not reuse a stale context unless it re-reads. (Riak
+    /// semantics; keeps contexts fresh and mirrors §2's model where the
+    /// client "maintains no state other than the context of the last
+    /// GET".) A transport that *does* return the post-write context
+    /// (Riak's return-body option; see [`crate::api::PutReply`]) replaces
+    /// the stored one — never stale, it describes the client's own write.
+    pub fn on_put_complete(&mut self, key: Key, res: &PutResult<M>) {
         // The client has trivially observed its own write.
-        self.observed.insert(key, vec![wrote_id]);
-        self.contexts.remove(&key);
+        self.observed.insert(key, vec![res.id]);
+        match &res.ctx {
+            Some(ctx) => {
+                self.contexts.insert(key, ctx.clone());
+            }
+            None => {
+                self.contexts.remove(&key);
+            }
+        }
     }
 
     /// The skewed wall-clock reading for this client at simulated `now`.
@@ -112,9 +139,19 @@ mod tests {
         s.on_get(7, ctx.clone(), vec![100, 101]);
         assert_eq!(s.context_for(7), ctx);
         assert_eq!(s.observed_for(7), vec![100, 101]);
-        s.on_put_complete(7, 102);
+        s.on_put_complete(7, &PutResult { id: 102, ctx: None });
         assert_eq!(s.context_for(7), Default::default(), "context consumed");
         assert_eq!(s.observed_for(7), vec![102], "own write observed");
+    }
+
+    #[test]
+    fn put_reply_context_replaces_stored_context() {
+        let mut s = sess(true);
+        s.on_get(7, vv(&[(Actor::server(0), 2)]), vec![100]);
+        let fresh = vv(&[(Actor::server(0), 3)]);
+        s.on_put_complete(7, &PutResult { id: 103, ctx: Some(fresh.clone()) });
+        assert_eq!(s.context_for(7), fresh, "post-write context stored");
+        assert_eq!(s.observed_for(7), vec![103]);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 pub mod failure;
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::clocks::Actor;
 use crate::cluster::{NodeId, Ring};
@@ -30,7 +30,7 @@ use crate::kernel::{Mechanism, Val, WriteMeta};
 use crate::metrics::Metrics;
 use crate::net::NetModel;
 use crate::oracle::{DropVerdict, Oracle};
-use crate::session::ClientSession;
+use crate::session::{ClientSession, PutResult};
 use crate::store::{Key, KeyStore};
 use crate::testkit::Rng;
 use crate::workload::{Driver, Op, OpKind};
@@ -107,6 +107,18 @@ impl<M: Mechanism> Ord for Queued<M> {
     }
 }
 
+/// Outcome of a synchronous (API-driven) client op; see
+/// [`Sim::sync_get`] / [`Sim::sync_put`].
+#[derive(Debug, Clone)]
+enum SyncDone<M: Mechanism> {
+    /// A GET answered: sibling values plus the causal context.
+    Get { values: Vec<Val>, ctx: M::Context },
+    /// A PUT completed: the new write's id plus the coordinator's
+    /// post-write context — `Some` only when the write left no
+    /// concurrent siblings (see [`Sim::sync_put`]).
+    Put { id: u64, ctx: Option<M::Context> },
+}
+
 /// In-flight client op bookkeeping at its coordinator.
 enum Pending<M: Mechanism> {
     Get {
@@ -138,6 +150,11 @@ pub struct Sim<M: Mechanism> {
     /// Client sessions.
     pub sessions: Vec<ClientSession<M>>,
     pending: HashMap<u64, Pending<M>>,
+    /// Requests issued through the synchronous API ([`Sim::sync_get`] /
+    /// [`Sim::sync_put`]) still awaiting resolution.
+    sync_waiting: HashSet<u64>,
+    /// Resolved synchronous requests, consumed by [`Sim::run_sync`].
+    sync_done: HashMap<u64, crate::Result<SyncDone<M>>>,
     driver: Box<dyn Driver>,
     rng: Rng,
     next_req: u64,
@@ -189,6 +206,8 @@ impl<M: Mechanism> Sim<M> {
             oracle: Oracle::new(),
             sessions,
             pending: HashMap::new(),
+            sync_waiting: HashSet::new(),
+            sync_done: HashMap::new(),
             driver,
             rng,
             next_req: 0,
@@ -290,6 +309,119 @@ impl<M: Mechanism> Sim<M> {
         self.finalize_metrics();
     }
 
+    // ---------------------------------------------------------------
+    // synchronous client API (the `crate::api::SimClient` transport)
+    // ---------------------------------------------------------------
+
+    /// Issue one GET for `client` *interactively*: the event queue runs
+    /// (advancing virtual time, interleaving any scheduled faults or
+    /// pending deliveries) until this op answers or times out. Session
+    /// and oracle bookkeeping beyond the shared message flow is the
+    /// caller's concern — this is the [`crate::api::SimClient`] entry
+    /// point; the closed-loop driver world ([`Sim::start`]/[`Sim::run`])
+    /// is unaffected.
+    pub fn sync_get(&mut self, client: usize, key: Key) -> crate::Result<(Vec<Val>, M::Context)> {
+        let Some((coordinator, replicas)) = self.pick_coordinator(key) else {
+            return Err(crate::Error::Unavailable("no live replica to coordinate".into()));
+        };
+        let req = self.next_req;
+        self.next_req += 1;
+        self.push(self.now + OP_TIMEOUT_US, Ev::OpTimeout { req });
+        self.pending.insert(
+            req,
+            Pending::Get {
+                client,
+                key,
+                op: GetOp::new(self.quorum),
+                started: self.now,
+                participants: replicas,
+            },
+        );
+        self.sync_waiting.insert(req);
+        let hop = self.net.client_delay();
+        self.push(self.now + hop, Ev::Deliver { to: coordinator, msg: Msg::GetClient { req, key } });
+        match self.run_sync(req)? {
+            SyncDone::Get { values, ctx } => Ok((values, ctx)),
+            SyncDone::Put { .. } => unreachable!("GET request resolved as a PUT"),
+        }
+    }
+
+    /// Issue one PUT for `client` interactively (see [`Sim::sync_get`]):
+    /// `ctx` and `observed` come from the caller's session (the opaque
+    /// API token), and ground truth registers with the oracle at issue
+    /// time. The returned context is the coordinator's post-write
+    /// context, `Some` only when the write left no concurrent siblings
+    /// — the one case where chaining a PUT on it is causally sound.
+    pub fn sync_put(
+        &mut self,
+        client: usize,
+        key: Key,
+        len: u32,
+        ctx: &M::Context,
+        observed: &[u64],
+    ) -> crate::Result<(u64, Option<M::Context>)> {
+        let Some((coordinator, _)) = self.pick_coordinator(key) else {
+            return Err(crate::Error::Unavailable("no live replica to coordinate".into()));
+        };
+        let val = Val::new(self.next_val, len);
+        self.next_val += 1;
+        let session = &mut self.sessions[client];
+        let meta = WriteMeta {
+            client: session.actor,
+            physical_us: session.skewed_clock(self.now),
+            client_seq: session.next_write_seq(key),
+        };
+        // ground truth is fixed at issue time by what the client saw
+        self.oracle.on_write(meta.client, key, val.id, observed);
+        self.written.push((key, val.id));
+        let req = self.next_req;
+        self.next_req += 1;
+        self.push(self.now + OP_TIMEOUT_US, Ev::OpTimeout { req });
+        self.pending.insert(
+            req,
+            Pending::Put { client, key, op: PutOp::new(self.quorum), started: self.now, val },
+        );
+        self.sync_waiting.insert(req);
+        let hop = self.net.client_delay();
+        self.push(
+            self.now + hop,
+            Ev::Deliver {
+                to: coordinator,
+                msg: Msg::PutClient { req, key, ctx: ctx.clone(), val, meta },
+            },
+        );
+        match self.run_sync(req)? {
+            SyncDone::Put { id, ctx } => Ok((id, ctx)),
+            SyncDone::Get { .. } => unreachable!("PUT request resolved as a GET"),
+        }
+    }
+
+    /// The id the next write will be assigned. A transport keeping
+    /// payloads in a side table must record them under this id *before*
+    /// calling [`Sim::sync_put`]: a PUT that fails its quorum has often
+    /// still been applied at the coordinator (sloppy semantics), and its
+    /// value must be resolvable by later GETs.
+    pub fn peek_next_val(&self) -> u64 {
+        self.next_val
+    }
+
+    /// Pop events until `req` resolves. The op's timeout event is always
+    /// queued, so this terminates even when every message is dropped.
+    fn run_sync(&mut self, req: u64) -> crate::Result<SyncDone<M>> {
+        loop {
+            if let Some(done) = self.sync_done.remove(&req) {
+                return done;
+            }
+            let Some(Reverse(q)) = self.queue.pop() else {
+                self.sync_waiting.remove(&req);
+                self.pending.remove(&req);
+                return Err(crate::Error::Unavailable("simulated op never resolved".into()));
+            };
+            self.now = q.at;
+            self.dispatch(q.ev);
+        }
+    }
+
     fn dispatch(&mut self, ev: Ev<M>) {
         match ev {
             Ev::Deliver { to, msg } => {
@@ -307,11 +439,22 @@ impl<M: Mechanism> Sim<M> {
             Ev::OpTimeout { req } => {
                 if let Some(p) = self.pending.remove(&req) {
                     self.metrics.failed_ops += 1;
-                    let client = match p {
-                        Pending::Get { client, .. } => client,
-                        Pending::Put { client, .. } => client,
-                    };
-                    self.schedule_next_op(client, 0);
+                    if self.sync_waiting.remove(&req) {
+                        // synchronous op: resolve the waiter with the
+                        // quorum shortfall instead of closing a loop
+                        let (got, needed) = match &p {
+                            Pending::Get { op, .. } => (op.replies(), self.quorum.r),
+                            Pending::Put { op, .. } => (op.acks(), self.quorum.w),
+                        };
+                        self.sync_done
+                            .insert(req, Err(crate::Error::QuorumNotMet { got, needed }));
+                    } else {
+                        let client = match p {
+                            Pending::Get { client, .. } => client,
+                            Pending::Put { client, .. } => client,
+                        };
+                        self.schedule_next_op(client, 0);
+                    }
                 }
             }
             Ev::AeTick { node } => self.anti_entropy(node),
@@ -331,18 +474,24 @@ impl<M: Mechanism> Sim<M> {
     // client op entry
     // ---------------------------------------------------------------
 
-    fn issue(&mut self, client: usize, op: Op) {
-        let replicas = self.ring.replicas_for(op.key, self.quorum.n);
+    /// Preference list plus the coordinating replica (first live node,
+    /// or a random live one under `random_coordinator`); `None` when
+    /// every replica is down.
+    fn pick_coordinator(&mut self, key: Key) -> Option<(NodeId, Vec<NodeId>)> {
+        let replicas = self.ring.replicas_for(key, self.quorum.n);
         let live: Vec<NodeId> =
             replicas.iter().copied().filter(|&n| self.nodes[n].up).collect();
-        let coordinator = if live.is_empty() {
+        if live.is_empty() {
             None
         } else if self.cfg.cluster.random_coordinator {
-            Some(live[self.rng.below(live.len() as u64) as usize])
+            Some((live[self.rng.below(live.len() as u64) as usize], replicas))
         } else {
-            Some(live[0])
-        };
-        let Some(coordinator) = coordinator else {
+            Some((live[0], replicas))
+        }
+    }
+
+    fn issue(&mut self, client: usize, op: Op) {
+        let Some((coordinator, replicas)) = self.pick_coordinator(op.key) else {
             self.metrics.failed_ops += 1;
             self.schedule_next_op(client, 1000);
             return;
@@ -440,7 +589,7 @@ impl<M: Mechanism> Sim<M> {
                 };
                 let (client, started) = (*client, *started);
                 if op.satisfied_immediately() {
-                    self.complete_put(req, client, key, started, val);
+                    self.complete_put(req, client, key, started, val, node);
                 }
                 for replica in replicas {
                     if replica != node {
@@ -464,7 +613,9 @@ impl<M: Mechanism> Sim<M> {
                 };
                 let (client, key, started, val) = (*client, *key, *started, *val);
                 if op.on_ack() {
-                    self.complete_put(req, client, key, started, val);
+                    // a ReplicateAck is addressed to the coordinator, so
+                    // `node` is the coordinating replica here
+                    self.complete_put(req, client, key, started, val, node);
                 }
             }
             Msg::StatePush { key, state } => {
@@ -499,6 +650,15 @@ impl<M: Mechanism> Sim<M> {
         let repair_state = if all_in { Some(op.merged().clone()) } else { None };
 
         if let Some(res) = answer {
+            if self.sync_waiting.remove(&req) {
+                self.sync_done.insert(
+                    req,
+                    Ok(SyncDone::Get {
+                        values: res.values.clone(),
+                        ctx: res.context.clone(),
+                    }),
+                );
+            }
             // answer the client
             let ids: Vec<u64> = res.values.iter().map(|v| v.id).collect();
             let (fc, tc) = self.oracle.classify_siblings(&ids);
@@ -529,10 +689,32 @@ impl<M: Mechanism> Sim<M> {
         }
     }
 
-    fn complete_put(&mut self, req: u64, client: usize, key: Key, started: u64, val: Val) {
+    fn complete_put(
+        &mut self,
+        req: u64,
+        client: usize,
+        key: Key,
+        started: u64,
+        val: Val,
+        coordinator: NodeId,
+    ) {
         self.metrics.puts += 1;
         self.metrics.put_latency.record(self.now - started);
-        self.sessions[client].on_put_complete(key, val.id);
+        // the DES client reply carries no body, so the session context is
+        // simply consumed (the closed-loop behavior the figure replays
+        // and E6/E9 depend on)
+        self.sessions[client].on_put_complete(key, &PutResult { id: val.id, ctx: None });
+        if self.sync_waiting.remove(&req) {
+            // synchronous API waiters get the coordinator's post-write
+            // context (see `crate::api::PutReply`) — but only when the
+            // write left no concurrent siblings: a survivor's events are
+            // in the state context without the client having observed
+            // them, so chaining on it would destroy a concurrent write
+            let state = self.nodes[coordinator].store.state(key);
+            let (vals, ctx) = self.mech.read(&state);
+            let ctx = (vals.len() == 1 && vals[0].id == val.id).then_some(ctx);
+            self.sync_done.insert(req, Ok(SyncDone::Put { id: val.id, ctx }));
+        }
         let hop = self.net.client_delay();
         self.push(self.now + hop, Ev::ClientDone { client, req });
         // leave the Pending entry for late acks only if W < N; timeout
@@ -827,6 +1009,62 @@ mod tests {
         assert!(sim.metrics.dropped_messages > 0, "degrade window must drop");
         sim.settle();
         assert_eq!(sim.audit_permanently_lost(), 0, "{}", sim.metrics.summary());
+    }
+
+    /// The interactive API: issue ops one at a time, no driver loop.
+    struct NoDriver;
+    impl Driver for NoDriver {
+        fn next_op(&mut self, _c: usize, _now: u64, _rng: &mut Rng) -> Option<Op> {
+            None
+        }
+    }
+
+    #[test]
+    fn sync_ops_roundtrip_and_supersede() {
+        let mut sim =
+            Sim::new(DvvMech, cfg(3, 3, 2, 2), 2, true, Box::new(NoDriver), 5).unwrap();
+        // first write on a fresh key: no siblings -> chainable context
+        let (id1, post1) = sim.sync_put(0, 7, 8, &Default::default(), &[]).unwrap();
+        assert!(post1.is_some(), "lone write returns its post-write context");
+        // a second blind write makes siblings -> NO chainable context
+        // (it would cover the concurrent write the client never saw)
+        let (id2, post2) = sim.sync_put(1, 7, 8, &Default::default(), &[]).unwrap();
+        assert_ne!(id1, id2);
+        assert!(post2.is_none(), "surviving sibling suppresses the context");
+        let (values, ctx) = sim.sync_get(0, 7).unwrap();
+        assert_eq!(values.len(), 2, "blind writes are concurrent");
+        // informed write with the GET's context supersedes both
+        let observed: Vec<u64> = values.iter().map(|v| v.id).collect();
+        let (id3, post) = sim.sync_put(0, 7, 8, &ctx, &observed).unwrap();
+        let (after, _) = sim.sync_get(0, 7).unwrap();
+        assert_eq!(after.len(), 1);
+        assert_eq!(after[0].id, id3);
+        assert!(post.is_some(), "supersession leaves no siblings: chainable");
+        assert_eq!(sim.metrics.lost_updates, 0);
+        assert_eq!(sim.metrics.gets, 2);
+        assert_eq!(sim.metrics.puts, 3);
+    }
+
+    #[test]
+    fn sync_ops_fail_cleanly_when_all_replicas_down() {
+        let mut sim =
+            Sim::new(DvvMech, cfg(3, 3, 2, 2), 1, true, Box::new(NoDriver), 6).unwrap();
+        for n in 0..3 {
+            sim.nodes[n].up = false;
+        }
+        assert!(matches!(
+            sim.sync_get(0, 1),
+            Err(crate::Error::Unavailable(_))
+        ));
+        assert!(matches!(
+            sim.sync_put(0, 1, 4, &Default::default(), &[]),
+            Err(crate::Error::Unavailable(_))
+        ));
+        for n in 0..3 {
+            sim.nodes[n].up = true;
+        }
+        sim.sync_put(0, 1, 4, &Default::default(), &[]).unwrap();
+        assert_eq!(sim.sync_get(0, 1).unwrap().0.len(), 1);
     }
 
     #[test]

@@ -37,10 +37,19 @@ pub enum OpKind {
 }
 
 /// A closed-loop op source. The simulator calls `next_op` when a client
-/// becomes idle; `None` retires the client.
+/// becomes idle; `None` retires the client. The transport-generic
+/// harness ([`crate::api::drive_workload`]) consumes the same trait, so
+/// one generator drives the DES, the threaded cluster, and live TCP.
 pub trait Driver {
     /// Next op for `client`, or `None` when done.
     fn next_op(&mut self, client: usize, now_us: u64, rng: &mut Rng) -> Option<Op>;
+}
+
+/// Stable string naming for a workload [`Key`]: the string-keyed client
+/// API hashes `key_name(k)` onto the ring, so every transport places a
+/// workload key on the same replicas.
+pub fn key_name(key: Key) -> String {
+    format!("k{key}")
 }
 
 /// Parameters for the randomized concurrent workload.

@@ -1,0 +1,315 @@
+//! Transport equivalence: the same seeded workload (and the same
+//! `FaultPlan`) driven through [`KvClient`] against all three
+//! transports — the discrete-event simulator, the threaded
+//! `LocalCluster`, and live TCP — must produce identical oracle
+//! verdicts (zero lost updates, fully audited) and, fault-free,
+//! identical converged sibling values. Includes the first end-to-end
+//! chaos + oracle verification over real sockets.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use dvvstore::antientropy::diff_pairs;
+use dvvstore::api::{
+    drive_workload, key_name, snapshot_values, KvClient, LocalClient, Session, SimTransport,
+    TcpClient,
+};
+use dvvstore::clocks::Actor;
+use dvvstore::config::StoreConfig;
+use dvvstore::oracle::SharedOracle;
+use dvvstore::server::tcp::Server;
+use dvvstore::server::LocalCluster;
+use dvvstore::sim::failure::FaultPlan;
+use dvvstore::testkit::Rng;
+use dvvstore::workload::{RandomWorkload, WorkloadSpec};
+
+const NODES: usize = 5;
+const CLIENTS: usize = 3;
+const KEYS: u64 = 12;
+const SEED: u64 = 4242;
+
+fn spec(ops: u64) -> WorkloadSpec {
+    WorkloadSpec {
+        keys: KEYS,
+        zipf_theta: 0.9,
+        put_fraction: 0.5,
+        read_before_write: 0.5,
+        mean_think_us: 300.0,
+        ops_per_client: ops,
+        value_len: 24,
+    }
+}
+
+fn sim_cfg() -> StoreConfig {
+    let mut cfg = StoreConfig::default();
+    cfg.cluster.nodes = NODES;
+    cfg.cluster.replication = 3;
+    cfg.cluster.read_quorum = 2;
+    cfg.cluster.write_quorum = 2;
+    cfg
+}
+
+/// Final sorted sibling values per key, read through a client.
+type Snapshot = Vec<(u64, Vec<Vec<u8>>)>;
+
+// -------------------------------------------------------------------
+// fault-free equivalence: identical outcomes, bit for bit
+// -------------------------------------------------------------------
+
+#[test]
+fn same_workload_same_outcome_across_all_three_transports() {
+    let ops = 30;
+
+    // --- simulator ------------------------------------------------
+    let transport = SimTransport::new(sim_cfg(), CLIENTS, SEED).unwrap();
+    let mut clients: Vec<_> = (0..CLIENTS).map(|i| transport.client(i)).collect();
+    let mut driver = RandomWorkload::new(spec(ops), CLIENTS);
+    let sim_report = drive_workload(&mut clients, &mut driver, SEED, |_| {});
+    let sim_snapshot: Snapshot = snapshot_values(&mut clients[0], KEYS).unwrap();
+    transport.with_sim(|sim| {
+        assert_eq!(sim.metrics.lost_updates, 0);
+        sim.settle();
+        assert_eq!(sim.audit_permanently_lost(), 0, "{}", sim.metrics.summary());
+    });
+
+    // --- threaded cluster -----------------------------------------
+    let (local_report, local_snapshot, local_verdict) = {
+        let cluster = Arc::new(LocalCluster::new(NODES, 3, 2, 2).unwrap());
+        let oracle = Arc::new(SharedOracle::new());
+        cluster.attach_oracle(Arc::clone(&oracle));
+        let mut clients: Vec<_> = (0..CLIENTS)
+            .map(|i| LocalClient::new(Arc::clone(&cluster), Actor::client(i as u32)))
+            .collect();
+        let mut driver = RandomWorkload::new(spec(ops), CLIENTS);
+        let report = drive_workload(&mut clients, &mut driver, SEED, |_| {});
+        let snapshot = snapshot_values(&mut clients[0], KEYS).unwrap();
+        (report, snapshot, oracle.verdict())
+    };
+
+    // --- live TCP (binary protocol v2) ----------------------------
+    let (tcp_report, tcp_snapshot, tcp_verdict) = {
+        let cluster = Arc::new(LocalCluster::new(NODES, 3, 2, 2).unwrap());
+        let oracle = Arc::new(SharedOracle::new());
+        cluster.attach_oracle(Arc::clone(&oracle));
+        let server = Server::start("127.0.0.1:0", Arc::clone(&cluster)).unwrap();
+        let mut clients: Vec<_> = (0..CLIENTS)
+            .map(|i| TcpClient::connect(server.addr(), Actor::client(i as u32)).unwrap())
+            .collect();
+        let mut driver = RandomWorkload::new(spec(ops), CLIENTS);
+        let report = drive_workload(&mut clients, &mut driver, SEED, |_| {});
+        let snapshot = snapshot_values(&mut clients[0], KEYS).unwrap();
+        for c in clients {
+            c.quit().unwrap();
+        }
+        server.shutdown();
+        (report, snapshot, oracle.verdict())
+    };
+
+    // identical op accounting: no transport failed anything fault-free
+    assert_eq!(sim_report.failed_ops, 0);
+    assert_eq!(sim_report, local_report, "sim vs local report");
+    assert_eq!(sim_report, tcp_report, "sim vs tcp report");
+
+    // identical oracle verdicts: zero lost updates, fully audited
+    assert_eq!(local_verdict.lost_updates, 0);
+    assert_eq!(local_verdict.unaudited_drops, 0);
+    assert_eq!(local_verdict, tcp_verdict, "local vs tcp verdict");
+
+    // identical converged sibling values, key by key
+    assert_eq!(sim_snapshot, local_snapshot, "sim vs local final values");
+    assert_eq!(sim_snapshot, tcp_snapshot, "sim vs tcp final values");
+    // the workload actually wrote something
+    assert!(sim_snapshot.iter().any(|(_, vals)| !vals.is_empty()));
+}
+
+// -------------------------------------------------------------------
+// one FaultPlan, three worlds: identical verdicts under chaos
+// -------------------------------------------------------------------
+
+const HORIZON_US: u64 = 200_000;
+
+fn chaos_plan() -> FaultPlan {
+    // partition + degradation windows (no crashes: the DES permanent-
+    // loss audit is exact when every issued write lands somewhere)
+    let mut rng = Rng::new(SEED ^ 0xFA17);
+    FaultPlan::new()
+        .random_partitions(NODES, 2, 60_000, HORIZON_US, &mut rng)
+        .degrade_window(0.25, 300, 20_000, 150_000)
+}
+
+#[test]
+fn same_fault_plan_same_verdict_across_all_three_transports() {
+    let ops = 40;
+    let expected_ops = (CLIENTS as u64) * ops;
+
+    // --- simulator: the plan schedules as DES events --------------
+    let transport = SimTransport::new(sim_cfg(), CLIENTS, SEED).unwrap();
+    transport.with_sim(|sim| chaos_plan().apply(sim));
+    let mut clients: Vec<_> = (0..CLIENTS).map(|i| transport.client(i)).collect();
+    let mut driver = RandomWorkload::new(spec(ops), CLIENTS);
+    let report = drive_workload(&mut clients, &mut driver, SEED, |_| {});
+    assert!(report.ok_ops > 0, "some sim ops must succeed");
+    transport.with_sim(|sim| {
+        sim.run(u64::MAX); // drain remaining fault/heal events
+        sim.settle();
+        assert_eq!(sim.metrics.lost_updates, 0, "{}", sim.metrics.summary());
+        assert_eq!(sim.audit_permanently_lost(), 0, "{}", sim.metrics.summary());
+    });
+
+    // --- threaded cluster + live TCP: the same plan steps the fabric
+    enum Transport {
+        Local,
+        Tcp,
+    }
+    for which in [Transport::Local, Transport::Tcp] {
+        let cluster = Arc::new(LocalCluster::new(NODES, 3, 2, 2).unwrap());
+        let oracle = Arc::new(SharedOracle::new());
+        cluster.attach_oracle(Arc::clone(&oracle));
+        let plan = chaos_plan();
+        let step = {
+            let cluster = Arc::clone(&cluster);
+            move |completed: u64| {
+                let t = HORIZON_US.saturating_mul(completed) / expected_ops.max(1);
+                cluster.fabric().advance(&plan, t);
+            }
+        };
+        let report = match which {
+            Transport::Local => {
+                let mut clients: Vec<_> = (0..CLIENTS)
+                    .map(|i| LocalClient::new(Arc::clone(&cluster), Actor::client(i as u32)))
+                    .collect();
+                let mut driver = RandomWorkload::new(spec(ops), CLIENTS);
+                drive_workload(&mut clients, &mut driver, SEED, step)
+            }
+            Transport::Tcp => {
+                let server = Server::start("127.0.0.1:0", Arc::clone(&cluster)).unwrap();
+                let mut clients: Vec<_> = (0..CLIENTS)
+                    .map(|i| {
+                        TcpClient::connect(server.addr(), Actor::client(i as u32)).unwrap()
+                    })
+                    .collect();
+                let mut driver = RandomWorkload::new(spec(ops), CLIENTS);
+                let report = drive_workload(&mut clients, &mut driver, SEED, step);
+                for c in clients {
+                    c.quit().unwrap();
+                }
+                server.shutdown();
+                report
+            }
+        };
+        assert!(report.ok_ops > 0, "some ops must succeed under chaos");
+
+        // heal, converge, audit — the same closing ritual as the DES
+        cluster.fabric().heal_all();
+        let mut rounds = 0;
+        while cluster.anti_entropy_round() > 0 {
+            rounds += 1;
+            assert!(rounds < 32, "anti-entropy failed to quiesce");
+        }
+        assert_eq!(cluster.pending_hints(), 0, "hints drained after heal");
+        for a in 0..NODES {
+            for b in (a + 1)..NODES {
+                assert!(
+                    diff_pairs(cluster.node(a).store(), cluster.node(b).store()).is_empty(),
+                    "nodes {a}/{b} diverged after heal"
+                );
+            }
+        }
+        let verdict = oracle.verdict();
+        assert!(verdict.tracked > 0, "writes registered");
+        assert_eq!(verdict.unaudited_drops, 0, "API writes are fully traced");
+        assert_eq!(
+            verdict.lost_updates, 0,
+            "zero lost updates ({} correct supersessions)",
+            verdict.correct_supersessions
+        );
+    }
+}
+
+// -------------------------------------------------------------------
+// end-to-end chaos + oracle over live TCP, under real concurrency
+// -------------------------------------------------------------------
+
+#[test]
+fn tcp_chaos_with_concurrent_clients_is_oracle_clean() {
+    let cluster = Arc::new(LocalCluster::new(NODES, 3, 2, 2).unwrap());
+    let oracle = Arc::new(SharedOracle::new());
+    cluster.attach_oracle(Arc::clone(&oracle));
+    cluster.fabric().reseed(SEED ^ 0x7C9);
+    let server = Server::start("127.0.0.1:0", Arc::clone(&cluster)).unwrap();
+    let addr = server.addr();
+
+    let mut rng = Rng::new(SEED);
+    let plan = FaultPlan::random_chaos(NODES, HORIZON_US, &mut rng);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for t in 0..3u32 {
+        let stop = Arc::clone(&stop);
+        workers.push(std::thread::spawn(move || {
+            let mut client = TcpClient::connect(addr, Actor::client(t)).unwrap();
+            let mut session = Session::new();
+            let mut rng = Rng::new(u64::from(t) ^ SEED);
+            let (mut ok_ops, mut failed_ops) = (0u64, 0u64);
+            while !stop.load(Ordering::Relaxed) {
+                let key = key_name(rng.below(8));
+                let outcome = if rng.chance(0.5) {
+                    client.get(&key).map(|reply| session.record_get(&key, &reply))
+                } else {
+                    let body = format!("t{t}-{ok_ops}").into_bytes();
+                    let ctx = session.ctx_for(&key).cloned();
+                    client
+                        .put(&key, body, ctx.as_ref())
+                        .map(|reply| session.record_put(&key, &reply))
+                };
+                // under active faults ops may fail; that is the exercise
+                match outcome {
+                    Ok(()) => ok_ops += 1,
+                    Err(_) => failed_ops += 1,
+                }
+                std::thread::sleep(std::time::Duration::from_micros(300));
+            }
+            let _ = client.quit();
+            (ok_ops, failed_ops)
+        }));
+    }
+
+    // step the schedule's virtual clock while the workers hammer TCP
+    const STEPS: u64 = 40;
+    for step in 1..=STEPS {
+        cluster.fabric().advance(&plan, HORIZON_US * step / STEPS);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut total_ok = 0;
+    for worker in workers {
+        total_ok += worker.join().unwrap().0;
+    }
+    assert!(total_ok > 0, "no TCP operation ever succeeded");
+
+    // heal over the wire (admin frame), then converge in-process
+    let mut admin = TcpClient::connect(addr, Actor::client(99)).unwrap();
+    admin.admin("HEAL").unwrap();
+    let mut rounds = 0;
+    while cluster.anti_entropy_round() > 0 {
+        rounds += 1;
+        assert!(rounds < 32, "anti-entropy failed to quiesce");
+    }
+    let stats = admin.stats().unwrap();
+    assert_eq!(stats.3, 0, "hints drained after HEAL");
+    admin.quit().unwrap();
+
+    for a in 0..NODES {
+        for b in (a + 1)..NODES {
+            assert!(
+                diff_pairs(cluster.node(a).store(), cluster.node(b).store()).is_empty(),
+                "nodes {a}/{b} diverged after heal"
+            );
+        }
+    }
+    let verdict = oracle.verdict();
+    assert!(verdict.tracked > 0);
+    assert_eq!(verdict.unaudited_drops, 0, "every TCP write was traced");
+    assert_eq!(verdict.lost_updates, 0, "zero lost updates over live TCP chaos");
+    server.shutdown();
+}

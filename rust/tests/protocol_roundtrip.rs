@@ -12,6 +12,8 @@ use dvvstore::server::protocol::{
 };
 use dvvstore::server::tcp::Server;
 use dvvstore::server::LocalCluster;
+use dvvstore::testkit::prop::{forall, from_fn, Config};
+use dvvstore::testkit::Rng;
 
 // -------------------------------------------------------------------
 // pure parse/format round trips
@@ -32,6 +34,25 @@ fn hex_roundtrips_arbitrary_bytes() {
     }
     assert_eq!(hex_encode(&[]), "-", "empty encodes as the dash sentinel");
     assert_eq!(hex_decode("-").unwrap(), Vec::<u8>::new());
+}
+
+#[test]
+fn prop_hex_roundtrips_and_matches_reference_encoder() {
+    // the lookup-table encoder must behave exactly like the per-byte
+    // `format!("{b:02x}")` it replaced, and decode must invert it
+    forall(
+        &Config::default().cases(300),
+        from_fn(|rng: &mut Rng, size| {
+            let len = rng.below(size as u64 * 4 + 2) as usize;
+            (0..len).map(|_| rng.below(256) as u8).collect::<Vec<u8>>()
+        }),
+        |data| {
+            let encoded = hex_encode(data);
+            let reference: String = data.iter().map(|b| format!("{b:02x}")).collect();
+            let expected = if data.is_empty() { "-".to_string() } else { reference };
+            encoded == expected && hex_decode(&encoded).unwrap() == *data
+        },
+    );
 }
 
 #[test]

@@ -1,0 +1,257 @@
+//! Hardening tests for the binary wire protocol v2: negotiation,
+//! fuzz-style malformed-frame rejection (truncated frames, bad magic,
+//! oversized lengths, version skew), and graceful degradation of a live
+//! server — mirroring the `hex_decode` hardening of the text protocol.
+//! Remote bytes must never panic a connection thread; the server must
+//! keep serving well-formed clients after every abuse.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use dvvstore::api::{CausalCtx, KvClient, TcpClient};
+use dvvstore::clocks::Actor;
+use dvvstore::server::protocol::{self, BinRequest};
+use dvvstore::server::tcp::Server;
+use dvvstore::server::LocalCluster;
+use dvvstore::testkit::prop::{forall, from_fn, Config};
+use dvvstore::testkit::Rng;
+
+fn server() -> (Server, Arc<LocalCluster>) {
+    let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+    let server = Server::start("127.0.0.1:0", cluster.clone()).unwrap();
+    (server, cluster)
+}
+
+// -------------------------------------------------------------------
+// pure decoder fuzzing: malformed input errors, never panics
+// -------------------------------------------------------------------
+
+#[test]
+fn prop_random_payloads_never_panic_decoders() {
+    forall(
+        &Config::default().cases(300),
+        from_fn(|rng: &mut Rng, size| {
+            let len = rng.below(size as u64 + 2) as usize;
+            let opcode = rng.below(256) as u8;
+            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            (opcode, payload)
+        }),
+        |(opcode, payload)| {
+            // the property is simply "no panic, Ok or Err"
+            let _ = protocol::decode_bin_request(*opcode, payload);
+            let _ = protocol::decode_values(payload);
+            let _ = protocol::decode_put_ok(payload);
+            let _ = protocol::decode_stats_reply(payload);
+            let _ = CausalCtx::decode(payload);
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_truncated_put_frames_are_rejected() {
+    forall(
+        &Config::default().cases(100),
+        from_fn(|rng: &mut Rng, size| {
+            let key: String = (0..rng.below(8) + 1).map(|_| 'k').collect();
+            let value: Vec<u8> = (0..rng.below(size as u64 + 1)).map(|_| rng.below(256) as u8).collect();
+            let token = CausalCtx::new(
+                (0..rng.below(6)).map(|_| rng.below(256) as u8).collect(),
+                (0..rng.below(4)).map(|_| rng.next_u64()).collect(),
+            )
+            .encode();
+            let (_, payload) = protocol::encode_bin_request(&BinRequest::Put {
+                key,
+                value,
+                actor: rng.below(1 << 21) as u32,
+                ctx_token: token,
+            });
+            let cut = rng.below(payload.len() as u64) as usize;
+            (payload, cut)
+        }),
+        |(payload, cut)| {
+            // any strict prefix must fail to decode
+            protocol::decode_bin_request(protocol::OP_PUT, &payload[..*cut]).is_err()
+        },
+    );
+}
+
+// -------------------------------------------------------------------
+// live server: abuse one connection, then prove the server still works
+// -------------------------------------------------------------------
+
+/// A well-formed v2 client still works against the server.
+fn assert_server_healthy(addr: std::net::SocketAddr) {
+    let mut c = TcpClient::connect(addr, Actor::client(9)).unwrap();
+    let reply = c.put("healthy", b"ok".to_vec(), None).unwrap();
+    assert!(reply.id > 0);
+    assert_eq!(c.get("healthy").unwrap().values, vec![b"ok".to_vec()]);
+    c.quit().unwrap();
+}
+
+#[test]
+fn version_skew_is_rejected_cleanly() {
+    let (server, _cluster) = server();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(&protocol::MAGIC).unwrap();
+    stream.write_all(&[99, b'\n']).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let (opcode, payload) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_ERR);
+    let msg = String::from_utf8_lossy(&payload).into_owned();
+    assert!(msg.contains("unsupported protocol version 99"), "{msg}");
+    // the server closes after version skew
+    let mut rest = Vec::new();
+    assert_eq!(reader.read_to_end(&mut rest).unwrap(), 0);
+    assert_server_healthy(server.addr());
+    server.shutdown();
+}
+
+#[test]
+fn connect_helper_surfaces_version_skew() {
+    // drive the negotiation failure through the client helper path too:
+    // a raw socket pretending to be a v3 client gets the server's error
+    let (server, _cluster) = server();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(&protocol::MAGIC).unwrap();
+    stream.write_all(&[protocol::VERSION + 1, b'\n']).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_ERR);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_length_header_errors_and_closes() {
+    let (server, _cluster) = server();
+    let mut c = TcpClient::connect(server.addr(), Actor::client(0)).unwrap();
+    c.put("k", b"v".to_vec(), None).unwrap();
+    // now abuse a fresh connection with a length far past MAX_FRAME_LEN
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(&protocol::MAGIC).unwrap();
+    stream.write_all(&[protocol::VERSION, b'\n']).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_HELLO_ACK);
+    stream.write_all(&u32::MAX.to_be_bytes()).unwrap();
+    let (opcode, payload) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_ERR);
+    assert!(String::from_utf8_lossy(&payload).contains("oversized frame"));
+    let mut rest = Vec::new();
+    assert_eq!(reader.read_to_end(&mut rest).unwrap(), 0, "connection dropped");
+    assert_server_healthy(server.addr());
+    server.shutdown();
+}
+
+#[test]
+fn zero_length_frame_errors_and_closes() {
+    let (server, _cluster) = server();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(&protocol::MAGIC).unwrap();
+    stream.write_all(&[protocol::VERSION, b'\n']).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_HELLO_ACK);
+    stream.write_all(&0u32.to_be_bytes()).unwrap();
+    let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_ERR);
+    assert_server_healthy(server.addr());
+    server.shutdown();
+}
+
+#[test]
+fn truncated_frame_on_hangup_is_tolerated() {
+    let (server, _cluster) = server();
+    {
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(&protocol::MAGIC).unwrap();
+        stream.write_all(&[protocol::VERSION, b'\n']).unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+        assert_eq!(opcode, protocol::OP_HELLO_ACK);
+        // promise 100 bytes, send 3, hang up
+        stream.write_all(&100u32.to_be_bytes()).unwrap();
+        stream.write_all(&[protocol::OP_GET, b'k', b'e']).unwrap();
+    } // drop = disconnect
+    assert_server_healthy(server.addr());
+    server.shutdown();
+}
+
+#[test]
+fn malformed_payload_in_intact_frame_keeps_connection_usable() {
+    let (server, _cluster) = server();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(&protocol::MAGIC).unwrap();
+    stream.write_all(&[protocol::VERSION, b'\n']).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_HELLO_ACK);
+
+    // unknown opcode: ERR, connection lives
+    protocol::write_frame(&mut stream, 0x66, b"junk").unwrap();
+    let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_ERR);
+
+    // truncated PUT payload inside a well-formed frame: ERR, lives
+    protocol::write_frame(&mut stream, protocol::OP_PUT, &[5, b'a']).unwrap();
+    let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_ERR);
+
+    // the same connection then serves a real request
+    let (op, payload) = protocol::encode_bin_request(&BinRequest::Get { key: "x".into() });
+    protocol::write_frame(&mut stream, op, &payload).unwrap();
+    let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_VALUES);
+
+    server.shutdown();
+}
+
+#[test]
+fn bad_magic_falls_back_to_text_protocol() {
+    let (server, _cluster) = server();
+    // a near-miss magic ("DVV3…") must be answered by the text parser
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(b"DVV3 x\n").unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut line).unwrap();
+    assert!(line.starts_with("ERR "), "{line}");
+    // and the same connection keeps speaking text
+    stream.write_all(b"STATS\n").unwrap();
+    line.clear();
+    std::io::BufRead::read_line(&mut reader, &mut line).unwrap();
+    assert!(line.starts_with("STATS nodes=3"), "{line}");
+    server.shutdown();
+}
+
+#[test]
+fn binary_and_text_clients_share_one_store() {
+    let (server, _cluster) = server();
+    // binary client writes with a context chain
+    let mut bin = TcpClient::connect(server.addr(), Actor::client(1)).unwrap();
+    bin.put("shared", b"from-binary".to_vec(), None).unwrap();
+
+    // text client reads the same key (hex protocol)
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"GET shared\n").unwrap();
+    let mut header = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut header).unwrap();
+    assert!(header.starts_with("VALUES 1 "), "{header}");
+    let mut value_line = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut value_line).unwrap();
+    let hex = value_line.trim_end().strip_prefix("VALUE ").unwrap().to_string();
+    assert_eq!(
+        dvvstore::server::protocol::hex_decode(&hex).unwrap(),
+        b"from-binary".to_vec()
+    );
+
+    // admin over the binary connection drives the same fabric
+    bin.admin("FAULT DELAY 150").unwrap();
+    let stats = bin.stats().unwrap();
+    assert_eq!(stats.0, 3, "nodes");
+    bin.admin("HEAL").unwrap();
+    bin.quit().unwrap();
+    server.shutdown();
+}
