@@ -1,0 +1,150 @@
+//! Topology/ring bench: preference-list lookup on the routing hot path
+//! — the allocating `replicas_for` vs the buffer-reusing
+//! `replicas_into` (per-op `Vec<NodeId>` allocation is exactly what the
+//! cluster's GET/PUT paths shed), the lock-wrapped `Topology` read
+//! path, and churn rebalance throughput (join + decommission cycles,
+//! epoch bumps included).
+//!
+//! Results land in `BENCH_ring.json` (path override: `BENCH_RING_JSON`)
+//! so subsequent routing changes have a machine-readable baseline;
+//! `rust/ci.sh` runs this bench in quick mode to keep the file fresh.
+//!
+//! Regenerate with `cargo bench --bench ring`.
+
+use std::hint::black_box;
+
+use dvvstore::bench_support::{Options, Stats, Suite};
+use dvvstore::cluster::{NodeId, Ring, Topology};
+
+const NODES: usize = 5;
+const VNODES: usize = 64;
+const N: usize = 3;
+
+fn bench_lookup(suite: &mut Suite, nodes: usize) {
+    let param = format!("nodes={nodes}");
+    let ring = Ring::new(nodes, VNODES).unwrap();
+    let topo = Topology::new(nodes, VNODES).unwrap();
+
+    suite.bench("ring/replicas_for_alloc", &param, {
+        let ring = ring.clone();
+        let mut key = 0u64;
+        move || {
+            key = key.wrapping_add(0x9E37_79B9);
+            black_box(ring.replicas_for(black_box(key), N));
+        }
+    });
+
+    suite.bench("ring/replicas_into_buffered", &param, {
+        let ring = ring.clone();
+        let mut buf: Vec<NodeId> = Vec::new();
+        let mut key = 0u64;
+        move || {
+            key = key.wrapping_add(0x9E37_79B9);
+            ring.replicas_into(black_box(key), N, &mut buf);
+            black_box(buf.len());
+        }
+    });
+
+    // the read-lock wrapper the cluster actually routes through
+    suite.bench("topology/replicas_into", &param, {
+        let mut buf: Vec<NodeId> = Vec::new();
+        let mut key = 0u64;
+        move || {
+            key = key.wrapping_add(0x9E37_79B9);
+            topo.replicas_into(black_box(key), N, &mut buf);
+            black_box(buf.len());
+        }
+    });
+}
+
+fn bench_churn(suite: &mut Suite) {
+    // one full elastic cycle: admit a node (vnode placement + sort),
+    // then retire it (point removal), epoch bumps included. Slots grow
+    // monotonically across iterations — ids are never reused — but the
+    // live point count stays ~NODES * VNODES, so the cost measured is
+    // the steady-state rebalance cost.
+    let topo = Topology::new(NODES, VNODES).unwrap();
+    suite.bench("topology/join_decommission_cycle", &format!("vnodes={VNODES}"), {
+        move || {
+            let (id, _) = topo.join();
+            topo.decommission(black_box(id)).unwrap();
+        }
+    });
+
+    let mut ring = Ring::new(NODES, VNODES).unwrap();
+    suite.bench("ring/add_remove_cycle", &format!("vnodes={VNODES}"), {
+        move || {
+            let id = ring.add_node();
+            ring.remove_node(black_box(id));
+        }
+    });
+}
+
+fn json_escape_free(s: &str) -> bool {
+    s.chars().all(|c| c.is_ascii_alphanumeric() || "/_=.-".contains(c))
+}
+
+/// Hand-rolled JSON (no serde in the offline build): flat result rows
+/// plus an alloc-vs-buffered speedup summary per cluster size.
+fn write_json(path: &str, quick: bool, results: &[Stats]) -> std::io::Result<()> {
+    let mut rows = String::new();
+    for (i, s) in results.iter().enumerate() {
+        assert!(
+            json_escape_free(&s.name) && json_escape_free(&s.param),
+            "bench names are JSON-safe"
+        );
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"name\": \"{}\", \"param\": \"{}\", \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"min_ns\": {:.1}}}",
+            s.name, s.param, s.mean_ns, s.p50_ns, s.p95_ns, s.min_ns
+        ));
+    }
+    let mean_of = |name: &str, param: &str| {
+        results
+            .iter()
+            .find(|s| s.name == name && s.param == param)
+            .map(|s| s.mean_ns)
+    };
+    let mut speedups = String::new();
+    let mut first = true;
+    for s in results.iter().filter(|s| s.name == "ring/replicas_into_buffered") {
+        if let Some(alloc) = mean_of("ring/replicas_for_alloc", &s.param) {
+            if s.mean_ns > 0.0 {
+                if !first {
+                    speedups.push_str(", ");
+                }
+                first = false;
+                speedups.push_str(&format!("\"{}\": {:.2}", s.param, alloc / s.mean_ns));
+            }
+        }
+    }
+    let json = format!(
+        "{{\n  \"suite\": \"ring\",\n  \"quick\": {quick},\n  \
+         \"lookup_speedup_alloc_over_buffered\": {{{speedups}}},\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    std::fs::write(path, json)
+}
+
+fn main() {
+    let opts = Options::from_args();
+    let quick = opts.quick;
+    let mut suite = Suite::new("ring", opts);
+
+    for nodes in [5usize, 16, 64] {
+        bench_lookup(&mut suite, nodes);
+    }
+    bench_churn(&mut suite);
+
+    let results: Vec<Stats> = suite.results().to_vec();
+    let path =
+        std::env::var("BENCH_RING_JSON").unwrap_or_else(|_| "BENCH_ring.json".to_string());
+    match write_json(&path, quick, &results) {
+        Ok(()) => eprintln!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+    suite.finish();
+}

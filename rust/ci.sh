@@ -19,6 +19,12 @@ quick=0
 #   CHAOS_ITERS=50 rust/ci.sh
 export CHAOS_ITERS="${CHAOS_ITERS:-2}"
 
+# Churn soak knob, same shape: the elastic-topology churn tests always
+# run their fixed seeds; CHURN_ITERS appends extra derived seeds to the
+# churn-plus-chaos property test and the ring/topology invariant tests.
+#   CHURN_ITERS=20 rust/ci.sh
+export CHURN_ITERS="${CHURN_ITERS:-2}"
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
@@ -42,5 +48,11 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 echo "==> cargo bench --bench wire (smoke run, quick mode)"
 DVV_BENCH_QUICK=1 cargo bench --bench wire
 if [[ -f BENCH_wire.json ]]; then echo "    wrote BENCH_wire.json"; fi
+
+# Routing perf baseline: preference-list lookup (alloc vs buffered) and
+# churn rebalance throughput, emitting BENCH_ring.json at the repo root.
+echo "==> cargo bench --bench ring (smoke run, quick mode)"
+DVV_BENCH_QUICK=1 cargo bench --bench ring
+if [[ -f BENCH_ring.json ]]; then echo "    wrote BENCH_ring.json"; fi
 
 echo "ci OK"

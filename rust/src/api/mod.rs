@@ -31,7 +31,7 @@ pub mod tcp;
 
 pub use local::LocalClient;
 pub use sim::{SimClient, SimTransport};
-pub use tcp::TcpClient;
+pub use tcp::{TcpClient, TopologyView};
 
 use std::collections::HashMap;
 

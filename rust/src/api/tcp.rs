@@ -19,6 +19,23 @@ pub struct TcpClient {
     reader: BufReader<TcpStream>,
     stream: TcpStream,
     actor: Actor,
+    /// Last topology epoch this client observed (from
+    /// [`topology`](TcpClient::topology), [`join`](TcpClient::join),
+    /// [`decommission`](TcpClient::decommission), or
+    /// [`stats`](TcpClient::stats)); `0` until the first observation.
+    seen_epoch: u64,
+}
+
+/// One membership view as reported by the server
+/// ([`protocol::OP_TOPOLOGY_REPLY`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopologyView {
+    /// Monotone membership epoch.
+    pub epoch: u64,
+    /// Total dense node ids allocated (members + decommissioned).
+    pub slots: u64,
+    /// Active member ids, ascending.
+    pub members: Vec<u64>,
 }
 
 /// Map an unexpected reply frame onto an error: the server's `ERR`
@@ -43,7 +60,7 @@ impl TcpClient {
         let mut reader = BufReader::new(stream.try_clone()?);
         match protocol::read_frame(&mut reader)? {
             (protocol::OP_HELLO_ACK, payload) if payload == [protocol::VERSION] => {
-                Ok(TcpClient { reader, stream, actor })
+                Ok(TcpClient { reader, stream, actor, seen_epoch: 0 })
             }
             reply => Err(remote_err(reply)),
         }
@@ -65,12 +82,72 @@ impl TcpClient {
         }
     }
 
-    /// Server statistics: `(nodes, shards, metadata_bytes, hints)`.
-    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64)> {
+    /// Server statistics:
+    /// `(nodes, shards, metadata_bytes, hints, epoch)`.
+    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64, u64)> {
         match self.roundtrip(&BinRequest::Stats)? {
-            (protocol::OP_STATS_REPLY, payload) => protocol::decode_stats_reply(&payload),
+            (protocol::OP_STATS_REPLY, payload) => {
+                let stats = protocol::decode_stats_reply(&payload)?;
+                self.seen_epoch = self.seen_epoch.max(stats.4);
+                Ok(stats)
+            }
             reply => Err(remote_err(reply)),
         }
+    }
+
+    /// Decode a topology frame, tracking the freshest epoch seen.
+    fn topology_view(&mut self, payload: &[u8]) -> Result<TopologyView> {
+        let (epoch, slots, members) = protocol::decode_topology_reply(payload)?;
+        self.seen_epoch = self.seen_epoch.max(epoch);
+        Ok(TopologyView { epoch, slots, members })
+    }
+
+    /// Discover (or refresh) the server's membership view mid-session —
+    /// routing is server-side, so a client only needs this to *observe*
+    /// an epoch bump; its GET/PUT session keeps working across one
+    /// untouched.
+    pub fn topology(&mut self) -> Result<TopologyView> {
+        match self.roundtrip(&BinRequest::Topology)? {
+            (protocol::OP_TOPOLOGY_REPLY, payload) => self.topology_view(&payload),
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    /// Admin: spin up a new replica. Returns `(new node id, view)` —
+    /// the join reply's `slots` field is pinned to this request, so
+    /// `slots - 1` is the id the server assigned it (stable even when
+    /// joins race).
+    pub fn join(&mut self) -> Result<(u64, TopologyView)> {
+        match self.roundtrip(&BinRequest::Join)? {
+            (protocol::OP_TOPOLOGY_REPLY, payload) => {
+                let view = self.topology_view(&payload)?;
+                // a remote reply is untrusted input: reject slots=0
+                // instead of underflowing
+                let id = view
+                    .slots
+                    .checked_sub(1)
+                    .ok_or_else(|| Error::Protocol("join reply with zero slots".into()))?;
+                Ok((id, view))
+            }
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    /// Admin: retire a replica, handing off its keys. Returns the
+    /// post-retirement view.
+    pub fn decommission(&mut self, node: u64) -> Result<TopologyView> {
+        let node = usize::try_from(node)
+            .map_err(|_| Error::Protocol(format!("node id {node} out of range")))?;
+        match self.roundtrip(&BinRequest::Decommission { node })? {
+            (protocol::OP_TOPOLOGY_REPLY, payload) => self.topology_view(&payload),
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    /// The freshest topology epoch this client has observed (0 before
+    /// any stats/topology/join/decommission reply).
+    pub fn seen_epoch(&self) -> u64 {
+        self.seen_epoch
     }
 
     /// Close the connection politely (waits for the server's `BYE`).

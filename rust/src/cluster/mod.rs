@@ -3,5 +3,7 @@
 //! which nodes will replicate a given key (e.g., consistent hashing)").
 
 pub mod ring;
+pub mod topology;
 
 pub use ring::{NodeId, Ring};
+pub use topology::Topology;

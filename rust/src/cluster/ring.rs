@@ -78,8 +78,17 @@ impl Ring {
     /// hash (the preference list).
     pub fn replicas_for(&self, key: u64, n: usize) -> Vec<NodeId> {
         let mut out = Vec::with_capacity(n);
-        if self.points.is_empty() {
-            return out;
+        self.replicas_into(key, n, &mut out);
+        out
+    }
+
+    /// Allocation-free preference-list lookup: clear `out` and fill it
+    /// with the first `n` distinct replica nodes for `key`. The buffer is
+    /// caller-provided so hot paths can reuse one allocation across ops.
+    pub fn replicas_into(&self, key: u64, n: usize, out: &mut Vec<NodeId>) {
+        out.clear();
+        if self.points.is_empty() || n == 0 {
+            return;
         }
         let h = hash64(key);
         let start = match self.points.binary_search_by_key(&h, |&(p, _)| p) {
@@ -94,7 +103,29 @@ impl Ring {
                 }
             }
         }
-        out
+    }
+
+    /// Resume the clockwise walk for `key` past the nodes already in
+    /// `seen`: the next distinct node is pushed onto `seen` and returned,
+    /// or `None` when every ring node is already in `seen`. Iterating
+    /// this is how the sloppy-quorum stand-in search extends a preference
+    /// list lazily instead of materializing the full-cluster list.
+    pub fn next_distinct(&self, key: u64, seen: &mut Vec<NodeId>) -> Option<NodeId> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = hash64(key);
+        let start = match self.points.binary_search_by_key(&h, |&(p, _)| p) {
+            Ok(i) | Err(i) => i,
+        };
+        for step in 0..self.points.len() {
+            let (_, node) = self.points[(start + step) % self.points.len()];
+            if !seen.contains(&node) {
+                seen.push(node);
+                return Some(node);
+            }
+        }
+        None
     }
 
     /// Primary (coordinator-preferred) replica for `key`.
@@ -183,5 +214,44 @@ mod tests {
     fn hash_str_stable_and_spread() {
         assert_eq!(hash_str("key1"), hash_str("key1"));
         assert_ne!(hash_str("key1"), hash_str("key2"));
+    }
+
+    #[test]
+    fn replicas_into_matches_replicas_for_and_reuses_buffer() {
+        let ring = Ring::new(6, 64).unwrap();
+        let mut buf = Vec::new();
+        for key in 0..300u64 {
+            ring.replicas_into(key, 3, &mut buf);
+            assert_eq!(buf, ring.replicas_for(key, 3), "key {key}");
+        }
+        // the buffer is cleared, not accumulated
+        ring.replicas_into(7, 2, &mut buf);
+        assert_eq!(buf.len(), 2);
+    }
+
+    #[test]
+    fn next_distinct_extends_the_preference_list_in_walk_order() {
+        let ring = Ring::new(5, 64).unwrap();
+        for key in 0..100u64 {
+            let full = ring.replicas_for(key, 5);
+            let mut seen = ring.replicas_for(key, 2);
+            let mut resumed = seen.clone();
+            while let Some(n) = ring.next_distinct(key, &mut seen) {
+                resumed.push(n);
+            }
+            assert_eq!(resumed, full, "key {key}: lazy walk = materialized walk");
+            assert!(ring.next_distinct(key, &mut seen).is_none(), "walk exhausts");
+        }
+    }
+
+    #[test]
+    fn next_distinct_skips_removed_nodes() {
+        let mut ring = Ring::new(4, 64).unwrap();
+        ring.remove_node(2);
+        let mut seen = Vec::new();
+        while let Some(n) = ring.next_distinct(9, &mut seen) {
+            assert_ne!(n, 2, "removed node never surfaces");
+        }
+        assert_eq!(seen.len(), 3);
     }
 }

@@ -1,0 +1,270 @@
+//! Epoch-versioned, shareable cluster topology.
+//!
+//! [`Topology`] wraps the consistent-hash [`Ring`] behind interior
+//! locking so membership can change at runtime while readers route:
+//! every mutation ([`join`](Topology::join) /
+//! [`decommission`](Topology::decommission)) bumps a monotone **epoch**
+//! under the same write lock that changes the ring, so an epoch observed
+//! before an op and re-read after it tells the caller whether routing
+//! could have shifted underneath. Node ids are dense and never reused:
+//! a decommissioned id simply stops owning ranges (exactly the DVV §4
+//! stress case — retired actor ids linger in contexts, and causality
+//! must survive the ownership transfer).
+//!
+//! Reads are allocation-free on the hot path:
+//! [`replicas_into`](Topology::replicas_into) fills a caller-provided
+//! buffer under one read lock, and
+//! [`next_distinct`](Topology::next_distinct) resumes the ring walk
+//! lazily for sloppy-quorum stand-in selection.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::error::{Error, Result};
+
+use super::ring::{NodeId, Ring};
+
+/// The first epoch a fresh topology reports. Epochs only ever grow.
+pub const INITIAL_EPOCH: u64 = 1;
+
+#[derive(Debug)]
+struct Inner {
+    ring: Ring,
+    /// `member[id]` — is the dense slot `id` an active member?
+    member: Vec<bool>,
+    /// Count of `true` entries (slots grow forever; the member count
+    /// must not cost a scan per lookup or per churn cycle).
+    live: usize,
+}
+
+impl Inner {
+    /// Active member ids, ascending.
+    fn members(&self) -> Vec<NodeId> {
+        self.member
+            .iter()
+            .enumerate()
+            .filter_map(|(id, &m)| m.then_some(id))
+            .collect()
+    }
+}
+
+/// A shared, epoch-versioned view of cluster membership and placement.
+#[derive(Debug)]
+pub struct Topology {
+    inner: RwLock<Inner>,
+    epoch: AtomicU64,
+}
+
+impl Topology {
+    /// Build a topology of `nodes` initial members with `vnodes` ring
+    /// points each, at [`INITIAL_EPOCH`].
+    pub fn new(nodes: usize, vnodes: usize) -> Result<Topology> {
+        let ring = Ring::new(nodes, vnodes)?;
+        Ok(Topology {
+            inner: RwLock::new(Inner { ring, member: vec![true; nodes], live: nodes }),
+            epoch: AtomicU64::new(INITIAL_EPOCH),
+        })
+    }
+
+    /// Current membership epoch. Monotone: bumped by exactly one per
+    /// successful [`join`](Topology::join) /
+    /// [`decommission`](Topology::decommission).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Total dense node slots ever allocated (members + decommissioned).
+    pub fn slots(&self) -> usize {
+        self.inner.read().unwrap().member.len()
+    }
+
+    /// Number of active members.
+    pub fn member_count(&self) -> usize {
+        self.inner.read().unwrap().live
+    }
+
+    /// Active member ids, ascending.
+    pub fn members(&self) -> Vec<NodeId> {
+        self.inner.read().unwrap().members()
+    }
+
+    /// Is `id` an active member?
+    pub fn is_member(&self, id: NodeId) -> bool {
+        self.inner.read().unwrap().member.get(id).copied().unwrap_or(false)
+    }
+
+    /// One consistent `(epoch, slots, members)` view, taken under a
+    /// single read lock — what the admin plane reports. (Epoch bumps
+    /// happen inside the write lock, so the epoch read here always
+    /// matches the membership read with it; three separate getter calls
+    /// could interleave with a bump and pair epoch `N` with epoch-`N+1`
+    /// members.)
+    pub fn snapshot(&self) -> (u64, usize, Vec<NodeId>) {
+        let inner = self.inner.read().unwrap();
+        (self.epoch.load(Ordering::Acquire), inner.member.len(), inner.members())
+    }
+
+    /// Admit a new node: allocates the next dense id, places its vnodes,
+    /// and bumps the epoch. Returns `(new id, new epoch)`.
+    pub fn join(&self) -> (NodeId, u64) {
+        let mut inner = self.inner.write().unwrap();
+        let id = inner.ring.add_node();
+        debug_assert_eq!(id, inner.member.len(), "ring ids stay dense");
+        inner.member.push(true);
+        inner.live += 1;
+        // bump inside the write lock: an epoch can never be observed
+        // with a ring older than the one that produced it
+        let epoch = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+        (id, epoch)
+    }
+
+    /// Retire a member: its vnodes leave the ring (keys re-route to
+    /// successors), the id is never reused, and the epoch bumps. Returns
+    /// the new epoch. Refuses to retire a non-member or the last member.
+    pub fn decommission(&self, id: NodeId) -> Result<u64> {
+        let mut inner = self.inner.write().unwrap();
+        if !inner.member.get(id).copied().unwrap_or(false) {
+            return Err(Error::Config(format!("node {id} is not an active member")));
+        }
+        if inner.live <= 1 {
+            return Err(Error::Config("cannot decommission the last member".into()));
+        }
+        inner.ring.remove_node(id);
+        inner.member[id] = false;
+        inner.live -= 1;
+        Ok(self.epoch.fetch_add(1, Ordering::AcqRel) + 1)
+    }
+
+    /// Allocation-free preference-list lookup: clear `out` and fill it
+    /// with the first `n` distinct member replicas for `key`, under one
+    /// read lock.
+    pub fn replicas_into(&self, key: u64, n: usize, out: &mut Vec<NodeId>) {
+        self.inner.read().unwrap().ring.replicas_into(key, n, out);
+    }
+
+    /// Allocating convenience form of
+    /// [`replicas_into`](Topology::replicas_into) (tests, admin paths).
+    pub fn replicas_for(&self, key: u64, n: usize) -> Vec<NodeId> {
+        self.inner.read().unwrap().ring.replicas_for(key, n)
+    }
+
+    /// Primary (coordinator-preferred) replica for `key`.
+    pub fn primary_for(&self, key: u64) -> Option<NodeId> {
+        self.inner.read().unwrap().ring.primary_for(key)
+    }
+
+    /// Resume the preference walk for `key` past the nodes in `seen`
+    /// (see [`Ring::next_distinct`]): the stand-in search of the sloppy
+    /// quorum pulls candidates one at a time instead of materializing a
+    /// full-cluster preference list per faulted write.
+    pub fn next_distinct(&self, key: u64, seen: &mut Vec<NodeId>) -> Option<NodeId> {
+        self.inner.read().unwrap().ring.next_distinct(key, seen)
+    }
+
+    /// Run a closure against the underlying ring snapshot (benches,
+    /// invariant tests). The read lock is held for the closure's
+    /// duration — keep it short.
+    pub fn with_ring<R>(&self, f: impl FnOnce(&Ring) -> R) -> R {
+        f(&self.inner.read().unwrap().ring)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_topology_reports_initial_state() {
+        let t = Topology::new(3, 32).unwrap();
+        assert_eq!(t.epoch(), INITIAL_EPOCH);
+        assert_eq!(t.slots(), 3);
+        assert_eq!(t.member_count(), 3);
+        assert_eq!(t.members(), vec![0, 1, 2]);
+        assert!(t.is_member(2));
+        assert!(!t.is_member(3));
+    }
+
+    #[test]
+    fn join_allocates_dense_ids_and_bumps_epoch() {
+        let t = Topology::new(2, 32).unwrap();
+        let (id, epoch) = t.join();
+        assert_eq!(id, 2);
+        assert_eq!(epoch, INITIAL_EPOCH + 1);
+        assert_eq!(t.epoch(), epoch);
+        assert_eq!(t.members(), vec![0, 1, 2]);
+        // routing reaches the newcomer
+        let owns: usize = (0..2000u64)
+            .filter(|&k| t.primary_for(k) == Some(2))
+            .count();
+        assert!(owns > 0, "joined node owns key ranges");
+    }
+
+    #[test]
+    fn decommission_reroutes_and_never_reuses_ids() {
+        let t = Topology::new(3, 32).unwrap();
+        let epoch = t.decommission(1).unwrap();
+        assert_eq!(epoch, INITIAL_EPOCH + 1);
+        assert!(!t.is_member(1));
+        assert_eq!(t.member_count(), 2);
+        assert_eq!(t.slots(), 3, "the id slot stays allocated");
+        for key in 0..200u64 {
+            assert!(!t.replicas_for(key, 3).contains(&1));
+        }
+        // the next join takes a fresh id, not the retired one
+        let (id, _) = t.join();
+        assert_eq!(id, 3);
+    }
+
+    #[test]
+    fn decommission_rejects_non_members_and_the_last_member() {
+        let t = Topology::new(2, 16).unwrap();
+        assert!(t.decommission(7).is_err(), "unknown id");
+        t.decommission(0).unwrap();
+        assert!(t.decommission(0).is_err(), "already retired");
+        assert!(t.decommission(1).is_err(), "last member must stay");
+        assert_eq!(t.member_count(), 1);
+    }
+
+    #[test]
+    fn epoch_is_monotone_across_interleaved_changes() {
+        let t = Topology::new(2, 16).unwrap();
+        let mut last = t.epoch();
+        for _ in 0..5 {
+            let (_, e) = t.join();
+            assert_eq!(e, last + 1);
+            last = e;
+        }
+        for id in 0..4 {
+            let e = t.decommission(id).unwrap();
+            assert_eq!(e, last + 1);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn concurrent_readers_and_churn_do_not_panic() {
+        use std::sync::Arc;
+        let t = Arc::new(Topology::new(3, 32).unwrap());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let t = Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                let mut buf = Vec::new();
+                for k in 0..2000u64 {
+                    t.replicas_into(k, 3, &mut buf);
+                    assert!(!buf.is_empty());
+                    for &n in &buf {
+                        assert!(n < t.slots());
+                    }
+                }
+            }));
+        }
+        for _ in 0..3 {
+            let (id, _) = t.join();
+            let _ = t.decommission(id);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -41,7 +41,10 @@ pub const MAX_INJECTED_DELAY_US: u64 = 50_000;
 #[derive(Debug)]
 pub struct Fabric {
     /// Per-node liveness; crashed nodes drop all traffic in and out.
-    up: Vec<AtomicBool>,
+    /// Behind a `RwLock` so the fabric can grow when a node joins at
+    /// runtime ([`grow_to`](Fabric::grow_to)); the flags themselves stay
+    /// atomic, so routing only ever takes the read lock.
+    up: RwLock<Vec<AtomicBool>>,
     /// Active partitions (the same [`BlockedPairs`] semantics the
     /// simulator's `NetModel` uses).
     blocked: RwLock<BlockedPairs>,
@@ -65,7 +68,7 @@ impl Fabric {
     /// All-clear fabric for `nodes` replicas.
     pub fn new(nodes: usize, seed: u64) -> Fabric {
         Fabric {
-            up: (0..nodes).map(|_| AtomicBool::new(true)).collect(),
+            up: RwLock::new((0..nodes).map(|_| AtomicBool::new(true)).collect()),
             blocked: RwLock::new(BlockedPairs::new()),
             drop_ppm: AtomicU32::new(0),
             extra_delay_us: AtomicU64::new(0),
@@ -78,7 +81,18 @@ impl Fabric {
 
     /// Number of nodes the fabric routes for.
     pub fn node_count(&self) -> usize {
-        self.up.len()
+        self.up.read().unwrap().len()
+    }
+
+    /// Grow the fabric to route for at least `nodes` replicas (elastic
+    /// topology: joined nodes start up with clean links). Shrinking
+    /// never happens — decommissioned nodes keep their slot so parked
+    /// hints and in-flight handoff can still route.
+    pub fn grow_to(&self, nodes: usize) {
+        let mut up = self.up.write().unwrap();
+        while up.len() < nodes {
+            up.push(AtomicBool::new(true));
+        }
     }
 
     /// Reset the drop-roll RNG (reproducible chaos runs).
@@ -90,19 +104,29 @@ impl Fabric {
     // fault state mutation
     // -----------------------------------------------------------------
 
-    /// Crash a node: every message to or from it is refused.
+    /// Crash a node: every message to or from it is refused. Unknown
+    /// ids are ignored (a schedule can race a join).
     pub fn crash(&self, node: NodeId) {
-        self.up[node].store(false, Ordering::Relaxed);
+        if let Some(flag) = self.up.read().unwrap().get(node) {
+            flag.store(false, Ordering::Relaxed);
+        }
     }
 
     /// Recover a crashed node.
     pub fn recover(&self, node: NodeId) {
-        self.up[node].store(true, Ordering::Relaxed);
+        if let Some(flag) = self.up.read().unwrap().get(node) {
+            flag.store(true, Ordering::Relaxed);
+        }
     }
 
-    /// Is the node currently up?
+    /// Is the node currently up? Unknown ids are down by definition.
     pub fn is_up(&self, node: NodeId) -> bool {
-        self.up[node].load(Ordering::Relaxed)
+        self.up
+            .read()
+            .unwrap()
+            .get(node)
+            .map(|flag| flag.load(Ordering::Relaxed))
+            .unwrap_or(false)
     }
 
     /// Install a symmetric partition between every `left`/`right` pair.
@@ -152,7 +176,7 @@ impl Fabric {
     /// clean links. (The plan cursor is *not* rewound; a drained plan
     /// stays drained.)
     pub fn heal_all(&self) {
-        for node in &self.up {
+        for node in self.up.read().unwrap().iter() {
             node.store(true, Ordering::Relaxed);
         }
         self.heal_partitions();
@@ -226,6 +250,15 @@ impl Fabric {
     // -----------------------------------------------------------------
 
     /// Apply one fault *now*, ignoring its timestamp.
+    ///
+    /// Membership faults are only partially a fabric concern: a
+    /// [`Fault::Join`] grows the routing table (the new node's links
+    /// start clean), while a [`Fault::Decommission`] is a **no-op** here
+    /// — the node must stay routable so its key handoff and parked hints
+    /// can drain. Spinning up / retiring the actual replica is the
+    /// cluster's job; step churn-bearing plans through
+    /// [`LocalCluster::advance_plan`](super::LocalCluster::advance_plan),
+    /// which intercepts both kinds before delegating the rest here.
     pub fn apply_fault(&self, fault: &Fault) {
         match fault {
             Fault::Crash { node, .. } => self.crash(*node),
@@ -236,6 +269,8 @@ impl Fabric {
                 self.drop_ppm.store(*drop_ppm, Ordering::Relaxed);
                 self.set_extra_delay_us(*extra_delay_us);
             }
+            Fault::Join { .. } => self.grow_to(self.node_count() + 1),
+            Fault::Decommission { .. } => {}
         }
     }
 
@@ -246,6 +281,17 @@ impl Fabric {
     /// threads run is how a [`FaultPlan`] validated in the simulator
     /// replays against the threaded cluster.
     pub fn advance(&self, plan: &FaultPlan, to_us: u64) {
+        self.advance_each(plan, to_us, |fault| self.apply_fault(fault));
+    }
+
+    /// The cursor walk behind [`advance`](Fabric::advance), with the
+    /// application step abstracted out: the cluster's
+    /// [`advance_plan`](super::LocalCluster::advance_plan) passes a
+    /// closure that routes membership faults to `join_node` /
+    /// `decommission_node` and everything else back to
+    /// [`apply_fault`](Fabric::apply_fault). The cursor mutex is held
+    /// across the walk, so one thread applies a given fault exactly once.
+    pub fn advance_each(&self, plan: &FaultPlan, to_us: u64, mut apply: impl FnMut(&Fault)) {
         let mut cursor = self.cursor_us.lock().unwrap();
         let from = match *cursor {
             Some(c) if to_us <= c => return,
@@ -259,7 +305,7 @@ impl Fabric {
             .collect();
         due.sort_by_key(|f| f.at());
         for fault in due {
-            self.apply_fault(fault);
+            apply(fault);
         }
         *cursor = Some(to_us);
     }
@@ -394,6 +440,56 @@ mod tests {
         let f = Fabric::new(1, 1);
         f.advance(&plan, 10);
         assert!(f.is_up(0));
+    }
+
+    #[test]
+    fn grow_to_adds_clean_links_and_never_shrinks() {
+        let f = Fabric::new(2, 1);
+        f.crash(1);
+        f.grow_to(4);
+        assert_eq!(f.node_count(), 4);
+        assert!(f.is_up(2) && f.is_up(3), "joined nodes start up");
+        assert!(!f.is_up(1), "existing fault state survives growth");
+        assert!(f.deliver(0, 3));
+        f.grow_to(3);
+        assert_eq!(f.node_count(), 4, "grow_to never shrinks");
+    }
+
+    #[test]
+    fn unknown_nodes_are_down_and_fault_calls_ignore_them() {
+        let f = Fabric::new(2, 1);
+        assert!(!f.is_up(9));
+        f.crash(9); // out of range: ignored, not a panic
+        f.recover(9);
+        assert!(f.deliver(0, 1), "known links unaffected");
+    }
+
+    #[test]
+    fn join_fault_grows_and_decommission_fault_keeps_routing() {
+        let plan = FaultPlan::new().join_at(100).decommission_at(200, 0);
+        let f = Fabric::new(2, 1);
+        f.advance(&plan, 150);
+        assert_eq!(f.node_count(), 3, "Join fault grew the fabric");
+        f.advance(&plan, 250);
+        assert!(f.is_up(0), "decommissioned node stays routable for handoff");
+        assert!(f.deliver(0, 1));
+    }
+
+    #[test]
+    fn advance_each_hands_faults_to_the_caller_once() {
+        let plan = FaultPlan::new().crash_window(0, 100, 200).join_at(150);
+        let f = Fabric::new(2, 1);
+        let mut seen = Vec::new();
+        f.advance_each(&plan, 180, |fault| seen.push(fault.at()));
+        assert_eq!(seen, vec![100, 150]);
+        seen.clear();
+        f.advance_each(&plan, 180, |fault| seen.push(fault.at()));
+        assert!(seen.is_empty(), "cursor does not rewind");
+        f.advance_each(&plan, 500, |fault| seen.push(fault.at()));
+        assert_eq!(seen, vec![200]);
+        // the closure decided what to do: the fabric itself is untouched
+        assert!(f.is_up(0));
+        assert_eq!(f.node_count(), 2);
     }
 
     #[test]

@@ -41,20 +41,44 @@ pub mod tcp;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::antientropy;
 use crate::clocks::vv::VersionVector;
 use crate::clocks::Actor;
-use crate::cluster::ring::{hash_str, Ring};
-use crate::cluster::NodeId;
+use crate::cluster::ring::hash_str;
+use crate::cluster::{NodeId, Topology};
 use crate::coordinator::{GetOp, MergeBatch, PutOp, QuorumSpec};
 use crate::error::Result;
 use crate::kernel::mechs::DvvMech;
 use crate::kernel::{Mechanism, Val, WriteMeta};
 use crate::oracle::SharedOracle;
+use crate::sim::failure::{Fault, FaultPlan};
 use crate::store::{Key, KeyStore, ShardedBackend, StorageBackend};
 use self::fabric::Fabric;
+
+thread_local! {
+    /// Per-thread scratch for preference-list walks, reused across ops so
+    /// the GET/PUT hot paths allocate no per-op `Vec<NodeId>`
+    /// ([`Topology::replicas_into`] fills a caller buffer).
+    static SCRATCH: std::cell::RefCell<(Vec<NodeId>, Vec<NodeId>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Borrow the thread's two scratch buffers, cleared. Falls back to fresh
+/// buffers on (impossible today) re-entrancy rather than panicking a
+/// connection thread.
+fn with_scratch<R>(f: impl FnOnce(&mut Vec<NodeId>, &mut Vec<NodeId>) -> R) -> R {
+    SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut bufs) => {
+            let (a, b) = &mut *bufs;
+            a.clear();
+            b.clear();
+            f(a, b)
+        }
+        Err(_) => f(&mut Vec::new(), &mut Vec::new()),
+    })
+}
 
 /// The per-key replica state the cluster's mechanism keeps.
 type DvvState = <DvvMech as Mechanism>::State;
@@ -140,17 +164,30 @@ struct Hint {
     state: DvvState,
 }
 
-/// An in-process replicated DVV store.
+/// An in-process replicated DVV store with **elastic membership**: the
+/// node table and the epoch-versioned [`Topology`] both mutate at
+/// runtime ([`join_node`](LocalCluster::join_node) /
+/// [`decommission_node`](LocalCluster::decommission_node)), while
+/// concurrent GET/PUT route through whatever epoch they observe.
 pub struct LocalCluster<B: StorageBackend<DvvMech> = ShardedBackend<DvvMech>> {
-    nodes: Vec<Node<B>>,
+    /// Dense node table; grows on join, never shrinks (a decommissioned
+    /// node keeps its slot so hints and handoff stay routable). Ops hold
+    /// the read lock for their duration, which also means a join (write
+    /// lock) can never interleave with an op — only decommissions can.
+    nodes: RwLock<Vec<Arc<Node<B>>>>,
+    /// Backend factory, retained so joined nodes get the same storage
+    /// layout the cluster was built with.
+    make_backend: Mutex<Box<dyn FnMut(usize) -> B + Send>>,
     blobs: BlobStore,
-    ring: Ring,
+    topology: Topology,
     quorum: QuorumSpec,
     next_id: AtomicU64,
     mech: DvvMech,
     fabric: Fabric,
     hints: Mutex<Vec<Hint>>,
     oracle: OnceLock<Arc<SharedOracle>>,
+    /// Serializes join/decommission (ops never take this).
+    membership: Mutex<()>,
 }
 
 impl LocalCluster {
@@ -181,37 +218,69 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         n: usize,
         r: usize,
         w: usize,
-        mut make: impl FnMut(usize) -> B,
+        mut make: impl FnMut(usize) -> B + Send + 'static,
     ) -> Result<LocalCluster<B>> {
         let quorum = QuorumSpec::new(n.min(nodes), r.min(n), w.min(n))?;
         Ok(LocalCluster {
-            nodes: (0..nodes)
-                .map(|id| Node { id, store: KeyStore::with_backend(DvvMech, make(id)) })
-                .collect(),
+            nodes: RwLock::new(
+                (0..nodes)
+                    .map(|id| {
+                        Arc::new(Node { id, store: KeyStore::with_backend(DvvMech, make(id)) })
+                    })
+                    .collect(),
+            ),
+            make_backend: Mutex::new(Box::new(make)),
             blobs: BlobStore::new(16),
-            ring: Ring::new(nodes, 64)?,
+            topology: Topology::new(nodes, 64)?,
             quorum,
             next_id: AtomicU64::new(1),
             mech: DvvMech,
             fabric: Fabric::new(nodes, 0xFA_B0),
             hints: Mutex::new(Vec::new()),
             oracle: OnceLock::new(),
+            membership: Mutex::new(()),
         })
     }
 
-    /// Number of replica nodes.
+    /// Total node slots (members plus decommissioned; dense ids).
     pub fn node_count(&self) -> usize {
-        self.nodes.len()
+        self.nodes.read().unwrap().len()
+    }
+
+    /// Number of active members.
+    pub fn member_count(&self) -> usize {
+        self.topology.member_count()
+    }
+
+    /// Active member ids, ascending.
+    pub fn members(&self) -> Vec<NodeId> {
+        self.topology.members()
+    }
+
+    /// Current membership epoch (monotone; one bump per join or
+    /// decommission).
+    pub fn epoch(&self) -> u64 {
+        self.topology.epoch()
+    }
+
+    /// The shared, epoch-versioned topology every op routes through.
+    pub fn topology(&self) -> &Topology {
+        &self.topology
     }
 
     /// Per-replica shard (stripe) count.
     pub fn shard_count(&self) -> usize {
-        self.nodes.first().map(|n| n.store.shard_count()).unwrap_or(0)
+        self.nodes
+            .read()
+            .unwrap()
+            .first()
+            .map(|n| n.store.shard_count())
+            .unwrap_or(0)
     }
 
     /// One replica (tests, diagnostics, anti-entropy drivers).
-    pub fn node(&self, id: usize) -> &Node<B> {
-        &self.nodes[id]
+    pub fn node(&self, id: usize) -> Arc<Node<B>> {
+        Arc::clone(&self.nodes.read().unwrap()[id])
     }
 
     /// The quorum parameters in force.
@@ -239,7 +308,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
 
     /// The preference list (home replicas) for a key.
     pub fn replicas_of(&self, key: &str) -> Vec<NodeId> {
-        self.ring.replicas_for(hash_str(key), self.quorum.n)
+        self.topology.replicas_for(hash_str(key), self.quorum.n)
     }
 
     /// First *live* node of the preference list coordinates (clients can
@@ -254,32 +323,32 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
 
     /// Coordinator-local PUT (§4.1 update + sync under one shard lock),
     /// with oracle drop-auditing when attached.
-    fn write_at(
+    fn write_at_node(
         &self,
-        node: NodeId,
+        node: &Node<B>,
         key: Key,
         ctx: &VersionVector,
         val: Val,
         meta: &WriteMeta,
     ) -> DvvState {
-        let coord = Actor::server(node as u32);
+        let coord = Actor::server(node.id as u32);
         if let Some(oracle) = self.oracle.get() {
-            let (before, state) = self.nodes[node].store.write_audited(key, ctx, val, coord, meta);
+            let (before, state) = node.store.write_audited(key, ctx, val, coord, meta);
             oracle.record_drops(&before, &self.mech.values(&state));
             state
         } else {
-            self.nodes[node].store.write_returning(key, ctx, val, coord, meta)
+            node.store.write_returning(key, ctx, val, coord, meta)
         }
     }
 
     /// Replica-side merge (replication, read repair, anti-entropy, hint
-    /// delivery), with oracle drop-auditing when attached.
-    fn merge_at(&self, node: NodeId, key: Key, incoming: &DvvState) {
+    /// delivery, handoff), with oracle drop-auditing when attached.
+    fn merge_at_node(&self, node: &Node<B>, key: Key, incoming: &DvvState) {
         if let Some(oracle) = self.oracle.get() {
-            let (before, after) = self.nodes[node].store.merge_key_audited(key, incoming);
+            let (before, after) = node.store.merge_key_audited(key, incoming);
             oracle.record_drops(&before, &after);
         } else {
-            self.nodes[node].store.merge_key(key, incoming);
+            node.store.merge_key(key, incoming);
         }
     }
 
@@ -288,12 +357,24 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// reply, and fewer than `R` replies is a quorum failure.
     pub fn get(&self, key: &str) -> Result<GetAnswer> {
         let k = hash_str(key);
-        let replicas = self.ring.replicas_for(k, self.quorum.n);
-        let coordinator = self.pick_coordinator(&replicas)?;
+        with_scratch(|replicas, reached| self.get_at(k, replicas, reached))
+    }
+
+    /// The GET body, working in the caller's scratch buffers (`replicas`
+    /// holds the preference list, `reached` the replicas that answered)
+    /// so the hot path allocates no per-op `Vec<NodeId>`.
+    fn get_at(
+        &self,
+        k: Key,
+        replicas: &mut Vec<NodeId>,
+        reached: &mut Vec<NodeId>,
+    ) -> Result<GetAnswer> {
+        self.topology.replicas_into(k, self.quorum.n, replicas);
+        let nodes = self.nodes.read().unwrap();
+        let coordinator = self.pick_coordinator(replicas)?;
         let mut op: GetOp<DvvMech> = GetOp::new(self.quorum);
         let mut answer = None;
-        let mut reached = Vec::with_capacity(replicas.len());
-        for &node in &replicas {
+        for &node in replicas.iter() {
             // a sub-read is a round trip: request out, state reply back
             if node != coordinator
                 && !(self.fabric.deliver(coordinator, node)
@@ -301,7 +382,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
             {
                 continue;
             }
-            let state = self.nodes[node].store.state(k);
+            let state = nodes[node].store.state(k);
             reached.push(node);
             if let Some(res) = op.on_reply(&self.mech, &state) {
                 answer = Some(res);
@@ -314,9 +395,9 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         // read repair with the fully merged state, on every replica that
         // answered (the push is one more fabric-routed message)
         let merged = op.merged().clone();
-        for &node in &reached {
+        for &node in reached.iter() {
             if node == coordinator || self.fabric.deliver(coordinator, node) {
-                self.merge_at(node, k, &merged);
+                self.merge_at_node(&nodes[node], k, &merged);
             }
         }
         let values = res.values.iter().map(|v| self.blobs.get(v.id)).collect();
@@ -398,7 +479,6 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// the coordinator's post-write state snapshot (captured atomically
     /// under the stripe lock; callers that don't need it drop it so the
     /// untraced hot path pays nothing extra).
-
     fn put_inner(
         &self,
         key: &str,
@@ -408,14 +488,36 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         observed: Option<&[u64]>,
     ) -> Result<(u64, DvvState)> {
         let k = hash_str(key);
+        with_scratch(|walk, aux| self.put_at(k, value, context, client, observed, walk, aux))
+    }
+
+    /// The PUT body, working in the caller's scratch buffers: `walk`
+    /// holds the preference list and is lazily extended with stand-in
+    /// candidates ([`Topology::next_distinct`]) instead of materializing
+    /// a full-cluster preference list per faulted write; `aux` holds the
+    /// missed homes and is then reused for the epoch-guard home list.
+    #[allow(clippy::too_many_arguments)]
+    fn put_at(
+        &self,
+        k: Key,
+        value: Vec<u8>,
+        context: &[u8],
+        client: Actor,
+        observed: Option<&[u64]>,
+        walk: &mut Vec<NodeId>,
+        aux: &mut Vec<NodeId>,
+    ) -> Result<(u64, DvvState)> {
         let ctx: VersionVector = if context.is_empty() {
             VersionVector::new()
         } else {
             let mut pos = 0;
             crate::clocks::encoding::decode_vv(context, &mut pos)?
         };
-        let replicas = self.ring.replicas_for(k, self.quorum.n);
-        let coordinator = self.pick_coordinator(&replicas)?;
+        let epoch = self.topology.epoch();
+        self.topology.replicas_into(k, self.quorum.n, walk);
+        let home_count = walk.len();
+        let nodes = self.nodes.read().unwrap();
+        let coordinator = self.pick_coordinator(&walk[..home_count])?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let val = Val::new(id, value.len() as u32);
         self.blobs.insert(id, value);
@@ -427,23 +529,25 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
 
         let meta = WriteMeta { client, physical_us: 0, client_seq: None };
         // §4.1: update + sync at the coordinator, under one shard lock...
-        let state = self.write_at(coordinator, k, &ctx, val, &meta);
+        let state = self.write_at_node(&nodes[coordinator], k, &ctx, val, &meta);
         // ...then replicate the synced state to each home replica. A PUT
         // carries exactly one key, so this is a direct per-peer merge;
         // multi-key fan-out (anti-entropy) goes through `MergeBatch`.
         let mut op = PutOp::new(self.quorum);
         let mut done = op.satisfied_immediately();
-        let mut missed: Vec<NodeId> = Vec::new();
-        for &node in replicas.iter().filter(|&&n| n != coordinator) {
+        for &node in walk.iter().take(home_count) {
+            if node == coordinator {
+                continue;
+            }
             if self.fabric.deliver(coordinator, node) {
-                self.merge_at(node, k, &state);
+                self.merge_at_node(&nodes[node], k, &state);
                 // the ack is its own message; a lost ack leaves the data
                 // in place but does not count toward the quorum
                 if self.fabric.deliver(node, coordinator) && op.on_ack() {
                     done = true;
                 }
             } else {
-                missed.push(node);
+                aux.push(node);
             }
         }
         // sloppy quorum + hinted handoff: *every* unreachable home gets a
@@ -451,34 +555,61 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         // — even when the quorum is already met, since the hint (not
         // anti-entropy) is what gets the write home promptly on heal.
         // Stand-in acks count toward the quorum like home acks.
-        if !missed.is_empty() {
-            let candidates: Vec<NodeId> = self
-                .ring
-                .replicas_for(k, self.nodes.len())
-                .into_iter()
-                .filter(|n| !replicas.contains(n))
-                .collect();
-            let mut used = vec![false; candidates.len()];
-            for &home in &missed {
-                // first reachable still-unused stand-in off the
-                // preference list; a candidate that merely lost a drop
-                // roll stays available for the next home
-                for (i, &holder) in candidates.iter().enumerate() {
-                    if used[i] || !self.fabric.deliver(coordinator, holder) {
-                        continue;
-                    }
-                    used[i] = true;
-                    self.merge_at(holder, k, &state);
+        // `walk[home_count..used]` are consumed stand-ins; the tail past
+        // `used` holds pulled-but-unused candidates (one that merely lost
+        // a drop roll stays available for the next home), and more are
+        // pulled off the ring walk only on demand.
+        let mut used = home_count;
+        for &home in aux.iter() {
+            let mut chosen = None;
+            for j in used..walk.len() {
+                if self.fabric.deliver(coordinator, walk[j]) {
+                    chosen = Some(j);
+                    break;
+                }
+            }
+            while chosen.is_none() {
+                let Some(cand) = self.topology.next_distinct(k, walk) else { break };
+                if self.fabric.deliver(coordinator, cand) {
+                    chosen = Some(walk.len() - 1);
+                }
+            }
+            if let Some(j) = chosen {
+                walk.swap(used, j);
+                let holder = walk[used];
+                used += 1;
+                self.merge_at_node(&nodes[holder], k, &state);
+                self.hints.lock().unwrap().push(Hint {
+                    holder,
+                    home,
+                    key: k,
+                    state: state.clone(),
+                });
+                if self.fabric.deliver(holder, coordinator) && op.on_ack() {
+                    done = true;
+                }
+            }
+        }
+        // epoch guard: membership changed under this op (only a
+        // decommission can — a join needs the node-table write lock our
+        // read guard blocks). A home we just wrote may already have been
+        // swept, so re-deliver the synced state to the key's *current*
+        // homes; nothing may be stranded on a retiree.
+        if self.topology.epoch() != epoch {
+            self.topology.replicas_into(k, self.quorum.n, aux);
+            for &home in aux.iter() {
+                if home == coordinator {
+                    continue;
+                }
+                if self.fabric.deliver(coordinator, home) {
+                    self.merge_at_node(&nodes[home], k, &state);
+                } else {
                     self.hints.lock().unwrap().push(Hint {
-                        holder,
+                        holder: coordinator,
                         home,
                         key: k,
                         state: state.clone(),
                     });
-                    if self.fabric.deliver(holder, coordinator) && op.on_ack() {
-                        done = true;
-                    }
-                    break;
                 }
             }
         }
@@ -493,19 +624,41 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// from its holder; undeliverable hints stay parked. Returns the
     /// number delivered. Run automatically at the start of every
     /// [`anti_entropy_round`](LocalCluster::anti_entropy_round).
+    ///
+    /// Hints are churn-aware: a hint whose home was decommissioned while
+    /// it sat parked re-routes to the key's *current* homes instead —
+    /// the state must land where the key now lives, not on a retiree.
     pub fn drain_hints(&self) -> usize {
         let pending: Vec<Hint> = std::mem::take(&mut *self.hints.lock().unwrap());
         if pending.is_empty() {
             return 0;
         }
+        let nodes = self.nodes.read().unwrap();
         let mut delivered = 0;
         let mut parked = Vec::new();
         for hint in pending {
-            if self.fabric.deliver(hint.holder, hint.home) {
-                self.merge_at(hint.home, hint.key, &hint.state);
-                delivered += 1;
+            if self.topology.is_member(hint.home) {
+                if self.fabric.deliver(hint.holder, hint.home) {
+                    self.merge_at_node(&nodes[hint.home], hint.key, &hint.state);
+                    delivered += 1;
+                } else {
+                    parked.push(hint);
+                }
             } else {
-                parked.push(hint);
+                // home retired mid-park: fan the state to the key's
+                // current homes, re-parking the unreachable ones
+                let mut any = false;
+                for home in self.topology.replicas_for(hint.key, self.quorum.n) {
+                    if self.fabric.deliver(hint.holder, home) {
+                        self.merge_at_node(&nodes[home], hint.key, &hint.state);
+                        any = true;
+                    } else {
+                        parked.push(Hint { home, ..hint.clone() });
+                    }
+                }
+                if any {
+                    delivered += 1;
+                }
             }
         }
         if !parked.is_empty() {
@@ -529,15 +682,17 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// applied (per pair).
     pub fn anti_entropy_round(&self) -> usize {
         self.drain_hints();
+        let members = self.topology.members();
+        let nodes = self.nodes.read().unwrap();
         let mut reconciled = 0;
-        for (a, node_a) in self.nodes.iter().enumerate() {
-            for (b, node_b) in self.nodes.iter().enumerate().skip(a + 1) {
+        for (ai, &a) in members.iter().enumerate() {
+            for &b in members.iter().skip(ai + 1) {
                 // the exchange needs both directions of the link this round
                 if !self.fabric.deliver(a, b) || !self.fabric.deliver(b, a) {
                     continue;
                 }
-                let (sa, sb) = (&node_a.store, &node_b.store);
-                let mut batch: MergeBatch<DvvMech> = MergeBatch::new(self.nodes.len());
+                let (sa, sb) = (&nodes[a].store, &nodes[b].store);
+                let mut batch: MergeBatch<DvvMech> = MergeBatch::new(nodes.len());
                 for shard in 0..sa.shard_count() {
                     let pairs = antientropy::diff_pairs_in_shard(sa, sb, shard);
                     if pairs.is_empty() {
@@ -552,10 +707,10 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
                 for (node, items) in batch.drain() {
                     if self.oracle.get().is_some() {
                         for (key, state) in &items {
-                            self.merge_at(node, *key, state);
+                            self.merge_at_node(&nodes[node], *key, state);
                         }
                     } else {
-                        self.nodes[node].store.merge_batch(&items);
+                        nodes[node].store.merge_batch(&items);
                     }
                 }
             }
@@ -563,20 +718,160 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         reconciled
     }
 
+    // -----------------------------------------------------------------
+    // elastic membership
+    // -----------------------------------------------------------------
+
+    /// Admit a new replica at runtime: allocate the next dense id, build
+    /// its store from the cluster's backend factory, grow the fabric
+    /// (clean links), bump the topology epoch, and re-home the key
+    /// ranges the newcomer now owns by pulling them from the members
+    /// through the anti-entropy bulk-sync path (fabric-routed and
+    /// oracle-audited, so a chaos schedule applies to the transfer; a
+    /// dropped transfer is healed by later anti-entropy rounds). Returns
+    /// `(new node id, new epoch)`.
+    pub fn join_node(&self) -> (NodeId, u64) {
+        let _serial = self.membership.lock().unwrap();
+        let id = {
+            let mut nodes = self.nodes.write().unwrap();
+            let id = nodes.len();
+            let backend = (self.make_backend.lock().unwrap())(id);
+            nodes.push(Arc::new(Node { id, store: KeyStore::with_backend(DvvMech, backend) }));
+            id
+        };
+        // grow the fabric before the topology can route to the id
+        self.fabric.grow_to(id + 1);
+        let (tid, epoch) = self.topology.join();
+        debug_assert_eq!(tid, id, "node table and topology agree on dense ids");
+        self.rebalance_join(id);
+        (id, epoch)
+    }
+
+    /// Pull every key range the joined node now owns from the members,
+    /// shard by shard through [`antientropy::diff_pairs_in_shard`] +
+    /// [`antientropy::sync_scalar`] — the same bulk path a normal
+    /// anti-entropy round uses.
+    fn rebalance_join(&self, id: NodeId) {
+        let members = self.topology.members();
+        let nodes = self.nodes.read().unwrap();
+        let target = &nodes[id];
+        let mut homes: Vec<NodeId> = Vec::new();
+        for &m in members.iter().filter(|&&m| m != id) {
+            // the transfer is a message exchange with the source
+            if !self.fabric.deliver(m, id) {
+                continue;
+            }
+            for shard in 0..nodes[m].store.shard_count() {
+                let pairs: Vec<antientropy::KeyPair> =
+                    antientropy::diff_pairs_in_shard(&nodes[m].store, &target.store, shard)
+                        .into_iter()
+                        .filter(|pair| {
+                            self.topology.replicas_into(pair.key, self.quorum.n, &mut homes);
+                            homes.contains(&id)
+                        })
+                        .collect();
+                if pairs.is_empty() {
+                    continue;
+                }
+                for (key, merged) in antientropy::sync_scalar(&pairs) {
+                    self.merge_at_node(target, key, &merged);
+                }
+            }
+        }
+    }
+
+    /// Retire a member at runtime: bump the topology (its ranges
+    /// re-route; the id is never reused), then hand off every key it
+    /// holds to the key's new homes — reachable homes get the state
+    /// merged (oracle-audited) immediately, unreachable ones get a
+    /// parked hint so **nothing is lost even when the retiree is cut off
+    /// mid-chaos**. Finally, hints parked *for* the retiree re-route to
+    /// current homes. The node object keeps its slot (hints may still
+    /// name it as holder) but serves no new traffic. Returns the new
+    /// epoch.
+    ///
+    /// Refused when the survivor set would be smaller than the
+    /// read/write quorum needs.
+    pub fn decommission_node(&self, id: NodeId) -> Result<u64> {
+        let _serial = self.membership.lock().unwrap();
+        if !self.topology.is_member(id) {
+            return Err(crate::Error::Config(format!("node {id} is not an active member")));
+        }
+        let remaining = self.topology.member_count() - 1;
+        if remaining < self.quorum.r.max(self.quorum.w) {
+            return Err(crate::Error::Config(format!(
+                "decommissioning node {id} would leave {remaining} members — \
+                 fewer than the quorum needs"
+            )));
+        }
+        let epoch = self.topology.decommission(id)?;
+        {
+            let nodes = self.nodes.read().unwrap();
+            let src = &nodes[id];
+            let mut homes: Vec<NodeId> = Vec::new();
+            for shard in 0..src.store.shard_count() {
+                for k in src.store.keys_in_shard(shard) {
+                    let state = src.store.state(k);
+                    self.topology.replicas_into(k, self.quorum.n, &mut homes);
+                    for &home in homes.iter() {
+                        if self.fabric.deliver(id, home) {
+                            self.merge_at_node(&nodes[home], k, &state);
+                        } else {
+                            self.hints.lock().unwrap().push(Hint {
+                                holder: id,
+                                home,
+                                key: k,
+                                state: state.clone(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        // hints parked with the retiree as home re-route to current homes
+        self.drain_hints();
+        Ok(epoch)
+    }
+
+    /// Step a [`FaultPlan`] — churn included — against this cluster:
+    /// membership faults spin up / retire real nodes through
+    /// [`join_node`](LocalCluster::join_node) and
+    /// [`decommission_node`](LocalCluster::decommission_node); everything
+    /// else hits the fabric as in [`Fabric::advance`]. One seeded
+    /// schedule thereby drives the DES ([`FaultPlan::apply`]) and the
+    /// threaded cluster identically.
+    pub fn advance_plan(&self, plan: &FaultPlan, to_us: u64) {
+        self.fabric.advance_each(plan, to_us, |fault| match fault {
+            Fault::Join { .. } => {
+                let _ = self.join_node();
+            }
+            Fault::Decommission { node, .. } => {
+                // refused decommissions (quorum floor) are skipped, like
+                // a crash of an unknown node
+                let _ = self.decommission_node(*node);
+            }
+            other => self.fabric.apply_fault(other),
+        });
+    }
+
     /// Current sibling count for a key (diagnostics).
     pub fn siblings(&self, key: &str) -> usize {
         let k = hash_str(key);
-        let replicas = self.ring.replicas_for(k, self.quorum.n);
+        let replicas = self.topology.replicas_for(k, self.quorum.n);
+        let nodes = self.nodes.read().unwrap();
         replicas
             .iter()
-            .map(|&n| self.nodes[n].store.sibling_count(k))
+            .map(|&n| nodes[n].store.sibling_count(k))
             .max()
             .unwrap_or(0)
     }
 
-    /// Total causality metadata bytes across replicas (diagnostics).
+    /// Total causality metadata bytes across the active members
+    /// (diagnostics; a retiree's frozen remnants are not counted).
     pub fn metadata_bytes(&self) -> u64 {
-        self.nodes.iter().map(|n| n.store.metadata_bytes()).sum()
+        let members = self.topology.members();
+        let nodes = self.nodes.read().unwrap();
+        members.iter().map(|&m| nodes[m].store.metadata_bytes()).sum()
     }
 }
 
@@ -753,6 +1048,157 @@ mod tests {
         assert!(matches!(err, crate::Error::QuorumNotMet { got: 2, needed: 3 }), "{err}");
         c.fabric().heal_all();
         assert_eq!(c.get("k").unwrap().values, vec![b"x".to_vec()]);
+    }
+
+    #[test]
+    fn join_node_rebalances_and_serves() {
+        let c = LocalCluster::new(3, 3, 2, 2).unwrap();
+        for i in 0..40 {
+            c.put(&format!("key{i}"), format!("val{i}").into_bytes(), &[]).unwrap();
+        }
+        let epoch_before = c.epoch();
+        let (id, epoch) = c.join_node();
+        assert_eq!(id, 3);
+        assert_eq!(epoch, epoch_before + 1);
+        assert_eq!(c.node_count(), 4);
+        assert_eq!(c.members(), vec![0, 1, 2, 3]);
+        assert_eq!(c.fabric().node_count(), 4, "fabric grew with the join");
+        // the newcomer owns ranges and received their data
+        assert!(c.node(3).store().key_count() > 0, "join handoff populated the node");
+        // every key still reads back through whatever epoch routes now
+        for i in 0..40 {
+            let ans = c.get(&format!("key{i}")).unwrap();
+            assert_eq!(ans.values, vec![format!("val{i}").into_bytes()]);
+        }
+        // a fresh write can land on the newcomer's ranges
+        for i in 40..80 {
+            c.put(&format!("key{i}"), b"x".to_vec(), &[]).unwrap();
+        }
+    }
+
+    #[test]
+    fn decommission_rehomes_every_key() {
+        let c = LocalCluster::new(4, 3, 2, 2).unwrap();
+        for i in 0..40 {
+            c.put(&format!("key{i}"), format!("val{i}").into_bytes(), &[]).unwrap();
+        }
+        let epoch = c.decommission_node(1).unwrap();
+        assert_eq!(epoch, c.epoch());
+        assert_eq!(c.members(), vec![0, 2, 3]);
+        assert_eq!(c.node_count(), 4, "the slot stays allocated");
+        // no preference list names the retiree; reads survive
+        for i in 0..40 {
+            let key = format!("key{i}");
+            assert!(!c.replicas_of(&key).contains(&1));
+            let ans = c.get(&key).unwrap();
+            assert_eq!(ans.values, vec![format!("val{i}").into_bytes()]);
+        }
+        // handoff completeness: everything the retiree holds is present
+        // on the key's current homes
+        let retiree = c.node(1);
+        let keys: Vec<Key> = retiree.store().keys().collect();
+        for k in keys {
+            for v in retiree.store().values(k) {
+                let covered = c.topology().replicas_for(k, c.quorum().n).iter().any(|&h| {
+                    c.node(h).store().values(k).iter().any(|s| s.id == v.id)
+                });
+                assert!(covered, "value {} on key {k} not re-homed", v.id);
+            }
+        }
+        assert_eq!(c.pending_hints(), 0, "clean fabric: no hints parked");
+    }
+
+    #[test]
+    fn decommission_under_partition_parks_hints_then_drains() {
+        let c = LocalCluster::new(4, 3, 2, 2).unwrap();
+        for i in 0..30 {
+            c.put(&format!("k{i}"), b"v".to_vec(), &[]).unwrap();
+        }
+        // cut the retiree off from everyone, then decommission it
+        let others: Vec<NodeId> = vec![0, 2, 3];
+        c.fabric().partition_groups(&[1], &others);
+        c.decommission_node(1).unwrap();
+        assert!(c.pending_hints() > 0, "unreachable homes got parked hints");
+        c.fabric().heal_all();
+        c.drain_hints();
+        assert_eq!(c.pending_hints(), 0);
+        // after the drain, everything the retiree held is covered
+        let retiree = c.node(1);
+        let keys: Vec<Key> = retiree.store().keys().collect();
+        for k in keys {
+            for v in retiree.store().values(k) {
+                let covered = c.topology().replicas_for(k, c.quorum().n).iter().any(|&h| {
+                    c.node(h).store().values(k).iter().any(|s| s.id == v.id)
+                });
+                assert!(covered, "value {} on key {k} stranded", v.id);
+            }
+        }
+    }
+
+    #[test]
+    fn decommission_guards_the_quorum_floor() {
+        let c = LocalCluster::new(3, 3, 2, 2).unwrap();
+        c.decommission_node(0).unwrap();
+        // 2 members left; R = W = 2 — another decommission must refuse
+        assert!(c.decommission_node(1).is_err());
+        assert!(c.decommission_node(0).is_err(), "already retired");
+        assert!(c.decommission_node(9).is_err(), "unknown id");
+        // ops still work with the floor intact
+        c.put("k", b"x".to_vec(), &[]).unwrap();
+        assert_eq!(c.get("k").unwrap().values, vec![b"x".to_vec()]);
+    }
+
+    #[test]
+    fn churn_plan_drives_membership_through_advance_plan() {
+        let c = LocalCluster::new(4, 3, 2, 2).unwrap();
+        let plan = crate::sim::failure::FaultPlan::new()
+            .join_at(100)
+            .decommission_at(200, 2)
+            .crash_window(0, 300, 400);
+        c.advance_plan(&plan, 150);
+        assert_eq!(c.node_count(), 5);
+        assert_eq!(c.epoch(), crate::cluster::topology::INITIAL_EPOCH + 1);
+        c.advance_plan(&plan, 350);
+        assert_eq!(c.members(), vec![0, 1, 3, 4]);
+        assert!(!c.fabric().is_up(0), "non-membership faults still hit the fabric");
+        c.advance_plan(&plan, 500);
+        assert!(c.fabric().is_up(0));
+    }
+
+    #[test]
+    fn writes_racing_a_decommission_are_never_stranded() {
+        // hammer writes from worker threads while the main thread
+        // decommissions a node; the epoch guard + handoff must leave
+        // every write readable afterwards
+        let c = Arc::new(LocalCluster::new(4, 3, 2, 2).unwrap());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut workers = Vec::new();
+        for t in 0..3u32 {
+            let c = Arc::clone(&c);
+            let stop = Arc::clone(&stop);
+            workers.push(std::thread::spawn(move || {
+                let mut written = Vec::new();
+                let mut i = 0u32;
+                while !stop.load(Ordering::Relaxed) {
+                    let key = format!("t{t}-k{i}");
+                    c.put(&key, key.clone().into_bytes(), &[]).unwrap();
+                    written.push(key);
+                    i += 1;
+                }
+                written
+            }));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        c.decommission_node(1).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        stop.store(true, Ordering::Relaxed);
+        c.drain_hints();
+        for worker in workers {
+            for key in worker.join().unwrap() {
+                let ans = c.get(&key).unwrap();
+                assert_eq!(ans.values, vec![key.into_bytes()], "write lost across churn");
+            }
+        }
     }
 
     #[test]

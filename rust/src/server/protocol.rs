@@ -30,7 +30,7 @@
 //! -> PUT <key> <value-hex> [ctx-hex]
 //! <- OK
 //! -> STATS
-//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h>
+//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h> epoch=<e>
 //! -> QUIT
 //! <- BYE
 //! ```
@@ -46,6 +46,19 @@
 //! -> HEAL <node>                    recover one replica
 //! -> HEAL                           heal everything, drain hints
 //! <- OK
+//! ```
+//!
+//! Elastic-topology admin commands change membership at runtime (binary
+//! clients use the dedicated [`OP_JOIN`] / [`OP_DECOMMISSION`] /
+//! [`OP_TOPOLOGY`] opcodes instead):
+//!
+//! ```text
+//! -> JOIN                           spin up a new replica, re-home ranges
+//! <- OK id=<id> epoch=<e>
+//! -> DECOMMISSION <node>            retire a replica, hand off its keys
+//! <- OK epoch=<e>
+//! -> TOPOLOGY                       current membership view
+//! <- TOPOLOGY epoch=<e> slots=<n> members=<a,b,c>
 //! ```
 //!
 //! Errors render as `ERR <message>`. Hex keeps the framing trivial and
@@ -124,6 +137,15 @@ pub enum Request {
         /// The node to recover; `None` heals everything.
         node: Option<usize>,
     },
+    /// Admit a new replica at runtime (admin).
+    Join,
+    /// Retire a replica at runtime, handing off its keys (admin).
+    Decommission {
+        /// The node to retire.
+        node: usize,
+    },
+    /// Report the current membership view (epoch, slots, members).
+    Topology,
     /// Close the connection.
     Quit,
 }
@@ -256,6 +278,16 @@ pub fn parse_request(line: &str) -> Result<Request> {
             let node = parts.next().map(parse_node).transpose()?;
             Ok(Request::Heal { node })
         }
+        "JOIN" => Ok(Request::Join),
+        "DECOMMISSION" => {
+            let node = parse_node(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("DECOMMISSION needs a node".into()))?,
+            )?;
+            Ok(Request::Decommission { node })
+        }
+        "TOPOLOGY" => Ok(Request::Topology),
         "QUIT" => Ok(Request::Quit),
         other => Err(Error::Protocol(format!("unknown command {other:?}"))),
     }
@@ -281,8 +313,15 @@ use crate::clocks::encoding::{expect_end, get_bytes, get_varint, put_varint};
 /// text protocol.
 pub const MAGIC: [u8; 4] = *b"DVV2";
 
-/// Current binary protocol version.
-pub const VERSION: u8 = 2;
+/// Current binary wire-format version, negotiated in the hello
+/// exchange. Bumped to 3 when the elastic-topology revision extended
+/// [`OP_STATS_REPLY`] with a fifth (epoch) field and added the
+/// membership opcodes: the stats payload decodes strictly
+/// (`expect_end`), so a pre-topology binary would misparse the longer
+/// reply mid-session — version negotiation turns that silent skew into
+/// a clean hello-time rejection. (The `DVV2` magic names the protocol
+/// family, not this byte.)
+pub const VERSION: u8 = 3;
 
 /// Upper bound on a frame's length field (16 MiB). A header promising
 /// more is rejected before any allocation.
@@ -299,6 +338,18 @@ pub const OP_STATS: u8 = 0x03;
 pub const OP_ADMIN: u8 = 0x04;
 /// Request opcode: close the connection. Empty payload.
 pub const OP_QUIT: u8 = 0x05;
+/// Request opcode: admit a new replica (admin). Empty payload; replies
+/// with an [`OP_TOPOLOGY_REPLY`] whose epoch and `slots` come from this
+/// join specifically — `slots - 1` is the id assigned to *this*
+/// request, stable even when joins race.
+pub const OP_JOIN: u8 = 0x06;
+/// Request opcode: retire a replica (admin). Payload: varint node id;
+/// replies with an [`OP_TOPOLOGY_REPLY`] of the post-retirement view.
+pub const OP_DECOMMISSION: u8 = 0x07;
+/// Request opcode: current membership view. Empty payload; replies with
+/// an [`OP_TOPOLOGY_REPLY`] — how a long-lived client discovers and
+/// refreshes routing across epoch bumps mid-session.
+pub const OP_TOPOLOGY: u8 = 0x08;
 
 /// Response opcode: negotiation ack. Payload: the accepted version byte.
 pub const OP_HELLO_ACK: u8 = 0x80;
@@ -313,8 +364,14 @@ pub const OP_PUT_OK: u8 = 0x82;
 /// Response opcode: generic success (admin commands). Empty payload.
 pub const OP_OK: u8 = 0x83;
 /// Response opcode: statistics. Payload:
-/// `[nodes][shards][metadata_bytes][hints]` varints.
+/// `[nodes][shards][metadata_bytes][hints][epoch]` varints.
 pub const OP_STATS_REPLY: u8 = 0x84;
+/// Response opcode: membership view (answer to [`OP_JOIN`],
+/// [`OP_DECOMMISSION`], and [`OP_TOPOLOGY`]). Payload:
+/// `[epoch][slots][count][member ids…]` varints — `slots` is the total
+/// dense ids allocated, so after a JOIN the newcomer's id is
+/// `slots - 1`.
+pub const OP_TOPOLOGY_REPLY: u8 = 0x87;
 /// Response opcode: error. Payload: UTF-8 message. The connection stays
 /// usable unless the framing itself was broken.
 pub const OP_ERR: u8 = 0x85;
@@ -350,6 +407,15 @@ pub enum BinRequest {
         /// The admin command line.
         line: String,
     },
+    /// Admit a new replica (admin).
+    Join,
+    /// Retire a replica (admin).
+    Decommission {
+        /// The node to retire.
+        node: usize,
+    },
+    /// Current membership view.
+    Topology,
     /// Close the connection.
     Quit,
 }
@@ -431,6 +497,13 @@ pub fn encode_bin_request(req: &BinRequest) -> (u8, Vec<u8>) {
         }
         BinRequest::Stats => (OP_STATS, Vec::new()),
         BinRequest::Admin { line } => (OP_ADMIN, line.as_bytes().to_vec()),
+        BinRequest::Join => (OP_JOIN, Vec::new()),
+        BinRequest::Decommission { node } => {
+            let mut p = Vec::with_capacity(4);
+            put_varint(&mut p, *node as u64);
+            (OP_DECOMMISSION, p)
+        }
+        BinRequest::Topology => (OP_TOPOLOGY, Vec::new()),
         BinRequest::Quit => (OP_QUIT, Vec::new()),
     }
 }
@@ -460,6 +533,22 @@ pub fn decode_bin_request(opcode: u8, payload: &[u8]) -> Result<BinRequest> {
             Ok(BinRequest::Stats)
         }
         OP_ADMIN => Ok(BinRequest::Admin { line: utf8(payload, "admin line")? }),
+        OP_JOIN => {
+            expect_end(payload, 0)?;
+            Ok(BinRequest::Join)
+        }
+        OP_DECOMMISSION => {
+            let mut pos = 0;
+            let node = get_varint(payload, &mut pos)?;
+            let node = usize::try_from(node)
+                .map_err(|_| Error::Protocol(format!("node id {node} out of range")))?;
+            expect_end(payload, pos)?;
+            Ok(BinRequest::Decommission { node })
+        }
+        OP_TOPOLOGY => {
+            expect_end(payload, 0)?;
+            Ok(BinRequest::Topology)
+        }
         OP_QUIT => {
             expect_end(payload, 0)?;
             Ok(BinRequest::Quit)
@@ -519,25 +608,62 @@ pub fn decode_put_ok(payload: &[u8]) -> Result<(u64, Vec<u8>)> {
 }
 
 /// Encode an [`OP_STATS_REPLY`] payload.
-pub fn encode_stats_reply(nodes: u64, shards: u64, metadata_bytes: u64, hints: u64) -> Vec<u8> {
-    let mut p = Vec::with_capacity(16);
+pub fn encode_stats_reply(
+    nodes: u64,
+    shards: u64,
+    metadata_bytes: u64,
+    hints: u64,
+    epoch: u64,
+) -> Vec<u8> {
+    let mut p = Vec::with_capacity(20);
     put_varint(&mut p, nodes);
     put_varint(&mut p, shards);
     put_varint(&mut p, metadata_bytes);
     put_varint(&mut p, hints);
+    put_varint(&mut p, epoch);
     p
 }
 
 /// Decode an [`OP_STATS_REPLY`] payload into
-/// `(nodes, shards, metadata_bytes, hints)`.
-pub fn decode_stats_reply(payload: &[u8]) -> Result<(u64, u64, u64, u64)> {
+/// `(nodes, shards, metadata_bytes, hints, epoch)`.
+pub fn decode_stats_reply(payload: &[u8]) -> Result<(u64, u64, u64, u64, u64)> {
     let mut pos = 0;
     let nodes = get_varint(payload, &mut pos)?;
     let shards = get_varint(payload, &mut pos)?;
     let metadata_bytes = get_varint(payload, &mut pos)?;
     let hints = get_varint(payload, &mut pos)?;
+    let epoch = get_varint(payload, &mut pos)?;
     expect_end(payload, pos)?;
-    Ok((nodes, shards, metadata_bytes, hints))
+    Ok((nodes, shards, metadata_bytes, hints, epoch))
+}
+
+/// Encode an [`OP_TOPOLOGY_REPLY`] payload:
+/// `[epoch][slots][count][member ids…]`.
+pub fn encode_topology_reply(epoch: u64, slots: u64, members: &[u64]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(members.len() * 2 + 12);
+    put_varint(&mut p, epoch);
+    put_varint(&mut p, slots);
+    put_varint(&mut p, members.len() as u64);
+    for &m in members {
+        put_varint(&mut p, m);
+    }
+    p
+}
+
+/// Decode an [`OP_TOPOLOGY_REPLY`] payload into
+/// `(epoch, slots, member ids)`.
+pub fn decode_topology_reply(payload: &[u8]) -> Result<(u64, u64, Vec<u64>)> {
+    let mut pos = 0;
+    let epoch = get_varint(payload, &mut pos)?;
+    let slots = get_varint(payload, &mut pos)?;
+    let count = get_len(payload, &mut pos)?;
+    // the remaining-bytes bound in `get_len` caps the allocation
+    let mut members = Vec::new();
+    for _ in 0..count {
+        members.push(get_varint(payload, &mut pos)?);
+    }
+    expect_end(payload, pos)?;
+    Ok((epoch, slots, members))
 }
 
 #[cfg(test)]
@@ -612,6 +738,19 @@ mod tests {
     }
 
     #[test]
+    fn parse_elastic_admin_commands() {
+        assert_eq!(parse_request("JOIN").unwrap(), Request::Join);
+        assert_eq!(parse_request("join").unwrap(), Request::Join);
+        assert_eq!(
+            parse_request("DECOMMISSION 2").unwrap(),
+            Request::Decommission { node: 2 }
+        );
+        assert_eq!(parse_request("TOPOLOGY").unwrap(), Request::Topology);
+        assert!(parse_request("DECOMMISSION").is_err());
+        assert!(parse_request("DECOMMISSION x").is_err());
+    }
+
+    #[test]
     fn malformed_fault_commands_are_rejected() {
         for bad in [
             "FAULT",
@@ -659,6 +798,9 @@ mod tests {
             },
             BinRequest::Stats,
             BinRequest::Admin { line: "FAULT CRASH 1".into() },
+            BinRequest::Join,
+            BinRequest::Decommission { node: 3 },
+            BinRequest::Topology,
             BinRequest::Quit,
         ];
         for req in cases {
@@ -674,6 +816,11 @@ mod tests {
         // trailing bytes on no-payload requests
         assert!(decode_bin_request(OP_STATS, &[1]).is_err());
         assert!(decode_bin_request(OP_QUIT, &[0]).is_err());
+        assert!(decode_bin_request(OP_JOIN, &[0]).is_err());
+        assert!(decode_bin_request(OP_TOPOLOGY, &[9]).is_err());
+        // DECOMMISSION payload must be exactly one varint
+        assert!(decode_bin_request(OP_DECOMMISSION, &[]).is_err());
+        assert!(decode_bin_request(OP_DECOMMISSION, &[1, 1]).is_err());
         // bad UTF-8 key
         assert!(decode_bin_request(OP_GET, &[0xff, 0xfe]).is_err());
         // every strict prefix of a valid PUT payload must be rejected
@@ -722,8 +869,24 @@ mod tests {
         let p = encode_put_ok(99, &token);
         assert_eq!(decode_put_ok(&p).unwrap(), (99, token));
 
-        let p = encode_stats_reply(3, 64, 12345, 2);
-        assert_eq!(decode_stats_reply(&p).unwrap(), (3, 64, 12345, 2));
+        let p = encode_stats_reply(3, 64, 12345, 2, 7);
+        assert_eq!(decode_stats_reply(&p).unwrap(), (3, 64, 12345, 2, 7));
+
+        let p = encode_topology_reply(5, 6, &[0, 2, 3, 5]);
+        assert_eq!(decode_topology_reply(&p).unwrap(), (5, 6, vec![0, 2, 3, 5]));
+        let p = encode_topology_reply(1, 1, &[0]);
+        assert_eq!(decode_topology_reply(&p).unwrap(), (1, 1, vec![0]));
+    }
+
+    #[test]
+    fn topology_reply_rejects_truncation_and_trailing_bytes() {
+        let p = encode_topology_reply(9, 4, &[0, 1, 3]);
+        for cut in 0..p.len() {
+            assert!(decode_topology_reply(&p[..cut]).is_err(), "prefix {cut}");
+        }
+        let mut long = p.clone();
+        long.push(0);
+        assert!(decode_topology_reply(&long).is_err());
     }
 
     #[test]

@@ -107,6 +107,22 @@ fn apply_fault(cluster: &LocalCluster, cmd: FaultCmd) -> String {
     }
 }
 
+/// Render the membership view as a text-protocol line (one consistent
+/// snapshot — epoch and members cannot straddle a concurrent bump).
+fn topology_line(cluster: &LocalCluster) -> String {
+    let (epoch, slots, members) = cluster.topology().snapshot();
+    let members: Vec<String> = members.iter().map(|m| m.to_string()).collect();
+    format!("TOPOLOGY epoch={epoch} slots={slots} members={}\n", members.join(","))
+}
+
+/// Encode the membership view as an [`protocol::OP_TOPOLOGY_REPLY`]
+/// payload (one consistent snapshot).
+fn topology_frame(cluster: &LocalCluster) -> Vec<u8> {
+    let (epoch, slots, members) = cluster.topology().snapshot();
+    let members: Vec<u64> = members.iter().map(|&m| m as u64).collect();
+    protocol::encode_topology_reply(epoch, slots as u64, &members)
+}
+
 /// Apply a `HEAL` admin command: recover one node, or reset every fault
 /// axis and drain parked hints.
 fn apply_heal(cluster: &LocalCluster, node: Option<usize>) -> String {
@@ -251,14 +267,24 @@ fn serve_text(
                     }
                 }
                 Ok(Request::Stats) => format!(
-                    "STATS nodes={} shards={} metadata_bytes={} hints={}\n",
+                    "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={}\n",
                     cluster.node_count(),
                     cluster.shard_count(),
                     cluster.metadata_bytes(),
-                    cluster.pending_hints()
+                    cluster.pending_hints(),
+                    cluster.epoch()
                 ),
                 Ok(Request::Fault(cmd)) => apply_fault(cluster, cmd),
                 Ok(Request::Heal { node }) => apply_heal(cluster, node),
+                Ok(Request::Join) => {
+                    let (id, epoch) = cluster.join_node();
+                    format!("OK id={id} epoch={epoch}\n")
+                }
+                Ok(Request::Decommission { node }) => match cluster.decommission_node(node) {
+                    Ok(epoch) => format!("OK epoch={epoch}\n"),
+                    Err(e) => format!("ERR {e}\n"),
+                },
+                Ok(Request::Topology) => topology_line(cluster),
                 Ok(Request::Quit) => {
                     stream.write_all(b"BYE\n")?;
                     return Ok(());
@@ -398,14 +424,52 @@ fn serve_binary(
                     cluster.shard_count() as u64,
                     cluster.metadata_bytes(),
                     cluster.pending_hints() as u64,
+                    cluster.epoch(),
                 ),
             ),
+            Ok(BinRequest::Join) => {
+                // the reply's epoch and slots come from *this* join's
+                // return value, so `slots - 1` is the id assigned to
+                // this request even when joins race (a fresh snapshot
+                // could report another join's slots); the member list
+                // is an advisory snapshot
+                let (id, epoch) = cluster.join_node();
+                let members: Vec<u64> =
+                    cluster.members().iter().map(|&m| m as u64).collect();
+                (
+                    protocol::OP_TOPOLOGY_REPLY,
+                    protocol::encode_topology_reply(epoch, id as u64 + 1, &members),
+                )
+            }
+            Ok(BinRequest::Decommission { node }) => match cluster.decommission_node(node) {
+                Ok(_) => (protocol::OP_TOPOLOGY_REPLY, topology_frame(cluster)),
+                Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+            },
+            Ok(BinRequest::Topology) => {
+                (protocol::OP_TOPOLOGY_REPLY, topology_frame(cluster))
+            }
             Ok(BinRequest::Admin { line }) => match parse_request(&line) {
                 Ok(Request::Fault(cmd)) => admin_status(apply_fault(cluster, cmd)),
                 Ok(Request::Heal { node }) => admin_status(apply_heal(cluster, node)),
+                // text-form elastic ops work over ADMIN too; the
+                // dedicated opcodes return the richer topology frame
+                Ok(Request::Join) => {
+                    let _ = cluster.join_node();
+                    (protocol::OP_OK, Vec::new())
+                }
+                Ok(Request::Decommission { node }) => {
+                    match cluster.decommission_node(node) {
+                        Ok(_) => (protocol::OP_OK, Vec::new()),
+                        Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+                    }
+                }
+                Ok(Request::Topology) => {
+                    (protocol::OP_TOPOLOGY_REPLY, topology_frame(cluster))
+                }
                 Ok(_) => (
                     protocol::OP_ERR,
-                    b"ADMIN accepts FAULT/HEAL commands only".to_vec(),
+                    b"ADMIN accepts FAULT/HEAL/JOIN/DECOMMISSION/TOPOLOGY commands only"
+                        .to_vec(),
                 ),
                 Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
             },
@@ -488,6 +552,37 @@ mod tests {
         // connection still usable
         send(&mut w, &format!("PUT a {}", hex_encode(b"x")));
         assert_eq!(recv(&mut r), "OK");
+        server.shutdown();
+    }
+
+    #[test]
+    fn text_elastic_ops_bump_epochs_and_sessions_survive() {
+        let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+        let server = Server::start("127.0.0.1:0", cluster).unwrap();
+        let (mut r, mut w) = client(server.addr());
+        send(&mut w, &format!("PUT k {}", hex_encode(b"v")));
+        assert_eq!(recv(&mut r), "OK");
+        send(&mut w, "STATS");
+        let stats = recv(&mut r);
+        assert!(stats.contains(" epoch=1"), "{stats}");
+
+        send(&mut w, "JOIN");
+        assert_eq!(recv(&mut r), "OK id=3 epoch=2");
+        send(&mut w, "TOPOLOGY");
+        assert_eq!(recv(&mut r), "TOPOLOGY epoch=2 slots=4 members=0,1,2,3");
+        send(&mut w, "DECOMMISSION 0");
+        assert_eq!(recv(&mut r), "OK epoch=3");
+        send(&mut w, "TOPOLOGY");
+        assert_eq!(recv(&mut r), "TOPOLOGY epoch=3 slots=4 members=1,2,3");
+
+        // the same session keeps serving across both epoch bumps
+        send(&mut w, "GET k");
+        let header = recv(&mut r);
+        assert!(header.starts_with("VALUES 1 "), "{header}");
+        let _ = recv(&mut r);
+
+        send(&mut w, "DECOMMISSION 9");
+        assert!(recv(&mut r).starts_with("ERR "), "unknown node refused");
         server.shutdown();
     }
 

@@ -52,6 +52,20 @@ pub enum Fault {
         /// Extra one-way delay per message (µs).
         extra_delay_us: u64,
     },
+    /// Admit a new node at a time. Node ids are dense in both worlds, so
+    /// the newcomer's id is deterministic: the next unallocated slot.
+    Join {
+        /// When (simulated µs).
+        at: u64,
+    },
+    /// Retire a member at a time: its ranges re-route and its keys hand
+    /// off to the new homes. The id is never reused.
+    Decommission {
+        /// When (simulated µs).
+        at: u64,
+        /// Which node.
+        node: NodeId,
+    },
 }
 
 impl Fault {
@@ -62,7 +76,9 @@ impl Fault {
             | Fault::Recover { at, .. }
             | Fault::Partition { at, .. }
             | Fault::Heal { at }
-            | Fault::Degrade { at, .. } => *at,
+            | Fault::Degrade { at, .. }
+            | Fault::Join { at }
+            | Fault::Decommission { at, .. } => *at,
         }
     }
 }
@@ -182,6 +198,58 @@ impl FaultPlan {
         plan.degrade_window(drop_prob, rng.below(500), start, start + dur)
     }
 
+    /// Admit a new node at `at` (ids are dense: the newcomer gets the
+    /// next unallocated slot in whichever world replays the plan).
+    pub fn join_at(mut self, at: u64) -> Self {
+        self.faults.push(Fault::Join { at });
+        self
+    }
+
+    /// Retire `node` at `at`, handing its key ranges to their new homes.
+    pub fn decommission_at(mut self, at: u64, node: NodeId) -> Self {
+        self.faults.push(Fault::Decommission { at, node });
+        self
+    }
+
+    /// Random elastic churn: `cycles` join/decommission pairs inside
+    /// `[0, horizon_us)`, each in its own disjoint time slot with the
+    /// join strictly before the decommission. Victims are distinct nodes
+    /// drawn from the `base_nodes` initial members (joined nodes get
+    /// dense ids `base_nodes..`, identical in every world), so member
+    /// count never drops below `base_nodes - 1` mid-cycle and ends at
+    /// `base_nodes` exactly.
+    pub fn random_churn(
+        mut self,
+        base_nodes: usize,
+        cycles: usize,
+        horizon_us: u64,
+        rng: &mut Rng,
+    ) -> Self {
+        if cycles == 0 {
+            return self;
+        }
+        assert!(
+            cycles < base_nodes,
+            "need base_nodes > cycles so distinct victims leave a quorum standing"
+        );
+        assert!(
+            horizon_us >= 4 * cycles as u64,
+            "horizon {horizon_us}µs too short for {cycles} churn cycles"
+        );
+        let mut victims: Vec<NodeId> = (0..base_nodes).collect();
+        rng.shuffle(&mut victims);
+        let slot = horizon_us / cycles as u64;
+        for (c, &victim) in victims.iter().take(cycles).enumerate() {
+            let base = c as u64 * slot;
+            let half = slot / 2;
+            let join_at = base + rng.below(half.max(1));
+            let decom_at = base + half + rng.below(half.max(1));
+            self.faults.push(Fault::Join { at: join_at });
+            self.faults.push(Fault::Decommission { at: decom_at, node: victim });
+        }
+        self
+    }
+
     /// Random crash windows: each node gets `windows` crash periods of
     /// `dur_us` within `[0, horizon_us)`.
     pub fn random_crashes(
@@ -215,6 +283,8 @@ impl FaultPlan {
                 Fault::Degrade { at, drop_ppm, extra_delay_us } => {
                     sim.schedule_degrade(*at, *drop_ppm, *extra_delay_us)
                 }
+                Fault::Join { at } => sim.schedule_join(*at),
+                Fault::Decommission { at, node } => sim.schedule_decommission(*at, *node),
             }
         }
     }
@@ -328,5 +398,44 @@ mod tests {
     #[should_panic]
     fn drop_ppm_rejects_out_of_range() {
         let _ = drop_ppm(1.5);
+    }
+
+    #[test]
+    fn churn_builders_record_fire_times() {
+        let plan = FaultPlan::new().join_at(50).decommission_at(90, 2);
+        assert_eq!(plan.faults, vec![
+            Fault::Join { at: 50 },
+            Fault::Decommission { at: 90, node: 2 },
+        ]);
+        assert_eq!(plan.faults.iter().map(Fault::at).collect::<Vec<_>>(), vec![50, 90]);
+    }
+
+    #[test]
+    fn random_churn_pairs_joins_before_distinct_decommissions() {
+        let mut rng = Rng::new(11);
+        let plan = FaultPlan::new().random_churn(5, 3, 300_000, &mut rng);
+        assert_eq!(plan.faults.len(), 6);
+        let mut victims = Vec::new();
+        for pair in plan.faults.chunks(2) {
+            let (Fault::Join { at: j }, Fault::Decommission { at: d, node }) =
+                (&pair[0], &pair[1])
+            else {
+                panic!("unexpected fault kinds: {pair:?}");
+            };
+            assert!(j < d, "join {j} precedes decommission {d}");
+            assert!(*d < 300_000);
+            assert!(*node < 5, "victims come from the base nodes");
+            victims.push(*node);
+        }
+        victims.sort_unstable();
+        victims.dedup();
+        assert_eq!(victims.len(), 3, "victims are distinct");
+    }
+
+    #[test]
+    #[should_panic]
+    fn random_churn_requires_enough_base_nodes() {
+        let mut rng = Rng::new(1);
+        let _ = FaultPlan::new().random_churn(3, 3, 100_000, &mut rng);
     }
 }

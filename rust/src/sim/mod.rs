@@ -45,6 +45,10 @@ pub struct SimNode<M: Mechanism> {
     pub store: KeyStore<M>,
     /// Crashed nodes drop every message addressed to them.
     pub up: bool,
+    /// Active members own ring ranges and source anti-entropy; a
+    /// decommissioned node (`member = false`) keeps draining what it
+    /// still holds toward the members, but routes no new traffic.
+    pub member: bool,
 }
 
 /// Messages exchanged between nodes.
@@ -82,6 +86,8 @@ enum Ev<M: Mechanism> {
     PartitionGroups { left: Vec<NodeId>, right: Vec<NodeId> },
     HealAll,
     Degrade { drop_ppm: u32, extra_delay_us: u64 },
+    Join,
+    Decommission { node: NodeId },
 }
 
 struct Queued<M: Mechanism> {
@@ -164,6 +170,9 @@ pub struct Sim<M: Mechanism> {
     quorum: QuorumSpec,
     /// Clients whose drivers returned `None` (retired).
     retired: usize,
+    /// Membership epoch: bumped once per join/decommission, mirroring
+    /// [`crate::cluster::Topology`] in the threaded world.
+    epoch: u64,
 }
 
 impl<M: Mechanism> Sim<M> {
@@ -181,7 +190,7 @@ impl<M: Mechanism> Sim<M> {
         let ring = Ring::new(cfg.cluster.nodes, cfg.cluster.vnodes)?;
         let mut net = NetModel::new(cfg.net.clone(), rng.fork());
         let nodes = (0..cfg.cluster.nodes)
-            .map(|_| SimNode { store: KeyStore::new(mech.clone()), up: true })
+            .map(|_| SimNode { store: KeyStore::new(mech.clone()), up: true, member: true })
             .collect();
         let sessions = (0..clients)
             .map(|i| {
@@ -215,6 +224,7 @@ impl<M: Mechanism> Sim<M> {
             written: Vec::new(),
             quorum,
             retired: 0,
+            epoch: crate::cluster::topology::INITIAL_EPOCH,
             cfg,
         })
     }
@@ -222,6 +232,19 @@ impl<M: Mechanism> Sim<M> {
     /// Current simulated time (µs).
     pub fn now(&self) -> u64 {
         self.now
+    }
+
+    /// Current membership epoch (starts at
+    /// [`crate::cluster::topology::INITIAL_EPOCH`], bumps once per
+    /// join/decommission — the same lifecycle as the threaded
+    /// [`crate::cluster::Topology`]).
+    pub fn topology_epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Active member ids, ascending.
+    pub fn members(&self) -> Vec<NodeId> {
+        (0..self.nodes.len()).filter(|&n| self.nodes[n].member).collect()
     }
 
     fn push(&mut self, at: u64, ev: Ev<M>) {
@@ -278,6 +301,16 @@ impl<M: Mechanism> Sim<M> {
     /// configured baseline.
     pub fn schedule_degrade(&mut self, at: u64, drop_ppm: u32, extra_delay_us: u64) {
         self.push(at, Ev::Degrade { drop_ppm, extra_delay_us });
+    }
+
+    /// Admit a new node at `at` (it takes the next dense id).
+    pub fn schedule_join(&mut self, at: u64) {
+        self.push(at, Ev::Join);
+    }
+
+    /// Retire `node` at `at`: its ranges re-route and its keys hand off.
+    pub fn schedule_decommission(&mut self, at: u64, node: NodeId) {
+        self.push(at, Ev::Decommission { node });
     }
 
     fn schedule_next_op(&mut self, client: usize, extra_delay: u64) {
@@ -459,13 +492,106 @@ impl<M: Mechanism> Sim<M> {
             }
             Ev::AeTick { node } => self.anti_entropy(node),
             Ev::Crash { node } => self.nodes[node].up = false,
-            Ev::Recover { node } => self.nodes[node].up = true,
+            Ev::Recover { node } => {
+                self.nodes[node].up = true;
+                // a node that was decommissioned while crashed comes
+                // back, notices it owns nothing, and drains what it
+                // holds — without this its data could strand if the
+                // workload (and with it the drain AE ticks) ended first
+                if !self.nodes[node].member {
+                    self.retiree_handoff(node);
+                }
+            }
             Ev::PartitionGroups { left, right } => {
                 self.net.partition_groups(&left, &right)
             }
             Ev::HealAll => self.net.heal_all(),
             Ev::Degrade { drop_ppm, extra_delay_us } => {
                 self.net.degrade(drop_ppm as f64 / 1_000_000.0, extra_delay_us)
+            }
+            Ev::Join => self.on_join(),
+            Ev::Decommission { node } => self.on_decommission(node),
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // elastic membership
+    // ---------------------------------------------------------------
+
+    /// Admit a new node: allocate the next dense id, place its vnodes,
+    /// bump the epoch, and re-home affected ranges — each member pushes
+    /// the states of keys now homed at the newcomer through one AE-style
+    /// message (so chaos on the links applies; periodic anti-entropy
+    /// catches whatever a drop roll eats).
+    fn on_join(&mut self) {
+        let id = self.nodes.len();
+        self.nodes.push(SimNode {
+            store: KeyStore::new(self.mech.clone()),
+            up: true,
+            member: true,
+        });
+        let rid = self.ring.add_node();
+        debug_assert_eq!(rid, id);
+        self.epoch += 1;
+        for m in 0..id {
+            if !self.nodes[m].member || !self.nodes[m].up {
+                continue;
+            }
+            let keys: Vec<Key> = self.nodes[m].store.keys().collect();
+            let states: Vec<(Key, M::State)> = keys
+                .into_iter()
+                .filter(|&k| self.ring.replicas_for(k, self.quorum.n).contains(&id))
+                .map(|k| (k, self.nodes[m].store.state(k)))
+                .collect();
+            if states.is_empty() {
+                continue;
+            }
+            self.metrics.ae_keys_synced += states.len() as u64;
+            self.send(m, id, Msg::AePush { states });
+        }
+        if self.cfg.antientropy.period_us > 0 {
+            let jitter = self.rng.below(self.cfg.antientropy.period_us.max(1));
+            self.push(self.now + jitter, Ev::AeTick { node: id });
+        }
+    }
+
+    /// Retire a member: remove its vnodes (keys re-route to successors),
+    /// bump the epoch, and hand off every key it holds to the key's new
+    /// homes through the network. A crashed retiree hands off nothing
+    /// *now* — the handoff replays when it recovers (see the
+    /// [`Ev::Recover`] dispatch), mirroring the threaded cluster where
+    /// such a sweep parks hints that drain once the retiree is back —
+    /// so one churn schedule reaches the same verdict in both worlds
+    /// even when a crash window swallows the decommission instant.
+    fn on_decommission(&mut self, node: NodeId) {
+        if node >= self.nodes.len() || !self.nodes[node].member {
+            return;
+        }
+        // quorum floor, mirroring `LocalCluster::decommission_node`: a
+        // refusal there must be a refusal here too (no epoch bump), or
+        // one churn schedule would leave the two worlds with divergent
+        // membership
+        let remaining = self.nodes.iter().filter(|n| n.member).count() - 1;
+        if remaining < self.quorum.r.max(self.quorum.w) {
+            return;
+        }
+        self.nodes[node].member = false;
+        self.ring.remove_node(node);
+        self.epoch += 1;
+        if self.nodes[node].up {
+            self.retiree_handoff(node);
+        }
+    }
+
+    /// Push everything `node` (a retiree) holds to each key's current
+    /// homes through the network.
+    fn retiree_handoff(&mut self, node: NodeId) {
+        let keys: Vec<Key> = self.nodes[node].store.keys().collect();
+        for k in keys {
+            let state = self.nodes[node].store.state(k);
+            for home in self.ring.replicas_for(k, self.quorum.n) {
+                self.metrics.ae_keys_synced += 1;
+                self.send(node, home, Msg::StatePush { key: k, state: state.clone() });
             }
         }
     }
@@ -767,16 +893,23 @@ impl<M: Mechanism> Sim<M> {
         if !self.nodes[node].up || self.nodes.len() < 2 {
             return;
         }
-        // pick a random live peer
-        let mut peer = self.rng.below(self.nodes.len() as u64 - 1) as usize;
-        if peer >= node {
-            peer += 1;
+        // pick a random peer among the *other members* (a decommissioned
+        // node is never a peer: it must drain, not accumulate)
+        let peers: Vec<NodeId> = (0..self.nodes.len())
+            .filter(|&m| m != node && self.nodes[m].member)
+            .collect();
+        if peers.is_empty() {
+            return;
         }
+        let peer = peers[self.rng.below(peers.len() as u64) as usize];
         if !self.nodes[peer].up {
             return;
         }
         self.metrics.ae_rounds += 1;
-        // push all local key states to the peer, and pull its copies back
+        // push all local key states to the peer, and — for members —
+        // pull its copies back. A decommissioned node runs push-only
+        // ticks: it keeps draining what it still holds toward the
+        // members until the run ends, but takes in nothing new.
         let keys: Vec<Key> = self.nodes[node].store.keys().collect();
         let states: Vec<(Key, M::State)> = keys
             .iter()
@@ -784,7 +917,9 @@ impl<M: Mechanism> Sim<M> {
             .collect();
         self.metrics.ae_keys_synced += states.len() as u64;
         self.send(node, peer, Msg::AePush { states });
-        self.send(node, peer, Msg::AePull { keys, from: node });
+        if self.nodes[node].member {
+            self.send(node, peer, Msg::AePull { keys, from: node });
+        }
     }
 
     // ---------------------------------------------------------------
@@ -797,10 +932,12 @@ impl<M: Mechanism> Sim<M> {
     }
 
     /// Post-run audit: a written value is **permanently lost** when no
-    /// surviving value anywhere causally covers it (E6's headline number).
+    /// surviving value on an **active member** causally covers it (E6's
+    /// headline number). Copies stranded on a decommissioned node do not
+    /// count as survivors: its keys must have been re-homed.
     pub fn audit_permanently_lost(&self) -> u64 {
         let mut survivors: HashMap<Key, Vec<u64>> = HashMap::new();
-        for n in &self.nodes {
+        for n in self.nodes.iter().filter(|n| n.member) {
             for key in n.store.keys() {
                 let entry = survivors.entry(key).or_default();
                 for v in n.store.values(key) {
@@ -826,12 +963,18 @@ impl<M: Mechanism> Sim<M> {
     }
 
     /// Force-merge every node pairwise until quiescent (test helper that
-    /// models "eventual" delivery after the run).
+    /// models "eventual" delivery after the run). Any up node — member or
+    /// draining decommissioned — sources states, but only up *members*
+    /// receive them: retirement is a one-way valve.
     pub fn settle(&mut self) {
         for _ in 0..self.nodes.len() {
             for a in 0..self.nodes.len() {
                 for b in 0..self.nodes.len() {
-                    if a == b || !self.nodes[a].up || !self.nodes[b].up {
+                    if a == b
+                        || !self.nodes[a].up
+                        || !self.nodes[b].up
+                        || !self.nodes[b].member
+                    {
                         continue;
                     }
                     let keys: Vec<Key> = self.nodes[a].store.keys().collect();
@@ -1065,6 +1208,111 @@ mod tests {
         }
         sim.sync_put(0, 1, 4, &Default::default(), &[]).unwrap();
         assert_eq!(sim.sync_get(0, 1).unwrap().0.len(), 1);
+    }
+
+    #[test]
+    fn join_rebalances_and_decommission_rehomes_without_loss() {
+        let mut c = cfg(4, 3, 2, 2);
+        c.antientropy.period_us = 20_000;
+        let mut sim = Sim::new(DvvMech, c, 4, true, small_workload(4, 30), 23).unwrap();
+        sim.schedule_join(30_000);
+        sim.schedule_decommission(120_000, 1);
+        sim.start();
+        sim.run(u64::MAX);
+        assert_eq!(
+            sim.topology_epoch(),
+            crate::cluster::topology::INITIAL_EPOCH + 2,
+            "one join + one decommission = two epoch bumps"
+        );
+        assert_eq!(sim.nodes.len(), 5, "joined node allocated the next dense id");
+        assert_eq!(sim.members(), vec![0, 2, 3, 4]);
+        assert!(!sim.ring.replicas_for(7, 5).contains(&1), "retiree owns no ranges");
+        sim.settle();
+        assert_eq!(sim.audit_permanently_lost(), 0, "{}", sim.metrics.summary());
+        // handoff completeness: everything the retiree still holds is
+        // causally covered by what the members hold
+        let retiree_keys: Vec<Key> = sim.nodes[1].store.keys().collect();
+        for key in retiree_keys {
+            for v in sim.nodes[1].store.values(key) {
+                let covered = sim.members().iter().any(|&m| {
+                    sim.nodes[m]
+                        .store
+                        .values(key)
+                        .iter()
+                        .any(|s| s.id == v.id || sim.oracle.leq(v.id, s.id))
+                });
+                assert!(covered, "value {} on key {key} was not re-homed", v.id);
+            }
+        }
+        // the newcomer actually serves data
+        assert!(sim.nodes[4].store.key_count() > 0, "joined node got its ranges");
+    }
+
+    #[test]
+    fn decommission_during_crash_drains_on_recovery() {
+        // the decommission fires inside a crash window, so the handoff
+        // cannot run then; the retiree must drain when it recovers —
+        // even after the workload (and its AE ticks) has ended
+        let mut c = cfg(4, 3, 2, 2);
+        c.antientropy.period_us = 0; // only the recovery drain can re-home
+        let mut sim = Sim::new(DvvMech, c, 1, true, small_workload(1, 5), 29).unwrap();
+        // seed node 1 with a value no other node holds
+        let k = 7u64;
+        let (_, ctx) = sim.nodes[1].store.read(k);
+        sim.nodes[1].store.write(
+            k,
+            &ctx,
+            Val::new(999, 1),
+            Actor::server(1),
+            &WriteMeta::basic(Actor::client(9)),
+        );
+        sim.schedule_crash(1_000, 1);
+        sim.schedule_decommission(2_000, 1);
+        sim.schedule_recover(3_000_000, 1); // long after the clients retire
+        sim.start();
+        sim.run(u64::MAX);
+        assert!(!sim.members().contains(&1), "decommission applied while crashed");
+        let covered = sim
+            .members()
+            .iter()
+            .any(|&m| sim.nodes[m].store.values(k).iter().any(|v| v.id == 999));
+        assert!(covered, "recovery drain re-homed the stranded value");
+    }
+
+    #[test]
+    fn sim_decommission_respects_the_quorum_floor() {
+        // parity with LocalCluster::decommission_node: a retirement that
+        // would leave fewer members than the quorum needs is refused,
+        // with no epoch bump, so one plan ends in the same membership
+        // in both worlds
+        let mut sim =
+            Sim::new(DvvMech, cfg(3, 3, 2, 2), 2, true, small_workload(2, 10), 37).unwrap();
+        sim.schedule_decommission(1_000, 0); // 3 -> 2 members: allowed
+        sim.schedule_decommission(2_000, 1); // would leave 1 < max(R, W): refused
+        sim.start();
+        sim.run(u64::MAX);
+        assert_eq!(sim.members(), vec![1, 2]);
+        assert_eq!(sim.topology_epoch(), crate::cluster::topology::INITIAL_EPOCH + 1);
+    }
+
+    #[test]
+    fn decommission_of_unknown_or_retired_node_is_ignored() {
+        let mut sim = Sim::new(
+            DvvMech,
+            cfg(3, 2, 1, 1),
+            2,
+            true,
+            small_workload(2, 10),
+            31,
+        )
+        .unwrap();
+        sim.schedule_decommission(1_000, 9); // unknown id
+        sim.schedule_decommission(2_000, 0);
+        sim.schedule_decommission(3_000, 0); // already retired
+        sim.start();
+        sim.run(u64::MAX);
+        assert_eq!(sim.topology_epoch(), crate::cluster::topology::INITIAL_EPOCH + 1);
+        assert_eq!(sim.members(), vec![1, 2]);
     }
 
     #[test]

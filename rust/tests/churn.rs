@@ -1,0 +1,500 @@
+//! Elastic-topology churn correctness: one seeded join/decommission
+//! schedule — layered on top of random chaos — drives the discrete-event
+//! simulator, the threaded `LocalCluster`, and live TCP, and every world
+//! must come out oracle-clean:
+//!
+//! 1. **zero lost updates** — DVVs never destroy a concurrent write,
+//!    churn or not;
+//! 2. **convergence** — after healing, the active members agree on every
+//!    key (a retiree is excluded: it drains, it does not participate);
+//! 3. **complete re-homing** — every value a decommissioned node still
+//!    holds is present on (or causally superseded at) the key's current
+//!    homes: nothing is stranded on a retiree;
+//! 4. a `TcpClient` session keeps serving across topology epoch bumps.
+//!
+//! Plus `Ring`/`Topology` invariant property tests: distinct preference
+//! lists, bounded key movement on join, epoch monotonicity.
+//!
+//! The default gate runs fixed seeds; `CHURN_ITERS=<n>` appends `n`
+//! derived seeds so local runs can soak (`CHURN_ITERS=20 rust/ci.sh`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use dvvstore::antientropy::diff_pairs;
+use dvvstore::api::{drive_workload, key_name, KvClient, LocalClient, TcpClient};
+use dvvstore::clocks::Actor;
+use dvvstore::cluster::topology::INITIAL_EPOCH;
+use dvvstore::cluster::{NodeId, Ring, Topology};
+use dvvstore::config::StoreConfig;
+use dvvstore::kernel::mechs::DvvMech;
+use dvvstore::oracle::SharedOracle;
+use dvvstore::server::tcp::Server;
+use dvvstore::server::LocalCluster;
+use dvvstore::sim::failure::{Fault, FaultPlan};
+use dvvstore::sim::Sim;
+use dvvstore::store::{Key, ShardedBackend, StorageBackend};
+use dvvstore::testkit::Rng;
+use dvvstore::workload::{RandomWorkload, WorkloadSpec};
+
+const BASE_NODES: usize = 5;
+const KEYS: u64 = 8;
+const CLIENTS: u32 = 4;
+const HORIZON_US: u64 = 400_000;
+
+/// Fixed seeds in the default gate, plus `CHURN_ITERS` derived extras.
+fn seeds() -> Vec<u64> {
+    let mut seeds = vec![404, 505, 606];
+    let iters: u64 = std::env::var("CHURN_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut rng = Rng::new(0xC4_4194);
+    for _ in 0..iters {
+        seeds.push(rng.next_u64() >> 16);
+    }
+    seeds
+}
+
+/// The decommission victim a plan names (there is exactly one).
+fn victim_of(plan: &FaultPlan) -> NodeId {
+    plan.faults
+        .iter()
+        .find_map(|f| match f {
+            Fault::Decommission { node, .. } => Some(*node),
+            _ => None,
+        })
+        .expect("plan has a decommission")
+}
+
+/// Assert that everything `retiree` still holds is present on — or
+/// causally superseded at — the key's current homes.
+fn assert_rehomed<B: StorageBackend<DvvMech>>(
+    cluster: &LocalCluster<B>,
+    oracle: &SharedOracle,
+    retiree: NodeId,
+    tag: &str,
+) {
+    let node = cluster.node(retiree);
+    let keys: Vec<Key> = node.store().keys().collect();
+    let n = cluster.quorum().n;
+    for k in keys {
+        let homes = cluster.topology().replicas_for(k, n);
+        for v in node.store().values(k) {
+            let covered = homes.iter().any(|&h| {
+                cluster
+                    .node(h)
+                    .store()
+                    .values(k)
+                    .iter()
+                    .any(|s| s.id == v.id || oracle.with_inner(|o| o.leq(v.id, s.id)))
+            });
+            assert!(covered, "{tag}: value {} on key {k} stranded on retiree {retiree}", v.id);
+        }
+    }
+}
+
+/// Heal, quiesce anti-entropy, and assert pairwise member convergence,
+/// hint drainage, and the oracle's zero-lost-updates verdict.
+fn heal_and_audit<B: StorageBackend<DvvMech>>(
+    cluster: &LocalCluster<B>,
+    oracle: &SharedOracle,
+    tag: &str,
+) {
+    cluster.fabric().heal_all();
+    let mut rounds = 0;
+    while cluster.anti_entropy_round() > 0 {
+        rounds += 1;
+        assert!(rounds < 32, "{tag}: anti-entropy failed to quiesce");
+    }
+    assert_eq!(cluster.pending_hints(), 0, "{tag}: hints not drained");
+    let members = cluster.members();
+    for (ai, &a) in members.iter().enumerate() {
+        for &b in members.iter().skip(ai + 1) {
+            let diverged = diff_pairs(cluster.node(a).store(), cluster.node(b).store());
+            assert!(
+                diverged.is_empty(),
+                "{tag}: members {a}/{b} diverged on {} keys",
+                diverged.len()
+            );
+        }
+    }
+    let verdict = oracle.verdict();
+    assert!(verdict.tracked > 0, "{tag}: no writes registered");
+    assert_eq!(verdict.unaudited_drops, 0, "{tag}: untraced writes leaked in");
+    assert_eq!(
+        verdict.lost_updates, 0,
+        "{tag}: {} lost updates ({} correct supersessions)",
+        verdict.lost_updates, verdict.correct_supersessions
+    );
+}
+
+// -------------------------------------------------------------------
+// churn under full random chaos, threaded world, real concurrency
+// -------------------------------------------------------------------
+
+/// One churn-chaos run: random crash/partition/degrade windows *plus* a
+/// join and a decommission, stepped against the threaded cluster while
+/// client threads hammer session-tracked quorum ops.
+fn churn_chaos_run(seed: u64) {
+    let cluster =
+        LocalCluster::with_backends(BASE_NODES, 3, 2, 2, |_| ShardedBackend::with_shards(8))
+            .unwrap();
+    let oracle = Arc::new(SharedOracle::new());
+    cluster.attach_oracle(Arc::clone(&oracle));
+    cluster.fabric().reseed(seed ^ 0xE1A5);
+    let cluster = Arc::new(cluster);
+
+    let mut rng = Rng::new(seed);
+    let plan = FaultPlan::random_chaos(BASE_NODES, HORIZON_US, &mut rng)
+        .random_churn(BASE_NODES, 1, HORIZON_US, &mut rng);
+    let victim = victim_of(&plan);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for t in 0..CLIENTS {
+        let cluster = Arc::clone(&cluster);
+        let stop = Arc::clone(&stop);
+        workers.push(std::thread::spawn(move || {
+            let me = Actor::client(t);
+            let mut rng = Rng::new(seed.wrapping_mul(0x9E37).wrapping_add(u64::from(t)));
+            let mut sessions: Vec<Option<(Vec<u8>, Vec<u64>)>> = vec![None; KEYS as usize];
+            let mut ok_ops = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let ki = rng.below(KEYS) as usize;
+                let key = format!("churn-{ki}");
+                let outcome = if rng.chance(0.5) {
+                    cluster.get(&key).map(|ans| {
+                        sessions[ki] = Some((ans.context, ans.ids));
+                    })
+                } else {
+                    let (ctx, observed) = sessions[ki].clone().unwrap_or_default();
+                    let body = format!("c{t}-{ok_ops}").into_bytes();
+                    cluster.put_traced(&key, body, &ctx, me, &observed).map(|_| ())
+                };
+                // ops may fail under active faults; that is the exercise
+                if outcome.is_ok() {
+                    ok_ops += 1;
+                }
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            ok_ops
+        }));
+    }
+
+    // step the schedule's virtual clock — including the membership
+    // events — while the workers run
+    const STEPS: u64 = 50;
+    for step in 1..=STEPS {
+        cluster.advance_plan(&plan, HORIZON_US * step / STEPS);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let total_ok: u64 = workers.into_iter().map(|w| w.join().unwrap()).sum();
+    assert!(total_ok > 0, "seed {seed}: no operation ever succeeded");
+
+    // the whole schedule fired: one join, one decommission
+    assert_eq!(cluster.node_count(), BASE_NODES + 1, "seed {seed}: join fired");
+    assert_eq!(cluster.member_count(), BASE_NODES, "seed {seed}: decommission fired");
+    assert_eq!(cluster.epoch(), INITIAL_EPOCH + 2, "seed {seed}: two epoch bumps");
+    assert!(!cluster.members().contains(&victim), "seed {seed}");
+
+    heal_and_audit(&cluster, &oracle, &format!("seed {seed}"));
+    assert_rehomed(&cluster, &oracle, victim, &format!("seed {seed}"));
+}
+
+#[test]
+fn churn_chaos_converges_without_lost_updates() {
+    for seed in seeds() {
+        churn_chaos_run(seed);
+    }
+}
+
+// -------------------------------------------------------------------
+// one churn plan, three worlds (acceptance criterion)
+// -------------------------------------------------------------------
+
+const SEED: u64 = 6161;
+const WORKLOAD_OPS: u64 = 40;
+
+fn spec() -> WorkloadSpec {
+    WorkloadSpec {
+        keys: KEYS,
+        zipf_theta: 0.9,
+        put_fraction: 0.5,
+        read_before_write: 0.5,
+        mean_think_us: 300.0,
+        ops_per_client: WORKLOAD_OPS,
+        value_len: 24,
+    }
+}
+
+/// Churn plus crash-free chaos: partitions and degradation only, so the
+/// DES permanent-loss audit stays exact (a client→coordinator hop is
+/// never refused in the simulator; with crashes an issued write can land
+/// nowhere, which is a different property than churn safety).
+fn churn_plan() -> FaultPlan {
+    let mut rng = Rng::new(SEED ^ 0xC4);
+    FaultPlan::new()
+        .random_partitions(BASE_NODES, 2, 60_000, HORIZON_US, &mut rng)
+        .degrade_window(0.2, 300, 20_000, 150_000)
+        .random_churn(BASE_NODES, 1, HORIZON_US, &mut rng)
+}
+
+#[test]
+fn same_churn_plan_drives_sim_local_and_tcp() {
+    let plan = churn_plan();
+    let victim = victim_of(&plan);
+    let joined = BASE_NODES; // dense ids: the join takes the next slot
+
+    // --- simulator: the plan schedules as DES events --------------
+    let mut cfg = StoreConfig::default();
+    cfg.cluster.nodes = BASE_NODES;
+    cfg.cluster.replication = 3;
+    cfg.cluster.read_quorum = 2;
+    cfg.cluster.write_quorum = 2;
+    cfg.antientropy.period_us = 20_000;
+    let driver = Box::new(RandomWorkload::new(spec(), CLIENTS as usize));
+    let mut sim = Sim::new(DvvMech, cfg, CLIENTS as usize, true, driver, SEED).unwrap();
+    plan.apply(&mut sim);
+    sim.start();
+    sim.run(10_000_000);
+    assert_eq!(sim.topology_epoch(), INITIAL_EPOCH + 2, "sim: two epoch bumps");
+    assert_eq!(sim.nodes.len(), BASE_NODES + 1, "sim: join fired");
+    assert!(!sim.members().contains(&victim), "sim: decommission fired");
+    sim.settle();
+    assert_eq!(sim.metrics.lost_updates, 0, "{}", sim.metrics.summary());
+    assert_eq!(sim.audit_permanently_lost(), 0, "{}", sim.metrics.summary());
+    // sim re-homing: everything the retiree holds is covered on members
+    let retiree_keys: Vec<Key> = sim.nodes[victim].store.keys().collect();
+    for key in retiree_keys {
+        for v in sim.nodes[victim].store.values(key) {
+            let covered = sim.members().iter().any(|&m| {
+                sim.nodes[m]
+                    .store
+                    .values(key)
+                    .iter()
+                    .any(|s| s.id == v.id || sim.oracle.leq(v.id, s.id))
+            });
+            assert!(covered, "sim: value {} on key {key} stranded", v.id);
+        }
+    }
+    assert!(sim.nodes[joined].store.key_count() > 0, "sim: joined node serves data");
+
+    // --- threaded cluster + live TCP: the same plan value ----------
+    let expected_ops = u64::from(CLIENTS) * WORKLOAD_OPS;
+    enum Transport {
+        Local,
+        Tcp,
+    }
+    for which in [Transport::Local, Transport::Tcp] {
+        let tag = match which {
+            Transport::Local => "local",
+            Transport::Tcp => "tcp",
+        };
+        let cluster = Arc::new(LocalCluster::new(BASE_NODES, 3, 2, 2).unwrap());
+        let oracle = Arc::new(SharedOracle::new());
+        cluster.attach_oracle(Arc::clone(&oracle));
+        let step = {
+            let cluster = Arc::clone(&cluster);
+            let plan = plan.clone();
+            move |completed: u64| {
+                let t = HORIZON_US.saturating_mul(completed) / expected_ops.max(1);
+                cluster.advance_plan(&plan, t);
+            }
+        };
+        match which {
+            Transport::Local => {
+                let mut clients: Vec<_> = (0..CLIENTS)
+                    .map(|i| LocalClient::new(Arc::clone(&cluster), Actor::client(i)))
+                    .collect();
+                let mut driver = RandomWorkload::new(spec(), CLIENTS as usize);
+                let report = drive_workload(&mut clients, &mut driver, SEED, step);
+                assert!(report.ok_ops > 0, "{tag}: some ops succeed under churn");
+            }
+            Transport::Tcp => {
+                let server = Server::start("127.0.0.1:0", Arc::clone(&cluster)).unwrap();
+                let mut clients: Vec<_> = (0..CLIENTS)
+                    .map(|i| TcpClient::connect(server.addr(), Actor::client(i)).unwrap())
+                    .collect();
+                let mut driver = RandomWorkload::new(spec(), CLIENTS as usize);
+                let report = drive_workload(&mut clients, &mut driver, SEED, step);
+                assert!(report.ok_ops > 0, "{tag}: some ops succeed under churn");
+                // the acceptance clincher: these sessions opened at epoch
+                // 1 and lived through a join *and* a decommission — the
+                // same connection must keep serving and can observe the
+                // new epoch on demand
+                let view = clients[0].topology().unwrap();
+                assert_eq!(view.epoch, INITIAL_EPOCH + 2, "{tag}: epoch visible");
+                assert_eq!(view.slots, (BASE_NODES + 1) as u64);
+                assert!(!view.members.contains(&(victim as u64)));
+                let reply = clients[0].get(&key_name(0)).unwrap();
+                drop(reply); // any non-error reply proves the session survived
+                for c in clients {
+                    c.quit().unwrap();
+                }
+                server.shutdown();
+            }
+        }
+        assert_eq!(cluster.epoch(), INITIAL_EPOCH + 2, "{tag}: two epoch bumps");
+        assert_eq!(cluster.node_count(), BASE_NODES + 1, "{tag}: join fired");
+        assert!(!cluster.members().contains(&victim), "{tag}: decommission fired");
+        heal_and_audit(&cluster, &oracle, tag);
+        assert_rehomed(&cluster, &oracle, victim, tag);
+    }
+}
+
+// -------------------------------------------------------------------
+// TcpClient keeps a session across an epoch bump (focused)
+// -------------------------------------------------------------------
+
+#[test]
+fn tcp_session_survives_join_and_decommission() {
+    let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&cluster)).unwrap();
+    let mut client = TcpClient::connect(server.addr(), Actor::client(0)).unwrap();
+    let mut admin = TcpClient::connect(server.addr(), Actor::client(99)).unwrap();
+
+    let reply = client.put("stable", b"v1".to_vec(), None).unwrap();
+    assert!(reply.ctx.is_some());
+    assert_eq!(client.seen_epoch(), 0, "no topology observation yet");
+
+    // JOIN over the admin plane: the worker session is untouched
+    let (id, view) = admin.join().unwrap();
+    assert_eq!(id, 3);
+    assert_eq!(view.epoch, INITIAL_EPOCH + 1);
+    assert_eq!(view.members, vec![0, 1, 2, 3]);
+    let got = client.get("stable").unwrap();
+    assert_eq!(got.values, vec![b"v1".to_vec()], "session serves across the bump");
+
+    // DECOMMISSION over the admin plane, mid-session
+    let view = admin.decommission(0).unwrap();
+    assert_eq!(view.epoch, INITIAL_EPOCH + 2);
+    assert_eq!(view.members, vec![1, 2, 3]);
+    assert!(admin.decommission(0).is_err(), "already retired");
+    assert!(admin.decommission(9).is_err(), "unknown id");
+
+    // the worker session still reads and writes, with its causal chain
+    let got = client.get("stable").unwrap();
+    client.put("stable", b"v2".to_vec(), Some(&got.ctx)).unwrap();
+    assert_eq!(client.get("stable").unwrap().values, vec![b"v2".to_vec()]);
+
+    // epoch is discoverable mid-session through STATS and TOPOLOGY
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.4, INITIAL_EPOCH + 2, "epoch travels in STATS");
+    assert_eq!(client.seen_epoch(), INITIAL_EPOCH + 2);
+    assert_eq!(client.topology().unwrap().members, vec![1, 2, 3]);
+
+    client.quit().unwrap();
+    admin.quit().unwrap();
+    server.shutdown();
+}
+
+// -------------------------------------------------------------------
+// Ring / Topology invariant property tests
+// -------------------------------------------------------------------
+
+#[test]
+fn preference_lists_stay_distinct_members_only_under_churn() {
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let topo = Topology::new(4, 64).unwrap();
+        for step in 0..12 {
+            // random walk over membership, keeping at least 2 members
+            if rng.chance(0.5) || topo.member_count() <= 2 {
+                topo.join();
+            } else {
+                let members = topo.members();
+                let pick = members[rng.below(members.len() as u64) as usize];
+                topo.decommission(pick).unwrap();
+            }
+            let members = topo.members();
+            let n = 3.min(members.len());
+            for key in 0..100u64 {
+                let reps = topo.replicas_for(key, 3);
+                assert_eq!(reps.len(), n, "seed {seed} step {step}: list size");
+                let mut sorted = reps.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), n, "seed {seed} step {step}: distinct");
+                for node in reps {
+                    assert!(
+                        members.contains(&node),
+                        "seed {seed} step {step}: non-member {node} routed"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn epoch_monotone_one_bump_per_change() {
+    for seed in seeds() {
+        let mut rng = Rng::new(seed ^ 0xE9);
+        let topo = Topology::new(3, 32).unwrap();
+        let mut last = topo.epoch();
+        assert_eq!(last, INITIAL_EPOCH);
+        for _ in 0..20 {
+            if rng.chance(0.6) || topo.member_count() <= 2 {
+                let (_, epoch) = topo.join();
+                assert_eq!(epoch, last + 1, "seed {seed}: join bumps by one");
+                last = epoch;
+            } else {
+                let members = topo.members();
+                let pick = members[rng.below(members.len() as u64) as usize];
+                let epoch = topo.decommission(pick).unwrap();
+                assert_eq!(epoch, last + 1, "seed {seed}: decommission bumps by one");
+                last = epoch;
+            }
+            assert_eq!(topo.epoch(), last);
+        }
+        // failed changes do not bump
+        assert!(topo.decommission(10_000).is_err());
+        assert_eq!(topo.epoch(), last);
+    }
+}
+
+#[test]
+fn join_moves_a_bounded_key_fraction() {
+    for seed in seeds() {
+        // consistent hashing's point: adding the (n+1)-th node moves
+        // roughly 1/(n+1) of the keys, never a wholesale reshuffle
+        let mut ring = Ring::new(4, 128).unwrap();
+        let sample: Vec<u64> = {
+            let mut rng = Rng::new(seed);
+            (0..2000).map(|_| rng.next_u64()).collect()
+        };
+        let before: Vec<_> = sample.iter().map(|&k| ring.primary_for(k).unwrap()).collect();
+        ring.add_node();
+        let moved = sample
+            .iter()
+            .zip(&before)
+            .filter(|&(&k, &b)| ring.primary_for(k).unwrap() != b)
+            .count();
+        // ideal is 2000/5 = 400; generous slack, but far below "all"
+        assert!(
+            (100..900).contains(&moved),
+            "seed {seed}: moved {moved} of 2000 keys"
+        );
+        // and every moved key moved *to the newcomer*, never between
+        // the old nodes
+        for (&k, &b) in sample.iter().zip(&before) {
+            let now = ring.primary_for(k).unwrap();
+            assert!(now == b || now == 4, "seed {seed}: key {k} moved {b}->{now}");
+        }
+    }
+}
+
+#[test]
+fn topology_replicas_into_matches_allocating_form() {
+    let topo = Topology::new(5, 64).unwrap();
+    topo.join();
+    topo.decommission(2).unwrap();
+    let mut buf = Vec::new();
+    for key in 0..300u64 {
+        topo.replicas_into(key, 3, &mut buf);
+        assert_eq!(buf, topo.replicas_for(key, 3), "key {key}");
+        assert!(!buf.contains(&2), "retired node never routed");
+    }
+}

@@ -52,7 +52,10 @@ fn seeds() -> Vec<u64> {
 
 /// One chaos run: drive a random schedule while client threads do
 /// session-tracked quorum ops, then heal, converge, and audit.
-fn chaos_run<B: StorageBackend<DvvMech>>(seed: u64, make: impl FnMut(usize) -> B) {
+fn chaos_run<B: StorageBackend<DvvMech>>(
+    seed: u64,
+    make: impl FnMut(usize) -> B + Send + 'static,
+) {
     let cluster = LocalCluster::with_backends(NODES, 3, 2, 2, make).unwrap();
     let oracle = Arc::new(SharedOracle::new());
     cluster.attach_oracle(Arc::clone(&oracle));
