@@ -1,0 +1,154 @@
+//! Write-ahead-log bench: append throughput per fsync policy, and
+//! recovery-replay time per log size.
+//!
+//! The append cases measure one full durable write — kernel write +
+//! state encode + framed, checksummed append — through a
+//! `KeyStore<DvvMech, DurableBackend>` under each [`FsyncPolicy`], so
+//! the numbers show exactly what each durability level costs on the
+//! PUT hot path (fsync=always is the real price of a zero-loss window).
+//! The recovery cases time `DurableBackend::open` over a pre-built log,
+//! which is the restart-latency budget of a replica.
+//!
+//! Results also land in `BENCH_wal.json` (path override:
+//! `BENCH_WAL_JSON`); `rust/ci.sh` runs this bench in quick mode and
+//! fails the gate when the artifact is missing.
+//!
+//! Regenerate with `cargo bench --bench wal`.
+
+use std::hint::black_box;
+use std::path::Path;
+
+use dvvstore::bench_support::{Options, Stats, Suite};
+use dvvstore::clocks::Actor;
+use dvvstore::kernel::mechs::DvvMech;
+use dvvstore::kernel::{Val, WriteMeta};
+use dvvstore::store::{DurableBackend, FsyncPolicy, KeyStore, WalOptions};
+use dvvstore::testkit::temp_dir;
+
+type DurableStore = KeyStore<DvvMech, DurableBackend<DvvMech>>;
+
+fn open_store(dir: &Path, fsync: FsyncPolicy) -> DurableStore {
+    let opts = WalOptions { segment_bytes: 4 << 20, fsync };
+    KeyStore::with_backend(DvvMech, DurableBackend::open(dir, 8, opts).unwrap())
+}
+
+fn bench_append(suite: &mut Suite, policy: FsyncPolicy, keys: u64) {
+    let dir = temp_dir("bench-wal-append");
+    let store = open_store(&dir, policy);
+    let meta = WriteMeta::basic(Actor::client(0));
+    let coord = Actor::server(0);
+    let mut i = 0u64;
+    suite.bench(&format!("append/fsync={policy}"), &format!("keys={keys}"), move || {
+        let key = i % keys;
+        let (_, ctx) = store.read(key);
+        store.write(key, &ctx, Val::new(i + 1, 64), coord, &meta);
+        black_box(&store);
+        i += 1;
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn bench_recovery(suite: &mut Suite, records: u64) {
+    // build the log once; informed writes keep one sibling per key, so
+    // the replay cost is the record scan + decode, not sibling blowup
+    let dir = temp_dir("bench-wal-recovery");
+    {
+        let store = open_store(&dir, FsyncPolicy::Never);
+        let meta = WriteMeta::basic(Actor::client(0));
+        for i in 0..records {
+            let key = i % 512;
+            let (_, ctx) = store.read(key);
+            store.write(key, &ctx, Val::new(i + 1, 64), Actor::server(0), &meta);
+        }
+        store.backend().flush().unwrap();
+    }
+    let opts = WalOptions { segment_bytes: 4 << 20, fsync: FsyncPolicy::Never };
+    let log_dir = dir.clone();
+    suite.bench("recovery/replay", &format!("records={records}"), move || {
+        let backend: DurableBackend<DvvMech> =
+            DurableBackend::open(&log_dir, 8, opts).unwrap();
+        black_box(backend.recovery_report().records);
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn json_escape_free(s: &str) -> bool {
+    s.chars().all(|c| c.is_ascii_alphanumeric() || "/_=.-".contains(c))
+}
+
+/// Hand-rolled JSON (no serde in the offline build): flat result rows
+/// plus per-policy appends/sec and the fsync-never : fsync-always cost
+/// ratio.
+fn write_json(path: &str, quick: bool, results: &[Stats]) -> std::io::Result<()> {
+    let mut rows = String::new();
+    for (i, s) in results.iter().enumerate() {
+        assert!(
+            json_escape_free(&s.name) && json_escape_free(&s.param),
+            "bench names are JSON-safe"
+        );
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"name\": \"{}\", \"param\": \"{}\", \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"min_ns\": {:.1}}}",
+            s.name, s.param, s.mean_ns, s.p50_ns, s.p95_ns, s.min_ns
+        ));
+    }
+    let mut rates = String::new();
+    let mut first = true;
+    for s in results.iter().filter(|s| s.name.starts_with("append/")) {
+        if s.mean_ns > 0.0 {
+            if !first {
+                rates.push_str(", ");
+            }
+            first = false;
+            rates.push_str(&format!(
+                "\"{}\": {:.0}",
+                s.name.trim_start_matches("append/"),
+                1e9 / s.mean_ns
+            ));
+        }
+    }
+    let mean_of = |name: &str| {
+        results
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| s.mean_ns)
+            .unwrap_or(0.0)
+    };
+    let always = mean_of("append/fsync=always");
+    let never = mean_of("append/fsync=never");
+    let fsync_cost = if never > 0.0 { always / never } else { 0.0 };
+    let json = format!(
+        "{{\n  \"suite\": \"wal\",\n  \"quick\": {quick},\n  \
+         \"appends_per_sec\": {{{rates}}},\n  \
+         \"fsync_always_cost_over_never\": {fsync_cost:.2},\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    std::fs::write(path, json)
+}
+
+fn main() {
+    let opts = Options::from_args();
+    let quick = opts.quick;
+    let mut suite = Suite::new("wal", opts);
+
+    for policy in [FsyncPolicy::Never, FsyncPolicy::EveryN(64), FsyncPolicy::Always] {
+        // fsync=always in quick mode still converges: the harness
+        // calibrates iterations from wall time, not a fixed count
+        bench_append(&mut suite, policy, 1024);
+    }
+    for records in if quick { vec![2_000] } else { vec![2_000, 50_000] } {
+        bench_recovery(&mut suite, records);
+    }
+
+    let results: Vec<Stats> = suite.results().to_vec();
+    let path =
+        std::env::var("BENCH_WAL_JSON").unwrap_or_else(|_| "BENCH_wal.json".to_string());
+    match write_json(&path, quick, &results) {
+        Ok(()) => eprintln!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+    suite.finish();
+}

@@ -25,6 +25,14 @@ export CHAOS_ITERS="${CHAOS_ITERS:-2}"
 #   CHURN_ITERS=20 rust/ci.sh
 export CHURN_ITERS="${CHURN_ITERS:-2}"
 
+# Durability soak knob, same shape: the WAL recovery fuzz and the
+# crash-with-state-loss chaos tests (rust/tests/wal_recovery.rs,
+# rust/tests/durable_chaos.rs) always run their fixed seeds; WAL_ITERS
+# appends extra derived seeds. Any soak failure prints a uniform
+# "[seeded] ... seed=<s> iter=<i>" line; replay with DVV_SEED=<s>.
+#   WAL_ITERS=20 rust/ci.sh
+export WAL_ITERS="${WAL_ITERS:-2}"
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
@@ -42,17 +50,27 @@ cargo test -q
 echo "==> cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
-# Wire-format perf baseline: a quick (1-iteration-scale) smoke run of
-# the hex-text vs binary-v2 framing bench, emitting BENCH_wire.json at
-# the repo root so subsequent changes can diff against it.
-echo "==> cargo bench --bench wire (smoke run, quick mode)"
-DVV_BENCH_QUICK=1 cargo bench --bench wire
-if [[ -f BENCH_wire.json ]]; then echo "    wrote BENCH_wire.json"; fi
+# Perf-baseline smoke runs. Each bench must emit its BENCH_<name>.json
+# at the repo root; a bench that silently fails to produce its artifact
+# fails the gate (a missing baseline used to pass unnoticed — the `if`
+# only echoed).
+bench_smoke() {
+    local name="$1" artifact="BENCH_$1.json"
+    echo "==> cargo bench --bench $name (smoke run, quick mode)"
+    rm -f "$artifact"
+    DVV_BENCH_QUICK=1 cargo bench --bench "$name"
+    if [[ ! -f "$artifact" ]]; then
+        echo "ERROR: bench '$name' did not emit $artifact" >&2
+        exit 1
+    fi
+    echo "    wrote $artifact"
+}
 
-# Routing perf baseline: preference-list lookup (alloc vs buffered) and
-# churn rebalance throughput, emitting BENCH_ring.json at the repo root.
-echo "==> cargo bench --bench ring (smoke run, quick mode)"
-DVV_BENCH_QUICK=1 cargo bench --bench ring
-if [[ -f BENCH_ring.json ]]; then echo "    wrote BENCH_ring.json"; fi
+# wire: hex-text vs binary-v2 framing on the PUT/GET hot path.
+bench_smoke wire
+# ring: preference-list lookup (alloc vs buffered) + churn rebalance.
+bench_smoke ring
+# wal: append throughput per fsync policy + recovery replay time.
+bench_smoke wal
 
 echo "ci OK"

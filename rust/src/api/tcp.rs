@@ -73,8 +73,9 @@ impl TcpClient {
         protocol::read_frame(&mut self.reader)
     }
 
-    /// Run a `FAULT`/`HEAL` admin command (text form) over the binary
-    /// connection — chaos-engineering a live server.
+    /// Run a `FAULT`/`HEAL`/`RESTART`/`WIPE` admin command (text form)
+    /// over the binary connection — chaos-engineering a live server,
+    /// state loss included.
     pub fn admin(&mut self, line: &str) -> Result<()> {
         match self.roundtrip(&BinRequest::Admin { line: line.to_string() })? {
             (protocol::OP_OK, _) => Ok(()),
@@ -83,8 +84,8 @@ impl TcpClient {
     }
 
     /// Server statistics:
-    /// `(nodes, shards, metadata_bytes, hints, epoch)`.
-    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64, u64)> {
+    /// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes)`.
+    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64, u64, u64)> {
         match self.roundtrip(&BinRequest::Stats)? {
             (protocol::OP_STATS_REPLY, payload) => {
                 let stats = protocol::decode_stats_reply(&payload)?;

@@ -148,6 +148,36 @@ impl<V: Clone + fmt::Debug> DvvSet<V> {
         self.entries.retain(|e| e.n > 0);
     }
 
+    /// The per-actor columns `(actor, n, live values)` in ascending actor
+    /// order — the raw representation a state codec serializes
+    /// ([`crate::kernel::DurableMechanism`]).
+    pub fn columns(&self) -> impl Iterator<Item = (Actor, u64, &[V])> {
+        self.entries.iter().map(|e| (e.actor, e.n, e.vals.as_slice()))
+    }
+
+    /// Append one column during decode. Columns must arrive in strictly
+    /// ascending actor order with `n >= vals.len()` and `n > 0` (the
+    /// invariants [`columns`](DvvSet::columns) emits); anything else is a
+    /// corrupt encoding and errors instead of building an invalid set.
+    pub fn push_column(&mut self, actor: Actor, n: u64, vals: Vec<V>) -> crate::Result<()> {
+        if n == 0 || (vals.len() as u64) > n {
+            return Err(crate::Error::Codec(format!(
+                "dvvset column for {actor}: n={n} cannot cover {} values",
+                vals.len()
+            )));
+        }
+        if let Some(last) = self.entries.last() {
+            if last.actor >= actor {
+                return Err(crate::Error::Codec(format!(
+                    "dvvset columns out of order: {} then {actor}",
+                    last.actor
+                )));
+            }
+        }
+        self.entries.push(Entry { actor, n, vals });
+        Ok(())
+    }
+
     /// Encoded metadata size: per-actor id + counter + per-value 1-byte
     /// liveness marker (values themselves excluded — metadata only).
     pub fn metadata_bytes(&self) -> usize {

@@ -80,7 +80,11 @@ pub fn encode_vv(vv: &VersionVector, buf: &mut Vec<u8>) {
 /// Decode a version vector.
 pub fn decode_vv(buf: &[u8], pos: &mut usize) -> Result<VersionVector> {
     let count = get_varint(buf, pos)?;
-    let mut pairs = Vec::with_capacity(count as usize);
+    // cap the pre-allocation by what the remaining bytes could possibly
+    // hold (2 bytes minimum per entry): a hostile count must run into
+    // the truncation error, never pick an allocation size
+    let cap = (count as usize).min(buf.len().saturating_sub(*pos) / 2);
+    let mut pairs = Vec::with_capacity(cap);
     for _ in 0..count {
         let a = get_varint(buf, pos)? as u32;
         let n = get_varint(buf, pos)?;

@@ -302,6 +302,21 @@ impl Default for AntiEntropyConfig {
     }
 }
 
+/// Durability model for the discrete-event simulator: the DES analogue
+/// of the threaded cluster's write-ahead log + fsync policy
+/// ([`crate::store::wal`]). Each simulated node keeps a logical WAL of
+/// its mutations with a **persisted prefix**; a `Fault::Restart` rolls
+/// the node back to that prefix (crash loss), a `Fault::Wipe` clears it
+/// entirely.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DurabilityConfig {
+    /// Advance the persisted prefix every this many mutations — the DES
+    /// mirror of `FsyncPolicy::EveryN` (1 ≙ `Always`). `0` disables the
+    /// model: nodes are volatile and a restart loses everything, exactly
+    /// like the in-memory backends in the threaded world.
+    pub flush_every_ops: u64,
+}
+
 /// Top-level store configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StoreConfig {
@@ -311,6 +326,8 @@ pub struct StoreConfig {
     pub net: NetConfig,
     /// Anti-entropy section.
     pub antientropy: AntiEntropyConfig,
+    /// DES durability-model section.
+    pub durability: DurabilityConfig,
 }
 
 impl StoreConfig {
@@ -343,6 +360,17 @@ impl StoreConfig {
                     "antientropy.xla_batch_threshold",
                     d.antientropy.xla_batch_threshold as i64,
                 )? as usize,
+            },
+            durability: DurabilityConfig {
+                // checked conversion: a negative value must be rejected,
+                // not wrapped into a cadence that never flushes
+                flush_every_ops: u64::try_from(raw.int(
+                    "durability.flush_every_ops",
+                    d.durability.flush_every_ops as i64,
+                )?)
+                .map_err(|_| {
+                    Error::Config("durability.flush_every_ops must be >= 0".into())
+                })?,
             },
         };
         cfg.validate()?;
@@ -396,6 +424,14 @@ drop_prob = 0.01
 [antientropy]
 period_us = 100000
 "#;
+
+    #[test]
+    fn negative_flush_cadence_is_rejected_not_wrapped() {
+        let raw = Raw::parse("[durability]\nflush_every_ops = -1\n").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+        let raw = Raw::parse("[durability]\nflush_every_ops = 8\n").unwrap();
+        assert_eq!(StoreConfig::from_raw(&raw).unwrap().durability.flush_every_ops, 8);
+    }
 
     #[test]
     fn parses_sections_and_scalars() {

@@ -104,6 +104,46 @@ pub trait Mechanism: Clone + Send + Sync + 'static {
     fn context_bytes(&self, ctx: &Self::Context) -> usize;
 }
 
+/// A [`Mechanism`] whose per-key state has a byte codec — what the
+/// write-ahead-logged storage backend ([`crate::store::DurableBackend`])
+/// needs to persist states and replay them on recovery.
+///
+/// The codec contract mirrors [`crate::clocks::encoding`]: encodings are
+/// self-delimiting (decode knows where the state ends), and decoding
+/// untrusted bytes must error — never panic — on truncation or
+/// out-of-range fields, because recovery feeds it whatever survived a
+/// crash. `decode(encode(st)) == st` for every reachable state, and the
+/// functions are associated (no `&self`): mechanisms are stateless unit
+/// structs, so a backend can run the codec without holding an instance.
+///
+/// Every in-tree mechanism implements this (each in its own module, next
+/// to its `Mechanism` impl), so any of the paper's §3 baselines and the
+/// §5 contribution can run durably.
+pub trait DurableMechanism: Mechanism {
+    /// Append the state's encoding to `buf`.
+    fn encode_state(st: &Self::State, buf: &mut Vec<u8>);
+
+    /// Decode one state starting at `pos`, advancing it past the
+    /// encoding. Errors on any malformed input.
+    fn decode_state(buf: &[u8], pos: &mut usize) -> crate::Result<Self::State>;
+}
+
+/// Append a [`Val`]'s encoding (varint id + varint len) — the shared
+/// piece of every [`DurableMechanism`] state codec.
+pub fn encode_val(val: &Val, buf: &mut Vec<u8>) {
+    crate::clocks::encoding::put_varint(buf, val.id);
+    crate::clocks::encoding::put_varint(buf, u64::from(val.len));
+}
+
+/// Decode a [`Val`] (see [`encode_val`]).
+pub fn decode_val(buf: &[u8], pos: &mut usize) -> crate::Result<Val> {
+    let id = crate::clocks::encoding::get_varint(buf, pos)?;
+    let len = crate::clocks::encoding::get_varint(buf, pos)?;
+    let len = u32::try_from(len)
+        .map_err(|_| crate::Error::Codec(format!("val len {len} out of range")))?;
+    Ok(Val::new(id, len))
+}
+
 /// Runtime-selectable mechanism kind (string names in config/CLI).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MechKind {

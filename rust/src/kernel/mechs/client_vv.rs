@@ -7,9 +7,10 @@
 //! in the received context and all vectors at the server"), which loses
 //! updates when a client switches servers (Figure 4).
 
+use crate::clocks::encoding::{decode_vv, encode_vv, get_varint, put_varint};
 use crate::clocks::vv::VersionVector;
 use crate::clocks::{Actor, LogicalClock};
-use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+use crate::kernel::mechanism::{decode_val, encode_val, DurableMechanism, Mechanism, Val, WriteMeta};
 use crate::kernel::ops;
 
 /// See module docs. Vectors are indexed by *client* actors.
@@ -69,6 +70,27 @@ impl Mechanism for ClientVvMech {
 
     fn context_bytes(&self, ctx: &Self::Context) -> usize {
         ctx.encoded_size()
+    }
+}
+
+impl DurableMechanism for ClientVvMech {
+    fn encode_state(st: &Self::State, buf: &mut Vec<u8>) {
+        put_varint(buf, st.len() as u64);
+        for (vv, v) in st {
+            encode_vv(vv, buf);
+            encode_val(v, buf);
+        }
+    }
+
+    fn decode_state(buf: &[u8], pos: &mut usize) -> crate::Result<Self::State> {
+        let count = get_varint(buf, pos)?;
+        let mut st = Vec::new();
+        for _ in 0..count {
+            let vv = decode_vv(buf, pos)?;
+            let v = decode_val(buf, pos)?;
+            st.push((vv, v));
+        }
+        Ok(st)
     }
 }
 
@@ -161,6 +183,19 @@ mod tests {
         m.write(&mut st, &empty, Val::new(1, 0), rb(), &stateful(c(0), 1));
         m.write(&mut st, &empty, Val::new(2, 0), rb(), &stateful(c(1), 1));
         assert_eq!(st.len(), 2, "both siblings kept");
+    }
+
+    #[test]
+    fn state_codec_roundtrips() {
+        let st = vec![
+            (vv(&[(c(0), 1), (c(2), 1)]), Val::new(4, 2)),
+            (vv(&[(c(1), 1)]), Val::new(9, 0)),
+        ];
+        let mut buf = Vec::new();
+        ClientVvMech::encode_state(&st, &mut buf);
+        let mut pos = 0;
+        assert_eq!(ClientVvMech::decode_state(&buf, &mut pos).unwrap(), st);
+        assert_eq!(pos, buf.len());
     }
 
     #[test]

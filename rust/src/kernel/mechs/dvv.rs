@@ -11,9 +11,10 @@
 //! causality with one entry per replica server plus a single dot.
 
 use crate::clocks::dvv::Dvv;
+use crate::clocks::encoding::{decode_dvv, encode_dvv, get_varint, put_varint};
 use crate::clocks::vv::VersionVector;
 use crate::clocks::{Actor, LogicalClock};
-use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+use crate::kernel::mechanism::{decode_val, encode_val, DurableMechanism, Mechanism, Val, WriteMeta};
 use crate::kernel::ops;
 
 /// See module docs.
@@ -67,6 +68,27 @@ impl Mechanism for DvvMech {
 
     fn context_bytes(&self, ctx: &Self::Context) -> usize {
         ctx.encoded_size()
+    }
+}
+
+impl DurableMechanism for DvvMech {
+    fn encode_state(st: &Self::State, buf: &mut Vec<u8>) {
+        put_varint(buf, st.len() as u64);
+        for (d, v) in st {
+            encode_dvv(d, buf);
+            encode_val(v, buf);
+        }
+    }
+
+    fn decode_state(buf: &[u8], pos: &mut usize) -> crate::Result<Self::State> {
+        let count = get_varint(buf, pos)?;
+        let mut st = Vec::new();
+        for _ in 0..count {
+            let d = decode_dvv(buf, pos)?;
+            let v = decode_val(buf, pos)?;
+            st.push((d, v));
+        }
+        Ok(st)
     }
 }
 
@@ -187,6 +209,29 @@ mod tests {
         }
         assert_eq!(st.len(), 1);
         assert!(m.metadata_bytes(&st) < 24, "got {}", m.metadata_bytes(&st));
+    }
+
+    #[test]
+    fn state_codec_roundtrips_and_rejects_truncation() {
+        let m = DvvMech;
+        let mut st: <DvvMech as Mechanism>::State = Vec::new();
+        let empty = VersionVector::new();
+        m.write(&mut st, &empty, Val::new(1, 4), ra(), &WriteMeta::basic(c(0)));
+        m.write(&mut st, &empty, Val::new(2, 9), rb(), &WriteMeta::basic(c(1)));
+        for state in [Vec::new(), st] {
+            let mut buf = Vec::new();
+            DvvMech::encode_state(&state, &mut buf);
+            let mut pos = 0;
+            assert_eq!(DvvMech::decode_state(&buf, &mut pos).unwrap(), state);
+            assert_eq!(pos, buf.len());
+            for cut in 0..buf.len() {
+                let mut p = 0;
+                assert!(
+                    DvvMech::decode_state(&buf[..cut], &mut p).is_err(),
+                    "prefix {cut} decoded"
+                );
+            }
+        }
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! and a per-key counter recovered from the stored state.
 
 use crate::clocks::causal_history::CausalHistory;
+use crate::clocks::encoding::{decode_history, encode_history, get_varint, put_varint};
 use crate::clocks::{Actor, Event, LogicalClock};
-use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+use crate::kernel::mechanism::{decode_val, encode_val, DurableMechanism, Mechanism, Val, WriteMeta};
 use crate::kernel::ops;
 
 /// See module docs.
@@ -59,6 +60,27 @@ impl Mechanism for HistoryMech {
 
     fn context_bytes(&self, ctx: &Self::Context) -> usize {
         ctx.encoded_size()
+    }
+}
+
+impl DurableMechanism for HistoryMech {
+    fn encode_state(st: &Self::State, buf: &mut Vec<u8>) {
+        put_varint(buf, st.len() as u64);
+        for (h, v) in st {
+            encode_history(h, buf);
+            encode_val(v, buf);
+        }
+    }
+
+    fn decode_state(buf: &[u8], pos: &mut usize) -> crate::Result<Self::State> {
+        let count = get_varint(buf, pos)?;
+        let mut st = Vec::new();
+        for _ in 0..count {
+            let h = decode_history(buf, pos)?;
+            let v = decode_val(buf, pos)?;
+            st.push((h, v));
+        }
+        Ok(st)
     }
 }
 
@@ -139,6 +161,19 @@ mod tests {
         m.write(&mut st, &ctx, Val::new(3, 0), ra(), &meta);
         assert_eq!(st.len(), 1);
         assert_eq!(st[0].0.max_seq(ra()), 3);
+    }
+
+    #[test]
+    fn state_codec_roundtrips() {
+        let st = vec![
+            (hist(&[(ra(), 1), (ra(), 2)]), Val::new(4, 3)),
+            (hist(&[(rb(), 1)]), Val::new(1, 0)),
+        ];
+        let mut buf = Vec::new();
+        HistoryMech::encode_state(&st, &mut buf);
+        let mut pos = 0;
+        assert_eq!(HistoryMech::decode_state(&buf, &mut pos).unwrap(), st);
+        assert_eq!(pos, buf.len());
     }
 
     #[test]

@@ -5,9 +5,10 @@
 //! events". The context carries the highest counter the client has
 //! observed so the order stays causally compliant.
 
+use crate::clocks::encoding::{decode_lamport, encode_lamport};
 use crate::clocks::lamport::LamportClock;
 use crate::clocks::{Actor, LogicalClock};
-use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+use crate::kernel::mechanism::{decode_val, encode_val, DurableMechanism, Mechanism, Val, WriteMeta};
 
 /// See module docs.
 #[derive(Debug, Clone, Copy, Default)]
@@ -64,6 +65,35 @@ impl Mechanism for LamportMech {
     }
 }
 
+impl DurableMechanism for LamportMech {
+    fn encode_state(st: &Self::State, buf: &mut Vec<u8>) {
+        match st {
+            None => buf.push(0),
+            Some((clock, val)) => {
+                buf.push(1);
+                encode_lamport(clock, buf);
+                encode_val(val, buf);
+            }
+        }
+    }
+
+    fn decode_state(buf: &[u8], pos: &mut usize) -> crate::Result<Self::State> {
+        let flag = *buf
+            .get(*pos)
+            .ok_or_else(|| crate::Error::Codec("lamport state: missing flag".into()))?;
+        *pos += 1;
+        match flag {
+            0 => Ok(None),
+            1 => {
+                let clock = decode_lamport(buf, pos)?;
+                let val = decode_val(buf, pos)?;
+                Ok(Some((clock, val)))
+            }
+            other => Err(crate::Error::Codec(format!("lamport state: bad flag {other}"))),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +140,17 @@ mod tests {
         // local counter (1) bumps past the stale context (0)
         assert_eq!(st.as_ref().unwrap().0.counter, 2);
         assert_eq!(m.values(&st), vec![Val::new(2, 0)]);
+    }
+
+    #[test]
+    fn state_codec_roundtrips() {
+        for st in [None, Some((LamportClock::new(42, rb()), Val::new(5, 8)))] {
+            let mut buf = Vec::new();
+            LamportMech::encode_state(&st, &mut buf);
+            let mut pos = 0;
+            assert_eq!(LamportMech::decode_state(&buf, &mut pos).unwrap(), st);
+            assert_eq!(pos, buf.len());
+        }
     }
 
     #[test]

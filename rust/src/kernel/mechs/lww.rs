@@ -5,9 +5,10 @@
 //! writes (Figure 2) and, under clock skew, systematically favours the
 //! fastest clock — both effects measured by E6.
 
+use crate::clocks::encoding::{decode_rt, encode_rt};
 use crate::clocks::realtime::RtClock;
 use crate::clocks::{Actor, LogicalClock};
-use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+use crate::kernel::mechanism::{decode_val, encode_val, DurableMechanism, Mechanism, Val, WriteMeta};
 
 /// See module docs.
 #[derive(Debug, Clone, Copy, Default)]
@@ -57,6 +58,35 @@ impl Mechanism for LwwMech {
 
     fn context_bytes(&self, _ctx: &Self::Context) -> usize {
         0
+    }
+}
+
+impl DurableMechanism for LwwMech {
+    fn encode_state(st: &Self::State, buf: &mut Vec<u8>) {
+        match st {
+            None => buf.push(0),
+            Some((clock, val)) => {
+                buf.push(1);
+                encode_rt(clock, buf);
+                encode_val(val, buf);
+            }
+        }
+    }
+
+    fn decode_state(buf: &[u8], pos: &mut usize) -> crate::Result<Self::State> {
+        let flag = *buf
+            .get(*pos)
+            .ok_or_else(|| crate::Error::Codec("lww state: missing flag".into()))?;
+        *pos += 1;
+        match flag {
+            0 => Ok(None),
+            1 => {
+                let clock = decode_rt(buf, pos)?;
+                let val = decode_val(buf, pos)?;
+                Ok(Some((clock, val)))
+            }
+            other => Err(crate::Error::Codec(format!("lww state: bad flag {other}"))),
+        }
     }
 }
 
@@ -128,6 +158,19 @@ mod tests {
         let snap = ab.clone();
         m.merge(&mut ab, &b);
         assert_eq!(ab, snap);
+    }
+
+    #[test]
+    fn state_codec_roundtrips() {
+        for st in [None, Some((RtClock::new(1234, c(3)), Val::new(7, 12)))] {
+            let mut buf = Vec::new();
+            LwwMech::encode_state(&st, &mut buf);
+            let mut pos = 0;
+            assert_eq!(LwwMech::decode_state(&buf, &mut pos).unwrap(), st);
+            assert_eq!(pos, buf.len());
+        }
+        let mut pos = 0;
+        assert!(LwwMech::decode_state(&[9], &mut pos).is_err(), "bad flag");
     }
 
     #[test]

@@ -6,9 +6,10 @@
 //! causal history" and falsely dominates the first (Figure 3). E6
 //! quantifies the resulting lost updates.
 
+use crate::clocks::encoding::{decode_vv, encode_vv, get_varint, put_varint};
 use crate::clocks::vv::VersionVector;
 use crate::clocks::{Actor, LogicalClock};
-use crate::kernel::mechanism::{Mechanism, Val, WriteMeta};
+use crate::kernel::mechanism::{decode_val, encode_val, DurableMechanism, Mechanism, Val, WriteMeta};
 use crate::kernel::ops;
 
 /// See module docs.
@@ -64,6 +65,27 @@ impl Mechanism for ServerVvMech {
 
     fn context_bytes(&self, ctx: &Self::Context) -> usize {
         ctx.encoded_size()
+    }
+}
+
+impl DurableMechanism for ServerVvMech {
+    fn encode_state(st: &Self::State, buf: &mut Vec<u8>) {
+        put_varint(buf, st.len() as u64);
+        for (vv, v) in st {
+            encode_vv(vv, buf);
+            encode_val(v, buf);
+        }
+    }
+
+    fn decode_state(buf: &[u8], pos: &mut usize) -> crate::Result<Self::State> {
+        let count = get_varint(buf, pos)?;
+        let mut st = Vec::new();
+        for _ in 0..count {
+            let vv = decode_vv(buf, pos)?;
+            let v = decode_val(buf, pos)?;
+            st.push((vv, v));
+        }
+        Ok(st)
     }
 }
 
@@ -152,6 +174,21 @@ mod tests {
         // every blind write bumps b's counter; only the last survives
         assert_eq!(st.len(), 1);
         assert_eq!(st[0].0.get(rb()), 5);
+    }
+
+    #[test]
+    fn state_codec_roundtrips() {
+        let st = vec![
+            (vv(&[(ra(), 2)]), Val::new(4, 1)),
+            (vv(&[(rb(), 2), (ra(), 1)]), Val::new(3, 0)),
+        ];
+        let mut buf = Vec::new();
+        ServerVvMech::encode_state(&st, &mut buf);
+        let mut pos = 0;
+        assert_eq!(ServerVvMech::decode_state(&buf, &mut pos).unwrap(), st);
+        assert_eq!(pos, buf.len());
+        let mut p = 0;
+        assert!(ServerVvMech::decode_state(&buf[..buf.len() - 1], &mut p).is_err());
     }
 
     #[test]

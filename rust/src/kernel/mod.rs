@@ -8,6 +8,6 @@ pub mod mechanism;
 pub mod mechs;
 pub mod ops;
 
-pub use mechanism::{MechKind, Mechanism, Val, WriteMeta};
+pub use mechanism::{decode_val, encode_val, DurableMechanism, MechKind, Mechanism, Val, WriteMeta};
 pub use mechs::{dispatch, MechVisitor};
 pub use ops::{insert_version, pairwise_concurrent, sync_into, sync_sets};

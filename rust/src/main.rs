@@ -4,7 +4,7 @@
 //! ```text
 //! dvv-store figures [--fig 7|all]
 //! dvv-store sim [--mechanism dvv|all] [--nodes 6] [--replication 3] ...
-//! dvv-store serve [--addr 127.0.0.1:7700] [--nodes 3] ...
+//! dvv-store serve [--addr 127.0.0.1:7700] [--nodes 3] [--data-dir DIR] ...
 //! ```
 
 use std::sync::Arc;
@@ -16,6 +16,7 @@ use dvvstore::kernel::mechs::{dispatch, MechVisitor};
 use dvvstore::kernel::{MechKind, Mechanism};
 use dvvstore::server::{tcp::Server, LocalCluster};
 use dvvstore::sim::Sim;
+use dvvstore::store::{FsyncPolicy, WalOptions};
 use dvvstore::workload::{RandomWorkload, WorkloadSpec};
 
 fn cli() -> Command {
@@ -49,7 +50,18 @@ fn cli() -> Command {
                 .opt("replication", "3", "replication degree N")
                 .opt("read-quorum", "2", "read quorum R")
                 .opt("write-quorum", "2", "write quorum W")
-                .opt("shards", "64", "lock-striped shards per replica (rounded up to a power of two)"),
+                .opt("shards", "64", "lock-striped shards per replica (rounded up to a power of two)")
+                .opt_optional(
+                    "data-dir",
+                    "root directory for write-ahead-logged durable replicas \
+                     (omit for in-memory nodes)",
+                )
+                .opt(
+                    "fsync",
+                    "64",
+                    "WAL fsync policy: always | never | <n> | every<n> (per n appends)",
+                )
+                .opt("segment-bytes", "1048576", "WAL segment roll threshold (bytes)"),
         )
 }
 
@@ -181,7 +193,35 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
     let w: usize = m.get_parsed("write-quorum")?;
     let shards: usize = m.get_parsed("shards")?;
     let addr = m.get_str("addr");
-    let cluster = Arc::new(LocalCluster::with_shards(nodes, n, r, w, shards)?);
+    match m.get("data-dir") {
+        Some(dir) => {
+            let opts = WalOptions {
+                fsync: FsyncPolicy::parse(m.get_str("fsync"))?,
+                segment_bytes: m.get_parsed("segment-bytes")?,
+            };
+            let cluster =
+                Arc::new(LocalCluster::with_data_dir(nodes, n, r, w, shards, dir, opts)?);
+            println!(
+                "durability: WAL at {dir} (fsync={}, segment={}B, wal_bytes={})",
+                opts.fsync, opts.segment_bytes, cluster.wal_bytes()
+            );
+            run_serve_loop(addr, cluster, nodes, n, r, w)
+        }
+        None => {
+            let cluster = Arc::new(LocalCluster::with_shards(nodes, n, r, w, shards)?);
+            run_serve_loop(addr, cluster, nodes, n, r, w)
+        }
+    }
+}
+
+fn run_serve_loop<B: dvvstore::store::StorageBackend<dvvstore::kernel::mechs::DvvMech>>(
+    addr: &str,
+    cluster: Arc<LocalCluster<B>>,
+    nodes: usize,
+    n: usize,
+    r: usize,
+    w: usize,
+) -> dvvstore::Result<()> {
     let server = Server::start(addr, cluster.clone())?;
     println!(
         "dvv-store serving on {} ({} replicas x {} shards, N={n} R={r} W={w})",
@@ -196,7 +236,8 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
     println!("fallback: text — GET <key> | PUT <key> <value-hex> [ctx-hex] | STATS | QUIT");
     println!(
         "chaos:    FAULT CRASH <node> | FAULT PARTITION <a,b> <c,d> | \
-         FAULT DROP <prob> | FAULT DELAY <us> | HEAL [node]"
+         FAULT DROP <prob> | FAULT DELAY <us> | HEAL [node] | \
+         RESTART <node> | WIPE <node>"
     );
     // serve until killed. Maintenance: drain parked sloppy-quorum hints
     // every second (without this, hints from FAULT windows would

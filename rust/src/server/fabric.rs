@@ -271,6 +271,11 @@ impl Fabric {
             }
             Fault::Join { .. } => self.grow_to(self.node_count() + 1),
             Fault::Decommission { .. } => {}
+            // state loss is a *storage* fault, not a link fault: the
+            // cluster applies it to the node's backend in `advance_plan`;
+            // links and liveness are untouched (pair with a crash window
+            // to model downtime)
+            Fault::Restart { .. } | Fault::Wipe { .. } => {}
         }
     }
 

@@ -30,7 +30,7 @@
 //! -> PUT <key> <value-hex> [ctx-hex]
 //! <- OK
 //! -> STATS
-//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h> epoch=<e>
+//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h> epoch=<e> wal_bytes=<w>
 //! -> QUIT
 //! <- BYE
 //! ```
@@ -46,6 +46,17 @@
 //! -> HEAL <node>                    recover one replica
 //! -> HEAL                           heal everything, drain hints
 //! <- OK
+//! ```
+//!
+//! Durability admin commands drive a replica's storage backend (real
+//! state loss, not just unreachability — see [`crate::store::wal`]):
+//!
+//! ```text
+//! -> RESTART <node>                 crash-restart the node's process;
+//! <- OK replayed=<r> discarded=<b>     unpersisted state is lost and the
+//!                                      WAL replays the persisted prefix
+//! -> WIPE <node>                    destroy the node's state entirely
+//! <- OK                                (peers refill it via anti-entropy)
 //! ```
 //!
 //! Elastic-topology admin commands change membership at runtime (binary
@@ -146,6 +157,17 @@ pub enum Request {
     },
     /// Report the current membership view (epoch, slots, members).
     Topology,
+    /// Crash-restart one replica's process: unpersisted state is lost,
+    /// the WAL replays the persisted prefix (admin).
+    Restart {
+        /// The node to restart.
+        node: usize,
+    },
+    /// Destroy one replica's state entirely, disk included (admin).
+    Wipe {
+        /// The node to wipe.
+        node: usize,
+    },
     /// Close the connection.
     Quit,
 }
@@ -288,6 +310,22 @@ pub fn parse_request(line: &str) -> Result<Request> {
             Ok(Request::Decommission { node })
         }
         "TOPOLOGY" => Ok(Request::Topology),
+        "RESTART" => {
+            let node = parse_node(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("RESTART needs a node".into()))?,
+            )?;
+            Ok(Request::Restart { node })
+        }
+        "WIPE" => {
+            let node = parse_node(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("WIPE needs a node".into()))?,
+            )?;
+            Ok(Request::Wipe { node })
+        }
         "QUIT" => Ok(Request::Quit),
         other => Err(Error::Protocol(format!("unknown command {other:?}"))),
     }
@@ -316,12 +354,13 @@ pub const MAGIC: [u8; 4] = *b"DVV2";
 /// Current binary wire-format version, negotiated in the hello
 /// exchange. Bumped to 3 when the elastic-topology revision extended
 /// [`OP_STATS_REPLY`] with a fifth (epoch) field and added the
-/// membership opcodes: the stats payload decodes strictly
-/// (`expect_end`), so a pre-topology binary would misparse the longer
-/// reply mid-session — version negotiation turns that silent skew into
-/// a clean hello-time rejection. (The `DVV2` magic names the protocol
+/// membership opcodes, and to 4 when the durability revision appended a
+/// sixth (`wal_bytes`) field: the stats payload decodes strictly
+/// (`expect_end`), so an older binary would misparse the longer reply
+/// mid-session — version negotiation turns that silent skew into a
+/// clean hello-time rejection. (The `DVV2` magic names the protocol
 /// family, not this byte.)
-pub const VERSION: u8 = 3;
+pub const VERSION: u8 = 4;
 
 /// Upper bound on a frame's length field (16 MiB). A header promising
 /// more is rejected before any allocation.
@@ -364,7 +403,7 @@ pub const OP_PUT_OK: u8 = 0x82;
 /// Response opcode: generic success (admin commands). Empty payload.
 pub const OP_OK: u8 = 0x83;
 /// Response opcode: statistics. Payload:
-/// `[nodes][shards][metadata_bytes][hints][epoch]` varints.
+/// `[nodes][shards][metadata_bytes][hints][epoch][wal_bytes]` varints.
 pub const OP_STATS_REPLY: u8 = 0x84;
 /// Response opcode: membership view (answer to [`OP_JOIN`],
 /// [`OP_DECOMMISSION`], and [`OP_TOPOLOGY`]). Payload:
@@ -614,27 +653,30 @@ pub fn encode_stats_reply(
     metadata_bytes: u64,
     hints: u64,
     epoch: u64,
+    wal_bytes: u64,
 ) -> Vec<u8> {
-    let mut p = Vec::with_capacity(20);
+    let mut p = Vec::with_capacity(24);
     put_varint(&mut p, nodes);
     put_varint(&mut p, shards);
     put_varint(&mut p, metadata_bytes);
     put_varint(&mut p, hints);
     put_varint(&mut p, epoch);
+    put_varint(&mut p, wal_bytes);
     p
 }
 
 /// Decode an [`OP_STATS_REPLY`] payload into
-/// `(nodes, shards, metadata_bytes, hints, epoch)`.
-pub fn decode_stats_reply(payload: &[u8]) -> Result<(u64, u64, u64, u64, u64)> {
+/// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes)`.
+pub fn decode_stats_reply(payload: &[u8]) -> Result<(u64, u64, u64, u64, u64, u64)> {
     let mut pos = 0;
     let nodes = get_varint(payload, &mut pos)?;
     let shards = get_varint(payload, &mut pos)?;
     let metadata_bytes = get_varint(payload, &mut pos)?;
     let hints = get_varint(payload, &mut pos)?;
     let epoch = get_varint(payload, &mut pos)?;
+    let wal_bytes = get_varint(payload, &mut pos)?;
     expect_end(payload, pos)?;
-    Ok((nodes, shards, metadata_bytes, hints, epoch))
+    Ok((nodes, shards, metadata_bytes, hints, epoch, wal_bytes))
 }
 
 /// Encode an [`OP_TOPOLOGY_REPLY`] payload:
@@ -748,6 +790,17 @@ mod tests {
         assert_eq!(parse_request("TOPOLOGY").unwrap(), Request::Topology);
         assert!(parse_request("DECOMMISSION").is_err());
         assert!(parse_request("DECOMMISSION x").is_err());
+    }
+
+    #[test]
+    fn parse_durability_admin_commands() {
+        assert_eq!(parse_request("RESTART 1").unwrap(), Request::Restart { node: 1 });
+        assert_eq!(parse_request("restart 1").unwrap(), Request::Restart { node: 1 });
+        assert_eq!(parse_request("WIPE 0").unwrap(), Request::Wipe { node: 0 });
+        assert!(parse_request("RESTART").is_err());
+        assert!(parse_request("RESTART x").is_err());
+        assert!(parse_request("WIPE").is_err());
+        assert!(parse_request("WIPE -1").is_err());
     }
 
     #[test]
@@ -869,8 +922,8 @@ mod tests {
         let p = encode_put_ok(99, &token);
         assert_eq!(decode_put_ok(&p).unwrap(), (99, token));
 
-        let p = encode_stats_reply(3, 64, 12345, 2, 7);
-        assert_eq!(decode_stats_reply(&p).unwrap(), (3, 64, 12345, 2, 7));
+        let p = encode_stats_reply(3, 64, 12345, 2, 7, 4096);
+        assert_eq!(decode_stats_reply(&p).unwrap(), (3, 64, 12345, 2, 7, 4096));
 
         let p = encode_topology_reply(5, 6, &[0, 2, 3, 5]);
         assert_eq!(decode_topology_reply(&p).unwrap(), (5, 6, vec![0, 2, 3, 5]));

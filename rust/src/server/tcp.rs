@@ -16,6 +16,8 @@ use super::LocalCluster;
 use crate::api::CausalCtx;
 use crate::clocks::Actor;
 use crate::error::{Error, Result};
+use crate::kernel::mechs::DvvMech;
+use crate::store::StorageBackend;
 
 /// A running TCP server (owns its listener thread).
 pub struct Server {
@@ -25,8 +27,14 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind `addr` (use port 0 for an ephemeral port) and serve `cluster`.
-    pub fn start(addr: &str, cluster: Arc<LocalCluster>) -> Result<Server> {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve `cluster`
+    /// — any storage backend, in-memory or durable
+    /// (`serve --data-dir` passes a
+    /// [`DurableBackend`](crate::store::DurableBackend)-backed cluster).
+    pub fn start<B: StorageBackend<DvvMech>>(
+        addr: &str,
+        cluster: Arc<LocalCluster<B>>,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -79,7 +87,7 @@ impl Drop for Server {
 }
 
 /// Apply a `FAULT` admin command to the cluster's chaos fabric.
-fn apply_fault(cluster: &LocalCluster, cmd: FaultCmd) -> String {
+fn apply_fault<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>, cmd: FaultCmd) -> String {
     let fabric = cluster.fabric();
     let nodes = cluster.node_count();
     match cmd {
@@ -107,9 +115,31 @@ fn apply_fault(cluster: &LocalCluster, cmd: FaultCmd) -> String {
     }
 }
 
+/// Apply a `RESTART` admin command: crash-restart one replica's storage
+/// (unpersisted state lost, WAL replayed).
+fn apply_restart<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>, node: usize) -> String {
+    if node >= cluster.node_count() {
+        return format!("ERR node {node} out of range\n");
+    }
+    let report = cluster.restart_node(node);
+    format!(
+        "OK replayed={} discarded={}\n",
+        report.records, report.discarded_bytes
+    )
+}
+
+/// Apply a `WIPE` admin command: destroy one replica's state entirely.
+fn apply_wipe<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>, node: usize) -> String {
+    if node >= cluster.node_count() {
+        return format!("ERR node {node} out of range\n");
+    }
+    cluster.wipe_node(node);
+    "OK\n".to_string()
+}
+
 /// Render the membership view as a text-protocol line (one consistent
 /// snapshot — epoch and members cannot straddle a concurrent bump).
-fn topology_line(cluster: &LocalCluster) -> String {
+fn topology_line<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>) -> String {
     let (epoch, slots, members) = cluster.topology().snapshot();
     let members: Vec<String> = members.iter().map(|m| m.to_string()).collect();
     format!("TOPOLOGY epoch={epoch} slots={slots} members={}\n", members.join(","))
@@ -117,7 +147,7 @@ fn topology_line(cluster: &LocalCluster) -> String {
 
 /// Encode the membership view as an [`protocol::OP_TOPOLOGY_REPLY`]
 /// payload (one consistent snapshot).
-fn topology_frame(cluster: &LocalCluster) -> Vec<u8> {
+fn topology_frame<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>) -> Vec<u8> {
     let (epoch, slots, members) = cluster.topology().snapshot();
     let members: Vec<u64> = members.iter().map(|&m| m as u64).collect();
     protocol::encode_topology_reply(epoch, slots as u64, &members)
@@ -125,7 +155,10 @@ fn topology_frame(cluster: &LocalCluster) -> Vec<u8> {
 
 /// Apply a `HEAL` admin command: recover one node, or reset every fault
 /// axis and drain parked hints.
-fn apply_heal(cluster: &LocalCluster, node: Option<usize>) -> String {
+fn apply_heal<B: StorageBackend<DvvMech>>(
+    cluster: &LocalCluster<B>,
+    node: Option<usize>,
+) -> String {
     match node {
         Some(n) if n < cluster.node_count() => {
             cluster.fabric().recover(n);
@@ -211,7 +244,11 @@ fn read_frame_server(
     Ok(Some((body[0], payload)))
 }
 
-fn handle_conn(stream: TcpStream, cluster: &LocalCluster, stop: &AtomicBool) -> Result<()> {
+fn handle_conn<B: StorageBackend<DvvMech>>(
+    stream: TcpStream,
+    cluster: &LocalCluster<B>,
+    stop: &AtomicBool,
+) -> Result<()> {
     // the listener is non-blocking; make sure the accepted stream is not
     // (some platforms propagate O_NONBLOCK to accepted sockets)
     stream.set_nonblocking(false)?;
@@ -239,10 +276,10 @@ fn handle_conn(stream: TcpStream, cluster: &LocalCluster, stop: &AtomicBool) -> 
 
 /// The legacy line-based text protocol. `acc` seeds the input buffer
 /// with whatever the negotiation sniff already consumed.
-fn serve_text(
+fn serve_text<B: StorageBackend<DvvMech>>(
     mut reader: BufReader<TcpStream>,
     mut stream: TcpStream,
-    cluster: &LocalCluster,
+    cluster: &LocalCluster<B>,
     stop: &AtomicBool,
     mut acc: Vec<u8>,
 ) -> Result<()> {
@@ -267,15 +304,18 @@ fn serve_text(
                     }
                 }
                 Ok(Request::Stats) => format!(
-                    "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={}\n",
+                    "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={} wal_bytes={}\n",
                     cluster.node_count(),
                     cluster.shard_count(),
                     cluster.metadata_bytes(),
                     cluster.pending_hints(),
-                    cluster.epoch()
+                    cluster.epoch(),
+                    cluster.wal_bytes()
                 ),
                 Ok(Request::Fault(cmd)) => apply_fault(cluster, cmd),
                 Ok(Request::Heal { node }) => apply_heal(cluster, node),
+                Ok(Request::Restart { node }) => apply_restart(cluster, node),
+                Ok(Request::Wipe { node }) => apply_wipe(cluster, node),
                 Ok(Request::Join) => {
                     let (id, epoch) = cluster.join_node();
                     format!("OK id={id} epoch={epoch}\n")
@@ -313,8 +353,8 @@ fn serve_text(
 
 /// Decode a binary PUT and run it through the traced quorum path: the
 /// frame's actor + ctx token make the write oracle-auditable end to end.
-fn put_binary(
-    cluster: &LocalCluster,
+fn put_binary<B: StorageBackend<DvvMech>>(
+    cluster: &LocalCluster<B>,
     key: &str,
     value: Vec<u8>,
     actor: u32,
@@ -338,10 +378,10 @@ fn admin_status(status: String) -> (u8, Vec<u8>) {
 }
 
 /// The binary protocol v2 loop (the magic preamble is already consumed).
-fn serve_binary(
+fn serve_binary<B: StorageBackend<DvvMech>>(
     mut reader: BufReader<TcpStream>,
     mut stream: TcpStream,
-    cluster: &LocalCluster,
+    cluster: &LocalCluster<B>,
     stop: &AtomicBool,
 ) -> Result<()> {
     // hello tail: requested version + newline terminator
@@ -425,6 +465,7 @@ fn serve_binary(
                     cluster.metadata_bytes(),
                     cluster.pending_hints() as u64,
                     cluster.epoch(),
+                    cluster.wal_bytes(),
                 ),
             ),
             Ok(BinRequest::Join) => {
@@ -451,6 +492,10 @@ fn serve_binary(
             Ok(BinRequest::Admin { line }) => match parse_request(&line) {
                 Ok(Request::Fault(cmd)) => admin_status(apply_fault(cluster, cmd)),
                 Ok(Request::Heal { node }) => admin_status(apply_heal(cluster, node)),
+                // durability faults ride the ADMIN frame in text form —
+                // real storage loss at a live replica, over the wire
+                Ok(Request::Restart { node }) => admin_status(apply_restart(cluster, node)),
+                Ok(Request::Wipe { node }) => admin_status(apply_wipe(cluster, node)),
                 // text-form elastic ops work over ADMIN too; the
                 // dedicated opcodes return the richer topology frame
                 Ok(Request::Join) => {
@@ -468,7 +513,8 @@ fn serve_binary(
                 }
                 Ok(_) => (
                     protocol::OP_ERR,
-                    b"ADMIN accepts FAULT/HEAL/JOIN/DECOMMISSION/TOPOLOGY commands only"
+                    b"ADMIN accepts FAULT/HEAL/JOIN/DECOMMISSION/TOPOLOGY/RESTART/WIPE \
+                      commands only"
                         .to_vec(),
                 ),
                 Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
@@ -584,6 +630,60 @@ mod tests {
         send(&mut w, "DECOMMISSION 9");
         assert!(recv(&mut r).starts_with("ERR "), "unknown node refused");
         server.shutdown();
+    }
+
+    #[test]
+    fn restart_and_wipe_admin_ops_over_text() {
+        let dir = crate::testkit::temp_dir("tcp-restart");
+        let cluster = Arc::new(
+            LocalCluster::with_data_dir(3, 3, 2, 2, 4, &dir, crate::store::WalOptions::default())
+                .unwrap(),
+        );
+        let server = Server::start("127.0.0.1:0", Arc::clone(&cluster)).unwrap();
+        let (mut r, mut w) = client(server.addr());
+        for i in 0..10 {
+            send(&mut w, &format!("PUT k{i} {}", hex_encode(b"v")));
+            assert_eq!(recv(&mut r), "OK");
+        }
+        send(&mut w, "STATS");
+        let stats = recv(&mut r);
+        assert!(stats.contains(" wal_bytes="), "{stats}");
+        let wal_bytes: u64 = stats
+            .rsplit("wal_bytes=")
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(wal_bytes > 0, "{stats}");
+
+        // fsync default is every-64 and nothing was explicitly synced,
+        // so the crash-restart loses node 1's whole unsynced tail; the
+        // wipe empties node 2 outright — only node 0 still holds data
+        send(&mut w, "RESTART 1");
+        let reply = recv(&mut r);
+        assert!(reply.starts_with("OK replayed="), "{reply}");
+        send(&mut w, "WIPE 2");
+        assert_eq!(recv(&mut r), "OK");
+        send(&mut w, "RESTART 99");
+        assert!(recv(&mut r).starts_with("ERR "), "out-of-range refused");
+
+        // rejoin: anti-entropy re-delivers from the surviving replica
+        // (a GET's answer is fixed at the first R replies in preference
+        // order, so without this a key homed on the two emptied nodes
+        // would legitimately answer VALUES 0)
+        let mut rounds = 0;
+        while cluster.anti_entropy_round() > 0 {
+            rounds += 1;
+            assert!(rounds < 32, "anti-entropy failed to quiesce");
+        }
+        for i in 0..10 {
+            send(&mut w, &format!("GET k{i}"));
+            let header = recv(&mut r);
+            assert!(header.starts_with("VALUES 1 "), "{header}");
+            let _ = recv(&mut r);
+        }
+        server.shutdown();
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

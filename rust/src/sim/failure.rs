@@ -66,6 +66,25 @@ pub enum Fault {
         /// Which node.
         node: NodeId,
     },
+    /// Kill and immediately restart a node's **process**: everything its
+    /// storage has not durably persisted is lost; the persisted prefix
+    /// recovers. On a durable backend (or a DES node with a durability
+    /// model) that is the unsynced WAL tail; on a volatile node it is
+    /// everything. Hinted handoff + anti-entropy close the gap.
+    Restart {
+        /// When (simulated µs).
+        at: u64,
+        /// Which node.
+        node: NodeId,
+    },
+    /// Destroy a node's state entirely — disk included. The node stays a
+    /// member and rejoins empty; its peers refill it.
+    Wipe {
+        /// When (simulated µs).
+        at: u64,
+        /// Which node.
+        node: NodeId,
+    },
 }
 
 impl Fault {
@@ -78,7 +97,9 @@ impl Fault {
             | Fault::Heal { at }
             | Fault::Degrade { at, .. }
             | Fault::Join { at }
-            | Fault::Decommission { at, .. } => *at,
+            | Fault::Decommission { at, .. }
+            | Fault::Restart { at, .. }
+            | Fault::Wipe { at, .. } => *at,
         }
     }
 }
@@ -211,6 +232,40 @@ impl FaultPlan {
         self
     }
 
+    /// Crash-restart `node`'s process at `at` (unpersisted state lost).
+    pub fn restart_at(mut self, at: u64, node: NodeId) -> Self {
+        self.faults.push(Fault::Restart { at, node });
+        self
+    }
+
+    /// Wipe `node`'s state (disk included) at `at`.
+    pub fn wipe_at(mut self, at: u64, node: NodeId) -> Self {
+        self.faults.push(Fault::Wipe { at, node });
+        self
+    }
+
+    /// Add **one** state-loss event — a wipe or a crash-restart, on a
+    /// random node, somewhere in the middle half of `[0, horizon_us)`.
+    ///
+    /// Exactly one per plan on purpose: with `W` write-quorum copies, a
+    /// single node's loss is always survivable (the other ackers hold
+    /// the data until anti-entropy re-propagates it). Two loss events
+    /// with no guaranteed anti-entropy round between them could destroy
+    /// every copy of an acknowledged write, which would be a scenario
+    /// bug rather than a store bug — the durability chaos test
+    /// (`rust/tests/durable_chaos.rs`) wants the strongest invariant the
+    /// scenario actually guarantees.
+    pub fn random_loss_event(mut self, nodes: usize, horizon_us: u64, rng: &mut Rng) -> Self {
+        let at = horizon_us / 4 + rng.below((horizon_us / 2).max(1));
+        let node = rng.below(nodes as u64) as usize;
+        self.faults.push(if rng.chance(0.5) {
+            Fault::Wipe { at, node }
+        } else {
+            Fault::Restart { at, node }
+        });
+        self
+    }
+
     /// Random elastic churn: `cycles` join/decommission pairs inside
     /// `[0, horizon_us)`, each in its own disjoint time slot with the
     /// join strictly before the decommission. Victims are distinct nodes
@@ -285,6 +340,8 @@ impl FaultPlan {
                 }
                 Fault::Join { at } => sim.schedule_join(*at),
                 Fault::Decommission { at, node } => sim.schedule_decommission(*at, *node),
+                Fault::Restart { at, node } => sim.schedule_restart(*at, *node),
+                Fault::Wipe { at, node } => sim.schedule_wipe(*at, *node),
             }
         }
     }
@@ -430,6 +487,32 @@ mod tests {
         victims.sort_unstable();
         victims.dedup();
         assert_eq!(victims.len(), 3, "victims are distinct");
+    }
+
+    #[test]
+    fn loss_builders_record_fire_times() {
+        let plan = FaultPlan::new().restart_at(70, 1).wipe_at(120, 2);
+        assert_eq!(plan.faults, vec![
+            Fault::Restart { at: 70, node: 1 },
+            Fault::Wipe { at: 120, node: 2 },
+        ]);
+        assert_eq!(plan.faults.iter().map(Fault::at).collect::<Vec<_>>(), vec![70, 120]);
+    }
+
+    #[test]
+    fn random_loss_event_is_single_and_bounded() {
+        for seed in [1, 2, 3, 4] {
+            let mut rng = Rng::new(seed);
+            let plan = FaultPlan::new().random_loss_event(5, 400_000, &mut rng);
+            assert_eq!(plan.faults.len(), 1, "exactly one loss event");
+            match &plan.faults[0] {
+                Fault::Wipe { at, node } | Fault::Restart { at, node } => {
+                    assert!((100_000..300_000).contains(at), "mid-horizon: {at}");
+                    assert!(*node < 5);
+                }
+                other => panic!("unexpected fault {other:?}"),
+            }
+        }
     }
 
     #[test]

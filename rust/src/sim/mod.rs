@@ -49,6 +49,28 @@ pub struct SimNode<M: Mechanism> {
     /// decommissioned node (`member = false`) keeps draining what it
     /// still holds toward the members, but routes no new traffic.
     pub member: bool,
+    /// The DES durability model's "disk": the last **persisted** state
+    /// per key — what the real backend's WAL replay would rebuild
+    /// (replay is last-record-wins, so keeping only the latest synced
+    /// state per key is exact, in O(keys) instead of O(mutations)).
+    /// Empty (and never written) when `durability.flush_every_ops` is 0.
+    pub synced: HashMap<Key, M::State>,
+    /// Mutations since the last flush, in order — the unsynced WAL tail
+    /// a [`Sim::schedule_restart`] loses. Folded into `synced` every
+    /// `flush_every_ops` mutations, mirroring `FsyncPolicy::EveryN`.
+    pub unsynced: Vec<(Key, M::State)>,
+}
+
+impl<M: Mechanism> SimNode<M> {
+    fn fresh(mech: &M) -> SimNode<M> {
+        SimNode {
+            store: KeyStore::new(mech.clone()),
+            up: true,
+            member: true,
+            synced: HashMap::new(),
+            unsynced: Vec::new(),
+        }
+    }
 }
 
 /// Messages exchanged between nodes.
@@ -88,6 +110,8 @@ enum Ev<M: Mechanism> {
     Degrade { drop_ppm: u32, extra_delay_us: u64 },
     Join,
     Decommission { node: NodeId },
+    Restart { node: NodeId },
+    Wipe { node: NodeId },
 }
 
 struct Queued<M: Mechanism> {
@@ -167,6 +191,11 @@ pub struct Sim<M: Mechanism> {
     next_val: u64,
     /// (key, val_id) of every write issued (final audit).
     written: Vec<(Key, u64)>,
+    /// (key, val_id) of every write **acknowledged** to its client (the
+    /// stronger durability audit: an acked write may never be lost, even
+    /// across restarts with state loss — an unacked one legitimately may
+    /// vanish when every replica that held it loses state).
+    acked: Vec<(Key, u64)>,
     quorum: QuorumSpec,
     /// Clients whose drivers returned `None` (retired).
     retired: usize,
@@ -189,9 +218,7 @@ impl<M: Mechanism> Sim<M> {
         let mut rng = Rng::new(seed);
         let ring = Ring::new(cfg.cluster.nodes, cfg.cluster.vnodes)?;
         let mut net = NetModel::new(cfg.net.clone(), rng.fork());
-        let nodes = (0..cfg.cluster.nodes)
-            .map(|_| SimNode { store: KeyStore::new(mech.clone()), up: true, member: true })
-            .collect();
+        let nodes = (0..cfg.cluster.nodes).map(|_| SimNode::fresh(&mech)).collect();
         let sessions = (0..clients)
             .map(|i| {
                 let skew = net.draw_clock_skew(i);
@@ -222,6 +249,7 @@ impl<M: Mechanism> Sim<M> {
             next_req: 0,
             next_val: 1,
             written: Vec::new(),
+            acked: Vec::new(),
             quorum,
             retired: 0,
             epoch: crate::cluster::topology::INITIAL_EPOCH,
@@ -311,6 +339,19 @@ impl<M: Mechanism> Sim<M> {
     /// Retire `node` at `at`: its ranges re-route and its keys hand off.
     pub fn schedule_decommission(&mut self, at: u64, node: NodeId) {
         self.push(at, Ev::Decommission { node });
+    }
+
+    /// Crash-restart `node`'s process at `at`: the store rolls back to
+    /// the persisted WAL prefix (`durability.flush_every_ops`; with the
+    /// model off, to nothing). The node's `up` flag is untouched — model
+    /// downtime with a surrounding crash window.
+    pub fn schedule_restart(&mut self, at: u64, node: NodeId) {
+        self.push(at, Ev::Restart { node });
+    }
+
+    /// Destroy `node`'s state — logical disk included — at `at`.
+    pub fn schedule_wipe(&mut self, at: u64, node: NodeId) {
+        self.push(at, Ev::Wipe { node });
     }
 
     fn schedule_next_op(&mut self, client: usize, extra_delay: u64) {
@@ -511,6 +552,47 @@ impl<M: Mechanism> Sim<M> {
             }
             Ev::Join => self.on_join(),
             Ev::Decommission { node } => self.on_decommission(node),
+            Ev::Restart { node } => self.on_restart(node),
+            Ev::Wipe { node } => {
+                let n = &mut self.nodes[node];
+                n.store = KeyStore::new(self.mech.clone());
+                n.synced.clear();
+                n.unsynced.clear();
+            }
+        }
+    }
+
+    /// Process death + recovery: drop the unsynced WAL tail, rebuild the
+    /// store from the persisted per-key states (the same last-record-
+    /// wins outcome `DurableBackend`'s replay produces).
+    fn on_restart(&mut self, node: NodeId) {
+        let mech = self.mech.clone();
+        let n = &mut self.nodes[node];
+        n.unsynced.clear();
+        let store = KeyStore::new(mech);
+        for (k, st) in &n.synced {
+            store.merge_key(*k, st);
+        }
+        n.store = store;
+    }
+
+    /// Record `key`'s post-state in the node's logical WAL tail and fold
+    /// the tail into the persisted map every `flush_every_ops` mutations.
+    /// The single funnel for the DES durability model — called by every
+    /// store mutation.
+    fn log_durable(&mut self, node: NodeId, key: Key) {
+        let every = self.cfg.durability.flush_every_ops;
+        if every == 0 {
+            return; // model off: volatile node, zero bookkeeping
+        }
+        let state = self.nodes[node].store.state(key);
+        let n = &mut self.nodes[node];
+        n.unsynced.push((key, state));
+        if n.unsynced.len() >= every as usize {
+            // "fsync": the tail reaches disk, in order (last wins)
+            for (k, st) in n.unsynced.drain(..) {
+                n.synced.insert(k, st);
+            }
         }
     }
 
@@ -525,11 +607,8 @@ impl<M: Mechanism> Sim<M> {
     /// catches whatever a drop roll eats).
     fn on_join(&mut self) {
         let id = self.nodes.len();
-        self.nodes.push(SimNode {
-            store: KeyStore::new(self.mech.clone()),
-            up: true,
-            member: true,
-        });
+        let fresh = SimNode::fresh(&self.mech);
+        self.nodes.push(fresh);
         let rid = self.ring.add_node();
         debug_assert_eq!(rid, id);
         self.epoch += 1;
@@ -826,6 +905,7 @@ impl<M: Mechanism> Sim<M> {
     ) {
         self.metrics.puts += 1;
         self.metrics.put_latency.record(self.now - started);
+        self.acked.push((key, val.id));
         // the DES client reply carries no body, so the session context is
         // simply consumed (the closed-loop behavior the figure replays
         // and E6/E9 depend on)
@@ -857,6 +937,7 @@ impl<M: Mechanism> Sim<M> {
             self.nodes[node].store.values(key).iter().map(|v| v.id).collect();
         self.nodes[node].store.write(key, ctx, val, Actor::server(node as u32), meta);
         self.account_drops(node, key, &before);
+        self.log_durable(node, key);
     }
 
     fn store_merge(&mut self, node: NodeId, key: Key, incoming: &M::State) {
@@ -864,6 +945,7 @@ impl<M: Mechanism> Sim<M> {
             self.nodes[node].store.values(key).iter().map(|v| v.id).collect();
         self.nodes[node].store.merge_key(key, incoming);
         self.account_drops(node, key, &before);
+        self.log_durable(node, key);
     }
 
     fn account_drops(&mut self, node: NodeId, key: Key, before: &[u64]) {
@@ -936,6 +1018,24 @@ impl<M: Mechanism> Sim<M> {
     /// headline number). Copies stranded on a decommissioned node do not
     /// count as survivors: its keys must have been re-homed.
     pub fn audit_permanently_lost(&self) -> u64 {
+        self.permanently_lost_among(&self.written)
+    }
+
+    /// Like [`audit_permanently_lost`](Sim::audit_permanently_lost) but
+    /// over **acknowledged** writes only — the invariant that must hold
+    /// even under restarts with state loss and wipes, where an *issued*
+    /// write that never reached its quorum may legitimately die with the
+    /// only replica that saw it.
+    pub fn audit_acked_lost(&self) -> u64 {
+        self.permanently_lost_among(&self.acked)
+    }
+
+    /// Writes acknowledged to clients during the run.
+    pub fn writes_acked(&self) -> u64 {
+        self.acked.len() as u64
+    }
+
+    fn permanently_lost_among(&self, written: &[(Key, u64)]) -> u64 {
         let mut survivors: HashMap<Key, Vec<u64>> = HashMap::new();
         for n in self.nodes.iter().filter(|n| n.member) {
             for key in n.store.keys() {
@@ -948,7 +1048,7 @@ impl<M: Mechanism> Sim<M> {
             }
         }
         let empty = Vec::new();
-        self.written
+        written
             .iter()
             .filter(|(key, id)| {
                 let surv = survivors.get(key).unwrap_or(&empty);
@@ -1313,6 +1413,71 @@ mod tests {
         sim.run(u64::MAX);
         assert_eq!(sim.topology_epoch(), crate::cluster::topology::INITIAL_EPOCH + 1);
         assert_eq!(sim.members(), vec![1, 2]);
+    }
+
+    #[test]
+    fn restart_rolls_back_to_the_persisted_prefix() {
+        // no driver: mutate nodes through the sync API so the exact
+        // flush boundary is controlled
+        let mut cfg = cfg(3, 3, 3, 3);
+        cfg.durability.flush_every_ops = 4;
+        let mut sim = Sim::new(DvvMech, cfg, 1, true, Box::new(NoDriver), 3).unwrap();
+        // W = N = 3: each sync_put mutates all three nodes (coordinator
+        // write + two replica merges), so each put advances every node's
+        // wal by one entry
+        for key in 0..6u64 {
+            sim.sync_put(0, key, 4, &Default::default(), &[]).unwrap();
+        }
+        for n in 0..3 {
+            assert_eq!(sim.nodes[n].synced.len(), 4, "flush-every-4: 4 keys on disk");
+            assert_eq!(sim.nodes[n].unsynced.len(), 2, "2-mutation unsynced tail");
+        }
+        let now = sim.now();
+        sim.schedule_restart(now + 1, 0);
+        sim.run(now + 10);
+        // node 0 kept the 4 synced mutations, lost the 2-entry tail
+        assert_eq!(sim.nodes[0].store.key_count(), 4);
+        assert!(sim.nodes[0].unsynced.is_empty(), "the tail died with the process");
+        // ...but every acked write survives on the other replicas
+        sim.settle();
+        assert_eq!(sim.audit_acked_lost(), 0);
+        assert_eq!(sim.audit_permanently_lost(), 0);
+    }
+
+    #[test]
+    fn wipe_clears_a_node_and_peers_refill_it() {
+        let mut c = cfg(3, 3, 2, 2);
+        c.antientropy.period_us = 20_000;
+        c.durability.flush_every_ops = 1;
+        let mut sim = Sim::new(DvvMech, c, 4, true, small_workload(4, 20), 41).unwrap();
+        sim.schedule_wipe(60_000, 1);
+        sim.start();
+        sim.run(u64::MAX);
+        sim.settle();
+        assert_eq!(sim.audit_acked_lost(), 0, "{}", sim.metrics.summary());
+        // anti-entropy + settle refilled the wiped node
+        for key in sim.nodes[0].store.keys() {
+            assert_eq!(
+                sim.nodes[1].store.state(key),
+                sim.nodes[0].store.state(key),
+                "wiped node reconverged on key {key}"
+            );
+        }
+    }
+
+    #[test]
+    fn volatile_restart_loses_everything_but_nothing_acked() {
+        // durability model off (flush_every_ops = 0): a restart is total
+        // loss at that node, like the in-memory threaded backends
+        let mut c = cfg(3, 3, 2, 2);
+        c.antientropy.period_us = 20_000;
+        let mut sim = Sim::new(DvvMech, c, 4, true, small_workload(4, 20), 43).unwrap();
+        sim.schedule_restart(60_000, 2);
+        sim.start();
+        sim.run(u64::MAX);
+        sim.settle();
+        assert_eq!(sim.audit_acked_lost(), 0, "{}", sim.metrics.summary());
+        assert!(sim.writes_acked() > 0);
     }
 
     #[test]

@@ -18,13 +18,17 @@
 //!   `benches/sharded_store.rs`);
 //! * [`ShardedBackend`](super::ShardedBackend) — the key space split
 //!   across power-of-two lock-striped shards, so operations on different
-//!   keys rarely contend.
+//!   keys rarely contend;
+//! * [`DurableBackend`](super::DurableBackend) — the sharded map with a
+//!   per-shard write-ahead log ([`super::wal`]), so a replica survives
+//!   process death with at most its configured fsync window lost.
 //!
 //! [`KeyStore`]: super::KeyStore
 //! [`Mechanism`]: crate::kernel::Mechanism
 
 use std::fmt;
 
+use super::wal::RecoveryReport;
 use super::Key;
 use crate::kernel::Mechanism;
 
@@ -80,6 +84,29 @@ pub trait StorageBackend<M: Mechanism>: fmt::Debug + Send + Sync + 'static {
 
     /// Snapshot of the keys currently stored in `shard`.
     fn keys_in_shard(&self, shard: usize) -> Vec<Key>;
+
+    /// Destroy **all** state, durable storage included: the node rejoins
+    /// empty and is refilled by its peers (the `Fault::Wipe` semantics —
+    /// a disk that died).
+    fn wipe(&self);
+
+    /// Simulate process death followed by recovery: whatever the backend
+    /// has not durably persisted is lost; the rest is rebuilt from
+    /// durable storage. Volatile backends persist nothing, so their
+    /// default is total loss — identical to [`wipe`](StorageBackend::wipe)
+    /// — which is exactly what a process restart does to a RAM-only
+    /// replica. [`DurableBackend`](super::DurableBackend) overrides this
+    /// to keep its fsynced prefix.
+    fn crash_restart(&self) -> RecoveryReport {
+        self.wipe();
+        RecoveryReport::default()
+    }
+
+    /// Bytes of durable log this backend holds (the `STATS wal_bytes=`
+    /// figure); 0 for volatile backends.
+    fn durable_bytes(&self) -> u64 {
+        0
+    }
 
     /// Snapshot of every stored key (shard by shard; no global order).
     fn keys(&self) -> Vec<Key> {

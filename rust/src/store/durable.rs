@@ -1,0 +1,439 @@
+//! Write-ahead-logged backend: the sharded in-memory map of
+//! [`ShardedBackend`](super::ShardedBackend) with log-ahead persistence
+//! per shard, so a replica survives process death.
+//!
+//! Layout on disk: `<dir>/shard-<i>/segment-*.wal`, one
+//! [`ShardWal`](super::wal::ShardWal) per shard. Each shard's map *and*
+//! log live behind one mutex, so the record order in a shard's log is
+//! exactly the mutation order of its keys — replay-in-order with
+//! last-record-wins rebuilds the map precisely.
+//!
+//! Every mutation ([`StorageBackend::update`] /
+//! [`StorageBackend::update_batch`]) appends the key's **post-state**
+//! under the shard lock before the lock is released; by the time a
+//! coordinator acks a write, the state is in the log (durably so under
+//! [`FsyncPolicy::Always`](super::wal::FsyncPolicy)). Reads never touch
+//! the log.
+//!
+//! I/O errors on the mutation path panic: the [`StorageBackend`]
+//! mutation API is deliberately infallible (the §4 kernel never fails),
+//! and a replica whose disk is gone *should* die — the cluster already
+//! treats a dead replica correctly (sloppy quorum, hints, anti-entropy),
+//! whereas silently dropping persistence would turn the next crash into
+//! undetected data loss.
+//!
+//! Crash semantics (the `Fault::Restart` / `Fault::Wipe` pair):
+//!
+//! * [`crash_restart`](StorageBackend::crash_restart) — simulate process
+//!   death and recovery: truncate each shard's log to its durable
+//!   watermark (what a real power loss leaves), then replay from disk.
+//!   Acknowledged-but-unsynced writes vanish *at this node*; hinted
+//!   handoff and anti-entropy re-deliver them from the rest of the
+//!   cluster.
+//! * [`wipe`](StorageBackend::wipe) — total state loss (disk died): the
+//!   node rejoins empty and is refilled entirely by its peers.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::backend::StorageBackend;
+use super::wal::{RecoveryReport, ShardWal, WalOptions};
+use super::Key;
+use crate::clocks::encoding::{expect_end, get_varint, put_varint};
+use crate::kernel::DurableMechanism;
+
+/// Default shard count for durable backends — fewer than the in-memory
+/// default (64) because every shard is a directory of real files.
+pub const DEFAULT_DURABLE_SHARDS: usize = 8;
+
+struct DurableShard<M: DurableMechanism> {
+    map: HashMap<Key, M::State>,
+    wal: ShardWal,
+    /// Encode scratch, reused across appends.
+    buf: Vec<u8>,
+}
+
+impl<M: DurableMechanism> DurableShard<M> {
+    /// Open the shard dir, replaying the log into a fresh map.
+    fn open(dir: &Path, opts: WalOptions) -> crate::Result<(DurableShard<M>, RecoveryReport)> {
+        let mut map = HashMap::new();
+        let (wal, report) = ShardWal::open(dir, opts, |payload| {
+            let mut pos = 0;
+            let key = get_varint(payload, &mut pos)?;
+            let state = M::decode_state(payload, &mut pos)?;
+            expect_end(payload, pos)?;
+            map.insert(key, state); // physical log: last record wins
+            Ok(())
+        })?;
+        Ok((DurableShard { map, wal, buf: Vec::new() }, report))
+    }
+
+    /// Record payload for `(key, state)`.
+    fn payload(buf: &mut Vec<u8>, key: Key, state: &M::State) {
+        buf.clear();
+        put_varint(buf, key);
+        M::encode_state(state, buf);
+    }
+
+    /// Append `key`'s current state to the log, rolling (and compacting
+    /// when mostly dead) as needed. Runs under the shard lock, so the
+    /// log order is the mutation order.
+    fn log_key(&mut self, key: Key) {
+        let state = self.map.get(&key).expect("logged key was just updated");
+        Self::payload(&mut self.buf, key, state);
+        self.wal.append(&self.buf).expect("WAL append failed (see module docs)");
+        if self.wal.needs_roll() {
+            let snapshot = if self.wal.live_fraction_low(self.map.len()) {
+                let mut payloads = Vec::with_capacity(self.map.len());
+                let mut buf = Vec::new();
+                for (k, st) in &self.map {
+                    Self::payload(&mut buf, *k, st);
+                    payloads.push(buf.clone());
+                }
+                Some(payloads)
+            } else {
+                None
+            };
+            self.wal
+                .roll(snapshot.as_deref())
+                .expect("WAL roll failed (see module docs)");
+        }
+    }
+}
+
+/// See module docs.
+pub struct DurableBackend<M: DurableMechanism> {
+    shards: Box<[Mutex<DurableShard<M>>]>,
+    mask: u64,
+    dir: PathBuf,
+    opts: WalOptions,
+    report: RecoveryReport,
+}
+
+impl<M: DurableMechanism> DurableBackend<M> {
+    /// Open (creating if absent) a durable backend rooted at `dir` with
+    /// `shards` stripes (rounded up to a power of two), replaying every
+    /// shard log. Recovery truncates torn tails and records what it
+    /// discarded in [`recovery_report`](DurableBackend::recovery_report).
+    pub fn open(
+        dir: impl Into<PathBuf>,
+        shards: usize,
+        opts: WalOptions,
+    ) -> crate::Result<DurableBackend<M>> {
+        let dir = dir.into();
+        let n = shards.max(1).next_power_of_two();
+        let mut report = RecoveryReport::default();
+        let mut built = Vec::with_capacity(n);
+        for i in 0..n {
+            let shard_dir = dir.join(format!("shard-{i:03}"));
+            let (shard, shard_report) = DurableShard::open(&shard_dir, opts)?;
+            report.absorb(&shard_report);
+            built.push(Mutex::new(shard));
+        }
+        Ok(DurableBackend {
+            shards: built.into_boxed_slice(),
+            mask: (n - 1) as u64,
+            dir,
+            opts,
+            report,
+        })
+    }
+
+    #[inline]
+    fn idx(&self, key: Key) -> usize {
+        (key & self.mask) as usize
+    }
+
+    /// The backend's root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// What the opening replay found (and discarded).
+    pub fn recovery_report(&self) -> &RecoveryReport {
+        &self.report
+    }
+
+    /// Fsync every shard log (a clean-shutdown barrier).
+    pub fn flush(&self) -> crate::Result<()> {
+        for shard in self.shards.iter() {
+            shard.lock().unwrap().wal.sync()?;
+        }
+        Ok(())
+    }
+}
+
+impl<M: DurableMechanism> fmt::Debug for DurableBackend<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let keys: usize = self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum();
+        f.debug_struct("DurableBackend")
+            .field("dir", &self.dir)
+            .field("shards", &self.shards.len())
+            .field("keys", &keys)
+            .field("wal_bytes", &self.durable_bytes())
+            .finish()
+    }
+}
+
+impl<M: DurableMechanism> StorageBackend<M> for DurableBackend<M> {
+    fn with_state<R>(&self, key: Key, f: impl FnOnce(Option<&M::State>) -> R) -> R {
+        f(self.shards[self.idx(key)].lock().unwrap().map.get(&key))
+    }
+
+    fn update<R>(&self, key: Key, f: impl FnOnce(&mut M::State) -> R) -> R {
+        let mut guard = self.shards[self.idx(key)].lock().unwrap();
+        let shard = &mut *guard;
+        let r = f(shard.map.entry(key).or_default());
+        shard.log_key(key);
+        r
+    }
+
+    fn update_batch<T>(&self, items: &[(Key, T)], mut f: impl FnMut(&mut M::State, &T)) {
+        // sort item indices by shard, then take each shard lock once per
+        // run (the same amortization as ShardedBackend::update_batch);
+        // each item is logged under the lock right after its mutation
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by_key(|&i| self.idx(items[i].0));
+        let mut run = 0;
+        while run < order.len() {
+            let shard_idx = self.idx(items[order[run]].0);
+            let mut guard = self.shards[shard_idx].lock().unwrap();
+            let shard = &mut *guard;
+            while run < order.len() {
+                let (key, payload) = &items[order[run]];
+                if self.idx(*key) != shard_idx {
+                    break;
+                }
+                f(shard.map.entry(*key).or_default(), payload);
+                shard.log_key(*key);
+                run += 1;
+            }
+        }
+    }
+
+    fn for_each(&self, mut f: impl FnMut(Key, &M::State)) {
+        for shard in self.shards.iter() {
+            for (k, st) in shard.lock().unwrap().map.iter() {
+                f(*k, st);
+            }
+        }
+    }
+
+    fn key_count(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, key: Key) -> usize {
+        self.idx(key)
+    }
+
+    fn keys_in_shard(&self, shard: usize) -> Vec<Key> {
+        self.shards[shard].lock().unwrap().map.keys().copied().collect()
+    }
+
+    fn wipe(&self) {
+        for shard in self.shards.iter() {
+            let mut guard = shard.lock().unwrap();
+            guard.map.clear();
+            guard.wal.wipe().expect("WAL wipe failed (see module docs)");
+        }
+    }
+
+    fn crash_restart(&self) -> RecoveryReport {
+        let mut report = RecoveryReport::default();
+        for shard in self.shards.iter() {
+            let mut guard = shard.lock().unwrap();
+            guard
+                .wal
+                .simulate_power_loss()
+                .expect("WAL truncate failed (see module docs)");
+            let dir = guard.wal.dir().to_path_buf();
+            let (fresh, shard_report) =
+                DurableShard::open(&dir, self.opts).expect("WAL replay failed (see module docs)");
+            *guard = fresh;
+            report.absorb(&shard_report);
+        }
+        report
+    }
+
+    fn durable_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().wal.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clocks::Actor;
+    use crate::kernel::mechs::DvvMech;
+    use crate::kernel::{Val, WriteMeta};
+    use crate::store::wal::FsyncPolicy;
+    use crate::store::KeyStore;
+    use crate::testkit::temp_dir;
+
+    fn store(dir: &Path, opts: WalOptions) -> KeyStore<DvvMech, DurableBackend<DvvMech>> {
+        KeyStore::with_backend(
+            DvvMech,
+            DurableBackend::open(dir, 4, opts).unwrap(),
+        )
+    }
+
+    fn meta() -> WriteMeta {
+        WriteMeta::basic(Actor::client(0))
+    }
+
+    #[test]
+    fn writes_survive_close_and_reopen() {
+        let dir = temp_dir("durable-reopen");
+        let opts = WalOptions::default();
+        {
+            let s = store(&dir, opts);
+            for k in 0..32u64 {
+                let (_, ctx) = s.read(k);
+                s.write(k, &ctx, Val::new(k + 1, 8), Actor::server(0), &meta());
+            }
+            assert_eq!(s.key_count(), 32);
+            assert!(s.backend().durable_bytes() > 0);
+        }
+        let s = store(&dir, opts);
+        assert_eq!(s.backend().recovery_report().records, 32);
+        assert_eq!(s.key_count(), 32);
+        for k in 0..32u64 {
+            assert_eq!(s.values(k), vec![Val::new(k + 1, 8)], "key {k}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sibling_states_replay_exactly() {
+        let dir = temp_dir("durable-siblings");
+        let opts = WalOptions::default();
+        let expected;
+        {
+            let s = store(&dir, opts);
+            let empty = s.read(7).1;
+            s.write(7, &empty, Val::new(1, 4), Actor::server(0), &meta());
+            s.write(7, &empty, Val::new(2, 4), Actor::server(1), &meta());
+            expected = s.state(7);
+            assert_eq!(s.sibling_count(7), 2);
+        }
+        let s = store(&dir, opts);
+        assert_eq!(s.state(7), expected, "recovered state is byte-identical");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn crash_restart_loses_only_the_unsynced_tail() {
+        let dir = temp_dir("durable-crash");
+        // sync only on explicit flush: everything unflushed is lost
+        let opts = WalOptions { fsync: FsyncPolicy::Never, ..Default::default() };
+        let s = store(&dir, opts);
+        for k in 0..8u64 {
+            let (_, ctx) = s.read(k);
+            s.write(k, &ctx, Val::new(k + 1, 8), Actor::server(0), &meta());
+        }
+        s.backend().flush().unwrap(); // durable watermark: 8 keys
+        for k in 8..16u64 {
+            let (_, ctx) = s.read(k);
+            s.write(k, &ctx, Val::new(k + 1, 8), Actor::server(0), &meta());
+        }
+        let report = s.backend().crash_restart();
+        assert_eq!(report.records, 8, "only the flushed prefix recovers");
+        assert_eq!(s.key_count(), 8);
+        for k in 0..8u64 {
+            assert_eq!(s.values(k).len(), 1, "synced key {k} survived");
+        }
+        for k in 8..16u64 {
+            assert!(s.values(k).is_empty(), "unsynced key {k} lost");
+        }
+        // the store keeps working after recovery
+        let (_, ctx) = s.read(99);
+        s.write(99, &ctx, Val::new(500, 8), Actor::server(0), &meta());
+        assert_eq!(s.values(99).len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fsync_always_survives_crash_completely() {
+        let dir = temp_dir("durable-always");
+        let opts = WalOptions { fsync: FsyncPolicy::Always, ..Default::default() };
+        let s = store(&dir, opts);
+        for k in 0..10u64 {
+            let (_, ctx) = s.read(k);
+            s.write(k, &ctx, Val::new(k + 1, 8), Actor::server(0), &meta());
+        }
+        let report = s.backend().crash_restart();
+        assert_eq!(report.records, 10);
+        assert_eq!(s.key_count(), 10, "fsync-always has no loss window");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wipe_clears_disk_and_memory() {
+        let dir = temp_dir("durable-wipe");
+        let opts = WalOptions::default();
+        let s = store(&dir, opts);
+        for k in 0..8u64 {
+            let (_, ctx) = s.read(k);
+            s.write(k, &ctx, Val::new(k + 1, 8), Actor::server(0), &meta());
+        }
+        s.backend().wipe();
+        assert_eq!(s.key_count(), 0);
+        let report = s.backend().crash_restart();
+        assert_eq!(report.records, 0, "nothing on disk either");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn hot_key_log_compacts() {
+        let dir = temp_dir("durable-compact");
+        let opts = WalOptions { segment_bytes: 512, fsync: FsyncPolicy::Never };
+        let s = store(&dir, opts);
+        // hammer one key: without compaction the log would hold every
+        // post-state ever written
+        for i in 0..400u64 {
+            let (_, ctx) = s.read(3);
+            s.write(3, &ctx, Val::new(i + 1, 8), Actor::server(0), &meta());
+        }
+        let bytes = s.backend().durable_bytes();
+        assert!(
+            bytes < 4096,
+            "compaction kept the log near one live record, got {bytes} bytes"
+        );
+        // and the compacted log still recovers the current state
+        let expected = s.state(3);
+        drop(s);
+        let s = store(&dir, opts);
+        assert_eq!(s.state(3), expected);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn batch_merges_are_logged() {
+        let dir = temp_dir("durable-batch");
+        let opts = WalOptions::default();
+        let src = KeyStore::new(DvvMech);
+        let empty = src.read(0).1;
+        for k in 0..20u64 {
+            src.write(k, &empty, Val::new(k + 1, 0), Actor::server(1), &meta());
+        }
+        let items: Vec<(Key, _)> = src.keys().map(|k| (k, src.state(k))).collect();
+        {
+            let s = store(&dir, opts);
+            s.merge_batch(&items);
+            assert_eq!(s.key_count(), 20);
+        }
+        let s = store(&dir, opts);
+        assert_eq!(s.key_count(), 20, "batched mutations hit the log too");
+        for (k, st) in &items {
+            assert_eq!(s.state(*k), *st);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

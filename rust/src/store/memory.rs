@@ -83,4 +83,8 @@ impl<M: Mechanism> StorageBackend<M> for InMemoryBackend<M> {
     fn keys_in_shard(&self, _shard: usize) -> Vec<Key> {
         self.map.read().unwrap().keys().copied().collect()
     }
+
+    fn wipe(&self) {
+        self.map.write().unwrap().clear();
+    }
 }

@@ -14,7 +14,13 @@
 //! * [`ShardedBackend`] — lock-striped shards over a power-of-two key
 //!   mask, so the threaded TCP server can run GET/PUT on different keys
 //!   without contending (see `benches/sharded_store.rs` for the flat
-//!   vs. sharded comparison).
+//!   vs. sharded comparison);
+//! * [`DurableBackend`] — the sharded map plus a per-shard, segmented,
+//!   checksummed write-ahead log ([`wal`]): every mutation is logged
+//!   before its lock is released, replay-on-open recovers the longest
+//!   valid record prefix (torn tails are truncated and reported), and
+//!   hot-key logs compact via snapshot segments. This is what
+//!   `dvv-store serve --data-dir` runs on.
 //!
 //! Every [`KeyStore`] method takes `&self` — locking is internal to the
 //! backend — so a store can be shared across server threads with a plain
@@ -43,12 +49,16 @@
 //! ```
 
 pub mod backend;
+mod durable;
 mod memory;
 mod sharded;
+pub mod wal;
 
 pub use backend::StorageBackend;
+pub use durable::{DurableBackend, DEFAULT_DURABLE_SHARDS};
 pub use memory::InMemoryBackend;
 pub use sharded::{ShardedBackend, DEFAULT_SHARDS};
+pub use wal::{FsyncPolicy, RecoveryReport, WalOptions};
 
 use std::fmt;
 

@@ -143,6 +143,12 @@ impl<M: Mechanism> StorageBackend<M> for ShardedBackend<M> {
     fn keys_in_shard(&self, shard: usize) -> Vec<Key> {
         self.shards[shard].read().unwrap().keys().copied().collect()
     }
+
+    fn wipe(&self) {
+        for shard in self.shards.iter() {
+            shard.write().unwrap().clear();
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,679 @@
+//! Per-shard segmented write-ahead log: the durable half of
+//! [`DurableBackend`](super::DurableBackend).
+//!
+//! # On-disk format
+//!
+//! A shard's log is a directory of numbered **segments**
+//! (`segment-00000000.wal`, `segment-00000001.wal`, …). Each segment
+//! opens with the 8-byte [`SEGMENT_MAGIC`] and then holds a sequence of
+//! self-delimiting records:
+//!
+//! ```text
+//! [varint payload_len][u32 LE crc32(payload)][payload]
+//! payload = [varint key][mechanism state encoding]
+//! ```
+//!
+//! Varints are the same LEB128 encoding the wire protocol uses
+//! ([`crate::clocks::encoding`]); the CRC is IEEE 802.3 (the polynomial
+//! of zlib/gzip). Records are **physical** (full post-write state, last
+//! record per key wins on replay) rather than logical operations: the
+//! [`StorageBackend`](super::StorageBackend) mutation API is an opaque
+//! closure, so the post-state is the only thing the backend can know —
+//! and replay becomes a simple in-order scan with no mechanism-specific
+//! redo logic.
+//!
+//! # Fsync policy
+//!
+//! [`FsyncPolicy`] trades write latency against the crash-loss window:
+//! `Always` fsyncs every append, `EveryN(n)` every `n`-th, `Never` only
+//! on segment rolls. The log tracks its **synced watermark** — the byte
+//! offset up to which the current segment is known durable (older
+//! segments are fsynced when rolled, so they are durable end-to-end).
+//! Simulated process death ([`ShardWal::simulate_power_loss`], used by
+//! `DurableBackend::crash_restart`) truncates the current segment to
+//! that watermark: exactly the bytes a real crash could lose.
+//!
+//! # Recovery
+//!
+//! [`ShardWal::open`] replays segments in order, handing each record's
+//! payload to the caller. Replay stops at the first invalid record — a
+//! truncated length, a short body, a CRC mismatch, or a payload the
+//! state codec rejects — **truncates the log to the longest valid
+//! prefix** (cutting the torn segment and deleting any segments after
+//! it), and reports the discarded byte count in the returned
+//! [`RecoveryReport`]. Replay never panics on any byte sequence
+//! (`rust/tests/wal_recovery.rs` sweeps truncations and corruptions).
+//!
+//! # Compaction
+//!
+//! Appends are state snapshots, so a hot key makes most of the log dead
+//! weight. When a segment fills and the live fraction (distinct keys /
+//! records logged) has dropped below half, the roll writes a **snapshot
+//! segment** — one record per live key — fsyncs it, and deletes every
+//! older segment; otherwise the roll just starts a fresh segment.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::clocks::encoding::get_varint;
+use crate::error::{Error, Result};
+
+/// First 8 bytes of every segment file (format name + version).
+pub const SEGMENT_MAGIC: [u8; 8] = *b"DVVWAL01";
+
+/// Upper bound on a record's payload length. A length field promising
+/// more is corruption by definition — rejected before any allocation.
+pub const MAX_RECORD_LEN: u64 = 1 << 26;
+
+/// When (and how often) appends reach the disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Fsync after every append: zero crash-loss window, slowest.
+    Always,
+    /// Fsync every `n`-th append: bounded loss window, amortized cost.
+    EveryN(u32),
+    /// Fsync only on segment rolls: fastest, largest loss window.
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Parse a CLI/config spelling: `always`, `never`, a bare number
+    /// `n`, or `every<n>` (what [`Display`](Self#impl-Display-for-FsyncPolicy)
+    /// prints, so printed policies round-trip); `1` ≡ `always`.
+    pub fn parse(s: &str) -> Result<FsyncPolicy> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "never" => Ok(FsyncPolicy::Never),
+            other => {
+                let n = other.strip_prefix("every").unwrap_or(other);
+                match n.parse::<u32>() {
+                    Ok(0) => Err(Error::Config("fsync every-0 is meaningless".into())),
+                    Ok(1) => Ok(FsyncPolicy::Always),
+                    Ok(n) => Ok(FsyncPolicy::EveryN(n)),
+                    Err(_) => Err(Error::Config(format!(
+                        "bad fsync policy {s:?}; expected always|never|<n>|every<n>"
+                    ))),
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsyncPolicy::Always => f.write_str("always"),
+            FsyncPolicy::EveryN(n) => write!(f, "every{n}"),
+            FsyncPolicy::Never => f.write_str("never"),
+        }
+    }
+}
+
+/// Tunables for one shard log (and, via
+/// [`DurableBackend::open`](super::DurableBackend::open), a whole
+/// backend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalOptions {
+    /// Roll to a new segment once the current one exceeds this size.
+    pub segment_bytes: u64,
+    /// Fsync cadence.
+    pub fsync: FsyncPolicy,
+}
+
+impl Default for WalOptions {
+    fn default() -> Self {
+        WalOptions { segment_bytes: 1 << 20, fsync: FsyncPolicy::EveryN(64) }
+    }
+}
+
+/// What recovery found (and discarded). Reports aggregate across shards
+/// via [`absorb`](RecoveryReport::absorb).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Records replayed into the store.
+    pub records: u64,
+    /// Bytes past the longest valid prefix, truncated away (torn tail,
+    /// corrupt record, or orphaned later segments).
+    pub discarded_bytes: u64,
+    /// Segment files encountered (replayed or discarded).
+    pub segments: u64,
+    /// Whether any truncation happened (`discarded_bytes > 0`).
+    pub truncated: bool,
+}
+
+impl RecoveryReport {
+    /// Fold another shard's report into this one.
+    pub fn absorb(&mut self, other: &RecoveryReport) {
+        self.records += other.records;
+        self.discarded_bytes += other.discarded_bytes;
+        self.segments += other.segments;
+        self.truncated |= other.truncated;
+    }
+}
+
+/// CRC-32 (IEEE 802.3), table-driven, no dependencies.
+pub fn crc32(data: &[u8]) -> u32 {
+    const fn table() -> [u32; 256] {
+        let mut t = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            t[i] = c;
+            i += 1;
+        }
+        t
+    }
+    static TABLE: [u32; 256] = table();
+    let mut crc = !0u32;
+    for &b in data {
+        crc = (crc >> 8) ^ TABLE[((crc ^ u32::from(b)) & 0xff) as usize];
+    }
+    !crc
+}
+
+fn segment_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("segment-{seq:08}.wal"))
+}
+
+/// Segment sequence numbers present in `dir`, ascending.
+fn segment_seqs(dir: &Path) -> Result<Vec<u64>> {
+    let mut seqs = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(seq) = name
+            .strip_prefix("segment-")
+            .and_then(|rest| rest.strip_suffix(".wal"))
+            .and_then(|digits| digits.parse::<u64>().ok())
+        {
+            seqs.push(seq);
+        }
+    }
+    seqs.sort_unstable();
+    Ok(seqs)
+}
+
+/// Scan one segment's bytes, calling `on_record` per valid payload.
+/// Returns `(valid_prefix_len, records)`; a prefix shorter than the file
+/// means the record at that offset (and everything after) is invalid.
+fn scan_segment(bytes: &[u8], mut on_record: impl FnMut(&[u8]) -> Result<()>) -> (u64, u64) {
+    if bytes.len() < SEGMENT_MAGIC.len() || bytes[..SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
+        return (0, 0);
+    }
+    let mut pos = SEGMENT_MAGIC.len();
+    let mut records = 0u64;
+    loop {
+        let record_start = pos;
+        if pos == bytes.len() {
+            return (record_start as u64, records);
+        }
+        let mut p = pos;
+        let Ok(len) = get_varint(bytes, &mut p) else {
+            return (record_start as u64, records); // torn length field
+        };
+        if len > MAX_RECORD_LEN || (len as usize) + 4 > bytes.len() - p {
+            return (record_start as u64, records); // absurd or short body
+        }
+        let crc_stored = u32::from_le_bytes(bytes[p..p + 4].try_into().unwrap());
+        let payload = &bytes[p + 4..p + 4 + len as usize];
+        if crc32(payload) != crc_stored {
+            return (record_start as u64, records); // bit rot / torn write
+        }
+        if on_record(payload).is_err() {
+            return (record_start as u64, records); // codec rejected it
+        }
+        records += 1;
+        pos = p + 4 + len as usize;
+    }
+}
+
+/// One shard's append handle plus the bookkeeping recovery and
+/// compaction need. Owned by a `DurableBackend` shard, mutated under
+/// that shard's lock.
+#[derive(Debug)]
+pub struct ShardWal {
+    dir: PathBuf,
+    opts: WalOptions,
+    file: File,
+    seg_seq: u64,
+    /// Bytes written to the current segment (including its magic).
+    seg_len: u64,
+    /// Durable watermark within the current segment.
+    synced_len: u64,
+    /// Appends since the last fsync (the `EveryN` counter).
+    unsynced_appends: u32,
+    /// Records across every live segment (compaction trigger input).
+    records_in_log: u64,
+    /// Bytes across every live segment (the `wal_bytes` stat).
+    bytes_in_log: u64,
+    /// Frame-assembly scratch, reused so the append hot path allocates
+    /// nothing after warmup.
+    scratch: Vec<u8>,
+}
+
+impl ShardWal {
+    /// Open (creating if absent) the shard log in `dir`, replaying every
+    /// valid record through `on_record` and truncating any invalid tail.
+    pub fn open(
+        dir: impl Into<PathBuf>,
+        opts: WalOptions,
+        mut on_record: impl FnMut(&[u8]) -> Result<()>,
+    ) -> Result<(ShardWal, RecoveryReport)> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let seqs = segment_seqs(&dir)?;
+        let mut report = RecoveryReport::default();
+        let mut records_in_log = 0u64;
+        let mut bytes_in_log = 0u64;
+        let mut cut: Option<(usize, u64)> = None; // (index into seqs, keep-len)
+        for (i, &seq) in seqs.iter().enumerate() {
+            report.segments += 1;
+            let bytes = std::fs::read(segment_path(&dir, seq))?;
+            let (valid_len, records) = scan_segment(&bytes, &mut on_record);
+            records_in_log += records;
+            report.records += records;
+            if (valid_len as usize) < bytes.len() {
+                report.discarded_bytes += bytes.len() as u64 - valid_len;
+                bytes_in_log += valid_len.max(SEGMENT_MAGIC.len() as u64);
+                cut = Some((i, valid_len));
+                break;
+            }
+            bytes_in_log += bytes.len() as u64;
+        }
+        if let Some((i, keep)) = cut {
+            // truncate the torn segment to its valid prefix (restoring
+            // the magic if even that was damaged) and drop every later
+            // segment — they are causally after the lost bytes
+            let path = segment_path(&dir, seqs[i]);
+            let f = OpenOptions::new().write(true).open(&path)?;
+            f.set_len(keep)?;
+            f.sync_data()?;
+            drop(f);
+            if keep < SEGMENT_MAGIC.len() as u64 {
+                let mut f = OpenOptions::new().write(true).open(&path)?;
+                f.write_all(&SEGMENT_MAGIC)?;
+                f.sync_data()?;
+            }
+            for &seq in &seqs[i + 1..] {
+                let path = segment_path(&dir, seq);
+                report.discarded_bytes += std::fs::metadata(&path)?.len();
+                report.segments += 1;
+                std::fs::remove_file(&path)?;
+            }
+        }
+        report.truncated = report.discarded_bytes > 0;
+
+        // the writable tail is the last surviving segment (create
+        // segment 0 on a fresh dir)
+        let seg_seq = match cut {
+            Some((i, _)) => seqs[i],
+            None => seqs.last().copied().unwrap_or(0),
+        };
+        let path = segment_path(&dir, seg_seq);
+        // a missing file is fresh; so is a sub-magic one (a 0-byte file
+        // scans as "no records" without registering as torn) — both get
+        // the magic so later appends land in a well-formed segment
+        let had = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        if had < SEGMENT_MAGIC.len() as u64 {
+            // `&File` is `Write`, so the binding itself can stay immutable
+            Write::write_all(&mut (&file), &SEGMENT_MAGIC)?;
+            file.sync_data()?;
+            bytes_in_log += SEGMENT_MAGIC.len() as u64 - had;
+        }
+        let seg_len = std::fs::metadata(&path)?.len();
+        // one fsync makes the claim below true even for a log written
+        // under FsyncPolicy::Never and reopened cleanly: without it the
+        // tail would be *marked* durable while the OS still owed it
+        file.sync_data()?;
+        let wal = ShardWal {
+            dir,
+            opts,
+            file,
+            seg_seq,
+            seg_len,
+            // everything that survived recovery was just re-validated
+            // from disk and fsynced, so the whole current segment
+            // counts as durable
+            synced_len: seg_len,
+            unsynced_appends: 0,
+            records_in_log,
+            bytes_in_log,
+            scratch: Vec::new(),
+        };
+        Ok((wal, report))
+    }
+
+    /// The shard log directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The options this log runs with.
+    pub fn options(&self) -> WalOptions {
+        self.opts
+    }
+
+    /// Bytes across every live segment.
+    pub fn bytes(&self) -> u64 {
+        self.bytes_in_log
+    }
+
+    /// Records across every live segment.
+    pub fn records(&self) -> u64 {
+        self.records_in_log
+    }
+
+    /// Append one record (framing + checksum around `payload`), applying
+    /// the fsync policy. The caller checks [`needs_roll`](ShardWal::needs_roll)
+    /// afterwards.
+    pub fn append(&mut self, payload: &[u8]) -> Result<()> {
+        self.scratch.clear();
+        crate::clocks::encoding::put_varint(&mut self.scratch, payload.len() as u64);
+        self.scratch.extend_from_slice(&crc32(payload).to_le_bytes());
+        self.scratch.extend_from_slice(payload);
+        self.file.write_all(&self.scratch)?;
+        let frame_len = self.scratch.len() as u64;
+        self.seg_len += frame_len;
+        self.bytes_in_log += frame_len;
+        self.records_in_log += 1;
+        match self.opts.fsync {
+            FsyncPolicy::Always => self.sync()?,
+            FsyncPolicy::EveryN(n) => {
+                self.unsynced_appends += 1;
+                if self.unsynced_appends >= n {
+                    self.sync()?;
+                }
+            }
+            FsyncPolicy::Never => {}
+        }
+        Ok(())
+    }
+
+    /// Fsync the current segment and advance the durable watermark.
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data()?;
+        self.synced_len = self.seg_len;
+        self.unsynced_appends = 0;
+        Ok(())
+    }
+
+    /// Has the current segment outgrown the roll threshold?
+    pub fn needs_roll(&self) -> bool {
+        self.seg_len >= self.opts.segment_bytes
+    }
+
+    /// Would a roll now be worth compacting? True when fewer than half
+    /// the logged records are live (`live_keys` distinct keys).
+    pub fn live_fraction_low(&self, live_keys: usize) -> bool {
+        self.records_in_log > 2 * live_keys as u64
+    }
+
+    /// Roll to a fresh segment. With `snapshot: Some(payloads)` this is a
+    /// **compacting** roll: the new segment is seeded with one record per
+    /// live key, fsynced, and every older segment is deleted. The old
+    /// segment is always fsynced first, so past segments are durable
+    /// end-to-end and only the current one has a loss window.
+    pub fn roll(&mut self, snapshot: Option<&[Vec<u8>]>) -> Result<()> {
+        self.sync()?;
+        let old_seq = self.seg_seq;
+        self.seg_seq += 1;
+        let path = segment_path(&self.dir, self.seg_seq);
+        let mut file = OpenOptions::new().create_new(true).append(true).open(&path)?;
+        file.write_all(&SEGMENT_MAGIC)?;
+        self.file = file;
+        self.seg_len = SEGMENT_MAGIC.len() as u64;
+        self.bytes_in_log += SEGMENT_MAGIC.len() as u64;
+        self.synced_len = 0;
+        self.unsynced_appends = 0;
+        if let Some(payloads) = snapshot {
+            for payload in payloads {
+                self.append(payload)?;
+            }
+            self.sync()?;
+            // only after the snapshot is durable may its sources go
+            for seq in segment_seqs(&self.dir)? {
+                if seq <= old_seq {
+                    std::fs::remove_file(segment_path(&self.dir, seq))?;
+                }
+            }
+            self.records_in_log = payloads.len() as u64;
+            self.bytes_in_log = self.seg_len;
+        } else {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Simulate the OS losing everything not yet fsynced (process death
+    /// mid-write): truncate the current segment to the durable
+    /// watermark. The in-memory map this log backs must be rebuilt by
+    /// reopening the directory.
+    pub fn simulate_power_loss(&mut self) -> Result<()> {
+        let path = segment_path(&self.dir, self.seg_seq);
+        let keep = self.synced_len.max(SEGMENT_MAGIC.len() as u64);
+        let f = OpenOptions::new().write(true).open(&path)?;
+        f.set_len(keep)?;
+        f.sync_data()?;
+        Ok(())
+    }
+
+    /// Delete every segment and start over empty (total state loss; the
+    /// `Fault::Wipe` semantics).
+    pub fn wipe(&mut self) -> Result<()> {
+        for seq in segment_seqs(&self.dir)? {
+            std::fs::remove_file(segment_path(&self.dir, seq))?;
+        }
+        self.seg_seq = 0;
+        let path = segment_path(&self.dir, 0);
+        let mut file = OpenOptions::new().create_new(true).append(true).open(&path)?;
+        file.write_all(&SEGMENT_MAGIC)?;
+        file.sync_data()?;
+        self.file = file;
+        self.seg_len = SEGMENT_MAGIC.len() as u64;
+        self.synced_len = self.seg_len;
+        self.unsynced_appends = 0;
+        self.records_in_log = 0;
+        self.bytes_in_log = self.seg_len;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::temp_dir;
+
+    fn collect_open(dir: &Path, opts: WalOptions) -> (ShardWal, RecoveryReport, Vec<Vec<u8>>) {
+        let mut seen = Vec::new();
+        let (wal, report) = ShardWal::open(dir, opts, |payload| {
+            seen.push(payload.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        (wal, report, seen)
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // the standard IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let dir = temp_dir("wal-roundtrip");
+        let opts = WalOptions::default();
+        let payloads: Vec<Vec<u8>> = (0..20u8).map(|i| vec![i; (i as usize % 7) + 1]).collect();
+        {
+            let (mut wal, report, seen) = collect_open(&dir, opts);
+            assert_eq!(report, RecoveryReport { segments: 0, ..Default::default() });
+            assert!(seen.is_empty());
+            for p in &payloads {
+                wal.append(p).unwrap();
+            }
+            assert_eq!(wal.records(), 20);
+        }
+        let (wal, report, seen) = collect_open(&dir, opts);
+        assert_eq!(seen, payloads);
+        assert_eq!(report.records, 20);
+        assert_eq!(report.discarded_bytes, 0);
+        assert!(!report.truncated);
+        assert_eq!(wal.records(), 20);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_truncates_to_longest_valid_prefix() {
+        let dir = temp_dir("wal-torn");
+        let opts = WalOptions { fsync: FsyncPolicy::Never, ..Default::default() };
+        {
+            let (mut wal, _, _) = collect_open(&dir, opts);
+            for i in 0..5u8 {
+                wal.append(&[i; 10]).unwrap();
+            }
+        }
+        // tear the tail mid-record: drop the file's last 3 bytes
+        let path = segment_path(&dir, 0);
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 3).unwrap();
+        drop(f);
+
+        let (_, report, seen) = collect_open(&dir, opts);
+        assert_eq!(seen.len(), 4, "last record torn, first four replay");
+        assert_eq!(report.records, 4);
+        assert!(report.truncated);
+        // one record = 1-byte varint + 4-byte crc + 10 payload = 15; we
+        // cut 3 bytes, so 12 torn bytes get discarded
+        assert_eq!(report.discarded_bytes, 12);
+        // recovery is idempotent: the log is clean now
+        let (_, report2, seen2) = collect_open(&dir, opts);
+        assert_eq!(seen2.len(), 4);
+        assert!(!report2.truncated);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_byte_cuts_and_later_segments_are_dropped() {
+        let dir = temp_dir("wal-corrupt");
+        let opts =
+            WalOptions { segment_bytes: 64, fsync: FsyncPolicy::Never };
+        {
+            let (mut wal, _, _) = collect_open(&dir, opts);
+            for i in 0..12u8 {
+                wal.append(&[i; 16]).unwrap();
+                if wal.needs_roll() {
+                    wal.roll(None).unwrap(); // plain rolls: keep history
+                }
+            }
+        }
+        let seqs = segment_seqs(&dir).unwrap();
+        assert!(seqs.len() >= 3, "rolls produced segments: {seqs:?}");
+        // flip one payload byte in the second segment
+        let victim = segment_path(&dir, seqs[1]);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let at = SEGMENT_MAGIC.len() + 7;
+        bytes[at] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+
+        let (_, report, seen) = collect_open(&dir, opts);
+        assert!(report.truncated);
+        assert!(report.discarded_bytes > 0);
+        // exactly segment 0's three records survive; the corrupt record
+        // and all later segments are gone
+        let expected: Vec<Vec<u8>> = (0..3u8).map(|i| vec![i; 16]).collect();
+        assert_eq!(seen, expected, "recovered set is the pre-corruption record prefix");
+        assert_eq!(segment_seqs(&dir).unwrap().len(), 2, "later segments deleted");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn power_loss_keeps_only_the_synced_watermark() {
+        let dir = temp_dir("wal-powerloss");
+        let opts = WalOptions { fsync: FsyncPolicy::EveryN(4), ..Default::default() };
+        {
+            let (mut wal, _, _) = collect_open(&dir, opts);
+            for i in 0..10u8 {
+                wal.append(&[i; 8]).unwrap();
+            }
+            // 10 appends, fsync every 4: records 0..8 are durable
+            wal.simulate_power_loss().unwrap();
+        }
+        let (_, report, seen) = collect_open(&dir, opts);
+        assert_eq!(seen.len(), 8, "the unsynced tail died with the process");
+        assert!(!report.truncated, "power loss is not corruption");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compacting_roll_keeps_one_record_per_live_key() {
+        let dir = temp_dir("wal-compact");
+        let opts = WalOptions { segment_bytes: 256, fsync: FsyncPolicy::Never };
+        let (mut wal, _, _) = collect_open(&dir, opts);
+        for i in 0..40u8 {
+            wal.append(&[i % 4; 16]).unwrap(); // 4 live keys, 40 records
+        }
+        assert!(wal.live_fraction_low(4));
+        let snapshot: Vec<Vec<u8>> = (0..4u8).map(|k| vec![k; 16]).collect();
+        wal.roll(Some(&snapshot)).unwrap();
+        assert_eq!(wal.records(), 4);
+        assert_eq!(segment_seqs(&dir).unwrap().len(), 1, "old segments deleted");
+        drop(wal);
+        let (_, report, seen) = collect_open(&dir, opts);
+        assert_eq!(report.records, 4);
+        assert_eq!(seen, snapshot);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wipe_resets_to_an_empty_log() {
+        let dir = temp_dir("wal-wipe");
+        let opts = WalOptions::default();
+        let (mut wal, _, _) = collect_open(&dir, opts);
+        for i in 0..5u8 {
+            wal.append(&[i]).unwrap();
+        }
+        wal.wipe().unwrap();
+        assert_eq!(wal.records(), 0);
+        drop(wal);
+        let (_, report, seen) = collect_open(&dir, opts);
+        assert_eq!(report.records, 0);
+        assert!(seen.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn garbage_file_never_panics() {
+        let dir = temp_dir("wal-garbage");
+        let opts = WalOptions::default();
+        std::fs::write(segment_path(&dir, 0), b"not a wal at all").unwrap();
+        let (_, report, seen) = collect_open(&dir, opts);
+        assert!(seen.is_empty());
+        assert!(report.truncated);
+        assert_eq!(report.discarded_bytes, 16);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fsync_policy_parses() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("never").unwrap(), FsyncPolicy::Never);
+        assert_eq!(FsyncPolicy::parse("1").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("64").unwrap(), FsyncPolicy::EveryN(64));
+        assert!(FsyncPolicy::parse("0").is_err());
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+        assert!(FsyncPolicy::parse("every0").is_err());
+        // what Display prints parses back (operators copy program output)
+        for policy in [FsyncPolicy::Always, FsyncPolicy::EveryN(7), FsyncPolicy::Never] {
+            assert_eq!(FsyncPolicy::parse(&policy.to_string()).unwrap(), policy);
+        }
+    }
+}

@@ -9,9 +9,14 @@
 //! * [`prop`] — a small property-based testing harness: sized generators,
 //!   seed-reporting on failure, and greedy shrinking for the common
 //!   container shapes.
+//! * [`soak`] — the seeded-soak loop every `*_ITERS` chaos/churn/
+//!   durability property test runs through, so a soak failure prints its
+//!   seed and iteration in one uniform, replayable format.
 
 pub mod prop;
 pub mod rng;
+pub mod soak;
 
 pub use prop::{forall, Config as PropConfig, Gen};
 pub use rng::Rng;
+pub use soak::{run_seeded, soak_seeds, temp_dir};

@@ -88,9 +88,14 @@ where
         let value = gen.generate(&mut rng, size);
         if !prop(&value) {
             let minimal = shrink_loop(&gen, value, &mut prop, cfg.max_shrinks);
+            // same `seed=… iter=…` shape as `testkit::soak::run_seeded`,
+            // so every property failure in a log reads the same way
             panic!(
-                "property failed (case {case}, replay with DVV_PROP_SEED={}):\n  \
-                 counterexample = {minimal:?}",
+                "[seeded] property FAILED: seed={} iter={}/{} \
+                 (replay: DVV_PROP_SEED={}):\n  counterexample = {minimal:?}",
+                cfg.seed,
+                case + 1,
+                cfg.cases,
                 cfg.seed
             );
         }

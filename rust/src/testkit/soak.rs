@@ -1,0 +1,128 @@
+//! Seeded-soak harness: one uniform failure format for every seed-loop
+//! property test.
+//!
+//! The repo's chaos/churn/durability property tests all share a shape:
+//! a fixed seed list for the CI gate, an `*_ITERS` env knob appending
+//! derived seeds for local soaking, and a per-seed run whose assertion
+//! messages embed the seed. Before this module each test rolled its own
+//! seed loop, and a soak failure's reproduction recipe depended on which
+//! test tripped. Now every seed loop goes through [`run_seeded`], which
+//! prints **one uniform line** on failure:
+//!
+//! ```text
+//! [seeded] <label> FAILED: seed=<s> iter=<i>/<n> (replay: DVV_SEED=<s>)
+//! ```
+//!
+//! and [`soak_seeds`] honors `DVV_SEED=<s>` to replay exactly that seed,
+//! so any failure in a `CHAOS_ITERS`/`CHURN_ITERS`/`WAL_ITERS` soak is
+//! reproducible straight from the log.
+
+use super::rng::Rng;
+
+/// The replay override: when set, [`soak_seeds`] returns exactly this
+/// one seed, ignoring the fixed list and the iteration knob.
+pub const REPLAY_ENV: &str = "DVV_SEED";
+
+/// Build a seed list: `fixed` gate seeds plus `$iters_env` derived
+/// extras (the soak knob), unless [`REPLAY_ENV`] pins a single seed.
+///
+/// Derived seeds come from a seed stream keyed by `iters_env`, so two
+/// knobs soaking in one process do not correlate.
+pub fn soak_seeds(fixed: &[u64], iters_env: &str) -> Vec<u64> {
+    if let Some(seed) = std::env::var(REPLAY_ENV)
+        .ok()
+        .and_then(|s| s.parse().ok())
+    {
+        return vec![seed];
+    }
+    let mut seeds = fixed.to_vec();
+    let iters: u64 = std::env::var(iters_env)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let knob_hash = iters_env
+        .bytes()
+        .fold(0u64, |h, b| h.wrapping_mul(131).wrapping_add(u64::from(b)));
+    let mut stream = Rng::new(0x50AC_5EED ^ knob_hash);
+    for _ in 0..iters {
+        seeds.push(stream.next_u64() >> 16);
+    }
+    seeds
+}
+
+/// Run `f` once per seed; on panic, print the uniform
+/// `[seeded] … seed=… iter=…` line (with the [`REPLAY_ENV`] recipe) and
+/// resume the panic so the test still fails.
+pub fn run_seeded(label: &str, seeds: &[u64], f: impl Fn(u64)) {
+    for (iter, &seed) in seeds.iter().enumerate() {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if let Err(panic) = outcome {
+            eprintln!(
+                "[seeded] {label} FAILED: seed={seed} iter={}/{} (replay: {REPLAY_ENV}={seed})",
+                iter + 1,
+                seeds.len()
+            );
+            std::panic::resume_unwind(panic);
+        }
+    }
+}
+
+/// Create (and return) a fresh unique scratch directory under the OS
+/// temp dir — the offline substitute for the `tempfile` crate, used by
+/// the WAL tests and benches. Callers remove it when done (a leaked dir
+/// under `$TMPDIR` on a panicking test is acceptable and aids debugging).
+pub fn temp_dir(label: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let nonce = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    let dir = std::env::temp_dir().join(format!(
+        "dvvstore-{label}-{}-{nanos}-{nonce}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_seeds_pass_through() {
+        // (no env manipulation: tests run multi-threaded)
+        let seeds = soak_seeds(&[1, 2, 3], "DVV_TEST_NO_SUCH_KNOB");
+        assert_eq!(seeds, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn run_seeded_visits_every_seed() {
+        let mut seen = Vec::new();
+        let cell = std::cell::RefCell::new(&mut seen);
+        run_seeded("visit", &[7, 8, 9], |s| {
+            cell.borrow_mut().push(s);
+        });
+        assert_eq!(seen, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn run_seeded_reports_and_repanics() {
+        let result = std::panic::catch_unwind(|| {
+            run_seeded("boom", &[4, 5], |s| assert_ne!(s, 5, "seed 5 trips"));
+        });
+        assert!(result.is_err(), "the panic must propagate");
+    }
+
+    #[test]
+    fn temp_dirs_are_unique_and_exist() {
+        let a = temp_dir("soak-test");
+        let b = temp_dir("soak-test");
+        assert_ne!(a, b);
+        assert!(a.is_dir() && b.is_dir());
+        std::fs::remove_dir_all(&a).unwrap();
+        std::fs::remove_dir_all(&b).unwrap();
+    }
+}

@@ -17,6 +17,8 @@
 //!
 //! The default gate runs fixed seeds; `CHURN_ITERS=<n>` appends `n`
 //! derived seeds so local runs can soak (`CHURN_ITERS=20 rust/ci.sh`).
+//! Failures print in the uniform `testkit::soak` format and replay with
+//! `DVV_SEED=<seed>`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -34,7 +36,7 @@ use dvvstore::server::LocalCluster;
 use dvvstore::sim::failure::{Fault, FaultPlan};
 use dvvstore::sim::Sim;
 use dvvstore::store::{Key, ShardedBackend, StorageBackend};
-use dvvstore::testkit::Rng;
+use dvvstore::testkit::{run_seeded, soak_seeds, Rng};
 use dvvstore::workload::{RandomWorkload, WorkloadSpec};
 
 const BASE_NODES: usize = 5;
@@ -44,16 +46,7 @@ const HORIZON_US: u64 = 400_000;
 
 /// Fixed seeds in the default gate, plus `CHURN_ITERS` derived extras.
 fn seeds() -> Vec<u64> {
-    let mut seeds = vec![404, 505, 606];
-    let iters: u64 = std::env::var("CHURN_ITERS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0);
-    let mut rng = Rng::new(0xC4_4194);
-    for _ in 0..iters {
-        seeds.push(rng.next_u64() >> 16);
-    }
-    seeds
+    soak_seeds(&[404, 505, 606], "CHURN_ITERS")
 }
 
 /// The decommission victim a plan names (there is exactly one).
@@ -205,9 +198,7 @@ fn churn_chaos_run(seed: u64) {
 
 #[test]
 fn churn_chaos_converges_without_lost_updates() {
-    for seed in seeds() {
-        churn_chaos_run(seed);
-    }
+    run_seeded("churn_chaos", &seeds(), churn_chaos_run);
 }
 
 // -------------------------------------------------------------------
@@ -396,7 +387,7 @@ fn tcp_session_survives_join_and_decommission() {
 
 #[test]
 fn preference_lists_stay_distinct_members_only_under_churn() {
-    for seed in seeds() {
+    run_seeded("churn_preference_lists", &seeds(), |seed| {
         let mut rng = Rng::new(seed);
         let topo = Topology::new(4, 64).unwrap();
         for step in 0..12 {
@@ -425,12 +416,12 @@ fn preference_lists_stay_distinct_members_only_under_churn() {
                 }
             }
         }
-    }
+    });
 }
 
 #[test]
 fn epoch_monotone_one_bump_per_change() {
-    for seed in seeds() {
+    run_seeded("churn_epoch_monotone", &seeds(), |seed| {
         let mut rng = Rng::new(seed ^ 0xE9);
         let topo = Topology::new(3, 32).unwrap();
         let mut last = topo.epoch();
@@ -452,12 +443,12 @@ fn epoch_monotone_one_bump_per_change() {
         // failed changes do not bump
         assert!(topo.decommission(10_000).is_err());
         assert_eq!(topo.epoch(), last);
-    }
+    });
 }
 
 #[test]
 fn join_moves_a_bounded_key_fraction() {
-    for seed in seeds() {
+    run_seeded("churn_join_movement", &seeds(), |seed| {
         // consistent hashing's point: adding the (n+1)-th node moves
         // roughly 1/(n+1) of the keys, never a wholesale reshuffle
         let mut ring = Ring::new(4, 128).unwrap();
@@ -483,7 +474,7 @@ fn join_moves_a_bounded_key_fraction() {
             let now = ring.primary_for(k).unwrap();
             assert!(now == b || now == 4, "seed {seed}: key {k} moved {b}->{now}");
         }
-    }
+    });
 }
 
 #[test]

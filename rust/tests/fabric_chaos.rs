@@ -17,7 +17,8 @@
 //!
 //! The default gate runs 3 fixed seeds per backend; `CHAOS_ITERS=<n>`
 //! appends `n` extra derived seeds so local runs can soak
-//! (`CHAOS_ITERS=50 rust/ci.sh`).
+//! (`CHAOS_ITERS=50 rust/ci.sh`). Failures print in the uniform
+//! `testkit::soak` format and replay with `DVV_SEED=<seed>`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -29,7 +30,7 @@ use dvvstore::oracle::SharedOracle;
 use dvvstore::server::LocalCluster;
 use dvvstore::sim::failure::FaultPlan;
 use dvvstore::store::{InMemoryBackend, ShardedBackend, StorageBackend};
-use dvvstore::testkit::Rng;
+use dvvstore::testkit::{run_seeded, soak_seeds, Rng};
 
 const NODES: usize = 5;
 const KEYS: u64 = 8;
@@ -38,16 +39,7 @@ const HORIZON_US: u64 = 400_000;
 
 /// Fixed seeds in the default gate, plus `CHAOS_ITERS` derived extras.
 fn seeds() -> Vec<u64> {
-    let mut seeds = vec![101, 202, 303];
-    let iters: u64 = std::env::var("CHAOS_ITERS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0);
-    let mut rng = Rng::new(0xC0FFEE);
-    for _ in 0..iters {
-        seeds.push(rng.next_u64() >> 16);
-    }
-    seeds
+    soak_seeds(&[101, 202, 303], "CHAOS_ITERS")
 }
 
 /// One chaos run: drive a random schedule while client threads do
@@ -152,16 +144,16 @@ fn chaos_run<B: StorageBackend<DvvMech>>(
 
 #[test]
 fn chaos_schedules_converge_without_lost_updates_sharded() {
-    for seed in seeds() {
+    run_seeded("fabric_chaos_sharded", &seeds(), |seed| {
         chaos_run(seed, |_| ShardedBackend::with_shards(8));
-    }
+    });
 }
 
 #[test]
 fn chaos_schedules_converge_without_lost_updates_flat() {
-    for seed in seeds() {
+    run_seeded("fabric_chaos_flat", &seeds(), |seed| {
         chaos_run(seed, |_| InMemoryBackend::new());
-    }
+    });
 }
 
 #[test]

@@ -1,19 +1,24 @@
-//! Property test: [`ShardedBackend`] and [`InMemoryBackend`] are
-//! observationally equivalent — the backend decides *where* states live
-//! and *what locks* cover them, never *what* the §4 kernel computes.
+//! Property test: [`ShardedBackend`], [`InMemoryBackend`], and
+//! [`DurableBackend`] are observationally equivalent — the backend
+//! decides *where* states live, *what locks* cover them, and *whether
+//! they survive a process death*, never *what* the §4 kernel computes.
 //!
 //! A random sequence of client PUTs (blind and informed) and
 //! replica-to-replica state shipments is applied to a pair of replicas
 //! per backend; every externally observable quantity must match exactly.
-//! Failures shrink to a minimal op sequence via `testkit::prop` and
-//! replay with `DVV_PROP_SEED`.
+//! The durable variant additionally closes and reopens its stores from
+//! disk mid-check: the same ops must yield the same sibling sets after
+//! recovery. Failures shrink to a minimal op sequence via
+//! `testkit::prop` and replay with `DVV_PROP_SEED`.
 
 use dvvstore::clocks::Actor;
 use dvvstore::kernel::mechs::DvvMech;
 use dvvstore::kernel::{Val, WriteMeta};
-use dvvstore::store::{KeyStore, ShardedBackend, StorageBackend};
+use dvvstore::store::{
+    DurableBackend, FsyncPolicy, KeyStore, ShardedBackend, StorageBackend, WalOptions,
+};
 use dvvstore::testkit::prop::{forall, from_fn, vecs, Config, Gen};
-use dvvstore::testkit::Rng;
+use dvvstore::testkit::{temp_dir, Rng};
 
 const REPLICAS: usize = 2;
 const KEYS: u64 = 16;
@@ -77,6 +82,46 @@ fn sharded_pair() -> Vec<KeyStore<DvvMech, ShardedBackend<DvvMech>>> {
         .collect()
 }
 
+/// Small segments so a 120-op sequence actually rolls and compacts;
+/// fsync never so the sweep stays fast (a clean close loses nothing —
+/// the crash-loss axis is `rust/tests/durable_chaos.rs`'s job).
+fn durable_opts() -> WalOptions {
+    WalOptions { segment_bytes: 2048, fsync: FsyncPolicy::Never }
+}
+
+fn durable_pair(
+    dirs: &[std::path::PathBuf],
+) -> Vec<KeyStore<DvvMech, DurableBackend<DvvMech>>> {
+    dirs.iter()
+        .map(|dir| {
+            KeyStore::with_backend(
+                DvvMech,
+                DurableBackend::open(dir, 2, durable_opts()).unwrap(),
+            )
+        })
+        .collect()
+}
+
+/// Every externally observable quantity of two stores matches.
+fn equivalent<A: StorageBackend<DvvMech>, B: StorageBackend<DvvMech>>(
+    a: &KeyStore<DvvMech, A>,
+    b: &KeyStore<DvvMech, B>,
+) -> bool {
+    let mut ak: Vec<u64> = a.keys().collect();
+    let mut bk: Vec<u64> = b.keys().collect();
+    ak.sort_unstable();
+    bk.sort_unstable();
+    ak == bk
+        && a.key_count() == b.key_count()
+        && a.metadata_bytes() == b.metadata_bytes()
+        && a.max_siblings() == b.max_siblings()
+        && (0..KEYS).all(|key| {
+            a.state(key) == b.state(key)
+                && a.read(key) == b.read(key)
+                && a.sibling_count(key) == b.sibling_count(key)
+        })
+}
+
 #[test]
 fn sharded_and_flat_backends_are_observationally_equivalent() {
     forall(&Config::default().cases(60), gen_ops(), |ops| {
@@ -84,22 +129,38 @@ fn sharded_and_flat_backends_are_observationally_equivalent() {
         let sharded = sharded_pair();
         apply(&flat, ops);
         apply(&sharded, ops);
-        (0..REPLICAS).all(|r| {
-            let mut fk: Vec<u64> = flat[r].keys().collect();
-            let mut sk: Vec<u64> = sharded[r].keys().collect();
-            fk.sort_unstable();
-            sk.sort_unstable();
-            fk == sk
-                && flat[r].key_count() == sharded[r].key_count()
-                && flat[r].metadata_bytes() == sharded[r].metadata_bytes()
-                && flat[r].max_siblings() == sharded[r].max_siblings()
-                && (0..KEYS).all(|key| {
-                    flat[r].state(key) == sharded[r].state(key)
-                        && flat[r].read(key) == sharded[r].read(key)
-                        && flat[r].sibling_count(key) == sharded[r].sibling_count(key)
-                })
-        })
+        (0..REPLICAS).all(|r| equivalent(&flat[r], &sharded[r]))
     });
+}
+
+#[test]
+fn durable_backend_is_observationally_equivalent_and_survives_reopen() {
+    let root = temp_dir("backend-equiv");
+    let mut case = 0u64;
+    forall(&Config::default().cases(30), gen_ops(), |ops| {
+        case += 1;
+        let dirs: Vec<std::path::PathBuf> =
+            (0..REPLICAS).map(|r| root.join(format!("case{case}-r{r}"))).collect();
+        let flat = flat_pair();
+        let durable = durable_pair(&dirs);
+        apply(&flat, ops);
+        apply(&durable, ops);
+        let live_ok = (0..REPLICAS).all(|r| equivalent(&flat[r], &durable[r]));
+
+        // close-and-reopen: the same ops must yield the same sibling
+        // sets after recovery from the logs alone
+        drop(durable);
+        let recovered = durable_pair(&dirs);
+        let recovered_ok = (0..REPLICAS).all(|r| {
+            recovered[r].backend().recovery_report().discarded_bytes == 0
+                && equivalent(&flat[r], &recovered[r])
+        });
+        for dir in &dirs {
+            std::fs::remove_dir_all(dir).unwrap();
+        }
+        live_ok && recovered_ok
+    });
+    std::fs::remove_dir_all(&root).unwrap();
 }
 
 #[test]
