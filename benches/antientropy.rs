@@ -1,16 +1,33 @@
-//! E10: bulk anti-entropy — rust scalar kernel vs the AOT-compiled XLA
-//! dominance kernel, sweeping the number of divergent keys per exchange.
+//! Anti-entropy benches, two sections:
 //!
-//! Requires `make artifacts`; skips the XLA rows when absent.
+//! * **E10 sync**: bulk reconciliation — rust scalar kernel vs the
+//!   AOT-compiled XLA dominance kernel, sweeping divergent keys per
+//!   exchange. Requires `make artifacts`; skips the XLA rows when
+//!   absent.
+//! * **ae_scale**: divergence *detection* over growing keyspaces —
+//!   the whole-store scan ([`diff_pairs`]) vs the hash-tree walk
+//!   ([`diff_pairs_merkle`]) on quiesced replica pairs at 10k/100k
+//!   (and 1M keys in full mode), plus round cost vs diverged-key
+//!   count at a fixed keyspace. The headline: quiesced tree-walk cost
+//!   is sublinear in the keyspace (a handful of root comparisons)
+//!   while the scan grows linearly.
+//!
+//! Results land in `BENCH_ae_scale.json` (path override:
+//! `BENCH_AE_SCALE_JSON`); `rust/ci.sh` runs this bench in quick mode
+//! and fails the gate when the artifact is missing.
+//!
 //! Regenerate with `cargo bench --bench antientropy`.
 
-use dvvstore::antientropy::{sync_scalar, sync_xla, KeyPair};
-use dvvstore::bench_support::{bb, Options, Suite};
+use dvvstore::antientropy::{diff_pairs, diff_pairs_merkle, sync_scalar, sync_xla, KeyPair};
+use dvvstore::bench_support::{bb, Options, Stats, Suite};
 use dvvstore::clocks::dvv::Dvv;
 use dvvstore::clocks::{Actor, VersionVector};
 use dvvstore::kernel::mechanism::Val;
+use dvvstore::kernel::mechs::DvvMech;
+use dvvstore::kernel::{Mechanism, WriteMeta};
 use dvvstore::runtime::batch::SlotMap;
 use dvvstore::runtime::{artifact, XlaEngine};
+use dvvstore::store::{KeyStore, ShardedBackend};
 use dvvstore::testkit::Rng;
 
 const REPLICAS: u32 = 8;
@@ -43,10 +60,136 @@ fn gen_pairs(keys: u64, rng: &mut Rng) -> Vec<KeyPair> {
         .collect()
 }
 
+type Store = KeyStore<DvvMech, ShardedBackend<DvvMech>>;
+
+/// Two fully-converged replicas holding `keys` single-sibling keys —
+/// the quiesced pair a periodic AE round usually meets.
+fn converged_pair(keys: u64) -> (Store, Store) {
+    let local = KeyStore::with_backend(DvvMech, ShardedBackend::with_shards(64));
+    let remote = KeyStore::with_backend(DvvMech, ShardedBackend::with_shards(64));
+    let meta = WriteMeta::basic(Actor::client(0));
+    let empty = <DvvMech as Mechanism>::Context::default();
+    for k in 0..keys {
+        local.write(k, &empty, Val::new(k + 1, 8), Actor::server(0), &meta);
+        remote.merge_key(k, &local.state(k));
+    }
+    (local, remote)
+}
+
+/// Large-keyspace detection soak: scan vs tree walk on quiesced pairs
+/// per keyspace size, then round cost vs diverged-key count.
+fn ae_scale(suite: &mut Suite, quick: bool) {
+    let sizes: &[u64] =
+        if quick { &[10_000, 100_000] } else { &[10_000, 100_000, 1_000_000] };
+    for &keys in sizes {
+        let (local, remote) = converged_pair(keys);
+        let param = format!("keys={keys}");
+        suite.bench("quiesced/scan", &param, || {
+            bb(diff_pairs(&local, &remote).len());
+        });
+        suite.bench("quiesced/merkle", &param, || {
+            bb(diff_pairs_merkle(&local, &remote).len());
+        });
+    }
+
+    // round cost vs divergence at a fixed keyspace: diverge the first
+    // `target` keys on the remote (cumulative) and re-measure
+    const KEYS: u64 = 100_000;
+    let (local, remote) = converged_pair(KEYS);
+    let meta = WriteMeta::basic(Actor::client(0));
+    let mut diverged = 0u64;
+    for &target in &[1u64, 100, 10_000] {
+        while diverged < target {
+            let k = diverged;
+            let (_, ctx) = remote.read(k);
+            remote.write(k, &ctx, Val::new(KEYS + k + 1, 8), Actor::server(1), &meta);
+            diverged += 1;
+        }
+        let param = format!("keys={KEYS}/diverged={target}");
+        suite.bench("diverged/merkle", &param, || {
+            bb(diff_pairs_merkle(&local, &remote).len());
+        });
+        suite.bench("diverged/scan", &param, || {
+            bb(diff_pairs(&local, &remote).len());
+        });
+    }
+}
+
+fn json_escape_free(s: &str) -> bool {
+    s.chars().all(|c| c.is_ascii_alphanumeric() || "/_=.-".contains(c))
+}
+
+/// Hand-rolled JSON (no serde in the offline build): flat result rows
+/// plus the quiesced-round scaling evidence — the merkle cost ratio
+/// between the smallest and largest keyspace must sit far below the
+/// keyspace ratio (sublinear detection), and the per-size
+/// scan-over-merkle speedup makes the win legible.
+fn write_json(path: &str, quick: bool, results: &[Stats]) -> std::io::Result<()> {
+    let mut rows = String::new();
+    for (i, s) in results.iter().enumerate() {
+        assert!(
+            json_escape_free(&s.name) && json_escape_free(&s.param),
+            "bench names are JSON-safe"
+        );
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"name\": \"{}\", \"param\": \"{}\", \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"min_ns\": {:.1}}}",
+            s.name, s.param, s.mean_ns, s.p50_ns, s.p95_ns, s.min_ns
+        ));
+    }
+
+    let keys_of = |s: &Stats| -> Option<u64> {
+        s.param.strip_prefix("keys=").and_then(|r| r.parse().ok())
+    };
+    let quiesced: Vec<(u64, f64, f64)> = results
+        .iter()
+        .filter(|s| s.name == "quiesced/merkle")
+        .filter_map(|m| {
+            let keys = keys_of(m)?;
+            let scan = results
+                .iter()
+                .find(|s| s.name == "quiesced/scan" && s.param == m.param)?;
+            Some((keys, m.mean_ns, scan.mean_ns))
+        })
+        .collect();
+    let mut speedups = String::new();
+    for (i, (keys, merkle_ns, scan_ns)) in quiesced.iter().enumerate() {
+        if i > 0 {
+            speedups.push_str(", ");
+        }
+        let x = if *merkle_ns > 0.0 { scan_ns / merkle_ns } else { 0.0 };
+        speedups.push_str(&format!("\"keys={keys}\": {x:.1}"));
+    }
+    let scaling = match (quiesced.first(), quiesced.last()) {
+        (Some(&(k0, m0, _)), Some(&(k1, m1, _))) if k1 > k0 && m0 > 0.0 => {
+            let size_ratio = k1 as f64 / k0 as f64;
+            let cost_ratio = m1 / m0;
+            format!(
+                "{{\"size_ratio\": {size_ratio:.1}, \"merkle_cost_ratio\": {cost_ratio:.2}, \
+                 \"sublinear\": {}}}",
+                cost_ratio < size_ratio
+            )
+        }
+        _ => "{}".to_string(),
+    };
+    let json = format!(
+        "{{\n  \"suite\": \"ae_scale\",\n  \"quick\": {quick},\n  \
+         \"scan_over_merkle_speedup\": {{{speedups}}},\n  \
+         \"quiesced_scaling\": {scaling},\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    std::fs::write(path, json)
+}
+
 fn main() {
+    let opts = Options::from_args();
+    let quick = opts.quick;
     let mut suite = Suite::new(
-        "antientropy (E10: scalar vs XLA bulk dominance)",
-        Options::from_args(),
+        "antientropy (E10 bulk sync + ae_scale divergence detection)",
+        opts,
     );
     let mut rng = Rng::new(2718);
     let have_artifacts = artifact::default_dir().join("manifest.txt").exists();
@@ -72,6 +215,16 @@ fn main() {
                 bb(sync_xla(eng, &pairs, &slots).expect("xla sync"));
             });
         }
+    }
+
+    ae_scale(&mut suite, quick);
+
+    let results: Vec<Stats> = suite.results().to_vec();
+    let path = std::env::var("BENCH_AE_SCALE_JSON")
+        .unwrap_or_else(|_| "BENCH_ae_scale.json".to_string());
+    match write_json(&path, quick, &results) {
+        Ok(()) => eprintln!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
     }
     suite.finish();
     println!(

@@ -33,6 +33,13 @@ export CHURN_ITERS="${CHURN_ITERS:-2}"
 #   WAL_ITERS=20 rust/ci.sh
 export WAL_ITERS="${WAL_ITERS:-2}"
 
+# Merkle anti-entropy soak knob, same shape: the hash-tree equivalence
+# properties (rust/tests/merkle_ae.rs — incremental-vs-rebuilt roots,
+# tree-diff-vs-scan-diff worklists, chaos with tree-walk AE) always run
+# their fixed seeds; MERKLE_ITERS appends extra derived seeds.
+#   MERKLE_ITERS=20 rust/ci.sh
+export MERKLE_ITERS="${MERKLE_ITERS:-2}"
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
@@ -55,7 +62,7 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 # fails the gate (a missing baseline used to pass unnoticed — the `if`
 # only echoed).
 bench_smoke() {
-    local name="$1" artifact="BENCH_$1.json"
+    local name="$1" artifact="BENCH_${2:-$1}.json"
     echo "==> cargo bench --bench $name (smoke run, quick mode)"
     rm -f "$artifact"
     DVV_BENCH_QUICK=1 cargo bench --bench "$name"
@@ -72,5 +79,8 @@ bench_smoke wire
 bench_smoke ring
 # wal: append throughput per fsync policy + recovery replay time.
 bench_smoke wal
+# antientropy → ae_scale: scan vs hash-tree divergence detection over
+# growing keyspaces (quiesced-round cost must stay sublinear in keys).
+bench_smoke antientropy ae_scale
 
 echo "ci OK"

@@ -1,0 +1,342 @@
+//! Incremental hash trees over the key space: O(log n) divergence
+//! detection for anti-entropy (the Riak/bigsets "hashtree" idea).
+//!
+//! [`diff_pairs`](super::diff_pairs) scans whole stores, so every AE
+//! round costs O(keyspace) even when nothing diverged. A [`ShardTree`]
+//! summarizes one backend shard as a fixed-fanout tree of 64-bit
+//! digests; two replicas compare roots, descend only into subtrees whose
+//! digests differ, and end at the handful of leaves that actually hold
+//! divergent keys. A quiesced pair's exchange is one root comparison.
+//!
+//! ## Shape
+//!
+//! The tree is a radix-16 trie of depth [`DEPTH`] over the top
+//! [`LEAF_BITS`] bits of `mix64(key)`: 65 536 leaves, each covering a
+//! uniform slice of the (hashed) key space. Interior levels are stored
+//! sparsely (`HashMap` per level) so an empty or small shard costs O(keys
+//! stored), not O(tree size).
+//!
+//! ## Digests compose by addition
+//!
+//! Every stored key contributes one well-mixed term,
+//! `digest::leaf(key, M::state_digest(state))`, and every node's digest
+//! is the **wrapping sum** of the terms below it. Addition is
+//! order-independent and invertible, which buys two things:
+//!
+//! * *incremental maintenance*: replacing a key's term is
+//!   `sum - old + new` on the leaf plus the same delta on the O([`DEPTH`])
+//!   ancestors (deltas are batched in a dirty-leaf map and propagated on
+//!   the next read, so a write is O(1) plus amortized O(depth));
+//! * *composability*: a whole store's root is the sum of its shard
+//!   roots — comparable across replicas with different shard counts or
+//!   backend types, because the sum only depends on the key/state
+//!   multiset.
+//!
+//! The price is probabilistic equality: two different subtrees collide
+//! with probability ~2⁻⁶⁴ per comparison, in which case the walk prunes
+//! real divergence until a later write reshuffles the digests. This is
+//! the same bet the Riak hashtree lineage makes; the scan path
+//! ([`super::diff_pairs`]) remains available as the exact oracle.
+//!
+//! Lock discipline: backends run [`ShardTree`] methods under their
+//! stripe locks (see
+//! [`StorageBackend::with_merkle`](crate::store::StorageBackend::with_merkle)),
+//! and a tree diff holds *two* stores' locks (local then remote). AE
+//! rounds are sequential per pair, so the nesting is never reversed
+//! concurrently; never diff a store against itself.
+
+use std::collections::HashMap;
+
+use crate::kernel::digest;
+use crate::store::Key;
+
+/// log₂ of the tree fanout (16 children per interior node).
+pub const FANOUT_BITS: u32 = 4;
+
+/// Interior levels between the root and the leaves.
+pub const DEPTH: u32 = 4;
+
+/// Bits of `mix64(key)` used to address a leaf (16 → 65 536 leaves).
+pub const LEAF_BITS: u32 = FANOUT_BITS * DEPTH;
+
+/// The leaf slot a key hashes to.
+fn leaf_of(key: Key) -> u64 {
+    digest::mix64(key) >> (64 - LEAF_BITS)
+}
+
+#[derive(Debug, Clone, Default)]
+struct Leaf {
+    /// Wrapping sum of `keys` values.
+    sum: u64,
+    /// Per-key leaf digest ([`digest::leaf`]); mirrors the backend map.
+    keys: HashMap<Key, u64>,
+}
+
+/// Counters from one tree walk, for tests and the scale bench: a
+/// quiesced pair shows `nodes_compared == 1`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiffStats {
+    /// Digest comparisons performed (interior + leaf sums).
+    pub nodes_compared: u64,
+    /// Leaves whose per-key maps were compared entry by entry.
+    pub leaves_compared: u64,
+    /// Candidate keys emitted.
+    pub keys_flagged: usize,
+}
+
+/// The incremental hash tree summarizing one backend shard.
+#[derive(Debug, Clone, Default)]
+pub struct ShardTree {
+    /// Leaf slots, sparse: absent slot ≡ sum 0, no keys.
+    leaves: HashMap<u64, Leaf>,
+    /// Interior sums per level; `levels[0]` is the root level (index 0),
+    /// `levels[l]` has up to 16ˡ populated nodes. Absent ≡ 0 (a node
+    /// whose deltas cancelled is equal to one never touched).
+    levels: Vec<HashMap<u64, u64>>,
+    /// Dirty-leaf deltas not yet propagated to interior levels.
+    pending: HashMap<u64, u64>,
+}
+
+impl ShardTree {
+    /// Empty tree.
+    pub fn new() -> ShardTree {
+        ShardTree {
+            leaves: HashMap::new(),
+            levels: (0..DEPTH).map(|_| HashMap::new()).collect(),
+            pending: HashMap::new(),
+        }
+    }
+
+    /// Record `key`'s current state digest (as produced by
+    /// `Mechanism::state_digest`), replacing any previous term for the
+    /// key. O(1): the interior update is deferred to [`flush`].
+    ///
+    /// [`flush`]: ShardTree::flush
+    pub fn record(&mut self, key: Key, state_digest: u64) {
+        let slot = leaf_of(key);
+        let leaf = self.leaves.entry(slot).or_default();
+        let term = digest::leaf(key, state_digest);
+        let old = leaf.keys.insert(key, term).unwrap_or(0);
+        let delta = term.wrapping_sub(old);
+        if delta == 0 {
+            return;
+        }
+        leaf.sum = leaf.sum.wrapping_add(delta);
+        let e = self.pending.entry(slot).or_insert(0);
+        *e = e.wrapping_add(delta);
+    }
+
+    /// Drop everything (the shard was wiped).
+    pub fn clear(&mut self) {
+        *self = ShardTree::new();
+    }
+
+    /// Rebuild from scratch over `(key, state_digest)` items — what a
+    /// durable shard does after WAL replay, and what the property tests
+    /// compare the incremental tree against.
+    pub fn rebuild(items: impl IntoIterator<Item = (Key, u64)>) -> ShardTree {
+        let mut t = ShardTree::new();
+        for (key, sd) in items {
+            t.record(key, sd);
+        }
+        t
+    }
+
+    /// Propagate pending leaf deltas up the interior levels: O(depth)
+    /// per dirty leaf, amortizing bursts of writes to the same leaf.
+    fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        for (slot, delta) in self.pending.drain() {
+            if delta == 0 {
+                continue;
+            }
+            for (l, level) in self.levels.iter_mut().enumerate() {
+                let idx = slot >> (FANOUT_BITS * (DEPTH - l as u32));
+                let e = level.entry(idx).or_insert(0);
+                *e = e.wrapping_add(delta);
+            }
+        }
+    }
+
+    /// Root digest: the wrapping sum of every stored key's leaf term.
+    /// 0 for an empty shard.
+    pub fn root(&mut self) -> u64 {
+        self.flush();
+        self.levels[0].get(&0).copied().unwrap_or(0)
+    }
+
+    /// Number of keys the tree currently covers.
+    pub fn key_count(&self) -> usize {
+        self.leaves.values().map(|l| l.keys.len()).sum()
+    }
+
+    /// Digest of node `idx` at `level` (`level == DEPTH` addresses leaf
+    /// sums). Absent nodes read as 0.
+    fn node(&self, level: u32, idx: u64) -> u64 {
+        if level == DEPTH {
+            self.leaves.get(&idx).map(|l| l.sum).unwrap_or(0)
+        } else {
+            self.levels[level as usize].get(&idx).copied().unwrap_or(0)
+        }
+    }
+}
+
+/// Walk two trees top-down, descending only where digests differ, and
+/// return the keys that may diverge (a superset of the true divergence
+/// set: a leaf-term mismatch flags the key, but the caller still
+/// re-checks states — see [`super::diff_pairs_merkle`]).
+///
+/// Keys present on one side only are flagged too (their term is compared
+/// against the absent side's implicit 0).
+pub fn diff(a: &mut ShardTree, b: &mut ShardTree) -> (Vec<Key>, DiffStats) {
+    a.flush();
+    b.flush();
+    let mut stats = DiffStats::default();
+    let mut keys = Vec::new();
+    // (level, idx) nodes whose digests are known to differ get their
+    // children probed; the walk starts by probing the root itself.
+    let mut stack: Vec<(u32, u64)> = vec![(0, 0)];
+    while let Some((level, idx)) = stack.pop() {
+        stats.nodes_compared += 1;
+        if a.node(level, idx) == b.node(level, idx) {
+            continue; // identical subtree: prune
+        }
+        if level == DEPTH {
+            stats.leaves_compared += 1;
+            let empty = Leaf::default();
+            let la = a.leaves.get(&idx).unwrap_or(&empty);
+            let lb = b.leaves.get(&idx).unwrap_or(&empty);
+            for (&key, &term) in &la.keys {
+                if lb.keys.get(&key).copied().unwrap_or(0) != term {
+                    keys.push(key);
+                }
+            }
+            for (&key, _) in &lb.keys {
+                if !la.keys.contains_key(&key) {
+                    keys.push(key);
+                }
+            }
+        } else {
+            for child in 0..(1u64 << FANOUT_BITS) {
+                stack.push((level + 1, (idx << FANOUT_BITS) | child));
+            }
+        }
+    }
+    stats.keys_flagged = keys.len();
+    (keys, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    fn filled(items: &[(Key, u64)]) -> ShardTree {
+        ShardTree::rebuild(items.iter().copied())
+    }
+
+    #[test]
+    fn empty_tree_root_is_zero() {
+        assert_eq!(ShardTree::new().root(), 0);
+    }
+
+    #[test]
+    fn root_is_order_independent() {
+        let mut fwd = filled(&[(1, 10), (2, 20), (3, 30)]);
+        let mut rev = filled(&[(3, 30), (1, 10), (2, 20)]);
+        assert_eq!(fwd.root(), rev.root());
+        assert_ne!(fwd.root(), 0);
+    }
+
+    #[test]
+    fn incremental_update_matches_rebuild() {
+        let mut t = filled(&[(1, 10), (2, 20)]);
+        let _ = t.root(); // force a flush mid-history
+        t.record(1, 11); // overwrite
+        t.record(3, 30); // insert
+        let mut fresh = filled(&[(1, 11), (2, 20), (3, 30)]);
+        assert_eq!(t.root(), fresh.root());
+    }
+
+    #[test]
+    fn rerecording_same_digest_changes_nothing() {
+        let mut t = filled(&[(1, 10), (2, 20)]);
+        let before = t.root();
+        t.record(1, 10);
+        assert_eq!(t.root(), before);
+        assert!(t.pending.is_empty());
+    }
+
+    #[test]
+    fn diff_of_identical_trees_prunes_at_the_root() {
+        let mut a = filled(&[(1, 10), (2, 20), (3, 30)]);
+        let mut b = filled(&[(3, 30), (2, 20), (1, 10)]);
+        let (keys, stats) = diff(&mut a, &mut b);
+        assert!(keys.is_empty());
+        assert_eq!(stats.nodes_compared, 1, "quiesced pair = one comparison");
+    }
+
+    #[test]
+    fn diff_flags_changed_missing_and_extra_keys() {
+        let mut a = filled(&[(1, 10), (2, 20), (3, 30)]);
+        let mut b = filled(&[(1, 10), (2, 21), (4, 40)]);
+        let (mut keys, stats) = diff(&mut a, &mut b);
+        keys.sort_unstable();
+        assert_eq!(keys, vec![2, 3, 4]);
+        assert_eq!(stats.keys_flagged, 3);
+        assert!(stats.leaves_compared >= 1);
+    }
+
+    #[test]
+    fn diff_against_empty_flags_everything() {
+        let mut a = filled(&[(7, 70), (8, 80)]);
+        let mut b = ShardTree::new();
+        let (mut keys, _) = diff(&mut a, &mut b);
+        keys.sort_unstable();
+        assert_eq!(keys, vec![7, 8]);
+        let (mut keys_rev, _) = diff(&mut b, &mut a);
+        keys_rev.sort_unstable();
+        assert_eq!(keys_rev, vec![7, 8], "diff is symmetric in flagged keys");
+    }
+
+    #[test]
+    fn sum_of_roots_is_sharding_independent() {
+        // one tree over all keys vs. keys split across two trees: the
+        // additive root composes identically
+        let items: Vec<(Key, u64)> = (0..100).map(|k| (k, k * 31 + 7)).collect();
+        let mut whole = filled(&items);
+        let mut even = filled(&items.iter().copied().filter(|(k, _)| k % 2 == 0).collect::<Vec<_>>());
+        let mut odd = filled(&items.iter().copied().filter(|(k, _)| k % 2 == 1).collect::<Vec<_>>());
+        assert_eq!(whole.root(), even.root().wrapping_add(odd.root()));
+    }
+
+    #[test]
+    fn seeded_walk_cost_tracks_divergence_not_size() {
+        let mut rng = Rng::new(42);
+        let items: Vec<(Key, u64)> = (0..5_000).map(|k| (k, rng.next_u64())).collect();
+        let mut a = filled(&items);
+        let mut b = filled(&items);
+        // perturb 5 keys on b
+        for k in [10u64, 999, 2_500, 3_333, 4_999] {
+            b.record(k, rng.next_u64());
+        }
+        let (mut keys, stats) = diff(&mut a, &mut b);
+        keys.sort_unstable();
+        assert_eq!(keys, vec![10, 999, 2_500, 3_333, 4_999]);
+        // 5 divergent leaves → ≤ 5 root-to-leaf paths, each probing 16
+        // children per interior node; far below the 5 000-key scan
+        let bound = 1 + 5 * (DEPTH as u64) * 16;
+        assert!(stats.nodes_compared <= bound, "{stats:?} vs bound {bound}");
+    }
+
+    #[test]
+    fn clear_resets_to_empty() {
+        let mut t = filled(&[(1, 10)]);
+        assert_ne!(t.root(), 0);
+        t.clear();
+        assert_eq!(t.root(), 0);
+        assert_eq!(t.key_count(), 0);
+    }
+}

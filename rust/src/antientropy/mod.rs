@@ -16,18 +16,33 @@
 //! `benches/antientropy.rs` measures the crossover batch size between the
 //! two; `examples/antientropy_accel.rs` demos the XLA path end to end.
 //!
-//! Worklists come from [`diff_pairs`] (whole store) or
-//! [`diff_pairs_in_shard`] (one backend shard at a time — the unit the
-//! TCP server's [`anti_entropy_round`] batches through
-//! [`KeyStore::merge_batch`], so reconciliation takes one stripe-lock
-//! round per shard rather than one lock per key). In the threaded
-//! cluster a pair exchange only runs when the chaos fabric
+//! Worklists come from two interchangeable detectors:
+//!
+//! * the **scan path** — [`diff_pairs`] (whole store) or
+//!   [`diff_pairs_in_shard`] (one backend shard at a time) walks every
+//!   key on both sides: exact, O(keyspace) per round;
+//! * the **tree path** — [`diff_pairs_merkle`] /
+//!   [`diff_pairs_in_shard_merkle`] compares the incremental hash trees
+//!   the backends maintain on the write path ([`merkle`]) and re-checks
+//!   only the keys under diverged subtrees: O(log n) digests for a
+//!   quiesced pair, O(divergence · log n) otherwise, with a ~2⁻⁶⁴
+//!   per-comparison false-prune probability.
+//!
+//! Both emit the *same* worklist shape (and, up to that collision bound,
+//! the same worklist — property-tested in `rust/tests/merkle_ae.rs`), so
+//! the sync step is oblivious to which detector ran. The shard-level
+//! variants are the unit the TCP server's [`anti_entropy_round`] batches
+//! through [`KeyStore::merge_batch`], so reconciliation takes one
+//! stripe-lock round per shard rather than one lock per key. In the
+//! threaded cluster a pair exchange only runs when the chaos fabric
 //! ([`crate::server::fabric::Fabric`]) delivers both directions of the
 //! link that round — crashed or partitioned replicas simply miss the
 //! round and catch up after healing.
 //!
 //! [`anti_entropy_round`]: crate::server::LocalCluster::anti_entropy_round
 //! [`KeyStore::merge_batch`]: crate::store::KeyStore::merge_batch
+
+pub mod merkle;
 
 use crate::clocks::dvv::Dvv;
 use crate::error::Result;
@@ -236,6 +251,70 @@ where
         keys.extend(remote.keys().filter(|&k| local.shard_of(k) == shard));
     }
     diff_keys(local, remote, keys)
+}
+
+/// Tree-walk variant of [`diff_pairs`]: compare the two stores'
+/// incremental hash trees shard by shard, then re-check only the flagged
+/// keys' states. Emits the identical worklist (same keys, same order,
+/// same sibling snapshots) — the tree walk yields a *candidate* superset
+/// and the final [`same_siblings`] filter plus global sort are shared
+/// with the scan path, so the two differ only if a 2⁻⁶⁴ digest collision
+/// prunes real divergence.
+///
+/// Per-shard trees only align when the two backends agree on the key
+/// partition, i.e. when their shard counts match
+/// ([`StorageBackend`](crate::store::StorageBackend) contract); on a
+/// mismatch this falls back to the scan path.
+pub fn diff_pairs_merkle<BL, BR>(
+    local: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BL>,
+    remote: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BR>,
+) -> Vec<KeyPair>
+where
+    BL: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+    BR: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+{
+    if local.shard_count() != remote.shard_count() {
+        return diff_pairs(local, remote);
+    }
+    let mut keys = Vec::new();
+    for shard in 0..local.shard_count() {
+        keys.extend(merkle_candidates(local, remote, shard));
+    }
+    diff_keys(local, remote, keys)
+}
+
+/// Tree-walk variant of [`diff_pairs_in_shard`]; same worklist, same
+/// fallback rule as [`diff_pairs_merkle`].
+pub fn diff_pairs_in_shard_merkle<BL, BR>(
+    local: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BL>,
+    remote: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BR>,
+    shard: usize,
+) -> Vec<KeyPair>
+where
+    BL: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+    BR: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+{
+    if local.shard_count() != remote.shard_count() {
+        return diff_pairs_in_shard(local, remote, shard);
+    }
+    diff_keys(local, remote, merkle_candidates(local, remote, shard))
+}
+
+/// Candidate keys for one matching shard pair, via the tree walk. Holds
+/// `local`'s stripe lock, then `remote`'s (see the [`merkle`] module
+/// docs for the lock discipline).
+fn merkle_candidates<BL, BR>(
+    local: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BL>,
+    remote: &crate::store::KeyStore<crate::kernel::mechs::DvvMech, BR>,
+    shard: usize,
+) -> Vec<Key>
+where
+    BL: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+    BR: crate::store::StorageBackend<crate::kernel::mechs::DvvMech>,
+{
+    local.backend().with_merkle(shard, |tl| {
+        remote.backend().with_merkle(shard, |tr| merkle::diff(tl, tr).0)
+    })
 }
 
 #[cfg(test)]

@@ -84,8 +84,9 @@ impl TcpClient {
     }
 
     /// Server statistics:
-    /// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes)`.
-    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64, u64, u64)> {
+    /// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes, merkle_root)`.
+    #[allow(clippy::type_complexity)]
+    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64, u64, u64, u64)> {
         match self.roundtrip(&BinRequest::Stats)? {
             (protocol::OP_STATS_REPLY, payload) => {
                 let stats = protocol::decode_stats_reply(&payload)?;

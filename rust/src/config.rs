@@ -294,11 +294,16 @@ pub struct AntiEntropyConfig {
     pub period_us: u64,
     /// Use the XLA bulk-dominance artifact above this batch size.
     pub xla_batch_threshold: usize,
+    /// Detect divergence via the incremental hash trees
+    /// ([`crate::antientropy::merkle`]) instead of a full-state scan —
+    /// the default; `false` keeps the exact scan path (the equivalence
+    /// tests run both).
+    pub merkle: bool,
 }
 
 impl Default for AntiEntropyConfig {
     fn default() -> Self {
-        AntiEntropyConfig { period_us: 0, xla_batch_threshold: usize::MAX }
+        AntiEntropyConfig { period_us: 0, xla_batch_threshold: usize::MAX, merkle: true }
     }
 }
 
@@ -360,6 +365,7 @@ impl StoreConfig {
                     "antientropy.xla_batch_threshold",
                     d.antientropy.xla_batch_threshold as i64,
                 )? as usize,
+                merkle: raw.bool("antientropy.merkle", d.antientropy.merkle)?,
             },
             durability: DurabilityConfig {
                 // checked conversion: a negative value must be rejected,

@@ -1,0 +1,94 @@
+//! Hash primitives for the anti-entropy Merkle trees
+//! ([`crate::antientropy::merkle`]).
+//!
+//! Everything here is deliberately tiny and dependency-free: a 64-bit
+//! mixer (the splitmix64 finalizer, same construction as
+//! [`crate::cluster::ring::hash64`]), an FNV-1a byte hash fed through it,
+//! and a helper for hashing a state's codec output. The trees combine
+//! per-key digests with **wrapping addition**, so the per-key digest must
+//! already be well-mixed — a single flipped input bit flips about half of
+//! the output bits, which is what makes the 2^-64 collision bound of the
+//! tree walk credible.
+//!
+//! Addition (not XOR) is the combiner because it is order-independent
+//! *and* invertible (`wrapping_sub` removes a stale contribution), which
+//! is exactly what incremental maintenance needs: replacing one key's
+//! digest under a node is `sum - old + new`, touching O(depth) interior
+//! hashes instead of rebuilding the subtree.
+
+/// The splitmix64 finalizer: a cheap bijective mixer on `u64`.
+///
+/// Bijectivity matters: distinct inputs stay distinct, so `mix64` never
+/// *introduces* collisions — only the additive combination of many keys
+/// can, at the usual birthday bound.
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over `bytes`, finished with [`mix64`] — the digest of one
+/// encoded sibling (or one whole canonical state encoding).
+pub fn bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    mix64(h)
+}
+
+/// Digest a state whose encoding is *canonical* (equal states encode to
+/// equal bytes regardless of replica history): encode it with `f` into a
+/// scratch buffer and hash the bytes.
+///
+/// Mechanisms whose state is an unordered sibling `Vec` must NOT use
+/// this directly on the whole encoding — converged replicas can hold the
+/// same multiset in different orders. They instead fold
+/// [`bytes`]-of-each-sibling with `wrapping_add` (an order-independent
+/// multiset digest); see the per-mechanism `state_digest` impls.
+pub fn of_encoded(f: impl FnOnce(&mut Vec<u8>)) -> u64 {
+    let mut buf = Vec::with_capacity(64);
+    f(&mut buf);
+    bytes(&buf)
+}
+
+/// The leaf digest the Merkle trees store for `(key, state)`: the key is
+/// mixed in so that the same state under two different keys contributes
+/// two unrelated terms to the additive node sums.
+pub fn leaf(key: u64, state_digest: u64) -> u64 {
+    mix64(mix64(key) ^ state_digest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix64_is_injective_on_a_sample() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            assert!(seen.insert(mix64(i)));
+        }
+    }
+
+    #[test]
+    fn bytes_distinguishes_near_misses() {
+        assert_ne!(bytes(b"abc"), bytes(b"abd"));
+        assert_ne!(bytes(b""), bytes(b"\0"));
+        assert_ne!(bytes(b"ab"), bytes(b"ba"));
+    }
+
+    #[test]
+    fn leaf_depends_on_both_key_and_state() {
+        assert_ne!(leaf(1, 42), leaf(2, 42));
+        assert_ne!(leaf(1, 42), leaf(1, 43));
+    }
+
+    #[test]
+    fn of_encoded_matches_manual_encoding() {
+        let d = of_encoded(|buf| buf.extend_from_slice(b"state"));
+        assert_eq!(d, bytes(b"state"));
+    }
+}

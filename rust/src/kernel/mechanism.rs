@@ -102,6 +102,29 @@ pub trait Mechanism: Clone + Send + Sync + 'static {
 
     /// Wire size of a client context (E7's client-side column).
     fn context_bytes(&self, ctx: &Self::Context) -> usize;
+
+    /// 64-bit digest of the state, fed to the anti-entropy Merkle trees
+    /// ([`crate::antientropy::merkle`]).
+    ///
+    /// Contract:
+    ///
+    /// * **converged replicas agree**: if two states would be reported
+    ///   identical by the sync layer (same sibling multiset, in any
+    ///   order), their digests are equal — otherwise a quiesced pair
+    ///   would diff forever;
+    /// * **divergent states collide only by accident**: distinct
+    ///   reachable states produce distinct digests except with ~2^-64
+    ///   probability — the Merkle walk prunes a subtree when digests
+    ///   match, so a collision silently skips real divergence (the same
+    ///   probabilistic bet the Riak hashtree lineage makes);
+    /// * the default state digests to the same value as an absent key is
+    ///   treated by [`merge`](Mechanism::merge) — in-tree mechanisms
+    ///   derive the digest from their `DurableMechanism` codec, so this
+    ///   follows from `encode(default)` being stable.
+    ///
+    /// Associated (no `&self`) for the same reason as the codec: storage
+    /// backends maintain trees without holding a mechanism instance.
+    fn state_digest(st: &Self::State) -> u64;
 }
 
 /// A [`Mechanism`] whose per-key state has a byte codec — what the

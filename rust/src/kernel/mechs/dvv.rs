@@ -69,6 +69,17 @@ impl Mechanism for DvvMech {
     fn context_bytes(&self, ctx: &Self::Context) -> usize {
         ctx.encoded_size()
     }
+
+    fn state_digest(st: &Self::State) -> u64 {
+        // Sibling order is replica-history-dependent, so fold an
+        // order-independent multiset digest of per-sibling encodings.
+        st.iter().fold(0u64, |acc, (d, v)| {
+            acc.wrapping_add(crate::kernel::digest::of_encoded(|buf| {
+                encode_dvv(d, buf);
+                encode_val(v, buf);
+            }))
+        })
+    }
 }
 
 impl DurableMechanism for DvvMech {

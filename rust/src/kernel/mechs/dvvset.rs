@@ -50,6 +50,12 @@ impl Mechanism for DvvSetMech {
         use crate::clocks::LogicalClock;
         ctx.encoded_size()
     }
+
+    fn state_digest(st: &Self::State) -> u64 {
+        // `columns()` iterates actors in ascending order, so the codec
+        // output is canonical; hash it directly.
+        crate::kernel::digest::of_encoded(|buf| Self::encode_state(st, buf))
+    }
 }
 
 impl DurableMechanism for DvvSetMech {

@@ -61,6 +61,17 @@ impl Mechanism for HistoryMech {
     fn context_bytes(&self, ctx: &Self::Context) -> usize {
         ctx.encoded_size()
     }
+
+    fn state_digest(st: &Self::State) -> u64 {
+        // Order-independent multiset digest: sibling order depends on
+        // which replica merged what first.
+        st.iter().fold(0u64, |acc, (h, v)| {
+            acc.wrapping_add(crate::kernel::digest::of_encoded(|buf| {
+                encode_history(h, buf);
+                encode_val(v, buf);
+            }))
+        })
+    }
 }
 
 impl DurableMechanism for HistoryMech {

@@ -63,6 +63,12 @@ impl Mechanism for LamportMech {
     fn context_bytes(&self, ctx: &Self::Context) -> usize {
         crate::clocks::encoding::varint_len(*ctx)
     }
+
+    fn state_digest(st: &Self::State) -> u64 {
+        // `Option<(clock, val)>` is already canonical; hash the codec
+        // output directly.
+        crate::kernel::digest::of_encoded(|buf| Self::encode_state(st, buf))
+    }
 }
 
 impl DurableMechanism for LamportMech {

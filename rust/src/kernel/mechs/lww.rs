@@ -59,6 +59,12 @@ impl Mechanism for LwwMech {
     fn context_bytes(&self, _ctx: &Self::Context) -> usize {
         0
     }
+
+    fn state_digest(st: &Self::State) -> u64 {
+        // `Option<(clock, val)>` is already canonical; hash the codec
+        // output directly.
+        crate::kernel::digest::of_encoded(|buf| Self::encode_state(st, buf))
+    }
 }
 
 impl DurableMechanism for LwwMech {

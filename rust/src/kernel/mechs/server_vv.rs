@@ -66,6 +66,17 @@ impl Mechanism for ServerVvMech {
     fn context_bytes(&self, ctx: &Self::Context) -> usize {
         ctx.encoded_size()
     }
+
+    fn state_digest(st: &Self::State) -> u64 {
+        // Order-independent multiset digest: sibling order depends on
+        // which replica merged what first.
+        st.iter().fold(0u64, |acc, (vv, v)| {
+            acc.wrapping_add(crate::kernel::digest::of_encoded(|buf| {
+                encode_vv(vv, buf);
+                encode_val(v, buf);
+            }))
+        })
+    }
 }
 
 impl DurableMechanism for ServerVvMech {

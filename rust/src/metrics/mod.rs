@@ -112,6 +112,10 @@ pub struct Metrics {
     pub ae_rounds: u64,
     /// Key-states merged during anti-entropy.
     pub ae_keys_synced: u64,
+    /// Hash-tree digests compared during anti-entropy rounds (the cost
+    /// of divergence *detection* under `antientropy.merkle`; 0 when the
+    /// scan path is selected).
+    pub ae_digests_compared: u64,
 
     /// Concurrent updates silently destroyed (E6's headline anomaly):
     /// a value was removed although no surviving value causally covers it.

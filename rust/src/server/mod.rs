@@ -40,7 +40,7 @@ pub mod protocol;
 pub mod tcp;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::antientropy;
@@ -189,6 +189,11 @@ pub struct LocalCluster<B: StorageBackend<DvvMech> = ShardedBackend<DvvMech>> {
     oracle: OnceLock<Arc<SharedOracle>>,
     /// Serializes join/decommission (ops never take this).
     membership: Mutex<()>,
+    /// Divergence detector for anti-entropy and join-rebalance pulls:
+    /// hash-tree walk (default) or the whole-shard scan — the exact
+    /// oracle the equivalence tests compare against
+    /// ([`set_ae_merkle`](LocalCluster::set_ae_merkle)).
+    ae_use_merkle: AtomicBool,
 }
 
 impl LocalCluster {
@@ -277,7 +282,22 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
             hints: Mutex::new(Vec::new()),
             oracle: OnceLock::new(),
             membership: Mutex::new(()),
+            ae_use_merkle: AtomicBool::new(true),
         })
+    }
+
+    /// Select the anti-entropy divergence detector: `true` (the default)
+    /// walks the incremental hash trees
+    /// ([`antientropy::diff_pairs_in_shard_merkle`]); `false` falls back
+    /// to the whole-shard scan — kept as the exact oracle the merkle
+    /// equivalence tests run both ways.
+    pub fn set_ae_merkle(&self, on: bool) {
+        self.ae_use_merkle.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether anti-entropy currently uses the hash-tree walk.
+    pub fn ae_merkle(&self) -> bool {
+        self.ae_use_merkle.load(Ordering::Relaxed)
     }
 
     /// Total node slots (members plus decommissioned; dense ids).
@@ -716,10 +736,13 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// states in a per-peer [`MergeBatch`]. Each side then applies its
     /// whole batch with [`KeyStore::merge_batch`] — one stripe-lock round
     /// per shard instead of one lock per key (per-key audited merges when
-    /// an oracle is attached). Returns the number of key reconciliations
-    /// applied (per pair).
+    /// an oracle is attached). The per-shard diff is the hash-tree walk
+    /// by default (O(log n) digests per quiesced pair) or the exact scan
+    /// (see [`set_ae_merkle`](LocalCluster::set_ae_merkle)). Returns the
+    /// number of key reconciliations applied (per pair).
     pub fn anti_entropy_round(&self) -> usize {
         self.drain_hints();
+        let merkle = self.ae_merkle();
         let members = self.topology.members();
         let nodes = self.nodes.read().unwrap();
         let mut reconciled = 0;
@@ -732,7 +755,11 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
                 let (sa, sb) = (&nodes[a].store, &nodes[b].store);
                 let mut batch: MergeBatch<DvvMech> = MergeBatch::new(nodes.len());
                 for shard in 0..sa.shard_count() {
-                    let pairs = antientropy::diff_pairs_in_shard(sa, sb, shard);
+                    let pairs = if merkle {
+                        antientropy::diff_pairs_in_shard_merkle(sa, sb, shard)
+                    } else {
+                        antientropy::diff_pairs_in_shard(sa, sb, shard)
+                    };
                     if pairs.is_empty() {
                         continue;
                     }
@@ -786,10 +813,14 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     }
 
     /// Pull every key range the joined node now owns from the members,
-    /// shard by shard through [`antientropy::diff_pairs_in_shard`] +
-    /// [`antientropy::sync_scalar`] — the same bulk path a normal
+    /// shard by shard through the anti-entropy diff (the subtree walk by
+    /// default — a newcomer's empty trees make every populated subtree
+    /// diverge, so the pull degrades gracefully to a bulk transfer — or
+    /// the exact scan, per [`set_ae_merkle`](LocalCluster::set_ae_merkle))
+    /// + [`antientropy::sync_scalar`], the same bulk path a normal
     /// anti-entropy round uses.
     fn rebalance_join(&self, id: NodeId) {
+        let merkle = self.ae_merkle();
         let members = self.topology.members();
         let nodes = self.nodes.read().unwrap();
         let target = &nodes[id];
@@ -800,14 +831,18 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
                 continue;
             }
             for shard in 0..nodes[m].store.shard_count() {
-                let pairs: Vec<antientropy::KeyPair> =
+                let raw = if merkle {
+                    antientropy::diff_pairs_in_shard_merkle(&nodes[m].store, &target.store, shard)
+                } else {
                     antientropy::diff_pairs_in_shard(&nodes[m].store, &target.store, shard)
-                        .into_iter()
-                        .filter(|pair| {
-                            self.topology.replicas_into(pair.key, self.quorum.n, &mut homes);
-                            homes.contains(&id)
-                        })
-                        .collect();
+                };
+                let pairs: Vec<antientropy::KeyPair> = raw
+                    .into_iter()
+                    .filter(|pair| {
+                        self.topology.replicas_into(pair.key, self.quorum.n, &mut homes);
+                        homes.contains(&id)
+                    })
+                    .collect();
                 if pairs.is_empty() {
                     continue;
                 }
@@ -909,6 +944,37 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
             .iter()
             .map(|&m| nodes[m].store.backend().durable_bytes())
             .sum()
+    }
+
+    /// Each active member's whole-store hash-tree root
+    /// ([`KeyStore::merkle_root`]) — the convergence witness the chaos
+    /// audits assert on: after healing and quiescent anti-entropy, every
+    /// member reports the same root.
+    pub fn merkle_roots(&self) -> Vec<(NodeId, u64)> {
+        let members = self.topology.members();
+        let nodes = self.nodes.read().unwrap();
+        members
+            .iter()
+            .map(|&m| (m, nodes[m].store.merkle_root()))
+            .collect()
+    }
+
+    /// The `STATS merkle_root=` figure: when every active member reports
+    /// the same store root, that root; while members still diverge, a
+    /// mix of the distinct roots — so the value is *stable* exactly when
+    /// the cluster is converged, and an external observer polling STATS
+    /// sees it settle.
+    pub fn merkle_root(&self) -> u64 {
+        let mut roots: Vec<u64> = self.merkle_roots().into_iter().map(|(_, r)| r).collect();
+        roots.sort_unstable();
+        roots.dedup();
+        if roots.len() == 1 {
+            roots[0]
+        } else {
+            roots
+                .into_iter()
+                .fold(0u64, |acc, r| crate::kernel::digest::mix64(acc ^ r))
+        }
     }
 
     /// Step a [`FaultPlan`] — churn included — against this cluster:

@@ -30,7 +30,7 @@
 //! -> PUT <key> <value-hex> [ctx-hex]
 //! <- OK
 //! -> STATS
-//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h> epoch=<e> wal_bytes=<w>
+//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h> epoch=<e> wal_bytes=<w> merkle_root=<m>
 //! -> QUIT
 //! <- BYE
 //! ```
@@ -354,13 +354,14 @@ pub const MAGIC: [u8; 4] = *b"DVV2";
 /// Current binary wire-format version, negotiated in the hello
 /// exchange. Bumped to 3 when the elastic-topology revision extended
 /// [`OP_STATS_REPLY`] with a fifth (epoch) field and added the
-/// membership opcodes, and to 4 when the durability revision appended a
-/// sixth (`wal_bytes`) field: the stats payload decodes strictly
-/// (`expect_end`), so an older binary would misparse the longer reply
-/// mid-session — version negotiation turns that silent skew into a
-/// clean hello-time rejection. (The `DVV2` magic names the protocol
-/// family, not this byte.)
-pub const VERSION: u8 = 4;
+/// membership opcodes, to 4 when the durability revision appended a
+/// sixth (`wal_bytes`) field, and to 5 when the hash-tree anti-entropy
+/// revision appended a seventh (`merkle_root`): the stats payload
+/// decodes strictly (`expect_end`), so an older binary would misparse
+/// the longer reply mid-session — version negotiation turns that silent
+/// skew into a clean hello-time rejection. (The `DVV2` magic names the
+/// protocol family, not this byte.)
+pub const VERSION: u8 = 5;
 
 /// Upper bound on a frame's length field (16 MiB). A header promising
 /// more is rejected before any allocation.
@@ -403,7 +404,8 @@ pub const OP_PUT_OK: u8 = 0x82;
 /// Response opcode: generic success (admin commands). Empty payload.
 pub const OP_OK: u8 = 0x83;
 /// Response opcode: statistics. Payload:
-/// `[nodes][shards][metadata_bytes][hints][epoch][wal_bytes]` varints.
+/// `[nodes][shards][metadata_bytes][hints][epoch][wal_bytes][merkle_root]`
+/// varints.
 pub const OP_STATS_REPLY: u8 = 0x84;
 /// Response opcode: membership view (answer to [`OP_JOIN`],
 /// [`OP_DECOMMISSION`], and [`OP_TOPOLOGY`]). Payload:
@@ -647,6 +649,7 @@ pub fn decode_put_ok(payload: &[u8]) -> Result<(u64, Vec<u8>)> {
 }
 
 /// Encode an [`OP_STATS_REPLY`] payload.
+#[allow(clippy::too_many_arguments)]
 pub fn encode_stats_reply(
     nodes: u64,
     shards: u64,
@@ -654,20 +657,24 @@ pub fn encode_stats_reply(
     hints: u64,
     epoch: u64,
     wal_bytes: u64,
+    merkle_root: u64,
 ) -> Vec<u8> {
-    let mut p = Vec::with_capacity(24);
+    let mut p = Vec::with_capacity(32);
     put_varint(&mut p, nodes);
     put_varint(&mut p, shards);
     put_varint(&mut p, metadata_bytes);
     put_varint(&mut p, hints);
     put_varint(&mut p, epoch);
     put_varint(&mut p, wal_bytes);
+    put_varint(&mut p, merkle_root);
     p
 }
 
 /// Decode an [`OP_STATS_REPLY`] payload into
-/// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes)`.
-pub fn decode_stats_reply(payload: &[u8]) -> Result<(u64, u64, u64, u64, u64, u64)> {
+/// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes,
+/// merkle_root)`.
+#[allow(clippy::type_complexity)]
+pub fn decode_stats_reply(payload: &[u8]) -> Result<(u64, u64, u64, u64, u64, u64, u64)> {
     let mut pos = 0;
     let nodes = get_varint(payload, &mut pos)?;
     let shards = get_varint(payload, &mut pos)?;
@@ -675,8 +682,9 @@ pub fn decode_stats_reply(payload: &[u8]) -> Result<(u64, u64, u64, u64, u64, u6
     let hints = get_varint(payload, &mut pos)?;
     let epoch = get_varint(payload, &mut pos)?;
     let wal_bytes = get_varint(payload, &mut pos)?;
+    let merkle_root = get_varint(payload, &mut pos)?;
     expect_end(payload, pos)?;
-    Ok((nodes, shards, metadata_bytes, hints, epoch, wal_bytes))
+    Ok((nodes, shards, metadata_bytes, hints, epoch, wal_bytes, merkle_root))
 }
 
 /// Encode an [`OP_TOPOLOGY_REPLY`] payload:
@@ -922,8 +930,13 @@ mod tests {
         let p = encode_put_ok(99, &token);
         assert_eq!(decode_put_ok(&p).unwrap(), (99, token));
 
-        let p = encode_stats_reply(3, 64, 12345, 2, 7, 4096);
-        assert_eq!(decode_stats_reply(&p).unwrap(), (3, 64, 12345, 2, 7, 4096));
+        let p = encode_stats_reply(3, 64, 12345, 2, 7, 4096, 0xDEAD_BEEF);
+        assert_eq!(decode_stats_reply(&p).unwrap(), (3, 64, 12345, 2, 7, 4096, 0xDEAD_BEEF));
+        // truncating any suffix (e.g. a pre-v5 six-field reply) is a
+        // strict decode error, which is why VERSION was bumped
+        for cut in 0..p.len() {
+            assert!(decode_stats_reply(&p[..cut]).is_err(), "prefix {cut} decoded");
+        }
 
         let p = encode_topology_reply(5, 6, &[0, 2, 3, 5]);
         assert_eq!(decode_topology_reply(&p).unwrap(), (5, 6, vec![0, 2, 3, 5]));

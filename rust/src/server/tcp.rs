@@ -304,13 +304,14 @@ fn serve_text<B: StorageBackend<DvvMech>>(
                     }
                 }
                 Ok(Request::Stats) => format!(
-                    "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={} wal_bytes={}\n",
+                    "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={} wal_bytes={} merkle_root={}\n",
                     cluster.node_count(),
                     cluster.shard_count(),
                     cluster.metadata_bytes(),
                     cluster.pending_hints(),
                     cluster.epoch(),
-                    cluster.wal_bytes()
+                    cluster.wal_bytes(),
+                    cluster.merkle_root()
                 ),
                 Ok(Request::Fault(cmd)) => apply_fault(cluster, cmd),
                 Ok(Request::Heal { node }) => apply_heal(cluster, node),
@@ -466,6 +467,7 @@ fn serve_binary<B: StorageBackend<DvvMech>>(
                     cluster.pending_hints() as u64,
                     cluster.epoch(),
                     cluster.wal_bytes(),
+                    cluster.merkle_root(),
                 ),
             ),
             Ok(BinRequest::Join) => {
@@ -652,9 +654,23 @@ mod tests {
             .rsplit("wal_bytes=")
             .next()
             .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
             .parse()
             .unwrap();
         assert!(wal_bytes > 0, "{stats}");
+        // converged 3-way replication (n=3 over 3 nodes): every member
+        // holds every key, so the cluster root is the members' common
+        // store root — observable (and nonzero) over live TCP
+        let merkle_root: u64 = stats
+            .rsplit("merkle_root=")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert_ne!(merkle_root, 0, "{stats}");
 
         // fsync default is every-64 and nothing was explicitly synced,
         // so the crash-restart loses node 1's whole unsynced tail; the

@@ -31,7 +31,7 @@ use crate::metrics::Metrics;
 use crate::net::NetModel;
 use crate::oracle::{DropVerdict, Oracle};
 use crate::session::{ClientSession, PutResult};
-use crate::store::{Key, KeyStore};
+use crate::store::{Key, KeyStore, StorageBackend};
 use crate::testkit::Rng;
 use crate::workload::{Driver, Op, OpKind};
 
@@ -827,11 +827,23 @@ impl<M: Mechanism> Sim<M> {
                 self.store_merge(node, key, &state);
             }
             Msg::AePull { keys, from } => {
+                // respond only with keys this node actually holds:
+                // manufacturing default states for absent keys would
+                // materialize empty entries at the puller (a merge with
+                // a default state is a no-op on values but would skew
+                // the hash trees' key sets)
                 let states: Vec<(Key, M::State)> = keys
                     .iter()
-                    .map(|&k| (k, self.nodes[node].store.state(k)))
+                    .filter_map(|&k| {
+                        self.nodes[node]
+                            .store
+                            .backend()
+                            .with_state(k, |st| st.cloned().map(|st| (k, st)))
+                    })
                     .collect();
-                self.send(node, from, Msg::AePush { states });
+                if !states.is_empty() {
+                    self.send(node, from, Msg::AePush { states });
+                }
             }
             Msg::AePush { states } => {
                 self.metrics.ae_keys_synced += states.len() as u64;
@@ -988,18 +1000,44 @@ impl<M: Mechanism> Sim<M> {
             return;
         }
         self.metrics.ae_rounds += 1;
-        // push all local key states to the peer, and — for members —
-        // pull its copies back. A decommissioned node runs push-only
-        // ticks: it keeps draining what it still holds toward the
-        // members until the run ends, but takes in nothing new.
-        let keys: Vec<Key> = self.nodes[node].store.keys().collect();
+        // Build the exchange worklist: with `antientropy.merkle` (the
+        // default) walk the two stores' incremental hash trees and touch
+        // only keys under diverged subtrees — a quiesced pair exchanges
+        // nothing; with the scan path, every local key is shipped. Then
+        // push the listed states to the peer, and — for members — pull
+        // its copies back. A decommissioned node runs push-only ticks:
+        // it keeps draining what it still holds toward the members until
+        // the run ends, but takes in nothing new.
+        let keys: Vec<Key> = if self.cfg.antientropy.merkle {
+            // both stores are single-shard in-memory backends, so the
+            // shard-0 trees cover the whole stores (the walk stands in
+            // for the digest exchange a wire protocol would run)
+            let sa = self.nodes[node].store.backend();
+            let sb = self.nodes[peer].store.backend();
+            let (mut keys, stats) = sa
+                .with_merkle(0, |ta| sb.with_merkle(0, |tb| crate::antientropy::merkle::diff(ta, tb)));
+            self.metrics.ae_digests_compared += stats.nodes_compared;
+            keys.sort_unstable();
+            keys
+        } else {
+            self.nodes[node].store.keys().collect()
+        };
         let states: Vec<(Key, M::State)> = keys
             .iter()
-            .map(|&k| (k, self.nodes[node].store.state(k)))
+            .filter_map(|&k| {
+                // ship only keys this node holds; peer-only divergence
+                // comes back via the pull
+                self.nodes[node]
+                    .store
+                    .backend()
+                    .with_state(k, |st| st.cloned().map(|st| (k, st)))
+            })
             .collect();
         self.metrics.ae_keys_synced += states.len() as u64;
-        self.send(node, peer, Msg::AePush { states });
-        if self.nodes[node].member {
+        if !states.is_empty() {
+            self.send(node, peer, Msg::AePush { states });
+        }
+        if self.nodes[node].member && !keys.is_empty() {
             self.send(node, peer, Msg::AePull { keys, from: node });
         }
     }

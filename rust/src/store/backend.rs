@@ -30,6 +30,7 @@ use std::fmt;
 
 use super::wal::RecoveryReport;
 use super::Key;
+use crate::antientropy::merkle::ShardTree;
 use crate::kernel::Mechanism;
 
 /// A concurrent per-key state map for mechanism `M`.
@@ -121,5 +122,34 @@ pub trait StorageBackend<M: Mechanism>: fmt::Debug + Send + Sync + 'static {
     /// replica ships to a peer.
     fn state_clone(&self, key: Key) -> M::State {
         self.with_state(key, |st| st.cloned().unwrap_or_default())
+    }
+
+    /// Visit `shard`'s anti-entropy hash tree
+    /// ([`crate::antientropy::merkle`]).
+    ///
+    /// In-tree backends override this to expose the tree they maintain
+    /// incrementally on the write path (under the shard's stripe lock —
+    /// the closure must not call back into the same backend). This
+    /// default rebuilds a throwaway tree from the shard's current
+    /// contents, so any conforming backend is merkle-diffable without
+    /// opting in; it just pays O(shard) per call instead of O(1).
+    fn with_merkle<R>(&self, shard: usize, f: impl FnOnce(&mut ShardTree) -> R) -> R {
+        let mut tree = ShardTree::new();
+        for key in self.keys_in_shard(shard) {
+            self.with_state(key, |st| {
+                if let Some(st) = st {
+                    tree.record(key, M::state_digest(st));
+                }
+            });
+        }
+        f(&mut tree)
+    }
+
+    /// Root digest of `shard`'s hash tree (0 for an empty shard). Roots
+    /// compose by wrapping addition: summing over shards gives a whole
+    /// store's digest, comparable across different shard counts (see
+    /// [`KeyStore::merkle_root`](super::KeyStore::merkle_root)).
+    fn merkle_root(&self, shard: usize) -> u64 {
+        self.with_merkle(shard, |tree| tree.root())
     }
 }

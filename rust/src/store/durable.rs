@@ -41,6 +41,7 @@ use std::sync::Mutex;
 use super::backend::StorageBackend;
 use super::wal::{RecoveryReport, ShardWal, WalOptions};
 use super::Key;
+use crate::antientropy::merkle::ShardTree;
 use crate::clocks::encoding::{expect_end, get_varint, put_varint};
 use crate::kernel::DurableMechanism;
 
@@ -50,13 +51,18 @@ pub const DEFAULT_DURABLE_SHARDS: usize = 8;
 
 struct DurableShard<M: DurableMechanism> {
     map: HashMap<Key, M::State>,
+    /// Anti-entropy hash tree over `map`; maintained incrementally under
+    /// the shard lock, rebuilt from the replayed map on open (the WAL
+    /// never stores digests — they are derivable).
+    tree: ShardTree,
     wal: ShardWal,
     /// Encode scratch, reused across appends.
     buf: Vec<u8>,
 }
 
 impl<M: DurableMechanism> DurableShard<M> {
-    /// Open the shard dir, replaying the log into a fresh map.
+    /// Open the shard dir, replaying the log into a fresh map and
+    /// rebuilding the hash tree from the recovered states.
     fn open(dir: &Path, opts: WalOptions) -> crate::Result<(DurableShard<M>, RecoveryReport)> {
         let mut map = HashMap::new();
         let (wal, report) = ShardWal::open(dir, opts, |payload| {
@@ -67,7 +73,8 @@ impl<M: DurableMechanism> DurableShard<M> {
             map.insert(key, state); // physical log: last record wins
             Ok(())
         })?;
-        Ok((DurableShard { map, wal, buf: Vec::new() }, report))
+        let tree = ShardTree::rebuild(map.iter().map(|(&k, st)| (k, M::state_digest(st))));
+        Ok((DurableShard { map, tree, wal, buf: Vec::new() }, report))
     }
 
     /// Record payload for `(key, state)`.
@@ -77,11 +84,12 @@ impl<M: DurableMechanism> DurableShard<M> {
         M::encode_state(state, buf);
     }
 
-    /// Append `key`'s current state to the log, rolling (and compacting
-    /// when mostly dead) as needed. Runs under the shard lock, so the
-    /// log order is the mutation order.
+    /// Append `key`'s current state to the log (and its digest to the
+    /// hash tree), rolling (and compacting when mostly dead) as needed.
+    /// Runs under the shard lock, so the log order is the mutation order.
     fn log_key(&mut self, key: Key) {
         let state = self.map.get(&key).expect("logged key was just updated");
+        self.tree.record(key, M::state_digest(state));
         Self::payload(&mut self.buf, key, state);
         self.wal.append(&self.buf).expect("WAL append failed (see module docs)");
         if self.wal.needs_roll() {
@@ -241,6 +249,7 @@ impl<M: DurableMechanism> StorageBackend<M> for DurableBackend<M> {
         for shard in self.shards.iter() {
             let mut guard = shard.lock().unwrap();
             guard.map.clear();
+            guard.tree.clear();
             guard.wal.wipe().expect("WAL wipe failed (see module docs)");
         }
     }
@@ -264,6 +273,10 @@ impl<M: DurableMechanism> StorageBackend<M> for DurableBackend<M> {
 
     fn durable_bytes(&self) -> u64 {
         self.shards.iter().map(|s| s.lock().unwrap().wal.bytes()).sum()
+    }
+
+    fn with_merkle<R>(&self, shard: usize, f: impl FnOnce(&mut ShardTree) -> R) -> R {
+        f(&mut self.shards[shard].lock().unwrap().tree)
     }
 }
 

@@ -6,7 +6,22 @@ use std::sync::RwLock;
 
 use super::backend::StorageBackend;
 use super::Key;
+use crate::antientropy::merkle::ShardTree;
 use crate::kernel::Mechanism;
+
+/// Map plus its anti-entropy hash tree, kept consistent under the one
+/// lock: every mutation records the key's new state digest before the
+/// lock drops, so the tree never lags the map.
+struct Inner<M: Mechanism> {
+    map: HashMap<Key, M::State>,
+    tree: ShardTree,
+}
+
+impl<M: Mechanism> Inner<M> {
+    fn empty() -> Inner<M> {
+        Inner { map: HashMap::new(), tree: ShardTree::new() }
+    }
+}
 
 /// One flat map behind one store-wide reader/writer lock.
 ///
@@ -16,13 +31,13 @@ use crate::kernel::Mechanism;
 /// the single-threaded simulator and unit tests; a bottleneck for the
 /// threaded TCP server.
 pub struct InMemoryBackend<M: Mechanism> {
-    map: RwLock<HashMap<Key, M::State>>,
+    inner: RwLock<Inner<M>>,
 }
 
 impl<M: Mechanism> InMemoryBackend<M> {
     /// Empty backend.
     pub fn new() -> InMemoryBackend<M> {
-        InMemoryBackend { map: RwLock::new(HashMap::new()) }
+        InMemoryBackend { inner: RwLock::new(Inner::empty()) }
     }
 }
 
@@ -34,42 +49,53 @@ impl<M: Mechanism> Default for InMemoryBackend<M> {
 
 impl<M: Mechanism> Clone for InMemoryBackend<M> {
     fn clone(&self) -> Self {
-        InMemoryBackend { map: RwLock::new(self.map.read().unwrap().clone()) }
+        let g = self.inner.read().unwrap();
+        InMemoryBackend {
+            inner: RwLock::new(Inner { map: g.map.clone(), tree: g.tree.clone() }),
+        }
     }
 }
 
 impl<M: Mechanism> fmt::Debug for InMemoryBackend<M> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.debug_struct("InMemoryBackend")
-            .field("keys", &self.map.read().unwrap().len())
+            .field("keys", &self.inner.read().unwrap().map.len())
             .finish()
     }
 }
 
 impl<M: Mechanism> StorageBackend<M> for InMemoryBackend<M> {
     fn with_state<R>(&self, key: Key, f: impl FnOnce(Option<&M::State>) -> R) -> R {
-        f(self.map.read().unwrap().get(&key))
+        f(self.inner.read().unwrap().map.get(&key))
     }
 
     fn update<R>(&self, key: Key, f: impl FnOnce(&mut M::State) -> R) -> R {
-        f(self.map.write().unwrap().entry(key).or_default())
+        let mut g = self.inner.write().unwrap();
+        let inner = &mut *g;
+        let st = inner.map.entry(key).or_default();
+        let r = f(st);
+        inner.tree.record(key, M::state_digest(st));
+        r
     }
 
     fn update_batch<T>(&self, items: &[(Key, T)], mut f: impl FnMut(&mut M::State, &T)) {
-        let mut map = self.map.write().unwrap();
+        let mut g = self.inner.write().unwrap();
+        let inner = &mut *g;
         for (key, payload) in items {
-            f(map.entry(*key).or_default(), payload);
+            let st = inner.map.entry(*key).or_default();
+            f(st, payload);
+            inner.tree.record(*key, M::state_digest(st));
         }
     }
 
     fn for_each(&self, mut f: impl FnMut(Key, &M::State)) {
-        for (k, st) in self.map.read().unwrap().iter() {
+        for (k, st) in self.inner.read().unwrap().map.iter() {
             f(*k, st);
         }
     }
 
     fn key_count(&self) -> usize {
-        self.map.read().unwrap().len()
+        self.inner.read().unwrap().map.len()
     }
 
     fn shard_count(&self) -> usize {
@@ -81,10 +107,16 @@ impl<M: Mechanism> StorageBackend<M> for InMemoryBackend<M> {
     }
 
     fn keys_in_shard(&self, _shard: usize) -> Vec<Key> {
-        self.map.read().unwrap().keys().copied().collect()
+        self.inner.read().unwrap().map.keys().copied().collect()
     }
 
     fn wipe(&self) {
-        self.map.write().unwrap().clear();
+        let mut g = self.inner.write().unwrap();
+        g.map.clear();
+        g.tree.clear();
+    }
+
+    fn with_merkle<R>(&self, _shard: usize, f: impl FnOnce(&mut ShardTree) -> R) -> R {
+        f(&mut self.inner.write().unwrap().tree)
     }
 }

@@ -251,6 +251,17 @@ impl<M: Mechanism, B: StorageBackend<M>> KeyStore<M, B> {
         self.backend.keys_in_shard(shard)
     }
 
+    /// Whole-store anti-entropy digest: the wrapping sum of every shard's
+    /// hash-tree root ([`crate::antientropy::merkle`]). Shard roots are
+    /// additive partial sums of the same per-key terms, so this value
+    /// depends only on the key/state multiset — two converged replicas
+    /// report equal roots even across different shard counts or backend
+    /// types. Feeds `STATS merkle_root=` and the convergence audits.
+    pub fn merkle_root(&self) -> u64 {
+        (0..self.backend.shard_count())
+            .fold(0u64, |acc, s| acc.wrapping_add(self.backend.merkle_root(s)))
+    }
+
     /// Total causality-metadata bytes across keys, aggregated shard by
     /// shard on demand. Feeds `Metrics::metadata_bytes` in the simulator
     /// reports and the TCP server's `STATS` line. (The per-mechanism

@@ -6,12 +6,33 @@ use std::sync::RwLock;
 
 use super::backend::StorageBackend;
 use super::Key;
+use crate::antientropy::merkle::ShardTree;
 use crate::kernel::Mechanism;
 
 /// Default stripe count — enough that a handful of server threads on a
 /// skewed (Zipf) workload rarely collide, small enough that aggregating
 /// per-shard accounting stays cheap.
 pub const DEFAULT_SHARDS: usize = 64;
+
+/// One stripe: its key→state map plus the anti-entropy hash tree over
+/// those keys, mutated together under the stripe lock so the tree never
+/// lags the map.
+struct Shard<M: Mechanism> {
+    map: HashMap<Key, M::State>,
+    tree: ShardTree,
+}
+
+impl<M: Mechanism> Shard<M> {
+    fn empty() -> Shard<M> {
+        Shard { map: HashMap::new(), tree: ShardTree::new() }
+    }
+
+    fn record(&mut self, key: Key) {
+        // only called right after `map.entry(key)` materialized the state
+        let st = &self.map[&key];
+        self.tree.record(key, M::state_digest(st));
+    }
+}
 
 /// The key space partitioned into `2^k` lock-striped shards.
 ///
@@ -26,7 +47,7 @@ pub const DEFAULT_SHARDS: usize = 64;
 /// Metadata and sibling accounting ([`StorageBackend::for_each`]) is
 /// aggregated on demand, shard by shard, so no global lock ever exists.
 pub struct ShardedBackend<M: Mechanism> {
-    shards: Box<[RwLock<HashMap<Key, M::State>>]>,
+    shards: Box<[RwLock<Shard<M>>]>,
     mask: u64,
 }
 
@@ -40,7 +61,7 @@ impl<M: Mechanism> ShardedBackend<M> {
     /// two; minimum 1).
     pub fn with_shards(shards: usize) -> ShardedBackend<M> {
         let n = shards.max(1).next_power_of_two();
-        let shards = (0..n).map(|_| RwLock::new(HashMap::new())).collect();
+        let shards = (0..n).map(|_| RwLock::new(Shard::empty())).collect();
         ShardedBackend { shards, mask: (n - 1) as u64 }
     }
 
@@ -52,7 +73,7 @@ impl<M: Mechanism> ShardedBackend<M> {
     /// Number of keys currently stored in one shard (diagnostics; the
     /// balance check in this module's tests).
     pub fn shard_len(&self, shard: usize) -> usize {
-        self.shards[shard].read().unwrap().len()
+        self.shards[shard].read().unwrap().map.len()
     }
 }
 
@@ -68,7 +89,10 @@ impl<M: Mechanism> Clone for ShardedBackend<M> {
             shards: self
                 .shards
                 .iter()
-                .map(|s| RwLock::new(s.read().unwrap().clone()))
+                .map(|s| {
+                    let g = s.read().unwrap();
+                    RwLock::new(Shard { map: g.map.clone(), tree: g.tree.clone() })
+                })
                 .collect(),
             mask: self.mask,
         }
@@ -77,7 +101,7 @@ impl<M: Mechanism> Clone for ShardedBackend<M> {
 
 impl<M: Mechanism> fmt::Debug for ShardedBackend<M> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let keys: usize = self.shards.iter().map(|s| s.read().unwrap().len()).sum();
+        let keys: usize = self.shards.iter().map(|s| s.read().unwrap().map.len()).sum();
         f.debug_struct("ShardedBackend")
             .field("shards", &self.shards.len())
             .field("keys", &keys)
@@ -87,18 +111,22 @@ impl<M: Mechanism> fmt::Debug for ShardedBackend<M> {
 
 impl<M: Mechanism> StorageBackend<M> for ShardedBackend<M> {
     fn with_state<R>(&self, key: Key, f: impl FnOnce(Option<&M::State>) -> R) -> R {
-        f(self.shards[self.idx(key)].read().unwrap().get(&key))
+        f(self.shards[self.idx(key)].read().unwrap().map.get(&key))
     }
 
     fn update<R>(&self, key: Key, f: impl FnOnce(&mut M::State) -> R) -> R {
-        f(self.shards[self.idx(key)].write().unwrap().entry(key).or_default())
+        let mut g = self.shards[self.idx(key)].write().unwrap();
+        let r = f(g.map.entry(key).or_default());
+        g.record(key);
+        r
     }
 
     fn update_batch<T>(&self, items: &[(Key, T)], mut f: impl FnMut(&mut M::State, &T)) {
         if let [(key, payload)] = items {
             // single item: no grouping needed, one stripe lock
-            let mut map = self.shards[self.idx(*key)].write().unwrap();
-            f(map.entry(*key).or_default(), payload);
+            let mut g = self.shards[self.idx(*key)].write().unwrap();
+            f(g.map.entry(*key).or_default(), payload);
+            g.record(*key);
             return;
         }
         // sort item indices by shard, then take each stripe lock once per
@@ -108,13 +136,14 @@ impl<M: Mechanism> StorageBackend<M> for ShardedBackend<M> {
         let mut run = 0;
         while run < order.len() {
             let shard = self.idx(items[order[run]].0);
-            let mut map = self.shards[shard].write().unwrap();
+            let mut g = self.shards[shard].write().unwrap();
             while run < order.len() {
                 let (key, payload) = &items[order[run]];
                 if self.idx(*key) != shard {
                     break;
                 }
-                f(map.entry(*key).or_default(), payload);
+                f(g.map.entry(*key).or_default(), payload);
+                g.record(*key);
                 run += 1;
             }
         }
@@ -122,14 +151,14 @@ impl<M: Mechanism> StorageBackend<M> for ShardedBackend<M> {
 
     fn for_each(&self, mut f: impl FnMut(Key, &M::State)) {
         for shard in self.shards.iter() {
-            for (k, st) in shard.read().unwrap().iter() {
+            for (k, st) in shard.read().unwrap().map.iter() {
                 f(*k, st);
             }
         }
     }
 
     fn key_count(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.read().unwrap().map.len()).sum()
     }
 
     fn shard_count(&self) -> usize {
@@ -141,13 +170,19 @@ impl<M: Mechanism> StorageBackend<M> for ShardedBackend<M> {
     }
 
     fn keys_in_shard(&self, shard: usize) -> Vec<Key> {
-        self.shards[shard].read().unwrap().keys().copied().collect()
+        self.shards[shard].read().unwrap().map.keys().copied().collect()
     }
 
     fn wipe(&self) {
         for shard in self.shards.iter() {
-            shard.write().unwrap().clear();
+            let mut g = shard.write().unwrap();
+            g.map.clear();
+            g.tree.clear();
         }
+    }
+
+    fn with_merkle<R>(&self, shard: usize, f: impl FnOnce(&mut ShardTree) -> R) -> R {
+        f(&mut self.shards[shard].write().unwrap().tree)
     }
 }
 
@@ -203,5 +238,37 @@ mod tests {
         b.update(1, |_st| {});
         assert!(b.with_state(2, |st| st.is_none()));
         assert!(b.with_state(1, |st| st.is_some()));
+    }
+
+    #[test]
+    fn incremental_trees_match_default_rebuild() {
+        use crate::kernel::Mechanism as _;
+        let b = B::with_shards(4);
+        let mech = DvvMech;
+        let meta = crate::kernel::WriteMeta::basic(crate::clocks::Actor::client(0));
+        for k in 0..64u64 {
+            b.update(k, |st| {
+                mech.write(
+                    st,
+                    &Default::default(),
+                    crate::kernel::Val::new(k + 1, 0),
+                    crate::clocks::Actor::server(0),
+                    &meta,
+                );
+            });
+        }
+        for s in 0..b.shard_count() {
+            let incremental = b.merkle_root(s);
+            let rebuilt = ShardTree::rebuild(b.keys_in_shard(s).into_iter().map(|k| {
+                (k, b.with_state(k, |st| DvvMech::state_digest(st.unwrap())))
+            }))
+            .root();
+            assert_eq!(incremental, rebuilt, "shard {s}");
+            assert_ne!(incremental, 0, "shard {s} holds keys");
+        }
+        b.wipe();
+        for s in 0..b.shard_count() {
+            assert_eq!(b.merkle_root(s), 0);
+        }
     }
 }

@@ -307,6 +307,13 @@ fn tcp_chaos_with_concurrent_clients_is_oracle_clean() {
             );
         }
     }
+    // fully converged stores share one hash-tree root, and that common
+    // root is exactly what STATS reported over the wire
+    assert_eq!(
+        stats.6,
+        cluster.node(0).store().merkle_root(),
+        "STATS merkle_root matches the converged store root"
+    );
     let verdict = oracle.verdict();
     assert!(verdict.tracked > 0);
     assert_eq!(verdict.unaudited_drops, 0, "every TCP write was traced");

@@ -1,0 +1,558 @@
+//! Hash-tree anti-entropy equivalence suite: the tree path is only
+//! allowed to exist because these properties hold.
+//!
+//! 1. **Incremental ≡ rebuilt** — after any seeded mix of informed
+//!    writes, blind writes, merges, wipes, and crash-restarts, every
+//!    shard's incrementally-maintained [`ShardTree`] root equals a tree
+//!    rebuilt from scratch over the shard's current states — on all
+//!    three backends, whose whole-store roots also agree with each
+//!    other (the additive digest is sharding/backend independent).
+//! 2. **Merkle diff ≡ scan diff** — over seeded divergent store pairs
+//!    (and the adversarial corners: empty-vs-full, single-key,
+//!    order-only difference) [`diff_pairs_merkle`] returns the
+//!    *byte-identical* worklist of [`diff_pairs`]: same keys, same
+//!    order, same sibling snapshots; likewise per shard. The tree walk
+//!    is also shown to do O(divergence · log n) work, not O(keyspace).
+//! 3. **Chaos regression** — one seeded [`FaultPlan`] mixing
+//!    partitions, message drops, a crash-restart, and a live join runs
+//!    against both worlds with tree-walk AE on: zero lost acknowledged
+//!    updates, post-heal convergence, and equal final hash-tree roots
+//!    across every member.
+//!
+//! The default gate runs fixed seeds; `MERKLE_ITERS=<n>` appends
+//! derived seeds (uniform failure format via `testkit::soak`, replay
+//! with `DVV_SEED=<s>`).
+//!
+//! [`ShardTree`]: dvvstore::antientropy::merkle::ShardTree
+//! [`diff_pairs_merkle`]: dvvstore::antientropy::diff_pairs_merkle
+//! [`diff_pairs`]: dvvstore::antientropy::diff_pairs
+//! [`FaultPlan`]: dvvstore::sim::failure::FaultPlan
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use dvvstore::antientropy::{
+    diff_pairs, diff_pairs_in_shard, diff_pairs_in_shard_merkle, diff_pairs_merkle, merkle,
+    KeyPair,
+};
+use dvvstore::clocks::Actor;
+use dvvstore::cluster::ring::hash_str;
+use dvvstore::kernel::mechs::DvvMech;
+use dvvstore::kernel::{Mechanism, Val, WriteMeta};
+use dvvstore::oracle::SharedOracle;
+use dvvstore::server::LocalCluster;
+use dvvstore::sim::failure::FaultPlan;
+use dvvstore::store::{
+    DurableBackend, FsyncPolicy, KeyStore, ShardedBackend, StorageBackend, WalOptions,
+};
+use dvvstore::testkit::{run_seeded, soak_seeds, temp_dir, Rng};
+use dvvstore::workload::key_name;
+
+fn seeds() -> Vec<u64> {
+    soak_seeds(&[61, 62, 63], "MERKLE_ITERS")
+}
+
+fn meta() -> WriteMeta {
+    WriteMeta::basic(Actor::client(0))
+}
+
+fn empty_ctx() -> <DvvMech as Mechanism>::Context {
+    <DvvMech as Mechanism>::Context::default()
+}
+
+// -------------------------------------------------------------------
+// Property 1: incremental trees ≡ from-scratch rebuilds
+// -------------------------------------------------------------------
+
+/// One deterministic op burst: the same `seed` produces the same store
+/// content on any backend (informed writes read their context from the
+/// store itself, which is identical across replays of the sequence).
+fn apply_ops<B: StorageBackend<DvvMech>>(store: &KeyStore<DvvMech, B>, seed: u64, ops: u64) {
+    let mut rng = Rng::new(seed);
+    let meta = meta();
+    let empty = empty_ctx();
+    for _ in 0..ops {
+        let key = rng.below(512);
+        let val = Val::new(rng.next_u64(), 8);
+        let actor = Actor::server(rng.below(4) as u32);
+        if rng.chance(0.5) {
+            // informed write: supersedes what was read
+            let (_, ctx) = store.read(key);
+            store.write(key, &ctx, val, actor, &meta);
+        } else {
+            // blind write: accumulates a concurrent sibling
+            store.write(key, &empty, val, actor, &meta);
+        }
+    }
+}
+
+/// Every shard's incremental root must equal a tree rebuilt from the
+/// shard's current states — the invariant the write-path maintenance
+/// claims to preserve.
+fn assert_matches_rebuild<B: StorageBackend<DvvMech>>(
+    seed: u64,
+    label: &str,
+    store: &KeyStore<DvvMech, B>,
+) {
+    let backend = store.backend();
+    for shard in 0..backend.shard_count() {
+        let incremental = backend.merkle_root(shard);
+        let mut fresh = merkle::ShardTree::rebuild(backend.keys_in_shard(shard).into_iter().map(
+            |k| {
+                let sd = backend
+                    .with_state(k, |st| DvvMech::state_digest(st.expect("listed key present")));
+                (k, sd)
+            },
+        ));
+        assert_eq!(
+            incremental,
+            fresh.root(),
+            "seed {seed}: {label} shard {shard} incremental root drifted from rebuild"
+        );
+    }
+}
+
+#[test]
+fn incremental_trees_equal_rebuilt_trees_across_backends() {
+    run_seeded("merkle_incremental_vs_rebuild", &seeds(), |seed| {
+        let flat = KeyStore::new(DvvMech);
+        let striped = KeyStore::with_backend(DvvMech, ShardedBackend::with_shards(8));
+        let dir = temp_dir("merkle-incr");
+        // Always-fsync so a crash-restart is lossless and the rebuilt
+        // tree must land on exactly the pre-crash root
+        let opts = WalOptions { fsync: FsyncPolicy::Always, ..WalOptions::default() };
+        let durable =
+            KeyStore::with_backend(DvvMech, DurableBackend::open(&dir, 4, opts).unwrap());
+
+        let mut stamp = seed;
+        for round in 0..3u64 {
+            stamp = stamp.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(round + 1);
+            apply_ops(&flat, stamp, 300);
+            apply_ops(&striped, stamp, 300);
+            apply_ops(&durable, stamp, 300);
+
+            assert_matches_rebuild(seed, "flat", &flat);
+            assert_matches_rebuild(seed, "striped", &striped);
+            assert_matches_rebuild(seed, "durable", &durable);
+
+            // identical content ⇒ identical store roots, across backend
+            // types and shard counts (1 vs 8 vs 4)
+            let root = flat.merkle_root();
+            assert_eq!(root, striped.merkle_root(), "seed {seed}: striped root diverges");
+            assert_eq!(root, durable.merkle_root(), "seed {seed}: durable root diverges");
+            assert_ne!(root, 0, "seed {seed}: stores are non-empty");
+
+            match round {
+                0 => {
+                    // crash-restart: replay-on-open rebuilds the tree;
+                    // with Always-fsync nothing is lost, so the rebuilt
+                    // root is exactly the incremental one
+                    let before = durable.merkle_root();
+                    durable.backend().crash_restart();
+                    assert_eq!(
+                        durable.merkle_root(),
+                        before,
+                        "seed {seed}: rebuild-on-open drifted from the incremental tree"
+                    );
+                    assert_matches_rebuild(seed, "durable-restarted", &durable);
+                }
+                1 => {
+                    // wipe: the tree resets with the map, then refills
+                    // through the merge path (how anti-entropy restores
+                    // a wiped replica)
+                    striped.backend().wipe();
+                    assert_eq!(striped.merkle_root(), 0, "seed {seed}: wiped root nonzero");
+                    assert_matches_rebuild(seed, "striped-wiped", &striped);
+                    for k in flat.keys() {
+                        striped.merge_key(k, &flat.state(k));
+                    }
+                    assert_eq!(
+                        striped.merkle_root(),
+                        flat.merkle_root(),
+                        "seed {seed}: merge-refilled replica root diverges"
+                    );
+                    assert_matches_rebuild(seed, "striped-refilled", &striped);
+                }
+                _ => {}
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    });
+}
+
+// -------------------------------------------------------------------
+// Property 2: tree-walk worklists ≡ scan worklists, byte for byte
+// -------------------------------------------------------------------
+
+type Sharded = KeyStore<DvvMech, ShardedBackend<DvvMech>>;
+
+fn sharded() -> Sharded {
+    KeyStore::with_backend(DvvMech, ShardedBackend::with_shards(8))
+}
+
+/// Byte-identical worklist equality: same keys, same order, same
+/// sibling snapshots — whole-store and shard by shard.
+fn assert_same_worklists(seed: u64, local: &Sharded, remote: &Sharded) -> usize {
+    let assert_pairs_eq = |scan: &[KeyPair], tree: &[KeyPair], what: &str| {
+        assert_eq!(
+            scan.iter().map(|p| p.key).collect::<Vec<_>>(),
+            tree.iter().map(|p| p.key).collect::<Vec<_>>(),
+            "seed {seed}: {what} worklist keys differ"
+        );
+        for (s, t) in scan.iter().zip(tree.iter()) {
+            assert_eq!(s.local, t.local, "seed {seed}: {what} key {} local snapshot", s.key);
+            assert_eq!(s.remote, t.remote, "seed {seed}: {what} key {} remote snapshot", s.key);
+        }
+    };
+    let scan = diff_pairs(local, remote);
+    let tree = diff_pairs_merkle(local, remote);
+    assert_pairs_eq(&scan, &tree, "whole-store");
+    for shard in 0..local.shard_count() {
+        let scan_s = diff_pairs_in_shard(local, remote, shard);
+        let tree_s = diff_pairs_in_shard_merkle(local, remote, shard);
+        assert_pairs_eq(&scan_s, &tree_s, &format!("shard {shard}"));
+    }
+    scan.len()
+}
+
+#[test]
+fn merkle_diff_equals_scan_diff_on_seeded_divergent_pairs() {
+    run_seeded("merkle_diff_vs_scan", &seeds(), |seed| {
+        let mut rng = Rng::new(seed);
+        let local = sharded();
+        let remote = sharded();
+        let meta = meta();
+        let empty = empty_ctx();
+        let mut expect_diverged = 0usize;
+        for key in 0..600u64 {
+            match rng.below(6) {
+                0 => {
+                    // local-only key
+                    local.write(key, &empty, Val::new(rng.next_u64(), 8), Actor::server(0), &meta);
+                    expect_diverged += 1;
+                }
+                1 => {
+                    // remote-only key
+                    remote.write(key, &empty, Val::new(rng.next_u64(), 8), Actor::server(1), &meta);
+                    expect_diverged += 1;
+                }
+                2 => {
+                    // concurrent unsynced siblings on both sides
+                    local.write(key, &empty, Val::new(rng.next_u64(), 8), Actor::server(0), &meta);
+                    remote.write(key, &empty, Val::new(rng.next_u64(), 8), Actor::server(1), &meta);
+                    expect_diverged += 1;
+                }
+                3 => {
+                    // converged by one-way copy
+                    local.write(key, &empty, Val::new(rng.next_u64(), 8), Actor::server(0), &meta);
+                    remote.merge_key(key, &local.state(key));
+                }
+                4 => {
+                    // converged with order-only difference: both hold
+                    // {x, y}, in opposite Vec orders
+                    local.write(key, &empty, Val::new(rng.next_u64(), 8), Actor::server(0), &meta);
+                    remote.write(key, &empty, Val::new(rng.next_u64(), 8), Actor::server(1), &meta);
+                    let (sl, sr) = (local.state(key), remote.state(key));
+                    local.merge_key(key, &sr);
+                    remote.merge_key(key, &sl);
+                }
+                _ => {} // absent on both sides
+            }
+        }
+        let found = assert_same_worklists(seed, &local, &remote);
+        assert_eq!(found, expect_diverged, "seed {seed}: detector missed/invented divergence");
+    });
+}
+
+#[test]
+fn merkle_diff_matches_scan_on_empty_vs_full() {
+    let local = sharded();
+    let remote = sharded();
+    let meta = meta();
+    let empty = empty_ctx();
+    for key in 0..200u64 {
+        remote.write(key, &empty, Val::new(key + 1, 8), Actor::server(1), &meta);
+    }
+    let found = assert_same_worklists(0, &local, &remote);
+    assert_eq!(found, 200, "every remote key flagged against the empty store");
+    // and the fully-symmetric case: two empty stores, nothing flagged
+    let found = assert_same_worklists(0, &sharded(), &sharded());
+    assert_eq!(found, 0);
+}
+
+#[test]
+fn single_key_divergence_costs_log_n_digests_not_a_scan() {
+    let local = sharded();
+    let remote = sharded();
+    let meta = meta();
+    let empty = empty_ctx();
+    const KEYSPACE: u64 = 2_000;
+    for key in 0..KEYSPACE {
+        local.write(key, &empty, Val::new(key + 1, 8), Actor::server(0), &meta);
+        remote.merge_key(key, &local.state(key));
+    }
+    // one extra write on one side
+    let (_, ctx) = remote.read(1_234);
+    remote.write(1_234, &ctx, Val::new(9_999, 8), Actor::server(1), &meta);
+
+    let found = assert_same_worklists(0, &local, &remote);
+    assert_eq!(found, 1, "exactly the touched key is flagged");
+
+    // walk cost: the diverged shard descends one root-to-leaf path
+    // (≤ 1 + DEPTH·16 digest comparisons); every other shard prunes at
+    // its root — far below the 2 000-key scan
+    let mut nodes_compared = 0u64;
+    for shard in 0..local.shard_count() {
+        let (_, stats) = local.backend().with_merkle(shard, |tl| {
+            remote.backend().with_merkle(shard, |tr| merkle::diff(tl, tr))
+        });
+        nodes_compared += stats.nodes_compared;
+    }
+    let bound = local.shard_count() as u64 + u64::from(merkle::DEPTH) * 16;
+    assert!(
+        nodes_compared <= bound,
+        "tree walk did {nodes_compared} digest comparisons (bound {bound}, keyspace {KEYSPACE})"
+    );
+}
+
+#[test]
+fn order_only_difference_is_divergence_for_neither_detector() {
+    let local = sharded();
+    let remote = sharded();
+    let meta = meta();
+    let empty = empty_ctx();
+    for key in 0..64u64 {
+        local.write(key, &empty, Val::new(key * 2 + 1, 8), Actor::server(0), &meta);
+        remote.write(key, &empty, Val::new(key * 2 + 2, 8), Actor::server(1), &meta);
+        let (sl, sr) = (local.state(key), remote.state(key));
+        local.merge_key(key, &sr);
+        remote.merge_key(key, &sl);
+    }
+    assert_eq!(assert_same_worklists(0, &local, &remote), 0, "order alone is not divergence");
+    // the per-sibling digest fold is order-independent, so the roots
+    // agree too and a quiesced exchange is one root comparison per shard
+    assert_eq!(local.merkle_root(), remote.merkle_root());
+    for shard in 0..local.shard_count() {
+        let (_, stats) = local.backend().with_merkle(shard, |tl| {
+            remote.backend().with_merkle(shard, |tr| merkle::diff(tl, tr))
+        });
+        assert_eq!(stats.nodes_compared, 1, "shard {shard} did not prune at the root");
+    }
+}
+
+// -------------------------------------------------------------------
+// Property 3: chaos regression with tree-walk AE, both worlds
+// -------------------------------------------------------------------
+
+const NODES: usize = 5;
+const KEYS: u64 = 8;
+const CLIENTS: u32 = 3;
+const HORIZON_US: u64 = 300_000;
+
+/// Partitions + crash windows + a message-drop window
+/// ([`FaultPlan::random_chaos`]), plus one mid-run crash-restart and
+/// one live join — the scenario class this regression owns.
+fn chaos_plan(seed: u64) -> FaultPlan {
+    let mut rng = Rng::new(seed);
+    let restart_node = rng.below(NODES as u64) as usize;
+    FaultPlan::random_chaos(NODES, HORIZON_US, &mut rng)
+        .restart_at(HORIZON_US / 3, restart_node)
+        .join_at(HORIZON_US / 2)
+}
+
+fn des_run(seed: u64) {
+    let mut cfg = dvvstore::config::StoreConfig::default();
+    cfg.cluster.nodes = NODES;
+    cfg.cluster.replication = 3;
+    cfg.cluster.read_quorum = 2;
+    cfg.cluster.write_quorum = 2;
+    cfg.antientropy.period_us = 20_000;
+    cfg.antientropy.merkle = true;
+    cfg.durability.flush_every_ops = 4;
+    let driver = Box::new(dvvstore::workload::RandomWorkload::new(
+        dvvstore::workload::WorkloadSpec {
+            keys: KEYS,
+            ops_per_client: 40,
+            put_fraction: 0.6,
+            read_before_write: 0.5,
+            mean_think_us: 400.0,
+            ..Default::default()
+        },
+        CLIENTS as usize,
+    ));
+    let mut sim =
+        dvvstore::sim::Sim::new(DvvMech, cfg, CLIENTS as usize, true, driver, seed).unwrap();
+    chaos_plan(seed).apply(&mut sim);
+    sim.start();
+    sim.run(5_000_000);
+    sim.settle();
+    assert!(sim.writes_acked() > 0, "seed {seed}: nothing acked");
+    assert_eq!(
+        sim.audit_acked_lost(),
+        0,
+        "seed {seed}: acked update lost under tree-walk AE ({})",
+        sim.metrics.summary()
+    );
+    assert_eq!(sim.metrics.lost_updates, 0, "seed {seed}: mechanism lost updates");
+    assert!(
+        sim.metrics.ae_digests_compared > 0,
+        "seed {seed}: the tree walk never ran — merkle AE was not exercised"
+    );
+    // post-settle convergence across members (the joiner included),
+    // pairwise — and therefore equal store roots
+    let members = sim.members();
+    for (ai, &a) in members.iter().enumerate() {
+        for &b in members.iter().skip(ai + 1) {
+            for key in 0..KEYS {
+                assert_eq!(
+                    sim.nodes[a].store.state(key),
+                    sim.nodes[b].store.state(key),
+                    "seed {seed}: members {a}/{b} diverged on key {key}"
+                );
+            }
+            assert_eq!(
+                sim.nodes[a].store.merkle_root(),
+                sim.nodes[b].store.merkle_root(),
+                "seed {seed}: members {a}/{b} roots diverged"
+            );
+        }
+    }
+}
+
+/// Drive the plan against a durable threaded cluster while client
+/// threads hammer traced quorum ops; returns the acked `(key, id)`
+/// pairs for the survivor audit.
+fn threaded_run(
+    seed: u64,
+    cluster: &Arc<LocalCluster<DurableBackend<DvvMech>>>,
+) -> Vec<(u64, u64)> {
+    let plan = chaos_plan(seed);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for t in 0..CLIENTS {
+        let cluster = Arc::clone(cluster);
+        let stop = Arc::clone(&stop);
+        workers.push(std::thread::spawn(move || {
+            let me = Actor::client(t);
+            let mut rng = Rng::new(seed.wrapping_mul(0x9E37).wrapping_add(u64::from(t)));
+            let mut sessions: Vec<Option<(Vec<u8>, Vec<u64>)>> = vec![None; KEYS as usize];
+            let mut acked: Vec<(u64, u64)> = Vec::new();
+            let mut op = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let ki = rng.below(KEYS);
+                let key = key_name(ki);
+                if rng.chance(0.5) {
+                    if let Ok(ans) = cluster.get(&key) {
+                        sessions[ki as usize] = Some((ans.context, ans.ids));
+                    }
+                } else {
+                    let (ctx, observed) = sessions[ki as usize].clone().unwrap_or_default();
+                    let body = format!("c{t}-{op}").into_bytes();
+                    if let Ok(id) = cluster.put_traced(&key, body, &ctx, me, &observed) {
+                        acked.push((ki, id));
+                    }
+                }
+                op += 1;
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            acked
+        }));
+    }
+    const STEPS: u64 = 50;
+    for step in 1..=STEPS {
+        cluster.advance_plan(&plan, HORIZON_US * step / STEPS);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut acked = Vec::new();
+    for w in workers {
+        acked.extend(w.join().unwrap());
+    }
+    acked
+}
+
+/// Heal, quiesce over tree-walk AE, and audit: convergence, zero acked
+/// loss, equal roots — then let the scan path second the verdict.
+fn audit_threaded(
+    seed: u64,
+    cluster: &LocalCluster<DurableBackend<DvvMech>>,
+    oracle: &SharedOracle,
+    acked: &[(u64, u64)],
+) {
+    assert!(cluster.ae_merkle(), "tree walk is the default detector");
+    cluster.fabric().heal_all();
+    cluster.drain_hints();
+    let mut rounds = 0;
+    while cluster.anti_entropy_round() > 0 {
+        rounds += 1;
+        assert!(rounds < 32, "seed {seed}: tree-walk anti-entropy failed to quiesce");
+    }
+    let members = cluster.members();
+    for (ai, &a) in members.iter().enumerate() {
+        for &b in members.iter().skip(ai + 1) {
+            let diverged = diff_pairs(cluster.node(a).store(), cluster.node(b).store());
+            assert!(
+                diverged.is_empty(),
+                "seed {seed}: members {a}/{b} diverged after heal on {} keys",
+                diverged.len()
+            );
+        }
+    }
+    // equal roots across every member — the cheap convergence witness
+    // the expensive pairwise scan above just vouched for
+    let roots = cluster.merkle_roots();
+    assert!(
+        roots.windows(2).all(|w| w[0].1 == w[1].1),
+        "seed {seed}: member roots diverge after convergence: {roots:?}"
+    );
+    assert_eq!(cluster.merkle_root(), roots[0].1, "seed {seed}: common root is reported");
+    // the exact oracle seconds the verdict: the scan detector finds
+    // nothing the tree walk missed
+    cluster.set_ae_merkle(false);
+    assert_eq!(
+        cluster.anti_entropy_round(),
+        0,
+        "seed {seed}: the scan path found divergence the tree walk left behind"
+    );
+    cluster.set_ae_merkle(true);
+
+    let verdict = oracle.verdict();
+    assert_eq!(verdict.unaudited_drops, 0, "seed {seed}: untraced writes leaked in");
+    assert_eq!(verdict.lost_updates, 0, "seed {seed}: mechanism lost updates");
+    assert!(!acked.is_empty(), "seed {seed}: no write was ever acknowledged");
+    for &(ki, id) in acked {
+        let k = hash_str(&key_name(ki));
+        let covered = members.iter().any(|&n| {
+            cluster
+                .node(n)
+                .store()
+                .values(k)
+                .iter()
+                .any(|v| v.id == id || oracle.with_inner(|o| o.leq(id, v.id)))
+        });
+        assert!(covered, "seed {seed}: acked write {id} on key {ki} lost");
+    }
+}
+
+#[test]
+fn chaos_with_tree_walk_ae_converges_in_both_worlds() {
+    // one pinned plan (partition + drop + restart + join), replayed in
+    // the DES and against the threaded durable cluster
+    let seed = 6_161;
+    des_run(seed);
+    let dir = temp_dir("merkle-chaos");
+    let opts = WalOptions { segment_bytes: 16 * 1024, fsync: FsyncPolicy::EveryN(4) };
+    let cluster = LocalCluster::with_data_dir(NODES, 3, 2, 2, 4, &dir, opts).unwrap();
+    let oracle = Arc::new(SharedOracle::new());
+    cluster.attach_oracle(Arc::clone(&oracle));
+    cluster.fabric().reseed(seed ^ 0xD00D);
+    let cluster = Arc::new(cluster);
+    let acked = threaded_run(seed, &cluster);
+    audit_threaded(seed, &cluster, &oracle, &acked);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn seeded_chaos_with_tree_walk_ae_des() {
+    run_seeded("merkle_chaos_des", &seeds(), des_run);
+}
