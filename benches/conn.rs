@@ -1,0 +1,243 @@
+//! Connection-scalability bench: reactor vs thread-per-connection serve
+//! loop under 10/100/1k/10k concurrent connections.
+//!
+//! Each level opens N binary-v2 connections against a fresh server and
+//! drives a fixed GET budget through them from a small pool of driver
+//! threads (connections idle between their turns, as real fleets do),
+//! recording per-op latency. Reported per `(mode, level)`: achieved
+//! throughput and p50/p99 tail latency. Results land in
+//! `BENCH_conn.json` (path override: `BENCH_CONN_JSON`); `rust/ci.sh`
+//! runs the quick levels so the file stays fresh.
+//!
+//! Connection counts are *requested*; if the environment's fd limit (or
+//! thread limit, in threaded mode) stops a level short, the level runs
+//! with what it got and the JSON records both numbers — a silent clamp
+//! would misread as "10k conns measured".
+//!
+//! Regenerate with `cargo bench --bench conn`.
+
+use std::sync::{Barrier, Mutex};
+use std::time::Instant;
+
+use dvvstore::api::{KvClient, TcpClient};
+use dvvstore::bench_support::{fmt_count, Options};
+use dvvstore::clocks::Actor;
+use dvvstore::server::tcp::{ServeMode, ServeOptions, Server};
+use dvvstore::server::LocalCluster;
+use std::sync::Arc;
+
+const DRIVERS: usize = 8;
+
+struct LevelResult {
+    mode: &'static str,
+    conns_requested: usize,
+    conns: usize,
+    ops: u64,
+    wall_ms: f64,
+    throughput: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+fn percentile(sorted: &[u64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[(((sorted.len() - 1) as f64) * p) as usize] as f64
+}
+
+fn mode_name(mode: ServeMode) -> &'static str {
+    match mode {
+        ServeMode::Reactor { .. } => "reactor",
+        ServeMode::Threaded => "threaded",
+    }
+}
+
+/// One `(mode, level)` measurement against a fresh server.
+fn run_level(mode: ServeMode, requested: usize, total_ops: u64) -> LevelResult {
+    let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+    let server =
+        Server::start_with("127.0.0.1:0", Arc::clone(&cluster), ServeOptions { mode }).unwrap();
+    let addr = server.addr();
+
+    // seed the key every GET will hit
+    let mut seeder = TcpClient::connect(addr, Actor::client(0)).unwrap();
+    seeder.put("bench", b"payload-0123456789abcdef".to_vec(), None).unwrap();
+    seeder.quit().unwrap();
+
+    // open the fleet, clamping (loudly) at environment limits
+    let mut fleet: Vec<TcpClient> = Vec::with_capacity(requested);
+    for i in 0..requested {
+        match TcpClient::connect(addr, Actor::client(i as u32 + 1)) {
+            Ok(c) => fleet.push(c),
+            Err(e) => {
+                eprintln!(
+                    "  conns={requested}: clamped to {} ({e})",
+                    fleet.len()
+                );
+                break;
+            }
+        }
+    }
+    let conns = fleet.len();
+    if conns == 0 {
+        server.shutdown();
+        return LevelResult {
+            mode: mode_name(mode),
+            conns_requested: requested,
+            conns: 0,
+            ops: 0,
+            wall_ms: 0.0,
+            throughput: 0.0,
+            p50_us: 0.0,
+            p99_us: 0.0,
+        };
+    }
+
+    // shard the fleet over the driver pool round-robin
+    let drivers = DRIVERS.min(conns);
+    let mut shards: Vec<Vec<TcpClient>> = (0..drivers).map(|_| Vec::new()).collect();
+    for (i, client) in fleet.into_iter().enumerate() {
+        shards[i % drivers].push(client);
+    }
+    let ops_per_driver = total_ops / drivers as u64;
+
+    let barrier = Barrier::new(drivers + 1);
+    let latencies: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let t0 = std::thread::scope(|scope| {
+        for mut shard in shards {
+            let barrier = &barrier;
+            let latencies = &latencies;
+            scope.spawn(move || {
+                barrier.wait();
+                let mut local = Vec::with_capacity(ops_per_driver as usize);
+                for op in 0..ops_per_driver {
+                    let client = &mut shard[(op as usize) % shard.len()];
+                    let t = Instant::now();
+                    let reply = client.get("bench").expect("bench GET failed");
+                    assert!(!reply.values.is_empty());
+                    local.push(t.elapsed().as_micros() as u64);
+                }
+                latencies.lock().unwrap().append(&mut local);
+                // connections die here (no QUIT): teardown cost is the
+                // server's problem, not part of the measured window
+            });
+        }
+        barrier.wait();
+        Instant::now()
+    });
+    let wall = t0.elapsed();
+    server.shutdown();
+
+    let mut lat = latencies.into_inner().unwrap();
+    lat.sort_unstable();
+    let ops = lat.len() as u64;
+    let throughput = ops as f64 / wall.as_secs_f64().max(1e-9);
+    LevelResult {
+        mode: mode_name(mode),
+        conns_requested: requested,
+        conns,
+        ops,
+        wall_ms: wall.as_secs_f64() * 1e3,
+        throughput,
+        p50_us: percentile(&lat, 0.50),
+        p99_us: percentile(&lat, 0.99),
+    }
+}
+
+fn write_json(path: &str, quick: bool, results: &[LevelResult]) -> std::io::Result<()> {
+    let mut rows = String::new();
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"conns_requested\": {}, \"conns\": {}, \
+             \"ops\": {}, \"wall_ms\": {:.1}, \"throughput_ops_s\": {:.1}, \
+             \"p50_us\": {:.1}, \"p99_us\": {:.1}}}",
+            r.mode, r.conns_requested, r.conns, r.ops, r.wall_ms, r.throughput, r.p50_us, r.p99_us
+        ));
+    }
+    // reactor-over-threaded ratios per level (>1 = reactor ahead)
+    let find = |mode: &str, requested: usize| {
+        results.iter().find(|r| r.mode == mode && r.conns_requested == requested)
+    };
+    let mut ratios = String::new();
+    let mut first = true;
+    for r in results.iter().filter(|r| r.mode == "reactor") {
+        if let Some(t) = find("threaded", r.conns_requested) {
+            if t.throughput > 0.0 && r.p99_us > 0.0 {
+                if !first {
+                    ratios.push_str(", ");
+                }
+                first = false;
+                ratios.push_str(&format!(
+                    "\"conns={}\": {{\"throughput\": {:.2}, \"p99\": {:.2}}}",
+                    r.conns_requested,
+                    r.throughput / t.throughput,
+                    t.p99_us / r.p99_us
+                ));
+            }
+        }
+    }
+    let json = format!(
+        "{{\n  \"suite\": \"conn\",\n  \"quick\": {quick},\n  \
+         \"reactor_vs_threaded\": {{{ratios}}},\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    std::fs::write(path, json)
+}
+
+fn main() {
+    let opts = Options::from_args();
+    let quick = opts.quick;
+    // quick mode (CI) keeps to the levels a small container handles in
+    // seconds; the full run sweeps the paper-scale fan-out
+    let levels: &[usize] = if quick { &[10, 100] } else { &[10, 100, 1000, 10000] };
+    let total_ops: u64 = if quick { 2_000 } else { 20_000 };
+
+    let mut results = Vec::new();
+    for &level in levels {
+        for mode in [ServeMode::Reactor { workers: 0 }, ServeMode::Threaded] {
+            if let Some(f) = &opts.filter {
+                let tag = format!("{}/conns={level}", mode_name(mode));
+                if !tag.contains(f.as_str()) {
+                    continue;
+                }
+            }
+            let r = run_level(mode, level, total_ops);
+            eprintln!(
+                "  {:<9} conns={:<6} ops={:<6} {:>10}/s  p50 {:>8.1}µs  p99 {:>8.1}µs",
+                r.mode,
+                r.conns,
+                r.ops,
+                fmt_count(r.throughput),
+                r.p50_us,
+                r.p99_us
+            );
+            results.push(r);
+        }
+    }
+
+    let path =
+        std::env::var("BENCH_CONN_JSON").unwrap_or_else(|_| "BENCH_conn.json".to_string());
+    match write_json(&path, quick, &results) {
+        Ok(()) => eprintln!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+
+    println!("\n## conn\n");
+    println!("| mode | conns | ops | throughput | p50 | p99 |");
+    println!("|---|---|---|---|---|---|");
+    for r in &results {
+        println!(
+            "| {} | {} | {} | {}/s | {:.1}µs | {:.1}µs |",
+            r.mode,
+            r.conns,
+            r.ops,
+            fmt_count(r.throughput),
+            r.p50_us,
+            r.p99_us
+        );
+    }
+}

@@ -82,5 +82,8 @@ bench_smoke wal
 # antientropy → ae_scale: scan vs hash-tree divergence detection over
 # growing keyspaces (quiesced-round cost must stay sublinear in keys).
 bench_smoke antientropy ae_scale
+# conn: reactor vs thread-per-connection serve loop (throughput + tail
+# latency across connection-count levels).
+bench_smoke conn
 
 echo "ci OK"

@@ -73,6 +73,47 @@ impl TcpClient {
         protocol::read_frame(&mut self.reader)
     }
 
+    /// Pipeline: write every request frame back-to-back, then read the
+    /// replies. The reactor serve loop executes pipelined frames
+    /// concurrently on its worker pool but delivers replies in request
+    /// order — `replies[i]` always answers `reqs[i]`.
+    ///
+    /// Replies are raw `(opcode, payload)` frames; callers decode (and
+    /// decide per-slot whether an `OP_ERR` is fatal). Don't pipeline a
+    /// `Quit`: the server closes after the `BYE`, so later slots would
+    /// error out.
+    pub fn pipeline(&mut self, reqs: &[BinRequest]) -> Result<Vec<(u8, Vec<u8>)>> {
+        let mut batch = Vec::new();
+        for req in reqs {
+            let (opcode, payload) = protocol::encode_bin_request(req);
+            protocol::write_frame(&mut batch, opcode, &payload)?;
+        }
+        self.stream.write_all(&batch)?;
+        let mut replies = Vec::with_capacity(reqs.len());
+        for _ in reqs {
+            replies.push(protocol::read_frame(&mut self.reader)?);
+        }
+        Ok(replies)
+    }
+
+    /// Pipelined multi-GET: all keys in flight on this one connection,
+    /// replies decoded in key order.
+    pub fn pipeline_get(&mut self, keys: &[&str]) -> Result<Vec<GetReply>> {
+        let reqs: Vec<BinRequest> =
+            keys.iter().map(|k| BinRequest::Get { key: (*k).to_string() }).collect();
+        let mut out = Vec::with_capacity(keys.len());
+        for reply in self.pipeline(&reqs)? {
+            match reply {
+                (protocol::OP_VALUES, payload) => {
+                    let (values, token) = protocol::decode_values(&payload)?;
+                    out.push(GetReply { values, ctx: CausalCtx::decode(&token)? });
+                }
+                other => return Err(remote_err(other)),
+            }
+        }
+        Ok(out)
+    }
+
     /// Run a `FAULT`/`HEAL`/`RESTART`/`WIPE` admin command (text form)
     /// over the binary connection — chaos-engineering a live server,
     /// state loss included.

@@ -16,6 +16,8 @@ struct OptSpec {
     default: Option<String>,
     is_switch: bool,
     required: bool,
+    /// Allowed values (enum option); empty = any value accepted.
+    choices: Vec<String>,
 }
 
 /// A command (or subcommand) parser.
@@ -89,6 +91,23 @@ impl Command {
             default: Some(default.to_string()),
             is_switch: false,
             required: false,
+            choices: Vec::new(),
+        });
+        self
+    }
+
+    /// Add `--name <value>` restricted to a fixed set of values, with a
+    /// default. Anything outside `choices` is rejected at parse time
+    /// (listing the legal values), not deep inside the command.
+    pub fn opt_choice(mut self, name: &str, default: &str, choices: &[&str], help: &str) -> Self {
+        debug_assert!(choices.contains(&default), "default must be a legal choice");
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_switch: false,
+            required: false,
+            choices: choices.iter().map(|c| c.to_string()).collect(),
         });
         self
     }
@@ -101,6 +120,7 @@ impl Command {
             default: None,
             is_switch: false,
             required: true,
+            choices: Vec::new(),
         });
         self
     }
@@ -113,6 +133,7 @@ impl Command {
             default: None,
             is_switch: false,
             required: false,
+            choices: Vec::new(),
         });
         self
     }
@@ -125,6 +146,7 @@ impl Command {
             default: None,
             is_switch: true,
             required: false,
+            choices: Vec::new(),
         });
         self
     }
@@ -165,8 +187,10 @@ impl Command {
             for o in &self.opts {
                 let meta = if o.is_switch {
                     format!("--{}", o.name)
-                } else {
+                } else if o.choices.is_empty() {
                     format!("--{} <v>", o.name)
+                } else {
+                    format!("--{} <{}>", o.name, o.choices.join("|"))
                 };
                 let dflt = match &o.default {
                     Some(d) => format!(" [default: {d}]"),
@@ -215,6 +239,12 @@ impl Command {
                                 .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?
                         }
                     };
+                    if !spec.choices.is_empty() && !spec.choices.contains(&value) {
+                        return Err(Error::Config(format!(
+                            "--{name}: {value:?} is not one of [{}]",
+                            spec.choices.join(", ")
+                        )));
+                    }
                     m.values.insert(name, value);
                 }
             } else if let Some(sub) = self.subs.iter().find(|s| s.name == *a) {
@@ -300,6 +330,21 @@ mod tests {
         let c = Command::new("x", "t").positional("key", "the key");
         let m = c.parse(&args(&["mykey", "other"])).unwrap();
         assert_eq!(m.positionals, vec!["mykey", "other"]);
+    }
+
+    #[test]
+    fn choice_option_validated_at_parse_time() {
+        let c = Command::new("x", "t").opt_choice("mode", "reactor", &["reactor", "threads"], "serve mode");
+        // default applies untouched
+        assert_eq!(c.parse(&args(&[])).unwrap().get_str("mode"), "reactor");
+        // both legal values, both syntaxes
+        assert_eq!(c.parse(&args(&["--mode", "threads"])).unwrap().get_str("mode"), "threads");
+        assert_eq!(c.parse(&args(&["--mode=reactor"])).unwrap().get_str("mode"), "reactor");
+        // anything else is rejected with the legal set in the message
+        let err = c.parse(&args(&["--mode", "fibers"])).unwrap_err().to_string();
+        assert!(err.contains("fibers") && err.contains("reactor") && err.contains("threads"));
+        // help names the choices
+        assert!(c.help().contains("--mode <reactor|threads>"));
     }
 
     #[test]

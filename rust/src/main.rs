@@ -14,7 +14,10 @@ use dvvstore::config::StoreConfig;
 use dvvstore::figures;
 use dvvstore::kernel::mechs::{dispatch, MechVisitor};
 use dvvstore::kernel::{MechKind, Mechanism};
-use dvvstore::server::{tcp::Server, LocalCluster};
+use dvvstore::server::{
+    tcp::{ServeMode, ServeOptions, Server},
+    LocalCluster,
+};
 use dvvstore::sim::Sim;
 use dvvstore::store::{FsyncPolicy, WalOptions};
 use dvvstore::workload::{RandomWorkload, WorkloadSpec};
@@ -61,7 +64,18 @@ fn cli() -> Command {
                     "64",
                     "WAL fsync policy: always | never | <n> | every<n> (per n appends)",
                 )
-                .opt("segment-bytes", "1048576", "WAL segment roll threshold (bytes)"),
+                .opt("segment-bytes", "1048576", "WAL segment roll threshold (bytes)")
+                .opt_choice(
+                    "serve-mode",
+                    "reactor",
+                    &["reactor", "threads"],
+                    "connection handling: poll reactor with pipelining, or legacy thread-per-connection",
+                )
+                .opt(
+                    "reactor-workers",
+                    "0",
+                    "reactor execution threads (0 = size from available parallelism)",
+                ),
         )
 }
 
@@ -193,6 +207,12 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
     let w: usize = m.get_parsed("write-quorum")?;
     let shards: usize = m.get_parsed("shards")?;
     let addr = m.get_str("addr");
+    let serve = ServeOptions {
+        mode: match m.get_str("serve-mode") {
+            "threads" => ServeMode::Threaded,
+            _ => ServeMode::Reactor { workers: m.get_parsed("reactor-workers")? },
+        },
+    };
     match m.get("data-dir") {
         Some(dir) => {
             let opts = WalOptions {
@@ -205,11 +225,11 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
                 "durability: WAL at {dir} (fsync={}, segment={}B, wal_bytes={})",
                 opts.fsync, opts.segment_bytes, cluster.wal_bytes()
             );
-            run_serve_loop(addr, cluster, nodes, n, r, w)
+            run_serve_loop(addr, cluster, serve, nodes, n, r, w)
         }
         None => {
             let cluster = Arc::new(LocalCluster::with_shards(nodes, n, r, w, shards)?);
-            run_serve_loop(addr, cluster, nodes, n, r, w)
+            run_serve_loop(addr, cluster, serve, nodes, n, r, w)
         }
     }
 }
@@ -217,14 +237,20 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
 fn run_serve_loop<B: dvvstore::store::StorageBackend<dvvstore::kernel::mechs::DvvMech>>(
     addr: &str,
     cluster: Arc<LocalCluster<B>>,
+    serve: ServeOptions,
     nodes: usize,
     n: usize,
     r: usize,
     w: usize,
 ) -> dvvstore::Result<()> {
-    let server = Server::start(addr, cluster.clone())?;
+    let mode = match serve.mode {
+        ServeMode::Reactor { workers: 0 } => "reactor (auto-sized workers)".to_string(),
+        ServeMode::Reactor { workers } => format!("reactor ({workers} workers)"),
+        ServeMode::Threaded => "thread-per-connection".to_string(),
+    };
+    let server = Server::start_with(addr, cluster.clone(), serve)?;
     println!(
-        "dvv-store serving on {} ({} replicas x {} shards, N={n} R={r} W={w})",
+        "dvv-store serving on {} ({} replicas x {} shards, N={n} R={r} W={w}, {mode})",
         server.addr(),
         nodes,
         cluster.shard_count()

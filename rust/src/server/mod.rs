@@ -36,7 +36,10 @@
 //! to audit every discarded version under real concurrency.
 
 pub mod fabric;
+pub(crate) mod ops;
 pub mod protocol;
+#[cfg(unix)]
+pub(crate) mod reactor;
 pub mod tcp;
 
 use std::collections::HashMap;

@@ -1,0 +1,311 @@
+//! Request execution shared by every serve loop.
+//!
+//! The thread-per-connection loop ([`super::tcp`]) and the poll reactor
+//! ([`super::reactor`]) differ only in *how bytes arrive and leave*; what
+//! a decoded request **does** to the cluster is defined exactly once,
+//! here. [`exec_text_line`] and [`exec_bin_request`] are pure
+//! request→reply functions over a [`LocalCluster`]: no I/O, no
+//! connection state, safe to call from any worker thread. That is what
+//! lets the reactor run many requests from one connection concurrently
+//! while both serve loops stay wire-identical (the transport-equivalence
+//! and protocol-fuzz suites pass unchanged against either).
+
+use super::protocol::{self, format_values, parse_request, BinRequest, FaultCmd, Request};
+use super::LocalCluster;
+use crate::api::CausalCtx;
+use crate::clocks::Actor;
+use crate::error::Result;
+use crate::kernel::mechs::DvvMech;
+use crate::store::StorageBackend;
+
+/// Reply to one text-protocol line.
+#[derive(Debug)]
+pub(crate) enum TextReply {
+    /// Write this (newline-terminated) reply and keep serving.
+    Line(String),
+    /// Write `BYE\n` and close the connection.
+    Bye,
+}
+
+/// Reply to one binary-v2 frame.
+#[derive(Debug)]
+pub(crate) struct BinReply {
+    /// Reply opcode.
+    pub opcode: u8,
+    /// Reply payload (always frame-sized: oversized results degrade to
+    /// an `OP_ERR` here, so writing the frame cannot fail).
+    pub payload: Vec<u8>,
+    /// Close the connection after flushing this reply (`QUIT`).
+    pub close: bool,
+}
+
+/// Apply a `FAULT` admin command to the cluster's chaos fabric.
+fn apply_fault<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>, cmd: FaultCmd) -> String {
+    let fabric = cluster.fabric();
+    let nodes = cluster.node_count();
+    match cmd {
+        FaultCmd::Crash { node } if node < nodes => {
+            fabric.crash(node);
+            "OK\n".to_string()
+        }
+        FaultCmd::Crash { node } => format!("ERR node {node} out of range\n"),
+        FaultCmd::Partition { left, right } => {
+            if let Some(bad) = left.iter().chain(&right).find(|&&n| n >= nodes) {
+                format!("ERR node {bad} out of range\n")
+            } else {
+                fabric.partition_groups(&left, &right);
+                "OK\n".to_string()
+            }
+        }
+        FaultCmd::Drop { ppm } => {
+            fabric.set_drop_prob(f64::from(ppm) / 1_000_000.0);
+            "OK\n".to_string()
+        }
+        FaultCmd::Delay { us } => {
+            fabric.set_extra_delay_us(us);
+            "OK\n".to_string()
+        }
+    }
+}
+
+/// Apply a `RESTART` admin command: crash-restart one replica's storage
+/// (unpersisted state lost, WAL replayed).
+fn apply_restart<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>, node: usize) -> String {
+    if node >= cluster.node_count() {
+        return format!("ERR node {node} out of range\n");
+    }
+    let report = cluster.restart_node(node);
+    format!(
+        "OK replayed={} discarded={}\n",
+        report.records, report.discarded_bytes
+    )
+}
+
+/// Apply a `WIPE` admin command: destroy one replica's state entirely.
+fn apply_wipe<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>, node: usize) -> String {
+    if node >= cluster.node_count() {
+        return format!("ERR node {node} out of range\n");
+    }
+    cluster.wipe_node(node);
+    "OK\n".to_string()
+}
+
+/// Render the membership view as a text-protocol line (one consistent
+/// snapshot — epoch and members cannot straddle a concurrent bump).
+fn topology_line<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>) -> String {
+    let (epoch, slots, members) = cluster.topology().snapshot();
+    let members: Vec<String> = members.iter().map(|m| m.to_string()).collect();
+    format!("TOPOLOGY epoch={epoch} slots={slots} members={}\n", members.join(","))
+}
+
+/// Encode the membership view as an [`protocol::OP_TOPOLOGY_REPLY`]
+/// payload (one consistent snapshot).
+fn topology_frame<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>) -> Vec<u8> {
+    let (epoch, slots, members) = cluster.topology().snapshot();
+    let members: Vec<u64> = members.iter().map(|&m| m as u64).collect();
+    protocol::encode_topology_reply(epoch, slots as u64, &members)
+}
+
+/// Apply a `HEAL` admin command: recover one node, or reset every fault
+/// axis and drain parked hints.
+fn apply_heal<B: StorageBackend<DvvMech>>(
+    cluster: &LocalCluster<B>,
+    node: Option<usize>,
+) -> String {
+    match node {
+        Some(n) if n < cluster.node_count() => {
+            cluster.fabric().recover(n);
+            cluster.drain_hints();
+            "OK\n".to_string()
+        }
+        Some(n) => format!("ERR node {n} out of range\n"),
+        None => {
+            cluster.fabric().heal_all();
+            cluster.drain_hints();
+            "OK\n".to_string()
+        }
+    }
+}
+
+/// Execute one text-protocol request line (without its trailing
+/// newline). The caller has already skipped blank lines.
+pub(crate) fn exec_text_line<B: StorageBackend<DvvMech>>(
+    cluster: &LocalCluster<B>,
+    line: &str,
+) -> TextReply {
+    let reply = match parse_request(line) {
+        Ok(Request::Get { key }) => match cluster.get(&key) {
+            Ok(ans) => format_values(&ans.values, &ans.context),
+            Err(e) => format!("ERR {e}\n"),
+        },
+        Ok(Request::Put { key, value, context }) => match cluster.put(&key, value, &context) {
+            Ok(()) => "OK\n".to_string(),
+            Err(e) => format!("ERR {e}\n"),
+        },
+        Ok(Request::Stats) => format!(
+            "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={} wal_bytes={} merkle_root={}\n",
+            cluster.node_count(),
+            cluster.shard_count(),
+            cluster.metadata_bytes(),
+            cluster.pending_hints(),
+            cluster.epoch(),
+            cluster.wal_bytes(),
+            cluster.merkle_root()
+        ),
+        Ok(Request::Fault(cmd)) => apply_fault(cluster, cmd),
+        Ok(Request::Heal { node }) => apply_heal(cluster, node),
+        Ok(Request::Restart { node }) => apply_restart(cluster, node),
+        Ok(Request::Wipe { node }) => apply_wipe(cluster, node),
+        Ok(Request::Join) => {
+            let (id, epoch) = cluster.join_node();
+            format!("OK id={id} epoch={epoch}\n")
+        }
+        Ok(Request::Decommission { node }) => match cluster.decommission_node(node) {
+            Ok(epoch) => format!("OK epoch={epoch}\n"),
+            Err(e) => format!("ERR {e}\n"),
+        },
+        Ok(Request::Topology) => topology_line(cluster),
+        Ok(Request::Quit) => return TextReply::Bye,
+        Err(e) => format!("ERR {e}\n"),
+    };
+    TextReply::Line(reply)
+}
+
+/// Decode a binary PUT and run it through the traced quorum path: the
+/// frame's actor + ctx token make the write oracle-auditable end to end.
+fn put_binary<B: StorageBackend<DvvMech>>(
+    cluster: &LocalCluster<B>,
+    key: &str,
+    value: Vec<u8>,
+    actor: u32,
+    ctx_token: &[u8],
+) -> Result<(u64, Option<Vec<u8>>)> {
+    let (vv, observed) = if ctx_token.is_empty() {
+        (Vec::new(), Vec::new())
+    } else {
+        CausalCtx::decode(ctx_token)?.into_parts()
+    };
+    cluster.put_api(key, value, &vv, Actor(actor), &observed)
+}
+
+/// Map a text-protocol admin status line (`OK\n` / `ERR …\n`) onto a
+/// binary reply frame.
+fn admin_status(status: String) -> (u8, Vec<u8>) {
+    match status.strip_prefix("ERR ") {
+        Some(msg) => (protocol::OP_ERR, msg.trim_end().as_bytes().to_vec()),
+        None => (protocol::OP_OK, Vec::new()),
+    }
+}
+
+/// Execute one intact binary-v2 frame (framing already validated by the
+/// serve loop; a malformed *payload* is reported as `OP_ERR` and keeps
+/// the connection usable).
+pub(crate) fn exec_bin_request<B: StorageBackend<DvvMech>>(
+    cluster: &LocalCluster<B>,
+    opcode: u8,
+    payload: &[u8],
+) -> BinReply {
+    let mut close = false;
+    let (op, body): (u8, Vec<u8>) = match protocol::decode_bin_request(opcode, payload) {
+        Ok(BinRequest::Get { key }) => match cluster.get(&key) {
+            Ok(ans) => {
+                let token = CausalCtx::new(ans.context, ans.ids).encode();
+                let payload = protocol::encode_values(&ans.values, &token);
+                // a sibling set too large for one frame must degrade to
+                // an ERR reply, not abort the connection when
+                // write_frame refuses it
+                if !protocol::fits_frame(payload.len()) {
+                    (
+                        protocol::OP_ERR,
+                        format!(
+                            "reply of {} bytes exceeds the {}-byte frame cap",
+                            payload.len(),
+                            protocol::MAX_FRAME_LEN
+                        )
+                        .into_bytes(),
+                    )
+                } else {
+                    (protocol::OP_VALUES, payload)
+                }
+            }
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        },
+        Ok(BinRequest::Put { key, value, actor, ctx_token }) => {
+            match put_binary(cluster, &key, value, actor, &ctx_token) {
+                Ok((id, post)) => {
+                    // empty token = no chainable context (a concurrent
+                    // sibling survived; GET to merge)
+                    let token = post
+                        .map(|post| CausalCtx::new(post, vec![id]).encode())
+                        .unwrap_or_default();
+                    (protocol::OP_PUT_OK, protocol::encode_put_ok(id, &token))
+                }
+                Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+            }
+        }
+        Ok(BinRequest::Stats) => (
+            protocol::OP_STATS_REPLY,
+            protocol::encode_stats_reply(
+                cluster.node_count() as u64,
+                cluster.shard_count() as u64,
+                cluster.metadata_bytes(),
+                cluster.pending_hints() as u64,
+                cluster.epoch(),
+                cluster.wal_bytes(),
+                cluster.merkle_root(),
+            ),
+        ),
+        Ok(BinRequest::Join) => {
+            // the reply's epoch and slots come from *this* join's return
+            // value, so `slots - 1` is the id assigned to this request
+            // even when joins race (a fresh snapshot could report
+            // another join's slots); the member list is an advisory
+            // snapshot
+            let (id, epoch) = cluster.join_node();
+            let members: Vec<u64> = cluster.members().iter().map(|&m| m as u64).collect();
+            (
+                protocol::OP_TOPOLOGY_REPLY,
+                protocol::encode_topology_reply(epoch, id as u64 + 1, &members),
+            )
+        }
+        Ok(BinRequest::Decommission { node }) => match cluster.decommission_node(node) {
+            Ok(_) => (protocol::OP_TOPOLOGY_REPLY, topology_frame(cluster)),
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        },
+        Ok(BinRequest::Topology) => (protocol::OP_TOPOLOGY_REPLY, topology_frame(cluster)),
+        Ok(BinRequest::Admin { line }) => match parse_request(&line) {
+            Ok(Request::Fault(cmd)) => admin_status(apply_fault(cluster, cmd)),
+            Ok(Request::Heal { node }) => admin_status(apply_heal(cluster, node)),
+            // durability faults ride the ADMIN frame in text form —
+            // real storage loss at a live replica, over the wire
+            Ok(Request::Restart { node }) => admin_status(apply_restart(cluster, node)),
+            Ok(Request::Wipe { node }) => admin_status(apply_wipe(cluster, node)),
+            // text-form elastic ops work over ADMIN too; the dedicated
+            // opcodes return the richer topology frame
+            Ok(Request::Join) => {
+                let _ = cluster.join_node();
+                (protocol::OP_OK, Vec::new())
+            }
+            Ok(Request::Decommission { node }) => match cluster.decommission_node(node) {
+                Ok(_) => (protocol::OP_OK, Vec::new()),
+                Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+            },
+            Ok(Request::Topology) => (protocol::OP_TOPOLOGY_REPLY, topology_frame(cluster)),
+            Ok(_) => (
+                protocol::OP_ERR,
+                b"ADMIN accepts FAULT/HEAL/JOIN/DECOMMISSION/TOPOLOGY/RESTART/WIPE \
+                  commands only"
+                    .to_vec(),
+            ),
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        },
+        Ok(BinRequest::Quit) => {
+            close = true;
+            (protocol::OP_BYE, Vec::new())
+        }
+        // malformed payload inside an intact frame: report and keep the
+        // connection (framing is still trustworthy)
+        Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+    };
+    BinReply { opcode: op, payload: body, close }
+}

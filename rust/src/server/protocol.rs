@@ -367,6 +367,22 @@ pub const VERSION: u8 = 5;
 /// more is rejected before any allocation.
 pub const MAX_FRAME_LEN: u32 = 1 << 24;
 
+/// Upper bound on one buffered text-protocol line (64 KiB). A client
+/// that streams bytes without ever sending `\n` is answered with
+/// `ERR line too long` and disconnected instead of growing server
+/// memory without bound.
+pub const MAX_TEXT_LINE: usize = 64 * 1024;
+
+/// Whether a reply payload of `payload_len` bytes fits in one v2 frame
+/// (the length field counts opcode + payload, so the cap leaves room
+/// for the opcode byte). The single source of truth for the cap
+/// arithmetic: [`write_frame`] enforces it and reply builders consult
+/// it, so an oversized result degrades to an `OP_ERR` instead of
+/// tripping `write_frame` and killing the connection.
+pub fn fits_frame(payload_len: usize) -> bool {
+    (payload_len as u64).saturating_add(1) <= u64::from(MAX_FRAME_LEN)
+}
+
 /// Request opcode: read a key. Payload: key bytes (UTF-8).
 pub const OP_GET: u8 = 0x01;
 /// Request opcode: write a key. Payload:
@@ -478,10 +494,13 @@ pub fn frame_len(header: [u8; 4]) -> Result<usize> {
 
 /// Write one frame: `[u32 BE length][opcode][payload]`.
 pub fn write_frame(w: &mut impl std::io::Write, opcode: u8, payload: &[u8]) -> Result<()> {
-    let len = payload.len() as u64 + 1;
-    if len > u64::from(MAX_FRAME_LEN) {
-        return Err(Error::Protocol(format!("frame too large to send: {len} bytes")));
+    if !fits_frame(payload.len()) {
+        return Err(Error::Protocol(format!(
+            "frame too large to send: {} bytes",
+            payload.len() as u64 + 1
+        )));
     }
+    let len = payload.len() as u64 + 1;
     w.write_all(&(len as u32).to_be_bytes())?;
     w.write_all(&[opcode])?;
     w.write_all(payload)?;
@@ -908,6 +927,28 @@ mod tests {
         assert!(frame_len(0u32.to_be_bytes()).is_err(), "zero length");
         assert!(frame_len((MAX_FRAME_LEN + 1).to_be_bytes()).is_err(), "oversized");
         assert_eq!(frame_len(5u32.to_be_bytes()).unwrap(), 5);
+    }
+
+    #[test]
+    fn fits_frame_boundary_matches_write_frame() {
+        let max = MAX_FRAME_LEN as usize;
+        // payload of MAX - 1 bytes -> length field == MAX: the largest
+        // frame that may legally cross the wire
+        assert!(fits_frame(max - 1));
+        // payload of MAX bytes -> length field == MAX + 1: one past
+        assert!(!fits_frame(max));
+        assert!(!fits_frame(usize::MAX), "saturating add must not wrap");
+
+        // write_frame must agree with fits_frame at both boundary
+        // lengths — the guard in the GET path relies on it
+        let payload = vec![0u8; max - 1];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_VALUES, &payload).unwrap();
+        assert_eq!(buf.len(), 4 + max);
+        assert_eq!(frame_len(buf[..4].try_into().unwrap()).unwrap(), max);
+
+        let payload = vec![0u8; max];
+        assert!(write_frame(&mut std::io::sink(), OP_VALUES, &payload).is_err());
     }
 
     #[test]

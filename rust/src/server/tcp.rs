@@ -1,66 +1,131 @@
-//! TCP front end: thread-per-connection server over [`super::LocalCluster`].
+//! TCP front end over [`super::LocalCluster`], with two serve loops
+//! behind one [`Server`] facade.
 //!
 //! Each connection negotiates its protocol by its first bytes: a
 //! [`protocol::MAGIC`] preamble selects the length-prefixed **binary
 //! protocol v2** (acknowledged with an `OP_HELLO_ACK` frame); anything
 //! else falls back to the legacy line-based text protocol, so old
-//! clients keep working against a new server unchanged.
+//! clients keep working against a new server unchanged. Request
+//! *execution* is shared between the serve loops ([`super::ops`]), so
+//! both speak an identical wire protocol.
+//!
+//! [`ServeMode::Reactor`] (the default) is the readiness-based loop: a
+//! `poll(2)` reactor owning nonblocking connection states, a small
+//! worker pool executing requests, and per-connection frame pipelining
+//! — see [`super::reactor`] for the state machine. Shutdown drains
+//! in-flight requests and joins every thread deterministically.
+//!
+//! [`ServeMode::Threaded`] is the legacy thread-per-connection loop,
+//! kept as the baseline the connection-scalability bench compares
+//! against (`benches/conn.rs`). It is hardened here: connection threads
+//! are joined on shutdown (no detached worker can outlive
+//! [`Server::shutdown`] holding the cluster `Arc` mid-WAL-write), frame
+//! payloads are read into a capped-growth buffer instead of trusting
+//! the attacker-controlled header with a 16 MiB pre-allocation, and
+//! buffered text lines are capped at [`protocol::MAX_TEXT_LINE`].
 
 use std::io::{BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use super::protocol::{self, format_values, parse_request, BinRequest, FaultCmd, Request};
+use super::ops::{self, TextReply};
+use super::protocol;
 use super::LocalCluster;
-use crate::api::CausalCtx;
-use crate::clocks::Actor;
 use crate::error::{Error, Result};
 use crate::kernel::mechs::DvvMech;
 use crate::store::StorageBackend;
 
-/// A running TCP server (owns its listener thread).
+/// Incremental growth step for frame-payload reads: a frame body is
+/// read (and its buffer grown) this many bytes at a time, so a hostile
+/// header promising [`protocol::MAX_FRAME_LEN`] bytes costs the server
+/// at most one chunk until the payload actually arrives.
+pub(crate) const READ_CHUNK: usize = 64 * 1024;
+
+/// Stack size for thread-per-connection workers. The default 8 MiB
+/// would cap a 10k-connection bench at the memory limit long before the
+/// scheduler does; connection handlers are shallow.
+const CONN_STACK: usize = 256 * 1024;
+
+/// How [`Server`] turns sockets into executed requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    /// One blocking thread per connection: the legacy loop, kept as the
+    /// baseline the connection-scalability bench compares the reactor
+    /// against.
+    Threaded,
+    /// Readiness-based `poll(2)` reactor + worker pool, with
+    /// per-connection binary-frame pipelining (the default). On
+    /// non-unix targets this falls back to [`ServeMode::Threaded`].
+    Reactor {
+        /// Worker threads executing requests; `0` sizes the pool from
+        /// available parallelism (clamped to `2..=8`).
+        workers: usize,
+    },
+}
+
+/// Options for [`Server::start_with`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeOptions {
+    /// Which serve loop to run.
+    pub mode: ServeMode,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { mode: ServeMode::Reactor { workers: 0 } }
+    }
+}
+
+/// The running serve loop behind a [`Server`].
+enum Inner {
+    Threaded {
+        stop: Arc<AtomicBool>,
+        listener: std::thread::JoinHandle<()>,
+        conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    },
+    #[cfg(unix)]
+    Reactor(super::reactor::Handle),
+}
+
+/// A running TCP server (owns every thread it spawned; shutdown joins
+/// them all, so no worker holding the cluster `Arc` outlives it).
 pub struct Server {
     addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    inner: Option<Inner>,
 }
 
 impl Server {
-    /// Bind `addr` (use port 0 for an ephemeral port) and serve `cluster`
-    /// — any storage backend, in-memory or durable
-    /// (`serve --data-dir` passes a
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve
+    /// `cluster` with the default options (reactor mode) — any storage
+    /// backend, in-memory or durable (`serve --data-dir` passes a
     /// [`DurableBackend`](crate::store::DurableBackend)-backed cluster).
     pub fn start<B: StorageBackend<DvvMech>>(
         addr: &str,
         cluster: Arc<LocalCluster<B>>,
     ) -> Result<Server> {
+        Server::start_with(addr, cluster, ServeOptions::default())
+    }
+
+    /// Bind `addr` and serve `cluster` with an explicit [`ServeMode`].
+    pub fn start_with<B: StorageBackend<DvvMech>>(
+        addr: &str,
+        cluster: Arc<LocalCluster<B>>,
+        options: ServeOptions,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let handle = std::thread::spawn(move || {
-            // workers are detached: a connection blocked in read would
-            // otherwise wedge shutdown. The per-stream read timeout below
-            // bounds their lifetime after the listener stops.
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let cluster = cluster.clone();
-                        let stop = stop2.clone();
-                        std::thread::spawn(move || {
-                            let _ = handle_conn(stream, &cluster, &stop);
-                        });
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
+        let inner = match options.mode {
+            #[cfg(unix)]
+            ServeMode::Reactor { workers } => {
+                Inner::Reactor(super::reactor::spawn(listener, cluster, workers)?)
             }
-        });
-        Ok(Server { addr: local, stop, handle: Some(handle) })
+            #[cfg(not(unix))]
+            ServeMode::Reactor { .. } => start_threaded(listener, cluster),
+            ServeMode::Threaded => start_threaded(listener, cluster),
+        };
+        Ok(Server { addr: local, inner: Some(inner) })
     }
 
     /// The bound address.
@@ -68,110 +133,81 @@ impl Server {
         self.addr
     }
 
-    /// Stop accepting and join the listener thread.
+    /// Stop accepting, drain in-flight requests, and join every serving
+    /// thread. When this returns, no server thread still holds the
+    /// cluster `Arc` — a caller may immediately tear down shared state
+    /// (delete a data dir, assert `Arc::strong_count`).
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        match self.inner.take() {
+            Some(Inner::Threaded { stop, listener, conns }) => {
+                stop.store(true, Ordering::Relaxed);
+                let _ = listener.join();
+                // connection threads notice `stop` within one read
+                // timeout; joining them (instead of detaching) is what
+                // makes teardown safe for callers that delete the data
+                // dir right after shutdown
+                let workers: Vec<_> = std::mem::take(&mut *conns.lock().unwrap());
+                for h in workers {
+                    let _ = h.join();
+                }
+            }
+            #[cfg(unix)]
+            Some(Inner::Reactor(handle)) => handle.shutdown(),
+            None => {}
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.shutdown_impl();
     }
 }
 
-/// Apply a `FAULT` admin command to the cluster's chaos fabric.
-fn apply_fault<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>, cmd: FaultCmd) -> String {
-    let fabric = cluster.fabric();
-    let nodes = cluster.node_count();
-    match cmd {
-        FaultCmd::Crash { node } if node < nodes => {
-            fabric.crash(node);
-            "OK\n".to_string()
-        }
-        FaultCmd::Crash { node } => format!("ERR node {node} out of range\n"),
-        FaultCmd::Partition { left, right } => {
-            if let Some(bad) = left.iter().chain(&right).find(|&&n| n >= nodes) {
-                format!("ERR node {bad} out of range\n")
-            } else {
-                fabric.partition_groups(&left, &right);
-                "OK\n".to_string()
+/// Spawn the legacy thread-per-connection loop: an accept thread plus a
+/// join-on-shutdown registry of connection threads.
+fn start_threaded<B: StorageBackend<DvvMech>>(
+    listener: TcpListener,
+    cluster: Arc<LocalCluster<B>>,
+) -> Inner {
+    let stop = Arc::new(AtomicBool::new(false));
+    let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let stop2 = Arc::clone(&stop);
+    let conns2 = Arc::clone(&conns);
+    let handle = std::thread::spawn(move || {
+        while !stop2.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let cluster = Arc::clone(&cluster);
+                    let stop = Arc::clone(&stop2);
+                    let mut registry = conns2.lock().unwrap();
+                    // reap finished handles so the registry tracks live
+                    // connections, not connection history
+                    registry.retain(|h| !h.is_finished());
+                    let spawned = std::thread::Builder::new()
+                        .name("dvv-conn".into())
+                        .stack_size(CONN_STACK)
+                        .spawn(move || {
+                            let _ = handle_conn(stream, &cluster, &stop);
+                        });
+                    // on spawn failure (thread exhaustion): shed the
+                    // connection instead of killing the accept loop
+                    if let Ok(h) = spawned {
+                        registry.push(h);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(_) => break,
             }
         }
-        FaultCmd::Drop { ppm } => {
-            fabric.set_drop_prob(f64::from(ppm) / 1_000_000.0);
-            "OK\n".to_string()
-        }
-        FaultCmd::Delay { us } => {
-            fabric.set_extra_delay_us(us);
-            "OK\n".to_string()
-        }
-    }
-}
-
-/// Apply a `RESTART` admin command: crash-restart one replica's storage
-/// (unpersisted state lost, WAL replayed).
-fn apply_restart<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>, node: usize) -> String {
-    if node >= cluster.node_count() {
-        return format!("ERR node {node} out of range\n");
-    }
-    let report = cluster.restart_node(node);
-    format!(
-        "OK replayed={} discarded={}\n",
-        report.records, report.discarded_bytes
-    )
-}
-
-/// Apply a `WIPE` admin command: destroy one replica's state entirely.
-fn apply_wipe<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>, node: usize) -> String {
-    if node >= cluster.node_count() {
-        return format!("ERR node {node} out of range\n");
-    }
-    cluster.wipe_node(node);
-    "OK\n".to_string()
-}
-
-/// Render the membership view as a text-protocol line (one consistent
-/// snapshot — epoch and members cannot straddle a concurrent bump).
-fn topology_line<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>) -> String {
-    let (epoch, slots, members) = cluster.topology().snapshot();
-    let members: Vec<String> = members.iter().map(|m| m.to_string()).collect();
-    format!("TOPOLOGY epoch={epoch} slots={slots} members={}\n", members.join(","))
-}
-
-/// Encode the membership view as an [`protocol::OP_TOPOLOGY_REPLY`]
-/// payload (one consistent snapshot).
-fn topology_frame<B: StorageBackend<DvvMech>>(cluster: &LocalCluster<B>) -> Vec<u8> {
-    let (epoch, slots, members) = cluster.topology().snapshot();
-    let members: Vec<u64> = members.iter().map(|&m| m as u64).collect();
-    protocol::encode_topology_reply(epoch, slots as u64, &members)
-}
-
-/// Apply a `HEAL` admin command: recover one node, or reset every fault
-/// axis and drain parked hints.
-fn apply_heal<B: StorageBackend<DvvMech>>(
-    cluster: &LocalCluster<B>,
-    node: Option<usize>,
-) -> String {
-    match node {
-        Some(n) if n < cluster.node_count() => {
-            cluster.fabric().recover(n);
-            cluster.drain_hints();
-            "OK\n".to_string()
-        }
-        Some(n) => format!("ERR node {n} out of range\n"),
-        None => {
-            cluster.fabric().heal_all();
-            cluster.drain_hints();
-            "OK\n".to_string()
-        }
-    }
+    });
+    Inner::Threaded { stop, listener: handle, conns }
 }
 
 /// Read one byte, looping on read timeouts until data arrives, the peer
@@ -228,24 +264,33 @@ fn read_full(r: &mut impl Read, buf: &mut [u8], stop: &AtomicBool, eof_ok: bool)
     Ok(true)
 }
 
-/// Read one v2 frame, timeout-aware. `Ok(None)` = clean disconnect.
-fn read_frame_server(
-    r: &mut impl Read,
-    stop: &AtomicBool,
-) -> Result<Option<(u8, Vec<u8>)>> {
+/// Read one v2 frame into `body` (opcode + payload), reusing the buffer
+/// across frames. The body grows in [`READ_CHUNK`] steps, each step
+/// allocated only after the previous one's bytes actually arrived — the
+/// attacker-controlled length field never picks an allocation size
+/// (the same hostile-pre-allocation class `decode_vv` was fixed for).
+/// `Ok(false)` = clean disconnect (or shutdown) before a header.
+fn read_frame_server(r: &mut impl Read, stop: &AtomicBool, body: &mut Vec<u8>) -> Result<bool> {
     let mut header = [0u8; 4];
     if !read_full(r, &mut header, stop, true)? {
-        return Ok(None);
+        return Ok(false);
     }
     let len = protocol::frame_len(header)?;
-    let mut body = vec![0u8; len];
-    read_full(r, &mut body, stop, false)?;
-    let payload = body.split_off(1);
-    Ok(Some((body[0], payload)))
+    body.clear();
+    // one oversized frame must not pin its capacity for the rest of the
+    // connection
+    body.shrink_to(READ_CHUNK);
+    while body.len() < len {
+        let step = (len - body.len()).min(READ_CHUNK);
+        let start = body.len();
+        body.resize(start + step, 0);
+        read_full(r, &mut body[start..], stop, false)?;
+    }
+    Ok(true)
 }
 
 fn handle_conn<B: StorageBackend<DvvMech>>(
-    stream: TcpStream,
+    mut stream: TcpStream,
     cluster: &LocalCluster<B>,
     stop: &AtomicBool,
 ) -> Result<()> {
@@ -253,8 +298,10 @@ fn handle_conn<B: StorageBackend<DvvMech>>(
     // (some platforms propagate O_NONBLOCK to accepted sockets)
     stream.set_nonblocking(false)?;
     stream.set_nodelay(true).ok();
-    // bounded reads so workers notice server shutdown
+    // bounded reads so workers notice server shutdown; bounded writes so
+    // a stalled peer cannot wedge the join-on-shutdown teardown
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(1)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
 
     // transport negotiation: sniff byte by byte, bailing to the text
@@ -267,72 +314,79 @@ fn handle_conn<B: StorageBackend<DvvMech>>(
             None => return Ok(()), // hung up before the first request
         }
     }
-    if probe == protocol::MAGIC {
-        serve_binary(reader, stream, cluster, stop)
+    let served = if probe == protocol::MAGIC {
+        serve_binary(&mut reader, &mut stream, cluster, stop)
     } else {
-        serve_text(reader, stream, cluster, stop, probe)
+        serve_text(&mut reader, &mut stream, cluster, stop, probe)
+    };
+    // bounded drain of unread input before the socket drops: closing
+    // with bytes still queued (a line past the cap, frames pipelined
+    // after QUIT) would RST, and Linux purges the peer's receive queue
+    // on RST — discarding the final BYE/ERR reply before it is read
+    if served.is_ok() {
+        drain_unread(&mut reader, stop);
+    }
+    served
+}
+
+/// Read and discard input until the peer's EOF, a short deadline, or
+/// shutdown — see the call site in [`handle_conn`] for why.
+fn drain_unread(r: &mut impl Read, stop: &AtomicBool) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(250);
+    let mut chunk = [0u8; 4096];
+    while std::time::Instant::now() < deadline && !stop.load(Ordering::Relaxed) {
+        match r.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => break,
+        }
     }
 }
 
 /// The legacy line-based text protocol. `acc` seeds the input buffer
 /// with whatever the negotiation sniff already consumed.
 fn serve_text<B: StorageBackend<DvvMech>>(
-    mut reader: BufReader<TcpStream>,
-    mut stream: TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    stream: &mut TcpStream,
     cluster: &LocalCluster<B>,
     stop: &AtomicBool,
     mut acc: Vec<u8>,
 ) -> Result<()> {
     let mut chunk = [0u8; 4096];
     loop {
-        // drain every complete line already buffered
-        while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
-            let line_bytes: Vec<u8> = acc.drain(..=pos).collect();
-            let line = String::from_utf8_lossy(&line_bytes);
+        // drain every complete line already buffered, parsing each in
+        // place from a split borrow of `acc` (no per-line Vec); the
+        // consumed prefix is drained once per batch below
+        let mut consumed = 0;
+        while let Some(nl) = acc[consumed..].iter().position(|&b| b == b'\n') {
+            let end = consumed + nl;
+            let line = String::from_utf8_lossy(&acc[consumed..end]);
             if line.trim().is_empty() {
+                consumed = end + 1;
                 continue;
             }
-            let reply = match parse_request(&line) {
-                Ok(Request::Get { key }) => match cluster.get(&key) {
-                    Ok(ans) => format_values(&ans.values, &ans.context),
-                    Err(e) => format!("ERR {e}\n"),
-                },
-                Ok(Request::Put { key, value, context }) => {
-                    match cluster.put(&key, value, &context) {
-                        Ok(()) => "OK\n".to_string(),
-                        Err(e) => format!("ERR {e}\n"),
-                    }
-                }
-                Ok(Request::Stats) => format!(
-                    "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={} wal_bytes={} merkle_root={}\n",
-                    cluster.node_count(),
-                    cluster.shard_count(),
-                    cluster.metadata_bytes(),
-                    cluster.pending_hints(),
-                    cluster.epoch(),
-                    cluster.wal_bytes(),
-                    cluster.merkle_root()
-                ),
-                Ok(Request::Fault(cmd)) => apply_fault(cluster, cmd),
-                Ok(Request::Heal { node }) => apply_heal(cluster, node),
-                Ok(Request::Restart { node }) => apply_restart(cluster, node),
-                Ok(Request::Wipe { node }) => apply_wipe(cluster, node),
-                Ok(Request::Join) => {
-                    let (id, epoch) = cluster.join_node();
-                    format!("OK id={id} epoch={epoch}\n")
-                }
-                Ok(Request::Decommission { node }) => match cluster.decommission_node(node) {
-                    Ok(epoch) => format!("OK epoch={epoch}\n"),
-                    Err(e) => format!("ERR {e}\n"),
-                },
-                Ok(Request::Topology) => topology_line(cluster),
-                Ok(Request::Quit) => {
+            let reply = ops::exec_text_line(cluster, &line);
+            consumed = end + 1;
+            match reply {
+                TextReply::Line(text) => stream.write_all(text.as_bytes())?,
+                TextReply::Bye => {
                     stream.write_all(b"BYE\n")?;
                     return Ok(());
                 }
-                Err(e) => format!("ERR {e}\n"),
-            };
-            stream.write_all(reply.as_bytes())?;
+            }
+        }
+        if consumed > 0 {
+            acc.drain(..consumed);
+        }
+        // what remains is one partial line; past the cap it can never
+        // complete legally — answer and close instead of buffering a
+        // newline-less client without bound
+        if acc.len() > protocol::MAX_TEXT_LINE {
+            stream.write_all(b"ERR line too long\n")?;
+            return Ok(());
         }
         // need more input
         match reader.read(&mut chunk) {
@@ -352,47 +406,21 @@ fn serve_text<B: StorageBackend<DvvMech>>(
     }
 }
 
-/// Decode a binary PUT and run it through the traced quorum path: the
-/// frame's actor + ctx token make the write oracle-auditable end to end.
-fn put_binary<B: StorageBackend<DvvMech>>(
-    cluster: &LocalCluster<B>,
-    key: &str,
-    value: Vec<u8>,
-    actor: u32,
-    ctx_token: &[u8],
-) -> Result<(u64, Option<Vec<u8>>)> {
-    let (vv, observed) = if ctx_token.is_empty() {
-        (Vec::new(), Vec::new())
-    } else {
-        CausalCtx::decode(ctx_token)?.into_parts()
-    };
-    cluster.put_api(key, value, &vv, Actor(actor), &observed)
-}
-
-/// Map a text-protocol admin status line (`OK\n` / `ERR …\n`) onto a
-/// binary reply frame.
-fn admin_status(status: String) -> (u8, Vec<u8>) {
-    match status.strip_prefix("ERR ") {
-        Some(msg) => (protocol::OP_ERR, msg.trim_end().as_bytes().to_vec()),
-        None => (protocol::OP_OK, Vec::new()),
-    }
-}
-
 /// The binary protocol v2 loop (the magic preamble is already consumed).
 fn serve_binary<B: StorageBackend<DvvMech>>(
-    mut reader: BufReader<TcpStream>,
-    mut stream: TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    stream: &mut TcpStream,
     cluster: &LocalCluster<B>,
     stop: &AtomicBool,
 ) -> Result<()> {
     // hello tail: requested version + newline terminator
-    let Some(version) = read_byte(&mut reader, stop)? else { return Ok(()) };
-    let Some(terminator) = read_byte(&mut reader, stop)? else { return Ok(()) };
+    let Some(version) = read_byte(reader, stop)? else { return Ok(()) };
+    let Some(terminator) = read_byte(reader, stop)? else { return Ok(()) };
     if terminator != b'\n' {
         // enforce the documented preamble: silently eating a stray byte
         // here would desynchronize every following frame
         let _ = protocol::write_frame(
-            &mut stream,
+            stream,
             protocol::OP_ERR,
             b"malformed hello: missing newline after version byte",
         );
@@ -404,132 +432,29 @@ fn serve_binary<B: StorageBackend<DvvMech>>(
             "unsupported protocol version {version} (server speaks {})",
             protocol::VERSION
         );
-        let _ = protocol::write_frame(&mut stream, protocol::OP_ERR, msg.as_bytes());
+        let _ = protocol::write_frame(stream, protocol::OP_ERR, msg.as_bytes());
         return Ok(());
     }
-    protocol::write_frame(&mut stream, protocol::OP_HELLO_ACK, &[protocol::VERSION])?;
+    protocol::write_frame(stream, protocol::OP_HELLO_ACK, &[protocol::VERSION])?;
+    let mut body = Vec::new();
     loop {
-        let (opcode, payload) = match read_frame_server(&mut reader, stop) {
-            Ok(Some(frame)) => frame,
-            Ok(None) => return Ok(()), // clean disconnect / shutdown
+        match read_frame_server(reader, stop, &mut body) {
+            Ok(true) => {}
+            Ok(false) => return Ok(()), // clean disconnect / shutdown
             Err(e) => {
                 // broken framing (zero/oversized length, truncation): the
                 // byte stream can no longer be trusted — one final ERR
                 // frame, then drop the connection
                 let _ =
-                    protocol::write_frame(&mut stream, protocol::OP_ERR, e.to_string().as_bytes());
+                    protocol::write_frame(stream, protocol::OP_ERR, e.to_string().as_bytes());
                 return Ok(());
             }
-        };
-        let (op, body): (u8, Vec<u8>) = match protocol::decode_bin_request(opcode, &payload) {
-            Ok(BinRequest::Get { key }) => match cluster.get(&key) {
-                Ok(ans) => {
-                    let token = CausalCtx::new(ans.context, ans.ids).encode();
-                    let payload = protocol::encode_values(&ans.values, &token);
-                    // a sibling set too large for one frame must degrade
-                    // to an ERR reply, not abort the connection when
-                    // write_frame refuses it
-                    if payload.len() >= protocol::MAX_FRAME_LEN as usize {
-                        (
-                            protocol::OP_ERR,
-                            format!(
-                                "reply of {} bytes exceeds the {}-byte frame cap",
-                                payload.len(),
-                                protocol::MAX_FRAME_LEN
-                            )
-                            .into_bytes(),
-                        )
-                    } else {
-                        (protocol::OP_VALUES, payload)
-                    }
-                }
-                Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
-            },
-            Ok(BinRequest::Put { key, value, actor, ctx_token }) => {
-                match put_binary(cluster, &key, value, actor, &ctx_token) {
-                    Ok((id, post)) => {
-                        // empty token = no chainable context (a
-                        // concurrent sibling survived; GET to merge)
-                        let token = post
-                            .map(|post| CausalCtx::new(post, vec![id]).encode())
-                            .unwrap_or_default();
-                        (protocol::OP_PUT_OK, protocol::encode_put_ok(id, &token))
-                    }
-                    Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
-                }
-            }
-            Ok(BinRequest::Stats) => (
-                protocol::OP_STATS_REPLY,
-                protocol::encode_stats_reply(
-                    cluster.node_count() as u64,
-                    cluster.shard_count() as u64,
-                    cluster.metadata_bytes(),
-                    cluster.pending_hints() as u64,
-                    cluster.epoch(),
-                    cluster.wal_bytes(),
-                    cluster.merkle_root(),
-                ),
-            ),
-            Ok(BinRequest::Join) => {
-                // the reply's epoch and slots come from *this* join's
-                // return value, so `slots - 1` is the id assigned to
-                // this request even when joins race (a fresh snapshot
-                // could report another join's slots); the member list
-                // is an advisory snapshot
-                let (id, epoch) = cluster.join_node();
-                let members: Vec<u64> =
-                    cluster.members().iter().map(|&m| m as u64).collect();
-                (
-                    protocol::OP_TOPOLOGY_REPLY,
-                    protocol::encode_topology_reply(epoch, id as u64 + 1, &members),
-                )
-            }
-            Ok(BinRequest::Decommission { node }) => match cluster.decommission_node(node) {
-                Ok(_) => (protocol::OP_TOPOLOGY_REPLY, topology_frame(cluster)),
-                Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
-            },
-            Ok(BinRequest::Topology) => {
-                (protocol::OP_TOPOLOGY_REPLY, topology_frame(cluster))
-            }
-            Ok(BinRequest::Admin { line }) => match parse_request(&line) {
-                Ok(Request::Fault(cmd)) => admin_status(apply_fault(cluster, cmd)),
-                Ok(Request::Heal { node }) => admin_status(apply_heal(cluster, node)),
-                // durability faults ride the ADMIN frame in text form —
-                // real storage loss at a live replica, over the wire
-                Ok(Request::Restart { node }) => admin_status(apply_restart(cluster, node)),
-                Ok(Request::Wipe { node }) => admin_status(apply_wipe(cluster, node)),
-                // text-form elastic ops work over ADMIN too; the
-                // dedicated opcodes return the richer topology frame
-                Ok(Request::Join) => {
-                    let _ = cluster.join_node();
-                    (protocol::OP_OK, Vec::new())
-                }
-                Ok(Request::Decommission { node }) => {
-                    match cluster.decommission_node(node) {
-                        Ok(_) => (protocol::OP_OK, Vec::new()),
-                        Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
-                    }
-                }
-                Ok(Request::Topology) => {
-                    (protocol::OP_TOPOLOGY_REPLY, topology_frame(cluster))
-                }
-                Ok(_) => (
-                    protocol::OP_ERR,
-                    b"ADMIN accepts FAULT/HEAL/JOIN/DECOMMISSION/TOPOLOGY/RESTART/WIPE \
-                      commands only"
-                        .to_vec(),
-                ),
-                Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
-            },
-            Ok(BinRequest::Quit) => {
-                let _ = protocol::write_frame(&mut stream, protocol::OP_BYE, &[]);
-                return Ok(());
-            }
-            // malformed payload inside an intact frame: report and keep
-            // the connection (framing is still trustworthy)
-            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
-        };
-        protocol::write_frame(&mut stream, op, &body)?;
+        }
+        let reply = ops::exec_bin_request(cluster, body[0], &body[1..]);
+        protocol::write_frame(stream, reply.opcode, &reply.payload)?;
+        if reply.close {
+            return Ok(());
+        }
     }
 }
 
@@ -555,52 +480,138 @@ mod tests {
         line.trim_end().to_string()
     }
 
+    /// Both serve loops, so every scenario runs against each.
+    const MODES: [ServeMode; 2] =
+        [ServeMode::Reactor { workers: 2 }, ServeMode::Threaded];
+
+    fn start_mode(
+        cluster: Arc<LocalCluster>,
+        mode: ServeMode,
+    ) -> Server {
+        Server::start_with("127.0.0.1:0", cluster, ServeOptions { mode }).unwrap()
+    }
+
     #[test]
     fn end_to_end_get_put_siblings() {
-        let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
-        let server = Server::start("127.0.0.1:0", cluster).unwrap();
-        let (mut r, mut w) = client(server.addr());
+        for mode in MODES {
+            let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+            let server = start_mode(cluster, mode);
+            let (mut r, mut w) = client(server.addr());
 
-        // blind write twice -> siblings
-        send(&mut w, &format!("PUT k {}", hex_encode(b"v1")));
-        assert_eq!(recv(&mut r), "OK");
-        send(&mut w, &format!("PUT k {}", hex_encode(b"v2")));
-        assert_eq!(recv(&mut r), "OK");
+            // blind write twice -> siblings
+            send(&mut w, &format!("PUT k {}", hex_encode(b"v1")));
+            assert_eq!(recv(&mut r), "OK");
+            send(&mut w, &format!("PUT k {}", hex_encode(b"v2")));
+            assert_eq!(recv(&mut r), "OK");
 
-        send(&mut w, "GET k");
-        let header = recv(&mut r);
-        assert!(header.starts_with("VALUES 2 "), "{header}");
-        let ctx = header.split_whitespace().nth(2).unwrap().to_string();
-        let v1 = recv(&mut r);
-        let v2 = recv(&mut r);
-        assert!(v1.starts_with("VALUE ") && v2.starts_with("VALUE "));
+            send(&mut w, "GET k");
+            let header = recv(&mut r);
+            assert!(header.starts_with("VALUES 2 "), "{header}");
+            let ctx = header.split_whitespace().nth(2).unwrap().to_string();
+            let v1 = recv(&mut r);
+            let v2 = recv(&mut r);
+            assert!(v1.starts_with("VALUE ") && v2.starts_with("VALUE "));
 
-        // contextful write supersedes both siblings
-        send(&mut w, &format!("PUT k {} {}", hex_encode(b"merged"), ctx));
-        assert_eq!(recv(&mut r), "OK");
-        send(&mut w, "GET k");
-        let header = recv(&mut r);
-        assert!(header.starts_with("VALUES 1 "), "{header}");
-        assert_eq!(recv(&mut r), format!("VALUE {}", hex_encode(b"merged")));
+            // contextful write supersedes both siblings
+            send(&mut w, &format!("PUT k {} {}", hex_encode(b"merged"), ctx));
+            assert_eq!(recv(&mut r), "OK");
+            send(&mut w, "GET k");
+            let header = recv(&mut r);
+            assert!(header.starts_with("VALUES 1 "), "{header}");
+            assert_eq!(recv(&mut r), format!("VALUE {}", hex_encode(b"merged")));
 
-        send(&mut w, "STATS");
-        assert!(recv(&mut r).starts_with("STATS nodes=3"));
-        send(&mut w, "QUIT");
-        assert_eq!(recv(&mut r), "BYE");
-        server.shutdown();
+            send(&mut w, "STATS");
+            assert!(recv(&mut r).starts_with("STATS nodes=3"));
+            send(&mut w, "QUIT");
+            assert_eq!(recv(&mut r), "BYE");
+            server.shutdown();
+        }
     }
 
     #[test]
     fn protocol_errors_are_reported_not_fatal() {
-        let cluster = Arc::new(LocalCluster::new(2, 2, 1, 1).unwrap());
-        let server = Server::start("127.0.0.1:0", cluster).unwrap();
-        let (mut r, mut w) = client(server.addr());
-        send(&mut w, "BOGUS");
-        assert!(recv(&mut r).starts_with("ERR "));
-        // connection still usable
-        send(&mut w, &format!("PUT a {}", hex_encode(b"x")));
-        assert_eq!(recv(&mut r), "OK");
-        server.shutdown();
+        for mode in MODES {
+            let cluster = Arc::new(LocalCluster::new(2, 2, 1, 1).unwrap());
+            let server = start_mode(cluster, mode);
+            let (mut r, mut w) = client(server.addr());
+            send(&mut w, "BOGUS");
+            assert!(recv(&mut r).starts_with("ERR "));
+            // connection still usable
+            send(&mut w, &format!("PUT a {}", hex_encode(b"x")));
+            assert_eq!(recv(&mut r), "OK");
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn overlong_text_line_is_rejected_and_closed() {
+        for mode in MODES {
+            let cluster = Arc::new(LocalCluster::new(2, 2, 1, 1).unwrap());
+            let server = start_mode(cluster, mode);
+            let (mut r, mut w) = client(server.addr());
+            // a newline-less flood past the cap: the old loop buffered
+            // this indefinitely
+            let blob = vec![b'x'; protocol::MAX_TEXT_LINE + 8192];
+            // the server closes mid-flood; a late write may see EPIPE
+            let _ = w.write_all(&blob);
+            let mut reply = String::new();
+            r.read_line(&mut reply).unwrap();
+            assert_eq!(reply.trim_end(), "ERR line too long");
+            // then EOF: the connection is closed, not left draining
+            let mut rest = Vec::new();
+            let _ = std::io::Read::read_to_end(&mut r, &mut rest);
+            assert!(rest.is_empty(), "connection must close after the cap reply");
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn shutdown_joins_every_connection_worker() {
+        for mode in MODES {
+            let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+            let server = start_mode(Arc::clone(&cluster), mode);
+            // several live connections mid-session
+            let mut sessions = Vec::new();
+            for i in 0..4 {
+                let (mut r, mut w) = client(server.addr());
+                send(&mut w, &format!("PUT k{i} {}", hex_encode(b"v")));
+                assert_eq!(recv(&mut r), "OK");
+                sessions.push((r, w));
+            }
+            server.shutdown();
+            // every serving thread has been joined: nothing but the
+            // caller still holds the cluster (a data dir could now be
+            // deleted with no worker mid-WAL-write)
+            assert_eq!(Arc::strong_count(&cluster), 1, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn hostile_frame_header_does_not_preallocate() {
+        // header claims MAX_FRAME_LEN bytes but the payload never
+        // arrives: the read must fail (EOF mid-frame) having grown the
+        // buffer by at most one chunk, not the full 16 MiB claim
+        let stop = AtomicBool::new(false);
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&protocol::MAX_FRAME_LEN.to_be_bytes());
+        wire.extend_from_slice(&[protocol::OP_GET; 32]); // a dribble of body
+        let mut r = std::io::Cursor::new(wire);
+        let mut body = Vec::new();
+        assert!(read_frame_server(&mut r, &stop, &mut body).is_err());
+        assert!(
+            body.capacity() <= 2 * READ_CHUNK,
+            "allocated {} for an unfulfilled 16 MiB claim",
+            body.capacity()
+        );
+
+        // an honest small frame still round-trips through the same path
+        let mut wire = Vec::new();
+        protocol::write_frame(&mut wire, protocol::OP_GET, b"key").unwrap();
+        let mut r = std::io::Cursor::new(wire);
+        let mut body = Vec::new();
+        assert!(read_frame_server(&mut r, &stop, &mut body).unwrap());
+        assert_eq!(body[0], protocol::OP_GET);
+        assert_eq!(&body[1..], b"key");
     }
 
     #[test]
@@ -704,28 +715,30 @@ mod tests {
 
     #[test]
     fn concurrent_clients() {
-        let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
-        let server = Server::start("127.0.0.1:0", cluster).unwrap();
-        let addr = server.addr();
-        let mut handles = Vec::new();
-        for t in 0..4 {
-            handles.push(std::thread::spawn(move || {
-                let (mut r, mut w) = client(addr);
-                for i in 0..20 {
-                    send(&mut w, &format!("PUT t{t}k{i} {}", hex_encode(b"data")));
-                    assert_eq!(recv(&mut r), "OK");
-                }
-                for i in 0..20 {
-                    send(&mut w, &format!("GET t{t}k{i}"));
-                    let header = recv(&mut r);
-                    assert!(header.starts_with("VALUES 1 "), "{header}");
-                    let _ = recv(&mut r);
-                }
-            }));
+        for mode in MODES {
+            let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+            let server = start_mode(cluster, mode);
+            let addr = server.addr();
+            let mut handles = Vec::new();
+            for t in 0..4 {
+                handles.push(std::thread::spawn(move || {
+                    let (mut r, mut w) = client(addr);
+                    for i in 0..20 {
+                        send(&mut w, &format!("PUT t{t}k{i} {}", hex_encode(b"data")));
+                        assert_eq!(recv(&mut r), "OK");
+                    }
+                    for i in 0..20 {
+                        send(&mut w, &format!("GET t{t}k{i}"));
+                        let header = recv(&mut r);
+                        assert!(header.starts_with("VALUES 1 "), "{header}");
+                        let _ = recv(&mut r);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            server.shutdown();
         }
-        for h in handles {
-            h.join().unwrap();
-        }
-        server.shutdown();
     }
 }

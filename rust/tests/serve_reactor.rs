@@ -1,0 +1,291 @@
+//! Reactor serve-loop contracts: pipelining (N in-flight binary frames
+//! on one connection, N replies in request order), backpressure past
+//! the in-flight window, framing errors and QUIT in pipeline position,
+//! hostile frame headers across many connections, deterministic
+//! shutdown, and reactor/threaded equivalence on the same wire bytes.
+
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use dvvstore::api::{KvClient, TcpClient};
+use dvvstore::clocks::Actor;
+use dvvstore::server::protocol::{self, BinRequest};
+use dvvstore::server::tcp::{ServeMode, ServeOptions, Server};
+use dvvstore::server::LocalCluster;
+
+const MODES: [ServeMode; 2] = [ServeMode::Reactor { workers: 2 }, ServeMode::Threaded];
+
+fn start(mode: ServeMode) -> (Server, Arc<LocalCluster>) {
+    let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+    let server =
+        Server::start_with("127.0.0.1:0", Arc::clone(&cluster), ServeOptions { mode }).unwrap();
+    (server, cluster)
+}
+
+/// Raw protocol-v2 socket: negotiate hello, return (reader, writer).
+fn raw_v2(server: &Server) -> (BufReader<TcpStream>, TcpStream) {
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_nodelay(true).ok();
+    stream.write_all(&protocol::MAGIC).unwrap();
+    stream.write_all(&[protocol::VERSION, b'\n']).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let (opcode, payload) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_HELLO_ACK);
+    assert_eq!(payload, [protocol::VERSION]);
+    (reader, stream)
+}
+
+// -------------------------------------------------------------------
+// the pipelining contract
+// -------------------------------------------------------------------
+
+#[test]
+fn pipelined_requests_reply_in_request_order() {
+    let (server, _cluster) = start(ServeMode::Reactor { workers: 2 });
+    let mut client = TcpClient::connect(server.addr(), Actor::client(1)).unwrap();
+
+    // N PUTs to N distinct keys in one batch write, then N pipelined
+    // GETs: reply i must carry exactly the value written by request i.
+    const N: usize = 48;
+    let puts: Vec<BinRequest> = (0..N)
+        .map(|i| BinRequest::Put {
+            key: format!("pipe-{i}"),
+            value: format!("value-{i}").into_bytes(),
+            actor: 1,
+            ctx_token: Vec::new(),
+        })
+        .collect();
+    for (i, reply) in client.pipeline(&puts).unwrap().into_iter().enumerate() {
+        assert_eq!(reply.0, protocol::OP_PUT_OK, "PUT {i} failed: {:?}", reply);
+    }
+
+    let keys: Vec<String> = (0..N).map(|i| format!("pipe-{i}")).collect();
+    let key_refs: Vec<&str> = keys.iter().map(String::as_str).collect();
+    let replies = client.pipeline_get(&key_refs).unwrap();
+    assert_eq!(replies.len(), N);
+    for (i, reply) in replies.iter().enumerate() {
+        assert_eq!(
+            reply.values,
+            vec![format!("value-{i}").into_bytes()],
+            "GET reply {i} out of order"
+        );
+    }
+    client.quit().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn deep_pipeline_survives_backpressure_window() {
+    // 500 requests on one connection — far past the reactor's 64-deep
+    // in-flight window, so parsing must stall and resume off the
+    // completion path (no POLLIN ever re-announces bytes already read)
+    let (server, _cluster) = start(ServeMode::Reactor { workers: 3 });
+    let mut client = TcpClient::connect(server.addr(), Actor::client(7)).unwrap();
+    client.put("deep", b"v".to_vec(), None).unwrap();
+
+    const N: usize = 500;
+    let reqs: Vec<BinRequest> =
+        (0..N).map(|_| BinRequest::Get { key: "deep".to_string() }).collect();
+    let replies = client.pipeline(&reqs).unwrap();
+    assert_eq!(replies.len(), N);
+    for (i, (opcode, payload)) in replies.into_iter().enumerate() {
+        assert_eq!(opcode, protocol::OP_VALUES, "reply {i}");
+        let (values, _) = protocol::decode_values(&payload).unwrap();
+        assert_eq!(values, vec![b"v".to_vec()], "reply {i} wrong value");
+    }
+    client.quit().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn text_lines_pipeline_through_one_write() {
+    for mode in MODES {
+        let (server, _cluster) = start(mode);
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        // every command in a single segment; replies must come back in
+        // line order on both serve loops
+        stream.write_all(b"PUT a 61\nPUT b 62\nGET a\nGET b\nQUIT\n").unwrap();
+        let mut all = String::new();
+        BufReader::new(stream).read_to_string(&mut all).unwrap();
+        // PUT → "OK"; GET → "VALUES <n> <ctx>" + one "VALUE <hex>" line
+        let lines: Vec<&str> = all.lines().collect();
+        assert_eq!(lines.len(), 7, "mode {mode:?}: {all:?}");
+        assert_eq!(lines[0], "OK", "mode {mode:?}: {all:?}");
+        assert_eq!(lines[1], "OK", "mode {mode:?}: {all:?}");
+        assert!(lines[2].starts_with("VALUES 1 "), "mode {mode:?}: {all:?}");
+        assert_eq!(lines[3], "VALUE 61", "mode {mode:?}: {all:?}");
+        assert!(lines[4].starts_with("VALUES 1 "), "mode {mode:?}: {all:?}");
+        assert_eq!(lines[5], "VALUE 62", "mode {mode:?}: {all:?}");
+        assert_eq!(lines[6], "BYE", "mode {mode:?}: {all:?}");
+        server.shutdown();
+    }
+}
+
+// -------------------------------------------------------------------
+// errors and close in pipeline position
+// -------------------------------------------------------------------
+
+#[test]
+fn framing_error_mid_pipeline_answers_in_position_then_closes() {
+    let (server, _cluster) = start(ServeMode::Reactor { workers: 2 });
+    let (mut reader, mut stream) = raw_v2(&server);
+
+    // frame 1: honest GET; frame 2: zero-length header (framing-level
+    // poison — the stream cannot be resynchronized past it)
+    let (opcode, payload) =
+        protocol::encode_bin_request(&BinRequest::Get { key: "k".to_string() });
+    let mut batch = Vec::new();
+    protocol::write_frame(&mut batch, opcode, &payload).unwrap();
+    batch.extend_from_slice(&[0, 0, 0, 0]);
+    stream.write_all(&batch).unwrap();
+
+    let first = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(first.0, protocol::OP_VALUES, "honest frame answered first");
+    let second = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(second.0, protocol::OP_ERR, "framing error answered in position");
+    // ... and nothing after: server closed the connection
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no bytes after the framing ERR: {rest:?}");
+    server.shutdown();
+}
+
+#[test]
+fn malformed_payload_mid_pipeline_errs_but_connection_survives() {
+    let (server, _cluster) = start(ServeMode::Reactor { workers: 2 });
+    let (mut reader, mut stream) = raw_v2(&server);
+
+    // GET with a truncated payload (length byte promises more key than
+    // follows) between two honest GETs — all three answered, in order,
+    // connection intact
+    let (op_get, honest) = protocol::encode_bin_request(&BinRequest::Get { key: "k".to_string() });
+    let mut batch = Vec::new();
+    protocol::write_frame(&mut batch, op_get, &honest).unwrap();
+    protocol::write_frame(&mut batch, op_get, &[9, b'x']).unwrap();
+    protocol::write_frame(&mut batch, op_get, &honest).unwrap();
+    stream.write_all(&batch).unwrap();
+
+    assert_eq!(protocol::read_frame(&mut reader).unwrap().0, protocol::OP_VALUES);
+    assert_eq!(protocol::read_frame(&mut reader).unwrap().0, protocol::OP_ERR);
+    assert_eq!(protocol::read_frame(&mut reader).unwrap().0, protocol::OP_VALUES);
+    // still serviceable
+    let (op_stats, stats) = protocol::encode_bin_request(&BinRequest::Stats);
+    protocol::write_frame(&mut stream, op_stats, &stats).unwrap();
+    assert_eq!(protocol::read_frame(&mut reader).unwrap().0, protocol::OP_STATS_REPLY);
+    server.shutdown();
+}
+
+#[test]
+fn quit_mid_pipeline_replies_then_bye_then_eof() {
+    let (server, _cluster) = start(ServeMode::Reactor { workers: 2 });
+    let (mut reader, mut stream) = raw_v2(&server);
+
+    // GET, QUIT, GET in one write: the GET before the QUIT is answered,
+    // the QUIT gets its BYE, the GET after it gets nothing
+    let (op_get, get) = protocol::encode_bin_request(&BinRequest::Get { key: "k".to_string() });
+    let (op_quit, quit) = protocol::encode_bin_request(&BinRequest::Quit);
+    let mut batch = Vec::new();
+    protocol::write_frame(&mut batch, op_get, &get).unwrap();
+    protocol::write_frame(&mut batch, op_quit, &quit).unwrap();
+    protocol::write_frame(&mut batch, op_get, &get).unwrap();
+    stream.write_all(&batch).unwrap();
+
+    assert_eq!(protocol::read_frame(&mut reader).unwrap().0, protocol::OP_VALUES);
+    assert_eq!(protocol::read_frame(&mut reader).unwrap().0, protocol::OP_BYE);
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no replies past the BYE: {rest:?}");
+    server.shutdown();
+}
+
+// -------------------------------------------------------------------
+// hostile input across many connections
+// -------------------------------------------------------------------
+
+#[test]
+fn hostile_frame_headers_across_many_connections_leave_server_healthy() {
+    // each connection claims a max-size frame and never sends the
+    // payload; the serve loop must not pre-allocate the claimed 16 MiB
+    // (64 connections × 16 MiB would be a GiB of attacker-priced
+    // memory), and honest clients must keep working throughout
+    for mode in MODES {
+        let (server, _cluster) = start(mode);
+        let mut hostiles = Vec::new();
+        for _ in 0..64 {
+            let mut stream = TcpStream::connect(server.addr()).unwrap();
+            stream.write_all(&protocol::MAGIC).unwrap();
+            stream.write_all(&[protocol::VERSION, b'\n']).unwrap();
+            stream.write_all(&protocol::MAX_FRAME_LEN.to_be_bytes()).unwrap();
+            hostiles.push(stream); // held open, payload never sent
+        }
+        let mut client = TcpClient::connect(server.addr(), Actor::client(3)).unwrap();
+        client.put("healthy", b"yes".to_vec(), None).unwrap();
+        assert_eq!(
+            client.get("healthy").unwrap().values,
+            vec![b"yes".to_vec()],
+            "mode {mode:?}"
+        );
+        client.quit().unwrap();
+        drop(hostiles);
+        server.shutdown();
+    }
+}
+
+// -------------------------------------------------------------------
+// deterministic shutdown
+// -------------------------------------------------------------------
+
+#[test]
+fn shutdown_joins_every_thread_holding_the_cluster() {
+    // the bug this guards: detached per-connection workers holding the
+    // cluster Arc could outlive shutdown() and still be mid-WAL-write
+    // when the caller deletes the data dir
+    for mode in MODES {
+        let (server, cluster) = start(mode);
+        let mut clients: Vec<TcpClient> = (0..4)
+            .map(|i| TcpClient::connect(server.addr(), Actor::client(i)).unwrap())
+            .collect();
+        for (i, c) in clients.iter_mut().enumerate() {
+            c.put(&format!("sd-{i}"), vec![i as u8], None).unwrap();
+        }
+        drop(clients); // sessions die abruptly, no QUIT
+        server.shutdown();
+        assert_eq!(
+            Arc::strong_count(&cluster),
+            1,
+            "mode {mode:?}: a serve-loop thread outlived shutdown()"
+        );
+    }
+}
+
+// -------------------------------------------------------------------
+// reactor and threaded modes speak the same protocol
+// -------------------------------------------------------------------
+
+#[test]
+fn both_modes_give_identical_answers_to_the_same_session() {
+    let run = |mode: ServeMode| {
+        let (server, _cluster) = start(mode);
+        let mut client = TcpClient::connect(server.addr(), Actor::client(11)).unwrap();
+        let mut transcript = Vec::new();
+        let put = client.put("eq-key", b"one".to_vec(), None).unwrap();
+        transcript.push(format!("put id={}", put.id));
+        let ctx = client.get("eq-key").unwrap();
+        transcript.push(format!("get {:?}", ctx.values));
+        // contextual overwrite, then a sibling-free read
+        let put2 = client.put("eq-key", b"two".to_vec(), Some(&ctx.ctx)).unwrap();
+        transcript.push(format!("put2 id={}", put2.id));
+        transcript.push(format!("get2 {:?}", client.get("eq-key").unwrap().values));
+        let stats = client.stats().unwrap();
+        transcript.push(format!("nodes={} epoch={}", stats.0, stats.4));
+        client.quit().unwrap();
+        server.shutdown();
+        transcript
+    };
+    assert_eq!(
+        run(ServeMode::Reactor { workers: 2 }),
+        run(ServeMode::Threaded),
+        "the two serve loops disagreed on an identical session"
+    );
+}
