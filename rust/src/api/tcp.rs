@@ -6,7 +6,7 @@
 //! token, so a server-side oracle audits live-TCP traffic exactly like
 //! in-process traffic.
 
-use std::io::{BufReader, Write};
+use std::io::{BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 
 use super::{CausalCtx, GetReply, KvClient, PutReply};
@@ -48,6 +48,27 @@ fn remote_err((opcode, payload): (u8, Vec<u8>)) -> Error {
     }
 }
 
+/// Parse complete `[u32 BE len][opcode][payload]` frames off the front
+/// of `acc` into `replies`, stopping at `want` replies or the first
+/// incomplete frame (whose bytes stay in `acc` for the next read).
+fn take_frames(acc: &mut Vec<u8>, replies: &mut Vec<(u8, Vec<u8>)>, want: usize) -> Result<()> {
+    let mut consumed = 0;
+    while replies.len() < want {
+        let rest = &acc[consumed..];
+        if rest.len() < 4 {
+            break;
+        }
+        let len = protocol::frame_len([rest[0], rest[1], rest[2], rest[3]])?;
+        if rest.len() < 4 + len {
+            break;
+        }
+        replies.push((rest[4], rest[5..4 + len].to_vec()));
+        consumed += 4 + len;
+    }
+    acc.drain(..consumed);
+    Ok(())
+}
+
 impl TcpClient {
     /// Connect and negotiate protocol v2: send the magic preamble, then
     /// require the server's `HELLO_ACK`. Fails cleanly (with the
@@ -73,10 +94,19 @@ impl TcpClient {
         protocol::read_frame(&mut self.reader)
     }
 
-    /// Pipeline: write every request frame back-to-back, then read the
-    /// replies. The reactor serve loop executes pipelined frames
-    /// concurrently on its worker pool but delivers replies in request
-    /// order — `replies[i]` always answers `reqs[i]`.
+    /// Pipeline: push every request frame back-to-back on one
+    /// connection, draining replies as they become available. The serve
+    /// loop executes a connection's frames in request order and replies
+    /// in request order — `replies[i]` always answers `reqs[i]`.
+    ///
+    /// Writes and reads are interleaved while the batch is in flight:
+    /// the server bounds each connection's in-flight window and write
+    /// backlog by *refusing to read*, so a client that wrote the whole
+    /// batch before reading anything would deadlock against it the
+    /// moment the batch's request bytes and reply bytes together
+    /// overflow the socket buffers (server blocked writing replies,
+    /// client blocked writing requests). Draining mid-write keeps
+    /// batches of any size safe.
     ///
     /// Replies are raw `(opcode, payload)` frames; callers decode (and
     /// decide per-slot whether an `OP_ERR` is fatal). Don't pipeline a
@@ -88,12 +118,83 @@ impl TcpClient {
             let (opcode, payload) = protocol::encode_bin_request(req);
             protocol::write_frame(&mut batch, opcode, &payload)?;
         }
-        self.stream.write_all(&batch)?;
+        // Replies are read raw off the stream, bypassing `self.reader`:
+        // between operations the connection is reply-quiescent, so the
+        // BufReader holds no buffered bytes (read-ahead could only ever
+        // buffer replies to requests already sent, and every prior
+        // operation consumed its replies in full).
         let mut replies = Vec::with_capacity(reqs.len());
-        for _ in reqs {
-            replies.push(protocol::read_frame(&mut self.reader)?);
+        let mut acc: Vec<u8> = Vec::new();
+        self.stream.set_nonblocking(true)?;
+        let wrote = self.write_draining(&batch, &mut acc, &mut replies, reqs.len());
+        let restored = self.stream.set_nonblocking(false);
+        wrote?;
+        restored?;
+        // batch fully written: blocking reads for the remaining replies
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            take_frames(&mut acc, &mut replies, reqs.len())?;
+            if replies.len() == reqs.len() {
+                break;
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(Error::Protocol("connection closed mid-pipeline".into()));
+                }
+                Ok(n) => acc.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        if !acc.is_empty() {
+            return Err(Error::Protocol("excess reply bytes after pipelined batch".into()));
         }
         Ok(replies)
+    }
+
+    /// The nonblocking half of [`TcpClient::pipeline`]: push `batch`,
+    /// and whenever the kernel send buffer fills, drain whatever
+    /// replies have arrived (that is what lets the server's write side
+    /// progress, which is what lets it read from us again).
+    fn write_draining(
+        &mut self,
+        batch: &[u8],
+        acc: &mut Vec<u8>,
+        replies: &mut Vec<(u8, Vec<u8>)>,
+        want: usize,
+    ) -> Result<()> {
+        let mut chunk = [0u8; 64 * 1024];
+        let mut sent = 0;
+        while sent < batch.len() {
+            match self.stream.write(&batch[sent..]) {
+                Ok(0) => {
+                    return Err(Error::Protocol("connection closed mid-pipeline".into()));
+                }
+                Ok(n) => sent += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    match self.stream.read(&mut chunk) {
+                        Ok(0) => {
+                            return Err(Error::Protocol("connection closed mid-pipeline".into()));
+                        }
+                        Ok(n) => {
+                            acc.extend_from_slice(&chunk[..n]);
+                            take_frames(acc, replies, want)?;
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            // neither direction ready: the server is
+                            // still executing — yield instead of
+                            // spinning (std has no portable poll here)
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(e) => return Err(e.into()),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
     }
 
     /// Pipelined multi-GET: all keys in flight on this one connection,

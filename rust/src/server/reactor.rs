@@ -7,6 +7,10 @@
 //! of a connection — read, decode, execute, write — are decoupled, so
 //! one binary-v2 connection can have many frames in flight at once
 //! while the replies still leave the socket in request order.
+//! Execution is *serialized per connection* — at most one of a
+//! connection's jobs is at the pool at a time, so a pipelined read
+//! always observes the writes pipelined before it; parallelism comes
+//! from many connections, not from reordering one connection's work.
 //!
 //! # Connection state machine
 //!
@@ -16,20 +20,24 @@
 //!                 (rbuf)               │ any other byte              │ frame
 //!                                      ▼                            ▼
 //!                                   [Text] ──── line ──▶ dispatch(seq n)
-//!                                                              │
-//!                     worker pool: decode + execute + encode   │
-//!                                                              ▼
+//!                                                              │ pending
+//!          worker pool (admits one job per conn at a time):    │
+//!                             decode + execute + encode        ▼
 //!   socket ◀────── try_write ◀── wbuf ◀── flush_done ◀── done[seq] (reorder)
 //! ```
 //!
 //! Every parsed request gets the connection's next sequence number and
-//! is pushed to the shared job queue; workers complete out of order
-//! into the `done` reorder buffer, and `flush_done` appends completions
-//! to the write buffer only in contiguous sequence order — that is the
-//! pipelining contract (N requests in flight, N replies in order).
-//! Hello negotiation and framing-level errors complete locally on the
-//! reactor (they answer before any job could) through the same
-//! sequence numbers, so local and worker replies interleave correctly.
+//! queues in the connection's `pending` list; [`Conn::pump`] admits
+//! one job at a time to the shared worker queue, releasing the next
+//! only when the previous completion returns — per-connection effect
+//! order (read-your-writes) is preserved while different connections
+//! execute in parallel across the pool. Completions land in the `done`
+//! reorder buffer, and `flush_done` appends them to the write buffer
+//! only in contiguous sequence order — that is the pipelining contract
+//! (N requests in flight, N replies in order). Hello negotiation and
+//! framing-level errors complete locally on the reactor (they answer
+//! before any job could) through the same sequence numbers, so local
+//! and worker replies interleave correctly.
 //!
 //! # Backpressure
 //!
@@ -146,7 +154,17 @@ impl Waker {
     fn new() -> Result<Waker> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let tx = TcpStream::connect(listener.local_addr()?)?;
-        let (rx, _) = listener.accept()?;
+        let ours = tx.local_addr()?;
+        // the one-shot ephemeral listener is connectable by any local
+        // process that races us; accept until the peer is our own
+        // connect half, or a stranger would swallow the wakeup channel
+        // (stalled completions, wedged shutdown)
+        let rx = loop {
+            let (rx, peer) = listener.accept()?;
+            if peer == ours {
+                break rx;
+            }
+        };
         rx.set_nonblocking(true)?;
         tx.set_nonblocking(true)?;
         tx.set_nodelay(true).ok();
@@ -312,6 +330,11 @@ struct Conn {
     next_flush: u64,
     /// Out-of-order completions waiting for their turn.
     done: BTreeMap<u64, Reply>,
+    /// Parsed requests not yet admitted to the worker pool: execution
+    /// is serialized per connection (see [`Conn::pump`]).
+    pending: VecDeque<Job>,
+    /// One of this connection's jobs is at the workers right now.
+    in_worker: bool,
     /// Parse/dispatch no further requests (server close or shutdown
     /// drain); input is read and discarded from here on.
     stop_requests: bool,
@@ -338,6 +361,8 @@ impl Conn {
             next_seq: 0,
             next_flush: 0,
             done: BTreeMap::new(),
+            pending: VecDeque::new(),
+            in_worker: false,
             stop_requests: false,
             peer_eof: false,
             closing: false,
@@ -346,8 +371,8 @@ impl Conn {
         }
     }
 
-    /// Parsed-but-unflushed requests (in flight at workers, or
-    /// completed and waiting in the reorder buffer).
+    /// Parsed-but-unflushed requests (queued for admission, in flight
+    /// at a worker, or completed and waiting in the reorder buffer).
     fn outstanding(&self) -> usize {
         (self.next_seq - self.next_flush) as usize
     }
@@ -500,6 +525,14 @@ impl Conn {
                         }
                         return;
                     };
+                    if nl > protocol::MAX_TEXT_LINE {
+                        // a *complete* line obeys the same cap: with a
+                        // 64 KiB read chunk the newline can land in the
+                        // very chunk that crossed the cap, and that
+                        // must not smuggle an oversized line through
+                        self.finish_local(b"ERR line too long\n".to_vec());
+                        return;
+                    }
                     let line = String::from_utf8_lossy(&self.rbuf[..nl]).into_owned();
                     self.rbuf.drain(..=nl);
                     if line.trim().is_empty() {
@@ -511,12 +544,29 @@ impl Conn {
         }
     }
 
-    /// Hand one request to the worker pool under this connection's next
-    /// sequence number.
+    /// Queue one request under this connection's next sequence number.
+    /// It reaches the worker pool through [`Conn::pump`], which keeps
+    /// per-connection execution serial.
     fn dispatch(&mut self, shared: &Shared, work: Work) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        shared.jobs.lock().unwrap().push_back(Job { conn: self.id, seq, work });
+        self.pending.push_back(Job { conn: self.id, seq, work });
+        self.pump(shared);
+    }
+
+    /// Admit the next queued job to the pool — but only if none of this
+    /// connection's jobs is there already. Requests from one connection
+    /// therefore execute strictly in request order (a pipelined `GET`
+    /// observes the `PUT` before it), while requests from *different*
+    /// connections run in parallel across the workers. Called on
+    /// dispatch and again whenever one of our completions returns.
+    fn pump(&mut self, shared: &Shared) {
+        if self.in_worker {
+            return;
+        }
+        let Some(job) = self.pending.pop_front() else { return };
+        self.in_worker = true;
+        shared.jobs.lock().unwrap().push_back(job);
         shared.jobs_cv.notify_one();
     }
 
@@ -547,6 +597,7 @@ impl Conn {
                 self.closing = true;
                 self.stop_requests = true;
                 self.done.clear();
+                self.pending.clear(); // requests pipelined past the close
                 self.next_flush = self.next_seq;
                 self.rbuf.clear();
                 return;
@@ -705,11 +756,16 @@ impl Reactor {
             let batch: Vec<Done> = std::mem::take(&mut *self.shared.done.lock().unwrap());
             for done in batch {
                 if let Some(conn) = self.conns.get_mut(&done.conn) {
+                    // the pool runs at most one of a connection's jobs
+                    // at a time, so this completion is that one —
+                    // release the next queued job
+                    conn.in_worker = false;
                     // a completion at or past next_flush is live; below
                     // it, it raced a close that already discarded it
                     if done.seq >= conn.next_flush {
                         conn.done.insert(done.seq, Reply { bytes: done.bytes, close: done.close });
                     }
+                    conn.pump(&self.shared);
                 }
             }
 
@@ -726,6 +782,15 @@ impl Reactor {
                 }
                 if revents & (sys::POLLIN | sys::POLLHUP) != 0 {
                     conn.fill(&self.shared, &mut scratch);
+                    if revents & sys::POLLHUP != 0 && !conn.wants_read() {
+                        // a backpressured connection refuses to read, so
+                        // fill() cannot consume the hangup and poll
+                        // would re-report it every tick (busy spin
+                        // until the in-flight work drains) — POLLHUP
+                        // means the peer is fully gone, so treat it as
+                        // EOF outright
+                        conn.peer_eof = true;
+                    }
                 }
             }
 

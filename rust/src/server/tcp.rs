@@ -363,6 +363,13 @@ fn serve_text<B: StorageBackend<DvvMech>>(
         let mut consumed = 0;
         while let Some(nl) = acc[consumed..].iter().position(|&b| b == b'\n') {
             let end = consumed + nl;
+            if nl > protocol::MAX_TEXT_LINE {
+                // a complete line obeys the same cap as a buffered
+                // partial one — the newline can arrive in the same read
+                // chunk that crossed the cap
+                stream.write_all(b"ERR line too long\n")?;
+                return Ok(());
+            }
             let line = String::from_utf8_lossy(&acc[consumed..end]);
             if line.trim().is_empty() {
                 consumed = end + 1;
@@ -558,6 +565,29 @@ mod tests {
             r.read_line(&mut reply).unwrap();
             assert_eq!(reply.trim_end(), "ERR line too long");
             // then EOF: the connection is closed, not left draining
+            let mut rest = Vec::new();
+            let _ = std::io::Read::read_to_end(&mut r, &mut rest);
+            assert!(rest.is_empty(), "connection must close after the cap reply");
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn oversized_complete_text_line_is_rejected() {
+        // unlike the flood above, this line *does* end in a newline —
+        // and the newline can land in the same read chunk that crossed
+        // the cap, so the complete-line path must enforce the cap too
+        // (both serve loops used to dispatch such a line)
+        for mode in MODES {
+            let cluster = Arc::new(LocalCluster::new(2, 2, 1, 1).unwrap());
+            let server = start_mode(cluster, mode);
+            let (mut r, mut w) = client(server.addr());
+            let mut blob = vec![b'x'; protocol::MAX_TEXT_LINE + 100];
+            blob.push(b'\n');
+            let _ = w.write_all(&blob);
+            let mut reply = String::new();
+            r.read_line(&mut reply).unwrap();
+            assert_eq!(reply.trim_end(), "ERR line too long", "{mode:?}");
             let mut rest = Vec::new();
             let _ = std::io::Read::read_to_end(&mut r, &mut rest);
             assert!(rest.is_empty(), "connection must close after the cap reply");

@@ -1,8 +1,11 @@
 //! Reactor serve-loop contracts: pipelining (N in-flight binary frames
-//! on one connection, N replies in request order), backpressure past
-//! the in-flight window, framing errors and QUIT in pipeline position,
-//! hostile frame headers across many connections, deterministic
-//! shutdown, and reactor/threaded equivalence on the same wire bytes.
+//! on one connection, N replies in request order), serialized
+//! per-connection execution (a pipelined read observes the write before
+//! it), backpressure past the in-flight window (deadlock-free even for
+//! batches past the socket buffers), framing errors and QUIT in
+//! pipeline position, hostile frame headers across many connections,
+//! deterministic shutdown, and reactor/threaded equivalence on the
+//! same wire bytes.
 
 use std::io::{BufReader, Read, Write};
 use std::net::TcpStream;
@@ -96,6 +99,87 @@ fn deep_pipeline_survives_backpressure_window() {
     }
     client.quit().unwrap();
     server.shutdown();
+}
+
+#[test]
+fn pipelined_read_observes_the_write_before_it() {
+    // the regression this guards: pipelined requests from one
+    // connection used to execute concurrently on the worker pool (only
+    // the replies were reordered), so with 2+ workers a GET pipelined
+    // right after a PUT could pop on another worker, run first, and
+    // answer VALUES 0. Execution is now serialized per connection.
+    let (server, _cluster) = start(ServeMode::Reactor { workers: 4 });
+    let mut client = TcpClient::connect(server.addr(), Actor::client(21)).unwrap();
+
+    const ROUNDS: usize = 32;
+    let mut reqs = Vec::with_capacity(2 * ROUNDS);
+    for i in 0..ROUNDS {
+        reqs.push(BinRequest::Put {
+            key: format!("ryw-{i}"),
+            value: format!("v{i}").into_bytes(),
+            actor: 21,
+            ctx_token: Vec::new(),
+        });
+        reqs.push(BinRequest::Get { key: format!("ryw-{i}") });
+    }
+    let replies = client.pipeline(&reqs).unwrap();
+    assert_eq!(replies.len(), 2 * ROUNDS);
+    for (i, pair) in replies.chunks(2).enumerate() {
+        assert_eq!(pair[0].0, protocol::OP_PUT_OK, "PUT {i}");
+        assert_eq!(pair[1].0, protocol::OP_VALUES, "GET {i}");
+        let (values, _) = protocol::decode_values(&pair[1].1).unwrap();
+        assert_eq!(
+            values,
+            vec![format!("v{i}").into_bytes()],
+            "GET {i} executed before the PUT pipelined ahead of it"
+        );
+    }
+    client.quit().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn pipeline_batch_larger_than_socket_buffers_does_not_deadlock() {
+    // the regression this guards: TcpClient::pipeline used to write the
+    // whole batch before reading any reply; once the server's reply
+    // backlog passed its write-backlog bound it stopped reading, and a
+    // batch whose unsent request bytes no longer fit the socket buffers
+    // deadlocked both sides. Sized so the reply bytes (48 × 512 KiB)
+    // and the request bytes (128 × 512 KiB) both dwarf any auto-tuned
+    // loopback socket buffer.
+    for mode in MODES {
+        let (server, _cluster) = start(mode);
+        let addr = server.addr();
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        let worker = std::thread::spawn(move || {
+            let mut client = TcpClient::connect(addr, Actor::client(9)).unwrap();
+            let value = vec![0xab_u8; 512 * 1024];
+            client.put("big", value.clone(), None).unwrap();
+            let mut reqs: Vec<BinRequest> =
+                (0..48).map(|_| BinRequest::Get { key: "big".to_string() }).collect();
+            for i in 0..128 {
+                reqs.push(BinRequest::Put {
+                    key: format!("bulk-{i}"),
+                    value: value.clone(),
+                    actor: 9,
+                    ctx_token: Vec::new(),
+                });
+            }
+            let replies = client.pipeline(&reqs).unwrap();
+            assert_eq!(replies.len(), reqs.len());
+            for (i, (opcode, _)) in replies.iter().enumerate() {
+                let want = if i < 48 { protocol::OP_VALUES } else { protocol::OP_PUT_OK };
+                assert_eq!(*opcode, want, "reply {i}");
+            }
+            client.quit().unwrap();
+            done_tx.send(()).unwrap();
+        });
+        done_rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("pipeline deadlocked against the server's read-refusal backpressure");
+        worker.join().unwrap();
+        server.shutdown();
+    }
 }
 
 #[test]
