@@ -1,0 +1,213 @@
+//! Geo-replication bench: what the zone-aware write path costs and
+//! buys. Local-DC commit (per-DC sloppy quorum, remote homes parked
+//! for the shipper) vs the flat synchronous fan-out on an identical
+//! 6-node cluster; shipper drain and wire-batch apply throughput; and
+//! whole-DC heal convergence (partition → divergent writes in both
+//! halves → heal → anti-entropy quiesce). HLC stamp operations ride
+//! along since every shipped batch pays them.
+//!
+//! Results land in `BENCH_geo.json` (path override: `BENCH_GEO_JSON`)
+//! so the cross-DC path has a machine-readable baseline; `rust/ci.sh`
+//! runs this bench in quick mode to keep the file fresh.
+//!
+//! Regenerate with `cargo bench --bench geo`.
+
+use std::hint::black_box;
+use std::sync::Arc;
+
+use dvvstore::bench_support::{Options, Stats, Suite};
+use dvvstore::clocks::{Actor, Hlc, HlcTimestamp};
+use dvvstore::cluster::ring::hash_str;
+use dvvstore::kernel::mechs::DvvMech;
+use dvvstore::kernel::DurableMechanism;
+use dvvstore::server::LocalCluster;
+use dvvstore::workload::key_name;
+
+const ZONES: [usize; 6] = [0, 0, 0, 1, 1, 1];
+const KEYS: u64 = 64;
+
+/// One informed read-modify-write (GET for context, PUT with it) —
+/// the steady-state client op; siblings never accumulate.
+fn rmw(cluster: &LocalCluster, zone: Option<usize>, key: u64, actor: Actor, op: u64) {
+    let name = key_name(key);
+    let (ctx, observed) = match cluster.get_in_zone(&name, zone) {
+        Ok(ans) => (ans.context, ans.ids),
+        Err(_) => (Vec::new(), Vec::new()),
+    };
+    let body = format!("b{op}").into_bytes();
+    let _ = cluster.put_traced_in_zone(&name, body, &ctx, actor, &observed, zone);
+}
+
+fn bench_write_paths(suite: &mut Suite) {
+    // the comparison pair: same node count, same quorum spec — one
+    // cluster zone-aware (writes commit on the coordinator's DC, the
+    // rest ship async), one flat (writes fan out to all homes inline)
+    let geo = LocalCluster::with_zones(&ZONES, 3, 2, 2).unwrap();
+    let flat = LocalCluster::new(ZONES.len(), 3, 2, 2).unwrap();
+    let me = Actor::client(1);
+
+    suite.bench("put/geo_local_dc_rmw", "zones=2", {
+        let mut op = 0u64;
+        move || {
+            op += 1;
+            rmw(&geo, Some((op % 2) as usize), op % KEYS, me, op);
+            // keep the parked queue bounded: drain every 32 ops so the
+            // measurement stays the write path, not queue growth
+            if op % 32 == 0 {
+                black_box(geo.ship_round());
+            }
+        }
+    });
+
+    suite.bench("put/flat_full_fanout_rmw", "zones=1", {
+        let mut op = 0u64;
+        move || {
+            op += 1;
+            rmw(&flat, None, op % KEYS, me, op);
+        }
+    });
+}
+
+fn bench_shipper(suite: &mut Suite) {
+    let cluster = LocalCluster::with_zones(&ZONES, 3, 2, 2).unwrap();
+    let me = Actor::client(2);
+
+    // park a few cross-DC updates, then drain them — the per-round
+    // shipper cost a serve loop pays every maintenance tick
+    suite.bench("ship/drain_after_4_puts", "zones=2", {
+        let mut op = 0u64;
+        move || {
+            for _ in 0..4 {
+                op += 1;
+                rmw(&cluster, Some(0), op % KEYS, me, op);
+            }
+            black_box(cluster.ship_round());
+        }
+    });
+
+    // wire-side throughput: one 64-state OP_SHIP batch decoded
+    // strictly and merged at every home (idempotent re-merge, so the
+    // store does not grow across iterations)
+    let target = Arc::new(LocalCluster::with_zones(&ZONES, 3, 2, 2).unwrap());
+    let source = LocalCluster::new(1, 1, 1, 1).unwrap();
+    let mut entries: Vec<(u64, Vec<u8>)> = Vec::new();
+    for k in 0..64u64 {
+        let name = key_name(k);
+        source.put(&name, format!("s{k}").into_bytes(), &[]).unwrap();
+        let state = source.node(0).store().state(hash_str(&name));
+        let mut bytes = Vec::new();
+        <DvvMech as DurableMechanism>::encode_state(&state, &mut bytes);
+        entries.push((hash_str(&name), bytes));
+    }
+    suite.bench("ship/apply_wire_batch64", "zones=2", {
+        let target = Arc::clone(&target);
+        let mut l = 1u64;
+        move || {
+            l += 1;
+            let (applied, _) =
+                target.apply_ship(HlcTimestamp::new(l, 0), black_box(&entries)).unwrap();
+            black_box(applied);
+        }
+    });
+}
+
+fn bench_heal_convergence(suite: &mut Suite) {
+    // the marquee cycle end-to-end: DC 1 goes dark, both halves take
+    // divergent writes on their sloppy quorums, the partition heals,
+    // and anti-entropy (shipper round included) quiesces the cluster
+    let cluster = LocalCluster::with_zones(&ZONES, 3, 2, 2).unwrap();
+    let me = Actor::client(3);
+    suite.bench("heal/dc_partition_converge", "zones=2", {
+        let mut op = 0u64;
+        move || {
+            cluster.fabric().partition_groups(&[0, 1, 2], &[3, 4, 5]);
+            for _ in 0..8 {
+                op += 1;
+                rmw(&cluster, Some((op % 2) as usize), op % 16, me, op);
+            }
+            cluster.fabric().heal_partitions();
+            let mut rounds = 0;
+            while cluster.anti_entropy_round() > 0 {
+                rounds += 1;
+                assert!(rounds < 64, "anti-entropy failed to quiesce");
+            }
+            black_box(rounds);
+        }
+    });
+}
+
+fn bench_hlc(suite: &mut Suite) {
+    suite.bench("hlc/now", "local", {
+        let mut hlc = Hlc::new();
+        let mut pt = 0u64;
+        move || {
+            pt += 3;
+            black_box(hlc.now(black_box(pt)));
+        }
+    });
+    suite.bench("hlc/recv", "merge", {
+        let mut a = Hlc::new();
+        let mut b = Hlc::new();
+        let mut pt = 0u64;
+        move || {
+            pt += 3;
+            let sent = a.now(pt);
+            black_box(b.recv(black_box(pt), sent));
+        }
+    });
+}
+
+fn json_escape_free(s: &str) -> bool {
+    s.chars().all(|c| c.is_ascii_alphanumeric() || "/_=.-".contains(c))
+}
+
+/// Hand-rolled JSON (no serde in the offline build): flat result rows
+/// plus the local-commit vs flat-fanout write ratio.
+fn write_json(path: &str, quick: bool, results: &[Stats]) -> std::io::Result<()> {
+    let mut rows = String::new();
+    for (i, s) in results.iter().enumerate() {
+        assert!(
+            json_escape_free(&s.name) && json_escape_free(&s.param),
+            "bench names are JSON-safe"
+        );
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"name\": \"{}\", \"param\": \"{}\", \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"min_ns\": {:.1}}}",
+            s.name, s.param, s.mean_ns, s.p50_ns, s.p95_ns, s.min_ns
+        ));
+    }
+    let mean_of = |name: &str| results.iter().find(|s| s.name == name).map(|s| s.mean_ns);
+    let ratio = match (mean_of("put/flat_full_fanout_rmw"), mean_of("put/geo_local_dc_rmw")) {
+        (Some(flat), Some(geo)) if geo > 0.0 => format!("{:.2}", flat / geo),
+        _ => "null".to_string(),
+    };
+    let json = format!(
+        "{{\n  \"suite\": \"geo\",\n  \"quick\": {quick},\n  \
+         \"flat_over_geo_local_rmw\": {ratio},\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    std::fs::write(path, json)
+}
+
+fn main() {
+    let opts = Options::from_args();
+    let quick = opts.quick;
+    let mut suite = Suite::new("geo", opts);
+
+    bench_write_paths(&mut suite);
+    bench_shipper(&mut suite);
+    bench_heal_convergence(&mut suite);
+    bench_hlc(&mut suite);
+
+    let results: Vec<Stats> = suite.results().to_vec();
+    let path =
+        std::env::var("BENCH_GEO_JSON").unwrap_or_else(|_| "BENCH_geo.json".to_string());
+    match write_json(&path, quick, &results) {
+        Ok(()) => eprintln!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+    suite.finish();
+}

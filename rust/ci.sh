@@ -40,6 +40,13 @@ export WAL_ITERS="${WAL_ITERS:-2}"
 #   MERKLE_ITERS=20 rust/ci.sh
 export MERKLE_ITERS="${MERKLE_ITERS:-2}"
 
+# Geo-replication soak knob, same shape: the whole-DC partition chaos
+# runs (both worlds) and the HLC property tests
+# (rust/tests/geo_replication.rs) always run their fixed seeds;
+# GEO_ITERS appends extra derived seeds.
+#   GEO_ITERS=20 rust/ci.sh
+export GEO_ITERS="${GEO_ITERS:-2}"
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
@@ -85,5 +92,8 @@ bench_smoke antientropy ae_scale
 # conn: reactor vs thread-per-connection serve loop (throughput + tail
 # latency across connection-count levels).
 bench_smoke conn
+# geo: local-DC vs flat write path, shipper drain/apply throughput, and
+# whole-DC heal convergence (plus HLC stamp ops).
+bench_smoke geo
 
 echo "ci OK"

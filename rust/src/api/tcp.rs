@@ -10,7 +10,7 @@ use std::io::{BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 
 use super::{CausalCtx, GetReply, KvClient, PutReply};
-use crate::clocks::Actor;
+use crate::clocks::{Actor, HlcTimestamp};
 use crate::error::{Error, Result};
 use crate::server::protocol::{self, BinRequest};
 
@@ -226,9 +226,10 @@ impl TcpClient {
     }
 
     /// Server statistics:
-    /// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes, merkle_root)`.
+    /// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes,
+    /// merkle_root, zones, ship_lag)`.
     #[allow(clippy::type_complexity)]
-    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64, u64, u64, u64)> {
+    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64, u64, u64, u64, u64, u64)> {
         match self.roundtrip(&BinRequest::Stats)? {
             (protocol::OP_STATS_REPLY, payload) => {
                 let stats = protocol::decode_stats_reply(&payload)?;
@@ -292,6 +293,23 @@ impl TcpClient {
     /// any stats/topology/join/decommission reply).
     pub fn seen_epoch(&self) -> u64 {
         self.seen_epoch
+    }
+
+    /// Stream one cross-DC shipper batch ([`protocol::OP_SHIP`]): the
+    /// origin zone, the shipper's HLC stamp, and `(key, encoded DVV
+    /// state)` entries. Returns `(states applied, the receiving
+    /// cluster's post-merge HLC reading)` — what a remote DC's shipper
+    /// loop folds back into its own clock.
+    pub fn ship(
+        &mut self,
+        zone: u64,
+        ts: HlcTimestamp,
+        entries: Vec<(u64, Vec<u8>)>,
+    ) -> Result<(u64, HlcTimestamp)> {
+        match self.roundtrip(&BinRequest::Ship { zone, ts, entries })? {
+            (protocol::OP_SHIP_ACK, payload) => protocol::decode_ship_ack(&payload),
+            reply => Err(remote_err(reply)),
+        }
     }
 
     /// Close the connection politely (waits for the server's `BYE`).

@@ -1,0 +1,267 @@
+//! Hybrid logical clocks for cross-DC ordering (geo-replication).
+//!
+//! A plain physical timestamp breaks as soon as a node's clock jumps
+//! backward (NTP step, VM migration) — exactly the anomaly GentleRain+
+//! hardens against. An HLC keeps a timestamp that *tracks* physical time
+//! when clocks behave (the `l` component stays within the largest
+//! physical time the node has seen) yet stays **strictly monotone** per
+//! node under local events, sends, and receives even when the injected
+//! physical clock runs backward: the logical counter `c` breaks ties
+//! whenever `l` cannot advance.
+//!
+//! Update rules (Kulkarni et al., adopted by GentleRain+/Okapi for
+//! cross-DC stabilization):
+//!
+//! * local/send at physical time `pt`:
+//!   `l' = max(l, pt)`; `c' = c + 1` if `l' == l` else `0`.
+//! * receive a remote timestamp `m` at physical time `pt`:
+//!   `l' = max(l, m.l, pt)`; `c'` is `max(c, m.c) + 1` when `l'` ties
+//!   both, `c + 1` when it ties only ours, `m.c + 1` when it ties only
+//!   the remote's, and `0` when fresh physical time won outright.
+//!
+//! The drift bound follows directly: `l` never exceeds the largest
+//! physical time any merged-in event carried, so a bounded clock skew
+//! gives a bounded `l − pt` (asserted by the geo property tests).
+//!
+//! Timestamps pack into one `u64` — 48 bits of microseconds (good past
+//! year 8900) over 16 bits of counter — so the cross-DC shipper sends a
+//! single ordered word per batch and `STATS` can report it.
+
+use std::fmt;
+
+use super::encoding::{get_varint, put_varint, varint_len};
+use crate::error::Result;
+
+/// Bits reserved for the logical counter in the packed form.
+pub const COUNTER_BITS: u32 = 16;
+
+/// One hybrid timestamp: physical-dominant `l` (µs) plus tie-breaking
+/// logical counter `c`. The derived lexicographic `Ord` on `(l, c)` *is*
+/// the HLC order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct HlcTimestamp {
+    /// Physical-time component (µs): the largest physical clock reading
+    /// this timestamp's causal past has seen.
+    pub l: u64,
+    /// Logical counter: events that share one `l` are ordered by `c`.
+    pub c: u64,
+}
+
+impl HlcTimestamp {
+    /// Construct from components.
+    pub fn new(l: u64, c: u64) -> HlcTimestamp {
+        HlcTimestamp { l, c }
+    }
+
+    /// Pack into one word: `l` in the high 48 bits, `c` in the low 16.
+    /// Packing preserves order whenever both components fit; an
+    /// overflowing counter saturates rather than carrying into `l`
+    /// (2^16 same-microsecond events would need a stalled clock *and* a
+    /// pathological event rate).
+    pub fn pack(self) -> u64 {
+        let l = self.l & ((1 << (64 - COUNTER_BITS)) - 1);
+        let c = self.c.min((1 << COUNTER_BITS) - 1);
+        (l << COUNTER_BITS) | c
+    }
+
+    /// Unpack a [`pack`](HlcTimestamp::pack)ed word.
+    pub fn unpack(word: u64) -> HlcTimestamp {
+        HlcTimestamp {
+            l: word >> COUNTER_BITS,
+            c: word & ((1 << COUNTER_BITS) - 1),
+        }
+    }
+
+    /// Encoded wire size (two varints).
+    pub fn encoded_size(&self) -> usize {
+        varint_len(self.l) + varint_len(self.c)
+    }
+}
+
+impl fmt::Display for HlcTimestamp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}+{}", self.l, self.c)
+    }
+}
+
+/// Encode an [`HlcTimestamp`] as two varints (wire form for the ship
+/// opcodes and the geo STATS fields).
+pub fn encode_hlc(ts: &HlcTimestamp, buf: &mut Vec<u8>) {
+    put_varint(buf, ts.l);
+    put_varint(buf, ts.c);
+}
+
+/// Decode an [`HlcTimestamp`], advancing `pos`.
+pub fn decode_hlc(buf: &[u8], pos: &mut usize) -> Result<HlcTimestamp> {
+    let l = get_varint(buf, pos)?;
+    let c = get_varint(buf, pos)?;
+    Ok(HlcTimestamp { l, c })
+}
+
+/// One node's hybrid logical clock: the last timestamp issued, advanced
+/// by [`now`](Hlc::now) on local/send events and [`recv`](Hlc::recv) on
+/// message receipt. Both return a timestamp **strictly greater** than
+/// every timestamp this clock issued before, regardless of what the
+/// injected physical clock does.
+#[derive(Debug, Clone, Default)]
+pub struct Hlc {
+    last: HlcTimestamp,
+}
+
+impl Hlc {
+    /// Fresh clock at the zero timestamp.
+    pub fn new() -> Hlc {
+        Hlc::default()
+    }
+
+    /// The last timestamp issued (zero before the first event).
+    pub fn last(&self) -> HlcTimestamp {
+        self.last
+    }
+
+    /// Stamp a local or send event at physical time `pt_us`.
+    pub fn now(&mut self, pt_us: u64) -> HlcTimestamp {
+        let l = self.last.l.max(pt_us);
+        let c = if l == self.last.l { self.last.c + 1 } else { 0 };
+        self.last = HlcTimestamp { l, c };
+        self.last
+    }
+
+    /// Merge a received remote timestamp at physical time `pt_us`.
+    pub fn recv(&mut self, pt_us: u64, remote: HlcTimestamp) -> HlcTimestamp {
+        let l = self.last.l.max(remote.l).max(pt_us);
+        let c = if l == self.last.l && l == remote.l {
+            self.last.c.max(remote.c) + 1
+        } else if l == self.last.l {
+            self.last.c + 1
+        } else if l == remote.l {
+            remote.c + 1
+        } else {
+            0
+        };
+        self.last = HlcTimestamp { l, c };
+        self.last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_events_are_strictly_monotone() {
+        let mut h = Hlc::new();
+        let mut prev = h.now(100);
+        for pt in [101, 50, 0, 101, 200, 199] {
+            let t = h.now(pt);
+            assert!(t > prev, "{t} not after {prev} at pt={pt}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn counter_resets_when_physical_time_advances() {
+        let mut h = Hlc::new();
+        h.now(10);
+        h.now(10);
+        assert_eq!(h.last(), HlcTimestamp::new(10, 2));
+        assert_eq!(h.now(11), HlcTimestamp::new(11, 0));
+    }
+
+    #[test]
+    fn backward_physical_jump_keeps_l_and_bumps_c() {
+        let mut h = Hlc::new();
+        h.now(1000);
+        // physical clock steps back 900µs: l must hold, c must advance
+        assert_eq!(h.now(100), HlcTimestamp::new(1000, 1));
+        assert_eq!(h.now(100), HlcTimestamp::new(1000, 2));
+        // physical time catching back up resets the counter
+        assert_eq!(h.now(1001), HlcTimestamp::new(1001, 0));
+    }
+
+    #[test]
+    fn recv_dominates_both_inputs() {
+        let mut h = Hlc::new();
+        h.now(50);
+        let remote = HlcTimestamp::new(80, 3);
+        let t = h.recv(60, remote);
+        assert!(t > remote && t > HlcTimestamp::new(50, 1));
+        assert_eq!(t, HlcTimestamp::new(80, 4), "remote l wins, its c + 1");
+    }
+
+    #[test]
+    fn recv_counter_rules_cover_all_tie_cases() {
+        // tie with both: max of counters + 1
+        let mut h = Hlc::new();
+        h.now(100); // (100, 0)
+        assert_eq!(h.recv(100, HlcTimestamp::new(100, 7)), HlcTimestamp::new(100, 8));
+        // tie with ours only
+        let mut h = Hlc::new();
+        h.now(100);
+        assert_eq!(h.recv(0, HlcTimestamp::new(40, 9)), HlcTimestamp::new(100, 1));
+        // tie with remote only
+        let mut h = Hlc::new();
+        h.now(10);
+        assert_eq!(h.recv(0, HlcTimestamp::new(90, 2)), HlcTimestamp::new(90, 3));
+        // fresh physical time wins outright
+        let mut h = Hlc::new();
+        h.now(10);
+        assert_eq!(h.recv(500, HlcTimestamp::new(90, 2)), HlcTimestamp::new(500, 0));
+    }
+
+    #[test]
+    fn l_never_exceeds_largest_physical_input() {
+        let mut h = Hlc::new();
+        let mut max_pt = 0u64;
+        for pt in [5, 300, 2, 2, 299, 301, 0] {
+            max_pt = max_pt.max(pt);
+            h.now(pt);
+            assert!(h.last().l <= max_pt, "l={} ran ahead of pt max {max_pt}", h.last().l);
+        }
+    }
+
+    #[test]
+    fn pack_preserves_order_and_roundtrips() {
+        let cases = [
+            HlcTimestamp::new(0, 0),
+            HlcTimestamp::new(0, 1),
+            HlcTimestamp::new(1, 0),
+            HlcTimestamp::new(1_700_000_000_000_000, 3),
+            HlcTimestamp::new(1_700_000_000_000_000, 4),
+            HlcTimestamp::new(1_700_000_000_000_001, 0),
+        ];
+        for pair in cases.windows(2) {
+            assert!(pair[0] < pair[1]);
+            assert!(pair[0].pack() < pair[1].pack(), "{} vs {}", pair[0], pair[1]);
+        }
+        for ts in cases {
+            assert_eq!(HlcTimestamp::unpack(ts.pack()), ts);
+        }
+        // counter overflow saturates instead of carrying into l
+        let fat = HlcTimestamp::new(7, 1 << 20);
+        assert_eq!(HlcTimestamp::unpack(fat.pack()), HlcTimestamp::new(7, (1 << 16) - 1));
+    }
+
+    #[test]
+    fn wire_roundtrip_and_size() {
+        for ts in [
+            HlcTimestamp::new(0, 0),
+            HlcTimestamp::new(127, 1),
+            HlcTimestamp::new(1_700_000_000_000_000, 65535),
+        ] {
+            let mut buf = Vec::new();
+            encode_hlc(&ts, &mut buf);
+            assert_eq!(buf.len(), ts.encoded_size());
+            let mut pos = 0;
+            assert_eq!(decode_hlc(&buf, &mut pos).unwrap(), ts);
+            assert_eq!(pos, buf.len());
+        }
+        // truncation is an error, never a panic
+        let mut buf = Vec::new();
+        encode_hlc(&HlcTimestamp::new(300, 300), &mut buf);
+        for cut in 0..buf.len() {
+            let mut pos = 0;
+            assert!(decode_hlc(&buf[..cut], &mut pos).is_err(), "prefix {cut}");
+        }
+    }
+}

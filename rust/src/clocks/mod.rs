@@ -15,12 +15,15 @@
 //! The per-client version-vector variant of §3.3 reuses [`VersionVector`]
 //! over client actors; its server-side behaviour lives in
 //! `kernel::mechs::client_vv`. [`encoding`] provides the wire codecs used
-//! for the metadata-size experiments (DESIGN.md E7).
+//! for the metadata-size experiments (DESIGN.md E7). [`hlc`] is not a
+//! causality mechanism at all: it is the hybrid logical clock the
+//! geo-replication subsystem stamps cross-DC shipments with.
 
 pub mod causal_history;
 pub mod dvv;
 pub mod dvvset;
 pub mod encoding;
+pub mod hlc;
 pub mod lamport;
 pub mod realtime;
 pub mod vv;
@@ -28,6 +31,7 @@ pub mod vv;
 pub use causal_history::CausalHistory;
 pub use dvv::Dvv;
 pub use dvvset::DvvSet;
+pub use hlc::{Hlc, HlcTimestamp};
 pub use lamport::LamportClock;
 pub use realtime::RtClock;
 pub use vv::VersionVector;

@@ -105,6 +105,62 @@ impl Ring {
         }
     }
 
+    /// Zone-aware preference list: the same clockwise walk as
+    /// [`replicas_into`](Ring::replicas_into), but the first pass only
+    /// accepts nodes from zones not yet represented, so the first
+    /// `min(n, #reachable zones)` replicas land in distinct DCs. A
+    /// second pass fills any remaining slots with the next distinct
+    /// nodes in plain walk order (covers `n` > zone count, or one zone
+    /// owning most of the circle). `zone_of[id]` maps a node to its
+    /// zone; ids beyond the slice default to zone 0. Both passes share
+    /// the unzoned walk order, so the primary replica is identical
+    /// under either policy.
+    pub fn replicas_into_zoned(
+        &self,
+        key: u64,
+        n: usize,
+        zone_of: &[usize],
+        out: &mut Vec<NodeId>,
+    ) {
+        out.clear();
+        if self.points.is_empty() || n == 0 {
+            return;
+        }
+        let h = hash64(key);
+        let start = match self.points.binary_search_by_key(&h, |&(p, _)| p) {
+            Ok(i) | Err(i) => i,
+        };
+        let zone = |node: NodeId| zone_of.get(node).copied().unwrap_or(0);
+        let mut zones_seen: Vec<usize> = Vec::new();
+        for step in 0..self.points.len() {
+            let (_, node) = self.points[(start + step) % self.points.len()];
+            if !out.contains(&node) && !zones_seen.contains(&zone(node)) {
+                zones_seen.push(zone(node));
+                out.push(node);
+                if out.len() == n {
+                    return;
+                }
+            }
+        }
+        for step in 0..self.points.len() {
+            let (_, node) = self.points[(start + step) % self.points.len()];
+            if !out.contains(&node) {
+                out.push(node);
+                if out.len() == n {
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience form of
+    /// [`replicas_into_zoned`](Ring::replicas_into_zoned).
+    pub fn replicas_for_zoned(&self, key: u64, n: usize, zone_of: &[usize]) -> Vec<NodeId> {
+        let mut out = Vec::with_capacity(n);
+        self.replicas_into_zoned(key, n, zone_of, &mut out);
+        out
+    }
+
     /// Resume the clockwise walk for `key` past the nodes already in
     /// `seen`: the next distinct node is pushed onto `seen` and returned,
     /// or `None` when every ring node is already in `seen`. Iterating
@@ -241,6 +297,49 @@ mod tests {
             }
             assert_eq!(resumed, full, "key {key}: lazy walk = materialized walk");
             assert!(ring.next_distinct(key, &mut seen).is_none(), "walk exhausts");
+        }
+    }
+
+    #[test]
+    fn zoned_walk_spreads_replicas_across_zones() {
+        let ring = Ring::new(6, 64).unwrap();
+        let zones = [0, 0, 0, 1, 1, 2]; // 3 DCs of uneven size
+        for key in 0..300u64 {
+            let reps = ring.replicas_for_zoned(key, 3, &zones);
+            assert_eq!(reps.len(), 3);
+            let mut zs: Vec<_> = reps.iter().map(|&n| zones[n]).collect();
+            zs.sort_unstable();
+            zs.dedup();
+            assert_eq!(zs.len(), 3, "key {key}: replicas {reps:?} not zone-spread");
+        }
+    }
+
+    #[test]
+    fn zoned_walk_shares_primary_with_plain_walk() {
+        let ring = Ring::new(6, 64).unwrap();
+        let zones = [0, 1, 0, 1, 0, 1];
+        for key in 0..300u64 {
+            assert_eq!(
+                ring.replicas_for_zoned(key, 3, &zones)[0],
+                ring.primary_for(key).unwrap(),
+                "key {key}"
+            );
+        }
+    }
+
+    #[test]
+    fn zoned_walk_fills_past_zone_count_with_distinct_nodes() {
+        let ring = Ring::new(5, 64).unwrap();
+        let zones = [0, 0, 0, 0, 1]; // only 2 zones but n = 4
+        for key in 0..200u64 {
+            let reps = ring.replicas_for_zoned(key, 4, &zones);
+            assert_eq!(reps.len(), 4, "second pass fills the list");
+            let mut sorted = reps.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 4, "duplicates in {reps:?}");
+            let zs: Vec<_> = reps[..2].iter().map(|&n| zones[n]).collect();
+            assert_ne!(zs[0], zs[1], "first two span both zones: {reps:?}");
         }
     }
 

@@ -35,6 +35,13 @@ struct Inner {
     /// Count of `true` entries (slots grow forever; the member count
     /// must not cost a scan per lookup or per churn cycle).
     live: usize,
+    /// `zone[id]` — the DC each dense slot was placed in (zone 0 for
+    /// flat clusters; slots keep their zone after decommission).
+    zone: Vec<usize>,
+    /// Use the zone-spreading walk for preference lists? Set by
+    /// [`Topology::with_zones`]; flat clusters keep the plain walk so
+    /// single-DC placement is byte-identical to pre-geo builds.
+    zone_aware: bool,
 }
 
 impl Inner {
@@ -61,9 +68,73 @@ impl Topology {
     pub fn new(nodes: usize, vnodes: usize) -> Result<Topology> {
         let ring = Ring::new(nodes, vnodes)?;
         Ok(Topology {
-            inner: RwLock::new(Inner { ring, member: vec![true; nodes], live: nodes }),
+            inner: RwLock::new(Inner {
+                ring,
+                member: vec![true; nodes],
+                live: nodes,
+                zone: vec![0; nodes],
+                zone_aware: false,
+            }),
             epoch: AtomicU64::new(INITIAL_EPOCH),
         })
+    }
+
+    /// Build a **zone-aware** topology: node `i` lives in DC `zones[i]`,
+    /// and preference lists use the zone-spreading walk
+    /// ([`Ring::replicas_into_zoned`]) so the first `min(n, #zones)`
+    /// replicas of every key land in distinct DCs.
+    pub fn with_zones(zones: &[usize], vnodes: usize) -> Result<Topology> {
+        let ring = Ring::new(zones.len(), vnodes)?;
+        Ok(Topology {
+            inner: RwLock::new(Inner {
+                ring,
+                member: vec![true; zones.len()],
+                live: zones.len(),
+                zone: zones.to_vec(),
+                zone_aware: true,
+            }),
+            epoch: AtomicU64::new(INITIAL_EPOCH),
+        })
+    }
+
+    /// Is the zone-spreading placement walk active?
+    pub fn is_zone_aware(&self) -> bool {
+        self.inner.read().unwrap().zone_aware
+    }
+
+    /// The DC a dense slot was placed in (zone 0 for unknown ids and
+    /// flat clusters). Decommissioned slots keep their zone — retired
+    /// actor ids linger in contexts, and audits still ask where they
+    /// lived.
+    pub fn zone_of(&self, id: NodeId) -> usize {
+        self.inner.read().unwrap().zone.get(id).copied().unwrap_or(0)
+    }
+
+    /// Number of distinct zones among **active** members.
+    pub fn zone_count(&self) -> usize {
+        let inner = self.inner.read().unwrap();
+        let mut zones: Vec<usize> = inner
+            .member
+            .iter()
+            .enumerate()
+            .filter_map(|(id, &m)| m.then(|| inner.zone.get(id).copied().unwrap_or(0)))
+            .collect();
+        zones.sort_unstable();
+        zones.dedup();
+        zones.len()
+    }
+
+    /// Active member ids in `zone`, ascending.
+    pub fn members_in_zone(&self, zone: usize) -> Vec<NodeId> {
+        let inner = self.inner.read().unwrap();
+        inner
+            .member
+            .iter()
+            .enumerate()
+            .filter_map(|(id, &m)| {
+                (m && inner.zone.get(id).copied().unwrap_or(0) == zone).then_some(id)
+            })
+            .collect()
     }
 
     /// Current membership epoch. Monotone: bumped by exactly one per
@@ -107,10 +178,16 @@ impl Topology {
     /// Admit a new node: allocates the next dense id, places its vnodes,
     /// and bumps the epoch. Returns `(new id, new epoch)`.
     pub fn join(&self) -> (NodeId, u64) {
+        self.join_in_zone(0)
+    }
+
+    /// [`join`](Topology::join), placing the newcomer in DC `zone`.
+    pub fn join_in_zone(&self, zone: usize) -> (NodeId, u64) {
         let mut inner = self.inner.write().unwrap();
         let id = inner.ring.add_node();
         debug_assert_eq!(id, inner.member.len(), "ring ids stay dense");
         inner.member.push(true);
+        inner.zone.push(zone);
         inner.live += 1;
         // bump inside the write lock: an epoch can never be observed
         // with a ring older than the one that produced it
@@ -139,13 +216,20 @@ impl Topology {
     /// with the first `n` distinct member replicas for `key`, under one
     /// read lock.
     pub fn replicas_into(&self, key: u64, n: usize, out: &mut Vec<NodeId>) {
-        self.inner.read().unwrap().ring.replicas_into(key, n, out);
+        let inner = self.inner.read().unwrap();
+        if inner.zone_aware {
+            inner.ring.replicas_into_zoned(key, n, &inner.zone, out);
+        } else {
+            inner.ring.replicas_into(key, n, out);
+        }
     }
 
     /// Allocating convenience form of
     /// [`replicas_into`](Topology::replicas_into) (tests, admin paths).
     pub fn replicas_for(&self, key: u64, n: usize) -> Vec<NodeId> {
-        self.inner.read().unwrap().ring.replicas_for(key, n)
+        let mut out = Vec::with_capacity(n);
+        self.replicas_into(key, n, &mut out);
+        out
     }
 
     /// Primary (coordinator-preferred) replica for `key`.
@@ -239,6 +323,48 @@ mod tests {
             assert_eq!(e, last + 1);
             last = e;
         }
+    }
+
+    #[test]
+    fn zoned_topology_spreads_preference_lists() {
+        let t = Topology::with_zones(&[0, 0, 0, 1, 1, 1], 64).unwrap();
+        assert!(t.is_zone_aware());
+        assert_eq!(t.zone_count(), 2);
+        assert_eq!(t.members_in_zone(1), vec![3, 4, 5]);
+        assert_eq!(t.zone_of(4), 1);
+        assert_eq!(t.zone_of(99), 0, "unknown ids default to zone 0");
+        for key in 0..200u64 {
+            let reps = t.replicas_for(key, 3);
+            let zones: std::collections::HashSet<_> =
+                reps.iter().map(|&n| t.zone_of(n)).collect();
+            assert_eq!(zones.len(), 2, "key {key}: {reps:?} stuck in one DC");
+        }
+    }
+
+    #[test]
+    fn flat_topology_placement_is_unchanged_by_zone_plumbing() {
+        let t = Topology::new(5, 32).unwrap();
+        assert!(!t.is_zone_aware());
+        assert_eq!(t.zone_count(), 1);
+        let ring = Ring::new(5, 32).unwrap();
+        for key in 0..200u64 {
+            assert_eq!(t.replicas_for(key, 3), ring.replicas_for(key, 3));
+        }
+    }
+
+    #[test]
+    fn join_in_zone_records_placement_and_bumps_epoch() {
+        let t = Topology::with_zones(&[0, 1], 32).unwrap();
+        let (id, epoch) = t.join_in_zone(2);
+        assert_eq!((id, epoch), (2, INITIAL_EPOCH + 1));
+        assert_eq!(t.zone_of(id), 2);
+        assert_eq!(t.zone_count(), 3);
+        // plain join lands in zone 0 and zones survive decommission
+        let (id2, _) = t.join();
+        assert_eq!(t.zone_of(id2), 0);
+        t.decommission(id).unwrap();
+        assert_eq!(t.zone_of(id), 2, "retired slots keep their zone");
+        assert_eq!(t.zone_count(), 2);
     }
 
     #[test]

@@ -150,6 +150,25 @@ impl Raw {
         }
     }
 
+    /// Integer array at path; a missing key yields an empty vec.
+    pub fn int_array(&self, path: &str) -> Result<Vec<i64>> {
+        match self.get(path) {
+            None => Ok(Vec::new()),
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|x| match x {
+                    Value::Int(v) => Ok(*v),
+                    other => Err(Error::Config(format!(
+                        "{path}: expected int array element, got {other}"
+                    ))),
+                })
+                .collect(),
+            Some(other) => {
+                Err(Error::Config(format!("{path}: expected array, got {other}")))
+            }
+        }
+    }
+
     /// All dotted paths (for diagnostics).
     pub fn paths(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(|s| s.as_str())
@@ -254,6 +273,11 @@ pub struct ClusterConfig {
     /// (Dynamo-style "any node coordinates" — the §3.3/Figure 4 setting
     /// where stateless-client inference goes wrong).
     pub random_coordinator: bool,
+    /// Per-node DC assignment: `zones[i]` is node `i`'s zone. Empty =
+    /// flat single-DC cluster (geo-replication off, the default); when
+    /// set, its length must equal `nodes` and placement switches to the
+    /// zone-spreading walk.
+    pub zones: Vec<usize>,
 }
 
 impl Default for ClusterConfig {
@@ -266,7 +290,28 @@ impl Default for ClusterConfig {
             vnodes: 64,
             mechanism: "dvv".to_string(),
             random_coordinator: false,
+            zones: Vec::new(),
         }
+    }
+}
+
+/// Geo-replication (cross-DC) parameters. Only consulted when
+/// `cluster.zones` is set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GeoConfig {
+    /// Cross-DC shipper cadence (µs of simulated time): each node drains
+    /// its remote-DC buffer this often. 0 disables the shipper (cross-DC
+    /// AE becomes the only repair path).
+    pub ship_interval_us: u64,
+    /// Probability that an anti-entropy round picks a **remote-DC** peer
+    /// instead of a same-zone one — the low-frequency cross-DC repair
+    /// backstop.
+    pub cross_dc_ae_prob: f64,
+}
+
+impl Default for GeoConfig {
+    fn default() -> Self {
+        GeoConfig { ship_interval_us: 20_000, cross_dc_ae_prob: 0.1 }
     }
 }
 
@@ -333,6 +378,8 @@ pub struct StoreConfig {
     pub antientropy: AntiEntropyConfig,
     /// DES durability-model section.
     pub durability: DurabilityConfig,
+    /// Geo-replication section.
+    pub geo: GeoConfig,
 }
 
 impl StoreConfig {
@@ -352,6 +399,15 @@ impl StoreConfig {
                 mechanism: raw.str("cluster.mechanism", &d.cluster.mechanism)?,
                 random_coordinator: raw
                     .bool("cluster.random_coordinator", d.cluster.random_coordinator)?,
+                zones: raw
+                    .int_array("cluster.zones")?
+                    .into_iter()
+                    .map(|z| {
+                        usize::try_from(z).map_err(|_| {
+                            Error::Config("cluster.zones entries must be >= 0".into())
+                        })
+                    })
+                    .collect::<Result<Vec<usize>>>()?,
             },
             net: NetConfig {
                 mean_latency_us: raw.float("net.mean_latency_us", d.net.mean_latency_us)?,
@@ -377,6 +433,13 @@ impl StoreConfig {
                 .map_err(|_| {
                     Error::Config("durability.flush_every_ops must be >= 0".into())
                 })?,
+            },
+            geo: GeoConfig {
+                ship_interval_us: raw
+                    .int("geo.ship_interval_us", d.geo.ship_interval_us as i64)?
+                    as u64,
+                cross_dc_ae_prob: raw
+                    .float("geo.cross_dc_ae_prob", d.geo.cross_dc_ae_prob)?,
             },
         };
         cfg.validate()?;
@@ -405,6 +468,16 @@ impl StoreConfig {
         }
         if !(0.0..=1.0).contains(&self.net.drop_prob) {
             return Err(Error::Config("drop_prob must be within [0, 1]".into()));
+        }
+        if !c.zones.is_empty() && c.zones.len() != c.nodes {
+            return Err(Error::Config(format!(
+                "cluster.zones has {} entries for {} nodes",
+                c.zones.len(),
+                c.nodes
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.geo.cross_dc_ae_prob) {
+            return Err(Error::Config("geo.cross_dc_ae_prob must be within [0, 1]".into()));
         }
         Ok(())
     }
@@ -503,6 +576,39 @@ period_us = 100000
     fn defaults_when_missing() {
         let cfg = StoreConfig::from_raw(&Raw::parse("").unwrap()).unwrap();
         assert_eq!(cfg, StoreConfig::default());
+    }
+
+    #[test]
+    fn geo_section_parses_and_validates() {
+        let raw = Raw::parse(
+            "[cluster]\nnodes = 4\nzones = [0, 0, 1, 1]\n[geo]\nship_interval_us = 5000\ncross_dc_ae_prob = 0.25\n",
+        )
+        .unwrap();
+        let cfg = StoreConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.cluster.zones, vec![0, 0, 1, 1]);
+        assert_eq!(cfg.geo.ship_interval_us, 5000);
+        assert_eq!(cfg.geo.cross_dc_ae_prob, 0.25);
+        // zones length must match nodes
+        let raw = Raw::parse("[cluster]\nnodes = 4\nzones = [0, 1]\n").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+        // negative zone ids and bad probabilities are rejected
+        let raw = Raw::parse("[cluster]\nnodes = 2\nzones = [0, -1]\n").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+        let raw = Raw::parse("[geo]\ncross_dc_ae_prob = 1.5\n").unwrap();
+        assert!(StoreConfig::from_raw(&raw).is_err());
+        // empty zones stays the flat default
+        let cfg = StoreConfig::from_raw(&Raw::parse("").unwrap()).unwrap();
+        assert!(cfg.cluster.zones.is_empty());
+        assert_eq!(cfg.geo, GeoConfig::default());
+    }
+
+    #[test]
+    fn int_array_accessor_coerces_and_rejects() {
+        let raw = Raw::parse("xs = [3, 1, 2]\nbad = [1, \"a\"]\nscalar = 7\n").unwrap();
+        assert_eq!(raw.int_array("xs").unwrap(), vec![3, 1, 2]);
+        assert_eq!(raw.int_array("missing").unwrap(), Vec::<i64>::new());
+        assert!(raw.int_array("bad").is_err());
+        assert!(raw.int_array("scalar").is_err());
     }
 
     #[test]

@@ -19,7 +19,7 @@ use dvvstore::server::{
     LocalCluster,
 };
 use dvvstore::sim::Sim;
-use dvvstore::store::{FsyncPolicy, WalOptions};
+use dvvstore::store::{FsyncPolicy, ShardedBackend, WalOptions};
 use dvvstore::workload::{RandomWorkload, WorkloadSpec};
 
 fn cli() -> Command {
@@ -54,6 +54,12 @@ fn cli() -> Command {
                 .opt("read-quorum", "2", "read quorum R")
                 .opt("write-quorum", "2", "write quorum W")
                 .opt("shards", "64", "lock-striped shards per replica (rounded up to a power of two)")
+                .opt_optional(
+                    "zones",
+                    "comma-separated per-node zone (datacenter) list, e.g. 0,0,1,1 — \
+                     enables geo mode: zone-scoped quorums and async cross-DC \
+                     shipping; the list length overrides --nodes",
+                )
                 .opt_optional(
                     "data-dir",
                     "root directory for write-ahead-logged durable replicas \
@@ -201,11 +207,28 @@ fn cmd_sim(m: &Matches) -> dvvstore::Result<()> {
 }
 
 fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
-    let nodes: usize = m.get_parsed("nodes")?;
     let n: usize = m.get_parsed("replication")?;
     let r: usize = m.get_parsed("read-quorum")?;
     let w: usize = m.get_parsed("write-quorum")?;
     let shards: usize = m.get_parsed("shards")?;
+    let zones: Option<Vec<usize>> = match m.get("zones") {
+        Some(raw) => Some(
+            raw.split(',')
+                .map(|z| {
+                    z.trim().parse::<usize>().map_err(|_| {
+                        dvvstore::Error::Config(format!(
+                            "--zones: cannot parse {z:?} as a zone id (want e.g. 0,0,1,1)"
+                        ))
+                    })
+                })
+                .collect::<dvvstore::Result<_>>()?,
+        ),
+        None => None,
+    };
+    let nodes: usize = match &zones {
+        Some(z) => z.len(),
+        None => m.get_parsed("nodes")?,
+    };
     let addr = m.get_str("addr");
     let serve = ServeOptions {
         mode: match m.get_str("serve-mode") {
@@ -219,8 +242,10 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
                 fsync: FsyncPolicy::parse(m.get_str("fsync"))?,
                 segment_bytes: m.get_parsed("segment-bytes")?,
             };
-            let cluster =
-                Arc::new(LocalCluster::with_data_dir(nodes, n, r, w, shards, dir, opts)?);
+            let cluster = Arc::new(match &zones {
+                Some(z) => LocalCluster::with_data_dir_zoned(z, n, r, w, shards, dir, opts)?,
+                None => LocalCluster::with_data_dir(nodes, n, r, w, shards, dir, opts)?,
+            });
             println!(
                 "durability: WAL at {dir} (fsync={}, segment={}B, wal_bytes={})",
                 opts.fsync, opts.segment_bytes, cluster.wal_bytes()
@@ -228,7 +253,12 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
             run_serve_loop(addr, cluster, serve, nodes, n, r, w)
         }
         None => {
-            let cluster = Arc::new(LocalCluster::with_shards(nodes, n, r, w, shards)?);
+            let cluster = Arc::new(match &zones {
+                Some(z) => LocalCluster::with_backends_zoned(z, n, r, w, move |_| {
+                    ShardedBackend::with_shards(shards)
+                })?,
+                None => LocalCluster::with_shards(nodes, n, r, w, shards)?,
+            });
             run_serve_loop(addr, cluster, serve, nodes, n, r, w)
         }
     }
@@ -265,18 +295,27 @@ fn run_serve_loop<B: dvvstore::store::StorageBackend<dvvstore::kernel::mechs::Dv
          FAULT DROP <prob> | FAULT DELAY <us> | HEAL [node] | \
          RESTART <node> | WIPE <node>"
     );
+    if cluster.geo() {
+        println!(
+            "geo:      {} zones, zone-scoped quorums, async cross-DC shipper \
+             (ship_lag in STATS)",
+            cluster.zone_count()
+        );
+    }
     // serve until killed. Maintenance: drain parked sloppy-quorum hints
-    // every second (without this, hints from FAULT windows would
-    // accumulate until an operator HEALs); run a full anti-entropy round
-    // right after fault activity (pending hints) and otherwise only at a
-    // slow cadence, so an idle fault-free server does not pay all-pairs
-    // key diffing every second.
+    // and ship parked cross-DC updates every second (without this, hints
+    // from FAULT windows and geo writes' remote homes would accumulate
+    // until an operator HEALs); run a full anti-entropy round right
+    // after fault activity (pending hints or shipper backlog) and
+    // otherwise only at a slow cadence, so an idle fault-free server
+    // does not pay all-pairs key diffing every second.
     let mut tick = 0u64;
     loop {
         std::thread::sleep(std::time::Duration::from_secs(1));
         tick += 1;
-        let fault_activity = cluster.pending_hints() > 0;
+        let fault_activity = cluster.pending_hints() > 0 || cluster.ship_lag() > 0;
         cluster.drain_hints();
+        cluster.ship_round();
         if fault_activity || tick % 30 == 0 {
             cluster.anti_entropy_round();
         }

@@ -116,6 +116,10 @@ pub struct Metrics {
     /// of divergence *detection* under `antientropy.merkle`; 0 when the
     /// scan path is selected).
     pub ae_digests_compared: u64,
+    /// Cross-DC shipper batches sent (geo-replication; 0 when flat).
+    pub ship_batches: u64,
+    /// Key-states carried by cross-DC shipper batches.
+    pub ship_keys: u64,
 
     /// Concurrent updates silently destroyed (E6's headline anomaly):
     /// a value was removed although no surviving value causally covers it.
@@ -155,13 +159,15 @@ impl Metrics {
     /// One-line summary used by examples and benches.
     pub fn summary(&self) -> String {
         format!(
-            "ops={} (get={} put={} failed={}) msgs={} lost_updates={} \
+            "ops={} (get={} put={} failed={}) msgs={} ship={}/{} lost_updates={} \
              false_conc={} true_conc={} max_siblings={} metadata={}B",
             self.ops(),
             self.gets,
             self.puts,
             self.failed_ops,
             self.messages,
+            self.ship_batches,
+            self.ship_keys,
             self.lost_updates,
             self.false_concurrent_pairs,
             self.true_concurrent_pairs,

@@ -48,6 +48,11 @@ pub struct Fabric {
     /// Active partitions (the same [`BlockedPairs`] semantics the
     /// simulator's `NetModel` uses).
     blocked: RwLock<BlockedPairs>,
+    /// Per-node cumulative physical-clock offset (µs, signed) — the
+    /// [`Fault::ClockSkew`] axis. Routing never consults it; the
+    /// cluster's HLC stamping reads it to derive each node's injected
+    /// physical time ([`clock_skew_us`](Fabric::clock_skew_us)).
+    skew_us: RwLock<Vec<i64>>,
     /// Message-drop probability in parts-per-million.
     drop_ppm: AtomicU32,
     /// Fixed extra one-way delay injected per message (µs, capped).
@@ -70,6 +75,7 @@ impl Fabric {
         Fabric {
             up: RwLock::new((0..nodes).map(|_| AtomicBool::new(true)).collect()),
             blocked: RwLock::new(BlockedPairs::new()),
+            skew_us: RwLock::new(vec![0; nodes]),
             drop_ppm: AtomicU32::new(0),
             extra_delay_us: AtomicU64::new(0),
             rng: Mutex::new(Rng::new(seed)),
@@ -92,6 +98,10 @@ impl Fabric {
         let mut up = self.up.write().unwrap();
         while up.len() < nodes {
             up.push(AtomicBool::new(true));
+        }
+        let mut skew = self.skew_us.write().unwrap();
+        if skew.len() < nodes {
+            skew.resize(nodes, 0);
         }
     }
 
@@ -172,6 +182,22 @@ impl Fabric {
         self.set_extra_delay_us(extra_delay_us);
     }
 
+    /// Step one node's physical clock by a signed offset (µs),
+    /// **cumulative** with previous steps — the [`Fault::ClockSkew`]
+    /// semantics. Unknown ids are ignored (a schedule can race a join).
+    pub fn add_clock_skew(&self, node: NodeId, delta_us: i64) {
+        if let Some(s) = self.skew_us.write().unwrap().get_mut(node) {
+            *s += delta_us;
+        }
+    }
+
+    /// The node's cumulative physical-clock offset (µs; 0 for unknown
+    /// ids). The cluster derives a node's injected physical time as
+    /// `plan cursor + skew`, clamped at zero.
+    pub fn clock_skew_us(&self, node: NodeId) -> i64 {
+        self.skew_us.read().unwrap().get(node).copied().unwrap_or(0)
+    }
+
     /// Full reset: recover every node, heal every partition, restore
     /// clean links. (The plan cursor is *not* rewound; a drained plan
     /// stays drained.)
@@ -181,6 +207,7 @@ impl Fabric {
         }
         self.heal_partitions();
         self.degrade(0.0, 0);
+        self.skew_us.write().unwrap().fill(0);
     }
 
     // -----------------------------------------------------------------
@@ -271,6 +298,9 @@ impl Fabric {
             }
             Fault::Join { .. } => self.grow_to(self.node_count() + 1),
             Fault::Decommission { .. } => {}
+            Fault::ClockSkew { node, delta_us, .. } => {
+                self.add_clock_skew(*node, *delta_us)
+            }
             // state loss is a *storage* fault, not a link fault: the
             // cluster applies it to the node's backend in `advance_plan`;
             // links and liveness are untouched (pair with a crash window
@@ -495,6 +525,27 @@ mod tests {
         // the closure decided what to do: the fabric itself is untouched
         assert!(f.is_up(0));
         assert_eq!(f.node_count(), 2);
+    }
+
+    #[test]
+    fn clock_skew_accumulates_heals_and_survives_growth() {
+        let f = Fabric::new(2, 1);
+        assert_eq!(f.clock_skew_us(0), 0);
+        f.add_clock_skew(0, -300);
+        f.add_clock_skew(0, 100);
+        assert_eq!(f.clock_skew_us(0), -200, "skew is cumulative");
+        assert_eq!(f.clock_skew_us(1), 0, "other nodes untouched");
+        f.add_clock_skew(9, 50); // unknown id: ignored
+        assert_eq!(f.clock_skew_us(9), 0);
+        f.grow_to(4);
+        assert_eq!(f.clock_skew_us(0), -200, "growth keeps existing skew");
+        assert_eq!(f.clock_skew_us(3), 0, "joined nodes start unskewed");
+        let plan = FaultPlan::new().clock_skew_at(100, 1, -9_000);
+        f.advance(&plan, 150);
+        assert_eq!(f.clock_skew_us(1), -9_000, "ClockSkew fault applied");
+        f.heal_all();
+        assert_eq!(f.clock_skew_us(0), 0);
+        assert_eq!(f.clock_skew_us(1), 0, "heal_all resets the skew axis");
     }
 
     #[test]

@@ -34,6 +34,16 @@
 //! the start of every anti-entropy round) delivers hints once the home
 //! is reachable again. A [`crate::oracle::SharedOracle`] can be attached
 //! to audit every discarded version under real concurrency.
+//!
+//! Geo-replication (zone-aware clusters, built with
+//! [`LocalCluster::with_zones`]): replica placement spreads each key's
+//! preference list across datacenters, quorums are scoped to the
+//! coordinator's zone (a DC keeps serving while partitioned from the
+//! others), writes destined for remote-DC homes are parked for the
+//! async cross-DC shipper ([`LocalCluster::ship_round`]) instead of the
+//! synchronous fan-out, and every replica carries a hybrid logical
+//! clock ([`crate::clocks::Hlc`]) stamped from the fabric's fault
+//! cursor plus its injected per-node skew.
 
 pub mod fabric;
 pub(crate) mod ops;
@@ -48,7 +58,7 @@ use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::antientropy;
 use crate::clocks::vv::VersionVector;
-use crate::clocks::Actor;
+use crate::clocks::{Actor, Hlc, HlcTimestamp};
 use crate::cluster::ring::hash_str;
 use crate::cluster::{NodeId, Topology};
 use crate::coordinator::{GetOp, MergeBatch, PutOp, QuorumSpec};
@@ -106,6 +116,9 @@ pub struct GetAnswer {
 pub struct Node<B: StorageBackend<DvvMech> = ShardedBackend<DvvMech>> {
     id: usize,
     store: KeyStore<DvvMech, B>,
+    /// Hybrid logical clock; advances on geo clusters only (coordinator
+    /// stamps on PUT, receivers fold in shipped timestamps).
+    hlc: Mutex<Hlc>,
 }
 
 impl<B: StorageBackend<DvvMech>> Node<B> {
@@ -117,6 +130,11 @@ impl<B: StorageBackend<DvvMech>> Node<B> {
     /// The replica's versioned store.
     pub fn store(&self) -> &KeyStore<DvvMech, B> {
         &self.store
+    }
+
+    /// The replica's latest hybrid-logical-clock reading.
+    pub fn hlc_last(&self) -> HlcTimestamp {
+        self.hlc.lock().unwrap().last()
     }
 }
 
@@ -189,6 +207,11 @@ pub struct LocalCluster<B: StorageBackend<DvvMech> = ShardedBackend<DvvMech>> {
     mech: DvvMech,
     fabric: Fabric,
     hints: Mutex<Vec<Hint>>,
+    /// Cross-DC ship queue (geo clusters): writes whose home replica
+    /// lives in another zone wait here — `holder` is the origin
+    /// coordinator, `home` the remote-DC replica — until
+    /// [`ship_round`](LocalCluster::ship_round) streams them over.
+    ship: Mutex<Vec<Hint>>,
     oracle: OnceLock<Arc<SharedOracle>>,
     /// Serializes join/decommission (ops never take this).
     membership: Mutex<()>,
@@ -216,6 +239,16 @@ impl LocalCluster {
     ) -> Result<LocalCluster> {
         LocalCluster::with_backends(nodes, n, r, w, |_| ShardedBackend::with_shards(shards))
     }
+
+    /// Build a **zone-aware** (geo) cluster: `zones[i]` is node `i`'s
+    /// datacenter. One node per zone leads each preference list, quorums
+    /// scope to the coordinator's zone, and remote-DC homes receive
+    /// writes through the async shipper.
+    pub fn with_zones(zones: &[usize], n: usize, r: usize, w: usize) -> Result<LocalCluster> {
+        LocalCluster::with_backends_zoned(zones, n, r, w, |_| {
+            ShardedBackend::with_shards(crate::store::DEFAULT_SHARDS)
+        })
+    }
 }
 
 impl LocalCluster<DurableBackend<DvvMech>> {
@@ -237,7 +270,34 @@ impl LocalCluster<DurableBackend<DvvMech>> {
         dir: impl Into<std::path::PathBuf>,
         opts: WalOptions,
     ) -> Result<LocalCluster<DurableBackend<DvvMech>>> {
-        let dir = dir.into();
+        LocalCluster::with_data_dir_inner(nodes, None, n, r, w, shards, dir.into(), opts)
+    }
+
+    /// The zone-aware durable cluster (`zones[i]` = node `i`'s
+    /// datacenter) — what `dvv-store serve --zones` runs on.
+    pub fn with_data_dir_zoned(
+        zones: &[usize],
+        n: usize,
+        r: usize,
+        w: usize,
+        shards: usize,
+        dir: impl Into<std::path::PathBuf>,
+        opts: WalOptions,
+    ) -> Result<LocalCluster<DurableBackend<DvvMech>>> {
+        LocalCluster::with_data_dir_inner(zones.len(), Some(zones), n, r, w, shards, dir.into(), opts)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn with_data_dir_inner(
+        nodes: usize,
+        zones: Option<&[usize]>,
+        n: usize,
+        r: usize,
+        w: usize,
+        shards: usize,
+        dir: std::path::PathBuf,
+        opts: WalOptions,
+    ) -> Result<LocalCluster<DurableBackend<DvvMech>>> {
         // open the initial replicas *eagerly* so an unusable data dir
         // (permission denied, path is a file, …) surfaces as a clean
         // `Err` instead of a panic inside the infallible backend
@@ -246,7 +306,7 @@ impl LocalCluster<DurableBackend<DvvMech>> {
         let mut ready: std::collections::VecDeque<DurableBackend<DvvMech>> = (0..nodes)
             .map(|id| DurableBackend::open(dir.join(format!("node-{id}")), shards, opts))
             .collect::<Result<_>>()?;
-        LocalCluster::with_backends(nodes, n, r, w, move |id| {
+        LocalCluster::with_backends_inner(nodes, zones, n, r, w, move |id| {
             ready.pop_front().unwrap_or_else(|| {
                 DurableBackend::open(dir.join(format!("node-{id}")), shards, opts)
                     .expect("open durable backend for joined node")
@@ -264,25 +324,58 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         n: usize,
         r: usize,
         w: usize,
+        make: impl FnMut(usize) -> B + Send + 'static,
+    ) -> Result<LocalCluster<B>> {
+        LocalCluster::with_backends_inner(nodes, None, n, r, w, make)
+    }
+
+    /// Zone-aware variant of
+    /// [`with_backends`](LocalCluster::with_backends): `zones[i]` is
+    /// node `i`'s datacenter (the node count is `zones.len()`).
+    pub fn with_backends_zoned(
+        zones: &[usize],
+        n: usize,
+        r: usize,
+        w: usize,
+        make: impl FnMut(usize) -> B + Send + 'static,
+    ) -> Result<LocalCluster<B>> {
+        LocalCluster::with_backends_inner(zones.len(), Some(zones), n, r, w, make)
+    }
+
+    fn with_backends_inner(
+        nodes: usize,
+        zones: Option<&[usize]>,
+        n: usize,
+        r: usize,
+        w: usize,
         mut make: impl FnMut(usize) -> B + Send + 'static,
     ) -> Result<LocalCluster<B>> {
         let quorum = QuorumSpec::new(n.min(nodes), r.min(n), w.min(n))?;
+        let topology = match zones {
+            Some(z) => Topology::with_zones(z, 64)?,
+            None => Topology::new(nodes, 64)?,
+        };
         Ok(LocalCluster {
             nodes: RwLock::new(
                 (0..nodes)
                     .map(|id| {
-                        Arc::new(Node { id, store: KeyStore::with_backend(DvvMech, make(id)) })
+                        Arc::new(Node {
+                            id,
+                            store: KeyStore::with_backend(DvvMech, make(id)),
+                            hlc: Mutex::new(Hlc::new()),
+                        })
                     })
                     .collect(),
             ),
             make_backend: Mutex::new(Box::new(make)),
             blobs: BlobStore::new(16),
-            topology: Topology::new(nodes, 64)?,
+            topology,
             quorum,
             next_id: AtomicU64::new(1),
             mech: DvvMech,
             fabric: Fabric::new(nodes, 0xFA_B0),
             hints: Mutex::new(Vec::new()),
+            ship: Mutex::new(Vec::new()),
             oracle: OnceLock::new(),
             membership: Mutex::new(()),
             ae_use_merkle: AtomicBool::new(true),
@@ -382,6 +475,64 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
             .ok_or_else(|| crate::Error::Unavailable("no live replica to coordinate".into()))
     }
 
+    /// Zone-preferring coordinator pick: a live preference-list replica
+    /// in `zone` coordinates when one exists (a geo client talks to its
+    /// local DC), otherwise any live replica — what keeps both halves of
+    /// a DC partition serving their local clients.
+    fn pick_coordinator_in(&self, replicas: &[NodeId], zone: Option<usize>) -> Result<NodeId> {
+        if let Some(z) = zone {
+            let local = replicas
+                .iter()
+                .copied()
+                .find(|&n| self.topology.zone_of(n) == z && self.fabric.is_up(n));
+            if let Some(n) = local {
+                return Ok(n);
+            }
+        }
+        self.pick_coordinator(replicas)
+    }
+
+    /// Whether this cluster replicates across more than one zone.
+    pub fn geo(&self) -> bool {
+        self.topology.is_zone_aware() && self.topology.zone_count() > 1
+    }
+
+    /// Number of distinct zones among active members (1 when flat).
+    pub fn zone_count(&self) -> usize {
+        self.topology.zone_count()
+    }
+
+    /// The zone a node lives in (0 on flat clusters).
+    pub fn zone_of(&self, node: NodeId) -> usize {
+        self.topology.zone_of(node)
+    }
+
+    /// A node's physical-clock reading: the fabric's fault cursor plus
+    /// the node's injected skew ([`Fabric::add_clock_skew`]), floored at
+    /// zero — the HLC's physical input, so a `ClockSkew` fault exercises
+    /// exactly the backward-jump anomaly hybrid clocks absorb.
+    fn phys(&self, node: NodeId) -> u64 {
+        (self.fabric.cursor_us() as i64 + self.fabric.clock_skew_us(node)).max(0) as u64
+    }
+
+    /// Scope the quorum to the coordinator's zone: R and W are capped at
+    /// the number of preference-list replicas in that zone (floored at
+    /// one — the coordinator itself). Flat clusters keep the global
+    /// quorum untouched.
+    fn scoped_quorum(&self, replicas: &[NodeId], coordinator: NodeId) -> QuorumSpec {
+        if !self.geo() {
+            return self.quorum;
+        }
+        let z = self.topology.zone_of(coordinator);
+        let local = replicas
+            .iter()
+            .filter(|&&n| self.topology.zone_of(n) == z)
+            .count()
+            .max(1);
+        QuorumSpec::new(self.quorum.n, self.quorum.r.min(local), self.quorum.w.min(local))
+            .expect("zone-scoped quorum stays valid")
+    }
+
     /// Coordinator-local PUT (§4.1 update + sync under one shard lock),
     /// with oracle drop-auditing when attached.
     fn write_at_node(
@@ -417,8 +568,17 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// repair push are fabric-routed; unreachable replicas simply do not
     /// reply, and fewer than `R` replies is a quorum failure.
     pub fn get(&self, key: &str) -> Result<GetAnswer> {
+        self.get_in_zone(key, None)
+    }
+
+    /// GET with a preferred coordinator zone: a live preference-list
+    /// replica in `zone` coordinates when one exists, and the read
+    /// quorum scopes to the coordinator's zone
+    /// ([`scoped_quorum`](LocalCluster::scoped_quorum)). `None` (and any
+    /// flat cluster) behaves exactly like [`get`](LocalCluster::get).
+    pub fn get_in_zone(&self, key: &str, zone: Option<usize>) -> Result<GetAnswer> {
         let k = hash_str(key);
-        with_scratch(|replicas, reached| self.get_at(k, replicas, reached))
+        with_scratch(|replicas, reached| self.get_at(k, zone, replicas, reached))
     }
 
     /// The GET body, working in the caller's scratch buffers (`replicas`
@@ -427,13 +587,15 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     fn get_at(
         &self,
         k: Key,
+        zone: Option<usize>,
         replicas: &mut Vec<NodeId>,
         reached: &mut Vec<NodeId>,
     ) -> Result<GetAnswer> {
         self.topology.replicas_into(k, self.quorum.n, replicas);
         let nodes = self.nodes.read().unwrap();
-        let coordinator = self.pick_coordinator(replicas)?;
-        let mut op: GetOp<DvvMech> = GetOp::new(self.quorum);
+        let coordinator = self.pick_coordinator_in(replicas, zone)?;
+        let quorum = self.scoped_quorum(replicas, coordinator);
+        let mut op: GetOp<DvvMech> = GetOp::new(quorum);
         let mut answer = None;
         for &node in replicas.iter() {
             // a sub-read is a round trip: request out, state reply back
@@ -451,7 +613,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         }
         let res = answer.ok_or(crate::Error::QuorumNotMet {
             got: op.replies(),
-            needed: self.quorum.r,
+            needed: quorum.r,
         })?;
         // read repair with the fully merged state, on every replica that
         // answered (the push is one more fabric-routed message)
@@ -477,7 +639,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// oracle-verified runs should write through
     /// [`put_traced`](LocalCluster::put_traced) exclusively.
     pub fn put(&self, key: &str, value: Vec<u8>, context: &[u8]) -> Result<()> {
-        self.put_inner(key, value, context, Actor::client(0), None).map(|_| ())
+        self.put_inner(key, value, context, Actor::client(0), None, None).map(|_| ())
     }
 
     /// Traced PUT for the client API: like
@@ -500,7 +662,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         client: Actor,
         observed: &[u64],
     ) -> Result<(u64, Option<Vec<u8>>)> {
-        let (id, state) = self.put_inner(key, value, context, client, Some(observed))?;
+        let (id, state) = self.put_inner(key, value, context, client, Some(observed), None)?;
         let (vals, post_ctx) = self.mech.read(&state);
         let post = if vals.len() == 1 && vals[0].id == id {
             let mut bytes = Vec::new();
@@ -532,7 +694,24 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         client: Actor,
         observed: &[u64],
     ) -> Result<u64> {
-        self.put_inner(key, value, context, client, Some(observed)).map(|(id, _)| id)
+        self.put_inner(key, value, context, client, Some(observed), None).map(|(id, _)| id)
+    }
+
+    /// Traced PUT with a preferred coordinator zone: the write commits
+    /// on a quorum scoped to the coordinator's zone and remote-DC homes
+    /// are parked for the async shipper — the geo write path. `None`
+    /// (and any flat cluster) behaves exactly like
+    /// [`put_traced`](LocalCluster::put_traced).
+    pub fn put_traced_in_zone(
+        &self,
+        key: &str,
+        value: Vec<u8>,
+        context: &[u8],
+        client: Actor,
+        observed: &[u64],
+        zone: Option<usize>,
+    ) -> Result<u64> {
+        self.put_inner(key, value, context, client, Some(observed), zone).map(|(id, _)| id)
     }
 
     /// Shared PUT path; `observed: None` marks an untraced write that an
@@ -547,9 +726,10 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         context: &[u8],
         client: Actor,
         observed: Option<&[u64]>,
+        zone: Option<usize>,
     ) -> Result<(u64, DvvState)> {
         let k = hash_str(key);
-        with_scratch(|walk, aux| self.put_at(k, value, context, client, observed, walk, aux))
+        with_scratch(|walk, aux| self.put_at(k, value, context, client, observed, zone, walk, aux))
     }
 
     /// The PUT body, working in the caller's scratch buffers: `walk`
@@ -565,6 +745,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         context: &[u8],
         client: Actor,
         observed: Option<&[u64]>,
+        zone: Option<usize>,
         walk: &mut Vec<NodeId>,
         aux: &mut Vec<NodeId>,
     ) -> Result<(u64, DvvState)> {
@@ -578,7 +759,10 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         self.topology.replicas_into(k, self.quorum.n, walk);
         let home_count = walk.len();
         let nodes = self.nodes.read().unwrap();
-        let coordinator = self.pick_coordinator(&walk[..home_count])?;
+        let coordinator = self.pick_coordinator_in(&walk[..home_count], zone)?;
+        let quorum = self.scoped_quorum(&walk[..home_count], coordinator);
+        let geo = self.geo();
+        let my_zone = self.topology.zone_of(coordinator);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let val = Val::new(id, value.len() as u32);
         self.blobs.insert(id, value);
@@ -591,13 +775,31 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         let meta = WriteMeta { client, physical_us: 0, client_seq: None };
         // §4.1: update + sync at the coordinator, under one shard lock...
         let state = self.write_at_node(&nodes[coordinator], k, &ctx, val, &meta);
+        if geo {
+            // stamp the coordinator's hybrid clock (its skewed physical
+            // reading dominates; the counter absorbs backward jumps)
+            let pt = self.phys(coordinator);
+            nodes[coordinator].hlc.lock().unwrap().now(pt);
+        }
         // ...then replicate the synced state to each home replica. A PUT
         // carries exactly one key, so this is a direct per-peer merge;
         // multi-key fan-out (anti-entropy) goes through `MergeBatch`.
-        let mut op = PutOp::new(self.quorum);
+        let mut op = PutOp::new(quorum);
         let mut done = op.satisfied_immediately();
         for &node in walk.iter().take(home_count) {
             if node == coordinator {
+                continue;
+            }
+            if geo && self.topology.zone_of(node) != my_zone {
+                // a remote-DC home: parked for the async cross-DC
+                // shipper instead of the synchronous fan-out — it
+                // neither counts toward W nor takes a stand-in
+                self.ship.lock().unwrap().push(Hint {
+                    holder: coordinator,
+                    home: node,
+                    key: k,
+                    state: state.clone(),
+                });
                 continue;
             }
             if self.fabric.deliver(coordinator, node) {
@@ -677,7 +879,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         if done {
             Ok((id, state))
         } else {
-            Err(crate::Error::QuorumNotMet { got: op.acks(), needed: self.quorum.w })
+            Err(crate::Error::QuorumNotMet { got: op.acks(), needed: quorum.w })
         }
     }
 
@@ -733,6 +935,87 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         self.hints.lock().unwrap().len()
     }
 
+    /// One cross-DC shipper round (geo clusters): stream every parked
+    /// remote-DC write from its origin coordinator to its home replica —
+    /// each delivery is a fabric-routed message, the receiver folds the
+    /// shipper's HLC timestamp into its own clock, then merges the
+    /// state. Undeliverable entries stay parked (a partitioned DC's
+    /// backlog drains on heal); entries whose home retired mid-park
+    /// re-route through the hint machinery. Returns the number
+    /// delivered. Run automatically at the start of every
+    /// [`anti_entropy_round`](LocalCluster::anti_entropy_round).
+    pub fn ship_round(&self) -> usize {
+        let pending: Vec<Hint> = std::mem::take(&mut *self.ship.lock().unwrap());
+        if pending.is_empty() {
+            return 0;
+        }
+        let nodes = self.nodes.read().unwrap();
+        let mut shipped = 0;
+        let mut parked = Vec::new();
+        for entry in pending {
+            if !self.topology.is_member(entry.home) {
+                // home retired while parked: the hint path re-routes the
+                // state to the key's current homes
+                self.hints.lock().unwrap().push(entry);
+                continue;
+            }
+            if self.fabric.deliver(entry.holder, entry.home) {
+                let ts = nodes[entry.holder].hlc.lock().unwrap().now(self.phys(entry.holder));
+                nodes[entry.home].hlc.lock().unwrap().recv(self.phys(entry.home), ts);
+                self.merge_at_node(&nodes[entry.home], entry.key, &entry.state);
+                shipped += 1;
+            } else {
+                parked.push(entry);
+            }
+        }
+        if !parked.is_empty() {
+            self.ship.lock().unwrap().append(&mut parked);
+        }
+        shipped
+    }
+
+    /// Cross-DC writes still waiting in the ship queue (the
+    /// `STATS ship_lag=` figure; 0 on flat clusters).
+    pub fn ship_lag(&self) -> usize {
+        self.ship.lock().unwrap().len()
+    }
+
+    /// Apply a cross-DC shipper batch received **over the wire**
+    /// ([`protocol::OP_SHIP`]): each encoded DVV state is decoded
+    /// strictly and merged at every home replica of its key
+    /// (oracle-audited), and every touched home folds the remote
+    /// shipper's HLC stamp into its own clock first — receive before
+    /// merge, so the receiving DC's clocks dominate everything the batch
+    /// carried. Returns the number of states applied and the largest
+    /// post-merge HLC reading. A malformed state rejects the whole
+    /// batch before anything merges: a half-decodable batch must not
+    /// half-apply.
+    pub fn apply_ship(
+        &self,
+        ts: HlcTimestamp,
+        entries: &[(Key, Vec<u8>)],
+    ) -> Result<(u64, HlcTimestamp)> {
+        let mut states = Vec::with_capacity(entries.len());
+        for (key, bytes) in entries {
+            let mut pos = 0;
+            let state = <DvvMech as crate::kernel::DurableMechanism>::decode_state(bytes, &mut pos)?;
+            crate::clocks::encoding::expect_end(bytes, pos)?;
+            states.push((*key, state));
+        }
+        let nodes = self.nodes.read().unwrap();
+        let mut latest = ts;
+        let mut homes: Vec<NodeId> = Vec::new();
+        for (key, state) in &states {
+            self.topology.replicas_into(*key, self.quorum.n, &mut homes);
+            for &home in homes.iter() {
+                let reading = nodes[home].hlc.lock().unwrap().recv(self.phys(home), ts);
+                latest = latest.max(reading);
+                self.merge_at_node(&nodes[home], *key, state);
+            }
+        }
+        Ok((states.len() as u64, latest))
+    }
+
     /// One push–pull anti-entropy round: drain deliverable hints, then
     /// reconcile every mutually-reachable replica pair, diffing shard by
     /// shard through the bulk sync path and accumulating the merged
@@ -745,6 +1028,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// number of key reconciliations applied (per pair).
     pub fn anti_entropy_round(&self) -> usize {
         self.drain_hints();
+        self.ship_round();
         let merkle = self.ae_merkle();
         let members = self.topology.members();
         let nodes = self.nodes.read().unwrap();
@@ -799,17 +1083,27 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// dropped transfer is healed by later anti-entropy rounds). Returns
     /// `(new node id, new epoch)`.
     pub fn join_node(&self) -> (NodeId, u64) {
+        self.join_node_in_zone(0)
+    }
+
+    /// [`join_node`](LocalCluster::join_node) into an explicit zone —
+    /// how a geo cluster grows a specific datacenter.
+    pub fn join_node_in_zone(&self, zone: usize) -> (NodeId, u64) {
         let _serial = self.membership.lock().unwrap();
         let id = {
             let mut nodes = self.nodes.write().unwrap();
             let id = nodes.len();
             let backend = (self.make_backend.lock().unwrap())(id);
-            nodes.push(Arc::new(Node { id, store: KeyStore::with_backend(DvvMech, backend) }));
+            nodes.push(Arc::new(Node {
+                id,
+                store: KeyStore::with_backend(DvvMech, backend),
+                hlc: Mutex::new(Hlc::new()),
+            }));
             id
         };
         // grow the fabric before the topology can route to the id
         self.fabric.grow_to(id + 1);
-        let (tid, epoch) = self.topology.join();
+        let (tid, epoch) = self.topology.join_in_zone(zone);
         debug_assert_eq!(tid, id, "node table and topology agree on dense ids");
         self.rebalance_join(id);
         (id, epoch)
@@ -1441,6 +1735,93 @@ mod tests {
             assert_eq!(ans.values, vec![b"v".to_vec()]);
         }
         assert_eq!(c.wal_bytes(), 0, "volatile backends report no wal bytes");
+    }
+
+    #[test]
+    fn geo_put_parks_remote_homes_then_ship_round_delivers() {
+        // N = 4 over [0,0,1,1]: every node is a home, two per zone
+        let c = LocalCluster::with_zones(&[0, 0, 1, 1], 4, 1, 1).unwrap();
+        assert!(c.geo());
+        assert_eq!(c.zone_count(), 2);
+        let id = c
+            .put_traced_in_zone("k", b"v".to_vec(), &[], Actor::client(0), &[], Some(0))
+            .unwrap();
+        assert!(id > 0);
+        // both zone-1 homes were parked, not fanned out synchronously
+        assert_eq!(c.ship_lag(), 2);
+        let k = hash_str("k");
+        assert_eq!(c.node(2).store().sibling_count(k), 0);
+        assert_eq!(c.node(3).store().sibling_count(k), 0);
+        assert_eq!(c.ship_round(), 2);
+        assert_eq!(c.ship_lag(), 0);
+        for n in 0..4 {
+            assert_eq!(c.node(n).store().sibling_count(k), 1, "node {n} has the write");
+        }
+        // the receiving DC's clocks saw the shipped timestamp
+        assert!(c.node(2).hlc_last() > HlcTimestamp::default());
+        assert_eq!(c.get_in_zone("k", Some(1)).unwrap().values, vec![b"v".to_vec()]);
+    }
+
+    #[test]
+    fn dc_partition_serves_both_halves_then_heals_and_converges() {
+        let c = LocalCluster::with_zones(&[0, 0, 0, 1, 1, 1], 3, 2, 2).unwrap();
+        let oracle = Arc::new(SharedOracle::new());
+        c.attach_oracle(Arc::clone(&oracle));
+        c.fabric().partition_groups(&[0, 1, 2], &[3, 4, 5]);
+        // each DC keeps serving its local clients through its own
+        // zone-scoped quorum while fully cut off from the other
+        let (a, b) = (Actor::client(0), Actor::client(1));
+        for i in 0..20 {
+            c.put_traced_in_zone(&format!("a{i}"), b"a".to_vec(), &[], a, &[], Some(0)).unwrap();
+            c.put_traced_in_zone(&format!("b{i}"), b"b".to_vec(), &[], b, &[], Some(1)).unwrap();
+            assert_eq!(c.get_in_zone(&format!("a{i}"), Some(0)).unwrap().values.len(), 1);
+            assert_eq!(c.get_in_zone(&format!("b{i}"), Some(1)).unwrap().values.len(), 1);
+        }
+        c.fabric().heal_all();
+        let mut rounds = 0;
+        while c.anti_entropy_round() > 0 {
+            rounds += 1;
+            assert!(rounds < 32, "anti-entropy failed to quiesce after heal");
+        }
+        assert_eq!(c.ship_lag(), 0, "heal drained the cross-DC backlog");
+        let roots = c.merkle_roots();
+        assert!(roots.iter().all(|&(_, r)| r == roots[0].1), "members converged");
+        assert_eq!(oracle.lost_updates(), 0, "no acked update was lost");
+        for i in 0..20 {
+            assert_eq!(c.get(&format!("a{i}")).unwrap().values, vec![b"a".to_vec()]);
+            assert_eq!(c.get(&format!("b{i}")).unwrap().values, vec![b"b".to_vec()]);
+        }
+    }
+
+    #[test]
+    fn geo_hlc_stays_monotone_under_backward_fabric_skew() {
+        let c = LocalCluster::with_zones(&[0, 1], 2, 1, 1).unwrap();
+        let plan = FaultPlan::new().clock_skew_at(50, 0, -5_000_000);
+        c.advance_plan(&plan, 100);
+        assert!(c.fabric().clock_skew_us(0) < 0, "skew fault reached the fabric");
+        // node 0 (zone 0) coordinates every put; its physical reading is
+        // pinned at 0 by the huge backward jump, so only the HLC counter
+        // can carry order — and it must
+        let mut prev = c.node(0).hlc_last();
+        for i in 0..10 {
+            c.put_traced_in_zone(&format!("k{i}"), b"v".to_vec(), &[], Actor::client(0), &[], Some(0))
+                .unwrap();
+            let now = c.node(0).hlc_last();
+            assert!(now > prev, "HLC went backwards: {now} <= {prev}");
+            prev = now;
+        }
+    }
+
+    #[test]
+    fn flat_cluster_never_touches_the_ship_queue() {
+        let c = LocalCluster::new(3, 3, 2, 2).unwrap();
+        assert!(!c.geo());
+        assert_eq!(c.zone_count(), 1);
+        for i in 0..10 {
+            c.put(&format!("k{i}"), b"v".to_vec(), &[]).unwrap();
+        }
+        assert_eq!(c.ship_lag(), 0);
+        assert_eq!(c.ship_round(), 0);
     }
 
     #[test]

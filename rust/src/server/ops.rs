@@ -143,14 +143,16 @@ pub(crate) fn exec_text_line<B: StorageBackend<DvvMech>>(
             Err(e) => format!("ERR {e}\n"),
         },
         Ok(Request::Stats) => format!(
-            "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={} wal_bytes={} merkle_root={}\n",
+            "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={} wal_bytes={} merkle_root={} zones={} ship_lag={}\n",
             cluster.node_count(),
             cluster.shard_count(),
             cluster.metadata_bytes(),
             cluster.pending_hints(),
             cluster.epoch(),
             cluster.wal_bytes(),
-            cluster.merkle_root()
+            cluster.merkle_root(),
+            cluster.zone_count(),
+            cluster.ship_lag()
         ),
         Ok(Request::Fault(cmd)) => apply_fault(cluster, cmd),
         Ok(Request::Heal { node }) => apply_heal(cluster, node),
@@ -253,6 +255,8 @@ pub(crate) fn exec_bin_request<B: StorageBackend<DvvMech>>(
                 cluster.epoch(),
                 cluster.wal_bytes(),
                 cluster.merkle_root(),
+                cluster.zone_count() as u64,
+                cluster.ship_lag() as u64,
             ),
         ),
         Ok(BinRequest::Join) => {
@@ -273,6 +277,12 @@ pub(crate) fn exec_bin_request<B: StorageBackend<DvvMech>>(
             Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
         },
         Ok(BinRequest::Topology) => (protocol::OP_TOPOLOGY_REPLY, topology_frame(cluster)),
+        Ok(BinRequest::Ship { zone: _, ts, entries }) => match cluster.apply_ship(ts, &entries) {
+            Ok((applied, hlc)) => {
+                (protocol::OP_SHIP_ACK, protocol::encode_ship_ack(applied, &hlc))
+            }
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        },
         Ok(BinRequest::Admin { line }) => match parse_request(&line) {
             Ok(Request::Fault(cmd)) => admin_status(apply_fault(cluster, cmd)),
             Ok(Request::Heal { node }) => admin_status(apply_heal(cluster, node)),

@@ -30,7 +30,7 @@
 //! -> PUT <key> <value-hex> [ctx-hex]
 //! <- OK
 //! -> STATS
-//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h> epoch=<e> wal_bytes=<w> merkle_root=<m>
+//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h> epoch=<e> wal_bytes=<w> merkle_root=<m> zones=<z> ship_lag=<l>
 //! -> QUIT
 //! <- BYE
 //! ```
@@ -356,12 +356,15 @@ pub const MAGIC: [u8; 4] = *b"DVV2";
 /// [`OP_STATS_REPLY`] with a fifth (epoch) field and added the
 /// membership opcodes, to 4 when the durability revision appended a
 /// sixth (`wal_bytes`) field, and to 5 when the hash-tree anti-entropy
-/// revision appended a seventh (`merkle_root`): the stats payload
-/// decodes strictly (`expect_end`), so an older binary would misparse
-/// the longer reply mid-session — version negotiation turns that silent
-/// skew into a clean hello-time rejection. (The `DVV2` magic names the
-/// protocol family, not this byte.)
-pub const VERSION: u8 = 5;
+/// revision appended a seventh (`merkle_root`), and to 6 when the
+/// geo-replication revision appended an eighth (`zones`) and ninth
+/// (`ship_lag`) field and added the cross-DC shipping opcodes
+/// ([`OP_SHIP`] / [`OP_SHIP_ACK`]): the stats payload decodes strictly
+/// (`expect_end`), so an older binary would misparse the longer reply
+/// mid-session — version negotiation turns that silent skew into a
+/// clean hello-time rejection. (The `DVV2` magic names the protocol
+/// family, not this byte.)
+pub const VERSION: u8 = 6;
 
 /// Upper bound on a frame's length field (16 MiB). A header promising
 /// more is rejected before any allocation.
@@ -406,6 +409,11 @@ pub const OP_DECOMMISSION: u8 = 0x07;
 /// an [`OP_TOPOLOGY_REPLY`] — how a long-lived client discovers and
 /// refreshes routing across epoch bumps mid-session.
 pub const OP_TOPOLOGY: u8 = 0x08;
+/// Request opcode: a cross-DC shipper batch (geo-replication). Payload:
+/// `[zone][hlc l][hlc c][count]` then `[key][slen][state]` per entry —
+/// the origin zone, the shipper's hybrid-logical-clock stamp, and the
+/// encoded DVV states to merge. Replies with [`OP_SHIP_ACK`].
+pub const OP_SHIP: u8 = 0x09;
 
 /// Response opcode: negotiation ack. Payload: the accepted version byte.
 pub const OP_HELLO_ACK: u8 = 0x80;
@@ -420,7 +428,7 @@ pub const OP_PUT_OK: u8 = 0x82;
 /// Response opcode: generic success (admin commands). Empty payload.
 pub const OP_OK: u8 = 0x83;
 /// Response opcode: statistics. Payload:
-/// `[nodes][shards][metadata_bytes][hints][epoch][wal_bytes][merkle_root]`
+/// `[nodes][shards][metadata_bytes][hints][epoch][wal_bytes][merkle_root][zones][ship_lag]`
 /// varints.
 pub const OP_STATS_REPLY: u8 = 0x84;
 /// Response opcode: membership view (answer to [`OP_JOIN`],
@@ -434,6 +442,10 @@ pub const OP_TOPOLOGY_REPLY: u8 = 0x87;
 pub const OP_ERR: u8 = 0x85;
 /// Response opcode: goodbye (answer to [`OP_QUIT`]). Empty payload.
 pub const OP_BYE: u8 = 0x86;
+/// Response opcode: shipper-batch ack (answer to [`OP_SHIP`]). Payload:
+/// `[applied][hlc l][hlc c]` — the number of states merged and the
+/// receiving node's post-merge hybrid-logical-clock reading.
+pub const OP_SHIP_ACK: u8 = 0x88;
 
 /// A parsed binary (v2) request frame.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -473,6 +485,16 @@ pub enum BinRequest {
     },
     /// Current membership view.
     Topology,
+    /// A cross-DC shipper batch (geo-replication): HLC-stamped encoded
+    /// DVV states streamed from a remote datacenter for merging.
+    Ship {
+        /// Origin datacenter of the batch.
+        zone: u64,
+        /// The shipper's hybrid-logical-clock stamp at send time.
+        ts: crate::clocks::HlcTimestamp,
+        /// `(key, encoded DVV state)` entries to merge.
+        entries: Vec<(u64, Vec<u8>)>,
+    },
     /// Close the connection.
     Quit,
 }
@@ -564,6 +586,19 @@ pub fn encode_bin_request(req: &BinRequest) -> (u8, Vec<u8>) {
             (OP_DECOMMISSION, p)
         }
         BinRequest::Topology => (OP_TOPOLOGY, Vec::new()),
+        BinRequest::Ship { zone, ts, entries } => {
+            let states: usize = entries.iter().map(|(_, s)| s.len() + 16).sum();
+            let mut p = Vec::with_capacity(states + 24);
+            put_varint(&mut p, *zone);
+            crate::clocks::hlc::encode_hlc(ts, &mut p);
+            put_varint(&mut p, entries.len() as u64);
+            for (key, state) in entries {
+                put_varint(&mut p, *key);
+                put_varint(&mut p, state.len() as u64);
+                p.extend_from_slice(state);
+            }
+            (OP_SHIP, p)
+        }
         BinRequest::Quit => (OP_QUIT, Vec::new()),
     }
 }
@@ -608,6 +643,22 @@ pub fn decode_bin_request(opcode: u8, payload: &[u8]) -> Result<BinRequest> {
         OP_TOPOLOGY => {
             expect_end(payload, 0)?;
             Ok(BinRequest::Topology)
+        }
+        OP_SHIP => {
+            let mut pos = 0;
+            let zone = get_varint(payload, &mut pos)?;
+            let ts = crate::clocks::hlc::decode_hlc(payload, &mut pos)?;
+            let count = get_len(payload, &mut pos)?;
+            // no `with_capacity(count)`: a hostile count must not pick
+            // the allocation size (same rule as `decode_values`)
+            let mut entries = Vec::new();
+            for _ in 0..count {
+                let key = get_varint(payload, &mut pos)?;
+                let slen = get_len(payload, &mut pos)?;
+                entries.push((key, get_bytes(payload, &mut pos, slen)?.to_vec()));
+            }
+            expect_end(payload, pos)?;
+            Ok(BinRequest::Ship { zone, ts, entries })
         }
         OP_QUIT => {
             expect_end(payload, 0)?;
@@ -677,8 +728,10 @@ pub fn encode_stats_reply(
     epoch: u64,
     wal_bytes: u64,
     merkle_root: u64,
+    zones: u64,
+    ship_lag: u64,
 ) -> Vec<u8> {
-    let mut p = Vec::with_capacity(32);
+    let mut p = Vec::with_capacity(40);
     put_varint(&mut p, nodes);
     put_varint(&mut p, shards);
     put_varint(&mut p, metadata_bytes);
@@ -686,14 +739,18 @@ pub fn encode_stats_reply(
     put_varint(&mut p, epoch);
     put_varint(&mut p, wal_bytes);
     put_varint(&mut p, merkle_root);
+    put_varint(&mut p, zones);
+    put_varint(&mut p, ship_lag);
     p
 }
 
 /// Decode an [`OP_STATS_REPLY`] payload into
 /// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes,
-/// merkle_root)`.
+/// merkle_root, zones, ship_lag)`.
 #[allow(clippy::type_complexity)]
-pub fn decode_stats_reply(payload: &[u8]) -> Result<(u64, u64, u64, u64, u64, u64, u64)> {
+pub fn decode_stats_reply(
+    payload: &[u8],
+) -> Result<(u64, u64, u64, u64, u64, u64, u64, u64, u64)> {
     let mut pos = 0;
     let nodes = get_varint(payload, &mut pos)?;
     let shards = get_varint(payload, &mut pos)?;
@@ -702,8 +759,28 @@ pub fn decode_stats_reply(payload: &[u8]) -> Result<(u64, u64, u64, u64, u64, u6
     let epoch = get_varint(payload, &mut pos)?;
     let wal_bytes = get_varint(payload, &mut pos)?;
     let merkle_root = get_varint(payload, &mut pos)?;
+    let zones = get_varint(payload, &mut pos)?;
+    let ship_lag = get_varint(payload, &mut pos)?;
     expect_end(payload, pos)?;
-    Ok((nodes, shards, metadata_bytes, hints, epoch, wal_bytes, merkle_root))
+    Ok((nodes, shards, metadata_bytes, hints, epoch, wal_bytes, merkle_root, zones, ship_lag))
+}
+
+/// Encode an [`OP_SHIP_ACK`] payload: states applied + the receiver's
+/// post-merge HLC reading.
+pub fn encode_ship_ack(applied: u64, ts: &crate::clocks::HlcTimestamp) -> Vec<u8> {
+    let mut p = Vec::with_capacity(24);
+    put_varint(&mut p, applied);
+    crate::clocks::hlc::encode_hlc(ts, &mut p);
+    p
+}
+
+/// Decode an [`OP_SHIP_ACK`] payload into `(applied, hlc)`.
+pub fn decode_ship_ack(payload: &[u8]) -> Result<(u64, crate::clocks::HlcTimestamp)> {
+    let mut pos = 0;
+    let applied = get_varint(payload, &mut pos)?;
+    let ts = crate::clocks::hlc::decode_hlc(payload, &mut pos)?;
+    expect_end(payload, pos)?;
+    Ok((applied, ts))
 }
 
 /// Encode an [`OP_TOPOLOGY_REPLY`] payload:
@@ -881,6 +958,16 @@ mod tests {
             BinRequest::Join,
             BinRequest::Decommission { node: 3 },
             BinRequest::Topology,
+            BinRequest::Ship {
+                zone: 1,
+                ts: crate::clocks::HlcTimestamp::new(123_456, 7),
+                entries: vec![(42, vec![1, 2, 3]), (99, Vec::new())],
+            },
+            BinRequest::Ship {
+                zone: 0,
+                ts: crate::clocks::HlcTimestamp::default(),
+                entries: Vec::new(),
+            },
             BinRequest::Quit,
         ];
         for req in cases {
@@ -920,6 +1007,36 @@ mod tests {
         let mut long = payload.clone();
         long.push(0);
         assert!(decode_bin_request(OP_PUT, &long).is_err());
+        // every strict prefix of a SHIP batch must be rejected, and so
+        // must trailing garbage — a half-delivered cross-DC batch can
+        // never half-apply
+        let (_, ship) = encode_bin_request(&BinRequest::Ship {
+            zone: 1,
+            ts: crate::clocks::HlcTimestamp::new(1 << 40, 3),
+            entries: vec![(7, vec![9, 9]), (8, vec![1])],
+        });
+        for cut in 0..ship.len() {
+            assert!(
+                decode_bin_request(OP_SHIP, &ship[..cut]).is_err(),
+                "ship prefix of len {cut} must be rejected"
+            );
+        }
+        let mut long = ship.clone();
+        long.push(0);
+        assert!(decode_bin_request(OP_SHIP, &long).is_err());
+    }
+
+    #[test]
+    fn ship_ack_roundtrips_and_rejects_truncation() {
+        let ts = crate::clocks::HlcTimestamp::new(987_654, 2);
+        let p = encode_ship_ack(3, &ts);
+        assert_eq!(decode_ship_ack(&p).unwrap(), (3, ts));
+        for cut in 0..p.len() {
+            assert!(decode_ship_ack(&p[..cut]).is_err(), "ack prefix {cut}");
+        }
+        let mut long = p.clone();
+        long.push(1);
+        assert!(decode_ship_ack(&long).is_err());
     }
 
     #[test]
@@ -971,9 +1088,12 @@ mod tests {
         let p = encode_put_ok(99, &token);
         assert_eq!(decode_put_ok(&p).unwrap(), (99, token));
 
-        let p = encode_stats_reply(3, 64, 12345, 2, 7, 4096, 0xDEAD_BEEF);
-        assert_eq!(decode_stats_reply(&p).unwrap(), (3, 64, 12345, 2, 7, 4096, 0xDEAD_BEEF));
-        // truncating any suffix (e.g. a pre-v5 six-field reply) is a
+        let p = encode_stats_reply(3, 64, 12345, 2, 7, 4096, 0xDEAD_BEEF, 2, 5);
+        assert_eq!(
+            decode_stats_reply(&p).unwrap(),
+            (3, 64, 12345, 2, 7, 4096, 0xDEAD_BEEF, 2, 5)
+        );
+        // truncating any suffix (e.g. a pre-v6 seven-field reply) is a
         // strict decode error, which is why VERSION was bumped
         for cut in 0..p.len() {
             assert!(decode_stats_reply(&p[..cut]).is_err(), "prefix {cut} decoded");

@@ -85,6 +85,19 @@ pub enum Fault {
         /// Which node.
         node: NodeId,
     },
+    /// Step one node's **physical clock** by a signed offset — the
+    /// GentleRain+ anomaly driver. A negative `delta_us` makes the
+    /// node's injected physical time run behind, which is exactly the
+    /// case the hybrid logical clock ([`crate::clocks::Hlc`]) must stay
+    /// monotone through. Cumulative: two skews add.
+    ClockSkew {
+        /// When (simulated µs).
+        at: u64,
+        /// Which node.
+        node: NodeId,
+        /// Signed offset added to the node's physical clock (µs).
+        delta_us: i64,
+    },
 }
 
 impl Fault {
@@ -99,7 +112,8 @@ impl Fault {
             | Fault::Join { at }
             | Fault::Decommission { at, .. }
             | Fault::Restart { at, .. }
-            | Fault::Wipe { at, .. } => *at,
+            | Fault::Wipe { at, .. }
+            | Fault::ClockSkew { at, .. } => *at,
         }
     }
 }
@@ -244,6 +258,56 @@ impl FaultPlan {
         self
     }
 
+    /// Step `node`'s physical clock by `delta_us` at `at` (negative =
+    /// backward jump — the HLC anomaly case). Cumulative across calls.
+    pub fn clock_skew_at(mut self, at: u64, node: NodeId, delta_us: i64) -> Self {
+        self.faults.push(Fault::ClockSkew { at, node, delta_us });
+        self
+    }
+
+    /// Partition one whole datacenter away from the rest between `from`
+    /// and `to`: `zones[i]` is node `i`'s zone, and every node of `dc`
+    /// lands on one side of a symmetric partition with everyone else on
+    /// the other. This is the geo marquee scenario as a one-liner —
+    /// both halves keep serving on their per-DC sloppy quorums, then the
+    /// heal lets the cross-DC shipper and anti-entropy converge them.
+    pub fn partition_dc_at(self, zones: &[usize], dc: usize, from: u64, to: u64) -> Self {
+        let inside: Vec<NodeId> =
+            (0..zones.len()).filter(|&n| zones[n] == dc).collect();
+        let outside: Vec<NodeId> =
+            (0..zones.len()).filter(|&n| zones[n] != dc).collect();
+        assert!(
+            !inside.is_empty() && !outside.is_empty(),
+            "DC {dc} must split the node set in two (zones {zones:?})"
+        );
+        self.partition_window(inside, outside, from, to)
+    }
+
+    /// Random geo chaos: one whole-DC partition window (random DC),
+    /// one backward clock skew on a random node, and a degradation
+    /// window — all healed by `horizon_us`. The geo analogue of
+    /// [`random_chaos`](FaultPlan::random_chaos); the geo chaos property
+    /// test replays it across seeds under `GEO_ITERS`.
+    pub fn random_geo_chaos(zones: &[usize], horizon_us: u64, rng: &mut Rng) -> FaultPlan {
+        let mut distinct: Vec<usize> = zones.to_vec();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert!(distinct.len() >= 2, "geo chaos needs at least two DCs");
+        let dur = (horizon_us / 4).max(1);
+        let latest_start = horizon_us.saturating_sub(dur).max(1);
+        let dc = distinct[rng.below(distinct.len() as u64) as usize];
+        let start = rng.below(latest_start);
+        let mut plan =
+            FaultPlan::new().partition_dc_at(zones, dc, start, start + dur);
+        // one backward jump mid-horizon: HLC monotonicity under anomaly
+        let node = rng.below(zones.len() as u64) as usize;
+        let jump = -((1 + rng.below(500_000)) as i64);
+        plan = plan.clock_skew_at(rng.below(latest_start), node, jump);
+        let drop_prob = 0.02 + rng.f64() * 0.10;
+        let dstart = rng.below(latest_start);
+        plan.degrade_window(drop_prob, rng.below(300), dstart, dstart + dur)
+    }
+
     /// Add **one** state-loss event — a wipe or a crash-restart, on a
     /// random node, somewhere in the middle half of `[0, horizon_us)`.
     ///
@@ -342,6 +406,9 @@ impl FaultPlan {
                 Fault::Decommission { at, node } => sim.schedule_decommission(*at, *node),
                 Fault::Restart { at, node } => sim.schedule_restart(*at, *node),
                 Fault::Wipe { at, node } => sim.schedule_wipe(*at, *node),
+                Fault::ClockSkew { at, node, delta_us } => {
+                    sim.schedule_clock_skew(*at, *node, *delta_us)
+                }
             }
         }
     }
@@ -520,5 +587,70 @@ mod tests {
     fn random_churn_requires_enough_base_nodes() {
         let mut rng = Rng::new(1);
         let _ = FaultPlan::new().random_churn(3, 3, 100_000, &mut rng);
+    }
+
+    #[test]
+    fn partition_dc_splits_along_zones() {
+        let zones = [0, 0, 0, 1, 1, 1];
+        let plan = FaultPlan::new().partition_dc_at(&zones, 1, 100, 500);
+        assert_eq!(plan.faults.len(), 2);
+        let Fault::Partition { at, left, right } = &plan.faults[0] else {
+            panic!("expected a partition, got {:?}", plan.faults[0]);
+        };
+        assert_eq!(*at, 100);
+        assert_eq!(left, &vec![3, 4, 5], "DC 1 on one side");
+        assert_eq!(right, &vec![0, 1, 2], "everyone else on the other");
+        assert!(matches!(plan.faults[1], Fault::Heal { at: 500 }));
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_dc_rejects_a_dc_holding_every_node() {
+        let _ = FaultPlan::new().partition_dc_at(&[2, 2, 2], 2, 0, 10);
+    }
+
+    #[test]
+    fn clock_skew_builder_records_signed_offsets() {
+        let plan = FaultPlan::new().clock_skew_at(40, 2, -250_000).clock_skew_at(90, 2, 10);
+        assert_eq!(plan.faults, vec![
+            Fault::ClockSkew { at: 40, node: 2, delta_us: -250_000 },
+            Fault::ClockSkew { at: 90, node: 2, delta_us: 10 },
+        ]);
+        assert_eq!(plan.faults.iter().map(Fault::at).collect::<Vec<_>>(), vec![40, 90]);
+    }
+
+    #[test]
+    fn random_geo_chaos_heals_and_skews_within_horizon() {
+        let zones = [0, 0, 1, 1, 2, 2];
+        for seed in [1, 2, 3, 4] {
+            let mut rng = Rng::new(seed);
+            let plan = FaultPlan::random_geo_chaos(&zones, 400_000, &mut rng);
+            assert!(plan.faults.iter().any(|f| matches!(f, Fault::Partition { .. })));
+            assert!(plan.faults.iter().any(|f| matches!(f, Fault::Heal { .. })));
+            let skews: Vec<&Fault> = plan
+                .faults
+                .iter()
+                .filter(|f| matches!(f, Fault::ClockSkew { .. }))
+                .collect();
+            assert_eq!(skews.len(), 1);
+            let Fault::ClockSkew { node, delta_us, .. } = skews[0] else { unreachable!() };
+            assert!(*node < zones.len());
+            assert!(*delta_us < 0, "the geo anomaly is a backward jump");
+            for f in &plan.faults {
+                assert!(f.at() <= 400_000, "fault past horizon: {f:?}");
+            }
+            // the DC partition groups cover the node set exactly
+            if let Some(Fault::Partition { left, right, .. }) =
+                plan.faults.iter().find(|f| matches!(f, Fault::Partition { .. }))
+            {
+                let mut all: Vec<NodeId> = left.iter().chain(right).copied().collect();
+                all.sort_unstable();
+                assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+                // each side is zone-pure on the partitioned DC's side
+                let dcs: std::collections::HashSet<usize> =
+                    left.iter().map(|&n| zones[n]).collect();
+                assert_eq!(dcs.len(), 1, "the inside group is one whole DC");
+            }
+        }
     }
 }

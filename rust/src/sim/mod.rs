@@ -16,13 +16,19 @@
 //!   preference list); coordinator runs the mechanism's `update`+`sync`,
 //!   fans the resulting state to the other replicas, answers at `W` acks.
 //! * Anti-entropy: periodic pairwise full-state exchange.
+//! * Geo mode (`cluster.zones` set): placement spreads each preference
+//!   list across DCs, writes commit on a per-DC sloppy quorum (R/W count
+//!   only coordinator-zone replicas), and a per-node cross-DC shipper
+//!   streams HLC-stamped state batches to remote-DC homes on
+//!   `Ev::ShipTick` — with mostly-intra-DC anti-entropy plus a
+//!   low-frequency cross-DC round as the repair backstop.
 
 pub mod failure;
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{BTreeMap, BinaryHeap, HashMap, HashSet};
 
-use crate::clocks::Actor;
+use crate::clocks::{Actor, Hlc, HlcTimestamp};
 use crate::cluster::{NodeId, Ring};
 use crate::config::StoreConfig;
 use crate::coordinator::{GetOp, PutOp, QuorumSpec};
@@ -59,6 +65,17 @@ pub struct SimNode<M: Mechanism> {
     /// a [`Sim::schedule_restart`] loses. Folded into `synced` every
     /// `flush_every_ops` mutations, mirroring `FsyncPolicy::EveryN`.
     pub unsynced: Vec<(Key, M::State)>,
+    /// Hybrid logical clock (geo mode): advanced on coordinator writes
+    /// and ship-batch receipts; strictly monotone per node even under
+    /// [`Sim::schedule_clock_skew`] jumps.
+    pub hlc: Hlc,
+    /// Keys with updates parked for cross-DC shipment (deduplicated).
+    /// The shipper snapshots the *current* state at drain time, so a key
+    /// superseded while parked ships once, with the newest state.
+    pub ship: Vec<Key>,
+    /// Injected physical-clock offset (µs, cumulative, signed): the
+    /// node's physical time reads `now + skew_us`, floored at 0.
+    pub skew_us: i64,
 }
 
 impl<M: Mechanism> SimNode<M> {
@@ -69,6 +86,9 @@ impl<M: Mechanism> SimNode<M> {
             member: true,
             synced: HashMap::new(),
             unsynced: Vec::new(),
+            hlc: Hlc::new(),
+            ship: Vec::new(),
+            skew_us: 0,
         }
     }
 }
@@ -94,6 +114,9 @@ enum Msg<M: Mechanism> {
     AePull { keys: Vec<Key>, from: NodeId },
     /// Anti-entropy reply.
     AePush { states: Vec<(Key, M::State)> },
+    /// Cross-DC shipper batch: HLC-stamped current states for keys homed
+    /// (in part) at the receiving remote-DC node.
+    ShipBatch { states: Vec<(Key, M::State)>, ts: HlcTimestamp },
 }
 
 /// Scheduled event kinds.
@@ -103,6 +126,8 @@ enum Ev<M: Mechanism> {
     ClientDone { client: usize, req: u64 },
     OpTimeout { req: u64 },
     AeTick { node: NodeId },
+    ShipTick { node: NodeId },
+    ClockSkew { node: NodeId, delta_us: i64 },
     Crash { node: NodeId },
     Recover { node: NodeId },
     PartitionGroups { left: Vec<NodeId>, right: Vec<NodeId> },
@@ -275,6 +300,69 @@ impl<M: Mechanism> Sim<M> {
         (0..self.nodes.len()).filter(|&n| self.nodes[n].member).collect()
     }
 
+    /// Is geo-replication active (`cluster.zones` set)?
+    pub fn geo(&self) -> bool {
+        !self.cfg.cluster.zones.is_empty()
+    }
+
+    /// The DC `node` lives in (zone 0 when flat, and for nodes that
+    /// joined after construction).
+    pub fn zone_of(&self, node: NodeId) -> usize {
+        self.cfg.cluster.zones.get(node).copied().unwrap_or(0)
+    }
+
+    /// The DC a client routes through: clients spread round-robin over
+    /// the zone id space, so every DC has local users.
+    pub fn client_zone(&self, client: usize) -> usize {
+        let nz = self.cfg.cluster.zones.iter().copied().max().map_or(0, |m| m + 1);
+        if nz == 0 {
+            0
+        } else {
+            client % nz
+        }
+    }
+
+    /// Last HLC timestamp `node` issued (drift audits, monotonicity
+    /// tests).
+    pub fn node_hlc(&self, node: NodeId) -> HlcTimestamp {
+        self.nodes[node].hlc.last()
+    }
+
+    /// Keys still parked in cross-DC ship buffers, cluster-wide (the DES
+    /// twin of the threaded cluster's `ship_lag` STATS field).
+    pub fn ship_lag(&self) -> usize {
+        self.nodes.iter().map(|n| n.ship.len()).sum()
+    }
+
+    /// `node`'s physical clock reading: simulated time plus its injected
+    /// cumulative skew, floored at zero.
+    fn phys(&self, node: NodeId) -> u64 {
+        (self.now as i64 + self.nodes[node].skew_us).max(0) as u64
+    }
+
+    /// The key's preference list under the active placement policy.
+    fn replicas(&self, key: Key) -> Vec<NodeId> {
+        if self.geo() {
+            self.ring.replicas_for_zoned(key, self.quorum.n, &self.cfg.cluster.zones)
+        } else {
+            self.ring.replicas_for(key, self.quorum.n)
+        }
+    }
+
+    /// Per-DC sloppy quorum: in geo mode R/W count only replicas in the
+    /// coordinator's zone (floored at 1) — remote-DC homes are fed
+    /// asynchronously by the shipper and never gate the client reply.
+    /// Flat clusters keep the global spec.
+    fn scoped_quorum(&self, replicas: &[NodeId], coordinator: NodeId) -> QuorumSpec {
+        if !self.geo() {
+            return self.quorum;
+        }
+        let z = self.zone_of(coordinator);
+        let local = replicas.iter().filter(|&&n| self.zone_of(n) == z).count().max(1);
+        QuorumSpec::new(self.quorum.n, self.quorum.r.min(local), self.quorum.w.min(local))
+            .expect("zone-scoped quorum stays valid")
+    }
+
     fn push(&mut self, at: u64, ev: Ev<M>) {
         self.seq += 1;
         self.queue.push(Reverse(Queued { at, seq: self.seq, ev }));
@@ -300,6 +388,12 @@ impl<M: Mechanism> Sim<M> {
             for node in 0..self.nodes.len() {
                 let jitter = self.rng.below(self.cfg.antientropy.period_us.max(1));
                 self.push(self.now + jitter, Ev::AeTick { node });
+            }
+        }
+        if self.geo() && self.cfg.geo.ship_interval_us > 0 {
+            for node in 0..self.nodes.len() {
+                let jitter = self.rng.below(self.cfg.geo.ship_interval_us.max(1));
+                self.push(self.now + jitter, Ev::ShipTick { node });
             }
         }
     }
@@ -354,6 +448,14 @@ impl<M: Mechanism> Sim<M> {
         self.push(at, Ev::Wipe { node });
     }
 
+    /// Step `node`'s physical clock by `delta_us` (cumulative: two skews
+    /// add) at `at` — the GentleRain+ anomaly driver. A negative delta
+    /// makes the node's physical time run behind simulated time, which
+    /// plain physical timestamps cannot survive but HLCs must.
+    pub fn schedule_clock_skew(&mut self, at: u64, node: NodeId, delta_us: i64) {
+        self.push(at, Ev::ClockSkew { node, delta_us });
+    }
+
     fn schedule_next_op(&mut self, client: usize, extra_delay: u64) {
         if let Some(op) = self.driver.next_op(client, self.now, &mut self.rng) {
             let at = self.now + extra_delay + op.think_us;
@@ -395,9 +497,11 @@ impl<M: Mechanism> Sim<M> {
     /// point; the closed-loop driver world ([`Sim::start`]/[`Sim::run`])
     /// is unaffected.
     pub fn sync_get(&mut self, client: usize, key: Key) -> crate::Result<(Vec<Val>, M::Context)> {
-        let Some((coordinator, replicas)) = self.pick_coordinator(key) else {
+        let zone = self.pref_zone(client);
+        let Some((coordinator, replicas)) = self.pick_coordinator(key, zone) else {
             return Err(crate::Error::Unavailable("no live replica to coordinate".into()));
         };
+        let quorum = self.scoped_quorum(&replicas, coordinator);
         let req = self.next_req;
         self.next_req += 1;
         self.push(self.now + OP_TIMEOUT_US, Ev::OpTimeout { req });
@@ -406,7 +510,7 @@ impl<M: Mechanism> Sim<M> {
             Pending::Get {
                 client,
                 key,
-                op: GetOp::new(self.quorum),
+                op: GetOp::new(quorum),
                 started: self.now,
                 participants: replicas,
             },
@@ -434,9 +538,11 @@ impl<M: Mechanism> Sim<M> {
         ctx: &M::Context,
         observed: &[u64],
     ) -> crate::Result<(u64, Option<M::Context>)> {
-        let Some((coordinator, _)) = self.pick_coordinator(key) else {
+        let zone = self.pref_zone(client);
+        let Some((coordinator, replicas)) = self.pick_coordinator(key, zone) else {
             return Err(crate::Error::Unavailable("no live replica to coordinate".into()));
         };
+        let quorum = self.scoped_quorum(&replicas, coordinator);
         let val = Val::new(self.next_val, len);
         self.next_val += 1;
         let session = &mut self.sessions[client];
@@ -453,7 +559,7 @@ impl<M: Mechanism> Sim<M> {
         self.push(self.now + OP_TIMEOUT_US, Ev::OpTimeout { req });
         self.pending.insert(
             req,
-            Pending::Put { client, key, op: PutOp::new(self.quorum), started: self.now, val },
+            Pending::Put { client, key, op: PutOp::new(quorum), started: self.now, val },
         );
         self.sync_waiting.insert(req);
         let hop = self.net.client_delay();
@@ -532,6 +638,12 @@ impl<M: Mechanism> Sim<M> {
                 }
             }
             Ev::AeTick { node } => self.anti_entropy(node),
+            Ev::ShipTick { node } => self.ship(node),
+            Ev::ClockSkew { node, delta_us } => {
+                if let Some(n) = self.nodes.get_mut(node) {
+                    n.skew_us += delta_us;
+                }
+            }
             Ev::Crash { node } => self.nodes[node].up = false,
             Ev::Recover { node } => {
                 self.nodes[node].up = true;
@@ -546,7 +658,14 @@ impl<M: Mechanism> Sim<M> {
             Ev::PartitionGroups { left, right } => {
                 self.net.partition_groups(&left, &right)
             }
-            Ev::HealAll => self.net.heal_all(),
+            Ev::HealAll => {
+                self.net.heal_all();
+                // parity with the chaos fabric: a blanket heal also
+                // clears injected clock skew
+                for n in &mut self.nodes {
+                    n.skew_us = 0;
+                }
+            }
             Ev::Degrade { drop_ppm, extra_delay_us } => {
                 self.net.degrade(drop_ppm as f64 / 1_000_000.0, extra_delay_us)
             }
@@ -619,7 +738,7 @@ impl<M: Mechanism> Sim<M> {
             let keys: Vec<Key> = self.nodes[m].store.keys().collect();
             let states: Vec<(Key, M::State)> = keys
                 .into_iter()
-                .filter(|&k| self.ring.replicas_for(k, self.quorum.n).contains(&id))
+                .filter(|&k| self.replicas(k).contains(&id))
                 .map(|k| (k, self.nodes[m].store.state(k)))
                 .collect();
             if states.is_empty() {
@@ -631,6 +750,10 @@ impl<M: Mechanism> Sim<M> {
         if self.cfg.antientropy.period_us > 0 {
             let jitter = self.rng.below(self.cfg.antientropy.period_us.max(1));
             self.push(self.now + jitter, Ev::AeTick { node: id });
+        }
+        if self.geo() && self.cfg.geo.ship_interval_us > 0 {
+            let jitter = self.rng.below(self.cfg.geo.ship_interval_us.max(1));
+            self.push(self.now + jitter, Ev::ShipTick { node: id });
         }
     }
 
@@ -668,7 +791,7 @@ impl<M: Mechanism> Sim<M> {
         let keys: Vec<Key> = self.nodes[node].store.keys().collect();
         for k in keys {
             let state = self.nodes[node].store.state(k);
-            for home in self.ring.replicas_for(k, self.quorum.n) {
+            for home in self.replicas(k) {
                 self.metrics.ae_keys_synced += 1;
                 self.send(node, home, Msg::StatePush { key: k, state: state.clone() });
             }
@@ -681,26 +804,50 @@ impl<M: Mechanism> Sim<M> {
 
     /// Preference list plus the coordinating replica (first live node,
     /// or a random live one under `random_coordinator`); `None` when
-    /// every replica is down.
-    fn pick_coordinator(&mut self, key: Key) -> Option<(NodeId, Vec<NodeId>)> {
-        let replicas = self.ring.replicas_for(key, self.quorum.n);
+    /// every replica is down. With `zone` set (geo mode), a live replica
+    /// in the client's own DC coordinates when one exists — this is what
+    /// keeps both halves of a DC partition serving their local users.
+    fn pick_coordinator(
+        &mut self,
+        key: Key,
+        zone: Option<usize>,
+    ) -> Option<(NodeId, Vec<NodeId>)> {
+        let replicas = self.replicas(key);
         let live: Vec<NodeId> =
             replicas.iter().copied().filter(|&n| self.nodes[n].up).collect();
         if live.is_empty() {
-            None
-        } else if self.cfg.cluster.random_coordinator {
+            return None;
+        }
+        if let Some(z) = zone {
+            if let Some(&local) = live.iter().find(|&&n| self.zone_of(n) == z) {
+                return Some((local, replicas));
+            }
+        }
+        if self.cfg.cluster.random_coordinator {
             Some((live[self.rng.below(live.len() as u64) as usize], replicas))
         } else {
             Some((live[0], replicas))
         }
     }
 
+    /// The coordinator-preference zone for `client`: its home DC in geo
+    /// mode, no preference when flat.
+    fn pref_zone(&self, client: usize) -> Option<usize> {
+        if self.geo() {
+            Some(self.client_zone(client))
+        } else {
+            None
+        }
+    }
+
     fn issue(&mut self, client: usize, op: Op) {
-        let Some((coordinator, replicas)) = self.pick_coordinator(op.key) else {
+        let zone = self.pref_zone(client);
+        let Some((coordinator, replicas)) = self.pick_coordinator(op.key, zone) else {
             self.metrics.failed_ops += 1;
             self.schedule_next_op(client, 1000);
             return;
         };
+        let quorum = self.scoped_quorum(&replicas, coordinator);
         let req = self.next_req;
         self.next_req += 1;
         self.push(self.now + OP_TIMEOUT_US, Ev::OpTimeout { req });
@@ -712,7 +859,7 @@ impl<M: Mechanism> Sim<M> {
                     Pending::Get {
                         client,
                         key: op.key,
-                        op: GetOp::new(self.quorum),
+                        op: GetOp::new(quorum),
                         started: self.now,
                         participants: replicas,
                     },
@@ -741,7 +888,7 @@ impl<M: Mechanism> Sim<M> {
                     Pending::Put {
                         client,
                         key: op.key,
-                        op: PutOp::new(self.quorum),
+                        op: PutOp::new(quorum),
                         started: self.now,
                         val,
                     },
@@ -785,8 +932,12 @@ impl<M: Mechanism> Sim<M> {
             Msg::PutClient { req, key, ctx, val, meta } => {
                 // §4.1 put steps 2–3: update + local sync at the coordinator
                 self.store_write(node, key, &ctx, val, &meta);
+                let pt = self.phys(node);
+                self.nodes[node].hlc.now(pt);
                 let state = self.nodes[node].store.state(key);
-                let replicas = self.ring.replicas_for(key, self.quorum.n);
+                let replicas = self.replicas(key);
+                let geo = self.geo();
+                let my_zone = self.zone_of(node);
                 let Some(Pending::Put { op, client, started, .. }) =
                     self.pending.get_mut(&req)
                 else {
@@ -797,7 +948,16 @@ impl<M: Mechanism> Sim<M> {
                     self.complete_put(req, client, key, started, val, node);
                 }
                 for replica in replicas {
-                    if replica != node {
+                    if replica == node {
+                        continue;
+                    }
+                    if geo && self.zone_of(replica) != my_zone {
+                        // remote-DC home: fed asynchronously by the
+                        // shipper, never counted toward W
+                        if !self.nodes[node].ship.contains(&key) {
+                            self.nodes[node].ship.push(key);
+                        }
+                    } else {
                         self.send(
                             node,
                             replica,
@@ -847,6 +1007,15 @@ impl<M: Mechanism> Sim<M> {
             }
             Msg::AePush { states } => {
                 self.metrics.ae_keys_synced += states.len() as u64;
+                for (key, state) in states {
+                    self.store_merge(node, key, &state);
+                }
+            }
+            Msg::ShipBatch { states, ts } => {
+                // HLC recv-merge first: every state this batch carries is
+                // causally behind the batch timestamp
+                let pt = self.phys(node);
+                self.nodes[node].hlc.recv(pt, ts);
                 for (key, state) in states {
                     self.store_merge(node, key, &state);
                 }
@@ -995,7 +1164,23 @@ impl<M: Mechanism> Sim<M> {
         if peers.is_empty() {
             return;
         }
-        let peer = peers[self.rng.below(peers.len() as u64) as usize];
+        let peer = if self.geo() {
+            // AE stays mostly intra-DC; with probability
+            // `geo.cross_dc_ae_prob` a round reaches across DCs — the
+            // low-frequency backstop that repairs what shipper batches
+            // lost to the network
+            let my_zone = self.zone_of(node);
+            let cross = self.rng.f64() < self.cfg.geo.cross_dc_ae_prob;
+            let scoped: Vec<NodeId> = peers
+                .iter()
+                .copied()
+                .filter(|&m| (self.zone_of(m) != my_zone) == cross)
+                .collect();
+            let pool = if scoped.is_empty() { &peers } else { &scoped };
+            pool[self.rng.below(pool.len() as u64) as usize]
+        } else {
+            peers[self.rng.below(peers.len() as u64) as usize]
+        };
         if !self.nodes[peer].up {
             return;
         }
@@ -1039,6 +1224,50 @@ impl<M: Mechanism> Sim<M> {
         }
         if self.nodes[node].member && !keys.is_empty() {
             self.send(node, peer, Msg::AePull { keys, from: node });
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // cross-DC shipper
+    // ---------------------------------------------------------------
+
+    /// Drain `node`'s cross-DC ship buffer: snapshot the *current* state
+    /// of every parked key, stamp the batch with a fresh HLC send event,
+    /// and push one `ShipBatch` per remote-DC home that needs one. Runs
+    /// every `geo.ship_interval_us`; a batch lost to the network is
+    /// repaired by the cross-DC AE backstop.
+    fn ship(&mut self, node: NodeId) {
+        let interval = self.cfg.geo.ship_interval_us;
+        if !self.geo() || interval == 0 {
+            return;
+        }
+        if !self.workload_done() {
+            // reschedule first so crashes don't cancel the timer forever
+            let jitter = self.rng.below(interval / 4 + 1);
+            self.push(self.now + interval + jitter, Ev::ShipTick { node });
+        }
+        if !self.nodes[node].up || self.nodes[node].ship.is_empty() {
+            return;
+        }
+        let keys = std::mem::take(&mut self.nodes[node].ship);
+        let my_zone = self.zone_of(node);
+        let pt = self.phys(node);
+        let ts = self.nodes[node].hlc.now(pt);
+        // BTreeMap: deterministic destination order (a HashMap here
+        // would reorder sends across runs and break seeded replays)
+        let mut per_dest: BTreeMap<NodeId, Vec<(Key, M::State)>> = BTreeMap::new();
+        for k in keys {
+            let state = self.nodes[node].store.state(k);
+            for home in self.replicas(k) {
+                if self.zone_of(home) != my_zone {
+                    per_dest.entry(home).or_default().push((k, state.clone()));
+                }
+            }
+        }
+        for (dest, states) in per_dest {
+            self.metrics.ship_batches += 1;
+            self.metrics.ship_keys += states.len() as u64;
+            self.send(node, dest, Msg::ShipBatch { states, ts });
         }
     }
 
@@ -1516,6 +1745,65 @@ mod tests {
         sim.settle();
         assert_eq!(sim.audit_acked_lost(), 0, "{}", sim.metrics.summary());
         assert!(sim.writes_acked() > 0);
+    }
+
+    fn geo_cfg(zones: &[usize], n: usize, r: usize, w: usize) -> StoreConfig {
+        let mut c = cfg(zones.len(), n, r, w);
+        c.cluster.zones = zones.to_vec();
+        c
+    }
+
+    #[test]
+    fn geo_run_ships_cross_dc_and_loses_nothing_acked() {
+        let mut c = geo_cfg(&[0, 0, 0, 1, 1, 1], 3, 2, 2);
+        c.antientropy.period_us = 20_000;
+        c.geo.ship_interval_us = 10_000;
+        let mut sim = Sim::new(DvvMech, c, 6, true, small_workload(6, 30), 51).unwrap();
+        sim.start();
+        sim.run(u64::MAX);
+        assert!(sim.metrics.ship_batches > 0, "{}", sim.metrics.summary());
+        assert_eq!(sim.metrics.failed_ops, 0, "{}", sim.metrics.summary());
+        sim.settle();
+        assert_eq!(sim.audit_acked_lost(), 0, "{}", sim.metrics.summary());
+    }
+
+    #[test]
+    fn hlc_stays_monotone_under_backward_clock_skew() {
+        let mut c = geo_cfg(&[0, 1], 2, 1, 1);
+        c.geo.ship_interval_us = 5_000;
+        let mut sim = Sim::new(DvvMech, c, 2, true, Box::new(NoDriver), 53).unwrap();
+        let mut prev = [sim.node_hlc(0), sim.node_hlc(1)];
+        for i in 0..30u64 {
+            if i == 10 {
+                // physical clock on node 0 steps back a full second
+                let now = sim.now();
+                sim.schedule_clock_skew(now + 1, 0, -1_000_000);
+            }
+            sim.sync_put(0, i % 3, 4, &Default::default(), &[]).unwrap();
+            for n in 0..2 {
+                let t = sim.node_hlc(n);
+                assert!(t >= prev[n], "node {n} HLC regressed: {t} < {}", prev[n]);
+                prev[n] = t;
+            }
+        }
+        assert!(sim.nodes[0].skew_us < 0, "the skew event landed");
+        // bounded drift: l never runs ahead of the largest physical
+        // input, which unskewed nodes cap at simulated time
+        assert!(sim.node_hlc(0).l <= sim.now());
+        assert!(sim.node_hlc(1).l <= sim.now());
+    }
+
+    #[test]
+    fn geo_put_parks_remote_homes_for_the_shipper() {
+        let mut c = geo_cfg(&[0, 0, 1, 1], 4, 1, 1);
+        c.geo.ship_interval_us = 0; // shipper off: parked keys stay parked
+        let mut sim = Sim::new(DvvMech, c, 1, true, Box::new(NoDriver), 57).unwrap();
+        sim.sync_put(0, 9, 4, &Default::default(), &[]).unwrap();
+        // N = 4 over two DCs: two remote homes exist, so the write parks
+        // key 9 at its coordinator instead of blocking on cross-DC acks
+        assert_eq!(sim.ship_lag(), 1, "one key parked for shipment");
+        sim.settle();
+        assert_eq!(sim.audit_acked_lost(), 0);
     }
 
     #[test]

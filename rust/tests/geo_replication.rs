@@ -1,0 +1,526 @@
+//! Geo-replication chaos: whole-DC partitions, hybrid-logical-clock
+//! anomalies, and the async cross-DC shipper — run against **both
+//! worlds** (the DES and the threaded zone-aware cluster) from one
+//! [`FaultPlan`], oracle-verified.
+//!
+//! The marquee scenario, pinned and seeded: partition an entire
+//! datacenter away from the rest, keep serving reads *and* writes in
+//! both halves on their per-DC sloppy quorums, heal, and converge —
+//! with zero lost acknowledged updates and identical verdicts in the
+//! simulator and the threaded cluster.
+//!
+//! Also here: the HLC property soaks (monotonicity under backward
+//! physical jumps, receive dominance, bounded drift, codec order
+//! preservation), the zoned preference-list invariant, the `OP_SHIP`
+//! wire roundtrip (including whole-batch rejection), and the v6 STATS
+//! strict-decode regression.
+//!
+//! The default gate runs fixed seeds; `GEO_ITERS=<n>` appends derived
+//! seeds (uniform failure format via `testkit::soak`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use dvvstore::antientropy::diff_pairs;
+use dvvstore::api::{KvClient, TcpClient};
+use dvvstore::clocks::hlc::{decode_hlc, encode_hlc};
+use dvvstore::clocks::{Actor, Hlc, HlcTimestamp};
+use dvvstore::cluster::ring::{hash_str, Ring};
+use dvvstore::kernel::mechs::DvvMech;
+use dvvstore::kernel::DurableMechanism;
+use dvvstore::oracle::SharedOracle;
+use dvvstore::server::tcp::Server;
+use dvvstore::server::{protocol, LocalCluster};
+use dvvstore::sim::failure::FaultPlan;
+use dvvstore::testkit::{run_seeded, soak_seeds, Rng};
+use dvvstore::workload::key_name;
+
+/// Two 3-node datacenters.
+const ZONES: [usize; 6] = [0, 0, 0, 1, 1, 1];
+const NODES: usize = 6;
+const KEYS: u64 = 8;
+const CLIENTS: u32 = 4;
+const HORIZON_US: u64 = 300_000;
+
+fn seeds() -> Vec<u64> {
+    soak_seeds(&[81, 82, 83], "GEO_ITERS")
+}
+
+/// The acceptance plan: DC 1 cut off for the middle 60% of the run,
+/// plus one two-second backward clock jump inside the dark window.
+fn dc_partition_plan() -> FaultPlan {
+    FaultPlan::new()
+        .partition_dc_at(&ZONES, 1, 60_000, 240_000)
+        .clock_skew_at(100_000, 4, -2_000_000)
+}
+
+/// Random whole-DC chaos for the soak seeds.
+fn geo_chaos_plan(seed: u64) -> FaultPlan {
+    FaultPlan::random_geo_chaos(&ZONES, HORIZON_US, &mut Rng::new(seed))
+}
+
+// -------------------------------------------------------------------
+// world 1: the DES
+// -------------------------------------------------------------------
+
+fn des_run(seed: u64, plan: &FaultPlan) {
+    let mut cfg = dvvstore::config::StoreConfig::default();
+    cfg.cluster.nodes = NODES;
+    cfg.cluster.replication = 3;
+    cfg.cluster.read_quorum = 2;
+    cfg.cluster.write_quorum = 2;
+    cfg.cluster.zones = ZONES.to_vec();
+    cfg.antientropy.period_us = 20_000;
+    cfg.geo.ship_interval_us = 10_000;
+    // a generous cross-DC AE backstop so the bounded settle converges
+    // even when the partition swallowed shipper batches
+    cfg.geo.cross_dc_ae_prob = 0.5;
+    let driver = Box::new(dvvstore::workload::RandomWorkload::new(
+        dvvstore::workload::WorkloadSpec {
+            keys: KEYS,
+            ops_per_client: 40,
+            put_fraction: 0.6,
+            read_before_write: 0.5,
+            mean_think_us: 400.0,
+            ..Default::default()
+        },
+        CLIENTS as usize,
+    ));
+    let mut sim =
+        dvvstore::sim::Sim::new(DvvMech, cfg, CLIENTS as usize, true, driver, seed).unwrap();
+    plan.apply(&mut sim);
+    sim.start();
+    sim.run(5_000_000);
+    sim.settle();
+    assert!(sim.writes_acked() > 0, "seed {seed}: nothing acked");
+    assert_eq!(
+        sim.audit_acked_lost(),
+        0,
+        "seed {seed}: acked update lost in the DES ({})",
+        sim.metrics.summary()
+    );
+    assert_eq!(
+        sim.metrics.lost_updates, 0,
+        "seed {seed}: mechanism lost updates in the DES"
+    );
+    // HLCs stayed monotone through the backward jump: every node's
+    // final timestamp is sane (the Hlc would have panicked on a
+    // regression; here we assert the clocks actually moved)
+    assert!(
+        (0..NODES).any(|n| sim.node_hlc(n) > HlcTimestamp::default()),
+        "seed {seed}: no hybrid clock ever advanced"
+    );
+    // post-settle convergence across members, pairwise
+    let members = sim.members();
+    for (ai, &a) in members.iter().enumerate() {
+        for &b in members.iter().skip(ai + 1) {
+            for key in 0..KEYS {
+                assert_eq!(
+                    sim.nodes[a].store.state(key),
+                    sim.nodes[b].store.state(key),
+                    "seed {seed}: members {a}/{b} diverged on key {key}"
+                );
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// world 2: the threaded zone-aware cluster
+// -------------------------------------------------------------------
+
+/// Drive the plan against a live zone-aware cluster while client
+/// threads hammer traced quorum ops **in their own DC**; returns the
+/// acked `(key, id)` pairs plus per-zone ack counts. With
+/// `probe_mid_partition`, the main thread additionally writes and
+/// reads in *both* halves while the DC partition is dark — the "keep
+/// serving locally on both sides" marquee property, asserted directly.
+fn threaded_run(
+    seed: u64,
+    plan: &FaultPlan,
+    probe_mid_partition: bool,
+    cluster: &Arc<LocalCluster>,
+) -> (Vec<(u64, u64)>, [usize; 2]) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for t in 0..CLIENTS {
+        let cluster = Arc::clone(cluster);
+        let stop = Arc::clone(&stop);
+        workers.push(std::thread::spawn(move || {
+            let zone = (t as usize) % 2;
+            let me = Actor::client(t);
+            let mut rng = Rng::new(seed.wrapping_mul(0x9E37).wrapping_add(u64::from(t)));
+            let mut sessions: Vec<Option<(Vec<u8>, Vec<u64>)>> = vec![None; KEYS as usize];
+            let mut acked: Vec<(u64, u64)> = Vec::new();
+            let mut op = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let ki = rng.below(KEYS);
+                let key = key_name(ki);
+                if rng.chance(0.5) {
+                    if let Ok(ans) = cluster.get_in_zone(&key, Some(zone)) {
+                        sessions[ki as usize] = Some((ans.context, ans.ids));
+                    }
+                } else {
+                    let (ctx, observed) = sessions[ki as usize].clone().unwrap_or_default();
+                    let body = format!("c{t}-{op}").into_bytes();
+                    if let Ok(id) =
+                        cluster.put_traced_in_zone(&key, body, &ctx, me, &observed, Some(zone))
+                    {
+                        acked.push((ki, id));
+                    }
+                }
+                op += 1;
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            (zone, acked)
+        }));
+    }
+    const STEPS: u64 = 50;
+    let mut probe_acks: Vec<(u64, u64)> = Vec::new();
+    for step in 1..=STEPS {
+        cluster.advance_plan(plan, HORIZON_US * step / STEPS);
+        if probe_mid_partition && step == STEPS / 2 {
+            // cursor is at 150_000µs — squarely inside the pinned
+            // 60_000..240_000 dark window: both halves must still
+            // serve reads and writes on their per-DC sloppy quorums
+            for z in 0..2usize {
+                let key = key_name(z as u64);
+                let id = cluster
+                    .put_traced_in_zone(
+                        &key,
+                        format!("probe-z{z}").into_bytes(),
+                        &[],
+                        Actor::client(90 + z as u32),
+                        &[],
+                        Some(z),
+                    )
+                    .unwrap_or_else(|e| {
+                        panic!("seed {seed}: zone {z} write failed mid-partition: {e}")
+                    });
+                probe_acks.push((z as u64, id));
+                cluster.get_in_zone(&key, Some(z)).unwrap_or_else(|e| {
+                    panic!("seed {seed}: zone {z} read failed mid-partition: {e}")
+                });
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut acked = probe_acks;
+    let mut per_zone = [0usize; 2];
+    for w in workers {
+        let (zone, mine) = w.join().unwrap();
+        per_zone[zone] += mine.len();
+        acked.extend(mine);
+    }
+    (acked, per_zone)
+}
+
+/// Heal, quiesce (shipper included), and assert the geo properties.
+fn audit_threaded(
+    seed: u64,
+    cluster: &LocalCluster,
+    oracle: &SharedOracle,
+    acked: &[(u64, u64)],
+    per_zone: &[usize; 2],
+) {
+    cluster.fabric().heal_all();
+    let mut rounds = 0;
+    // anti_entropy_round drains hints and runs a shipper round first,
+    // so this loop also flushes the cross-DC queue
+    while cluster.anti_entropy_round() > 0 {
+        rounds += 1;
+        assert!(rounds < 32, "seed {seed}: anti-entropy failed to quiesce");
+    }
+    assert_eq!(cluster.pending_hints(), 0, "seed {seed}: hints not drained");
+    assert_eq!(cluster.ship_lag(), 0, "seed {seed}: shipper backlog not drained");
+    for a in 0..NODES {
+        for b in (a + 1)..NODES {
+            let diverged = diff_pairs(cluster.node(a).store(), cluster.node(b).store());
+            assert!(
+                diverged.is_empty(),
+                "seed {seed}: nodes {a}/{b} diverged after heal on {} keys",
+                diverged.len()
+            );
+        }
+    }
+    let verdict = oracle.verdict();
+    assert_eq!(verdict.unaudited_drops, 0, "seed {seed}: untraced writes leaked in");
+    assert_eq!(
+        verdict.lost_updates, 0,
+        "seed {seed}: mechanism lost updates under DC partition"
+    );
+    assert!(
+        per_zone[0] > 0 && per_zone[1] > 0,
+        "seed {seed}: a DC stopped acking writes entirely ({per_zone:?})"
+    );
+    // the headline: every acked write survives (itself, or causally
+    // covered by a survivor) even though a whole DC went dark
+    for &(ki, id) in acked {
+        let k = hash_str(&key_name(ki));
+        let covered = (0..NODES).any(|n| {
+            cluster
+                .node(n)
+                .store()
+                .values(k)
+                .iter()
+                .any(|v| v.id == id || oracle.with_inner(|o| o.leq(id, v.id)))
+        });
+        assert!(covered, "seed {seed}: acked write {id} on key {ki} lost");
+    }
+}
+
+fn threaded_case(seed: u64, plan: &FaultPlan, probe_mid_partition: bool) {
+    let cluster = LocalCluster::with_zones(&ZONES, 3, 2, 2).unwrap();
+    assert!(cluster.geo(), "two DCs make a geo cluster");
+    assert_eq!(cluster.zone_count(), 2);
+    let oracle = Arc::new(SharedOracle::new());
+    cluster.attach_oracle(Arc::clone(&oracle));
+    cluster.fabric().reseed(seed ^ 0xD00D);
+    let cluster = Arc::new(cluster);
+    let (acked, per_zone) = threaded_run(seed, plan, probe_mid_partition, &cluster);
+    audit_threaded(seed, &cluster, &oracle, &acked, &per_zone);
+}
+
+// -------------------------------------------------------------------
+// the marquee + the soaks
+// -------------------------------------------------------------------
+
+/// The acceptance scenario end-to-end, one pinned seed: the identical
+/// plan value partitions DC 1 away in the DES and in the threaded
+/// cluster, both halves keep serving (probed directly mid-partition in
+/// the threaded world), and both worlds reach the same verdicts —
+/// zero lost acknowledged updates and post-heal convergence.
+#[test]
+fn dc_partition_same_plan_same_verdicts_in_both_worlds() {
+    let seed = 4242;
+    let plan = dc_partition_plan();
+    des_run(seed, &plan);
+    threaded_case(seed, &plan, true);
+}
+
+#[test]
+fn geo_chaos_des_across_seeds() {
+    run_seeded("geo_chaos_des", &seeds(), |seed| des_run(seed, &geo_chaos_plan(seed)));
+}
+
+#[test]
+fn geo_chaos_threaded_across_seeds() {
+    run_seeded("geo_chaos_threaded", &seeds(), |seed| {
+        threaded_case(seed, &geo_chaos_plan(seed), false);
+    });
+}
+
+// -------------------------------------------------------------------
+// HLC property soaks
+// -------------------------------------------------------------------
+
+/// `now` is strictly monotone even when the physical input jumps
+/// backward by seconds mid-stream.
+#[test]
+fn hlc_now_stays_strictly_monotone_under_backward_jumps() {
+    run_seeded("hlc_monotone", &seeds(), |seed| {
+        let mut rng = Rng::new(seed);
+        let mut hlc = Hlc::new();
+        let mut pt: i64 = 1_000_000;
+        let mut prev = hlc.last();
+        for _ in 0..2_000 {
+            // random walk with occasional multi-second backward jumps
+            pt += if rng.chance(0.1) {
+                -(rng.below(3_000_000) as i64)
+            } else {
+                rng.below(2_000) as i64
+            };
+            let ts = hlc.now(pt.max(0) as u64);
+            assert!(ts > prev, "seed {seed}: now() regressed: {prev} !< {ts}");
+            prev = ts;
+        }
+    });
+}
+
+/// `recv` dominates every input: the merged timestamp is strictly
+/// above both the local clock's previous reading and the remote stamp.
+#[test]
+fn hlc_recv_dominates_both_clocks() {
+    run_seeded("hlc_recv", &seeds(), |seed| {
+        let mut rng = Rng::new(seed);
+        let mut a = Hlc::new();
+        let mut b = Hlc::new();
+        for i in 0..2_000u64 {
+            let pt_a = rng.below(1_000_000);
+            let pt_b = rng.below(1_000_000);
+            let (tx, rx, pt) =
+                if i % 2 == 0 { (&mut a, &mut b, pt_b) } else { (&mut b, &mut a, pt_a) };
+            let sent = tx.now(if i % 2 == 0 { pt_a } else { pt_b });
+            let before = rx.last();
+            let got = rx.recv(pt, sent);
+            assert!(got > before, "seed {seed}: recv did not advance: {before} !< {got}");
+            assert!(got > sent, "seed {seed}: recv below the remote stamp: {sent} !< {got}");
+            assert!(got.l >= pt, "seed {seed}: recv dropped the physical input");
+        }
+    });
+}
+
+/// Drift bound: with no remote input, `l` never exceeds the largest
+/// physical reading ever fed in — the clock cannot run ahead of the
+/// wall it has seen (Kulkarni et al.'s |l - pt| bound, local half).
+#[test]
+fn hlc_l_never_exceeds_the_largest_physical_input() {
+    run_seeded("hlc_drift", &seeds(), |seed| {
+        let mut rng = Rng::new(seed);
+        let mut hlc = Hlc::new();
+        let mut max_pt = 0u64;
+        for _ in 0..2_000 {
+            let pt = rng.below(10_000_000);
+            max_pt = max_pt.max(pt);
+            let ts = hlc.now(pt);
+            assert!(
+                ts.l <= max_pt,
+                "seed {seed}: l={} drifted past the largest physical input {max_pt}",
+                ts.l
+            );
+        }
+    });
+}
+
+/// The varint codec roundtrips, and `pack` preserves the HLC order for
+/// in-range components.
+#[test]
+fn hlc_codec_roundtrips_and_pack_preserves_order() {
+    run_seeded("hlc_codec", &seeds(), |seed| {
+        let mut rng = Rng::new(seed);
+        let mut prev: Option<HlcTimestamp> = None;
+        for _ in 0..500 {
+            let ts = HlcTimestamp::new(rng.below(1 << 48), rng.below(1 << 16));
+            let mut buf = Vec::new();
+            encode_hlc(&ts, &mut buf);
+            let mut pos = 0;
+            let back = decode_hlc(&buf, &mut pos).unwrap();
+            assert_eq!(pos, buf.len(), "seed {seed}: codec left trailing bytes");
+            assert_eq!(ts, back, "seed {seed}: codec roundtrip changed the stamp");
+            if let Some(p) = prev {
+                assert_eq!(
+                    p.cmp(&ts),
+                    p.pack().cmp(&ts.pack()),
+                    "seed {seed}: pack() broke the order of {p} vs {ts}"
+                );
+            }
+            prev = Some(ts);
+        }
+        // truncated stamps are rejected, never zero-filled
+        let mut buf = Vec::new();
+        encode_hlc(&HlcTimestamp::new(1 << 20, 3), &mut buf);
+        for cut in 0..buf.len() {
+            let mut pos = 0;
+            assert!(
+                decode_hlc(&buf[..cut], &mut pos).is_err(),
+                "seed {seed}: truncated stamp ({cut} bytes) decoded"
+            );
+        }
+    });
+}
+
+// -------------------------------------------------------------------
+// zoned placement invariant
+// -------------------------------------------------------------------
+
+/// Zone-aware preference lists are distinct and cover every zone
+/// before doubling up in any — for every key.
+#[test]
+fn zoned_preference_lists_cover_every_zone_first() {
+    let ring = Ring::new(NODES, 32).unwrap();
+    for key in 0..512u64 {
+        let homes = ring.replicas_for_zoned(hash_str(&key_name(key)), 3, &ZONES);
+        assert_eq!(homes.len(), 3, "key {key}: short preference list");
+        let mut sorted = homes.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "key {key}: duplicate home in {homes:?}");
+        let zones: std::collections::HashSet<usize> =
+            homes.iter().map(|&n| ZONES[n]).collect();
+        assert_eq!(zones.len(), 2, "key {key}: a DC holds no replica ({homes:?})");
+    }
+}
+
+// -------------------------------------------------------------------
+// OP_SHIP over live TCP + v6 STATS
+// -------------------------------------------------------------------
+
+/// A shipper batch applied over the wire lands on every home of the
+/// key, advances the receivers' hybrid clocks, and acks with a stamp
+/// at or above the sender's.
+#[test]
+fn ship_opcode_applies_batches_over_the_wire() {
+    // source world: a tiny flat cluster fabricates a real DVV state
+    let source = LocalCluster::new(1, 1, 1, 1).unwrap();
+    source.put("geo-k", b"from-remote-dc".to_vec(), &[]).unwrap();
+    let k = hash_str("geo-k");
+    let state = source.node(0).store().state(k);
+    let mut bytes = Vec::new();
+    <DvvMech as DurableMechanism>::encode_state(&state, &mut bytes);
+
+    let cluster = Arc::new(LocalCluster::with_zones(&[0, 1], 2, 1, 1).unwrap());
+    let server = Server::start("127.0.0.1:0", cluster.clone()).unwrap();
+    let mut client = TcpClient::connect(server.addr(), Actor::client(7)).unwrap();
+
+    let sent = HlcTimestamp::new(5_000_000, 3);
+    let (applied, acked) = client.ship(1, sent, vec![(k, bytes.clone())]).unwrap();
+    assert_eq!(applied, 1, "one state in the batch");
+    assert!(acked >= sent, "ack stamp below the sender's: {acked} < {sent}");
+    let ans = client.get("geo-k").unwrap();
+    assert_eq!(ans.values, vec![b"from-remote-dc".to_vec()]);
+    assert!(
+        (0..2).any(|n| cluster.node(n).hlc_last() >= sent),
+        "no receiver clock folded in the remote stamp"
+    );
+
+    // whole-batch rejection: one malformed state poisons the batch and
+    // nothing from it — not even the valid entry — may apply
+    let k2 = hash_str("geo-k2");
+    assert!(
+        client.ship(1, sent, vec![(k2, bytes), (k2, vec![0xFF, 0x01, 0x02])]).is_err(),
+        "a half-decodable batch must be refused"
+    );
+    for n in 0..2 {
+        assert!(
+            cluster.node(n).store().values(k2).is_empty(),
+            "node {n}: a rejected batch half-applied"
+        );
+    }
+    client.quit().unwrap();
+    server.shutdown();
+}
+
+/// The v6 STATS reply carries `zones` and `ship_lag` over the wire,
+/// and the strict decoder rejects every truncation — including the
+/// pre-v6 seven-field shape.
+#[test]
+fn stats_reports_zones_and_ship_lag_and_rejects_truncation() {
+    let cluster = Arc::new(LocalCluster::with_zones(&[0, 0, 1], 3, 2, 2).unwrap());
+    let server = Server::start("127.0.0.1:0", cluster.clone()).unwrap();
+    let mut client = TcpClient::connect(server.addr(), Actor::client(9)).unwrap();
+
+    client.put("geo-stats", b"v".to_vec(), None).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.0, 3, "node count");
+    assert_eq!(stats.7, 2, "zones field reports both DCs");
+    assert!(stats.8 >= 1, "the zone-1 home of the write is parked for the shipper");
+    cluster.anti_entropy_round();
+    let drained = client.stats().unwrap();
+    assert_eq!(drained.8, 0, "ship_lag drains to zero after a shipper round");
+    client.quit().unwrap();
+    server.shutdown();
+
+    // strict decode: all nine single-byte varints, then cut everywhere
+    let payload = protocol::encode_stats_reply(3, 64, 99, 2, 7, 100, 90, 2, 5);
+    assert_eq!(
+        protocol::decode_stats_reply(&payload).unwrap(),
+        (3, 64, 99, 2, 7, 100, 90, 2, 5)
+    );
+    for cut in 0..payload.len() {
+        assert!(
+            protocol::decode_stats_reply(&payload[..cut]).is_err(),
+            "a {cut}-byte prefix (including the pre-v6 seven-field shape) must be rejected"
+        );
+    }
+}
