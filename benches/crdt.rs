@@ -1,0 +1,194 @@
+//! CRDT datatype bench: what an ORSWOT costs at size. One set key
+//! holding thousands of elements — add/remove churn at that size
+//! (kernel and full cluster RMW), membership-read latency, full-state
+//! merge vs single-op delta apply, and the replication-bytes evidence
+//! for the delta-shaped fan-out: the encoded size of one add's delta
+//! vs the full state, plus the cluster's live `(delta, full_fallback,
+//! always_full)` ledger from the churn it just ran.
+//!
+//! Results land in `BENCH_crdt.json` (path override: `BENCH_CRDT_JSON`)
+//! so the typed path has a machine-readable baseline; `rust/ci.sh`
+//! runs this bench in quick mode to keep the file fresh.
+//!
+//! Regenerate with `cargo bench --bench crdt`.
+
+use std::hint::black_box;
+
+use dvvstore::bench_support::{Options, Stats, Suite};
+use dvvstore::clocks::Actor;
+use dvvstore::kernel::crdt::Orswot;
+use dvvstore::server::LocalCluster;
+
+fn elem(i: u64) -> Vec<u8> {
+    format!("member-{i:06}").into_bytes()
+}
+
+/// An ORSWOT preloaded with `n` elements under one actor.
+fn loaded_set(n: u64) -> Orswot {
+    let mut s = Orswot::new();
+    let actor = Actor::server(0);
+    for i in 0..n {
+        let dot = s.mint(actor);
+        s.add(elem(i), dot);
+    }
+    s
+}
+
+fn bench_kernel(suite: &mut Suite, n: u64) {
+    let param = format!("elems={n}");
+
+    // steady-state churn: add a fresh element, remove it again — the
+    // set stays at size n, the op pays the at-size insert/lookup cost
+    suite.bench("set/add_remove_churn", &param, {
+        let mut s = loaded_set(n);
+        let mut i = n;
+        move || {
+            i += 1;
+            let dot = s.mint(Actor::server(0));
+            s.add(elem(i), dot);
+            black_box(s.remove(&elem(i)).0.len());
+        }
+    });
+
+    // membership read at size: the SMEMBERS hot loop
+    suite.bench("set/members_read", &param, {
+        let s = loaded_set(n);
+        move || {
+            black_box(s.members().count());
+        }
+    });
+
+    // full-state replication: merge an identical n-element state (the
+    // idempotent re-merge every anti-entropy exchange pays)
+    suite.bench("set/merge_full_state", &param, {
+        let src = loaded_set(n);
+        let mut dst = src.clone();
+        move || {
+            dst.merge(black_box(&src));
+        }
+    });
+
+    // delta replication: apply one add's delta to an up-to-date replica
+    suite.bench("set/apply_delta", &param, {
+        let mut src = loaded_set(n);
+        let dot = src.mint(Actor::server(0));
+        let delta = src.add(elem(n + 1), dot);
+        let mut dst = src.clone();
+        move || {
+            black_box(dst.apply_delta(black_box(&delta)));
+        }
+    });
+}
+
+/// Cluster-level ops against one set key already holding `n` elements:
+/// every op is a full quorum RMW (read, join, mutate, re-encode, write).
+fn bench_cluster(suite: &mut Suite, n: u64) -> (u64, u64, u64) {
+    let param = format!("elems={n}");
+    let cluster = LocalCluster::new(3, 3, 2, 2).unwrap();
+    for i in 0..n {
+        cluster.set_add("big", &elem(i)).unwrap();
+    }
+
+    suite.bench("cluster/smembers", &param, {
+        let cluster = &cluster;
+        move || {
+            black_box(cluster.set_members("big").unwrap().len());
+        }
+    });
+
+    suite.bench("cluster/add_remove_churn", &param, {
+        let cluster = &cluster;
+        let mut i = n;
+        move || {
+            i += 1;
+            cluster.set_add("big", &elem(i)).unwrap();
+            black_box(cluster.set_remove("big", &elem(i)).unwrap().len());
+        }
+    });
+
+    cluster.crdt_repl_bytes()
+}
+
+fn json_escape_free(s: &str) -> bool {
+    s.chars().all(|c| c.is_ascii_alphanumeric() || "/_=.-".contains(c))
+}
+
+/// Hand-rolled JSON (no serde in the offline build): flat result rows
+/// plus the delta-vs-full replication byte evidence.
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    path: &str,
+    quick: bool,
+    n: u64,
+    delta_bytes: usize,
+    full_bytes: usize,
+    repl: (u64, u64, u64),
+    results: &[Stats],
+) -> std::io::Result<()> {
+    let mut rows = String::new();
+    for (i, s) in results.iter().enumerate() {
+        assert!(
+            json_escape_free(&s.name) && json_escape_free(&s.param),
+            "bench names are JSON-safe"
+        );
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"name\": \"{}\", \"param\": \"{}\", \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"min_ns\": {:.1}}}",
+            s.name, s.param, s.mean_ns, s.p50_ns, s.p95_ns, s.min_ns
+        ));
+    }
+    let (repl_delta, repl_full, repl_allfull) = repl;
+    let shipped = repl_delta + repl_full;
+    let savings = if shipped > 0 {
+        format!("{:.2}", repl_allfull as f64 / shipped as f64)
+    } else {
+        "null".to_string()
+    };
+    let json = format!(
+        "{{\n  \"suite\": \"crdt\",\n  \"quick\": {quick},\n  \"elems\": {n},\n  \
+         \"delta_bytes_one_add\": {delta_bytes},\n  \
+         \"full_state_bytes\": {full_bytes},\n  \
+         \"repl_delta_bytes\": {repl_delta},\n  \
+         \"repl_full_fallback_bytes\": {repl_full},\n  \
+         \"repl_always_full_bytes\": {repl_allfull},\n  \
+         \"always_full_over_shipped\": {savings},\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    std::fs::write(path, json)
+}
+
+fn main() {
+    let opts = Options::from_args();
+    let quick = opts.quick;
+    // "one key, thousands of elements" — trimmed in quick mode so the
+    // ci smoke run stays fast
+    let n: u64 = if quick { 512 } else { 4096 };
+    let mut suite = Suite::new("crdt", opts);
+
+    bench_kernel(&mut suite, n);
+    let repl = bench_cluster(&mut suite, n);
+
+    // byte evidence at size n: one add's delta vs the whole state
+    let (delta_bytes, full_bytes) = {
+        let mut s = loaded_set(n);
+        let dot = s.mint(Actor::server(0));
+        let delta = s.add(elem(n + 1), dot);
+        let mut dbuf = Vec::new();
+        delta.encode(&mut dbuf);
+        let mut fbuf = Vec::new();
+        s.encode(&mut fbuf);
+        (dbuf.len(), fbuf.len())
+    };
+
+    let results: Vec<Stats> = suite.results().to_vec();
+    let path =
+        std::env::var("BENCH_CRDT_JSON").unwrap_or_else(|_| "BENCH_crdt.json".to_string());
+    match write_json(&path, quick, n, delta_bytes, full_bytes, repl, &results) {
+        Ok(()) => eprintln!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+    suite.finish();
+}

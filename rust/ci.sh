@@ -47,6 +47,36 @@ export MERKLE_ITERS="${MERKLE_ITERS:-2}"
 #   GEO_ITERS=20 rust/ci.sh
 export GEO_ITERS="${GEO_ITERS:-2}"
 
+# CRDT soak knob, same shape: the datatype merge-law and backend
+# ride-along properties (rust/tests/crdt_types.rs) always run their
+# fixed seeds; CRDT_ITERS appends extra derived seeds.
+#   CRDT_ITERS=20 rust/ci.sh
+export CRDT_ITERS="${CRDT_ITERS:-2}"
+
+# Target-registration guard: with the non-standard layout (lib under
+# rust/src) cargo does NOT auto-discover rust/tests/*.rs or benches/*.rs
+# — an unregistered file silently never runs. Fail loudly instead.
+echo "==> target registration check (Cargo.toml vs rust/tests, benches)"
+missing=0
+for f in rust/tests/*.rs; do
+    name="$(basename "$f" .rs)"
+    if ! grep -qF "path = \"$f\"" Cargo.toml; then
+        echo "ERROR: $f has no [[test]] entry in Cargo.toml (name = \"$name\")" >&2
+        missing=1
+    fi
+done
+for f in benches/*.rs; do
+    name="$(basename "$f" .rs)"
+    if ! grep -qF "path = \"$f\"" Cargo.toml; then
+        echo "ERROR: $f has no [[bench]] entry in Cargo.toml (name = \"$name\")" >&2
+        missing=1
+    fi
+done
+if [[ $missing -ne 0 ]]; then
+    echo "ERROR: unregistered targets never run under 'cargo test/bench' — add them" >&2
+    exit 1
+fi
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
@@ -95,5 +125,8 @@ bench_smoke conn
 # geo: local-DC vs flat write path, shipper drain/apply throughput, and
 # whole-DC heal convergence (plus HLC stamp ops).
 bench_smoke geo
+# crdt: ORSWOT at size — add/remove churn, membership reads, delta vs
+# full-state replication bytes (one key, thousands of elements).
+bench_smoke crdt
 
 echo "ci OK"

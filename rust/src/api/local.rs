@@ -2,9 +2,10 @@
 
 use std::sync::Arc;
 
-use super::{CausalCtx, GetReply, KvClient, PutReply};
+use super::{CausalCtx, GetReply, KvClient, PutReply, TypedKvClient};
 use crate::clocks::Actor;
 use crate::error::Result;
+use crate::kernel::crdt::Dot;
 use crate::kernel::mechs::DvvMech;
 use crate::server::LocalCluster;
 use crate::store::{ShardedBackend, StorageBackend};
@@ -44,6 +45,36 @@ impl<B: StorageBackend<DvvMech>> KvClient for LocalClient<B> {
         };
         let (id, post) = self.cluster.put_api(key, value, vv, self.actor, observed)?;
         Ok(PutReply { id, ctx: post.map(|post| CausalCtx::new(post, vec![id])) })
+    }
+}
+
+impl<B: StorageBackend<DvvMech>> TypedKvClient for LocalClient<B> {
+    fn sadd(&mut self, key: &str, elem: &[u8]) -> Result<Dot> {
+        self.cluster.set_add(key, elem)
+    }
+
+    fn srem(&mut self, key: &str, elem: &[u8]) -> Result<Vec<Dot>> {
+        self.cluster.set_remove(key, elem)
+    }
+
+    fn smembers(&mut self, key: &str) -> Result<Vec<Vec<u8>>> {
+        self.cluster.set_members(key)
+    }
+
+    fn incr(&mut self, key: &str, by: i64) -> Result<i64> {
+        self.cluster.counter_incr(key, by)
+    }
+
+    fn count(&mut self, key: &str) -> Result<i64> {
+        self.cluster.counter_value(key)
+    }
+
+    fn mput(&mut self, key: &str, field: &[u8], value: &[u8]) -> Result<Dot> {
+        self.cluster.map_put(key, field, value)
+    }
+
+    fn mget(&mut self, key: &str, field: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.cluster.map_get(key, field)
     }
 }
 

@@ -38,9 +38,11 @@ use std::collections::HashMap;
 use crate::clocks::encoding::{expect_end, get_bytes, get_varint, put_varint};
 use crate::clocks::Actor;
 use crate::error::{Error, Result};
+use crate::kernel::crdt::Dot;
+use crate::oracle::SetAudit;
 use crate::store::Key;
 use crate::testkit::Rng;
-use crate::workload::{Driver, OpKind};
+use crate::workload::{Driver, OpKind, SetOpKind, SetWorkload};
 
 /// Version byte of the [`CausalCtx`] token encoding.
 pub const CTX_VERSION: u8 = 1;
@@ -190,6 +192,37 @@ pub trait KvClient {
     fn put(&mut self, key: &str, value: Vec<u8>, ctx: Option<&CausalCtx>) -> Result<PutReply>;
 }
 
+/// The typed-datatype client surface ([`crate::kernel::crdt`]):
+/// server-side CRDT ops addressed by key. Unlike GET/PUT there is no
+/// client-held context — the coordinator reads, mutates, and writes
+/// under its own causal state, so the ops are single round trips and
+/// conflict resolution never reaches the client. Implemented by all
+/// three transports; workload harnesses are written once against this
+/// trait ([`drive_set_workload`]).
+pub trait TypedKvClient: KvClient {
+    /// Add an element to an observed-remove set; returns the minted dot.
+    fn sadd(&mut self, key: &str, elem: &[u8]) -> Result<Dot>;
+
+    /// Remove an element's observed dots; returns the dots removed
+    /// (empty = the element was not present at the coordinator's read).
+    fn srem(&mut self, key: &str, elem: &[u8]) -> Result<Vec<Dot>>;
+
+    /// List a set's members.
+    fn smembers(&mut self, key: &str) -> Result<Vec<Vec<u8>>>;
+
+    /// Add a signed delta to a PN-counter; returns the post-op value.
+    fn incr(&mut self, key: &str, by: i64) -> Result<i64>;
+
+    /// Read a PN-counter's value (0 when the key is absent).
+    fn count(&mut self, key: &str) -> Result<i64>;
+
+    /// Write a field in an observed-remove map; returns the minted dot.
+    fn mput(&mut self, key: &str, field: &[u8], value: &[u8]) -> Result<Dot>;
+
+    /// Read a field from an observed-remove map (`None` = absent).
+    fn mget(&mut self, key: &str, field: &[u8]) -> Result<Option<Vec<u8>>>;
+}
+
 /// Per-client token cache: the §2 client state ("nothing but the
 /// context of the last GET"), updated from replies so no id or context
 /// is ever threaded by hand.
@@ -312,6 +345,101 @@ pub fn drive_workload<C: KvClient>(
             match outcome {
                 Ok(()) => report.ok_ops += 1,
                 Err(_) => report.failed_ops += 1,
+            }
+            completed += 1;
+            on_op(completed);
+        }
+    }
+    report
+}
+
+/// Outcome counts from [`drive_set_workload`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SetRunReport {
+    /// Operations that succeeded.
+    pub ok_ops: u64,
+    /// Operations that failed (expected under active faults).
+    pub failed_ops: u64,
+    /// Acked SADDs.
+    pub adds: u64,
+    /// Acked SREMs.
+    pub removes: u64,
+    /// Successful SMEMBERS reads.
+    pub reads: u64,
+    /// Largest membership any read returned.
+    pub max_members: usize,
+}
+
+/// Drive a seeded ORSWOT workload against one [`TypedKvClient`] per
+/// client: round-robin, closed-loop, every op's outcome recorded into
+/// the [`SetAudit`] (acked ops become claims; failed ops become taint —
+/// an in-doubt op may have partially landed). The typed-op counterpart
+/// of [`drive_workload`]: chaos tests run it unchanged across all three
+/// transports and compare [`crate::oracle::SetVerdict`]s. `on_op` fires
+/// after every completed (or failed) op, the hook fault plans step on.
+pub fn drive_set_workload<C: TypedKvClient>(
+    clients: &mut [C],
+    workload: &mut SetWorkload,
+    key: &str,
+    seed: u64,
+    audit: &SetAudit,
+    mut on_op: impl FnMut(u64),
+) -> SetRunReport {
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<bool> = vec![true; clients.len()];
+    let mut report = SetRunReport::default();
+    let mut completed: u64 = 0;
+    while live.iter().any(|&l| l) {
+        for (i, client) in clients.iter_mut().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            let Some(op) = workload.next_set_op(i, &mut rng) else {
+                live[i] = false;
+                continue;
+            };
+            let ok = match op {
+                SetOpKind::Add(idx) => {
+                    let elem = crate::workload::set_elem(idx);
+                    match client.sadd(key, &elem) {
+                        Ok(_dot) => {
+                            audit.add_ok(&elem);
+                            report.adds += 1;
+                            true
+                        }
+                        Err(_) => {
+                            audit.add_failed(&elem);
+                            false
+                        }
+                    }
+                }
+                SetOpKind::Remove(idx) => {
+                    let elem = crate::workload::set_elem(idx);
+                    match client.srem(key, &elem) {
+                        Ok(_dots) => {
+                            audit.remove_ok(&elem);
+                            report.removes += 1;
+                            true
+                        }
+                        Err(_) => {
+                            audit.remove_failed(&elem);
+                            false
+                        }
+                    }
+                }
+                SetOpKind::Members => match client.smembers(key) {
+                    Ok(members) => {
+                        report.reads += 1;
+                        report.max_members = report.max_members.max(members.len());
+                        true
+                    }
+                    Err(_) => false,
+                },
+            };
+            if ok {
+                report.ok_ops += 1;
+            } else {
+                report.failed_ops += 1;
             }
             completed += 1;
             on_op(completed);

@@ -11,12 +11,13 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use super::{CausalCtx, GetReply, KvClient, PutReply};
+use super::{CausalCtx, GetReply, KvClient, PutReply, TypedKvClient};
 use crate::clocks::encoding::{decode_vv, encode_vv};
 use crate::clocks::{Actor, VersionVector};
 use crate::cluster::ring::hash_str;
 use crate::config::StoreConfig;
 use crate::error::Result;
+use crate::kernel::crdt::Dot;
 use crate::kernel::mechs::DvvMech;
 use crate::sim::Sim;
 use crate::testkit::Rng;
@@ -117,6 +118,39 @@ impl KvClient for SimClient {
     }
 }
 
+impl TypedKvClient for SimClient {
+    // Typed payloads live in the sim's own side table (the op is a
+    // server-side RMW — the client never holds the state bytes), so
+    // these are straight delegations into the DES sync typed ops.
+    fn sadd(&mut self, key: &str, elem: &[u8]) -> Result<Dot> {
+        self.inner.borrow_mut().sim.sync_sadd(self.idx, hash_str(key), elem)
+    }
+
+    fn srem(&mut self, key: &str, elem: &[u8]) -> Result<Vec<Dot>> {
+        self.inner.borrow_mut().sim.sync_srem(self.idx, hash_str(key), elem)
+    }
+
+    fn smembers(&mut self, key: &str) -> Result<Vec<Vec<u8>>> {
+        self.inner.borrow_mut().sim.sync_smembers(self.idx, hash_str(key))
+    }
+
+    fn incr(&mut self, key: &str, by: i64) -> Result<i64> {
+        self.inner.borrow_mut().sim.sync_incr(self.idx, hash_str(key), by)
+    }
+
+    fn count(&mut self, key: &str) -> Result<i64> {
+        self.inner.borrow_mut().sim.sync_count(self.idx, hash_str(key))
+    }
+
+    fn mput(&mut self, key: &str, field: &[u8], value: &[u8]) -> Result<Dot> {
+        self.inner.borrow_mut().sim.sync_mput(self.idx, hash_str(key), field, value)
+    }
+
+    fn mget(&mut self, key: &str, field: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.inner.borrow_mut().sim.sync_mget(self.idx, hash_str(key), field)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +183,39 @@ mod tests {
             assert_eq!(sim.metrics.lost_updates, 0);
             assert!(sim.oracle.tracked() >= 3);
         });
+    }
+
+    #[test]
+    fn sim_client_typed_ops_roundtrip() {
+        let mut cfg = StoreConfig::default();
+        cfg.cluster.nodes = 3;
+        cfg.cluster.replication = 3;
+        cfg.cluster.read_quorum = 2;
+        cfg.cluster.write_quorum = 2;
+        let transport = SimTransport::new(cfg, 2, 9).unwrap();
+        let mut c0 = transport.client(0);
+        let mut c1 = transport.client(1);
+
+        c0.sadd("s", b"a").unwrap();
+        c1.sadd("s", b"b").unwrap();
+        assert_eq!(c0.smembers("s").unwrap(), vec![b"a".to_vec(), b"b".to_vec()]);
+        assert_eq!(c0.srem("s", b"a").unwrap().len(), 1);
+        assert_eq!(c1.smembers("s").unwrap(), vec![b"b".to_vec()]);
+
+        assert_eq!(c0.incr("n", 4).unwrap(), 4);
+        assert_eq!(c1.incr("n", -1).unwrap(), 3);
+        assert_eq!(c1.count("n").unwrap(), 3);
+
+        c0.mput("m", b"f", b"v").unwrap();
+        assert_eq!(c1.mget("m", b"f").unwrap(), Some(b"v".to_vec()));
+        assert_eq!(c1.mget("m", b"g").unwrap(), None);
+
+        // kind confusion is rejected, not corrupting
+        assert!(matches!(
+            c0.incr("s", 1),
+            Err(crate::error::Error::WrongType { .. })
+        ));
+        assert_eq!(c1.smembers("s").unwrap(), vec![b"b".to_vec()]);
     }
 
     #[test]

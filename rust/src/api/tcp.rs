@@ -9,9 +9,10 @@
 use std::io::{BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 
-use super::{CausalCtx, GetReply, KvClient, PutReply};
+use super::{CausalCtx, GetReply, KvClient, PutReply, TypedKvClient};
 use crate::clocks::{Actor, HlcTimestamp};
 use crate::error::{Error, Result};
+use crate::kernel::crdt::Dot;
 use crate::server::protocol::{self, BinRequest};
 
 /// A connected protocol-v2 client.
@@ -225,15 +226,14 @@ impl TcpClient {
         }
     }
 
-    /// Server statistics:
-    /// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes,
-    /// merkle_root, zones, ship_lag)`.
-    #[allow(clippy::type_complexity)]
-    pub fn stats(&mut self) -> Result<(u64, u64, u64, u64, u64, u64, u64, u64, u64)> {
+    /// Server statistics ([`protocol::StatsReply`]): cluster shape,
+    /// storage/replication gauges, and the per-datatype typed key
+    /// counts (`sets`/`counters`/`maps`).
+    pub fn stats(&mut self) -> Result<protocol::StatsReply> {
         match self.roundtrip(&BinRequest::Stats)? {
             (protocol::OP_STATS_REPLY, payload) => {
                 let stats = protocol::decode_stats_reply(&payload)?;
-                self.seen_epoch = self.seen_epoch.max(stats.4);
+                self.seen_epoch = self.seen_epoch.max(stats.epoch);
                 Ok(stats)
             }
             reply => Err(remote_err(reply)),
@@ -352,6 +352,67 @@ impl KvClient for TcpClient {
                 let ctx = if token.is_empty() { None } else { Some(CausalCtx::decode(&token)?) };
                 Ok(PutReply { id, ctx })
             }
+            reply => Err(remote_err(reply)),
+        }
+    }
+}
+
+impl TypedKvClient for TcpClient {
+    // One typed-opcode frame out, one typed reply frame back; the RMW
+    // itself runs server-side, so these stay single-roundtrip.
+    fn sadd(&mut self, key: &str, elem: &[u8]) -> Result<Dot> {
+        let req = BinRequest::SAdd { key: key.to_string(), elem: elem.to_vec() };
+        match self.roundtrip(&req)? {
+            (protocol::OP_DOT_REPLY, payload) => protocol::decode_dot_reply(&payload),
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    fn srem(&mut self, key: &str, elem: &[u8]) -> Result<Vec<Dot>> {
+        let req = BinRequest::SRem { key: key.to_string(), elem: elem.to_vec() };
+        match self.roundtrip(&req)? {
+            (protocol::OP_DOTS_REPLY, payload) => protocol::decode_dots_reply(&payload),
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    fn smembers(&mut self, key: &str) -> Result<Vec<Vec<u8>>> {
+        match self.roundtrip(&BinRequest::SMembers { key: key.to_string() })? {
+            (protocol::OP_MEMBERS_REPLY, payload) => protocol::decode_members_reply(&payload),
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    fn incr(&mut self, key: &str, by: i64) -> Result<i64> {
+        match self.roundtrip(&BinRequest::Incr { key: key.to_string(), by })? {
+            (protocol::OP_COUNT_REPLY, payload) => protocol::decode_count_reply(&payload),
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    fn count(&mut self, key: &str) -> Result<i64> {
+        match self.roundtrip(&BinRequest::Count { key: key.to_string() })? {
+            (protocol::OP_COUNT_REPLY, payload) => protocol::decode_count_reply(&payload),
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    fn mput(&mut self, key: &str, field: &[u8], value: &[u8]) -> Result<Dot> {
+        let req = BinRequest::MPut {
+            key: key.to_string(),
+            field: field.to_vec(),
+            value: value.to_vec(),
+        };
+        match self.roundtrip(&req)? {
+            (protocol::OP_DOT_REPLY, payload) => protocol::decode_dot_reply(&payload),
+            reply => Err(remote_err(reply)),
+        }
+    }
+
+    fn mget(&mut self, key: &str, field: &[u8]) -> Result<Option<Vec<u8>>> {
+        let req = BinRequest::MGet { key: key.to_string(), field: field.to_vec() };
+        match self.roundtrip(&req)? {
+            (protocol::OP_FIELD_REPLY, payload) => protocol::decode_field_reply(&payload),
             reply => Err(remote_err(reply)),
         }
     }

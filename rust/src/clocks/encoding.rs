@@ -47,6 +47,19 @@ pub fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
     }
 }
 
+/// Append a signed value as a zigzag-mapped varint (small magnitudes of
+/// either sign stay small on the wire) — used by the counter protocol
+/// replies ([`crate::server::protocol`]).
+pub fn put_zigzag(buf: &mut Vec<u8>, value: i64) {
+    put_varint(buf, ((value << 1) ^ (value >> 63)) as u64);
+}
+
+/// Read a zigzag-mapped signed varint (see [`put_zigzag`]).
+pub fn get_zigzag(buf: &[u8], pos: &mut usize) -> Result<i64> {
+    let raw = get_varint(buf, pos)?;
+    Ok(((raw >> 1) as i64) ^ -((raw & 1) as i64))
+}
+
 /// Bounds-checked slice read, advancing `pos`: decoders of remote input
 /// must error on truncation, never index past the buffer.
 pub fn get_bytes<'a>(buf: &'a [u8], pos: &mut usize, len: usize) -> Result<&'a [u8]> {
@@ -221,6 +234,23 @@ mod tests {
             let mut pos = 0;
             assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
             assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn zigzag_roundtrip_boundaries() {
+        for v in [0i64, 1, -1, 63, -64, 64, -65, i64::MAX, i64::MIN] {
+            let mut buf = Vec::new();
+            put_zigzag(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_zigzag(&buf, &mut pos).unwrap(), v, "value {v}");
+            assert_eq!(pos, buf.len());
+        }
+        // small magnitudes of either sign stay one byte
+        for v in [-64i64, 63] {
+            let mut buf = Vec::new();
+            put_zigzag(&mut buf, v);
+            assert_eq!(buf.len(), 1, "value {v}");
         }
     }
 

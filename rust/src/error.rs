@@ -50,6 +50,16 @@ pub enum Error {
     #[error("codec: {0}")]
     Codec(String),
 
+    /// A typed CRDT op addressed a key holding a different datatype
+    /// (e.g. `INCR` on a set key); see [`crate::kernel::crdt`].
+    #[error("wrong datatype: expected {expected}, found {found}")]
+    WrongType {
+        /// The datatype the key actually holds.
+        expected: &'static str,
+        /// The datatype the op (or incoming state) carried.
+        found: &'static str,
+    },
+
     /// Generic I/O.
     #[error(transparent)]
     Io(#[from] std::io::Error),

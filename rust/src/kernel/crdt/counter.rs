@@ -1,0 +1,303 @@
+//! PN-counter: per-actor increment/decrement pairs merged by max.
+//!
+//! Each actor owns one `(pos, neg)` row that only it ever advances (the
+//! server's typed read-modify-write path guarantees single-writer rows
+//! the same way it guarantees contiguous dot mints). Rows are monotone
+//! non-decreasing, so pointwise max is a join and the counter's value is
+//! `Σpos − Σneg`. A row is also its own delta: shipping the new absolute
+//! `(actor, pos, neg)` is always safe to max-merge, no causal context
+//! needed.
+
+use crate::clocks::encoding::{get_varint, put_varint};
+use crate::clocks::Actor;
+use crate::error::{Error, Result};
+
+/// A P/N counter: sorted per-actor `(pos, neg)` rows.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PnCounter {
+    /// `(actor, increments, decrements)`, sorted by actor; never both 0.
+    rows: Vec<(Actor, u64, u64)>,
+}
+
+/// One counter row's new absolute value — the whole delta of an
+/// increment (see [`super::CrdtDelta`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterDelta {
+    /// The incrementing actor.
+    pub actor: Actor,
+    /// The actor's total increments after the op.
+    pub pos: u64,
+    /// The actor's total decrements after the op.
+    pub neg: u64,
+}
+
+impl PnCounter {
+    /// The zero counter.
+    pub fn new() -> PnCounter {
+        PnCounter::default()
+    }
+
+    /// Current value: `Σpos − Σneg`, saturating at the `i64` bounds.
+    pub fn value(&self) -> i64 {
+        let mut acc: i64 = 0;
+        for &(_, p, n) in &self.rows {
+            acc = acc.saturating_add_unsigned(p).saturating_sub_unsigned(n);
+        }
+        acc
+    }
+
+    /// Number of actor rows (metadata accounting).
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn row_mut(&mut self, actor: Actor) -> &mut (Actor, u64, u64) {
+        let i = match self.rows.binary_search_by_key(&actor, |&(a, _, _)| a) {
+            Ok(i) => i,
+            Err(i) => {
+                self.rows.insert(i, (actor, 0, 0));
+                i
+            }
+        };
+        &mut self.rows[i]
+    }
+
+    /// Apply a (possibly negative) increment as `actor` and return the
+    /// row delta. Only sound when this state holds all of `actor`'s
+    /// prior increments (single-writer rows). A zero increment changes
+    /// nothing but still reports the current row.
+    pub fn incr(&mut self, actor: Actor, by: i64) -> CounterDelta {
+        if by == 0 {
+            let (p, n) = match self.rows.binary_search_by_key(&actor, |&(a, _, _)| a) {
+                Ok(i) => (self.rows[i].1, self.rows[i].2),
+                Err(_) => (0, 0),
+            };
+            return CounterDelta { actor, pos: p, neg: n };
+        }
+        let row = self.row_mut(actor);
+        if by > 0 {
+            row.1 = row.1.saturating_add(by as u64);
+        } else {
+            row.2 = row.2.saturating_add(by.unsigned_abs());
+        }
+        CounterDelta { actor, pos: row.1, neg: row.2 }
+    }
+
+    /// Join: pointwise max per row (rows are monotone, single-writer).
+    pub fn merge(&mut self, other: &PnCounter) {
+        for &(actor, p, n) in &other.rows {
+            let row = self.row_mut(actor);
+            row.1 = row.1.max(p);
+            row.2 = row.2.max(n);
+        }
+    }
+
+    /// Apply a row delta: max-merge the absolute row. Always safe — no
+    /// causal precondition (see module docs).
+    pub fn apply_delta(&mut self, d: &CounterDelta) {
+        if d.pos == 0 && d.neg == 0 {
+            return;
+        }
+        let row = self.row_mut(d.actor);
+        row.1 = row.1.max(d.pos);
+        row.2 = row.2.max(d.neg);
+    }
+
+    /// Append the canonical encoding: sorted rows.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, self.rows.len() as u64);
+        for &(a, p, n) in &self.rows {
+            put_varint(buf, u64::from(a.0));
+            put_varint(buf, p);
+            put_varint(buf, n);
+        }
+    }
+
+    /// Decode one counter: rows strictly ascending by actor and never
+    /// all-zero (canonical states don't store empty rows).
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<PnCounter> {
+        let count = get_varint(buf, pos)?;
+        let cap = (count as usize).min(buf.len().saturating_sub(*pos) / 3);
+        let mut rows: Vec<(Actor, u64, u64)> = Vec::with_capacity(cap);
+        for _ in 0..count {
+            let a = get_varint(buf, pos)?;
+            let a = u32::try_from(a)
+                .map_err(|_| Error::Codec(format!("counter actor {a} out of range")))?;
+            let p = get_varint(buf, pos)?;
+            let n = get_varint(buf, pos)?;
+            if p == 0 && n == 0 {
+                return Err(Error::Codec("empty counter row".into()));
+            }
+            if let Some(&(last, _, _)) = rows.last() {
+                if last >= Actor(a) {
+                    return Err(Error::Codec("counter rows out of order".into()));
+                }
+            }
+            rows.push((Actor(a), p, n));
+        }
+        Ok(PnCounter { rows })
+    }
+}
+
+impl CounterDelta {
+    /// Append the wire encoding.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, u64::from(self.actor.0));
+        put_varint(buf, self.pos);
+        put_varint(buf, self.neg);
+    }
+
+    /// Decode one row delta.
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<CounterDelta> {
+        let a = get_varint(buf, pos)?;
+        let a = u32::try_from(a)
+            .map_err(|_| Error::Codec(format!("counter actor {a} out of range")))?;
+        let p = get_varint(buf, pos)?;
+        let n = get_varint(buf, pos)?;
+        Ok(CounterDelta { actor: Actor(a), pos: p, neg: n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{forall, from_fn, Config};
+
+    fn a(i: u32) -> Actor {
+        Actor::server(i)
+    }
+
+    #[test]
+    fn incr_decr_value() {
+        let mut c = PnCounter::new();
+        c.incr(a(0), 5);
+        c.incr(a(1), 3);
+        c.incr(a(0), -2);
+        assert_eq!(c.value(), 6);
+        assert_eq!(c.rows(), 2);
+        let d = c.incr(a(0), 0);
+        assert_eq!((d.pos, d.neg), (5, 2), "zero incr reports the row");
+        assert_eq!(c.value(), 6);
+    }
+
+    #[test]
+    fn concurrent_rows_sum_after_merge() {
+        let (mut x, mut y) = (PnCounter::new(), PnCounter::new());
+        x.incr(a(0), 10);
+        y.incr(a(1), -4);
+        let mut xy = x.clone();
+        xy.merge(&y);
+        let mut yx = y.clone();
+        yx.merge(&x);
+        assert_eq!(xy, yx);
+        assert_eq!(xy.value(), 6);
+    }
+
+    #[test]
+    fn merge_is_max_not_sum_per_row() {
+        // the same actor's history merged twice must not double-count
+        let mut x = PnCounter::new();
+        x.incr(a(0), 7);
+        let snapshot = x.clone();
+        x.incr(a(0), 1);
+        x.merge(&snapshot);
+        assert_eq!(x.value(), 8, "stale row must not add");
+    }
+
+    #[test]
+    fn row_delta_max_merges() {
+        let mut x = PnCounter::new();
+        let mut follower = PnCounter::new();
+        let d1 = x.incr(a(0), 3);
+        let d2 = x.incr(a(0), -1);
+        // out-of-order and duplicated delivery both converge
+        follower.apply_delta(&d2);
+        follower.apply_delta(&d1);
+        follower.apply_delta(&d2);
+        assert_eq!(follower, x);
+    }
+
+    #[test]
+    fn value_saturates() {
+        let mut c = PnCounter::new();
+        c.incr(a(0), i64::MAX);
+        c.incr(a(0), i64::MAX);
+        assert_eq!(c.value(), i64::MAX);
+        let mut d = PnCounter::new();
+        d.incr(a(0), i64::MIN);
+        d.incr(a(0), i64::MIN);
+        assert_eq!(d.value(), i64::MIN);
+    }
+
+    #[test]
+    fn prop_merge_laws() {
+        let arb = |rng: &mut crate::testkit::Rng, size: usize| {
+            let mut c = PnCounter::new();
+            for _ in 0..(size % 8) {
+                let actor = a(rng.below(4) as u32);
+                let by = rng.below(20) as i64 - 10;
+                c.incr(actor, by);
+            }
+            c
+        };
+        forall(
+            &Config::default().cases(200),
+            from_fn(move |rng, size| (arb(rng, size), arb(rng, size), arb(rng, size))),
+            |(x, y, z)| {
+                let mut xy = x.clone();
+                xy.merge(y);
+                let mut yx = y.clone();
+                yx.merge(x);
+                let mut xx = x.clone();
+                xx.merge(x);
+                let mut xy_z = xy.clone();
+                xy_z.merge(z);
+                let mut yz = y.clone();
+                yz.merge(z);
+                let mut x_yz = x.clone();
+                x_yz.merge(&yz);
+                xy == yx && xx == *x && xy_z == x_yz
+            },
+        );
+    }
+
+    #[test]
+    fn codec_roundtrips_and_rejects_corruption() {
+        let mut c = PnCounter::new();
+        c.incr(a(0), 500);
+        c.incr(a(3), -1);
+        let mut buf = Vec::new();
+        c.encode(&mut buf);
+        let mut pos = 0;
+        assert_eq!(PnCounter::decode(&buf, &mut pos).unwrap(), c);
+        assert_eq!(pos, buf.len());
+
+        // truncation at every boundary errors, never panics
+        for cut in 0..buf.len() {
+            let mut pos = 0;
+            if let Ok(short) = PnCounter::decode(&buf[..cut], &mut pos) {
+                assert_ne!((short, pos), (c.clone(), buf.len()));
+            }
+        }
+
+        // an all-zero row is non-canonical
+        let mut bad = Vec::new();
+        put_varint(&mut bad, 1);
+        put_varint(&mut bad, 0);
+        put_varint(&mut bad, 0);
+        put_varint(&mut bad, 0);
+        let mut pos = 0;
+        assert!(PnCounter::decode(&bad, &mut pos).is_err());
+
+        // out-of-order rows are non-canonical
+        let mut bad = Vec::new();
+        put_varint(&mut bad, 2);
+        for row in [(1u64, 1u64, 0u64), (0, 1, 0)] {
+            put_varint(&mut bad, row.0);
+            put_varint(&mut bad, row.1);
+            put_varint(&mut bad, row.2);
+        }
+        let mut pos = 0;
+        assert!(PnCounter::decode(&bad, &mut pos).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! [`CrdtMech`]: a [`Mechanism`] adapter that lets a [`TypedState`] ride
+//! the storage stack *directly* — `KeyStore` stripe locks, every
+//! [`StorageBackend`](crate::store::StorageBackend) (in-memory, sharded,
+//! durable/WAL), Merkle anti-entropy — with zero changes to any of them.
+//!
+//! The server's typed ops don't need this adapter (they store encoded
+//! [`TypedState`] blobs as register payloads over the existing DVV
+//! mechanism); it exists so tests can demonstrate the "rides paths
+//! unchanged" claim at the `KeyStore` level: install typed states with
+//! `merge_key`, crash and recover a [`DurableBackend`]
+//! (crate::store::DurableBackend), walk Merkle trees — all driven by the
+//! CRDT join.
+//!
+//! State is `Option<TypedState>`: `None` is the absent key (the
+//! `Default` the store conjures on first touch), and a merge into it
+//! adopts the incoming state's kind. Merging mismatched kinds keeps the
+//! left state (never panics) — the server-level typed ops reject the op
+//! with [`Error::WrongType`](crate::Error::WrongType) before any state
+//! is touched, so at this layer a mismatch only arises from hostile or
+//! corrupt input and keep-left is the conservative join.
+
+use crate::clocks::Actor;
+use crate::kernel::mechanism::{DurableMechanism, Mechanism, Val, WriteMeta};
+
+use super::TypedState;
+
+/// Mechanism adapter exposing CRDT join as the replica-merge operation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CrdtMech;
+
+impl Mechanism for CrdtMech {
+    const NAME: &'static str = "crdt";
+
+    /// Typed ops carry their context inside the state; the register-path
+    /// context is unused.
+    type Context = ();
+
+    type State = Option<TypedState>;
+
+    fn read(&self, _st: &Self::State) -> (Vec<Val>, ()) {
+        // Typed reads go through `TypedState` accessors, not sibling
+        // lists; the register view of a CRDT key has no siblings.
+        (Vec::new(), ())
+    }
+
+    fn write(
+        &self,
+        _st: &mut Self::State,
+        _ctx: &(),
+        _val: Val,
+        _coord: Actor,
+        _meta: &WriteMeta,
+    ) {
+        // Mutation happens through the datatype APIs (add/remove/incr/
+        // put) under the server's typed read-mutate-write path; the
+        // register write verb is deliberately inert here.
+    }
+
+    fn merge(&self, st: &mut Self::State, incoming: &Self::State) {
+        match (st.as_mut(), incoming) {
+            (None, Some(inc)) => *st = Some(inc.clone()),
+            (Some(mine), Some(inc)) => {
+                // keep-left on kind mismatch; see module docs
+                let _ = mine.merge(inc);
+            }
+            (_, None) => {}
+        }
+    }
+
+    fn values(&self, _st: &Self::State) -> Vec<Val> {
+        Vec::new()
+    }
+
+    fn metadata_bytes(&self, st: &Self::State) -> usize {
+        let mut buf = Vec::new();
+        Self::encode_state(st, &mut buf);
+        buf.len()
+    }
+
+    fn context_bytes(&self, _ctx: &()) -> usize {
+        0
+    }
+
+    fn state_digest(st: &Self::State) -> u64 {
+        crate::kernel::digest::of_encoded(|buf| Self::encode_state(st, buf))
+    }
+}
+
+impl DurableMechanism for CrdtMech {
+    /// A leading `0` byte is the absent state; otherwise the
+    /// [`TypedState`] codec's kind tags (1..=3) follow.
+    fn encode_state(st: &Self::State, buf: &mut Vec<u8>) {
+        match st {
+            None => buf.push(0),
+            Some(st) => st.encode_state(buf),
+        }
+    }
+
+    fn decode_state(buf: &[u8], pos: &mut usize) -> crate::Result<Self::State> {
+        match buf.get(*pos) {
+            Some(0) => {
+                *pos += 1;
+                Ok(None)
+            }
+            Some(_) => Ok(Some(TypedState::decode_state(buf, pos)?)),
+            None => Err(crate::Error::Codec("empty crdt state".into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{CrdtKind, Dot, Orswot};
+    use super::*;
+
+    fn set_with(elems: &[&[u8]]) -> TypedState {
+        let mut s = Orswot::new();
+        for (i, e) in elems.iter().enumerate() {
+            s.add(e.to_vec(), Dot::new(Actor::server(0), (i + 1) as u64));
+        }
+        TypedState::Set(s)
+    }
+
+    #[test]
+    fn merge_adopts_incoming_kind_on_absent_state() {
+        let m = CrdtMech;
+        let mut st: Option<TypedState> = None;
+        m.merge(&mut st, &Some(set_with(&[b"x"])));
+        assert_eq!(st.as_ref().map(TypedState::kind), Some(CrdtKind::Set));
+    }
+
+    #[test]
+    fn merge_keeps_left_on_kind_mismatch() {
+        let m = CrdtMech;
+        let mut st = Some(set_with(&[b"x"]));
+        let before = st.clone();
+        m.merge(&mut st, &Some(TypedState::fresh(CrdtKind::Counter)));
+        assert_eq!(st, before);
+    }
+
+    #[test]
+    fn codec_roundtrips_absent_and_present() {
+        for st in [None, Some(set_with(&[b"x", b"y"]))] {
+            let mut buf = Vec::new();
+            CrdtMech::encode_state(&st, &mut buf);
+            let mut pos = 0;
+            assert_eq!(CrdtMech::decode_state(&buf, &mut pos).unwrap(), st);
+            assert_eq!(pos, buf.len());
+        }
+        let mut pos = 0;
+        assert!(CrdtMech::decode_state(&[], &mut pos).is_err());
+    }
+
+    #[test]
+    fn digest_distinguishes_states_and_is_merge_stable() {
+        let m = CrdtMech;
+        let a = Some(set_with(&[b"x"]));
+        let b = Some(set_with(&[b"x", b"y"]));
+        assert_ne!(CrdtMech::state_digest(&a), CrdtMech::state_digest(&b));
+        assert_ne!(CrdtMech::state_digest(&None), CrdtMech::state_digest(&a));
+        let mut ab = a.clone();
+        m.merge(&mut ab, &b);
+        let mut ba = b.clone();
+        m.merge(&mut ba, &a);
+        assert_eq!(CrdtMech::state_digest(&ab), CrdtMech::state_digest(&ba));
+    }
+}

@@ -1,0 +1,507 @@
+//! CRDT datatype layer on the causal kernel (ROADMAP item 4).
+//!
+//! The paper's per-server dot names each write's exact causal position —
+//! which is precisely the identifier an *observed-remove* datatype needs
+//! to distinguish "remove what I saw" from "remove what I never saw".
+//! This module builds three datatypes on that identifier:
+//!
+//! * [`Orswot`] — an optimized observed-remove set (the Riak bigsets
+//!   lineage): adds are tagged with dots minted from per-`(key, actor)`
+//!   contiguous counters, removes keep **no tombstones** — the set's
+//!   causal clock covers them;
+//! * [`PnCounter`] — per-actor P/N pairs merged by pointwise max;
+//! * [`OrMap`] — ORSWOT-keyed fields carrying register values,
+//!   remove-wins on the field's *observed* dots, add-wins against
+//!   unobserved concurrent puts.
+//!
+//! Each state is wrapped in [`TypedState`] with a one-byte kind tag and a
+//! canonical self-delimiting codec (`encode_state`/`decode_state`) plus a
+//! [`state_digest`](TypedState::state_digest), so a typed value rides the
+//! existing register paths — `StorageBackend`, WAL, Merkle anti-entropy,
+//! SHIP — as an opaque payload, completely unchanged.
+//!
+//! # Dot-minting discipline (the false-cover hazard)
+//!
+//! An ORSWOT's clock is a [`VersionVector`]: holding `(a, 5)` silently
+//! claims *every* `a:n` with `n <= 5` was observed. Minting dots from any
+//! gap-producing source (a global id counter, say) therefore lets a
+//! replica's clock "cover" dots it never saw, and a later merge would
+//! destroy the concurrent adds carrying them. The safe discipline, used
+//! by every mutator here and enforced by the server's typed read-mutate-
+//! write path, is: **a dot for actor `a` is `a`'s clock entry + 1, minted
+//! from a state that contains all of `a`'s prior mints** (per-actor
+//! contiguous counters — the same rule the paper's per-server DVV dots
+//! follow). Restart/wipe state loss is handled one level up by bumping
+//! the actor's *epoch* (a fresh actor id), never by reusing counters.
+//!
+//! # Delta replication
+//!
+//! Every mutator also returns a [`CrdtDelta`]: the added/removed dots
+//! plus the causal context before and after the op — bytes proportional
+//! to the *change*, not the collection. A delta applies to a receiver
+//! whose clock dominates `ctx_before` (it has seen everything the sender
+//! had); receivers that can't cover it fall back to full-state merge.
+//! Replaying a sender's delta stream in causal order reproduces its full
+//! state exactly; an out-of-order receiver is never corrupted — the
+//! precondition fails closed. See `ARCHITECTURE.md` "CRDT layer".
+
+pub mod counter;
+pub mod mech;
+pub mod ormap;
+pub mod orswot;
+
+pub use counter::{CounterDelta, PnCounter};
+pub use mech::CrdtMech;
+pub use ormap::{MapDelta, OrMap};
+pub use orswot::{Orswot, SetDelta};
+
+use std::fmt;
+
+use crate::clocks::encoding::{get_varint, put_varint};
+use crate::clocks::{Actor, VersionVector};
+use crate::error::{Error, Result};
+
+/// One write's exact causal position: `(actor, counter)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Dot {
+    /// The minting actor (a server id + restart epoch, see module docs).
+    pub actor: Actor,
+    /// Per-`(key, actor)` contiguous counter, starting at 1.
+    pub counter: u64,
+}
+
+impl Dot {
+    /// Construct a dot.
+    pub fn new(actor: Actor, counter: u64) -> Dot {
+        Dot { actor, counter }
+    }
+}
+
+impl fmt::Display for Dot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.actor.0, self.counter)
+    }
+}
+
+/// The epoch-namespaced actor a node mints typed dots under: 1024 ids
+/// per node, one per restart/wipe generation, all below
+/// [`Actor::CLIENT_BASE`]. Shared by the threaded cluster's typed RMW
+/// and the DES mirror — both worlds must agree on the actor space for
+/// the mint discipline above to compose across transports.
+pub fn mint_actor(node: usize, epoch: u64) -> Actor {
+    debug_assert!(node < 1024, "typed actor space assumes < 1024 nodes");
+    Actor::server((epoch.min(1023) as u32) * 1024 + node as u32)
+}
+
+/// Append a dot (varint actor + varint counter).
+pub(crate) fn encode_dot(d: &Dot, buf: &mut Vec<u8>) {
+    put_varint(buf, u64::from(d.actor.0));
+    put_varint(buf, d.counter);
+}
+
+/// Decode a dot; counters of 0 are malformed (mints start at 1).
+pub(crate) fn decode_dot(buf: &[u8], pos: &mut usize) -> Result<Dot> {
+    let actor = get_varint(buf, pos)?;
+    let actor = u32::try_from(actor)
+        .map_err(|_| Error::Codec(format!("dot actor {actor} out of range")))?;
+    let counter = get_varint(buf, pos)?;
+    if counter == 0 {
+        return Err(Error::Codec("dot counter 0 (mints start at 1)".into()));
+    }
+    Ok(Dot::new(Actor(actor), counter))
+}
+
+/// Append a sorted dot list with a count prefix.
+pub(crate) fn encode_dots(dots: &[Dot], buf: &mut Vec<u8>) {
+    put_varint(buf, dots.len() as u64);
+    for d in dots {
+        encode_dot(d, buf);
+    }
+}
+
+/// Decode a dot list, requiring strictly ascending order (canonical
+/// encodings digest stably) and capping the pre-allocation by the bytes
+/// actually remaining (remote input must not pick allocation sizes).
+pub(crate) fn decode_dots(buf: &[u8], pos: &mut usize) -> Result<Vec<Dot>> {
+    let count = get_varint(buf, pos)?;
+    let cap = (count as usize).min(buf.len().saturating_sub(*pos) / 2);
+    let mut dots = Vec::with_capacity(cap);
+    for _ in 0..count {
+        let d = decode_dot(buf, pos)?;
+        if let Some(&last) = dots.last() {
+            if d <= last {
+                return Err(Error::Codec(format!("dots out of order: {d} after {last}")));
+            }
+        }
+        dots.push(d);
+    }
+    Ok(dots)
+}
+
+/// Datatype kind: the first byte of every encoded [`TypedState`], and
+/// what a typed op checks before touching a key (see
+/// [`Error::WrongType`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CrdtKind {
+    /// Observed-remove set ([`Orswot`]).
+    Set,
+    /// Per-actor P/N counter ([`PnCounter`]).
+    Counter,
+    /// Observed-remove field map ([`OrMap`]).
+    Map,
+}
+
+impl CrdtKind {
+    /// Wire tag byte.
+    pub fn tag(self) -> u8 {
+        match self {
+            CrdtKind::Set => 1,
+            CrdtKind::Counter => 2,
+            CrdtKind::Map => 3,
+        }
+    }
+
+    /// Parse a wire tag byte.
+    pub fn from_tag(tag: u8) -> Result<CrdtKind> {
+        match tag {
+            1 => Ok(CrdtKind::Set),
+            2 => Ok(CrdtKind::Counter),
+            3 => Ok(CrdtKind::Map),
+            other => Err(Error::Codec(format!("unknown datatype tag {other}"))),
+        }
+    }
+
+    /// Human name (error messages, STATS).
+    pub fn name(self) -> &'static str {
+        match self {
+            CrdtKind::Set => "set",
+            CrdtKind::Counter => "counter",
+            CrdtKind::Map => "map",
+        }
+    }
+}
+
+impl fmt::Display for CrdtKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A typed CRDT value, stored as a register payload: the kind tag plus
+/// the datatype state. This is what the server's typed ops decode from
+/// sibling blobs, join, mutate, and write back — concurrent register
+/// siblings collapse by CRDT merge at the next read.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TypedState {
+    /// An observed-remove set.
+    Set(Orswot),
+    /// A P/N counter.
+    Counter(PnCounter),
+    /// An observed-remove field map.
+    Map(OrMap),
+}
+
+impl TypedState {
+    /// Fresh (empty) state of the given kind.
+    pub fn fresh(kind: CrdtKind) -> TypedState {
+        match kind {
+            CrdtKind::Set => TypedState::Set(Orswot::new()),
+            CrdtKind::Counter => TypedState::Counter(PnCounter::new()),
+            CrdtKind::Map => TypedState::Map(OrMap::new()),
+        }
+    }
+
+    /// This state's kind.
+    pub fn kind(&self) -> CrdtKind {
+        match self {
+            TypedState::Set(_) => CrdtKind::Set,
+            TypedState::Counter(_) => CrdtKind::Counter,
+            TypedState::Map(_) => CrdtKind::Map,
+        }
+    }
+
+    /// The state's causal clock (empty for counters, which carry no
+    /// dots) — what a replication coverage check compares a delta's
+    /// `ctx_before` against.
+    pub fn clock(&self) -> VersionVector {
+        match self {
+            TypedState::Set(s) => s.clock().clone(),
+            TypedState::Counter(_) => VersionVector::new(),
+            TypedState::Map(m) => m.clock().clone(),
+        }
+    }
+
+    /// Join another state of the same kind into this one. A kind
+    /// mismatch (two clients raced different types onto one key) keeps
+    /// `self` untouched and reports the conflict — it never panics.
+    pub fn merge(&mut self, other: &TypedState) -> Result<()> {
+        match (self, other) {
+            (TypedState::Set(a), TypedState::Set(b)) => {
+                a.merge(b);
+                Ok(())
+            }
+            (TypedState::Counter(a), TypedState::Counter(b)) => {
+                a.merge(b);
+                Ok(())
+            }
+            (TypedState::Map(a), TypedState::Map(b)) => {
+                a.merge(b);
+                Ok(())
+            }
+            (me, other) => Err(Error::WrongType {
+                expected: me.kind().name(),
+                found: other.kind().name(),
+            }),
+        }
+    }
+
+    /// Append the canonical encoding: kind tag byte + state body.
+    pub fn encode_state(&self, buf: &mut Vec<u8>) {
+        buf.push(self.kind().tag());
+        match self {
+            TypedState::Set(s) => s.encode(buf),
+            TypedState::Counter(c) => c.encode(buf),
+            TypedState::Map(m) => m.encode(buf),
+        }
+    }
+
+    /// Canonical encoding as a fresh buffer (the register payload).
+    pub fn encode_to_vec(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(64);
+        self.encode_state(&mut buf);
+        buf
+    }
+
+    /// Decode one state starting at `pos`. Strict: truncation,
+    /// out-of-order entries, uncovered dots, and trailing garbage after
+    /// a [`decode`](TypedState::decode) all error — never panic.
+    pub fn decode_state(buf: &[u8], pos: &mut usize) -> Result<TypedState> {
+        let tag = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::Codec("empty typed state".into()))?;
+        *pos += 1;
+        match CrdtKind::from_tag(tag)? {
+            CrdtKind::Set => Ok(TypedState::Set(Orswot::decode(buf, pos)?)),
+            CrdtKind::Counter => Ok(TypedState::Counter(PnCounter::decode(buf, pos)?)),
+            CrdtKind::Map => Ok(TypedState::Map(OrMap::decode(buf, pos)?)),
+        }
+    }
+
+    /// Decode a whole buffer as one state (rejects trailing bytes).
+    pub fn decode(buf: &[u8]) -> Result<TypedState> {
+        let mut pos = 0;
+        let st = TypedState::decode_state(buf, &mut pos)?;
+        crate::clocks::encoding::expect_end(buf, pos)?;
+        Ok(st)
+    }
+
+    /// 64-bit digest of the state for the anti-entropy Merkle trees.
+    /// The codec is canonical (entries sorted, clocks sorted), so
+    /// converged replicas digest identically regardless of merge order.
+    pub fn state_digest(&self) -> u64 {
+        crate::kernel::digest::of_encoded(|buf| self.encode_state(buf))
+    }
+}
+
+/// The change one typed mutation made: added/removed dots plus the
+/// mutating replica's causal context before and after the op. Bytes are
+/// proportional to the change, not the collection — what a delta-shaped
+/// PUT fan-out or shipper batch carries instead of the whole state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CrdtDelta {
+    /// An ORSWOT add or remove.
+    Set(SetDelta),
+    /// One counter row's new absolute value.
+    Counter(CounterDelta),
+    /// An OR-Map field put or remove.
+    Map(MapDelta),
+}
+
+impl CrdtDelta {
+    /// The datatype this delta mutates.
+    pub fn kind(&self) -> CrdtKind {
+        match self {
+            CrdtDelta::Set(_) => CrdtKind::Set,
+            CrdtDelta::Counter(_) => CrdtKind::Counter,
+            CrdtDelta::Map(_) => CrdtKind::Map,
+        }
+    }
+
+    /// The sender's causal context *before* the op: a receiver may apply
+    /// the delta only when its own clock dominates this (it has observed
+    /// everything the sender had — the full-state-fallback decision).
+    /// Counter deltas carry no context (row max-merge is always safe).
+    pub fn ctx_before(&self) -> Option<&VersionVector> {
+        match self {
+            CrdtDelta::Set(d) => Some(&d.ctx_before),
+            CrdtDelta::Counter(_) => None,
+            CrdtDelta::Map(d) => Some(&d.ctx_before),
+        }
+    }
+
+    /// Append the wire encoding: kind tag + delta body.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        buf.push(self.kind().tag());
+        match self {
+            CrdtDelta::Set(d) => d.encode(buf),
+            CrdtDelta::Counter(d) => d.encode(buf),
+            CrdtDelta::Map(d) => d.encode(buf),
+        }
+    }
+
+    /// Wire size of this delta — the replication-bytes accounting the
+    /// delta-vs-full-state evidence is built on.
+    pub fn encoded_len(&self) -> usize {
+        let mut buf = Vec::with_capacity(32);
+        self.encode(&mut buf);
+        buf.len()
+    }
+
+    /// Decode one delta (strict; rejects trailing bytes).
+    pub fn decode(buf: &[u8]) -> Result<CrdtDelta> {
+        let mut pos = 0;
+        let tag = *buf
+            .get(pos)
+            .ok_or_else(|| Error::Codec("empty delta".into()))?;
+        pos += 1;
+        let d = match CrdtKind::from_tag(tag)? {
+            CrdtKind::Set => CrdtDelta::Set(SetDelta::decode(buf, &mut pos)?),
+            CrdtKind::Counter => CrdtDelta::Counter(CounterDelta::decode(buf, &mut pos)?),
+            CrdtKind::Map => CrdtDelta::Map(MapDelta::decode(buf, &mut pos)?),
+        };
+        crate::clocks::encoding::expect_end(buf, pos)?;
+        Ok(d)
+    }
+
+    /// Apply this delta to a receiver state. Returns `Ok(false)` — and
+    /// leaves the state untouched — when the receiver's clock cannot
+    /// cover `ctx_before` (the caller must fall back to full-state
+    /// merge); `Err` on a kind mismatch.
+    pub fn apply(&self, st: &mut TypedState) -> Result<bool> {
+        match (self, st) {
+            (CrdtDelta::Set(d), TypedState::Set(s)) => Ok(s.apply_delta(d)),
+            (CrdtDelta::Counter(d), TypedState::Counter(c)) => {
+                c.apply_delta(d);
+                Ok(true)
+            }
+            (CrdtDelta::Map(d), TypedState::Map(m)) => Ok(m.apply_delta(d)),
+            (d, st) => Err(Error::WrongType {
+                expected: st.kind().name(),
+                found: d.kind().name(),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a(i: u32) -> Actor {
+        Actor::server(i)
+    }
+
+    #[test]
+    fn kind_tags_roundtrip() {
+        for k in [CrdtKind::Set, CrdtKind::Counter, CrdtKind::Map] {
+            assert_eq!(CrdtKind::from_tag(k.tag()).unwrap(), k);
+        }
+        assert!(CrdtKind::from_tag(0).is_err());
+        assert!(CrdtKind::from_tag(9).is_err());
+    }
+
+    #[test]
+    fn typed_state_codec_roundtrips_every_kind() {
+        let mut set = Orswot::new();
+        set.add(b"x".to_vec(), Dot::new(a(0), 1));
+        set.add(b"y".to_vec(), Dot::new(a(1), 1));
+        let mut ctr = PnCounter::new();
+        ctr.incr(a(0), 5);
+        ctr.incr(a(1), -2);
+        let mut map = OrMap::new();
+        map.put(b"f".to_vec(), b"v".to_vec(), Dot::new(a(0), 1));
+        for st in [
+            TypedState::Set(set),
+            TypedState::Counter(ctr),
+            TypedState::Map(map),
+            TypedState::fresh(CrdtKind::Set),
+            TypedState::fresh(CrdtKind::Counter),
+            TypedState::fresh(CrdtKind::Map),
+        ] {
+            let bytes = st.encode_to_vec();
+            assert_eq!(TypedState::decode(&bytes).unwrap(), st, "{st:?}");
+            // every strict prefix is rejected, never a panic
+            for cut in 0..bytes.len() {
+                assert!(TypedState::decode(&bytes[..cut]).is_err(), "prefix {cut}");
+            }
+            let mut long = bytes.clone();
+            long.push(0);
+            assert!(TypedState::decode(&long).is_err(), "trailing byte");
+        }
+    }
+
+    #[test]
+    fn merge_rejects_kind_mismatch_without_mutating() {
+        let mut set = TypedState::fresh(CrdtKind::Set);
+        if let TypedState::Set(s) = &mut set {
+            s.add(b"x".to_vec(), Dot::new(a(0), 1));
+        }
+        let before = set.clone();
+        let err = set.merge(&TypedState::fresh(CrdtKind::Counter)).unwrap_err();
+        assert!(matches!(err, Error::WrongType { .. }));
+        assert_eq!(set, before, "mismatched merge must not mutate");
+    }
+
+    #[test]
+    fn delta_apply_rejects_kind_mismatch() {
+        let mut set = Orswot::new();
+        let delta = CrdtDelta::Set(set.add(b"x".to_vec(), Dot::new(a(0), 1)));
+        let mut ctr = TypedState::fresh(CrdtKind::Counter);
+        assert!(matches!(delta.apply(&mut ctr), Err(Error::WrongType { .. })));
+    }
+
+    #[test]
+    fn digest_is_canonical_under_merge_order() {
+        let (mut x, mut y) = (Orswot::new(), Orswot::new());
+        x.add(b"p".to_vec(), Dot::new(a(0), 1));
+        x.add(b"q".to_vec(), Dot::new(a(0), 2));
+        y.add(b"q".to_vec(), Dot::new(a(1), 1));
+        y.add(b"r".to_vec(), Dot::new(a(1), 2));
+        let mut xy = x.clone();
+        xy.merge(&y);
+        let mut yx = y.clone();
+        yx.merge(&x);
+        let (xy, yx) = (TypedState::Set(xy), TypedState::Set(yx));
+        assert_eq!(xy, yx);
+        assert_eq!(xy.state_digest(), yx.state_digest());
+        assert_ne!(
+            xy.state_digest(),
+            TypedState::fresh(CrdtKind::Set).state_digest()
+        );
+    }
+
+    #[test]
+    fn dot_codec_rejects_zero_counter_and_disorder() {
+        let dots = vec![Dot::new(a(0), 1), Dot::new(a(0), 3), Dot::new(a(2), 1)];
+        let mut buf = Vec::new();
+        encode_dots(&dots, &mut buf);
+        let mut pos = 0;
+        assert_eq!(decode_dots(&buf, &mut pos).unwrap(), dots);
+        assert_eq!(pos, buf.len());
+
+        // zero counter
+        let mut bad = Vec::new();
+        encode_dots(&[Dot { actor: a(0), counter: 1 }], &mut bad);
+        *bad.last_mut().unwrap() = 0;
+        let mut pos = 0;
+        assert!(decode_dots(&bad, &mut pos).is_err());
+
+        // out of order
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 2);
+        encode_dot(&Dot::new(a(1), 1), &mut buf);
+        encode_dot(&Dot::new(a(0), 1), &mut buf);
+        let mut pos = 0;
+        assert!(decode_dots(&buf, &mut pos).is_err());
+    }
+}

@@ -1,0 +1,512 @@
+//! OR-Map: observed-remove field map with register values.
+//!
+//! Fields are keyed exactly like ORSWOT elements — each put mints a dot,
+//! each remove deletes the *observed* dots — so field presence follows
+//! add-wins/observed-remove semantics with no tombstones. The surviving
+//! field's value is taken from whichever side holds the field's **max
+//! surviving dot**: among concurrent puts that both survive a merge, the
+//! winner is deterministic (dots are unique per write, so equal dots
+//! carry equal values), and a put that superseded another (its `replaced`
+//! list) wins outright because the superseded dot does not survive.
+
+use crate::clocks::encoding::{encode_vv, get_bytes, get_varint, put_varint};
+use crate::clocks::{Actor, VersionVector};
+use crate::error::{Error, Result};
+
+use super::{decode_dots, encode_dots, Dot};
+
+/// An observed-remove field map.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OrMap {
+    /// Every dot this replica has observed (per-actor contiguous).
+    clock: VersionVector,
+    /// Present fields: `(field, live dots, value)`, sorted by field;
+    /// dot lists sorted ascending and never empty; `value` is the bytes
+    /// written by the put that minted the max live dot.
+    entries: Vec<(Vec<u8>, Vec<Dot>, Vec<u8>)>,
+}
+
+/// The change one map mutation made (see [`super::CrdtDelta`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MapDelta {
+    /// The mutating replica's clock before the op.
+    pub ctx_before: VersionVector,
+    /// The clock after the op.
+    pub ctx_after: VersionVector,
+    /// What changed.
+    pub change: MapChange,
+}
+
+/// The concrete mutation inside a [`MapDelta`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MapChange {
+    /// `field` was set to `value`, tagged `dot`, superseding `replaced`.
+    Put {
+        /// Field bytes.
+        field: Vec<u8>,
+        /// New value bytes.
+        value: Vec<u8>,
+        /// The freshly minted dot tagging this put.
+        dot: Dot,
+        /// The putter's previously observed dots for `field`.
+        replaced: Vec<Dot>,
+    },
+    /// `field`'s observed `dots` were removed.
+    Remove {
+        /// Field bytes.
+        field: Vec<u8>,
+        /// The exact dots the remover observed and deleted.
+        dots: Vec<Dot>,
+    },
+}
+
+impl OrMap {
+    /// The empty map.
+    pub fn new() -> OrMap {
+        OrMap::default()
+    }
+
+    /// The map's causal clock.
+    pub fn clock(&self) -> &VersionVector {
+        &self.clock
+    }
+
+    /// The next dot `actor` may mint from this state (same contiguity
+    /// contract as [`super::Orswot::mint`]).
+    pub fn mint(&self, actor: Actor) -> Dot {
+        Dot::new(actor, self.clock.get(actor) + 1)
+    }
+
+    /// Number of present fields.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no field is present.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Current value of `field`, if present.
+    pub fn get(&self, field: &[u8]) -> Option<&[u8]> {
+        self.find(field).ok().map(|i| self.entries[i].2.as_slice())
+    }
+
+    /// Present `(field, value)` pairs, ascending by field.
+    pub fn fields(&self) -> impl Iterator<Item = (&[u8], &[u8])> + '_ {
+        self.entries.iter().map(|(f, _, v)| (f.as_slice(), v.as_slice()))
+    }
+
+    fn find(&self, field: &[u8]) -> std::result::Result<usize, usize> {
+        self.entries.binary_search_by(|(f, _, _)| f.as_slice().cmp(field))
+    }
+
+    fn absorb(&mut self, dot: Dot) {
+        if dot.counter > self.clock.get(dot.actor) {
+            self.clock.set(dot.actor, dot.counter);
+        }
+    }
+
+    /// Set `field` to `value`, tagged with `dot` (minted via
+    /// [`mint`](OrMap::mint)). Observed dots collapse into the new one.
+    pub fn put(&mut self, field: Vec<u8>, value: Vec<u8>, dot: Dot) -> MapDelta {
+        let ctx_before = self.clock.clone();
+        let replaced = match self.find(&field) {
+            Ok(i) => {
+                self.entries[i].2 = value.clone();
+                std::mem::replace(&mut self.entries[i].1, vec![dot])
+            }
+            Err(i) => {
+                self.entries.insert(i, (field.clone(), vec![dot], value.clone()));
+                Vec::new()
+            }
+        };
+        self.absorb(dot);
+        MapDelta {
+            ctx_before,
+            ctx_after: self.clock.clone(),
+            change: MapChange::Put { field, value, dot, replaced },
+        }
+    }
+
+    /// Remove `field`: delete its observed dots (remove-wins only over
+    /// dots the remover saw). Returns the removed dots plus the delta.
+    pub fn remove(&mut self, field: &[u8]) -> (Vec<Dot>, MapDelta) {
+        let dots = match self.find(field) {
+            Ok(i) => self.entries.remove(i).1,
+            Err(_) => Vec::new(),
+        };
+        let ctx = self.clock.clone();
+        let delta = MapDelta {
+            ctx_before: ctx.clone(),
+            ctx_after: ctx,
+            change: MapChange::Remove { field: field.to_vec(), dots: dots.clone() },
+        };
+        (dots, delta)
+    }
+
+    /// Join another replica's state: ORSWOT survival per field dot, the
+    /// surviving value from the side holding the max surviving dot.
+    pub fn merge(&mut self, other: &OrMap) {
+        let mut out: Vec<(Vec<u8>, Vec<Dot>, Vec<u8>)> =
+            Vec::with_capacity(self.entries.len().max(other.entries.len()));
+        let (mut i, mut j) = (0, 0);
+        while i < self.entries.len() || j < other.entries.len() {
+            let ord = match (self.entries.get(i), other.entries.get(j)) {
+                (Some((a, _, _)), Some((b, _, _))) => a.cmp(b),
+                (Some(_), None) => std::cmp::Ordering::Less,
+                (None, Some(_)) => std::cmp::Ordering::Greater,
+                (None, None) => unreachable!("loop condition"),
+            };
+            match ord {
+                std::cmp::Ordering::Less => {
+                    let (field, dots, value) = &self.entries[i];
+                    let keep: Vec<Dot> = dots
+                        .iter()
+                        .filter(|d| d.counter > other.clock.get(d.actor))
+                        .copied()
+                        .collect();
+                    if !keep.is_empty() {
+                        out.push((field.clone(), keep, value.clone()));
+                    }
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    let (field, dots, value) = &other.entries[j];
+                    let keep: Vec<Dot> = dots
+                        .iter()
+                        .filter(|d| d.counter > self.clock.get(d.actor))
+                        .copied()
+                        .collect();
+                    if !keep.is_empty() {
+                        out.push((field.clone(), keep, value.clone()));
+                    }
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let (field, mine, my_value) = &self.entries[i];
+                    let (_, theirs, their_value) = &other.entries[j];
+                    let mut keep: Vec<Dot> = mine
+                        .iter()
+                        .filter(|d| {
+                            theirs.contains(d) || d.counter > other.clock.get(d.actor)
+                        })
+                        .copied()
+                        .collect();
+                    for d in theirs {
+                        if !keep.contains(d) && d.counter > self.clock.get(d.actor) {
+                            keep.push(*d);
+                        }
+                    }
+                    keep.sort_unstable();
+                    if let Some(&max) = keep.last() {
+                        // unique dots: if the max survivor is in my
+                        // entry, my value was written with it
+                        let value = if mine.contains(&max) {
+                            my_value.clone()
+                        } else {
+                            their_value.clone()
+                        };
+                        out.push((field.clone(), keep, value));
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        self.entries = out;
+        self.clock.join_from(&other.clock);
+    }
+
+    /// Apply a sender's delta (same contract as
+    /// [`super::Orswot::apply_delta`]: receiver must dominate
+    /// `ctx_before`, else `false` and untouched).
+    pub fn apply_delta(&mut self, d: &MapDelta) -> bool {
+        if !d.ctx_before.dominated_by(&self.clock) {
+            return false;
+        }
+        match &d.change {
+            MapChange::Put { field, value, dot, replaced } => match self.find(field) {
+                Ok(i) => {
+                    let dots = &mut self.entries[i].1;
+                    dots.retain(|x| !replaced.contains(x));
+                    if let Err(at) = dots.binary_search(dot) {
+                        dots.insert(at, *dot);
+                    }
+                    if dots.last() == Some(dot) {
+                        self.entries[i].2 = value.clone();
+                    }
+                }
+                Err(i) => {
+                    self.entries.insert(i, (field.clone(), vec![*dot], value.clone()));
+                }
+            },
+            MapChange::Remove { field, dots } => {
+                if let Ok(i) = self.find(field) {
+                    self.entries[i].1.retain(|x| !dots.contains(x));
+                    if self.entries[i].1.is_empty() {
+                        self.entries.remove(i);
+                    }
+                }
+            }
+        }
+        self.clock.join_from(&d.ctx_after);
+        true
+    }
+
+    /// Append the canonical encoding.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        encode_vv(&self.clock, buf);
+        put_varint(buf, self.entries.len() as u64);
+        for (field, dots, value) in &self.entries {
+            put_varint(buf, field.len() as u64);
+            buf.extend_from_slice(field);
+            put_varint(buf, value.len() as u64);
+            buf.extend_from_slice(value);
+            encode_dots(dots, buf);
+        }
+    }
+
+    /// Decode one map with the same strictness as
+    /// [`super::Orswot::decode`].
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<OrMap> {
+        let clock = crate::clocks::encoding::decode_vv(buf, pos)?;
+        let count = get_varint(buf, pos)?;
+        let cap = (count as usize).min(buf.len().saturating_sub(*pos) / 5);
+        let mut entries: Vec<(Vec<u8>, Vec<Dot>, Vec<u8>)> = Vec::with_capacity(cap);
+        for _ in 0..count {
+            let flen = get_varint(buf, pos)?;
+            let field = get_bytes(buf, pos, flen as usize)?.to_vec();
+            if let Some((last, _, _)) = entries.last() {
+                if *last >= field {
+                    return Err(Error::Codec("map fields out of order".into()));
+                }
+            }
+            let vlen = get_varint(buf, pos)?;
+            let value = get_bytes(buf, pos, vlen as usize)?.to_vec();
+            let dots = decode_dots(buf, pos)?;
+            if dots.is_empty() {
+                return Err(Error::Codec("map field with no dots".into()));
+            }
+            for d in &dots {
+                if d.counter > clock.get(d.actor) {
+                    return Err(Error::Codec(format!("dot {d} not covered by map clock")));
+                }
+            }
+            entries.push((field, dots, value));
+        }
+        Ok(OrMap { clock, entries })
+    }
+}
+
+impl MapDelta {
+    /// Append the wire encoding.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        encode_vv(&self.ctx_before, buf);
+        encode_vv(&self.ctx_after, buf);
+        match &self.change {
+            MapChange::Put { field, value, dot, replaced } => {
+                buf.push(0);
+                put_varint(buf, field.len() as u64);
+                buf.extend_from_slice(field);
+                put_varint(buf, value.len() as u64);
+                buf.extend_from_slice(value);
+                super::encode_dot(dot, buf);
+                encode_dots(replaced, buf);
+            }
+            MapChange::Remove { field, dots } => {
+                buf.push(1);
+                put_varint(buf, field.len() as u64);
+                buf.extend_from_slice(field);
+                encode_dots(dots, buf);
+            }
+        }
+    }
+
+    /// Decode one map delta.
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<MapDelta> {
+        let ctx_before = crate::clocks::encoding::decode_vv(buf, pos)?;
+        let ctx_after = crate::clocks::encoding::decode_vv(buf, pos)?;
+        let tag = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::Codec("map delta truncated".into()))?;
+        *pos += 1;
+        let change = match tag {
+            0 => {
+                let flen = get_varint(buf, pos)?;
+                let field = get_bytes(buf, pos, flen as usize)?.to_vec();
+                let vlen = get_varint(buf, pos)?;
+                let value = get_bytes(buf, pos, vlen as usize)?.to_vec();
+                let dot = super::decode_dot(buf, pos)?;
+                let replaced = decode_dots(buf, pos)?;
+                MapChange::Put { field, value, dot, replaced }
+            }
+            1 => {
+                let flen = get_varint(buf, pos)?;
+                let field = get_bytes(buf, pos, flen as usize)?.to_vec();
+                let dots = decode_dots(buf, pos)?;
+                MapChange::Remove { field, dots }
+            }
+            other => return Err(Error::Codec(format!("bad map-change tag {other}"))),
+        };
+        Ok(MapDelta { ctx_before, ctx_after, change })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{forall, from_fn, Config};
+    use crate::testkit::Rng;
+
+    fn a(i: u32) -> Actor {
+        Actor::server(i)
+    }
+
+    fn put(m: &mut OrMap, actor: Actor, field: &[u8], value: &[u8]) -> MapDelta {
+        let dot = m.mint(actor);
+        m.put(field.to_vec(), value.to_vec(), dot)
+    }
+
+    #[test]
+    fn put_get_remove() {
+        let mut m = OrMap::new();
+        put(&mut m, a(0), b"name", b"ada");
+        put(&mut m, a(0), b"name", b"grace");
+        assert_eq!(m.get(b"name"), Some(&b"grace"[..]));
+        assert_eq!(m.len(), 1);
+        let (dots, _) = m.remove(b"name");
+        assert_eq!(dots, vec![Dot::new(a(0), 2)], "only the live dot");
+        assert!(m.get(b"name").is_none());
+        assert!(m.is_empty(), "no tombstone entry");
+    }
+
+    #[test]
+    fn concurrent_put_survives_observed_remove() {
+        let mut base = OrMap::new();
+        put(&mut base, a(0), b"f", b"v0");
+        let (mut ra, mut rb) = (base.clone(), base);
+        ra.remove(b"f");
+        put(&mut rb, a(1), b"f", b"v1");
+        let mut m = ra.clone();
+        m.merge(&rb);
+        assert_eq!(m.get(b"f"), Some(&b"v1"[..]), "unobserved put survives");
+        let mut m2 = rb;
+        m2.merge(&ra);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn concurrent_puts_pick_max_dot_deterministically() {
+        let mut base = OrMap::new();
+        put(&mut base, a(0), b"f", b"v0");
+        let (mut ra, mut rb) = (base.clone(), base);
+        put(&mut ra, a(1), b"f", b"from-a");
+        put(&mut rb, a(2), b"f", b"from-b");
+        let mut m = ra.clone();
+        m.merge(&rb);
+        let mut m2 = rb.clone();
+        m2.merge(&ra);
+        assert_eq!(m, m2, "merge order must not change the winner");
+        // both dots survive (concurrent puts), value is the max dot's
+        assert_eq!(m.entries[0].1, vec![Dot::new(a(1), 2), Dot::new(a(2), 2)]);
+        assert_eq!(m.get(b"f"), Some(&b"from-b"[..]));
+    }
+
+    fn arb_map(rng: &mut Rng, size: usize) -> OrMap {
+        let mut m = OrMap::new();
+        for _ in 0..(size % 10) {
+            let actor = a(rng.below(3) as u32);
+            let field = vec![b'f', rng.below(4) as u8];
+            if rng.chance(0.3) {
+                m.remove(&field);
+            } else {
+                let dot = m.mint(actor);
+                m.put(field, vec![b'v', rng.below(200) as u8], dot);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn prop_merge_laws() {
+        forall(
+            &Config::default().cases(200),
+            from_fn(|rng, size| {
+                (arb_map(rng, size), arb_map(rng, size), arb_map(rng, size))
+            }),
+            |(x, y, z)| {
+                let mut xy = x.clone();
+                xy.merge(y);
+                let mut yx = y.clone();
+                yx.merge(x);
+                let mut xx = x.clone();
+                xx.merge(x);
+                let mut xy_z = xy.clone();
+                xy_z.merge(z);
+                let mut yz = y.clone();
+                yz.merge(z);
+                let mut x_yz = x.clone();
+                x_yz.merge(&yz);
+                xy == yx && xx == *x && xy_z == x_yz
+            },
+        );
+    }
+
+    #[test]
+    fn prop_delta_chain_replay_reproduces_full_state() {
+        forall(
+            &Config::default().cases(150),
+            from_fn(|rng, size| {
+                let ops: Vec<(bool, u8, u8, u32)> = (0..(size % 12))
+                    .map(|_| {
+                        (
+                            rng.chance(0.3),
+                            rng.below(4) as u8,
+                            rng.below(200) as u8,
+                            rng.below(3) as u32,
+                        )
+                    })
+                    .collect();
+                ops
+            }),
+            |ops| {
+                let mut sender = OrMap::new();
+                let mut follower = OrMap::new();
+                for &(is_remove, f, v, actor) in ops {
+                    let field = vec![b'f', f];
+                    let delta = if is_remove {
+                        sender.remove(&field).1
+                    } else {
+                        let dot = sender.mint(a(actor));
+                        sender.put(field, vec![b'v', v], dot)
+                    };
+                    if !follower.apply_delta(&delta) {
+                        return false;
+                    }
+                }
+                follower == sender
+            },
+        );
+    }
+
+    #[test]
+    fn state_and_delta_codecs_roundtrip() {
+        let mut m = OrMap::new();
+        let d1 = put(&mut m, a(0), b"x", b"one");
+        let d2 = put(&mut m, a(1), b"y", b"");
+        let (_, d3) = m.remove(b"x");
+        let mut buf = Vec::new();
+        m.encode(&mut buf);
+        let mut pos = 0;
+        assert_eq!(OrMap::decode(&buf, &mut pos).unwrap(), m);
+        assert_eq!(pos, buf.len());
+        for d in [d1, d2, d3] {
+            let mut buf = Vec::new();
+            d.encode(&mut buf);
+            let mut pos = 0;
+            assert_eq!(MapDelta::decode(&buf, &mut pos).unwrap(), d);
+            assert_eq!(pos, buf.len());
+        }
+    }
+}

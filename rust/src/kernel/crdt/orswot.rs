@@ -1,0 +1,615 @@
+//! ORSWOT: an optimized observed-remove set without tombstones.
+//!
+//! The Riak bigsets lineage: the set keeps a causal clock (a
+//! [`VersionVector`] over minting actors) plus, per present element, the
+//! dots of the adds that are *live* — adds observed by no remove. A
+//! remove simply deletes the element's observed dots; the clock still
+//! covers them, which is exactly what lets a merge distinguish "removed"
+//! (dot covered by my clock but absent from my entry) from "never seen"
+//! (dot not covered at all). Concurrent adds therefore survive removes
+//! that did not observe them — **add-wins** — and no per-element
+//! tombstone is ever stored.
+
+use crate::clocks::encoding::{encode_vv, get_bytes, get_varint, put_varint};
+use crate::clocks::{Actor, VersionVector};
+use crate::error::{Error, Result};
+
+use super::{decode_dots, encode_dots, Dot};
+
+/// An observed-remove set: causal clock + live add-dots per element.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Orswot {
+    /// Every dot this replica has observed (per-actor contiguous).
+    clock: VersionVector,
+    /// Present elements with their live add-dots; sorted by element,
+    /// dots sorted ascending, never empty.
+    entries: Vec<(Vec<u8>, Vec<Dot>)>,
+}
+
+/// The change one set mutation made (see [`super::CrdtDelta`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SetDelta {
+    /// The mutating replica's clock before the op.
+    pub ctx_before: VersionVector,
+    /// The clock after the op (covers the minted dot for adds).
+    pub ctx_after: VersionVector,
+    /// What changed.
+    pub change: SetChange,
+}
+
+/// The concrete mutation inside a [`SetDelta`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SetChange {
+    /// `elem` was added with `dot`, superseding the `replaced` dots the
+    /// adder observed for it.
+    Add {
+        /// Element bytes.
+        elem: Vec<u8>,
+        /// The freshly minted dot tagging this add.
+        dot: Dot,
+        /// The adder's previously observed dots for `elem` (collapsed
+        /// into the new dot — the "optimized" in ORSWOT).
+        replaced: Vec<Dot>,
+    },
+    /// `elem`'s observed `dots` were removed (no tombstone kept).
+    Remove {
+        /// Element bytes.
+        elem: Vec<u8>,
+        /// The exact dots the remover observed and deleted.
+        dots: Vec<Dot>,
+    },
+}
+
+impl Orswot {
+    /// The empty set.
+    pub fn new() -> Orswot {
+        Orswot::default()
+    }
+
+    /// The set's causal clock.
+    pub fn clock(&self) -> &VersionVector {
+        &self.clock
+    }
+
+    /// The next dot `actor` may mint from this state. Only sound when
+    /// this state contains all of `actor`'s prior mints (see the module
+    /// docs on the false-cover hazard).
+    pub fn mint(&self, actor: Actor) -> Dot {
+        Dot::new(actor, self.clock.get(actor) + 1)
+    }
+
+    /// Number of present elements.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no element is present.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Is `elem` present?
+    pub fn contains(&self, elem: &[u8]) -> bool {
+        self.find(elem).is_ok()
+    }
+
+    /// Present elements, ascending.
+    pub fn members(&self) -> impl Iterator<Item = &[u8]> + '_ {
+        self.entries.iter().map(|(e, _)| e.as_slice())
+    }
+
+    /// Total live dots across all elements (metadata accounting).
+    pub fn dot_count(&self) -> usize {
+        self.entries.iter().map(|(_, d)| d.len()).sum()
+    }
+
+    fn find(&self, elem: &[u8]) -> std::result::Result<usize, usize> {
+        self.entries.binary_search_by(|(e, _)| e.as_slice().cmp(elem))
+    }
+
+    fn absorb(&mut self, dot: Dot) {
+        if dot.counter > self.clock.get(dot.actor) {
+            self.clock.set(dot.actor, dot.counter);
+        }
+    }
+
+    /// Add `elem` tagged with `dot` (minted via [`mint`](Orswot::mint)
+    /// by the op's coordinator). The element's previously observed dots
+    /// collapse into the new one. Returns the op's delta.
+    pub fn add(&mut self, elem: Vec<u8>, dot: Dot) -> SetDelta {
+        let ctx_before = self.clock.clone();
+        let replaced = match self.find(&elem) {
+            Ok(i) => std::mem::replace(&mut self.entries[i].1, vec![dot]),
+            Err(i) => {
+                self.entries.insert(i, (elem.clone(), vec![dot]));
+                Vec::new()
+            }
+        };
+        self.absorb(dot);
+        SetDelta {
+            ctx_before,
+            ctx_after: self.clock.clone(),
+            change: SetChange::Add { elem, dot, replaced },
+        }
+    }
+
+    /// Remove `elem`: delete its observed dots (no tombstone — the clock
+    /// keeps covering them). Returns the removed dots plus the op's
+    /// delta; removing an absent element removes nothing.
+    pub fn remove(&mut self, elem: &[u8]) -> (Vec<Dot>, SetDelta) {
+        let dots = match self.find(elem) {
+            Ok(i) => self.entries.remove(i).1,
+            Err(_) => Vec::new(),
+        };
+        let ctx = self.clock.clone();
+        let delta = SetDelta {
+            ctx_before: ctx.clone(),
+            ctx_after: ctx,
+            change: SetChange::Remove { elem: elem.to_vec(), dots: dots.clone() },
+        };
+        (dots, delta)
+    }
+
+    /// Join another replica's state: a dot survives if both sides hold
+    /// it, or one side holds it and the other's clock has not observed
+    /// it (an unobserved add beats any remove — add-wins). Elements with
+    /// no surviving dots disappear.
+    pub fn merge(&mut self, other: &Orswot) {
+        let mut out: Vec<(Vec<u8>, Vec<Dot>)> =
+            Vec::with_capacity(self.entries.len().max(other.entries.len()));
+        let (mut i, mut j) = (0, 0);
+        while i < self.entries.len() || j < other.entries.len() {
+            let ord = match (self.entries.get(i), other.entries.get(j)) {
+                (Some((a, _)), Some((b, _))) => a.cmp(b),
+                (Some(_), None) => std::cmp::Ordering::Less,
+                (None, Some(_)) => std::cmp::Ordering::Greater,
+                (None, None) => unreachable!("loop condition"),
+            };
+            match ord {
+                std::cmp::Ordering::Less => {
+                    // only mine: dots the other side never observed live
+                    let (elem, dots) = &self.entries[i];
+                    let keep: Vec<Dot> = dots
+                        .iter()
+                        .filter(|d| d.counter > other.clock.get(d.actor))
+                        .copied()
+                        .collect();
+                    if !keep.is_empty() {
+                        out.push((elem.clone(), keep));
+                    }
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    let (elem, dots) = &other.entries[j];
+                    let keep: Vec<Dot> = dots
+                        .iter()
+                        .filter(|d| d.counter > self.clock.get(d.actor))
+                        .copied()
+                        .collect();
+                    if !keep.is_empty() {
+                        out.push((elem.clone(), keep));
+                    }
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let (elem, mine) = &self.entries[i];
+                    let theirs = &other.entries[j].1;
+                    let mut keep: Vec<Dot> = mine
+                        .iter()
+                        .filter(|d| {
+                            theirs.contains(d) || d.counter > other.clock.get(d.actor)
+                        })
+                        .copied()
+                        .collect();
+                    for d in theirs {
+                        if !keep.contains(d) && d.counter > self.clock.get(d.actor) {
+                            keep.push(*d);
+                        }
+                    }
+                    keep.sort_unstable();
+                    if !keep.is_empty() {
+                        out.push((elem.clone(), keep));
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        self.entries = out;
+        self.clock.join_from(&other.clock);
+    }
+
+    /// Apply a sender's delta. Sound only when this replica's clock
+    /// dominates the sender's `ctx_before` (it has observed everything
+    /// the sender had — e.g. it is replaying the sender's delta stream
+    /// in causal order); returns `false` untouched otherwise, and the
+    /// caller falls back to full-state merge. Dots this replica holds
+    /// concurrently with the delta survive it — add-wins is preserved.
+    pub fn apply_delta(&mut self, d: &SetDelta) -> bool {
+        if !d.ctx_before.dominated_by(&self.clock) {
+            return false;
+        }
+        match &d.change {
+            SetChange::Add { elem, dot, replaced } => {
+                match self.find(elem) {
+                    Ok(i) => {
+                        let dots = &mut self.entries[i].1;
+                        dots.retain(|x| !replaced.contains(x));
+                        if let Err(at) = dots.binary_search(dot) {
+                            dots.insert(at, *dot);
+                        }
+                    }
+                    Err(i) => self.entries.insert(i, (elem.clone(), vec![*dot])),
+                }
+            }
+            SetChange::Remove { elem, dots } => {
+                if let Ok(i) = self.find(elem) {
+                    self.entries[i].1.retain(|x| !dots.contains(x));
+                    if self.entries[i].1.is_empty() {
+                        self.entries.remove(i);
+                    }
+                }
+            }
+        }
+        self.clock.join_from(&d.ctx_after);
+        true
+    }
+
+    /// Append the canonical encoding: clock, then sorted
+    /// `(elem, dots)` entries.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        encode_vv(&self.clock, buf);
+        put_varint(buf, self.entries.len() as u64);
+        for (elem, dots) in &self.entries {
+            put_varint(buf, elem.len() as u64);
+            buf.extend_from_slice(elem);
+            encode_dots(dots, buf);
+        }
+    }
+
+    /// Decode one set, validating every reachable-state invariant:
+    /// elements strictly ascending, dot lists non-empty and sorted,
+    /// every dot covered by the clock. Errors (never panics) on
+    /// violations — corrupt WAL or wire bytes must not build impossible
+    /// states.
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<Orswot> {
+        let clock = crate::clocks::encoding::decode_vv(buf, pos)?;
+        let count = get_varint(buf, pos)?;
+        let cap = (count as usize).min(buf.len().saturating_sub(*pos) / 4);
+        let mut entries: Vec<(Vec<u8>, Vec<Dot>)> = Vec::with_capacity(cap);
+        for _ in 0..count {
+            let elen = get_varint(buf, pos)?;
+            let elem = get_bytes(buf, pos, elen as usize)?.to_vec();
+            if let Some((last, _)) = entries.last() {
+                if *last >= elem {
+                    return Err(Error::Codec("set elements out of order".into()));
+                }
+            }
+            let dots = decode_dots(buf, pos)?;
+            if dots.is_empty() {
+                return Err(Error::Codec("set element with no dots".into()));
+            }
+            for d in &dots {
+                if d.counter > clock.get(d.actor) {
+                    return Err(Error::Codec(format!("dot {d} not covered by set clock")));
+                }
+            }
+            entries.push((elem, dots));
+        }
+        Ok(Orswot { clock, entries })
+    }
+}
+
+impl SetDelta {
+    /// Append the wire encoding (see [`super::CrdtDelta::encode`] for
+    /// the kind-tagged wrapper).
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        encode_vv(&self.ctx_before, buf);
+        encode_vv(&self.ctx_after, buf);
+        match &self.change {
+            SetChange::Add { elem, dot, replaced } => {
+                buf.push(0);
+                put_varint(buf, elem.len() as u64);
+                buf.extend_from_slice(elem);
+                super::encode_dot(dot, buf);
+                encode_dots(replaced, buf);
+            }
+            SetChange::Remove { elem, dots } => {
+                buf.push(1);
+                put_varint(buf, elem.len() as u64);
+                buf.extend_from_slice(elem);
+                encode_dots(dots, buf);
+            }
+        }
+    }
+
+    /// Decode one set delta.
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<SetDelta> {
+        let ctx_before = crate::clocks::encoding::decode_vv(buf, pos)?;
+        let ctx_after = crate::clocks::encoding::decode_vv(buf, pos)?;
+        let tag = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::Codec("set delta truncated".into()))?;
+        *pos += 1;
+        let change = match tag {
+            0 => {
+                let elen = get_varint(buf, pos)?;
+                let elem = get_bytes(buf, pos, elen as usize)?.to_vec();
+                let dot = super::decode_dot(buf, pos)?;
+                let replaced = decode_dots(buf, pos)?;
+                SetChange::Add { elem, dot, replaced }
+            }
+            1 => {
+                let elen = get_varint(buf, pos)?;
+                let elem = get_bytes(buf, pos, elen as usize)?.to_vec();
+                let dots = decode_dots(buf, pos)?;
+                SetChange::Remove { elem, dots }
+            }
+            other => return Err(Error::Codec(format!("bad set-change tag {other}"))),
+        };
+        Ok(SetDelta { ctx_before, ctx_after, change })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{forall, from_fn, Config};
+    use crate::testkit::Rng;
+
+    fn a(i: u32) -> Actor {
+        Actor::server(i)
+    }
+
+    fn add(s: &mut Orswot, actor: Actor, elem: &[u8]) -> SetDelta {
+        let dot = s.mint(actor);
+        s.add(elem.to_vec(), dot)
+    }
+
+    #[test]
+    fn add_remove_basics() {
+        let mut s = Orswot::new();
+        add(&mut s, a(0), b"x");
+        add(&mut s, a(0), b"y");
+        assert!(s.contains(b"x") && s.contains(b"y"));
+        assert_eq!(s.len(), 2);
+        let (dots, _) = s.remove(b"x");
+        assert_eq!(dots, vec![Dot::new(a(0), 1)]);
+        assert!(!s.contains(b"x"));
+        // no tombstone: the entry is gone, only the clock remembers
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.clock().get(a(0)), 2);
+        // removing an absent element removes nothing
+        let (dots, _) = s.remove(b"zz");
+        assert!(dots.is_empty());
+    }
+
+    #[test]
+    fn readd_mints_a_fresh_dot() {
+        let mut s = Orswot::new();
+        add(&mut s, a(0), b"x");
+        s.remove(b"x");
+        let d = add(&mut s, a(0), b"x");
+        assert!(s.contains(b"x"));
+        match d.change {
+            SetChange::Add { dot, ref replaced, .. } => {
+                assert_eq!(dot, Dot::new(a(0), 2));
+                assert!(replaced.is_empty(), "removed dots are not re-replaced");
+            }
+            _ => panic!("add delta expected"),
+        }
+    }
+
+    #[test]
+    fn concurrent_add_survives_remove() {
+        // replica A and B both hold {x}; A removes x while B
+        // concurrently re-adds it — add-wins: the merge keeps x
+        let mut base = Orswot::new();
+        add(&mut base, a(0), b"x");
+        let (mut ra, mut rb) = (base.clone(), base);
+        ra.remove(b"x");
+        add(&mut rb, a(1), b"x");
+        let mut m = ra.clone();
+        m.merge(&rb);
+        assert!(m.contains(b"x"), "unobserved add must survive the remove");
+        // and the observed dot is gone: only B's fresh dot remains
+        assert_eq!(m.entries[0].1, vec![Dot::new(a(1), 1)]);
+        // merging the other way agrees
+        let mut m2 = rb.clone();
+        m2.merge(&ra);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn observed_remove_wins_after_sync() {
+        // B's add was *observed* by A before A removed: stay removed
+        let mut ra = Orswot::new();
+        let mut rb = Orswot::new();
+        add(&mut rb, a(1), b"x");
+        ra.merge(&rb);
+        ra.remove(b"x");
+        let mut m = rb.clone();
+        m.merge(&ra);
+        assert!(!m.contains(b"x"), "observed add must not resurrect");
+    }
+
+    fn arb_set(rng: &mut Rng, size: usize) -> Orswot {
+        let mut s = Orswot::new();
+        let actors = 1 + size / 30;
+        for _ in 0..(size % 12) {
+            let actor = a(rng.below(actors as u64) as u32);
+            let elem = vec![b'e', rng.below(6) as u8];
+            if rng.chance(0.3) {
+                s.remove(&elem);
+            } else {
+                let dot = s.mint(actor);
+                s.add(elem, dot);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn prop_merge_laws() {
+        forall(
+            &Config::default().cases(200),
+            from_fn(|rng, size| {
+                (arb_set(rng, size), arb_set(rng, size), arb_set(rng, size))
+            }),
+            |(x, y, z)| {
+                let mut xy = x.clone();
+                xy.merge(y);
+                let mut yx = y.clone();
+                yx.merge(x);
+                let mut xx = x.clone();
+                xx.merge(x);
+                let mut xy_z = xy.clone();
+                xy_z.merge(z);
+                let mut yz = y.clone();
+                yz.merge(z);
+                let mut x_yz = x.clone();
+                x_yz.merge(&yz);
+                xy == yx && xx == *x && xy_z == x_yz
+            },
+        );
+    }
+
+    #[test]
+    fn prop_delta_chain_replay_reproduces_full_state() {
+        // a follower that applies the sender's delta stream in causal
+        // order must end byte-identical to the sender's full state
+        forall(
+            &Config::default().cases(150),
+            from_fn(|rng, size| {
+                let ops: Vec<(bool, u8, u32)> = (0..(size % 15))
+                    .map(|_| {
+                        (rng.chance(0.3), rng.below(5) as u8, rng.below(2) as u32)
+                    })
+                    .collect();
+                ops
+            }),
+            |ops| {
+                let mut sender = Orswot::new();
+                let mut follower = Orswot::new();
+                for &(is_remove, e, actor) in ops {
+                    let elem = vec![b'e', e];
+                    let delta = if is_remove {
+                        sender.remove(&elem).1
+                    } else {
+                        let dot = sender.mint(a(actor));
+                        sender.add(elem, dot)
+                    };
+                    if !follower.apply_delta(&delta) {
+                        return false;
+                    }
+                }
+                follower == sender
+            },
+        );
+    }
+
+    #[test]
+    fn delta_apply_fails_closed_on_a_gap() {
+        let mut sender = Orswot::new();
+        let mut follower = Orswot::new();
+        let d1 = add(&mut sender, a(0), b"x");
+        let d2 = add(&mut sender, a(0), b"y"); // depends on d1's clock
+        assert!(!follower.apply_delta(&d2), "gap must refuse");
+        assert!(follower.is_empty(), "refused delta must not mutate");
+        assert!(follower.apply_delta(&d1));
+        assert!(follower.apply_delta(&d2));
+        assert_eq!(follower, sender);
+    }
+
+    #[test]
+    fn delta_apply_preserves_concurrent_receiver_dots() {
+        // receiver holds a concurrent add the sender never saw; the
+        // sender's remove-delta lists only its own observed dots, so the
+        // receiver's dot survives (add-wins), and a later full merge
+        // converges both ways
+        let mut base = Orswot::new();
+        add(&mut base, a(0), b"x");
+        let mut sender = base.clone();
+        let mut receiver = base;
+        add(&mut receiver, a(1), b"x"); // concurrent, unobserved by sender
+        let (_, rm) = sender.remove(b"x");
+        assert!(receiver.apply_delta(&rm));
+        assert!(receiver.contains(b"x"), "concurrent add survives");
+        let mut m = sender.clone();
+        m.merge(&receiver);
+        receiver.merge(&sender);
+        assert_eq!(m, receiver);
+    }
+
+    #[test]
+    fn state_codec_roundtrips_and_validates() {
+        let mut s = Orswot::new();
+        add(&mut s, a(0), b"alpha");
+        add(&mut s, a(1), b"beta");
+        s.remove(b"alpha");
+        add(&mut s, a(2), b"");
+        let mut buf = Vec::new();
+        s.encode(&mut buf);
+        let mut pos = 0;
+        assert_eq!(Orswot::decode(&buf, &mut pos).unwrap(), s);
+        assert_eq!(pos, buf.len());
+
+        // an uncovered dot is a corrupt state, not a panic
+        let mut buf = Vec::new();
+        encode_vv(&VersionVector::new(), &mut buf); // empty clock
+        put_varint(&mut buf, 1);
+        put_varint(&mut buf, 1);
+        buf.push(b'x');
+        encode_dots(&[Dot::new(a(0), 1)], &mut buf);
+        let mut pos = 0;
+        assert!(Orswot::decode(&buf, &mut pos).is_err(), "uncovered dot");
+    }
+
+    #[test]
+    fn delta_codec_roundtrips_and_rejects_truncation() {
+        let mut s = Orswot::new();
+        let deltas = [
+            add(&mut s, a(0), b"x"),
+            add(&mut s, a(1), b"x"),
+            s.remove(b"x").1,
+            s.remove(b"never-there").1,
+        ];
+        for d in deltas {
+            let mut buf = Vec::new();
+            d.encode(&mut buf);
+            let mut pos = 0;
+            assert_eq!(SetDelta::decode(&buf, &mut pos).unwrap(), d, "{d:?}");
+            assert_eq!(pos, buf.len());
+            for cut in 0..buf.len() {
+                let mut pos = 0;
+                // a prefix either errors or under-consumes; never panics
+                if let Ok(short) = SetDelta::decode(&buf[..cut], &mut pos) {
+                    assert_ne!((short, pos), (d.clone(), buf.len()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_bytes_stay_small_as_the_set_grows() {
+        let mut s = Orswot::new();
+        for i in 0..500u32 {
+            let dot = s.mint(a(0));
+            s.add(format!("element-{i:04}").into_bytes(), dot);
+        }
+        let full = {
+            let mut buf = Vec::new();
+            s.encode(&mut buf);
+            buf.len()
+        };
+        let dot = s.mint(a(0));
+        let delta = s.add(b"one-more".to_vec(), dot);
+        let mut buf = Vec::new();
+        delta.encode(&mut buf);
+        assert!(
+            buf.len() * 20 < full,
+            "delta ({}) must be far smaller than the state ({full})",
+            buf.len()
+        );
+    }
+}

@@ -4,6 +4,7 @@
 //! implementations in [`mechs`].
 
 pub mod conditions;
+pub mod crdt;
 pub mod digest;
 pub mod mechanism;
 pub mod mechs;

@@ -249,6 +249,157 @@ impl SharedOracle {
     }
 }
 
+/// Per-element ground truth inside a [`SetAudit`] (one audited set key).
+///
+/// Sequence numbers are assigned at op *completion*. Typed RMWs on one
+/// key are serialized end to end (the cluster's per-key stripe lock, or
+/// the DES's run-to-completion ops), so completion order equals effect
+/// order — and every partial effect of a *failed* op happened before
+/// the client saw the error, hence before the next seq.
+#[derive(Debug, Clone, Copy, Default)]
+struct ElemRecord {
+    /// Completion seq of the last acked SADD (0 = never).
+    last_acked_add: u64,
+    /// Completion seq of the last SREM *attempt*, acked or failed
+    /// (0 = never) — a failed remove may still have landed removals on
+    /// a minority of replicas.
+    last_remove_attempt: u64,
+    /// Completion seq of the last acked SREM (0 = never).
+    last_acked_remove: u64,
+    /// Any SADD of this element ever failed: its dot may be parked on a
+    /// minority replica outside every later read quorum, and can
+    /// legitimately resurface after heal — absence claims are off.
+    failed_add: bool,
+    /// Any SADD attempt (acked or failed) ever happened.
+    ever_added: bool,
+}
+
+/// Verdict over a final set membership, audited against the add-wins
+/// observed-remove contract (see [`SetAudit`]). All three violation
+/// counters must be zero for a correct ORSWOT.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SetVerdict {
+    /// Elements whose last acked SADD outran every SREM attempt, yet
+    /// are missing: an acked add was lost (must stay 0).
+    pub lost_adds: u64,
+    /// Elements an acked SREM removed after every acked SADD — with no
+    /// in-doubt SADD that could legally resurface — yet are present
+    /// (must stay 0).
+    pub resurrections: u64,
+    /// Present elements no SADD ever attempted (must stay 0).
+    pub phantoms: u64,
+    /// Acked SADDs recorded.
+    pub acked_adds: u64,
+    /// Acked SREMs recorded.
+    pub acked_removes: u64,
+}
+
+#[derive(Debug, Default)]
+struct SetAuditInner {
+    seq: u64,
+    elems: HashMap<Vec<u8>, ElemRecord>,
+    acked_adds: u64,
+    acked_removes: u64,
+}
+
+/// Ground-truth audit of one observed-remove set key under a concurrent
+/// add/remove workload ([`crate::api::drive_set_workload`]).
+///
+/// Acked ops become claims; failed ops become *taint*, because an
+/// in-doubt RMW may have partially landed: a failed SADD's dot can
+/// survive on a minority replica (so the element may legally
+/// resurface), and a failed SREM's removals can propagate by
+/// anti-entropy (so the element may legally vanish). The
+/// [`verdict`](SetAudit::verdict) therefore only claims presence when
+/// an acked add outran every remove attempt, and absence when an acked
+/// remove outran every acked add with no in-doubt add on record —
+/// exactly the window where add-wins semantics are unconditional.
+#[derive(Debug, Default)]
+pub struct SetAudit {
+    inner: Mutex<SetAuditInner>,
+}
+
+impl SetAudit {
+    /// New empty audit (one per audited set key).
+    pub fn new() -> SetAudit {
+        SetAudit::default()
+    }
+
+    fn record(&self, elem: &[u8], f: impl FnOnce(&mut ElemRecord, u64, &mut SetAuditInner)) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.seq += 1;
+        let seq = inner.seq;
+        let mut rec = inner.elems.get(elem).copied().unwrap_or_default();
+        f(&mut rec, seq, &mut inner);
+        inner.elems.insert(elem.to_vec(), rec);
+    }
+
+    /// Record an acked SADD of `elem`.
+    pub fn add_ok(&self, elem: &[u8]) {
+        self.record(elem, |rec, seq, inner| {
+            rec.last_acked_add = seq;
+            rec.ever_added = true;
+            inner.acked_adds += 1;
+        });
+    }
+
+    /// Record a failed (in-doubt) SADD of `elem`.
+    pub fn add_failed(&self, elem: &[u8]) {
+        self.record(elem, |rec, _seq, _inner| {
+            rec.failed_add = true;
+            rec.ever_added = true;
+        });
+    }
+
+    /// Record an acked SREM of `elem`.
+    pub fn remove_ok(&self, elem: &[u8]) {
+        self.record(elem, |rec, seq, inner| {
+            rec.last_remove_attempt = seq;
+            rec.last_acked_remove = seq;
+            inner.acked_removes += 1;
+        });
+    }
+
+    /// Record a failed (in-doubt) SREM of `elem`.
+    pub fn remove_failed(&self, elem: &[u8]) {
+        self.record(elem, |rec, seq, _inner| {
+            rec.last_remove_attempt = seq;
+        });
+    }
+
+    /// Audit a final membership (read after faults heal and anti-entropy
+    /// quiesces) against every claim on record.
+    pub fn verdict(&self, membership: &[Vec<u8>]) -> SetVerdict {
+        let inner = self.inner.lock().unwrap();
+        let mut v = SetVerdict {
+            acked_adds: inner.acked_adds,
+            acked_removes: inner.acked_removes,
+            ..SetVerdict::default()
+        };
+        for (elem, rec) in &inner.elems {
+            let present = membership.contains(elem);
+            let must_present =
+                rec.last_acked_add > 0 && rec.last_acked_add > rec.last_remove_attempt;
+            let must_absent = !rec.failed_add
+                && rec.last_acked_remove > 0
+                && rec.last_acked_remove > rec.last_acked_add;
+            if must_present && !present {
+                v.lost_adds += 1;
+            }
+            if must_absent && present {
+                v.resurrections += 1;
+            }
+        }
+        for elem in membership {
+            let attempted = inner.elems.get(elem).is_some_and(|rec| rec.ever_added);
+            if !attempted {
+                v.phantoms += 1;
+            }
+        }
+        v
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -343,6 +494,65 @@ mod tests {
         assert_eq!(o.lost_updates(), 0);
         assert_eq!(o.correct_supersessions(), 0);
         assert_eq!(o.unaudited_drops(), 2);
+    }
+
+    #[test]
+    fn set_audit_demands_acked_adds_survive() {
+        let a = SetAudit::new();
+        a.add_ok(b"x");
+        // absent despite an unchallenged acked add -> lost
+        let v = a.verdict(&[]);
+        assert_eq!(v.lost_adds, 1);
+        assert_eq!((v.resurrections, v.phantoms), (0, 0));
+        // present -> clean
+        let v = a.verdict(&[b"x".to_vec()]);
+        assert_eq!((v.lost_adds, v.resurrections, v.phantoms), (0, 0, 0));
+        assert_eq!(v.acked_adds, 1);
+    }
+
+    #[test]
+    fn set_audit_demands_acked_removes_stick() {
+        let a = SetAudit::new();
+        a.add_ok(b"x");
+        a.remove_ok(b"x");
+        let v = a.verdict(&[b"x".to_vec()]);
+        assert_eq!(v.resurrections, 1, "removed element resurfaced");
+        assert_eq!(a.verdict(&[]).resurrections, 0);
+        // a later acked add re-establishes presence
+        a.add_ok(b"x");
+        let v = a.verdict(&[b"x".to_vec()]);
+        assert_eq!((v.lost_adds, v.resurrections), (0, 0));
+        assert_eq!(a.verdict(&[]).lost_adds, 1);
+    }
+
+    #[test]
+    fn set_audit_failed_ops_taint_claims_both_ways() {
+        let a = SetAudit::new();
+        // a failed add may have parked a dot: absence AND presence both legal
+        a.add_failed(b"x");
+        a.remove_ok(b"x");
+        assert_eq!(a.verdict(&[b"x".to_vec()]).resurrections, 0);
+        assert_eq!(a.verdict(&[]).lost_adds, 0);
+        // a failed remove may have landed removals: presence claim is off
+        let b = SetAudit::new();
+        b.add_ok(b"y");
+        b.remove_failed(b"y");
+        assert_eq!(b.verdict(&[]).lost_adds, 0);
+        assert_eq!(b.verdict(&[b"y".to_vec()]).resurrections, 0);
+        // but an acked add AFTER the in-doubt remove restores the claim
+        b.add_ok(b"y");
+        assert_eq!(b.verdict(&[]).lost_adds, 1);
+    }
+
+    #[test]
+    fn set_audit_flags_phantoms() {
+        let a = SetAudit::new();
+        a.add_ok(b"x");
+        let v = a.verdict(&[b"x".to_vec(), b"ghost".to_vec()]);
+        assert_eq!(v.phantoms, 1);
+        // failed adds are attempts: their elements are not phantoms
+        a.add_failed(b"ghost");
+        assert_eq!(a.verdict(&[b"x".to_vec(), b"ghost".to_vec()]).phantoms, 0);
     }
 
     #[test]

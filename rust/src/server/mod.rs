@@ -51,6 +51,7 @@ pub mod protocol;
 #[cfg(unix)]
 pub(crate) mod reactor;
 pub mod tcp;
+pub mod typed;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -119,6 +120,12 @@ pub struct Node<B: StorageBackend<DvvMech> = ShardedBackend<DvvMech>> {
     /// Hybrid logical clock; advances on geo clusters only (coordinator
     /// stamps on PUT, receivers fold in shipped timestamps).
     hlc: Mutex<Hlc>,
+    /// Restart/wipe generation for CRDT dot minting: state loss must
+    /// never reuse a dot counter, so typed ops mint under a *fresh*
+    /// actor id after every crash-restart or wipe (see
+    /// [`typed`] and the false-cover hazard in
+    /// [`crate::kernel::crdt`]).
+    typed_epoch: AtomicU64,
 }
 
 impl<B: StorageBackend<DvvMech>> Node<B> {
@@ -220,6 +227,21 @@ pub struct LocalCluster<B: StorageBackend<DvvMech> = ShardedBackend<DvvMech>> {
     /// oracle the equivalence tests compare against
     /// ([`set_ae_merkle`](LocalCluster::set_ae_merkle)).
     ae_use_merkle: AtomicBool,
+    /// Stripe locks serializing typed read-modify-write ops per key
+    /// (power-of-two count; see [`typed`]). Register GET/PUT never
+    /// touch these.
+    typed_locks: Box<[Mutex<()>]>,
+    /// Datatype registry for STATS: which kind each typed-written key
+    /// holds (coordinator-process view; see
+    /// [`typed_counts`](LocalCluster::typed_counts)).
+    typed_kinds: Mutex<HashMap<Key, crate::kernel::crdt::CrdtKind>>,
+    /// Replication-bytes ledger for typed ops: what delta-shaped fan-out
+    /// actually sent / what full-state fallback sent / what always-full
+    /// replication would have sent (see
+    /// [`crdt_repl_bytes`](LocalCluster::crdt_repl_bytes)).
+    crdt_delta_bytes: AtomicU64,
+    crdt_full_bytes: AtomicU64,
+    crdt_allfull_bytes: AtomicU64,
 }
 
 impl LocalCluster {
@@ -363,6 +385,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
                             id,
                             store: KeyStore::with_backend(DvvMech, make(id)),
                             hlc: Mutex::new(Hlc::new()),
+                            typed_epoch: AtomicU64::new(0),
                         })
                     })
                     .collect(),
@@ -379,6 +402,11 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
             oracle: OnceLock::new(),
             membership: Mutex::new(()),
             ae_use_merkle: AtomicBool::new(true),
+            typed_locks: (0..64).map(|_| Mutex::new(())).collect(),
+            typed_kinds: Mutex::new(HashMap::new()),
+            crdt_delta_bytes: AtomicU64::new(0),
+            crdt_full_bytes: AtomicU64::new(0),
+            crdt_allfull_bytes: AtomicU64::new(0),
         })
     }
 
@@ -639,7 +667,8 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// oracle-verified runs should write through
     /// [`put_traced`](LocalCluster::put_traced) exclusively.
     pub fn put(&self, key: &str, value: Vec<u8>, context: &[u8]) -> Result<()> {
-        self.put_inner(key, value, context, Actor::client(0), None, None).map(|_| ())
+        self.put_inner(key, value, context, Actor::client(0), None, None, None, None)
+            .map(|_| ())
     }
 
     /// Traced PUT for the client API: like
@@ -662,7 +691,8 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         client: Actor,
         observed: &[u64],
     ) -> Result<(u64, Option<Vec<u8>>)> {
-        let (id, state) = self.put_inner(key, value, context, client, Some(observed), None)?;
+        let (id, state) =
+            self.put_inner(key, value, context, client, Some(observed), None, None, None)?;
         let (vals, post_ctx) = self.mech.read(&state);
         let post = if vals.len() == 1 && vals[0].id == id {
             let mut bytes = Vec::new();
@@ -694,7 +724,8 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         client: Actor,
         observed: &[u64],
     ) -> Result<u64> {
-        self.put_inner(key, value, context, client, Some(observed), None).map(|(id, _)| id)
+        self.put_inner(key, value, context, client, Some(observed), None, None, None)
+            .map(|(id, _)| id)
     }
 
     /// Traced PUT with a preferred coordinator zone: the write commits
@@ -711,7 +742,8 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         observed: &[u64],
         zone: Option<usize>,
     ) -> Result<u64> {
-        self.put_inner(key, value, context, client, Some(observed), zone).map(|(id, _)| id)
+        self.put_inner(key, value, context, client, Some(observed), zone, None, None)
+            .map(|(id, _)| id)
     }
 
     /// Shared PUT path; `observed: None` marks an untraced write that an
@@ -719,6 +751,13 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     /// the coordinator's post-write state snapshot (captured atomically
     /// under the stripe lock; callers that don't need it drop it so the
     /// untraced hot path pays nothing extra).
+    ///
+    /// `pin` forces the coordinator (the typed read-modify-write path
+    /// must commit at the node whose state and actor epoch it minted its
+    /// dot from); `repl` attaches the typed replication-bytes profile
+    /// tallied at every fan-out receiver (see [`typed`]). Register
+    /// callers pass `None` for both.
+    #[allow(clippy::too_many_arguments)]
     fn put_inner(
         &self,
         key: &str,
@@ -727,9 +766,13 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         client: Actor,
         observed: Option<&[u64]>,
         zone: Option<usize>,
+        pin: Option<NodeId>,
+        repl: Option<&typed::ReplProfile>,
     ) -> Result<(u64, DvvState)> {
         let k = hash_str(key);
-        with_scratch(|walk, aux| self.put_at(k, value, context, client, observed, zone, walk, aux))
+        with_scratch(|walk, aux| {
+            self.put_at(k, value, context, client, observed, zone, pin, repl, walk, aux)
+        })
     }
 
     /// The PUT body, working in the caller's scratch buffers: `walk`
@@ -746,6 +789,8 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         client: Actor,
         observed: Option<&[u64]>,
         zone: Option<usize>,
+        pin: Option<NodeId>,
+        repl: Option<&typed::ReplProfile>,
         walk: &mut Vec<NodeId>,
         aux: &mut Vec<NodeId>,
     ) -> Result<(u64, DvvState)> {
@@ -759,7 +804,14 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
         self.topology.replicas_into(k, self.quorum.n, walk);
         let home_count = walk.len();
         let nodes = self.nodes.read().unwrap();
-        let coordinator = self.pick_coordinator_in(&walk[..home_count], zone)?;
+        let coordinator = match pin {
+            // the pinned node read the state this write was derived
+            // from; committing anywhere else would break the dot-mint
+            // contract, so a crash in the gap fails the op instead
+            Some(n) if self.fabric.is_up(n) => n,
+            Some(n) => return Err(crate::Error::Unavailable(format!("pinned node {n} is down"))),
+            None => self.pick_coordinator_in(&walk[..home_count], zone)?,
+        };
         let quorum = self.scoped_quorum(&walk[..home_count], coordinator);
         let geo = self.geo();
         let my_zone = self.topology.zone_of(coordinator);
@@ -794,6 +846,9 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
                 // a remote-DC home: parked for the async cross-DC
                 // shipper instead of the synchronous fan-out — it
                 // neither counts toward W nor takes a stand-in
+                if let Some(rp) = repl {
+                    self.tally_repl(&nodes, node, k, rp);
+                }
                 self.ship.lock().unwrap().push(Hint {
                     holder: coordinator,
                     home: node,
@@ -803,6 +858,9 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
                 continue;
             }
             if self.fabric.deliver(coordinator, node) {
+                if let Some(rp) = repl {
+                    self.tally_repl(&nodes, node, k, rp);
+                }
                 self.merge_at_node(&nodes[node], k, &state);
                 // the ack is its own message; a lost ack leaves the data
                 // in place but does not count toward the quorum
@@ -841,6 +899,9 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
                 walk.swap(used, j);
                 let holder = walk[used];
                 used += 1;
+                if let Some(rp) = repl {
+                    self.tally_repl(&nodes, holder, k, rp);
+                }
                 self.merge_at_node(&nodes[holder], k, &state);
                 self.hints.lock().unwrap().push(Hint {
                     holder,
@@ -865,6 +926,9 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
                     continue;
                 }
                 if self.fabric.deliver(coordinator, home) {
+                    if let Some(rp) = repl {
+                        self.tally_repl(&nodes, home, k, rp);
+                    }
                     self.merge_at_node(&nodes[home], k, &state);
                 } else {
                     self.hints.lock().unwrap().push(Hint {
@@ -1098,6 +1162,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
                 id,
                 store: KeyStore::with_backend(DvvMech, backend),
                 hlc: Mutex::new(Hlc::new()),
+                typed_epoch: AtomicU64::new(0),
             }));
             id
         };
@@ -1218,7 +1283,12 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     pub fn restart_node(&self, id: NodeId) -> RecoveryReport {
         let nodes = self.nodes.read().unwrap();
         match nodes.get(id) {
-            Some(node) => node.store.backend().crash_restart(),
+            Some(node) => {
+                // any state loss invalidates the node's dot counters:
+                // typed ops must mint under a fresh actor from now on
+                node.typed_epoch.fetch_add(1, Ordering::Relaxed);
+                node.store.backend().crash_restart()
+            }
             None => RecoveryReport::default(), // plans may race a join
         }
     }
@@ -1228,6 +1298,7 @@ impl<B: StorageBackend<DvvMech>> LocalCluster<B> {
     pub fn wipe_node(&self, id: NodeId) {
         let nodes = self.nodes.read().unwrap();
         if let Some(node) = nodes.get(id) {
+            node.typed_epoch.fetch_add(1, Ordering::Relaxed);
             node.store.backend().wipe();
         }
     }

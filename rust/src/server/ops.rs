@@ -142,18 +142,68 @@ pub(crate) fn exec_text_line<B: StorageBackend<DvvMech>>(
             Ok(()) => "OK\n".to_string(),
             Err(e) => format!("ERR {e}\n"),
         },
-        Ok(Request::Stats) => format!(
-            "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={} wal_bytes={} merkle_root={} zones={} ship_lag={}\n",
-            cluster.node_count(),
-            cluster.shard_count(),
-            cluster.metadata_bytes(),
-            cluster.pending_hints(),
-            cluster.epoch(),
-            cluster.wal_bytes(),
-            cluster.merkle_root(),
-            cluster.zone_count(),
-            cluster.ship_lag()
-        ),
+        Ok(Request::SAdd { key, elem }) => match cluster.set_add(&key, &elem) {
+            Ok(dot) => format!("OK dot={dot}\n"),
+            Err(e) => format!("ERR {e}\n"),
+        },
+        Ok(Request::SRem { key, elem }) => match cluster.set_remove(&key, &elem) {
+            Ok(dots) if dots.is_empty() => "OK removed=-\n".to_string(),
+            Ok(dots) => {
+                let dots: Vec<String> = dots.iter().map(|d| d.to_string()).collect();
+                format!("OK removed={}\n", dots.join(","))
+            }
+            Err(e) => format!("ERR {e}\n"),
+        },
+        Ok(Request::SMembers { key }) => match cluster.set_members(&key) {
+            Ok(members) => {
+                let mut out = format!("MEMBERS {}\n", members.len());
+                for m in &members {
+                    out.push_str(&format!("MEMBER {}\n", protocol::hex_encode(m)));
+                }
+                out
+            }
+            Err(e) => format!("ERR {e}\n"),
+        },
+        Ok(Request::Incr { key, by }) => match cluster.counter_incr(&key, by) {
+            Ok(value) => format!("OK value={value}\n"),
+            Err(e) => format!("ERR {e}\n"),
+        },
+        Ok(Request::Count { key }) => match cluster.counter_value(&key) {
+            Ok(value) => format!("OK value={value}\n"),
+            Err(e) => format!("ERR {e}\n"),
+        },
+        Ok(Request::MPut { key, field, value }) => {
+            match cluster.map_put(&key, &field, &value) {
+                Ok(dot) => format!("OK dot={dot}\n"),
+                Err(e) => format!("ERR {e}\n"),
+            }
+        }
+        Ok(Request::MGet { key, field }) => match cluster.map_get(&key, &field) {
+            // an absent field and an empty value both render `-` in
+            // text (hex_encode's empty convention); the binary
+            // OP_FIELD_REPLY keeps them distinct
+            Ok(Some(value)) => format!("FIELD {}\n", protocol::hex_encode(&value)),
+            Ok(None) => "FIELD -\n".to_string(),
+            Err(e) => format!("ERR {e}\n"),
+        },
+        Ok(Request::Stats) => {
+            let (sets, counters, maps) = cluster.typed_counts();
+            format!(
+                "STATS nodes={} shards={} metadata_bytes={} hints={} epoch={} wal_bytes={} merkle_root={} zones={} ship_lag={} sets={} counters={} maps={}\n",
+                cluster.node_count(),
+                cluster.shard_count(),
+                cluster.metadata_bytes(),
+                cluster.pending_hints(),
+                cluster.epoch(),
+                cluster.wal_bytes(),
+                cluster.merkle_root(),
+                cluster.zone_count(),
+                cluster.ship_lag(),
+                sets,
+                counters,
+                maps
+            )
+        }
         Ok(Request::Fault(cmd)) => apply_fault(cluster, cmd),
         Ok(Request::Heal { node }) => apply_heal(cluster, node),
         Ok(Request::Restart { node }) => apply_restart(cluster, node),
@@ -245,20 +295,73 @@ pub(crate) fn exec_bin_request<B: StorageBackend<DvvMech>>(
                 Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
             }
         }
-        Ok(BinRequest::Stats) => (
-            protocol::OP_STATS_REPLY,
-            protocol::encode_stats_reply(
-                cluster.node_count() as u64,
-                cluster.shard_count() as u64,
-                cluster.metadata_bytes(),
-                cluster.pending_hints() as u64,
-                cluster.epoch(),
-                cluster.wal_bytes(),
-                cluster.merkle_root(),
-                cluster.zone_count() as u64,
-                cluster.ship_lag() as u64,
-            ),
-        ),
+        Ok(BinRequest::SAdd { key, elem }) => match cluster.set_add(&key, &elem) {
+            Ok(dot) => (protocol::OP_DOT_REPLY, protocol::encode_dot_reply(&dot)),
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        },
+        Ok(BinRequest::SRem { key, elem }) => match cluster.set_remove(&key, &elem) {
+            Ok(dots) => (protocol::OP_DOTS_REPLY, protocol::encode_dots_reply(&dots)),
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        },
+        Ok(BinRequest::SMembers { key }) => match cluster.set_members(&key) {
+            Ok(members) => {
+                let payload = protocol::encode_members_reply(&members);
+                // same degradation rule as GET: an oversized member set
+                // becomes an ERR reply, not a dead connection
+                if !protocol::fits_frame(payload.len()) {
+                    (
+                        protocol::OP_ERR,
+                        format!(
+                            "reply of {} bytes exceeds the {}-byte frame cap",
+                            payload.len(),
+                            protocol::MAX_FRAME_LEN
+                        )
+                        .into_bytes(),
+                    )
+                } else {
+                    (protocol::OP_MEMBERS_REPLY, payload)
+                }
+            }
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        },
+        Ok(BinRequest::Incr { key, by }) => match cluster.counter_incr(&key, by) {
+            Ok(value) => (protocol::OP_COUNT_REPLY, protocol::encode_count_reply(value)),
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        },
+        Ok(BinRequest::Count { key }) => match cluster.counter_value(&key) {
+            Ok(value) => (protocol::OP_COUNT_REPLY, protocol::encode_count_reply(value)),
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        },
+        Ok(BinRequest::MPut { key, field, value }) => {
+            match cluster.map_put(&key, &field, &value) {
+                Ok(dot) => (protocol::OP_DOT_REPLY, protocol::encode_dot_reply(&dot)),
+                Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+            }
+        }
+        Ok(BinRequest::MGet { key, field }) => match cluster.map_get(&key, &field) {
+            Ok(value) => {
+                (protocol::OP_FIELD_REPLY, protocol::encode_field_reply(value.as_deref()))
+            }
+            Err(e) => (protocol::OP_ERR, e.to_string().into_bytes()),
+        },
+        Ok(BinRequest::Stats) => {
+            let (sets, counters, maps) = cluster.typed_counts();
+            let stats = protocol::StatsReply {
+                nodes: cluster.node_count() as u64,
+                shards: cluster.shard_count() as u64,
+                metadata_bytes: cluster.metadata_bytes(),
+                hints: cluster.pending_hints() as u64,
+                epoch: cluster.epoch(),
+                wal_bytes: cluster.wal_bytes(),
+                merkle_root: cluster.merkle_root(),
+                zones: cluster.zone_count() as u64,
+                ship_lag: cluster.ship_lag() as u64,
+                sets,
+                counters,
+                maps,
+            };
+            (protocol::OP_STATS_REPLY, protocol::encode_stats_reply(&stats))
+        }
         Ok(BinRequest::Join) => {
             // the reply's epoch and slots come from *this* join's return
             // value, so `slots - 1` is the id assigned to this request

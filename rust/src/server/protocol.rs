@@ -30,9 +30,30 @@
 //! -> PUT <key> <value-hex> [ctx-hex]
 //! <- OK
 //! -> STATS
-//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h> epoch=<e> wal_bytes=<w> merkle_root=<m> zones=<z> ship_lag=<l>
+//! <- STATS nodes=<n> shards=<s> metadata_bytes=<b> hints=<h> epoch=<e> wal_bytes=<w> merkle_root=<m> zones=<z> ship_lag=<l> sets=<c> counters=<c> maps=<c>
 //! -> QUIT
 //! <- BYE
+//! ```
+//!
+//! Typed CRDT ops ([`crate::kernel::crdt`]) address sets, counters, and
+//! maps by key; element and field arguments are hex like values:
+//!
+//! ```text
+//! -> SADD <key> <elem-hex>          add-wins set insert
+//! <- OK dot=<actor>:<counter>          the dot minted for the add
+//! -> SREM <key> <elem-hex>          remove observed dots only
+//! <- OK removed=<a:n,b:m | ->          the dots removed (`-` = none seen)
+//! -> SMEMBERS <key>
+//! <- MEMBERS <n>
+//! <- MEMBER <hex>                   (n lines)
+//! -> INCR <key> <delta>             PN-counter add (delta may be negative)
+//! <- OK value=<v>                      post-increment value
+//! -> COUNT <key>
+//! <- OK value=<v>
+//! -> MPUT <key> <field-hex> <value-hex>
+//! <- OK dot=<actor>:<counter>
+//! -> MGET <key> <field-hex>
+//! <- FIELD <hex | ->                   `-` = absent field
 //! ```
 //!
 //! Fault-injection admin commands drive the cluster's
@@ -137,6 +158,53 @@ pub enum Request {
         value: Vec<u8>,
         /// Context bytes from a prior GET (may be empty).
         context: Vec<u8>,
+    },
+    /// Add an element to an observed-remove set (mints a dot).
+    SAdd {
+        /// Key string.
+        key: String,
+        /// Element bytes.
+        elem: Vec<u8>,
+    },
+    /// Remove an element's *observed* dots from a set.
+    SRem {
+        /// Key string.
+        key: String,
+        /// Element bytes.
+        elem: Vec<u8>,
+    },
+    /// List a set's members.
+    SMembers {
+        /// Key string.
+        key: String,
+    },
+    /// Add a (possibly negative) delta to a PN-counter.
+    Incr {
+        /// Key string.
+        key: String,
+        /// Signed delta.
+        by: i64,
+    },
+    /// Read a PN-counter's value.
+    Count {
+        /// Key string.
+        key: String,
+    },
+    /// Write a field in an observed-remove map (mints a dot).
+    MPut {
+        /// Key string.
+        key: String,
+        /// Field bytes.
+        field: Vec<u8>,
+        /// Value bytes.
+        value: Vec<u8>,
+    },
+    /// Read a field from an observed-remove map.
+    MGet {
+        /// Key string.
+        key: String,
+        /// Field bytes.
+        field: Vec<u8>,
     },
     /// Server statistics.
     Stats,
@@ -294,6 +362,73 @@ pub fn parse_request(line: &str) -> Result<Request> {
             };
             Ok(Request::Put { key: key.to_string(), value, context })
         }
+        "SADD" | "SREM" => {
+            let key = parts
+                .next()
+                .ok_or_else(|| Error::Protocol(format!("{cmd} needs a key")))?;
+            let elem = hex_decode(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol(format!("{cmd} needs an element")))?,
+            )?;
+            let key = key.to_string();
+            if cmd.eq_ignore_ascii_case("SADD") {
+                Ok(Request::SAdd { key, elem })
+            } else {
+                Ok(Request::SRem { key, elem })
+            }
+        }
+        "SMEMBERS" => {
+            let key = parts
+                .next()
+                .ok_or_else(|| Error::Protocol("SMEMBERS needs a key".into()))?;
+            Ok(Request::SMembers { key: key.to_string() })
+        }
+        "INCR" => {
+            let key = parts
+                .next()
+                .ok_or_else(|| Error::Protocol("INCR needs a key".into()))?;
+            let raw = parts
+                .next()
+                .ok_or_else(|| Error::Protocol("INCR needs a delta".into()))?;
+            let by: i64 = raw
+                .parse()
+                .map_err(|_| Error::Protocol(format!("bad delta {raw:?}")))?;
+            Ok(Request::Incr { key: key.to_string(), by })
+        }
+        "COUNT" => {
+            let key = parts
+                .next()
+                .ok_or_else(|| Error::Protocol("COUNT needs a key".into()))?;
+            Ok(Request::Count { key: key.to_string() })
+        }
+        "MPUT" => {
+            let key = parts
+                .next()
+                .ok_or_else(|| Error::Protocol("MPUT needs a key".into()))?;
+            let field = hex_decode(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("MPUT needs a field".into()))?,
+            )?;
+            let value = hex_decode(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("MPUT needs a value".into()))?,
+            )?;
+            Ok(Request::MPut { key: key.to_string(), field, value })
+        }
+        "MGET" => {
+            let key = parts
+                .next()
+                .ok_or_else(|| Error::Protocol("MGET needs a key".into()))?;
+            let field = hex_decode(
+                parts
+                    .next()
+                    .ok_or_else(|| Error::Protocol("MGET needs a field".into()))?,
+            )?;
+            Ok(Request::MGet { key: key.to_string(), field })
+        }
         "STATS" => Ok(Request::Stats),
         "FAULT" => Ok(Request::Fault(parse_fault(&mut parts)?)),
         "HEAL" => {
@@ -344,7 +479,10 @@ pub fn format_values(values: &[Vec<u8>], context: &[u8]) -> String {
 // Binary protocol v2
 // ===================================================================
 
-use crate::clocks::encoding::{expect_end, get_bytes, get_varint, put_varint};
+use crate::clocks::encoding::{
+    expect_end, get_bytes, get_varint, get_zigzag, put_varint, put_zigzag,
+};
+use crate::kernel::crdt::{decode_dot, decode_dots, encode_dot, encode_dots, Dot};
 
 /// Connection preamble of a v2 client: these four bytes, then one
 /// version byte, then `\n`. Any other opening byte sequence selects the
@@ -363,8 +501,11 @@ pub const MAGIC: [u8; 4] = *b"DVV2";
 /// (`expect_end`), so an older binary would misparse the longer reply
 /// mid-session — version negotiation turns that silent skew into a
 /// clean hello-time rejection. (The `DVV2` magic names the protocol
-/// family, not this byte.)
-pub const VERSION: u8 = 6;
+/// family, not this byte.) Bumped to 7 when the CRDT revision added the
+/// typed-datatype opcodes ([`OP_SADD`] … [`OP_MGET`], replies
+/// [`OP_DOT_REPLY`] … [`OP_FIELD_REPLY`]) and appended three datatype
+/// counts (`sets`, `counters`, `maps`) to [`OP_STATS_REPLY`].
+pub const VERSION: u8 = 7;
 
 /// Upper bound on a frame's length field (16 MiB). A header promising
 /// more is rejected before any allocation.
@@ -414,6 +555,32 @@ pub const OP_TOPOLOGY: u8 = 0x08;
 /// the origin zone, the shipper's hybrid-logical-clock stamp, and the
 /// encoded DVV states to merge. Replies with [`OP_SHIP_ACK`].
 pub const OP_SHIP: u8 = 0x09;
+/// Request opcode: add an element to an observed-remove set. Payload:
+/// `[klen][key][elen][elem]` (varint lengths). Replies with an
+/// [`OP_DOT_REPLY`] carrying the minted dot.
+pub const OP_SADD: u8 = 0x0A;
+/// Request opcode: remove an element's observed dots from a set.
+/// Payload: `[klen][key][elen][elem]`. Replies with an
+/// [`OP_DOTS_REPLY`] listing the dots actually removed (empty = the
+/// element was not present).
+pub const OP_SREM: u8 = 0x0B;
+/// Request opcode: list a set's members. Payload: key bytes (UTF-8).
+/// Replies with an [`OP_MEMBERS_REPLY`].
+pub const OP_SMEMBERS: u8 = 0x0C;
+/// Request opcode: add a signed delta to a PN-counter. Payload:
+/// `[klen][key][zigzag delta]`. Replies with an [`OP_COUNT_REPLY`]
+/// carrying the post-increment value.
+pub const OP_INCR: u8 = 0x0D;
+/// Request opcode: read a PN-counter. Payload: key bytes (UTF-8).
+/// Replies with an [`OP_COUNT_REPLY`].
+pub const OP_COUNT: u8 = 0x0E;
+/// Request opcode: write a field in an observed-remove map. Payload:
+/// `[klen][key][flen][field][vlen][value]`. Replies with an
+/// [`OP_DOT_REPLY`].
+pub const OP_MPUT: u8 = 0x0F;
+/// Request opcode: read a field from an observed-remove map. Payload:
+/// `[klen][key][flen][field]`. Replies with an [`OP_FIELD_REPLY`].
+pub const OP_MGET: u8 = 0x10;
 
 /// Response opcode: negotiation ack. Payload: the accepted version byte.
 pub const OP_HELLO_ACK: u8 = 0x80;
@@ -446,6 +613,23 @@ pub const OP_BYE: u8 = 0x86;
 /// `[applied][hlc l][hlc c]` — the number of states merged and the
 /// receiving node's post-merge hybrid-logical-clock reading.
 pub const OP_SHIP_ACK: u8 = 0x88;
+/// Response opcode: one minted dot (answer to [`OP_SADD`] /
+/// [`OP_MPUT`]). Payload: `[actor][counter]` varints, counter ≥ 1.
+pub const OP_DOT_REPLY: u8 = 0x89;
+/// Response opcode: the dots an [`OP_SREM`] removed. Payload:
+/// `[count]` then `[actor][counter]` per dot, strictly ascending.
+pub const OP_DOTS_REPLY: u8 = 0x8A;
+/// Response opcode: a set's members (answer to [`OP_SMEMBERS`]).
+/// Payload: `[count]` then `[elen][elem]` per member.
+pub const OP_MEMBERS_REPLY: u8 = 0x8B;
+/// Response opcode: a counter value (answer to [`OP_INCR`] /
+/// [`OP_COUNT`]). Payload: one zigzag varint
+/// ([`crate::clocks::encoding::put_zigzag`]).
+pub const OP_COUNT_REPLY: u8 = 0x8C;
+/// Response opcode: a map field read (answer to [`OP_MGET`]). Payload:
+/// `[present u8]` then, when present is 1, `[vlen][value]` — the
+/// explicit flag keeps an absent field distinct from an empty value.
+pub const OP_FIELD_REPLY: u8 = 0x8D;
 
 /// A parsed binary (v2) request frame.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -467,6 +651,53 @@ pub enum BinRequest {
         /// Encoded [`crate::api::CausalCtx`] token (empty = blind write
         /// with nothing observed).
         ctx_token: Vec<u8>,
+    },
+    /// Add an element to an observed-remove set.
+    SAdd {
+        /// Key string.
+        key: String,
+        /// Element bytes.
+        elem: Vec<u8>,
+    },
+    /// Remove an element's observed dots from a set.
+    SRem {
+        /// Key string.
+        key: String,
+        /// Element bytes.
+        elem: Vec<u8>,
+    },
+    /// List a set's members.
+    SMembers {
+        /// Key string.
+        key: String,
+    },
+    /// Add a signed delta to a PN-counter.
+    Incr {
+        /// Key string.
+        key: String,
+        /// Signed delta.
+        by: i64,
+    },
+    /// Read a PN-counter's value.
+    Count {
+        /// Key string.
+        key: String,
+    },
+    /// Write a field in an observed-remove map.
+    MPut {
+        /// Key string.
+        key: String,
+        /// Field bytes.
+        field: Vec<u8>,
+        /// Value bytes.
+        value: Vec<u8>,
+    },
+    /// Read a field from an observed-remove map.
+    MGet {
+        /// Key string.
+        key: String,
+        /// Field bytes.
+        field: Vec<u8>,
     },
     /// Server statistics.
     Stats,
@@ -561,6 +792,30 @@ fn utf8(bytes: &[u8], what: &str) -> Result<String> {
         .map_err(|_| Error::Protocol(format!("{what} is not valid UTF-8")))
 }
 
+/// Encode the shared `[klen][key][blen][blob]` payload shape of the
+/// typed ops that carry a key plus one opaque byte argument (SADD /
+/// SREM element, MGET field).
+fn encode_key_blob(key: &str, blob: &[u8]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(key.len() + blob.len() + 8);
+    put_varint(&mut p, key.len() as u64);
+    p.extend_from_slice(key.as_bytes());
+    put_varint(&mut p, blob.len() as u64);
+    p.extend_from_slice(blob);
+    p
+}
+
+/// Decode the `[klen][key][blen][blob]` payload shape strictly
+/// (trailing bytes rejected).
+fn decode_key_blob(payload: &[u8]) -> Result<(String, Vec<u8>)> {
+    let mut pos = 0;
+    let klen = get_len(payload, &mut pos)?;
+    let key = utf8(get_bytes(payload, &mut pos, klen)?, "key")?;
+    let blen = get_len(payload, &mut pos)?;
+    let blob = get_bytes(payload, &mut pos, blen)?.to_vec();
+    expect_end(payload, pos)?;
+    Ok((key, blob))
+}
+
 /// Encode a binary request as `(opcode, payload)`.
 pub fn encode_bin_request(req: &BinRequest) -> (u8, Vec<u8>) {
     match req {
@@ -577,6 +832,28 @@ pub fn encode_bin_request(req: &BinRequest) -> (u8, Vec<u8>) {
             p.extend_from_slice(ctx_token);
             (OP_PUT, p)
         }
+        BinRequest::SAdd { key, elem } => (OP_SADD, encode_key_blob(key, elem)),
+        BinRequest::SRem { key, elem } => (OP_SREM, encode_key_blob(key, elem)),
+        BinRequest::SMembers { key } => (OP_SMEMBERS, key.as_bytes().to_vec()),
+        BinRequest::Incr { key, by } => {
+            let mut p = Vec::with_capacity(key.len() + 12);
+            put_varint(&mut p, key.len() as u64);
+            p.extend_from_slice(key.as_bytes());
+            put_zigzag(&mut p, *by);
+            (OP_INCR, p)
+        }
+        BinRequest::Count { key } => (OP_COUNT, key.as_bytes().to_vec()),
+        BinRequest::MPut { key, field, value } => {
+            let mut p = Vec::with_capacity(key.len() + field.len() + value.len() + 12);
+            put_varint(&mut p, key.len() as u64);
+            p.extend_from_slice(key.as_bytes());
+            put_varint(&mut p, field.len() as u64);
+            p.extend_from_slice(field);
+            put_varint(&mut p, value.len() as u64);
+            p.extend_from_slice(value);
+            (OP_MPUT, p)
+        }
+        BinRequest::MGet { key, field } => (OP_MGET, encode_key_blob(key, field)),
         BinRequest::Stats => (OP_STATS, Vec::new()),
         BinRequest::Admin { line } => (OP_ADMIN, line.as_bytes().to_vec()),
         BinRequest::Join => (OP_JOIN, Vec::new()),
@@ -622,6 +899,39 @@ pub fn decode_bin_request(opcode: u8, payload: &[u8]) -> Result<BinRequest> {
             let ctx_token = get_bytes(payload, &mut pos, tlen)?.to_vec();
             expect_end(payload, pos)?;
             Ok(BinRequest::Put { key, value, actor, ctx_token })
+        }
+        OP_SADD => {
+            let (key, elem) = decode_key_blob(payload)?;
+            Ok(BinRequest::SAdd { key, elem })
+        }
+        OP_SREM => {
+            let (key, elem) = decode_key_blob(payload)?;
+            Ok(BinRequest::SRem { key, elem })
+        }
+        OP_SMEMBERS => Ok(BinRequest::SMembers { key: utf8(payload, "key")? }),
+        OP_INCR => {
+            let mut pos = 0;
+            let klen = get_len(payload, &mut pos)?;
+            let key = utf8(get_bytes(payload, &mut pos, klen)?, "key")?;
+            let by = get_zigzag(payload, &mut pos)?;
+            expect_end(payload, pos)?;
+            Ok(BinRequest::Incr { key, by })
+        }
+        OP_COUNT => Ok(BinRequest::Count { key: utf8(payload, "key")? }),
+        OP_MPUT => {
+            let mut pos = 0;
+            let klen = get_len(payload, &mut pos)?;
+            let key = utf8(get_bytes(payload, &mut pos, klen)?, "key")?;
+            let flen = get_len(payload, &mut pos)?;
+            let field = get_bytes(payload, &mut pos, flen)?.to_vec();
+            let vlen = get_len(payload, &mut pos)?;
+            let value = get_bytes(payload, &mut pos, vlen)?.to_vec();
+            expect_end(payload, pos)?;
+            Ok(BinRequest::MPut { key, field, value })
+        }
+        OP_MGET => {
+            let (key, field) = decode_key_blob(payload)?;
+            Ok(BinRequest::MGet { key, field })
         }
         OP_STATS => {
             expect_end(payload, 0)?;
@@ -718,51 +1028,183 @@ pub fn decode_put_ok(payload: &[u8]) -> Result<(u64, Vec<u8>)> {
     Ok((id, ctx_token))
 }
 
-/// Encode an [`OP_STATS_REPLY`] payload.
-#[allow(clippy::too_many_arguments)]
-pub fn encode_stats_reply(
-    nodes: u64,
-    shards: u64,
-    metadata_bytes: u64,
-    hints: u64,
-    epoch: u64,
-    wal_bytes: u64,
-    merkle_root: u64,
-    zones: u64,
-    ship_lag: u64,
-) -> Vec<u8> {
-    let mut p = Vec::with_capacity(40);
-    put_varint(&mut p, nodes);
-    put_varint(&mut p, shards);
-    put_varint(&mut p, metadata_bytes);
-    put_varint(&mut p, hints);
-    put_varint(&mut p, epoch);
-    put_varint(&mut p, wal_bytes);
-    put_varint(&mut p, merkle_root);
-    put_varint(&mut p, zones);
-    put_varint(&mut p, ship_lag);
+/// Encode an [`OP_DOT_REPLY`] payload: one minted dot.
+pub fn encode_dot_reply(dot: &Dot) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8);
+    encode_dot(dot, &mut p);
     p
 }
 
-/// Decode an [`OP_STATS_REPLY`] payload into
-/// `(nodes, shards, metadata_bytes, hints, epoch, wal_bytes,
-/// merkle_root, zones, ship_lag)`.
-#[allow(clippy::type_complexity)]
-pub fn decode_stats_reply(
-    payload: &[u8],
-) -> Result<(u64, u64, u64, u64, u64, u64, u64, u64, u64)> {
+/// Decode an [`OP_DOT_REPLY`] payload.
+pub fn decode_dot_reply(payload: &[u8]) -> Result<Dot> {
     let mut pos = 0;
-    let nodes = get_varint(payload, &mut pos)?;
-    let shards = get_varint(payload, &mut pos)?;
-    let metadata_bytes = get_varint(payload, &mut pos)?;
-    let hints = get_varint(payload, &mut pos)?;
-    let epoch = get_varint(payload, &mut pos)?;
-    let wal_bytes = get_varint(payload, &mut pos)?;
-    let merkle_root = get_varint(payload, &mut pos)?;
-    let zones = get_varint(payload, &mut pos)?;
-    let ship_lag = get_varint(payload, &mut pos)?;
+    let dot = decode_dot(payload, &mut pos)?;
     expect_end(payload, pos)?;
-    Ok((nodes, shards, metadata_bytes, hints, epoch, wal_bytes, merkle_root, zones, ship_lag))
+    Ok(dot)
+}
+
+/// Encode an [`OP_DOTS_REPLY`] payload: the dots an SREM removed
+/// (strictly ascending; empty = nothing observed).
+pub fn encode_dots_reply(dots: &[Dot]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(dots.len() * 6 + 4);
+    encode_dots(dots, &mut p);
+    p
+}
+
+/// Decode an [`OP_DOTS_REPLY`] payload.
+pub fn decode_dots_reply(payload: &[u8]) -> Result<Vec<Dot>> {
+    let mut pos = 0;
+    let dots = decode_dots(payload, &mut pos)?;
+    expect_end(payload, pos)?;
+    Ok(dots)
+}
+
+/// Encode an [`OP_MEMBERS_REPLY`] payload: a set's members.
+pub fn encode_members_reply(members: &[Vec<u8>]) -> Vec<u8> {
+    let total: usize = members.iter().map(|m| m.len() + 4).sum();
+    let mut p = Vec::with_capacity(total + 4);
+    put_varint(&mut p, members.len() as u64);
+    for m in members {
+        put_varint(&mut p, m.len() as u64);
+        p.extend_from_slice(m);
+    }
+    p
+}
+
+/// Decode an [`OP_MEMBERS_REPLY`] payload.
+pub fn decode_members_reply(payload: &[u8]) -> Result<Vec<Vec<u8>>> {
+    let mut pos = 0;
+    let count = get_len(payload, &mut pos)?;
+    // no `with_capacity(count)`: a hostile count must not pick the
+    // allocation size (same rule as `decode_values`)
+    let mut members = Vec::new();
+    for _ in 0..count {
+        let mlen = get_len(payload, &mut pos)?;
+        members.push(get_bytes(payload, &mut pos, mlen)?.to_vec());
+    }
+    expect_end(payload, pos)?;
+    Ok(members)
+}
+
+/// Encode an [`OP_COUNT_REPLY`] payload: one zigzag-varint counter
+/// value.
+pub fn encode_count_reply(value: i64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(10);
+    put_zigzag(&mut p, value);
+    p
+}
+
+/// Decode an [`OP_COUNT_REPLY`] payload.
+pub fn decode_count_reply(payload: &[u8]) -> Result<i64> {
+    let mut pos = 0;
+    let value = get_zigzag(payload, &mut pos)?;
+    expect_end(payload, pos)?;
+    Ok(value)
+}
+
+/// Encode an [`OP_FIELD_REPLY`] payload: an explicit presence flag,
+/// then the value bytes when present — `None` (absent field) and
+/// `Some(empty)` must stay distinguishable on the wire.
+pub fn encode_field_reply(value: Option<&[u8]>) -> Vec<u8> {
+    match value {
+        None => vec![0],
+        Some(v) => {
+            let mut p = Vec::with_capacity(v.len() + 6);
+            p.push(1);
+            put_varint(&mut p, v.len() as u64);
+            p.extend_from_slice(v);
+            p
+        }
+    }
+}
+
+/// Decode an [`OP_FIELD_REPLY`] payload.
+pub fn decode_field_reply(payload: &[u8]) -> Result<Option<Vec<u8>>> {
+    let mut pos = 0;
+    let present = get_bytes(payload, &mut pos, 1)?[0];
+    match present {
+        0 => {
+            expect_end(payload, pos)?;
+            Ok(None)
+        }
+        1 => {
+            let vlen = get_len(payload, &mut pos)?;
+            let value = get_bytes(payload, &mut pos, vlen)?.to_vec();
+            expect_end(payload, pos)?;
+            Ok(Some(value))
+        }
+        other => Err(Error::Protocol(format!("bad presence flag {other}"))),
+    }
+}
+
+/// A decoded [`OP_STATS_REPLY`]: every gauge the server exposes, in
+/// wire order. Grew one field per protocol revision — a named struct
+/// keeps call sites readable where a 12-tuple would not.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsReply {
+    /// Live replica count.
+    pub nodes: u64,
+    /// Shards per node.
+    pub shards: u64,
+    /// Clock-metadata bytes across the cluster.
+    pub metadata_bytes: u64,
+    /// Parked hints awaiting handoff.
+    pub hints: u64,
+    /// Current membership epoch.
+    pub epoch: u64,
+    /// WAL bytes on disk across the cluster.
+    pub wal_bytes: u64,
+    /// Combined Merkle root over all shards.
+    pub merkle_root: u64,
+    /// Datacenter (zone) count.
+    pub zones: u64,
+    /// Cross-DC shipping lag (pending entries).
+    pub ship_lag: u64,
+    /// Keys holding an observed-remove set.
+    pub sets: u64,
+    /// Keys holding a PN-counter.
+    pub counters: u64,
+    /// Keys holding an observed-remove map.
+    pub maps: u64,
+}
+
+/// Encode an [`OP_STATS_REPLY`] payload.
+pub fn encode_stats_reply(s: &StatsReply) -> Vec<u8> {
+    let mut p = Vec::with_capacity(52);
+    put_varint(&mut p, s.nodes);
+    put_varint(&mut p, s.shards);
+    put_varint(&mut p, s.metadata_bytes);
+    put_varint(&mut p, s.hints);
+    put_varint(&mut p, s.epoch);
+    put_varint(&mut p, s.wal_bytes);
+    put_varint(&mut p, s.merkle_root);
+    put_varint(&mut p, s.zones);
+    put_varint(&mut p, s.ship_lag);
+    put_varint(&mut p, s.sets);
+    put_varint(&mut p, s.counters);
+    put_varint(&mut p, s.maps);
+    p
+}
+
+/// Decode an [`OP_STATS_REPLY`] payload.
+pub fn decode_stats_reply(payload: &[u8]) -> Result<StatsReply> {
+    let mut pos = 0;
+    let s = StatsReply {
+        nodes: get_varint(payload, &mut pos)?,
+        shards: get_varint(payload, &mut pos)?,
+        metadata_bytes: get_varint(payload, &mut pos)?,
+        hints: get_varint(payload, &mut pos)?,
+        epoch: get_varint(payload, &mut pos)?,
+        wal_bytes: get_varint(payload, &mut pos)?,
+        merkle_root: get_varint(payload, &mut pos)?,
+        zones: get_varint(payload, &mut pos)?,
+        ship_lag: get_varint(payload, &mut pos)?,
+        sets: get_varint(payload, &mut pos)?,
+        counters: get_varint(payload, &mut pos)?,
+        maps: get_varint(payload, &mut pos)?,
+    };
+    expect_end(payload, pos)?;
+    Ok(s)
 }
 
 /// Encode an [`OP_SHIP_ACK`] payload: states applied + the receiver's
@@ -1088,12 +1530,23 @@ mod tests {
         let p = encode_put_ok(99, &token);
         assert_eq!(decode_put_ok(&p).unwrap(), (99, token));
 
-        let p = encode_stats_reply(3, 64, 12345, 2, 7, 4096, 0xDEAD_BEEF, 2, 5);
-        assert_eq!(
-            decode_stats_reply(&p).unwrap(),
-            (3, 64, 12345, 2, 7, 4096, 0xDEAD_BEEF, 2, 5)
-        );
-        // truncating any suffix (e.g. a pre-v6 seven-field reply) is a
+        let stats = StatsReply {
+            nodes: 3,
+            shards: 64,
+            metadata_bytes: 12345,
+            hints: 2,
+            epoch: 7,
+            wal_bytes: 4096,
+            merkle_root: 0xDEAD_BEEF,
+            zones: 2,
+            ship_lag: 5,
+            sets: 11,
+            counters: 4,
+            maps: 1,
+        };
+        let p = encode_stats_reply(&stats);
+        assert_eq!(decode_stats_reply(&p).unwrap(), stats);
+        // truncating any suffix (e.g. a pre-v7 nine-field reply) is a
         // strict decode error, which is why VERSION was bumped
         for cut in 0..p.len() {
             assert!(decode_stats_reply(&p[..cut]).is_err(), "prefix {cut} decoded");
@@ -1126,6 +1579,179 @@ mod tests {
         for cut in 0..p.len() {
             assert!(decode_put_ok(&p[..cut]).is_err(), "put_ok prefix {cut}");
         }
+    }
+
+    #[test]
+    fn parse_typed_crdt_commands() {
+        assert_eq!(
+            parse_request("SADD s 6869").unwrap(),
+            Request::SAdd { key: "s".into(), elem: b"hi".to_vec() }
+        );
+        assert_eq!(
+            parse_request("srem s 68").unwrap(),
+            Request::SRem { key: "s".into(), elem: b"h".to_vec() }
+        );
+        assert_eq!(
+            parse_request("SMEMBERS s").unwrap(),
+            Request::SMembers { key: "s".into() }
+        );
+        assert_eq!(
+            parse_request("INCR c -3").unwrap(),
+            Request::Incr { key: "c".into(), by: -3 }
+        );
+        assert_eq!(parse_request("COUNT c").unwrap(), Request::Count { key: "c".into() });
+        assert_eq!(
+            parse_request("MPUT m 61 62").unwrap(),
+            Request::MPut { key: "m".into(), field: b"a".to_vec(), value: b"b".to_vec() }
+        );
+        assert_eq!(
+            parse_request("MGET m 61").unwrap(),
+            Request::MGet { key: "m".into(), field: b"a".to_vec() }
+        );
+        // `-` means empty bytes, matching PUT's value convention
+        assert_eq!(
+            parse_request("SADD s -").unwrap(),
+            Request::SAdd { key: "s".into(), elem: Vec::new() }
+        );
+        for bad in [
+            "SADD", "SADD s", "SADD s zz", "SREM s", "SMEMBERS", "INCR c", "INCR c x",
+            "INCR c 1.5", "COUNT", "MPUT m", "MPUT m 61", "MGET m",
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn typed_bin_requests_roundtrip() {
+        let cases = [
+            BinRequest::SAdd { key: "s".into(), elem: b"elem".to_vec() },
+            BinRequest::SAdd { key: String::new(), elem: Vec::new() },
+            BinRequest::SRem { key: "s".into(), elem: b"elem".to_vec() },
+            BinRequest::SMembers { key: "s".into() },
+            BinRequest::Incr { key: "c".into(), by: -42 },
+            BinRequest::Incr { key: "c".into(), by: i64::MAX },
+            BinRequest::Incr { key: "c".into(), by: i64::MIN },
+            BinRequest::Count { key: "c".into() },
+            BinRequest::MPut { key: "m".into(), field: b"f".to_vec(), value: b"v".to_vec() },
+            BinRequest::MPut { key: "m".into(), field: Vec::new(), value: Vec::new() },
+            BinRequest::MGet { key: "m".into(), field: b"f".to_vec() },
+        ];
+        for req in cases {
+            let (opcode, payload) = encode_bin_request(&req);
+            assert_eq!(decode_bin_request(opcode, &payload).unwrap(), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn typed_bin_requests_reject_truncation_and_trailing_bytes() {
+        // every strict prefix of each typed request must be rejected
+        // (truncation at every field boundary included), and so must
+        // one trailing byte — the decoders are strict end to end
+        let cases = [
+            encode_bin_request(&BinRequest::SAdd { key: "set".into(), elem: b"el".to_vec() }),
+            encode_bin_request(&BinRequest::SRem { key: "set".into(), elem: b"el".to_vec() }),
+            encode_bin_request(&BinRequest::Incr { key: "ctr".into(), by: -77 }),
+            encode_bin_request(&BinRequest::MPut {
+                key: "map".into(),
+                field: b"field".to_vec(),
+                value: b"value".to_vec(),
+            }),
+            encode_bin_request(&BinRequest::MGet { key: "map".into(), field: b"f".to_vec() }),
+        ];
+        for (opcode, payload) in cases {
+            for cut in 0..payload.len() {
+                assert!(
+                    decode_bin_request(opcode, &payload[..cut]).is_err(),
+                    "op {opcode:#04x} prefix of len {cut} must be rejected"
+                );
+            }
+            let mut long = payload.clone();
+            long.push(0);
+            assert!(
+                decode_bin_request(opcode, &long).is_err(),
+                "op {opcode:#04x} trailing byte must be rejected"
+            );
+        }
+        // a hostile length field larger than the remaining payload is
+        // rejected before it can size an allocation
+        let mut p = Vec::new();
+        put_varint(&mut p, 1 << 40);
+        assert!(decode_bin_request(OP_SADD, &p).is_err());
+        assert!(decode_bin_request(OP_MPUT, &p).is_err());
+    }
+
+    #[test]
+    fn typed_reply_payloads_roundtrip() {
+        let dot = Dot { actor: crate::clocks::Actor::server(3), counter: 17 };
+        assert_eq!(decode_dot_reply(&encode_dot_reply(&dot)).unwrap(), dot);
+
+        let dots = vec![
+            Dot { actor: crate::clocks::Actor::server(1), counter: 2 },
+            Dot { actor: crate::clocks::Actor::server(1), counter: 5 },
+            Dot { actor: crate::clocks::Actor::server(4), counter: 1 },
+        ];
+        assert_eq!(decode_dots_reply(&encode_dots_reply(&dots)).unwrap(), dots);
+        assert_eq!(decode_dots_reply(&encode_dots_reply(&[])).unwrap(), Vec::<Dot>::new());
+
+        let members = vec![b"a".to_vec(), Vec::new(), b"long member".to_vec()];
+        assert_eq!(decode_members_reply(&encode_members_reply(&members)).unwrap(), members);
+
+        for v in [0i64, 1, -1, 42, -42, i64::MAX, i64::MIN] {
+            assert_eq!(decode_count_reply(&encode_count_reply(v)).unwrap(), v);
+        }
+
+        // absent and empty-value fields stay distinguishable
+        assert_eq!(decode_field_reply(&encode_field_reply(None)).unwrap(), None);
+        assert_eq!(
+            decode_field_reply(&encode_field_reply(Some(&[]))).unwrap(),
+            Some(Vec::new())
+        );
+        assert_eq!(
+            decode_field_reply(&encode_field_reply(Some(b"v"))).unwrap(),
+            Some(b"v".to_vec())
+        );
+    }
+
+    #[test]
+    fn typed_reply_payloads_reject_truncation_and_garbage() {
+        let dot = Dot { actor: crate::clocks::Actor::server(1), counter: 9 };
+        let payloads = [
+            encode_dot_reply(&dot),
+            encode_dots_reply(&[dot, Dot { actor: crate::clocks::Actor::server(2), counter: 1 }]),
+            encode_members_reply(&[b"abc".to_vec(), b"d".to_vec()]),
+            encode_count_reply(-123_456),
+            encode_field_reply(Some(b"value")),
+            encode_field_reply(None),
+        ];
+        let decoders: [fn(&[u8]) -> bool; 6] = [
+            |p| decode_dot_reply(p).is_ok(),
+            |p| decode_dots_reply(p).is_ok(),
+            |p| decode_members_reply(p).is_ok(),
+            |p| decode_count_reply(p).is_ok(),
+            |p| decode_field_reply(p).is_ok(),
+            |p| decode_field_reply(p).is_ok(),
+        ];
+        for (p, ok) in payloads.iter().zip(decoders) {
+            assert!(ok(p), "untruncated payload must decode");
+            for cut in 0..p.len() {
+                assert!(!ok(&p[..cut]), "prefix {cut} of {p:?} must be rejected");
+            }
+            let mut long = p.clone();
+            long.push(0);
+            assert!(!ok(&long), "trailing byte after {p:?} must be rejected");
+        }
+        // a counter-zero dot and an unsorted dot list never decode
+        assert!(decode_dot_reply(&[0, 0]).is_err());
+        let unsorted = {
+            let mut p = Vec::new();
+            put_varint(&mut p, 2);
+            encode_dot(&Dot { actor: crate::clocks::Actor::server(2), counter: 1 }, &mut p);
+            encode_dot(&Dot { actor: crate::clocks::Actor::server(1), counter: 1 }, &mut p);
+            p
+        };
+        assert!(decode_dots_reply(&unsorted).is_err());
+        // a bad presence flag is rejected
+        assert!(decode_field_reply(&[2]).is_err());
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::clocks::{Actor, Hlc, HlcTimestamp};
 use crate::cluster::{NodeId, Ring};
 use crate::config::StoreConfig;
 use crate::coordinator::{GetOp, PutOp, QuorumSpec};
+use crate::kernel::crdt::{mint_actor, CrdtKind, Dot, TypedState};
 use crate::kernel::{Mechanism, Val, WriteMeta};
 use crate::metrics::Metrics;
 use crate::net::NetModel;
@@ -76,6 +77,12 @@ pub struct SimNode<M: Mechanism> {
     /// Injected physical-clock offset (µs, cumulative, signed): the
     /// node's physical time reads `now + skew_us`, floored at 0.
     pub skew_us: i64,
+    /// Mint-actor generation for typed CRDT ops: bumped on restart and
+    /// wipe, because losing local state voids the promise that this
+    /// node's store holds every dot it ever minted (the false-cover
+    /// hazard — [`crate::kernel::crdt`] module docs). Mirrors the
+    /// threaded `Node::typed_epoch`.
+    pub typed_epoch: u64,
 }
 
 impl<M: Mechanism> SimNode<M> {
@@ -89,6 +96,7 @@ impl<M: Mechanism> SimNode<M> {
             hlc: Hlc::new(),
             ship: Vec::new(),
             skew_us: 0,
+            typed_epoch: 0,
         }
     }
 }
@@ -222,6 +230,11 @@ pub struct Sim<M: Mechanism> {
     /// vanish when every replica that held it loses state).
     acked: Vec<(Key, u64)>,
     quorum: QuorumSpec,
+    /// Typed-op payload side table: encoded [`TypedState`] per write id
+    /// — the DES analogue of the threaded cluster's blob store. The
+    /// register fabric moves value *identities*; typed payload bytes
+    /// live here, keyed by the id the register write was assigned.
+    typed_blobs: HashMap<u64, Vec<u8>>,
     /// Clients whose drivers returned `None` (retired).
     retired: usize,
     /// Membership epoch: bumped once per join/decommission, mirroring
@@ -276,6 +289,7 @@ impl<M: Mechanism> Sim<M> {
             written: Vec::new(),
             acked: Vec::new(),
             quorum,
+            typed_blobs: HashMap::new(),
             retired: 0,
             epoch: crate::cluster::topology::INITIAL_EPOCH,
             cfg,
@@ -501,6 +515,19 @@ impl<M: Mechanism> Sim<M> {
         let Some((coordinator, replicas)) = self.pick_coordinator(key, zone) else {
             return Err(crate::Error::Unavailable("no live replica to coordinate".into()));
         };
+        self.sync_get_at(client, key, coordinator, replicas)
+    }
+
+    /// Pinned variant of [`Sim::sync_get`]: the caller has already
+    /// picked the coordinator (a typed RMW must read and write through
+    /// the same node — the mint contract).
+    fn sync_get_at(
+        &mut self,
+        client: usize,
+        key: Key,
+        coordinator: NodeId,
+        replicas: Vec<NodeId>,
+    ) -> crate::Result<(Vec<Val>, M::Context)> {
         let quorum = self.scoped_quorum(&replicas, coordinator);
         let req = self.next_req;
         self.next_req += 1;
@@ -542,6 +569,21 @@ impl<M: Mechanism> Sim<M> {
         let Some((coordinator, replicas)) = self.pick_coordinator(key, zone) else {
             return Err(crate::Error::Unavailable("no live replica to coordinate".into()));
         };
+        self.sync_put_at(client, key, len, ctx, observed, coordinator, replicas)
+    }
+
+    /// Pinned variant of [`Sim::sync_put`] (see [`Sim::sync_get_at`]).
+    #[allow(clippy::too_many_arguments)]
+    fn sync_put_at(
+        &mut self,
+        client: usize,
+        key: Key,
+        len: u32,
+        ctx: &M::Context,
+        observed: &[u64],
+        coordinator: NodeId,
+        replicas: Vec<NodeId>,
+    ) -> crate::Result<(u64, Option<M::Context>)> {
         let quorum = self.scoped_quorum(&replicas, coordinator);
         let val = Val::new(self.next_val, len);
         self.next_val += 1;
@@ -583,6 +625,184 @@ impl<M: Mechanism> Sim<M> {
     /// value must be resolvable by later GETs.
     pub fn peek_next_val(&self) -> u64 {
         self.next_val
+    }
+
+    // ---------------------------------------------------------------
+    // synchronous typed CRDT ops (the DES mirror of `server::typed`)
+    // ---------------------------------------------------------------
+    //
+    // Same read-join-mint-mutate-commit RMW as the threaded cluster,
+    // with the DES supplying the two serialization guarantees for free:
+    // the sync API runs one op to completion at a time (no stripe lock
+    // needed), and the coordinator's local state is always reply #1 of
+    // the pinned read. The write is pinned to the read's coordinator so
+    // a quorum-failed commit still lands the minted dot at the one node
+    // whose next read is guaranteed to include it; restarts and wipes —
+    // which void that guarantee — bump `typed_epoch` above.
+
+    /// Join the decodable typed payloads behind `vals` (the sibling-join
+    /// of `server::typed`): `None` when no sibling carries one. A blob
+    /// this table never held is skipped — metadata-only, like a reopened
+    /// durable cluster; a present but undecodable one is an error.
+    fn typed_join(&self, vals: &[Val]) -> crate::Result<Option<TypedState>> {
+        let mut state: Option<TypedState> = None;
+        for v in vals {
+            let Some(bytes) = self.typed_blobs.get(&v.id) else { continue };
+            let sibling = TypedState::decode(bytes)?;
+            match &mut state {
+                None => state = Some(sibling),
+                Some(st) => st.merge(&sibling)?,
+            }
+        }
+        Ok(state)
+    }
+
+    /// [`crate::Error::WrongType`] when the joined state exists with
+    /// another kind than the op needs.
+    fn kind_checked(
+        state: Option<TypedState>,
+        kind: CrdtKind,
+    ) -> crate::Result<Option<TypedState>> {
+        match state {
+            Some(st) if st.kind() != kind => Err(crate::Error::WrongType {
+                expected: kind.name(),
+                found: st.kind().name(),
+            }),
+            other => Ok(other),
+        }
+    }
+
+    /// The shared read phase of the non-mutating typed ops.
+    fn sync_typed_read(
+        &mut self,
+        client: usize,
+        key: Key,
+        kind: CrdtKind,
+    ) -> crate::Result<Option<TypedState>> {
+        let zone = self.pref_zone(client);
+        let Some((coordinator, replicas)) = self.pick_coordinator(key, zone) else {
+            return Err(crate::Error::Unavailable("no live replica to coordinate".into()));
+        };
+        let (values, _ctx) = self.sync_get_at(client, key, coordinator, replicas)?;
+        Self::kind_checked(self.typed_join(&values)?, kind)
+    }
+
+    /// The typed read-modify-write every mutating op runs: pinned
+    /// quorum-read + sibling-join, mint under the coordinator's epoch
+    /// actor, mutate, commit pinned through the register PUT path.
+    fn sync_typed_rmw<R>(
+        &mut self,
+        client: usize,
+        key: Key,
+        kind: CrdtKind,
+        mutate: impl FnOnce(&mut TypedState, Actor) -> R,
+    ) -> crate::Result<R> {
+        let zone = self.pref_zone(client);
+        let Some((coordinator, replicas)) = self.pick_coordinator(key, zone) else {
+            return Err(crate::Error::Unavailable("no live replica to coordinate".into()));
+        };
+        let (values, ctx) = self.sync_get_at(client, key, coordinator, replicas.clone())?;
+        let mut st = match Self::kind_checked(self.typed_join(&values)?, kind)? {
+            Some(st) => st,
+            None => TypedState::fresh(kind),
+        };
+        let actor = mint_actor(coordinator, self.nodes[coordinator].typed_epoch);
+        let out = mutate(&mut st, actor);
+        let bytes = st.encode_to_vec();
+        let len = bytes.len() as u32;
+        let observed: Vec<u64> = values.iter().map(|v| v.id).collect();
+        // the blob goes in the side table *before* the PUT: a
+        // quorum-failed write may still have been applied at the
+        // coordinator, and later reads must resolve its payload
+        self.typed_blobs.insert(self.next_val, bytes);
+        self.sync_put_at(client, key, len, &ctx, &observed, coordinator, replicas)?;
+        Ok(out)
+    }
+
+    /// `SADD` through the DES: add `elem` to the set at `key`,
+    /// returning the minted dot (the mirror of
+    /// [`crate::server::LocalCluster::set_add`]).
+    pub fn sync_sadd(&mut self, client: usize, key: Key, elem: &[u8]) -> crate::Result<Dot> {
+        self.sync_typed_rmw(client, key, CrdtKind::Set, |st, actor| {
+            let TypedState::Set(s) = st else { unreachable!("kind checked") };
+            let dot = s.mint(actor);
+            let _delta = s.add(elem.to_vec(), dot);
+            dot
+        })
+    }
+
+    /// `SREM`: remove the *observed* dots of `elem`, returning them
+    /// (empty when the element was not present — still a success).
+    pub fn sync_srem(&mut self, client: usize, key: Key, elem: &[u8]) -> crate::Result<Vec<Dot>> {
+        self.sync_typed_rmw(client, key, CrdtKind::Set, |st, _actor| {
+            let TypedState::Set(s) = st else { unreachable!("kind checked") };
+            let (dots, _delta) = s.remove(elem);
+            dots
+        })
+    }
+
+    /// `SMEMBERS`: the set's elements, ascending.
+    pub fn sync_smembers(&mut self, client: usize, key: Key) -> crate::Result<Vec<Vec<u8>>> {
+        match self.sync_typed_read(client, key, CrdtKind::Set)? {
+            None => Ok(Vec::new()),
+            Some(TypedState::Set(s)) => Ok(s.members().map(|e| e.to_vec()).collect()),
+            Some(_) => unreachable!("kind checked"),
+        }
+    }
+
+    /// `INCR`: apply a signed increment, returning the post-op value.
+    pub fn sync_incr(&mut self, client: usize, key: Key, by: i64) -> crate::Result<i64> {
+        self.sync_typed_rmw(client, key, CrdtKind::Counter, |st, actor| {
+            let TypedState::Counter(c) = st else { unreachable!("kind checked") };
+            let _delta = c.incr(actor, by);
+            c.value()
+        })
+    }
+
+    /// `COUNT`: the counter's value (0 for a never-written key).
+    pub fn sync_count(&mut self, client: usize, key: Key) -> crate::Result<i64> {
+        match self.sync_typed_read(client, key, CrdtKind::Counter)? {
+            None => Ok(0),
+            Some(TypedState::Counter(c)) => Ok(c.value()),
+            Some(_) => unreachable!("kind checked"),
+        }
+    }
+
+    /// `MPUT`: set `field` to `value` in the map at `key`.
+    pub fn sync_mput(
+        &mut self,
+        client: usize,
+        key: Key,
+        field: &[u8],
+        value: &[u8],
+    ) -> crate::Result<Dot> {
+        self.sync_typed_rmw(client, key, CrdtKind::Map, |st, actor| {
+            let TypedState::Map(m) = st else { unreachable!("kind checked") };
+            let dot = m.mint(actor);
+            let _delta = m.put(field.to_vec(), value.to_vec(), dot);
+            dot
+        })
+    }
+
+    /// `MGET`: the field's current value, `None` when absent.
+    pub fn sync_mget(
+        &mut self,
+        client: usize,
+        key: Key,
+        field: &[u8],
+    ) -> crate::Result<Option<Vec<u8>>> {
+        match self.sync_typed_read(client, key, CrdtKind::Map)? {
+            None => Ok(None),
+            Some(TypedState::Map(m)) => Ok(m.get(field).map(<[u8]>::to_vec)),
+            Some(_) => unreachable!("kind checked"),
+        }
+    }
+
+    /// The joined typed state `node` currently holds for `key` — what
+    /// per-replica convergence assertions compare after [`Sim::settle`].
+    pub fn typed_state_at(&self, node: NodeId, key: Key) -> Option<TypedState> {
+        let vals = self.nodes[node].store.values(key);
+        self.typed_join(&vals).ok().flatten()
     }
 
     /// Pop events until `req` resolves. The op's timeout event is always
@@ -677,6 +897,8 @@ impl<M: Mechanism> Sim<M> {
                 n.store = KeyStore::new(self.mech.clone());
                 n.synced.clear();
                 n.unsynced.clear();
+                // total state loss: typed mints must move to a fresh actor
+                n.typed_epoch += 1;
             }
         }
     }
@@ -693,6 +915,10 @@ impl<M: Mechanism> Sim<M> {
             store.merge_key(*k, st);
         }
         n.store = store;
+        // the unsynced tail may have held this node's freshest typed
+        // mints; reusing their counters after the rollback would
+        // false-cover concurrent adds — move to a fresh actor epoch
+        n.typed_epoch += 1;
     }
 
     /// Record `key`'s post-state in the node's logical WAL tail and fold

@@ -148,6 +148,82 @@ impl Driver for RandomWorkload {
     }
 }
 
+/// One typed set operation ([`crate::api::TypedKvClient`]); elements
+/// are named by universe index — [`set_elem`] maps indices onto stable
+/// bytes, so every transport mutates the same elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetOpKind {
+    /// `SADD` element `idx`.
+    Add(u64),
+    /// `SREM` element `idx`.
+    Remove(u64),
+    /// `SMEMBERS`.
+    Members,
+}
+
+/// Stable element bytes for a universe index (the set-workload analogue
+/// of [`key_name`]).
+pub fn set_elem(idx: u64) -> Vec<u8> {
+    format!("e{idx}").into_bytes()
+}
+
+/// Parameters for the randomized ORSWOT workload.
+#[derive(Debug, Clone)]
+pub struct SetWorkloadSpec {
+    /// Distinct elements; a *small* universe forces add/remove races on
+    /// the same element — the observed-remove semantics under test.
+    pub universe: u64,
+    /// Fraction of ops that are removes.
+    pub remove_fraction: f64,
+    /// Fraction of ops that are membership reads.
+    pub read_fraction: f64,
+    /// Ops issued per client before it retires.
+    pub ops_per_client: u64,
+}
+
+impl Default for SetWorkloadSpec {
+    fn default() -> Self {
+        SetWorkloadSpec {
+            universe: 16,
+            remove_fraction: 0.3,
+            read_fraction: 0.1,
+            ops_per_client: 50,
+        }
+    }
+}
+
+/// The randomized ORSWOT workload: uniform element choice over a small
+/// universe, tunable add/remove/read mix. Consumed by
+/// [`crate::api::drive_set_workload`].
+#[derive(Debug, Clone)]
+pub struct SetWorkload {
+    spec: SetWorkloadSpec,
+    issued: Vec<u64>,
+}
+
+impl SetWorkload {
+    /// Build for `clients` concurrent clients.
+    pub fn new(spec: SetWorkloadSpec, clients: usize) -> SetWorkload {
+        SetWorkload { spec, issued: vec![0; clients] }
+    }
+
+    /// Next op for `client`, or `None` when its budget is spent.
+    pub fn next_set_op(&mut self, client: usize, rng: &mut Rng) -> Option<SetOpKind> {
+        if self.issued[client] >= self.spec.ops_per_client {
+            return None;
+        }
+        self.issued[client] += 1;
+        let elem = rng.below(self.spec.universe.max(1));
+        if rng.chance(self.spec.read_fraction) {
+            Some(SetOpKind::Members)
+        } else if rng.chance(self.spec.remove_fraction) {
+            Some(SetOpKind::Remove(elem))
+        } else {
+            Some(SetOpKind::Add(elem))
+        }
+    }
+}
+
 /// Fixed per-client scripts (figure replays and targeted tests).
 #[derive(Debug, Clone)]
 pub struct ScriptDriver {
@@ -232,6 +308,51 @@ mod tests {
         assert_eq!(d.next_op(0, 0, &mut rng), Some(ops[0].clone()));
         assert_eq!(d.next_op(0, 0, &mut rng), Some(ops[1].clone()));
         assert_eq!(d.next_op(0, 0, &mut rng), None);
+    }
+
+    #[test]
+    fn set_workload_respects_budget_and_universe() {
+        let spec = SetWorkloadSpec { universe: 8, ops_per_client: 20, ..Default::default() };
+        let mut w = SetWorkload::new(spec, 2);
+        let mut rng = Rng::new(7);
+        let mut count = 0;
+        while let Some(op) = w.next_set_op(0, &mut rng) {
+            if let SetOpKind::Add(e) | SetOpKind::Remove(e) = op {
+                assert!(e < 8, "element {e} outside the universe");
+            }
+            count += 1;
+            assert!(count <= 20, "runaway");
+        }
+        assert_eq!(count, 20);
+        // client 1 untouched
+        assert!(w.next_set_op(1, &mut rng).is_some());
+    }
+
+    #[test]
+    fn set_workload_mix_covers_all_op_kinds() {
+        let spec = SetWorkloadSpec {
+            universe: 4,
+            remove_fraction: 0.4,
+            read_fraction: 0.2,
+            ops_per_client: 200,
+        };
+        let mut w = SetWorkload::new(spec, 1);
+        let mut rng = Rng::new(9);
+        let (mut adds, mut removes, mut reads) = (0, 0, 0);
+        while let Some(op) = w.next_set_op(0, &mut rng) {
+            match op {
+                SetOpKind::Add(_) => adds += 1,
+                SetOpKind::Remove(_) => removes += 1,
+                SetOpKind::Members => reads += 1,
+            }
+        }
+        assert!(adds > 0 && removes > 0 && reads > 0, "{adds}/{removes}/{reads}");
+    }
+
+    #[test]
+    fn set_elems_are_stable_and_distinct() {
+        assert_eq!(set_elem(3), b"e3".to_vec());
+        assert_ne!(set_elem(1), set_elem(2));
     }
 
     #[test]

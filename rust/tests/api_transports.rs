@@ -296,7 +296,7 @@ fn tcp_chaos_with_concurrent_clients_is_oracle_clean() {
         assert!(rounds < 32, "anti-entropy failed to quiesce");
     }
     let stats = admin.stats().unwrap();
-    assert_eq!(stats.3, 0, "hints drained after HEAL");
+    assert_eq!(stats.hints, 0, "hints drained after HEAL");
     admin.quit().unwrap();
 
     for a in 0..NODES {
@@ -310,7 +310,7 @@ fn tcp_chaos_with_concurrent_clients_is_oracle_clean() {
     // fully converged stores share one hash-tree root, and that common
     // root is exactly what STATS reported over the wire
     assert_eq!(
-        stats.6,
+        stats.merkle_root,
         cluster.node(0).store().merkle_root(),
         "STATS merkle_root matches the converged store root"
     );

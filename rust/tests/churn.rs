@@ -372,7 +372,7 @@ fn tcp_session_survives_join_and_decommission() {
 
     // epoch is discoverable mid-session through STATS and TOPOLOGY
     let stats = client.stats().unwrap();
-    assert_eq!(stats.4, INITIAL_EPOCH + 2, "epoch travels in STATS");
+    assert_eq!(stats.epoch, INITIAL_EPOCH + 2, "epoch travels in STATS");
     assert_eq!(client.seen_epoch(), INITIAL_EPOCH + 2);
     assert_eq!(client.topology().unwrap().members, vec![1, 2, 3]);
 

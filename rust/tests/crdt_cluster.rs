@@ -1,0 +1,283 @@
+//! CRDT cluster acceptance: one seeded ORSWOT workload, one seeded
+//! `FaultPlan` (an intra-DC partition, a loss/delay window, and a
+//! whole-DC cut across a two-zone topology), two worlds — the
+//! discrete-event simulator and the threaded `LocalCluster` — driven
+//! through every [`TypedKvClient`] transport. Both worlds must reach
+//! the same oracle verdict: zero lost acked adds, zero add-wins
+//! violations, zero phantoms, and full post-heal convergence.
+//!
+//! Also covers the typed surface end to end over the wire: fault-free
+//! cross-transport equivalence for all three datatypes, `WrongType`
+//! rejection over TCP, and the STATS typed-key counts in both the text
+//! and binary protocols.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use dvvstore::antientropy::diff_pairs;
+use dvvstore::api::{
+    drive_set_workload, KvClient, LocalClient, SimTransport, TcpClient, TypedKvClient,
+};
+use dvvstore::clocks::Actor;
+use dvvstore::cluster::ring::hash_str;
+use dvvstore::config::StoreConfig;
+use dvvstore::kernel::crdt::TypedState;
+use dvvstore::oracle::{SetAudit, SetVerdict};
+use dvvstore::server::tcp::Server;
+use dvvstore::server::LocalCluster;
+use dvvstore::sim::failure::FaultPlan;
+use dvvstore::workload::{SetWorkload, SetWorkloadSpec};
+
+/// Two data centers of three nodes each.
+const ZONES: [usize; 6] = [0, 0, 0, 1, 1, 1];
+const NODES: usize = 6;
+const CLIENTS: usize = 3;
+const SEED: u64 = 0x5E7C4A05;
+const KEY: &str = "chaos-set";
+
+/// Virtual horizon the fault windows live inside. The DES spends
+/// roughly 2–4ms of virtual time per typed RMW (a read round plus a
+/// write round at 500µs mean hops), so ~120 ops fill this span; the
+/// threaded world maps completed-op fractions onto the same clock.
+const HORIZON_US: u64 = 400_000;
+
+fn spec() -> SetWorkloadSpec {
+    SetWorkloadSpec {
+        universe: 12,
+        remove_fraction: 0.3,
+        read_fraction: 0.1,
+        ops_per_client: 40,
+    }
+}
+
+/// The shared chaos schedule: a degraded-network window (drops plus
+/// extra delay), a whole-DC cut of zone 1, and an intra-DC partition —
+/// overlapping the op stream, all healed before the horizon.
+fn chaos_plan() -> FaultPlan {
+    FaultPlan::new()
+        .degrade_window(0.15, 200, 20_000, 120_000)
+        .partition_dc_at(&ZONES, 1, 60_000, 200_000)
+        .partition_window(vec![0, 1], vec![2, 3, 4, 5], 220_000, 320_000)
+}
+
+fn geo_cfg() -> StoreConfig {
+    let mut cfg = StoreConfig::default();
+    cfg.cluster.nodes = NODES;
+    cfg.cluster.replication = 3;
+    cfg.cluster.read_quorum = 2;
+    cfg.cluster.write_quorum = 2;
+    cfg.cluster.zones = ZONES.to_vec();
+    cfg
+}
+
+fn assert_clean(world: &str, verdict: &SetVerdict) {
+    assert_eq!(verdict.lost_adds, 0, "{world}: acked add lost: {verdict:?}");
+    assert_eq!(
+        verdict.resurrections, 0,
+        "{world}: removed element resurfaced: {verdict:?}"
+    );
+    assert_eq!(verdict.phantoms, 0, "{world}: phantom member: {verdict:?}");
+    assert!(verdict.acked_adds > 0, "{world}: no add was ever acked");
+}
+
+// -------------------------------------------------------------------
+// the marquee: one plan, two worlds, three transports, one verdict
+// -------------------------------------------------------------------
+
+#[test]
+fn orswot_chaos_reaches_identical_verdicts_in_both_worlds() {
+    let expected_ops = (CLIENTS as u64) * spec().ops_per_client;
+
+    // --- DES world: the plan schedules as simulator events ---------
+    let transport = SimTransport::new(geo_cfg(), CLIENTS, SEED).unwrap();
+    transport.with_sim(|sim| chaos_plan().apply(sim));
+    let mut clients: Vec<_> = (0..CLIENTS).map(|i| transport.client(i)).collect();
+    let mut workload = SetWorkload::new(spec(), CLIENTS);
+    let audit = SetAudit::new();
+    let report = drive_set_workload(&mut clients, &mut workload, KEY, SEED, &audit, |_| {});
+    assert!(report.ok_ops > 0, "some DES ops must succeed under chaos");
+    assert!(report.adds > 0, "the DES run acked at least one SADD");
+    let members = transport.with_sim(|sim| {
+        sim.run(u64::MAX); // drain remaining fault/heal events
+        sim.settle();
+        // every replica holding the set converged to one state
+        let k = hash_str(KEY);
+        let states: Vec<TypedState> =
+            (0..NODES).filter_map(|n| sim.typed_state_at(n, k)).collect();
+        assert!(!states.is_empty(), "the set landed on at least one replica");
+        let digest = states[0].state_digest();
+        for st in &states {
+            assert_eq!(st.state_digest(), digest, "replica set states diverged");
+        }
+        let TypedState::Set(s) = &states[0] else {
+            panic!("the audited key holds a non-set state")
+        };
+        s.members().map(|e| e.to_vec()).collect::<Vec<_>>()
+    });
+    assert_clean("DES", &audit.verdict(&members));
+
+    // --- threaded world: the same plan steps the fabric, over both
+    // the in-process client and live TCP ---------------------------
+    enum Transport {
+        Local,
+        Tcp,
+    }
+    for which in [Transport::Local, Transport::Tcp] {
+        let world = match which {
+            Transport::Local => "threaded/local",
+            Transport::Tcp => "threaded/tcp",
+        };
+        let cluster = Arc::new(LocalCluster::with_zones(&ZONES, 3, 2, 2).unwrap());
+        let plan = chaos_plan();
+        let step = {
+            let cluster = Arc::clone(&cluster);
+            move |completed: u64| {
+                let t = HORIZON_US.saturating_mul(completed) / expected_ops.max(1);
+                cluster.advance_plan(&plan, t);
+            }
+        };
+        let audit = SetAudit::new();
+        let mut workload = SetWorkload::new(spec(), CLIENTS);
+        let report = match which {
+            Transport::Local => {
+                let mut clients: Vec<_> = (0..CLIENTS)
+                    .map(|i| LocalClient::new(Arc::clone(&cluster), Actor::client(i as u32)))
+                    .collect();
+                drive_set_workload(&mut clients, &mut workload, KEY, SEED, &audit, step)
+            }
+            Transport::Tcp => {
+                let server = Server::start("127.0.0.1:0", Arc::clone(&cluster)).unwrap();
+                let mut clients: Vec<_> = (0..CLIENTS)
+                    .map(|i| {
+                        TcpClient::connect(server.addr(), Actor::client(i as u32)).unwrap()
+                    })
+                    .collect();
+                let report =
+                    drive_set_workload(&mut clients, &mut workload, KEY, SEED, &audit, step);
+                for c in clients {
+                    c.quit().unwrap();
+                }
+                server.shutdown();
+                report
+            }
+        };
+        assert!(report.ok_ops > 0, "{world}: some ops must succeed under chaos");
+        assert!(report.adds > 0, "{world}: at least one SADD acked");
+
+        // fire any windows the run outpaced, heal, converge, audit —
+        // the same closing ritual as the DES
+        cluster.advance_plan(&plan, HORIZON_US);
+        cluster.fabric().heal_all();
+        let mut rounds = 0;
+        while cluster.anti_entropy_round() > 0 {
+            rounds += 1;
+            assert!(rounds < 32, "{world}: anti-entropy failed to quiesce");
+        }
+        for a in 0..NODES {
+            for b in (a + 1)..NODES {
+                assert!(
+                    diff_pairs(cluster.node(a).store(), cluster.node(b).store()).is_empty(),
+                    "{world}: nodes {a}/{b} diverged after heal"
+                );
+            }
+        }
+        let members = cluster.set_members(KEY).unwrap();
+        assert_clean(world, &audit.verdict(&members));
+    }
+}
+
+// -------------------------------------------------------------------
+// fault-free: all three datatypes agree across all three transports
+// -------------------------------------------------------------------
+
+/// Apply the same typed script through one client and return the
+/// observable outcome (sorted members, counter value, map field).
+fn typed_script<C: TypedKvClient>(c: &mut C) -> (Vec<Vec<u8>>, i64, Option<Vec<u8>>) {
+    c.sadd("s", b"alpha").unwrap();
+    c.sadd("s", b"beta").unwrap();
+    c.sadd("s", b"gamma").unwrap();
+    assert!(!c.srem("s", b"beta").unwrap().is_empty(), "observed dots removed");
+    assert!(c.srem("s", b"never-added").unwrap().is_empty(), "nothing observed");
+    c.incr("c", 10).unwrap();
+    c.incr("c", -3).unwrap();
+    c.mput("m", b"field", b"v1").unwrap();
+    c.mput("m", b"field", b"v2").unwrap();
+    let mut members = c.smembers("s").unwrap();
+    members.sort();
+    (members, c.count("c").unwrap(), c.mget("m", b"field").unwrap())
+}
+
+#[test]
+fn typed_ops_agree_across_all_three_transports() {
+    let expected = (
+        vec![b"alpha".to_vec(), b"gamma".to_vec()],
+        7,
+        Some(b"v2".to_vec()),
+    );
+
+    let transport = SimTransport::new(geo_cfg(), 1, SEED).unwrap();
+    let mut sim_client = transport.client(0);
+    assert_eq!(typed_script(&mut sim_client), expected, "sim transport");
+
+    let cluster = Arc::new(LocalCluster::with_zones(&ZONES, 3, 2, 2).unwrap());
+    let mut local = LocalClient::new(Arc::clone(&cluster), Actor::client(1));
+    assert_eq!(typed_script(&mut local), expected, "local transport");
+
+    let cluster = Arc::new(LocalCluster::with_zones(&ZONES, 3, 2, 2).unwrap());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&cluster)).unwrap();
+    let mut tcp = TcpClient::connect(server.addr(), Actor::client(2)).unwrap();
+    assert_eq!(typed_script(&mut tcp), expected, "tcp transport");
+    tcp.quit().unwrap();
+    server.shutdown();
+}
+
+// -------------------------------------------------------------------
+// wire-level semantics: WrongType over TCP, STATS typed counts
+// -------------------------------------------------------------------
+
+#[test]
+fn wrong_type_is_rejected_over_the_wire_and_connection_survives() {
+    let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&cluster)).unwrap();
+    let mut c = TcpClient::connect(server.addr(), Actor::client(7)).unwrap();
+    c.sadd("k", b"x").unwrap();
+    let err = c.incr("k", 1).unwrap_err();
+    assert!(
+        err.to_string().contains("wrong datatype"),
+        "remote WrongType surfaces verbatim: {err}"
+    );
+    // the rejected op corrupted nothing and the connection still works
+    assert_eq!(c.smembers("k").unwrap(), vec![b"x".to_vec()]);
+    c.quit().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn stats_reports_typed_counts_in_text_and_binary() {
+    let cluster = Arc::new(LocalCluster::new(3, 3, 2, 2).unwrap());
+    let server = Server::start("127.0.0.1:0", Arc::clone(&cluster)).unwrap();
+    cluster.set_add("s1", b"a").unwrap();
+    cluster.set_add("s2", b"b").unwrap();
+    cluster.counter_incr("c1", 5).unwrap();
+    cluster.map_put("m1", b"f", b"v").unwrap();
+
+    // binary STATS: the v7 struct carries the typed-key census
+    let mut bin = TcpClient::connect(server.addr(), Actor::client(3)).unwrap();
+    let stats = bin.stats().unwrap();
+    assert_eq!(stats.sets, 2, "sets");
+    assert_eq!(stats.counters, 1, "counters");
+    assert_eq!(stats.maps, 1, "maps");
+    bin.quit().unwrap();
+
+    // text STATS: same numbers on the human-readable line
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"STATS\n").unwrap();
+    let mut line = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut line).unwrap();
+    assert!(line.contains("sets=2"), "{line}");
+    assert!(line.contains("counters=1"), "{line}");
+    assert!(line.contains("maps=1"), "{line}");
+    server.shutdown();
+}

@@ -502,12 +502,12 @@ fn stats_reports_zones_and_ship_lag_and_rejects_truncation() {
 
     client.put("geo-stats", b"v".to_vec(), None).unwrap();
     let stats = client.stats().unwrap();
-    assert_eq!(stats.0, 3, "node count");
-    assert_eq!(stats.7, 2, "zones field reports both DCs");
-    assert!(stats.8 >= 1, "the zone-1 home of the write is parked for the shipper");
+    assert_eq!(stats.nodes, 3, "node count");
+    assert_eq!(stats.zones, 2, "zones field reports both DCs");
+    assert!(stats.ship_lag >= 1, "the zone-1 home of the write is parked for the shipper");
     cluster.anti_entropy_round();
     let drained = client.stats().unwrap();
-    assert_eq!(drained.8, 0, "ship_lag drains to zero after a shipper round");
+    assert_eq!(drained.ship_lag, 0, "ship_lag drains to zero after a shipper round");
     client.quit().unwrap();
     server.shutdown();
 

@@ -43,8 +43,43 @@ fn prop_random_payloads_never_panic_decoders() {
             let _ = protocol::decode_values(payload);
             let _ = protocol::decode_put_ok(payload);
             let _ = protocol::decode_stats_reply(payload);
+            let _ = protocol::decode_dot_reply(payload);
+            let _ = protocol::decode_dots_reply(payload);
+            let _ = protocol::decode_members_reply(payload);
+            let _ = protocol::decode_count_reply(payload);
+            let _ = protocol::decode_field_reply(payload);
             let _ = CausalCtx::decode(payload);
             true
+        },
+    );
+}
+
+#[test]
+fn prop_truncated_typed_frames_are_rejected() {
+    forall(
+        &Config::default().cases(150),
+        from_fn(|rng: &mut Rng, size| {
+            let key: String = (0..rng.below(8) + 1).map(|_| 'k').collect();
+            let blob: Vec<u8> =
+                (0..rng.below(size as u64 + 1)).map(|_| rng.below(256) as u8).collect();
+            let req = match rng.below(5) {
+                0 => BinRequest::SAdd { key, elem: blob },
+                1 => BinRequest::SRem { key, elem: blob },
+                2 => BinRequest::Incr { key, by: rng.next_u64() as i64 },
+                3 => BinRequest::MPut {
+                    key,
+                    field: blob.clone(),
+                    value: blob,
+                },
+                _ => BinRequest::MGet { key, field: blob },
+            };
+            let (opcode, payload) = protocol::encode_bin_request(&req);
+            let cut = rng.below(payload.len() as u64) as usize;
+            (opcode, payload, cut)
+        }),
+        |(opcode, payload, cut)| {
+            // any strict prefix must fail to decode
+            protocol::decode_bin_request(*opcode, &payload[..*cut]).is_err()
         },
     );
 }
@@ -119,6 +154,78 @@ fn connect_helper_surfaces_version_skew() {
     let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
     let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
     assert_eq!(opcode, protocol::OP_ERR);
+    server.shutdown();
+}
+
+#[test]
+fn stale_client_version_is_rejected() {
+    // the typed opcodes changed the wire surface; a v6 client must be
+    // turned away at negotiation, not misparsed mid-stream
+    let (server, _cluster) = server();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(&protocol::MAGIC).unwrap();
+    stream.write_all(&[protocol::VERSION - 1, b'\n']).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let (opcode, payload) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_ERR);
+    assert!(
+        String::from_utf8_lossy(&payload).contains("unsupported protocol version"),
+        "{payload:?}"
+    );
+    assert_server_healthy(server.addr());
+    server.shutdown();
+}
+
+#[test]
+fn truncated_typed_payloads_over_the_wire_err_and_keep_connection() {
+    // every typed opcode, fed an intact frame holding a truncated
+    // payload, answers ERR without dropping the connection or the server
+    let (server, _cluster) = server();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.write_all(&protocol::MAGIC).unwrap();
+    stream.write_all(&[protocol::VERSION, b'\n']).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_HELLO_ACK);
+
+    let full_frames = [
+        protocol::encode_bin_request(&BinRequest::SAdd {
+            key: "set".into(),
+            elem: b"elem".to_vec(),
+        }),
+        protocol::encode_bin_request(&BinRequest::SRem {
+            key: "set".into(),
+            elem: b"elem".to_vec(),
+        }),
+        protocol::encode_bin_request(&BinRequest::Incr { key: "ctr".into(), by: -9 }),
+        protocol::encode_bin_request(&BinRequest::MPut {
+            key: "map".into(),
+            field: b"f".to_vec(),
+            value: b"v".to_vec(),
+        }),
+        protocol::encode_bin_request(&BinRequest::MGet {
+            key: "map".into(),
+            field: b"f".to_vec(),
+        }),
+    ];
+    for (op, payload) in &full_frames {
+        for cut in [0, 1, payload.len().saturating_sub(1)] {
+            protocol::write_frame(&mut stream, *op, &payload[..cut]).unwrap();
+            let (opcode, _) = protocol::read_frame(&mut reader).unwrap();
+            assert_eq!(opcode, protocol::OP_ERR, "op {op:#04x} cut {cut} must ERR");
+        }
+    }
+
+    // the abused connection still executes a real typed op end to end
+    let (op, payload) = protocol::encode_bin_request(&BinRequest::SAdd {
+        key: "survivor".into(),
+        elem: b"x".to_vec(),
+    });
+    protocol::write_frame(&mut stream, op, &payload).unwrap();
+    let (opcode, payload) = protocol::read_frame(&mut reader).unwrap();
+    assert_eq!(opcode, protocol::OP_DOT_REPLY);
+    protocol::decode_dot_reply(&payload).unwrap();
+    assert_server_healthy(server.addr());
     server.shutdown();
 }
 
@@ -250,7 +357,7 @@ fn binary_and_text_clients_share_one_store() {
     // admin over the binary connection drives the same fabric
     bin.admin("FAULT DELAY 150").unwrap();
     let stats = bin.stats().unwrap();
-    assert_eq!(stats.0, 3, "nodes");
+    assert_eq!(stats.nodes, 3, "nodes");
     bin.admin("HEAL").unwrap();
     bin.quit().unwrap();
     server.shutdown();

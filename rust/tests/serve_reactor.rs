@@ -362,7 +362,7 @@ fn both_modes_give_identical_answers_to_the_same_session() {
         transcript.push(format!("put2 id={}", put2.id));
         transcript.push(format!("get2 {:?}", client.get("eq-key").unwrap().values));
         let stats = client.stats().unwrap();
-        transcript.push(format!("nodes={} epoch={}", stats.0, stats.4));
+        transcript.push(format!("nodes={} epoch={}", stats.nodes, stats.epoch));
         client.quit().unwrap();
         server.shutdown();
         transcript
