@@ -1,0 +1,295 @@
+//! Storage-engine bench: [`DurableBackend`] (full map in memory, log
+//! replays everything) vs [`LsmBackend`] (bounded memtable, sorted
+//! runs on disk) across a dataset-size sweep.
+//!
+//! Three axes, each as a `backend=durable` / `backend=lsm` pair so the
+//! numbers read as a direct trade-off:
+//!
+//! * **write** — one informed PUT through the `KeyStore` hot path
+//!   (kernel write + encode + WAL append; the LSM side also absorbs
+//!   its amortised flush/compaction work);
+//! * **read** — one point lookup after the LSM store has flushed and
+//!   compacted, so reads actually walk fence → bloom → block cache →
+//!   block, not just the memtable;
+//! * **reopen** — full backend open over the on-disk state: the
+//!   durable log replays every surviving record, the LSM open reads
+//!   run footers plus a WAL bounded by the memtable. This is the
+//!   restart-latency claim of the LSM engine.
+//!
+//! Alongside the timings, the JSON artifact records a **residency
+//! sweep**: `resident_bytes()` vs `durable_bytes()` for both backends
+//! at each dataset size. Durable residency is linear in the dataset by
+//! construction; LSM residency is bounded by memtable + block cache
+//! and must grow sublinearly.
+//!
+//! Results land in `BENCH_storage.json` (path override:
+//! `BENCH_STORAGE_JSON`); `rust/ci.sh` runs this bench in quick mode
+//! and fails the gate when the artifact is missing.
+//!
+//! Regenerate with `cargo bench --bench storage`.
+
+use std::hint::black_box;
+use std::path::Path;
+
+use dvvstore::bench_support::{Options, Stats, Suite};
+use dvvstore::clocks::Actor;
+use dvvstore::kernel::mechs::DvvMech;
+use dvvstore::kernel::{Val, WriteMeta};
+use dvvstore::store::wal::FsyncPolicy;
+use dvvstore::store::{
+    DurableBackend, KeyStore, LsmBackend, LsmOptions, StorageBackend, WalOptions,
+};
+use dvvstore::testkit::temp_dir;
+
+const SHARDS: usize = 8;
+
+fn wal_opts() -> WalOptions {
+    WalOptions { segment_bytes: 1 << 20, fsync: FsyncPolicy::Never }
+}
+
+/// Memtable small enough that every sweep size spills to runs, cache
+/// big enough to be useful but bounded (residency must not track the
+/// dataset).
+fn lsm_opts() -> LsmOptions {
+    LsmOptions {
+        wal: wal_opts(),
+        memtable_bytes: 64 << 10,
+        block_bytes: 4096,
+        cache_blocks: 64,
+        tier_runs: 4,
+    }
+}
+
+fn open_durable(dir: &Path) -> KeyStore<DvvMech, DurableBackend<DvvMech>> {
+    KeyStore::with_backend(DvvMech, DurableBackend::open(dir, SHARDS, wal_opts()).unwrap())
+}
+
+fn open_lsm(dir: &Path) -> KeyStore<DvvMech, LsmBackend<DvvMech>> {
+    KeyStore::with_backend(DvvMech, LsmBackend::open(dir, SHARDS, lsm_opts()).unwrap())
+}
+
+/// One informed PUT per key — each key ends with a single sibling, so
+/// state size is uniform and the sweep measures the engine, not
+/// sibling growth.
+fn fill<B: StorageBackend<DvvMech>>(store: &KeyStore<DvvMech, B>, keys: u64) {
+    let meta = WriteMeta::basic(Actor::client(0));
+    for i in 0..keys {
+        let (_, ctx) = store.read(i);
+        store.write(i, &ctx, Val::new(i + 1, 64), Actor::server(0), &meta);
+    }
+}
+
+/// Multiplicative-hash probe order so point reads jump across blocks
+/// instead of scanning one block linearly.
+fn probe(i: u64, keys: u64) -> u64 {
+    i.wrapping_mul(0x9E37_79B9_7F4A_7C15) % keys
+}
+
+fn bench_write<B, F>(suite: &mut Suite, backend: &str, keys: u64, open: F)
+where
+    B: StorageBackend<DvvMech>,
+    F: Fn(&Path) -> KeyStore<DvvMech, B>,
+{
+    let dir = temp_dir("bench-storage-write");
+    let store = open(&dir);
+    let meta = WriteMeta::basic(Actor::client(0));
+    let mut i = 0u64;
+    suite.bench(&format!("write/backend={backend}"), &format!("keys={keys}"), move || {
+        let key = i % keys;
+        let (_, ctx) = store.read(key);
+        store.write(key, &ctx, Val::new(i + 1, 64), Actor::server(0), &meta);
+        black_box(&store);
+        i += 1;
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn bench_read_durable(suite: &mut Suite, keys: u64) {
+    let dir = temp_dir("bench-storage-read-durable");
+    let store = open_durable(&dir);
+    fill(&store, keys);
+    let mut i = 0u64;
+    suite.bench("read/backend=durable", &format!("keys={keys}"), move || {
+        black_box(store.read(probe(i, keys)).0.len());
+        i += 1;
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn bench_read_lsm(suite: &mut Suite, keys: u64) {
+    let dir = temp_dir("bench-storage-read-lsm");
+    let store = open_lsm(&dir);
+    fill(&store, keys);
+    // push everything through the full lifecycle so reads hit runs
+    store.backend().flush_memtables();
+    store.backend().compact_now();
+    let mut i = 0u64;
+    suite.bench("read/backend=lsm", &format!("keys={keys}"), move || {
+        black_box(store.read(probe(i, keys)).0.len());
+        i += 1;
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn bench_reopen(suite: &mut Suite, keys: u64) {
+    // durable: the log holds one surviving record per key and replay
+    // decodes all of them
+    let dir = temp_dir("bench-storage-reopen-durable");
+    {
+        let store = open_durable(&dir);
+        fill(&store, keys);
+        store.backend().flush().unwrap();
+    }
+    let log_dir = dir.clone();
+    suite.bench("reopen/backend=durable", &format!("keys={keys}"), move || {
+        let backend: DurableBackend<DvvMech> =
+            DurableBackend::open(&log_dir, SHARDS, wal_opts()).unwrap();
+        black_box(backend.key_count());
+    });
+    std::fs::remove_dir_all(&dir).ok();
+
+    // lsm: runs are opened by footer, only the memtable's WAL replays
+    let dir = temp_dir("bench-storage-reopen-lsm");
+    {
+        let store = open_lsm(&dir);
+        fill(&store, keys);
+        store.backend().flush_memtables();
+        store.backend().compact_now();
+    }
+    let run_dir = dir.clone();
+    suite.bench("reopen/backend=lsm", &format!("keys={keys}"), move || {
+        let backend: LsmBackend<DvvMech> =
+            LsmBackend::open(&run_dir, SHARDS, lsm_opts()).unwrap();
+        black_box(backend.key_count());
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Residency row: what each backend keeps in memory vs on disk for the
+/// same dataset.
+struct Residency {
+    keys: u64,
+    durable_resident: u64,
+    durable_disk: u64,
+    lsm_resident: u64,
+    lsm_disk: u64,
+    lsm_runs: usize,
+}
+
+fn measure_residency(keys: u64) -> Residency {
+    let ddir = temp_dir("bench-storage-resident-durable");
+    let durable = open_durable(&ddir);
+    fill(&durable, keys);
+    let ldir = temp_dir("bench-storage-resident-lsm");
+    let lsm = open_lsm(&ldir);
+    fill(&lsm, keys);
+    lsm.backend().flush_memtables();
+    lsm.backend().compact_now();
+    // touch a working set so the row shows a warm (not empty) cache
+    for i in 0..keys.min(256) {
+        black_box(lsm.read(probe(i, keys)).0.len());
+    }
+    let row = Residency {
+        keys,
+        durable_resident: durable.backend().resident_bytes(),
+        durable_disk: durable.backend().durable_bytes(),
+        lsm_resident: lsm.backend().resident_bytes(),
+        lsm_disk: lsm.backend().durable_bytes(),
+        lsm_runs: lsm.backend().run_count(),
+    };
+    std::fs::remove_dir_all(&ddir).ok();
+    std::fs::remove_dir_all(&ldir).ok();
+    row
+}
+
+fn json_escape_free(s: &str) -> bool {
+    s.chars().all(|c| c.is_ascii_alphanumeric() || "/_=.-".contains(c))
+}
+
+/// Hand-rolled JSON (no serde in the offline build): flat timing rows
+/// plus the residency sweep and the headline sublinearity ratio —
+/// LSM resident bytes per key at the largest sweep size over the
+/// smallest (≈1.0 means flat, durable's is ≈ its per-key state cost).
+fn write_json(
+    path: &str,
+    quick: bool,
+    results: &[Stats],
+    residency: &[Residency],
+) -> std::io::Result<()> {
+    let mut rows = String::new();
+    for (i, s) in results.iter().enumerate() {
+        assert!(
+            json_escape_free(&s.name) && json_escape_free(&s.param),
+            "bench names are JSON-safe"
+        );
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"name\": \"{}\", \"param\": \"{}\", \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"min_ns\": {:.1}}}",
+            s.name, s.param, s.mean_ns, s.p50_ns, s.p95_ns, s.min_ns
+        ));
+    }
+    let mut res_rows = String::new();
+    for (i, r) in residency.iter().enumerate() {
+        if i > 0 {
+            res_rows.push_str(",\n");
+        }
+        res_rows.push_str(&format!(
+            "    {{\"keys\": {}, \
+             \"durable_resident_bytes\": {}, \"durable_disk_bytes\": {}, \
+             \"lsm_resident_bytes\": {}, \"lsm_disk_bytes\": {}, \"lsm_runs\": {}}}",
+            r.keys, r.durable_resident, r.durable_disk, r.lsm_resident, r.lsm_disk,
+            r.lsm_runs
+        ));
+    }
+    let per_key = |r: &Residency, bytes: u64| bytes as f64 / r.keys.max(1) as f64;
+    let growth = |resident: fn(&Residency) -> u64| match (residency.first(), residency.last())
+    {
+        (Some(a), Some(b)) if a.keys < b.keys && per_key(a, resident(a)) > 0.0 => {
+            per_key(b, resident(b)) / per_key(a, resident(a))
+        }
+        _ => 1.0,
+    };
+    let lsm_growth = growth(|r| r.lsm_resident);
+    let durable_growth = growth(|r| r.durable_resident);
+    let json = format!(
+        "{{\n  \"suite\": \"storage\",\n  \"quick\": {quick},\n  \
+         \"lsm_resident_per_key_growth\": {lsm_growth:.3},\n  \
+         \"durable_resident_per_key_growth\": {durable_growth:.3},\n  \
+         \"residency\": [\n{res_rows}\n  ],\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n"
+    );
+    std::fs::write(path, json)
+}
+
+fn main() {
+    let opts = Options::from_args();
+    let quick = opts.quick;
+    let mut suite = Suite::new("storage", opts);
+
+    let sweep: Vec<u64> = if quick { vec![2_000] } else { vec![2_000, 20_000, 100_000] };
+    for &keys in &sweep {
+        bench_write(&mut suite, "durable", keys, open_durable);
+        bench_write(&mut suite, "lsm", keys, open_lsm);
+        bench_read_durable(&mut suite, keys);
+        bench_read_lsm(&mut suite, keys);
+        bench_reopen(&mut suite, keys);
+    }
+    // the residency sweep needs at least two sizes to show a slope,
+    // even in quick mode (it is a handful of fills, not a timing loop)
+    let res_sweep: Vec<u64> =
+        if quick { vec![1_000, 8_000] } else { vec![2_000, 20_000, 100_000] };
+    let residency: Vec<Residency> =
+        res_sweep.iter().map(|&keys| measure_residency(keys)).collect();
+
+    let results: Vec<Stats> = suite.results().to_vec();
+    let path = std::env::var("BENCH_STORAGE_JSON")
+        .unwrap_or_else(|_| "BENCH_storage.json".to_string());
+    match write_json(&path, quick, &results, &residency) {
+        Ok(()) => eprintln!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+    suite.finish();
+}

@@ -53,6 +53,12 @@ export GEO_ITERS="${GEO_ITERS:-2}"
 #   CRDT_ITERS=20 rust/ci.sh
 export CRDT_ITERS="${CRDT_ITERS:-2}"
 
+# LSM soak knob, same shape: the sorted-run damage fuzz
+# (rust/tests/sst_recovery.rs — random truncation/corruption sweeps)
+# always runs its fixed seeds; LSM_ITERS appends extra derived seeds.
+#   LSM_ITERS=20 rust/ci.sh
+export LSM_ITERS="${LSM_ITERS:-2}"
+
 # Target-registration guard: with the non-standard layout (lib under
 # rust/src) cargo does NOT auto-discover rust/tests/*.rs or benches/*.rs
 # — an unregistered file silently never runs. Fail loudly instead.
@@ -128,5 +134,8 @@ bench_smoke geo
 # crdt: ORSWOT at size — add/remove churn, membership reads, delta vs
 # full-state replication bytes (one key, thousands of elements).
 bench_smoke crdt
+# storage: durable vs lsm backends — write/read/reopen timings plus the
+# residency sweep (LSM resident bytes must grow sublinearly in keys).
+bench_smoke storage
 
 echo "ci OK"

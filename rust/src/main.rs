@@ -65,12 +65,26 @@ fn cli() -> Command {
                     "root directory for write-ahead-logged durable replicas \
                      (omit for in-memory nodes)",
                 )
+                .opt_choice(
+                    "backend",
+                    "auto",
+                    &["auto", "sharded", "durable", "lsm"],
+                    "storage backend: sharded (in-memory), durable (map + WAL), or lsm \
+                     (memtable + sorted runs; working set may exceed RAM). durable and \
+                     lsm need --data-dir; auto picks durable when --data-dir is set, \
+                     sharded otherwise",
+                )
                 .opt(
                     "fsync",
                     "64",
                     "WAL fsync policy: always | never | <n> | every<n> (per n appends)",
                 )
                 .opt("segment-bytes", "1048576", "WAL segment roll threshold (bytes)")
+                .opt(
+                    "memtable-bytes",
+                    "1048576",
+                    "lsm backend: per-shard memtable flush threshold (bytes)",
+                )
                 .opt_choice(
                     "serve-mode",
                     "reactor",
@@ -236,8 +250,34 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
             _ => ServeMode::Reactor { workers: m.get_parsed("reactor-workers")? },
         },
     };
-    match m.get("data-dir") {
-        Some(dir) => {
+    let backend = m.get_str("backend");
+    match (backend, m.get("data-dir")) {
+        ("sharded", Some(_)) => Err(dvvstore::Error::Config(
+            "--backend sharded is in-memory; drop --data-dir or pick durable/lsm".into(),
+        )),
+        ("durable" | "lsm", None) => Err(dvvstore::Error::Config(format!(
+            "--backend {backend} persists to disk and needs --data-dir"
+        ))),
+        ("lsm", Some(dir)) => {
+            let opts = dvvstore::store::LsmOptions {
+                wal: WalOptions {
+                    fsync: FsyncPolicy::parse(m.get_str("fsync"))?,
+                    segment_bytes: m.get_parsed("segment-bytes")?,
+                },
+                memtable_bytes: m.get_parsed("memtable-bytes")?,
+                ..Default::default()
+            };
+            let cluster = Arc::new(match &zones {
+                Some(z) => LocalCluster::with_lsm_dir_zoned(z, n, r, w, shards, dir, opts)?,
+                None => LocalCluster::with_lsm_dir(nodes, n, r, w, shards, dir, opts)?,
+            });
+            println!(
+                "durability: LSM at {dir} (fsync={}, memtable={}B, durable_bytes={})",
+                opts.wal.fsync, opts.memtable_bytes, cluster.wal_bytes()
+            );
+            run_serve_loop(addr, cluster, serve, nodes, n, r, w)
+        }
+        ("durable", Some(dir)) | ("auto", Some(dir)) => {
             let opts = WalOptions {
                 fsync: FsyncPolicy::parse(m.get_str("fsync"))?,
                 segment_bytes: m.get_parsed("segment-bytes")?,
@@ -252,7 +292,7 @@ fn cmd_serve(m: &Matches) -> dvvstore::Result<()> {
             );
             run_serve_loop(addr, cluster, serve, nodes, n, r, w)
         }
-        None => {
+        _ => {
             let cluster = Arc::new(match &zones {
                 Some(z) => LocalCluster::with_backends_zoned(z, n, r, w, move |_| {
                     ShardedBackend::with_shards(shards)

@@ -69,7 +69,9 @@ use crate::kernel::{Mechanism, Val, WriteMeta};
 use crate::oracle::SharedOracle;
 use crate::sim::failure::{Fault, FaultPlan};
 use crate::store::wal::{RecoveryReport, WalOptions};
-use crate::store::{DurableBackend, Key, KeyStore, ShardedBackend, StorageBackend};
+use crate::store::{
+    DurableBackend, Key, KeyStore, LsmBackend, LsmOptions, ShardedBackend, StorageBackend,
+};
 use self::fabric::Fabric;
 
 thread_local! {
@@ -332,6 +334,64 @@ impl LocalCluster<DurableBackend<DvvMech>> {
             ready.pop_front().unwrap_or_else(|| {
                 DurableBackend::open(dir.join(format!("node-{id}")), shards, opts)
                     .expect("open durable backend for joined node")
+            })
+        })
+    }
+}
+
+impl LocalCluster<LsmBackend<DvvMech>> {
+    /// Build an **LSM-backed** cluster: every replica's store is an
+    /// [`LsmBackend`] rooted at `<dir>/node-<id>` — bounded memtable,
+    /// bloom-filtered sorted runs, background compaction — so a
+    /// replica's working set can exceed RAM. Same recovery story as
+    /// [`with_data_dir`](LocalCluster::with_data_dir), plus damaged run
+    /// files are quarantined (not deleted) and refilled by anti-entropy.
+    /// This is what `dvv-store serve --backend lsm` runs on.
+    pub fn with_lsm_dir(
+        nodes: usize,
+        n: usize,
+        r: usize,
+        w: usize,
+        shards: usize,
+        dir: impl Into<std::path::PathBuf>,
+        opts: LsmOptions,
+    ) -> Result<LocalCluster<LsmBackend<DvvMech>>> {
+        LocalCluster::with_lsm_dir_inner(nodes, None, n, r, w, shards, dir.into(), opts)
+    }
+
+    /// The zone-aware LSM cluster (`zones[i]` = node `i`'s datacenter).
+    pub fn with_lsm_dir_zoned(
+        zones: &[usize],
+        n: usize,
+        r: usize,
+        w: usize,
+        shards: usize,
+        dir: impl Into<std::path::PathBuf>,
+        opts: LsmOptions,
+    ) -> Result<LocalCluster<LsmBackend<DvvMech>>> {
+        LocalCluster::with_lsm_dir_inner(zones.len(), Some(zones), n, r, w, shards, dir.into(), opts)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn with_lsm_dir_inner(
+        nodes: usize,
+        zones: Option<&[usize]>,
+        n: usize,
+        r: usize,
+        w: usize,
+        shards: usize,
+        dir: std::path::PathBuf,
+        opts: LsmOptions,
+    ) -> Result<LocalCluster<LsmBackend<DvvMech>>> {
+        // eager opens for the same reason as `with_data_dir_inner`: an
+        // unusable data dir is an `Err`, not a factory panic
+        let mut ready: std::collections::VecDeque<LsmBackend<DvvMech>> = (0..nodes)
+            .map(|id| LsmBackend::open(dir.join(format!("node-{id}")), shards, opts))
+            .collect::<Result<_>>()?;
+        LocalCluster::with_backends_inner(nodes, zones, n, r, w, move |id| {
+            ready.pop_front().unwrap_or_else(|| {
+                LsmBackend::open(dir.join(format!("node-{id}")), shards, opts)
+                    .expect("open LSM backend for joined node")
             })
         })
     }

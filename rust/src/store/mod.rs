@@ -20,7 +20,12 @@
 //!   before its lock is released, replay-on-open recovers the longest
 //!   valid record prefix (torn tails are truncated and reported), and
 //!   hot-key logs compact via snapshot segments. This is what
-//!   `dvv-store serve --data-dir` runs on.
+//!   `dvv-store serve --data-dir` runs on by default;
+//! * [`LsmBackend`] — the LSM storage engine ([`lsm`], [`sst`]): a
+//!   bounded memtable covered exactly by the WAL, bloom-filtered sorted
+//!   runs on disk, size-tiered background compaction and a block read
+//!   cache, so the working set can exceed RAM and restart replay is
+//!   O(memtable). `dvv-store serve --data-dir ... --backend lsm`.
 //!
 //! Every [`KeyStore`] method takes `&self` — locking is internal to the
 //! backend — so a store can be shared across server threads with a plain
@@ -50,12 +55,15 @@
 
 pub mod backend;
 mod durable;
+pub mod lsm;
 mod memory;
 mod sharded;
+pub mod sst;
 pub mod wal;
 
 pub use backend::StorageBackend;
 pub use durable::{DurableBackend, DEFAULT_DURABLE_SHARDS};
+pub use lsm::{LsmBackend, LsmOptions, DEFAULT_LSM_SHARDS};
 pub use memory::InMemoryBackend;
 pub use sharded::{ShardedBackend, DEFAULT_SHARDS};
 pub use wal::{FsyncPolicy, RecoveryReport, WalOptions};

@@ -1,0 +1,621 @@
+//! Sorted-run (SSTable) files: the on-disk half of
+//! [`LsmBackend`](super::LsmBackend).
+//!
+//! A **run** is an immutable, sorted, checksummed file of `(key, state)`
+//! entries — the unit a memtable flush produces and compaction merges.
+//! Runs are written once, fsynced, and never modified; recency is
+//! encoded entirely in the *ordering* of a shard's run list (newest
+//! wins), so readers never merge states across runs.
+//!
+//! # On-disk format
+//!
+//! ```text
+//! [8] SST_MAGIC ("DVVSST01")
+//! data blocks, back to back:
+//!     block := [varint body_len][u32 LE crc32(body)][body]
+//!     body  := entries, keys strictly ascending across the whole file
+//!     entry := [varint entry_len][varint key][mechanism state encoding]
+//! footer body:
+//!     [varint entry_count][varint min_key][varint max_key]      (fence)
+//!     [varint block_count] then per block:
+//!         [varint offset][varint framed_len][varint first_key][varint last_key]
+//!     [varint bloom_words][varint bloom_k][bloom_words x u64 LE]
+//!     entry_count x ([varint key][u64 LE state_digest])          (key order)
+//! tail:
+//!     [u32 LE crc32(footer body)][u32 LE footer body len][8] SST_FOOTER_MAGIC
+//! ```
+//!
+//! The footer carries everything a reader needs *without touching the
+//! data region*: the key-range fence, the per-block index (so a point
+//! read seeks at most one block), a bloom filter over the keys (so a
+//! miss usually costs zero reads), and the per-entry state digests (so
+//! [`LsmBackend`](super::LsmBackend) rebuilds its anti-entropy
+//! [`ShardTree`](crate::antientropy::merkle::ShardTree) on open from
+//! footers alone — no state decoding).
+//!
+//! # Validation
+//!
+//! [`Run::open`] checks the whole file before trusting any of it: both
+//! magics, the footer CRC, every block CRC, entry framing, strict key
+//! ascent, index/fence/digest consistency. Any mismatch is an `Err` —
+//! never a panic — and the caller **quarantines** the file (renames it
+//! to `*.quarantined`, see [`quarantine`]) so one damaged run costs
+//! exactly that run; anti-entropy re-delivers what it held. The scan is
+//! a sequential read with no state decoding, so open stays cheap
+//! relative to a WAL replay of the same bytes.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use super::wal::crc32;
+use super::Key;
+use crate::clocks::encoding::{get_varint, put_varint};
+use crate::error::{Error, Result};
+use crate::kernel::digest::mix64;
+
+/// First 8 bytes of every run file (format name + version).
+pub const SST_MAGIC: [u8; 8] = *b"DVVSST01";
+
+/// Last 8 bytes of every run file.
+pub const SST_FOOTER_MAGIC: [u8; 8] = *b"DVVSSTFT";
+
+/// Fixed tail size: footer CRC + footer length + tail magic.
+const TAIL_LEN: usize = 4 + 4 + 8;
+
+fn bad(path: &Path, what: &str) -> Error {
+    Error::Codec(format!("run {}: {what}", path.display()))
+}
+
+/// Bloom filter over a run's keys: ~10 bits and 6 probes per key, built
+/// by double hashing [`mix64`]. A negative answer is exact; a positive
+/// one is wrong with probability under ~1 % at that sizing, which is the
+/// fraction of point misses that still pay one block read.
+#[derive(Debug, Clone)]
+pub struct Bloom {
+    words: Vec<u64>,
+    k: u32,
+}
+
+impl Bloom {
+    /// Filter sized for `entries` keys (power-of-two bit count, min 64).
+    pub fn with_capacity(entries: usize) -> Bloom {
+        let bits = (entries.max(1) * 10).next_power_of_two().max(64);
+        Bloom { words: vec![0; bits / 64], k: 6 }
+    }
+
+    #[inline]
+    fn probes(&self, key: Key) -> (u64, u64, u64) {
+        let mask = (self.words.len() as u64 * 64) - 1;
+        let h1 = mix64(key);
+        // force h2 odd so the probe sequence walks the whole (power of
+        // two sized) bit space
+        let h2 = mix64(key ^ 0x9E37_79B9_7F4A_7C15) | 1;
+        (h1, h2, mask)
+    }
+
+    /// Set `key`'s probe bits.
+    pub fn insert(&mut self, key: Key) {
+        let (h1, h2, mask) = self.probes(key);
+        for i in 0..u64::from(self.k) {
+            let bit = h1.wrapping_add(i.wrapping_mul(h2)) & mask;
+            self.words[(bit / 64) as usize] |= 1 << (bit % 64);
+        }
+    }
+
+    /// Might `key` be present? (`false` is definitive.)
+    pub fn contains(&self, key: Key) -> bool {
+        let (h1, h2, mask) = self.probes(key);
+        (0..u64::from(self.k)).all(|i| {
+            let bit = h1.wrapping_add(i.wrapping_mul(h2)) & mask;
+            self.words[(bit / 64) as usize] & (1 << (bit % 64)) != 0
+        })
+    }
+
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, self.words.len() as u64);
+        put_varint(buf, u64::from(self.k));
+        for w in &self.words {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+
+    fn decode(buf: &[u8], pos: &mut usize) -> Result<Bloom> {
+        let words = get_varint(buf, pos)?;
+        let k = get_varint(buf, pos)?;
+        if words == 0 || !(words as usize).is_power_of_two() && words != 1 || k == 0 || k > 32 {
+            return Err(Error::Codec(format!("bloom shape words={words} k={k}")));
+        }
+        let mut out = Vec::with_capacity(words as usize);
+        for _ in 0..words {
+            let bytes = crate::clocks::encoding::get_bytes(buf, pos, 8)?;
+            out.push(u64::from_le_bytes(bytes.try_into().unwrap()));
+        }
+        Ok(Bloom { words: out, k: k as u32 })
+    }
+}
+
+/// One data block's index entry.
+#[derive(Debug, Clone, Copy)]
+struct BlockMeta {
+    /// Byte offset of the framed block from the start of the file.
+    offset: u64,
+    /// Framed length (varint header + CRC + body).
+    len: u64,
+    first: Key,
+    last: Key,
+}
+
+/// Streaming writer: feed ascending `(key, digest, state)` entries, then
+/// [`finish`](RunWriter::finish) to write, fsync, and re-open the file
+/// as a validated [`Run`].
+pub struct RunWriter {
+    block_bytes: usize,
+    /// The file image under construction (starts with [`SST_MAGIC`]).
+    data: Vec<u8>,
+    /// Current (unsealed) block body.
+    cur: Vec<u8>,
+    cur_first: Key,
+    blocks: Vec<BlockMeta>,
+    digests: Vec<(Key, u64)>,
+    last_key: Option<Key>,
+}
+
+impl RunWriter {
+    /// Writer targeting `block_bytes` per data block (min 64).
+    pub fn new(block_bytes: usize) -> RunWriter {
+        RunWriter {
+            block_bytes: block_bytes.max(64),
+            data: SST_MAGIC.to_vec(),
+            cur: Vec::new(),
+            cur_first: 0,
+            blocks: Vec::new(),
+            digests: Vec::new(),
+            last_key: None,
+        }
+    }
+
+    /// Append one entry. Keys must be strictly ascending; `state` is the
+    /// mechanism's `encode_state` bytes.
+    pub fn add(&mut self, key: Key, digest: u64, state: &[u8]) {
+        assert!(
+            self.last_key.map_or(true, |last| last < key),
+            "run entries must be strictly ascending (got {key} after {:?})",
+            self.last_key
+        );
+        if self.cur.is_empty() {
+            self.cur_first = key;
+        }
+        let mut payload = Vec::with_capacity(10 + state.len());
+        put_varint(&mut payload, key);
+        payload.extend_from_slice(state);
+        put_varint(&mut self.cur, payload.len() as u64);
+        self.cur.extend_from_slice(&payload);
+        self.digests.push((key, digest));
+        self.last_key = Some(key);
+        if self.cur.len() >= self.block_bytes {
+            self.seal_block();
+        }
+    }
+
+    fn seal_block(&mut self) {
+        if self.cur.is_empty() {
+            return;
+        }
+        let offset = self.data.len() as u64;
+        put_varint(&mut self.data, self.cur.len() as u64);
+        self.data.extend_from_slice(&crc32(&self.cur).to_le_bytes());
+        self.data.extend_from_slice(&self.cur);
+        self.blocks.push(BlockMeta {
+            offset,
+            len: self.data.len() as u64 - offset,
+            first: self.cur_first,
+            last: self.last_key.expect("sealed block holds entries"),
+        });
+        self.cur.clear();
+    }
+
+    /// Entries added so far.
+    pub fn entry_count(&self) -> usize {
+        self.digests.len()
+    }
+
+    /// Seal, write `path`, fsync, and open the result as a [`Run`]
+    /// (validating our own output). At least one entry must have been
+    /// added — empty runs are never written.
+    pub fn finish(mut self, path: &Path) -> Result<Run> {
+        self.seal_block();
+        assert!(!self.blocks.is_empty(), "refusing to write an empty run");
+        let mut footer = Vec::new();
+        put_varint(&mut footer, self.digests.len() as u64);
+        put_varint(&mut footer, self.digests[0].0);
+        put_varint(&mut footer, self.digests[self.digests.len() - 1].0);
+        put_varint(&mut footer, self.blocks.len() as u64);
+        for b in &self.blocks {
+            put_varint(&mut footer, b.offset);
+            put_varint(&mut footer, b.len);
+            put_varint(&mut footer, b.first);
+            put_varint(&mut footer, b.last);
+        }
+        let mut bloom = Bloom::with_capacity(self.digests.len());
+        for &(key, _) in &self.digests {
+            bloom.insert(key);
+        }
+        bloom.encode(&mut footer);
+        for &(key, digest) in &self.digests {
+            put_varint(&mut footer, key);
+            footer.extend_from_slice(&digest.to_le_bytes());
+        }
+        let crc = crc32(&footer).to_le_bytes();
+        let len = (footer.len() as u32).to_le_bytes();
+        self.data.extend_from_slice(&footer);
+        self.data.extend_from_slice(&crc);
+        self.data.extend_from_slice(&len);
+        self.data.extend_from_slice(&SST_FOOTER_MAGIC);
+
+        let mut file = OpenOptions::new().create_new(true).write(true).open(path)?;
+        file.write_all(&self.data)?;
+        file.sync_data()?;
+        drop(file);
+        let (run, _digests) = Run::open(path)?;
+        Ok(run)
+    }
+}
+
+/// An open, validated sorted-run file. Immutable; all reads go through
+/// [`locate`](Run::locate) + [`read_block`](Run::read_block) or the
+/// whole-run scans.
+#[derive(Debug)]
+pub struct Run {
+    path: PathBuf,
+    file: File,
+    bytes: u64,
+    entry_count: u64,
+    min_key: Key,
+    max_key: Key,
+    blocks: Vec<BlockMeta>,
+    bloom: Bloom,
+}
+
+impl Run {
+    /// Open and fully validate a run file, returning the run plus its
+    /// footer's `(key, state_digest)` pairs (ascending — what the LSM
+    /// open feeds into its hash trees). Any structural damage — either
+    /// magic, footer CRC, a block CRC, broken entry framing, key order,
+    /// or index/fence/digest inconsistency — returns `Err`; the caller
+    /// decides to [`quarantine`].
+    pub fn open(path: &Path) -> Result<(Run, Vec<(Key, u64)>)> {
+        let data = std::fs::read(path)?;
+        if data.len() < SST_MAGIC.len() + TAIL_LEN {
+            return Err(bad(path, "shorter than magic + tail"));
+        }
+        if data[..SST_MAGIC.len()] != SST_MAGIC {
+            return Err(bad(path, "bad head magic"));
+        }
+        let tail = &data[data.len() - TAIL_LEN..];
+        if tail[8..] != SST_FOOTER_MAGIC {
+            return Err(bad(path, "bad tail magic"));
+        }
+        let footer_crc = u32::from_le_bytes(tail[..4].try_into().unwrap());
+        let footer_len = u32::from_le_bytes(tail[4..8].try_into().unwrap()) as usize;
+        let data_end = data
+            .len()
+            .checked_sub(TAIL_LEN + footer_len)
+            .filter(|&end| end >= SST_MAGIC.len())
+            .ok_or_else(|| bad(path, "footer length exceeds file"))?;
+        let footer = &data[data_end..data_end + footer_len];
+        if crc32(footer) != footer_crc {
+            return Err(bad(path, "footer CRC mismatch"));
+        }
+
+        // parse the footer
+        let mut pos = 0;
+        let entry_count = get_varint(footer, &mut pos)?;
+        let min_key = get_varint(footer, &mut pos)?;
+        let max_key = get_varint(footer, &mut pos)?;
+        let block_count = get_varint(footer, &mut pos)?;
+        if entry_count == 0 || block_count == 0 || block_count > entry_count {
+            return Err(bad(path, "empty or inconsistent entry/block counts"));
+        }
+        let mut blocks = Vec::with_capacity(block_count as usize);
+        for _ in 0..block_count {
+            let offset = get_varint(footer, &mut pos)?;
+            let len = get_varint(footer, &mut pos)?;
+            let first = get_varint(footer, &mut pos)?;
+            let last = get_varint(footer, &mut pos)?;
+            blocks.push(BlockMeta { offset, len, first, last });
+        }
+        let bloom = Bloom::decode(footer, &mut pos)?;
+        let mut digests = Vec::with_capacity(entry_count as usize);
+        for _ in 0..entry_count {
+            let key = get_varint(footer, &mut pos)?;
+            let bytes = crate::clocks::encoding::get_bytes(footer, &mut pos, 8)?;
+            digests.push((key, u64::from_le_bytes(bytes.try_into().unwrap())));
+        }
+        crate::clocks::encoding::expect_end(footer, pos)?;
+
+        // verify the data region against the index: contiguous coverage,
+        // per-block CRC, entry framing, strict global key ascent, and
+        // agreement with the fence and the digest key list — a
+        // sequential scan, no state decoding
+        let mut expect_offset = SST_MAGIC.len() as u64;
+        let mut scanned_keys = 0usize;
+        let mut prev_key: Option<Key> = None;
+        for meta in &blocks {
+            if meta.offset != expect_offset {
+                return Err(bad(path, "index offsets are not contiguous"));
+            }
+            let start = meta.offset as usize;
+            let end = start
+                .checked_add(meta.len as usize)
+                .filter(|&e| e <= data_end)
+                .ok_or_else(|| bad(path, "block overruns the data region"))?;
+            let entries = parse_block(path, &data[start..end])?;
+            let (first, _) = entries.first().copied().ok_or_else(|| bad(path, "empty block"))?;
+            let (last, _) = *entries.last().unwrap();
+            if first != meta.first || last != meta.last {
+                return Err(bad(path, "index fence disagrees with block contents"));
+            }
+            for &(key, _) in &entries {
+                if prev_key.is_some_and(|p| p >= key) {
+                    return Err(bad(path, "keys are not strictly ascending"));
+                }
+                if digests.get(scanned_keys).map(|d| d.0) != Some(key) {
+                    return Err(bad(path, "digest keys disagree with block keys"));
+                }
+                prev_key = Some(key);
+                scanned_keys += 1;
+            }
+            expect_offset = end as u64;
+        }
+        if expect_offset as usize != data_end {
+            return Err(bad(path, "data region has bytes no block covers"));
+        }
+        if scanned_keys as u64 != entry_count {
+            return Err(bad(path, "entry count disagrees with blocks"));
+        }
+        if digests[0].0 != min_key || digests[digests.len() - 1].0 != max_key {
+            return Err(bad(path, "fence disagrees with digest keys"));
+        }
+
+        let bytes = data.len() as u64;
+        drop(data);
+        let file = File::open(path)?;
+        let run = Run {
+            path: path.to_path_buf(),
+            file,
+            bytes,
+            entry_count,
+            min_key,
+            max_key,
+            blocks,
+            bloom,
+        };
+        Ok((run, digests))
+    }
+
+    /// File size in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Entries stored.
+    pub fn entry_count(&self) -> u64 {
+        self.entry_count
+    }
+
+    /// Key-range fence: smallest and largest key in the run.
+    pub fn fence(&self) -> (Key, Key) {
+        (self.min_key, self.max_key)
+    }
+
+    /// Number of data blocks.
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// The file this run lives in.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The block that could hold `key`, or `None` when the fence, the
+    /// bloom filter, or the index rules it out — the "at most one block
+    /// per overlapping run" guarantee of the read path.
+    pub fn locate(&self, key: Key) -> Option<usize> {
+        if key < self.min_key || key > self.max_key || !self.bloom.contains(key) {
+            return None;
+        }
+        let idx = self.blocks.partition_point(|b| b.last < key);
+        (idx < self.blocks.len() && self.blocks[idx].first <= key).then_some(idx)
+    }
+
+    /// Read one data block: `(key, state bytes)` entries, ascending.
+    /// The block was CRC-verified at open; the CRC is re-checked here so
+    /// bit rot *after* open still surfaces as an error, not garbage.
+    pub fn read_block(&self, idx: usize) -> Result<Vec<(Key, Vec<u8>)>> {
+        let meta = self.blocks[idx];
+        let mut framed = vec![0u8; meta.len as usize];
+        self.file.read_exact_at(&mut framed, meta.offset)?;
+        parse_block(&self.path, &framed)
+            .map(|entries| entries.into_iter().map(|(k, s)| (k, s.to_vec())).collect())
+    }
+
+    /// Visit every `(key, state bytes)` entry in key order (compaction,
+    /// merged iteration, key snapshots). Sequential block reads.
+    pub fn for_each_entry(&self, mut f: impl FnMut(Key, &[u8])) -> Result<()> {
+        for idx in 0..self.blocks.len() {
+            let meta = self.blocks[idx];
+            let mut framed = vec![0u8; meta.len as usize];
+            self.file.read_exact_at(&mut framed, meta.offset)?;
+            for (key, state) in parse_block(&self.path, &framed)? {
+                f(key, state);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse one framed block (`[varint body_len][crc][body]`), returning
+/// `(key, state bytes)` slices into `framed`.
+fn parse_block<'a>(path: &Path, framed: &'a [u8]) -> Result<Vec<(Key, &'a [u8])>> {
+    let mut pos = 0;
+    let body_len = get_varint(framed, &mut pos)? as usize;
+    let crc_stored = u32::from_le_bytes(
+        crate::clocks::encoding::get_bytes(framed, &mut pos, 4)?.try_into().unwrap(),
+    );
+    let body = crate::clocks::encoding::get_bytes(framed, &mut pos, body_len)?;
+    if pos != framed.len() {
+        return Err(bad(path, "block frame length disagrees with index"));
+    }
+    if crc32(body) != crc_stored {
+        return Err(bad(path, "block CRC mismatch"));
+    }
+    let mut entries = Vec::new();
+    let mut p = 0;
+    while p < body.len() {
+        let entry_len = get_varint(body, &mut p)? as usize;
+        let payload = crate::clocks::encoding::get_bytes(body, &mut p, entry_len)?;
+        let mut kp = 0;
+        let key = get_varint(payload, &mut kp)?;
+        entries.push((key, &payload[kp..]));
+    }
+    Ok(entries)
+}
+
+/// Rename a damaged run out of the live set (`<name>.quarantined`,
+/// numbered on collision) so reopen never trips on it again but an
+/// operator can still inspect the bytes. Returns the new path.
+pub fn quarantine(path: &Path) -> Result<PathBuf> {
+    let base = path.with_extension("sst.quarantined");
+    let mut target = base.clone();
+    let mut n = 1;
+    while target.exists() {
+        target = path.with_extension(format!("sst.quarantined{n}"));
+        n += 1;
+    }
+    std::fs::rename(path, &target)?;
+    Ok(target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::temp_dir;
+
+    fn state_bytes(key: Key) -> Vec<u8> {
+        (0..(key % 13 + 1)).map(|j| ((key * 31 + j * 7) % 251) as u8).collect()
+    }
+
+    fn build(path: &Path, keys: &[Key], block_bytes: usize) -> Run {
+        let mut w = RunWriter::new(block_bytes);
+        for &k in keys {
+            w.add(k, mix64(k ^ 1), &state_bytes(k));
+        }
+        w.finish(path).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_and_point_reads() {
+        let dir = temp_dir("sst-roundtrip");
+        let keys: Vec<Key> = (0..200).map(|i| i * 3 + 1).collect();
+        let path = dir.join("run-00000000-0000.sst");
+        let run = build(&path, &keys, 128);
+        assert!(run.block_count() > 1, "fixture spans blocks");
+        assert_eq!(run.entry_count(), 200);
+        assert_eq!(run.fence(), (1, 598));
+        for &k in &keys {
+            let idx = run.locate(k).expect("present key locates");
+            let entries = run.read_block(idx).unwrap();
+            let i = entries.binary_search_by_key(&k, |e| e.0).expect("in block");
+            assert_eq!(entries[i].1, state_bytes(k), "key {k}");
+        }
+        // absent keys: fence cuts outside, bloom+index cut inside
+        assert_eq!(run.locate(0), None);
+        assert_eq!(run.locate(599), None);
+        let misses = (0..600u64)
+            .filter(|k| k % 3 != 1)
+            .filter(|&k| run.locate(k).is_some())
+            .count();
+        assert!(misses < 40, "bloom+index prune most absent keys, {misses} leaked");
+        // whole-run scan sees every entry in order
+        let mut seen = Vec::new();
+        run.for_each_entry(|k, st| {
+            assert_eq!(st, state_bytes(k));
+            seen.push(k);
+        })
+        .unwrap();
+        assert_eq!(seen, keys);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_returns_footer_digests() {
+        let dir = temp_dir("sst-digests");
+        let keys: Vec<Key> = (10..30).collect();
+        let path = dir.join("run.sst");
+        {
+            let mut w = RunWriter::new(64);
+            for &k in &keys {
+                w.add(k, mix64(k ^ 1), &state_bytes(k));
+            }
+            w.finish(&path).unwrap();
+        }
+        let (_, digests) = Run::open(&path).unwrap();
+        let expected: Vec<(Key, u64)> = keys.iter().map(|&k| (k, mix64(k ^ 1))).collect();
+        assert_eq!(digests, expected);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn writer_rejects_out_of_order_keys() {
+        let mut w = RunWriter::new(64);
+        w.add(5, 0, &[1]);
+        w.add(5, 0, &[2]);
+    }
+
+    #[test]
+    fn truncation_is_rejected_not_panicked() {
+        let dir = temp_dir("sst-trunc");
+        let path = dir.join("run.sst");
+        build(&path, &(0..40).collect::<Vec<_>>(), 96);
+        let pristine = std::fs::read(&path).unwrap();
+        for cut in [0, 4, 9, pristine.len() / 2, pristine.len() - 1] {
+            std::fs::write(&path, &pristine[..cut]).unwrap();
+            assert!(Run::open(&path).is_err(), "cut at {cut} must be rejected");
+        }
+        std::fs::write(&path, &pristine).unwrap();
+        assert!(Run::open(&path).is_ok(), "pristine bytes reopen");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn quarantine_renames_and_numbers() {
+        let dir = temp_dir("sst-quarantine");
+        let path = dir.join("run-00000001-0000.sst");
+        std::fs::write(&path, b"damaged").unwrap();
+        let q1 = quarantine(&path).unwrap();
+        assert!(q1.to_string_lossy().ends_with(".sst.quarantined"));
+        assert!(!path.exists());
+        std::fs::write(&path, b"damaged again").unwrap();
+        let q2 = quarantine(&path).unwrap();
+        assert_ne!(q1, q2, "collision gets a numbered name");
+        assert!(q1.exists() && q2.exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bloom_has_no_false_negatives() {
+        let mut b = Bloom::with_capacity(500);
+        for k in 0..500u64 {
+            b.insert(k * 7);
+        }
+        for k in 0..500u64 {
+            assert!(b.contains(k * 7));
+        }
+        let fp = (0..10_000u64).filter(|k| k % 7 != 0).filter(|&k| b.contains(k)).count();
+        assert!(fp < 500, "false-positive rate stays low, got {fp}/10000");
+    }
+}

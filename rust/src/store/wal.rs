@@ -138,6 +138,11 @@ pub struct RecoveryReport {
     pub discarded_bytes: u64,
     /// Segment files encountered (replayed or discarded).
     pub segments: u64,
+    /// Sorted-run files an LSM open set aside because their checksums or
+    /// framing failed validation ([`crate::store::LsmBackend`]); the
+    /// damaged file is renamed `*.quarantined`, never deleted, so an
+    /// operator can inspect it. Always 0 for the plain WAL backends.
+    pub quarantined_runs: u64,
     /// Whether any truncation happened (`discarded_bytes > 0`).
     pub truncated: bool,
 }
@@ -148,6 +153,7 @@ impl RecoveryReport {
         self.records += other.records;
         self.discarded_bytes += other.discarded_bytes;
         self.segments += other.segments;
+        self.quarantined_runs += other.quarantined_runs;
         self.truncated |= other.truncated;
     }
 }

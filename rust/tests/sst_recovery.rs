@@ -1,0 +1,196 @@
+//! Sorted-run damage fuzz: [`Run::open`] must never panic, must reject
+//! a damaged file with an `Err` (so the LSM open can quarantine it),
+//! and a damaged run must cost **exactly that run** — every other run's
+//! keys stay readable and the damage is reported in
+//! [`RecoveryReport::quarantined_runs`].
+//!
+//! Strategy, mirroring `wal_recovery.rs`:
+//!
+//! 1. **truncation sweep** — cut a pristine run at *every* byte offset
+//!    (this crosses every boundary: head magic, each block's frame and
+//!    body, the footer's fence/index/bloom/digest regions, the tail);
+//! 2. **corruption sweep** — XOR each byte of the file in turn; every
+//!    single-byte flip must be caught (head/tail magic by comparison,
+//!    footer and block bodies by CRC, block framing by the
+//!    index-length cross-check);
+//! 3. **backend quarantine** — damage one run of a two-run
+//!    [`LsmBackend`]; reopen must quarantine only that file, report it,
+//!    keep the other run's keys serving, and keep the store writable.
+//!
+//! Seeded random sweeps scale with `LSM_ITERS` and print failures in
+//! the uniform `testkit::soak` format.
+
+use std::path::{Path, PathBuf};
+
+use dvvstore::clocks::Actor;
+use dvvstore::kernel::mechs::DvvMech;
+use dvvstore::kernel::{Val, WriteMeta};
+use dvvstore::store::sst::{Run, RunWriter};
+use dvvstore::store::wal::FsyncPolicy;
+use dvvstore::store::{KeyStore, LsmBackend, LsmOptions, WalOptions};
+use dvvstore::testkit::{run_seeded, soak_seeds, temp_dir, Rng};
+
+/// Deterministic raw "state" payloads (the sst layer is
+/// mechanism-agnostic: state bytes in, state bytes out).
+fn state_bytes(key: u64, salt: u64) -> Vec<u8> {
+    let len = ((key * 7 + salt) % 23 + 1) as usize;
+    (0..len).map(|j| ((key * 31 + salt * 13 + j as u64 * 11) % 251) as u8).collect()
+}
+
+/// Write a pristine run of `keys` (96-byte blocks, so a few dozen keys
+/// span several blocks) and return its bytes.
+fn build_run(path: &Path, keys: &[u64], salt: u64) -> Vec<u8> {
+    let mut w = RunWriter::new(96);
+    for &k in keys {
+        w.add(k, k.wrapping_mul(0x9E37_79B9) ^ salt, &state_bytes(k, salt));
+    }
+    w.finish(path).unwrap();
+    std::fs::read(path).unwrap()
+}
+
+#[test]
+fn every_truncation_point_is_rejected_without_panic() {
+    let dir = temp_dir("sst-trunc-sweep");
+    let path = dir.join("run-00000000-0000.sst");
+    let keys: Vec<u64> = (0..60).map(|i| i * 3 + 1).collect();
+    let pristine = build_run(&path, &keys, 1);
+    for cut in 0..pristine.len() {
+        std::fs::write(&path, &pristine[..cut]).unwrap();
+        assert!(Run::open(&path).is_err(), "truncation at byte {cut} must be rejected");
+    }
+    std::fs::write(&path, &pristine).unwrap();
+    let (run, digests) = Run::open(&path).unwrap();
+    assert!(run.block_count() > 1, "sweep must cross block boundaries");
+    assert_eq!(run.entry_count() as usize, keys.len(), "pristine bytes still open");
+    assert_eq!(digests.len(), keys.len());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn every_single_byte_corruption_is_rejected_without_panic() {
+    let dir = temp_dir("sst-xor-sweep");
+    let path = dir.join("run-00000000-0000.sst");
+    let keys: Vec<u64> = (0..40).collect();
+    let pristine = build_run(&path, &keys, 2);
+    for off in 0..pristine.len() {
+        let mut bytes = pristine.clone();
+        bytes[off] ^= 0x5A;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(
+            Run::open(&path).is_err(),
+            "byte {off} of {} flipped yet the run still opened",
+            pristine.len()
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Big memtable (no auto-flush), huge tier fan-in (no compaction): the
+/// test controls exactly which runs exist.
+fn quiet_opts() -> LsmOptions {
+    LsmOptions {
+        wal: WalOptions { segment_bytes: 1 << 20, fsync: FsyncPolicy::Never },
+        memtable_bytes: 1 << 20,
+        block_bytes: 128,
+        cache_blocks: 8,
+        tier_runs: 1000,
+    }
+}
+
+fn lsm_store(dir: &Path) -> KeyStore<DvvMech, LsmBackend<DvvMech>> {
+    KeyStore::with_backend(DvvMech, LsmBackend::open(dir, 1, quiet_opts()).unwrap())
+}
+
+fn put(s: &KeyStore<DvvMech, LsmBackend<DvvMech>>, k: u64, v: u64) {
+    let meta = WriteMeta::basic(Actor::client(0));
+    let (_, ctx) = s.read(k);
+    s.write(k, &ctx, Val::new(v, 8), Actor::server(0), &meta);
+}
+
+/// The single shard dir of a 1-shard backend.
+fn shard_dir(root: &Path) -> PathBuf {
+    root.join("shard-000")
+}
+
+#[test]
+fn damaged_run_is_quarantined_alone_and_the_rest_keeps_serving() {
+    let root = temp_dir("sst-quarantine-backend");
+    {
+        let s = lsm_store(&root);
+        for k in 0..20u64 {
+            put(&s, k, k + 1);
+        }
+        s.backend().flush_memtables(); // run-00000000: keys 0..20
+        for k in 20..40u64 {
+            put(&s, k, k + 1);
+        }
+        s.backend().flush_memtables(); // run-00000001: keys 20..40
+        assert_eq!(s.backend().run_count(), 2);
+    }
+    // flip one byte in the middle of the newer run
+    let victim = shard_dir(&root).join("run-00000001-0000.sst");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&victim, &bytes).unwrap();
+
+    let s = lsm_store(&root);
+    let report = s.backend().recovery_report();
+    assert_eq!(report.quarantined_runs, 1, "exactly the damaged run is quarantined");
+    assert!(!victim.exists(), "damaged file left the live set");
+    assert!(
+        shard_dir(&root).join("run-00000001-0000.sst.quarantined").exists(),
+        "damaged file is renamed for inspection, not deleted"
+    );
+    for k in 0..20u64 {
+        assert_eq!(s.values(k), vec![Val::new(k + 1, 8)], "undamaged run still serves {k}");
+    }
+    for k in 20..40u64 {
+        assert!(s.values(k).is_empty(), "quarantined key {k} reads absent (AE refills it)");
+    }
+    // the store stays writable, and a clean reopen reports nothing new
+    put(&s, 99, 500);
+    assert_eq!(s.values(99).len(), 1);
+    drop(s);
+    let s = lsm_store(&root);
+    assert_eq!(s.backend().recovery_report().quarantined_runs, 0);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn seeded_random_damage_soak() {
+    let seeds = soak_seeds(&[11, 22, 33], "LSM_ITERS");
+    run_seeded("sst_recovery::seeded_random_damage_soak", &seeds, |seed| {
+        let mut rng = Rng::new(seed);
+        let dir = temp_dir(&format!("sst-soak-{seed}"));
+        let path = dir.join("run-00000000-0000.sst");
+
+        // random ascending key set with random state sizes
+        let mut keys: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..rng.range(8, 120) {
+            next += rng.range_u64(1, 9);
+            keys.push(next);
+        }
+        let pristine = build_run(&path, &keys, seed);
+
+        // random truncations and random byte flips — never a panic,
+        // never a silent acceptance
+        for _ in 0..40 {
+            // `range` is inclusive, so cap below len: a full-length
+            // "cut" is the pristine file and rightly opens
+            let cut = rng.range(0, pristine.len() - 1);
+            std::fs::write(&path, &pristine[..cut]).unwrap();
+            assert!(Run::open(&path).is_err(), "seed {seed}: truncation at {cut} accepted");
+
+            let off = rng.range(0, pristine.len() - 1);
+            let mut bytes = pristine.clone();
+            bytes[off] ^= rng.range_u64(1, 255) as u8;
+            std::fs::write(&path, &bytes).unwrap();
+            assert!(Run::open(&path).is_err(), "seed {seed}: flip at {off} accepted");
+        }
+        std::fs::write(&path, &pristine).unwrap();
+        assert!(Run::open(&path).is_ok(), "seed {seed}: pristine run must reopen");
+        std::fs::remove_dir_all(&dir).unwrap();
+    });
+}
